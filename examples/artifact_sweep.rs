@@ -1,0 +1,58 @@
+//! Build a custom artifact pipeline (compute + memory + PCIe intensity
+//! levels from the command line), plan it with Camelot and the
+//! baselines, and measure the supported peak load of each on the
+//! simulator — the §VIII-E "generalizing to complex microservices"
+//! workflow as a user-facing tool.
+//!
+//! Run with: `cargo run --release --example artifact_sweep [p c m]`
+//! where p/c/m are intensity levels 1..=3 (default 2 2 2).
+
+use camelot::baselines::Planner;
+use camelot::config::ClusterSpec;
+use camelot::figures::common::{planner_peak, sweep_opts, train_predictors};
+use camelot::suite::artifact;
+use camelot::util::{fnum, Table};
+
+fn main() {
+    let args: Vec<u32> = std::env::args()
+        .skip(1)
+        .filter_map(|a| a.parse().ok())
+        .collect();
+    let (p, c, m) = match args.as_slice() {
+        [a, b, z] => (*a, *b, *z),
+        _ => (2, 2, 2),
+    };
+    assert!(
+        (1..=3).contains(&p) && (1..=3).contains(&c) && (1..=3).contains(&m),
+        "levels must be 1..=3"
+    );
+    let pipeline = artifact::pipeline(p, c, m);
+    let cluster = ClusterSpec::two_2080ti();
+    eprintln!("benchmark {}: training predictors...", pipeline.name);
+    let predictors = train_predictors(&pipeline, &cluster);
+
+    let mut table = Table::new(
+        &format!("Peak load of {} on 2x {}", pipeline.name, cluster.gpu.name),
+        &["planner", "peak_qps", "p99_ms", "instances", "gpus_used"],
+    );
+    let opts = sweep_opts();
+    for planner in [Planner::EvenAllocation, Planner::Laius, Planner::Camelot] {
+        match planner_peak(planner, &pipeline, &cluster, &predictors, 32, &opts) {
+            Some((d, peak, report)) => table.push(&[
+                planner.name().to_string(),
+                fnum(peak),
+                format!("{:.1}", report.p99() * 1e3),
+                format!("{:?}", d.instances_per_stage(pipeline.n_stages())),
+                d.gpus_used().to_string(),
+            ]),
+            None => table.push(&[
+                planner.name().to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+            ]),
+        }
+    }
+    println!("{}", table.render());
+}

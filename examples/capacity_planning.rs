@@ -1,0 +1,62 @@
+//! Capacity planning for all four real benchmarks: run both Camelot
+//! policies (Case 1 max-peak-load, Case 2 min-resource at 30% load) and
+//! print the plans a datacenter operator would deploy.
+//!
+//! Run with: `cargo run --release --example capacity_planning`
+
+use std::time::Instant;
+
+use camelot::allocator::{max_load, min_resource, AllocContext, SaParams};
+use camelot::config::ClusterSpec;
+use camelot::figures::common::train_predictors;
+use camelot::suite::real;
+use camelot::util::Table;
+
+fn main() {
+    let cluster = ClusterSpec::two_2080ti();
+    let batch = 32;
+    let mut table = Table::new(
+        &format!("Capacity plans on 2x {} (batch {batch})", cluster.gpu.name),
+        &[
+            "benchmark", "peak_qps", "peak_instances", "peak_quotas",
+            "low_load_qps", "low_gpus", "low_usage", "solve_ms",
+        ],
+    );
+
+    for pipeline in real::all() {
+        eprintln!("planning {}...", pipeline.name);
+        let predictors = train_predictors(&pipeline, &cluster);
+        let ctx = AllocContext::new(&pipeline, &cluster, &predictors, batch);
+
+        let t0 = Instant::now();
+        let peak = max_load::solve(&ctx, SaParams::default()).expect("case-1 feasible");
+        let low_target = peak.best_objective * 0.3;
+        let (low, gpus) =
+            min_resource::solve(&ctx, low_target, SaParams::default()).expect("case-2 feasible");
+        let solve_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        table.push(&[
+            pipeline.name.clone(),
+            format!("{:.0}", peak.best_objective),
+            format!("{:?}", peak.best.instances),
+            format!(
+                "{:?}",
+                peak.best
+                    .quotas
+                    .iter()
+                    .map(|q| format!("{:.0}%", q * 100.0))
+                    .collect::<Vec<_>>()
+            ),
+            format!("{low_target:.0}"),
+            gpus.to_string(),
+            format!("{:.2}", low.best.total_quota()),
+            format!("{solve_ms:.0}"),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "peak_* from Case 1 (Eq. 1); low_* from Case 2 (Eq. 2/3) at 30% of peak\n\
+         low_usage is Σ N·p in GPU-equivalents — compare against {} GPUs deployed",
+        cluster.num_gpus
+    );
+}

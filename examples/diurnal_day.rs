@@ -1,0 +1,54 @@
+//! §VIII-C as a runnable scenario: serve one simulated day of diurnal
+//! load (Google's pattern — 30% trough, midday peak) with the Camelot
+//! autoscaler re-provisioning as load drifts, and report per-tick
+//! resource usage + p99 so the usage-follows-load curve is visible.
+//!
+//! Run with: `cargo run --release --example diurnal_day [peak_qps]`
+
+use camelot::config::ClusterSpec;
+use camelot::coordinator::{AutoscaleConfig, Autoscaler};
+use camelot::figures::common::train_predictors;
+use camelot::sim::{SimOptions, Simulator};
+use camelot::suite::{real, workload::DiurnalPattern};
+use camelot::util::{fnum, Table};
+
+fn main() {
+    let peak: f64 = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(400.0);
+    let pipeline = real::img_to_text();
+    let cluster = ClusterSpec::two_2080ti();
+    eprintln!("training predictors for {}...", pipeline.name);
+    let predictors = train_predictors(&pipeline, &cluster);
+    let mut scaler = Autoscaler::new(&pipeline, &cluster, &predictors, AutoscaleConfig::default());
+    let day = DiurnalPattern::new(peak);
+
+    let mut table = Table::new(
+        &format!("One diurnal day of {} (peak {peak:.0} qps)", pipeline.name),
+        &["hour", "load_qps", "replanned", "usage_gpu_equiv", "p99_ms", "qos_met"],
+    );
+    let opts = SimOptions { queries: 1_500, ..Default::default() };
+    for hour in (0..24).step_by(2) {
+        let load = day.rate_at(hour as f64 * 3_600.0);
+        let replanned = scaler.observe(load).is_some();
+        let plan = scaler.current().expect("provisioned");
+        let report = Simulator::new(&pipeline, &cluster, &plan.deployment, opts.clone())
+            .run(load.max(1.0))
+            .expect("simulates");
+        table.push(&[
+            format!("{hour:02}:00"),
+            fnum(load),
+            if replanned { "yes" } else { "" }.to_string(),
+            format!("{:.2}", plan.usage),
+            format!("{:.1}", report.p99() * 1e3),
+            (report.p99() <= pipeline.qos_target_s).to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "replans over the day: {} (hysteresis threshold ±{:.0}%)",
+        scaler.replans(),
+        AutoscaleConfig::default().replan_threshold * 100.0
+    );
+}

@@ -1,0 +1,81 @@
+//! Quickstart: the smallest end-to-end tour of the Camelot public API.
+//!
+//! 1. Load one AOT artifact through the PJRT runtime and run a batch
+//!    (the L1/L2 compute path, Python-free).
+//! 2. Train a performance predictor and plan an allocation with the
+//!    Case-1 policy.
+//! 3. Validate the plan on the simulator.
+//!
+//! Run with: `cargo run --release --example quickstart`
+//! (requires `make artifacts` for step 1; skipped gracefully otherwise)
+
+use camelot::allocator::{max_load, AllocContext, SaParams};
+use camelot::config::ClusterSpec;
+use camelot::figures::common::train_predictors;
+use camelot::runtime::Engine;
+use camelot::sim::{SimOptions, Simulator};
+use camelot::suite::real;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. real compute through PJRT ---------------------------------
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let mut engine = Engine::open("artifacts")?;
+        println!("PJRT platform: {}", engine.platform());
+        let exe = engine.load_stage("vgg_features", 8)?;
+        let n_in: usize = exe.meta.input_shape.iter().product();
+        let out = exe.run(&vec![0.05f32; n_in])?;
+        println!(
+            "ran vgg_features_b8: {} inputs -> {} outputs (first = {:.4})",
+            n_in,
+            out.len(),
+            out[0]
+        );
+    } else {
+        println!("(artifacts/ missing — run `make artifacts` for the PJRT demo)");
+    }
+
+    // --- 2. plan an allocation ----------------------------------------
+    let pipeline = real::img_to_text();
+    let cluster = ClusterSpec::two_2080ti();
+    println!("\nplanning {} on 2x {}...", pipeline.name, cluster.gpu.name);
+    let predictors = train_predictors(&pipeline, &cluster);
+    let ctx = AllocContext::new(&pipeline, &cluster, &predictors, 16);
+    let plan = max_load::solve(&ctx, SaParams::default()).expect("feasible plan");
+    println!("  instances : {:?}", plan.best.instances);
+    println!(
+        "  SM quotas : {:?}",
+        plan.best
+            .quotas
+            .iter()
+            .map(|q| format!("{:.0}%", q * 100.0))
+            .collect::<Vec<_>>()
+    );
+    println!("  predicted peak: {:.0} qps", plan.best_objective);
+
+    // --- 3. validate on the simulator ----------------------------------
+    let deployment = camelot::deploy::deploy(
+        &pipeline,
+        &cluster,
+        &plan.best,
+        16,
+        camelot::comm::CommMode::GlobalIpc,
+        None,
+    )
+    .expect("deployable");
+    let report = Simulator::new(
+        &pipeline,
+        &cluster,
+        &deployment,
+        SimOptions { queries: 3_000, ..Default::default() },
+    )
+    .run(plan.best_objective * 0.8)
+    .expect("sim runs");
+    println!(
+        "  simulated at 80% of predicted peak: p99 = {:.1} ms (QoS {:.0} ms)",
+        report.p99() * 1e3,
+        pipeline.qos_target_s * 1e3
+    );
+    assert!(report.p99() <= pipeline.qos_target_s, "plan must meet QoS");
+    println!("\nquickstart OK");
+    Ok(())
+}

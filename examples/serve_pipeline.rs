@@ -1,0 +1,82 @@
+//! End-to-end validation driver (DESIGN.md §8, EXPERIMENTS.md §E2E):
+//! load the real AOT-compiled two-stage img-to-text proxy model
+//! (VGG-ish feature extractor → LSTM caption head, ~19M parameters of
+//! real matmul/scan compute per query batch), serve a Poisson stream of
+//! batched requests through the Camelot coordinator with Python nowhere
+//! on the path, and report throughput + latency percentiles.
+//!
+//! Run with: `cargo run --release --example serve_pipeline [rate_qps]`
+//! (requires `make artifacts`)
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use camelot::coordinator::{Coordinator, CoordinatorConfig, PjrtBackend};
+use camelot::suite::workload::PoissonArrivals;
+
+const STAGES: [&str; 2] = ["vgg_features", "lstm_caption"];
+const D_IN: usize = 512;
+const BATCH: usize = 8;
+const QUERIES: usize = 400;
+
+fn main() -> anyhow::Result<()> {
+    let rate: f64 = std::env::args()
+        .nth(1)
+        .and_then(|a| a.parse().ok())
+        .unwrap_or(60.0);
+    let stages: Vec<String> = STAGES.iter().map(|s| s.to_string()).collect();
+
+    eprintln!("compiling artifacts (PJRT CPU)...");
+    let t0 = Instant::now();
+    let backend = Arc::new(PjrtBackend::new("artifacts", &stages, BATCH)?);
+    eprintln!("  compile+load took {:.2} s", t0.elapsed().as_secs_f64());
+
+    let coordinator = Coordinator::launch(
+        CoordinatorConfig {
+            stages,
+            instances: vec![2, 2], // two workers per stage
+            batch: BATCH,
+            max_wait: Duration::from_millis(15),
+        },
+        backend,
+    );
+
+    eprintln!("serving {QUERIES} queries at {rate} qps (open-loop Poisson)...");
+    let mut arrivals =
+        PoissonArrivals::new(rate, 42).times_until(QUERIES as f64 / rate * 4.0 + 5.0);
+    arrivals.truncate(QUERIES);
+    let t0 = Instant::now();
+    let (mut sent, mut received) = (0usize, 0usize);
+    while received < arrivals.len() {
+        while sent < arrivals.len() && t0.elapsed().as_secs_f64() >= arrivals[sent] {
+            // a "query": one 512-feature activation row (the image
+            // embedding the upstream frontend would upload)
+            let payload: Vec<f32> = (0..D_IN).map(|i| ((i * 37) % 101) as f32 * 0.01).collect();
+            coordinator.submit(payload);
+            sent += 1;
+        }
+        while let Some(comp) = coordinator.recv_timeout(Duration::from_millis(1)) {
+            assert_eq!(comp.output.len(), 512, "caption head output width");
+            assert!(comp.output.iter().all(|x| x.is_finite()));
+            received += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let hist = coordinator.histogram();
+
+    println!("== serve_pipeline report ==");
+    println!("  pipeline   : img-to-text proxy (vgg_features -> lstm_caption)");
+    println!("  batch      : {BATCH}, instances per stage: 2");
+    println!("  offered    : {rate:.0} qps, {QUERIES} queries");
+    println!("  wall time  : {wall:.2} s");
+    println!("  completed  : {}", hist.count());
+    println!("  throughput : {:.1} qps", hist.count() as f64 / wall);
+    println!("  p50 latency: {:.1} ms", hist.p50() * 1e3);
+    println!("  p95 latency: {:.1} ms", hist.p95() * 1e3);
+    println!("  p99 latency: {:.1} ms", hist.p99() * 1e3);
+    println!("  max latency: {:.1} ms", hist.max() * 1e3);
+    assert_eq!(hist.count() as usize, QUERIES, "all queries must complete");
+    coordinator.shutdown();
+    println!("serve_pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,96 @@
+"""AOT exporter: lower every (stage, batch) variant to HLO text.
+
+Interchange format is HLO *text*, NOT a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the `xla` 0.1.6 crate) rejects (`proto.id() <=
+INT_MAX`). The text parser reassigns ids, so text round-trips cleanly.
+See /opt/xla-example/README.md.
+
+Outputs (under --out-dir, default ../artifacts):
+    <stage>_b<batch>.hlo.txt   one per variant
+    manifest.json              metadata the Rust runtime + simulator read:
+                               shapes, FLOPs, parameter bytes, stage kind
+
+Usage: cd python && python -m compile.aot [--out-dir ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile.model import DEFAULT_BATCHES, STAGES, artifact_name, build_stage
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_variant(spec, batch: int, out_dir: pathlib.Path) -> dict:
+    """Lower one (stage, batch) variant; return its manifest entry."""
+    fwd, example_args = build_stage(spec, batch)
+    lowered = jax.jit(fwd).lower(*example_args)
+    text = to_hlo_text(lowered)
+    name = artifact_name(spec.name, batch)
+    path = out_dir / f"{name}.hlo.txt"
+    path.write_text(text)
+    return {
+        "name": name,
+        "stage": spec.name,
+        "kind": spec.kind,
+        "batch": batch,
+        "input_shape": [batch, spec.d_in],
+        "output_shape": [batch, spec.d_out],
+        "flops": spec.flops_per_query(batch),
+        "param_bytes": spec.param_bytes(),
+        "activation_bytes_in": 4 * batch * spec.d_in,
+        "activation_bytes_out": 4 * batch * spec.d_out,
+        "file": path.name,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="compat shim: also write the first artifact here")
+    ap.add_argument("--stages", nargs="*", default=None,
+                    help="subset of stage names (default: all)")
+    ap.add_argument("--batches", nargs="*", type=int, default=None)
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    stages = args.stages or list(STAGES)
+    batches = tuple(args.batches) if args.batches else DEFAULT_BATCHES
+
+    manifest = []
+    for stage in stages:
+        spec = STAGES[stage]
+        for batch in batches:
+            entry = export_variant(spec, batch, out_dir)
+            manifest.append(entry)
+            print(f"  wrote {entry['file']:36s} "
+                  f"flops/query={entry['flops']:.3e}")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {len(manifest)} artifacts + manifest.json to {out_dir}")
+
+    if args.out:  # Makefile sentinel target
+        sentinel = pathlib.Path(args.out)
+        sentinel.parent.mkdir(parents=True, exist_ok=True)
+        first = out_dir / manifest[0]["file"]
+        sentinel.write_text(first.read_text())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,177 @@
+"""L1 Pallas kernel: tiled matmul + bias + activation.
+
+This is the compute hot-spot of every DNN microservice stage in the
+Camelot suite (the VGG / BERT / LSTM / DC-GAN proxies are all stacks of
+dense matmuls). The paper's CUDA kernels tile for shared memory and
+threadblocks; on TPU-shaped hardware the same insight becomes a BlockSpec
+schedule: the grid iterates over (M/bm, N/bn) output tiles, a K-loop
+streams (bm, bk) x (bk, bn) operand tiles HBM->VMEM, and a VMEM scratch
+accumulator feeds the MXU with aligned tiles. See DESIGN.md
+SS3 Hardware-Adaptation.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is validated against kernels/ref.py and real-TPU
+performance is *estimated* from the VMEM footprint / MXU-utilization model
+in `vmem_report` (used by EXPERIMENTS.md SSPerf).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Activation = Literal["none", "relu", "gelu", "tanh", "sigmoid"]
+
+# Default block shapes: MXU-aligned (128x128 systolic array), three
+# f32 operand tiles + one accumulator comfortably inside ~16 MiB VMEM.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _apply_activation(x, activation: Activation):
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "gelu":
+        return jax.nn.gelu(x)
+    if activation == "tanh":
+        return jnp.tanh(x)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nsteps_k: int,
+                   activation: Activation):
+    """One (bm, bn) output tile; grid = (M/bm, N/bn, K/bk).
+
+    The K dimension is the innermost grid axis, so `acc_ref` (VMEM
+    scratch) accumulates partial products across the K steps and the
+    epilogue (bias + activation) fires on the last step only.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU-shaped partial product; accumulate in f32 regardless of the
+    # input dtype so low-precision inputs do not lose the K reduction.
+    acc_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == nsteps_k - 1)
+    def _epilogue():
+        acc = acc_ref[...] + b_ref[...].astype(jnp.float32)
+        o_ref[...] = _apply_activation(acc, activation).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "bm", "bn", "bk", "interpret"),
+)
+def matmul_bias_act(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activation: Activation = "none",
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Compute ``act(x @ w + b)`` with a tiled Pallas kernel.
+
+    Shapes: x (M, K), w (K, N), b (N,) -> (M, N). M, K, N need not be
+    multiples of the block shape; blocks are clamped to the array bounds.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x {x.shape} vs w {w.shape}")
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+
+    # Interpret mode fills out-of-bounds block elements with NaN; zero-pad
+    # ragged dimensions up front (zeros are the identity for the K
+    # reduction) and slice the result back down afterwards.
+    mp, kp, np_ = (pl.cdiv(m, bm_) * bm_, pl.cdiv(k, bk_) * bk_,
+                   pl.cdiv(n, bn_) * bn_)
+    if (mp, kp) != (m, k):
+        x = jnp.pad(x, ((0, mp - m), (0, kp - k)))
+    if (kp, np_) != (k, n):
+        w = jnp.pad(w, ((0, kp - k), (0, np_ - n)))
+    if np_ != n:
+        b = jnp.pad(b, (0, np_ - n))
+    grid = (mp // bm_, np_ // bn_, kp // bk_)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _matmul_kernel, nsteps_k=grid[2], activation=activation
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn_), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[_vmem_scratch(bm_, bn_)],
+        interpret=interpret,
+    )(x, w, b.reshape(1, np_))
+    return out[:m, :n]
+
+
+def _vmem_scratch(bm: int, bn: int):
+    """VMEM f32 scratch allocation (TPU spelling; interpret honors it)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM((bm, bn), jnp.float32)
+
+
+def vmem_report(m: int, k: int, n: int, *, bm: int = DEFAULT_BM,
+                bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                dtype_bytes: int = 4) -> dict:
+    """Static VMEM-footprint + MXU-utilization estimate for a block shape.
+
+    Used by the SSPerf pass: interpret-mode wallclock is meaningless for
+    TPU, so we reason about the structure — how much VMEM a grid step
+    touches, and how well the tile shapes fill the 128x128 MXU.
+    """
+    bm_, bn_, bk_ = min(bm, m), min(bn, n), min(bk, k)
+    vmem = (bm_ * bk_ + bk_ * bn_ + bn_) * dtype_bytes + bm_ * bn_ * 4 * 2
+    mxu = 128
+    util = (
+        (min(bm_, mxu) / mxu)
+        * (min(bn_, mxu) / mxu)
+        * (min(bk_, mxu) / mxu)
+    )
+    flops = 2.0 * m * n * k
+    hbm_traffic = (
+        # each output tile streams K/bk operand tile pairs
+        pl.cdiv(m, bm_) * pl.cdiv(n, bn_) * pl.cdiv(k, bk_)
+        * (bm_ * bk_ + bk_ * bn_) * dtype_bytes
+        + m * n * dtype_bytes
+    )
+    return {
+        "block": (bm_, bn_, bk_),
+        "grid": (pl.cdiv(m, bm_), pl.cdiv(n, bn_), pl.cdiv(k, bk_)),
+        "vmem_bytes": int(vmem),
+        "mxu_tile_utilization": float(util),
+        "flops": flops,
+        "hbm_bytes": float(hbm_traffic),
+        "arithmetic_intensity": flops / hbm_traffic,
+    }

@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here; pytest
+(python/tests/) asserts allclose between the two across a hypothesis
+sweep of shapes and dtypes. This is the core L1 correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _apply_activation(x, activation: str):
+    if activation == "none":
+        return x
+    if activation == "relu":
+        return jnp.maximum(x, 0.0)
+    if activation == "gelu":
+        return jax.nn.gelu(x)
+    if activation == "tanh":
+        return jnp.tanh(x)
+    if activation == "sigmoid":
+        return jax.nn.sigmoid(x)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def matmul_bias_act(x, w, b, *, activation: str = "none"):
+    """Oracle for kernels.matmul.matmul_bias_act."""
+    out = jnp.dot(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) + b.astype(jnp.float32)
+    return _apply_activation(out, activation).astype(x.dtype)
+
+
+def stream_scale_add(x, y, scale: float = 0.5, *, passes: int = 1):
+    """Oracle for kernels.stream.stream_scale_add."""
+    acc = y
+    for _ in range(passes):
+        acc = acc * scale + x
+    return acc

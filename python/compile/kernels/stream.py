@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: blocked streaming update (memory-bound).
+
+Models the *memory-intensive* artifact microservice of the Camelot suite
+(ported from the Rodinia streaming workloads in the paper): for each
+element it performs `passes` fused multiply-adds per byte moved, so the
+arithmetic intensity is configurable — exactly the knob the paper's
+artifact benchmarks m1..m3 / c1..c3 expose (Fig 3).
+
+The BlockSpec splits the vector into VMEM-sized chunks; each grid step
+streams one chunk HBM->VMEM, applies the update, and writes it back —
+the TPU rendering of a bandwidth-bound CUDA grid-stride loop.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 4096
+
+
+def _stream_kernel(x_ref, y_ref, o_ref, *, passes: int, scale: float):
+    x = x_ref[...]
+    y = y_ref[...]
+    acc = y
+    # `passes` controls FLOPs per byte: c1..c3 raise it, m1..m3 keep it
+    # at 1 so the kernel stays bandwidth-bound.
+    for _ in range(passes):
+        acc = acc * scale + x
+    o_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "passes", "block", "interpret")
+)
+def stream_scale_add(
+    x: jax.Array,
+    y: jax.Array,
+    scale: float = 0.5,
+    *,
+    passes: int = 1,
+    block: int = DEFAULT_BLOCK,
+    interpret: bool = True,
+) -> jax.Array:
+    """Blocked ``y*scale + x`` applied ``passes`` times (triad-like)."""
+    if x.shape != y.shape:
+        raise ValueError(f"shape mismatch {x.shape} vs {y.shape}")
+    if x.ndim != 1:
+        raise ValueError("stream kernel takes 1-D operands")
+    n = x.shape[0]
+    blk = min(block, n)
+    # Interpret mode fills out-of-bounds block elements with NaN; pad the
+    # ragged tail explicitly and slice it back off.
+    np_ = pl.cdiv(n, blk) * blk
+    if np_ != n:
+        x = jnp.pad(x, (0, np_ - n))
+        y = jnp.pad(y, (0, np_ - n))
+    grid = (np_ // blk,)
+    out = pl.pallas_call(
+        functools.partial(_stream_kernel, passes=passes, scale=float(scale)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((np_,), x.dtype),
+        interpret=interpret,
+    )(x, y)
+    return out[:n]

@@ -1,0 +1,214 @@
+"""L2: JAX microservice stage models for the Camelot suite.
+
+Each *microservice stage* of the paper's pipelines (Table I) is a JAX
+forward function built on the L1 Pallas kernels; `aot.py` lowers each
+(stage, batch) variant ONCE to HLO text, and the Rust coordinator serves
+them via PJRT with Python never on the request path.
+
+Stage proxies and the paper stage they stand in for:
+
+| proxy         | paper stages                           | signature        |
+|---------------|----------------------------------------|------------------|
+| mlp_stage     | BERT summarize / VGG feature extract / | compute-bound,   |
+|               | FSRCNN enhance / DC-GAN generate       | matmul stack     |
+| lstm_stage    | LSTM caption / semantic understanding /| sequential scan  |
+|               | OpenNMT translate                      | of cell matmuls  |
+| stream_stage  | memory-intensive artifact microservice | bandwidth-bound  |
+
+Every stage takes a (batch, feature) activation and returns the next
+stage's (batch, feature) activation, so arbitrary pipelines compose.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.matmul import matmul_bias_act
+from compile.kernels.stream import stream_scale_add
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpec:
+    """Static description of one microservice stage variant.
+
+    `name` keys the AOT artifact; the remaining fields size the graph.
+    """
+
+    name: str
+    kind: str  # "mlp" | "lstm" | "stream"
+    d_in: int
+    d_hidden: int
+    d_out: int
+    depth: int = 2  # mlp: #layers; lstm: #time steps; stream: #passes
+
+    def param_shapes(self) -> list[tuple[int, ...]]:
+        """Shapes of the weights, in the order the stage fn consumes them."""
+        if self.kind == "mlp":
+            shapes: list[tuple[int, ...]] = []
+            dims = [self.d_in] + [self.d_hidden] * (self.depth - 1) + [self.d_out]
+            for a, b in zip(dims[:-1], dims[1:]):
+                shapes += [(a, b), (b,)]
+            return shapes
+        if self.kind == "lstm":
+            # fused gate weights: x-proj, h-proj, bias; plus output head
+            return [
+                (self.d_in, 4 * self.d_hidden),
+                (self.d_hidden, 4 * self.d_hidden),
+                (4 * self.d_hidden,),
+                (self.d_hidden, self.d_out),
+                (self.d_out,),
+            ]
+        if self.kind == "stream":
+            return [(min(self.d_in, 4096),)]
+        raise ValueError(f"unknown stage kind {self.kind!r}")
+
+    def init_params(self, key: jax.Array) -> list[jax.Array]:
+        """He-ish random init, deterministic per key."""
+        params = []
+        for shape in self.param_shapes():
+            key, sub = jax.random.split(key)
+            fan_in = shape[0] if len(shape) > 1 else max(shape[0], 1)
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32)
+                / jnp.sqrt(jnp.float32(fan_in))
+            )
+        return params
+
+    def param_bytes(self) -> int:
+        """Weight footprint (f32) — the model-sharing term of M(i, s)."""
+        total = 0
+        for shape in self.param_shapes():
+            n = 1
+            for d in shape:
+                n *= d
+            total += 4 * n
+        return total
+
+    def flops_per_query(self, batch: int) -> float:
+        """Analytical FLOPs — feeds the simulator's calibration (C(i,s))."""
+        if self.kind == "mlp":
+            dims = [self.d_in] + [self.d_hidden] * (self.depth - 1) + [self.d_out]
+            return float(sum(2 * batch * a * b for a, b in zip(dims[:-1], dims[1:])))
+        if self.kind == "lstm":
+            per_step = 2 * batch * (self.d_in + self.d_hidden) * 4 * self.d_hidden
+            head = 2 * batch * self.d_hidden * self.d_out
+            return float(self.depth * per_step + head)
+        if self.kind == "stream":
+            return float(2 * batch * self.d_in * self.depth)
+        raise ValueError(self.kind)
+
+
+def mlp_stage(params: Sequence[jax.Array], x: jax.Array) -> jax.Array:
+    """Stack of Pallas matmul+bias+gelu layers (compute-bound proxy)."""
+    h = x
+    n_layers = len(params) // 2
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        act = "gelu" if i < n_layers - 1 else "none"
+        h = matmul_bias_act(h, w, b, activation=act)
+    return h
+
+
+def lstm_stage(params: Sequence[jax.Array], x: jax.Array, *, steps: int) -> jax.Array:
+    """LSTM cell scanned over `steps` virtual tokens, then a dense head.
+
+    The same (batch, d_in) activation is fed at each step — the pipeline
+    carries activations, not token streams — so the stage is a faithful
+    *cost* proxy for the caption/translate microservices while staying a
+    pure (batch, d_in) -> (batch, d_out) function. `lax.scan` keeps the
+    lowered HLO compact (one While op) versus `depth`-way unrolling.
+    """
+    wx, wh, b, w_head, b_head = params
+    hidden = wh.shape[0]
+    h0 = jnp.zeros((x.shape[0], hidden), x.dtype)
+    c0 = jnp.zeros((x.shape[0], hidden), x.dtype)
+    # The input projection does not depend on the carry: hoist it out of
+    # the scan so it is computed once, not `steps` times.
+    x_proj = matmul_bias_act(x, wx, b)
+
+    def cell(carry, _):
+        h, c = carry
+        gates = x_proj + matmul_bias_act(h, wh, jnp.zeros_like(b))
+        i, f, g, o = jnp.split(gates, 4, axis=1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    (h, _), _ = jax.lax.scan(cell, (h0, c0), None, length=steps)
+    return matmul_bias_act(h, w_head, b_head)
+
+
+def stream_stage(params: Sequence[jax.Array], x: jax.Array, *, passes: int) -> jax.Array:
+    """Bandwidth-bound proxy: blocked stream update over the activations."""
+    (scale_vec,) = params
+    flat = x.reshape(-1)
+    reps = -(-flat.shape[0] // scale_vec.shape[0])  # ceil division
+    other = jnp.tile(scale_vec, reps)[: flat.shape[0]]
+    out = stream_scale_add(flat, other, scale=0.5, passes=passes)
+    return out.reshape(x.shape)
+
+
+def stage_fn(spec: StageSpec):
+    """Return the (params, x) -> y forward function for a StageSpec."""
+    if spec.kind == "mlp":
+        return mlp_stage
+    if spec.kind == "lstm":
+        return functools.partial(lstm_stage, steps=spec.depth)
+    if spec.kind == "stream":
+        return functools.partial(stream_stage, passes=spec.depth)
+    raise ValueError(spec.kind)
+
+
+# ---------------------------------------------------------------------------
+# The artifact catalogue: stage variants the Rust runtime loads by name.
+# Sizes are chosen so that solo-run PJRT-CPU latencies sit in the
+# single-to-tens-of-milliseconds range at batch 8-64, matching the paper's
+# per-stage budgets relative to its QoS targets.
+# ---------------------------------------------------------------------------
+
+STAGES: dict[str, StageSpec] = {
+    # img-to-text proxy: VGG-ish feature extractor -> LSTM caption head
+    "vgg_features": StageSpec("vgg_features", "mlp", 512, 1024, 512, depth=4),
+    "lstm_caption": StageSpec("lstm_caption", "lstm", 512, 256, 512, depth=8),
+    # text-to-text proxy: BERT-ish summarizer -> NMT decoder
+    "bert_summarize": StageSpec("bert_summarize", "mlp", 768, 768, 768, depth=6),
+    "nmt_translate": StageSpec("nmt_translate", "lstm", 768, 384, 768, depth=6),
+    # img-to-img proxy: face recognition -> FSRCNN enhancement
+    "face_recognition": StageSpec("face_recognition", "mlp", 512, 512, 256, depth=5),
+    "fsrcnn_enhance": StageSpec("fsrcnn_enhance", "mlp", 256, 512, 512, depth=3),
+    # text-to-img proxy: LSTM semantic understanding -> DC-GAN generator
+    "lstm_semantic": StageSpec("lstm_semantic", "lstm", 384, 256, 384, depth=6),
+    "dcgan_generate": StageSpec("dcgan_generate", "mlp", 384, 1024, 768, depth=4),
+    # artifact microservices (Fig 3 / SSVIII-E): tunable intensity
+    "artifact_compute": StageSpec("artifact_compute", "mlp", 512, 1536, 512, depth=4),
+    "artifact_memory": StageSpec("artifact_memory", "stream", 1 << 16, 0, 1 << 16, depth=2),
+}
+
+DEFAULT_BATCHES = (8, 16, 32, 64)
+
+
+def artifact_name(stage: str, batch: int) -> str:
+    """Artifact file stem for a (stage, batch) variant."""
+    return f"{stage}_b{batch}"
+
+
+def build_stage(spec: StageSpec, batch: int):
+    """(jitted fn, example args) pair for AOT lowering of one variant.
+
+    Weights are baked into the artifact as constants (closure capture):
+    the serving path then takes a single (batch, d_in) activation input,
+    which is exactly what the Rust coordinator feeds it.
+    """
+    params = spec.init_params(jax.random.PRNGKey(hash(spec.name) % (1 << 31)))
+    fn = stage_fn(spec)
+
+    def fwd(x):
+        return (fn(params, x),)
+
+    example = jax.ShapeDtypeStruct((batch, spec.d_in), jnp.float32)
+    return fwd, (example,)

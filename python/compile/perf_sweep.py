@@ -1,0 +1,81 @@
+"""L1 performance pass: BlockSpec sweep for the Pallas matmul kernel.
+
+interpret=True wallclock is CPU-numpy time, NOT a TPU proxy — so this
+tool optimizes *structure*: for each candidate (bm, bn, bk) it reports
+the static VMEM footprint, the MXU tile utilization, the HBM traffic,
+and the arithmetic intensity from `matmul.vmem_report`, then verifies
+numerics of the winning shape against ref.py. The chosen shape is what
+`matmul_bias_act` ships as its default; EXPERIMENTS.md §Perf records the
+sweep.
+
+Usage: cd python && python -m compile.perf_sweep [M K N]
+"""
+
+from __future__ import annotations
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels import ref
+from compile.kernels.matmul import matmul_bias_act, vmem_report
+
+VMEM_BUDGET = 16 * 2**20  # ~16 MiB per TPU core
+
+CANDIDATES = [
+    (64, 64, 64),
+    (128, 128, 64),
+    (128, 128, 128),
+    (128, 128, 256),
+    (128, 256, 128),
+    (256, 128, 128),
+    (256, 256, 128),
+    (256, 256, 256),
+    (512, 128, 128),
+    (128, 512, 128),
+]
+
+
+def score(rep: dict) -> float:
+    """Structure score: maximize MXU utilization and arithmetic
+    intensity subject to the VMEM budget."""
+    if rep["vmem_bytes"] > VMEM_BUDGET:
+        return -1.0
+    return rep["mxu_tile_utilization"] * rep["arithmetic_intensity"]
+
+
+def main() -> None:
+    args = [int(a) for a in sys.argv[1:4]] or [512, 1024, 512]
+    m, k, n = (args + [512, 1024, 512])[:3]
+    print(f"matmul block-shape sweep for M={m} K={k} N={n}")
+    print(f"{'bm':>4} {'bn':>4} {'bk':>4} {'vmem_KiB':>9} {'mxu_util':>9} "
+          f"{'AI':>8} {'hbm_MB':>8} {'score':>8}")
+    best = None
+    for bm, bn, bk in CANDIDATES:
+        rep = vmem_report(m, k, n, bm=bm, bn=bn, bk=bk)
+        s = score(rep)
+        print(f"{bm:>4} {bn:>4} {bk:>4} {rep['vmem_bytes'] / 1024:>9.0f} "
+              f"{rep['mxu_tile_utilization']:>9.2f} "
+              f"{rep['arithmetic_intensity']:>8.1f} "
+              f"{rep['hbm_bytes'] / 1e6:>8.1f} {s:>8.1f}"
+              + ("  (over VMEM budget)" if s < 0 else ""))
+        if best is None or s > best[1]:
+            best = ((bm, bn, bk), s)
+    (bm, bn, bk), s = best
+    print(f"\nbest structure: bm={bm} bn={bn} bk={bk} (score {s:.1f})")
+
+    # correctness of the winning shape
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (k, n), jnp.float32)
+    b = jax.random.normal(jax.random.PRNGKey(2), (n,), jnp.float32)
+    got = matmul_bias_act(x, w, b, activation="gelu", bm=bm, bn=bn, bk=bk)
+    exp = ref.matmul_bias_act(x, w, b, activation="gelu")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp), rtol=2e-4, atol=2e-4)
+    print("numerics of winning shape: OK (allclose vs ref)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""AOT exporter tests: HLO text well-formedness and manifest integrity.
+
+These validate the L2→L3 interchange contract without requiring the
+Rust side: the HLO text must parse-able by XLA's text parser (we check
+the structural markers the Rust loader relies on) and the manifest must
+describe every artifact accurately.
+"""
+
+import json
+import pathlib
+
+import jax
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def exported(tmp_path_factory):
+    """Export a small subset once for the module."""
+    out = tmp_path_factory.mktemp("artifacts")
+    entries = []
+    for stage in ["fsrcnn_enhance", "artifact_memory"]:
+        spec = model.STAGES[stage]
+        entries.append(aot.export_variant(spec, 8, out))
+    (out / "manifest.json").write_text(json.dumps(entries, indent=2))
+    return out, entries
+
+
+def test_hlo_text_structure(exported):
+    out, entries = exported
+    for e in entries:
+        text = (out / e["file"]).read_text()
+        assert text.startswith("HloModule"), e["file"]
+        assert "ENTRY" in text
+        # tuple return (the Rust side unwraps to_tuple1)
+        assert "ROOT" in text
+
+
+def test_manifest_shapes_match_model(exported):
+    _, entries = exported
+    for e in entries:
+        spec = model.STAGES[e["stage"]]
+        assert e["input_shape"] == [8, spec.d_in]
+        assert e["output_shape"] == [8, spec.d_out]
+        assert e["flops"] == spec.flops_per_query(8)
+        assert e["param_bytes"] == spec.param_bytes()
+
+
+def test_exported_fn_runs_and_matches_jit(exported):
+    """The lowered computation must agree with direct jit execution."""
+    import numpy as np
+
+    for stage in ["fsrcnn_enhance"]:
+        spec = model.STAGES[stage]
+        fwd, (example,) = model.build_stage(spec, 8)
+        x = jax.random.normal(jax.random.PRNGKey(3), example.shape, example.dtype)
+        direct = fwd(x)[0]
+        jitted = jax.jit(fwd)(x)[0]
+        np.testing.assert_allclose(
+            np.asarray(direct), np.asarray(jitted), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_artifact_name_convention():
+    assert model.artifact_name("vgg_features", 32) == "vgg_features_b32"
+
+
+def test_repo_manifest_consistent_if_built():
+    """If `make artifacts` has run, every listed file must exist and the
+    entry count must match stages × batches."""
+    root = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+    manifest = root / "manifest.json"
+    if not manifest.exists():
+        pytest.skip("run `make artifacts` first")
+    entries = json.loads(manifest.read_text())
+    assert len(entries) == len(model.STAGES) * len(model.DEFAULT_BATCHES)
+    for e in entries:
+        assert (root / e["file"]).exists(), e["file"]

@@ -1,0 +1,127 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+hypothesis sweeps shapes, dtypes, activations, and block shapes; every
+case asserts allclose against ref.py — the core L1 correctness signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.matmul import matmul_bias_act, vmem_report
+from compile.kernels.stream import stream_scale_add
+
+jax.config.update("jax_enable_x64", False)
+
+ACTIVATIONS = ["none", "relu", "gelu", "tanh", "sigmoid"]
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# matmul_bias_act
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("activation", ACTIVATIONS)
+def test_matmul_all_activations(activation):
+    x, w, b = _rand(0, (64, 96), jnp.float32), _rand(1, (96, 80), jnp.float32), _rand(2, (80,), jnp.float32)
+    got = matmul_bias_act(x, w, b, activation=activation)
+    exp = ref.matmul_bias_act(x, w, b, activation=activation)
+    np.testing.assert_allclose(got, exp, rtol=3e-5, atol=3e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    k=st.integers(1, 300),
+    n=st.integers(1, 300),
+    act=st.sampled_from(ACTIVATIONS),
+)
+def test_matmul_shape_sweep(m, k, n, act):
+    x, w, b = _rand(0, (m, k), jnp.float32), _rand(1, (k, n), jnp.float32), _rand(2, (n,), jnp.float32)
+    got = matmul_bias_act(x, w, b, activation=act)
+    exp = ref.matmul_bias_act(x, w, b, activation=act)
+    assert got.shape == (m, n)
+    np.testing.assert_allclose(got, exp, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    bm=st.sampled_from([8, 32, 128, 256]),
+    bn=st.sampled_from([8, 32, 128, 256]),
+    bk=st.sampled_from([8, 32, 128, 256]),
+)
+def test_matmul_block_shape_sweep(bm, bn, bk):
+    """Result must be invariant to the BlockSpec tiling choice."""
+    x, w, b = _rand(0, (100, 120), jnp.float32), _rand(1, (120, 70), jnp.float32), _rand(2, (70,), jnp.float32)
+    got = matmul_bias_act(x, w, b, activation="gelu", bm=bm, bn=bn, bk=bk)
+    exp = ref.matmul_bias_act(x, w, b, activation="gelu")
+    np.testing.assert_allclose(got, exp, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bf16():
+    x = _rand(0, (64, 64), jnp.bfloat16)
+    w = _rand(1, (64, 64), jnp.bfloat16)
+    b = _rand(2, (64,), jnp.bfloat16)
+    got = matmul_bias_act(x, w, b)
+    exp = ref.matmul_bias_act(x, w, b)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(exp, np.float32), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_matmul_rejects_bad_shapes():
+    x, w = _rand(0, (4, 5), jnp.float32), _rand(1, (6, 7), jnp.float32)
+    b = _rand(2, (7,), jnp.float32)
+    with pytest.raises(ValueError, match="contraction"):
+        matmul_bias_act(x, w, b)
+    w_ok = _rand(1, (5, 7), jnp.float32)
+    with pytest.raises(ValueError, match="bias"):
+        matmul_bias_act(x, w_ok, _rand(2, (3,), jnp.float32))
+
+
+def test_vmem_report_structure():
+    rep = vmem_report(512, 512, 512)
+    assert rep["block"] == (128, 128, 128)
+    assert rep["mxu_tile_utilization"] == 1.0
+    assert rep["flops"] == 2.0 * 512**3
+    # three operand tiles + f32 accumulator + output must fit VMEM (~16 MiB)
+    assert rep["vmem_bytes"] < 16 * 2**20
+
+
+# ---------------------------------------------------------------------------
+# stream_scale_add
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 20000),
+    passes=st.integers(1, 6),
+    scale=st.floats(-2.0, 2.0, allow_nan=False),
+)
+def test_stream_sweep(n, passes, scale):
+    x, y = _rand(0, (n,), jnp.float32), _rand(1, (n,), jnp.float32)
+    got = stream_scale_add(x, y, scale=scale, passes=passes)
+    exp = ref.stream_scale_add(x, y, scale, passes=passes)
+    np.testing.assert_allclose(got, exp, rtol=1e-5, atol=1e-5)
+
+
+def test_stream_rejects_mismatch():
+    with pytest.raises(ValueError, match="mismatch"):
+        stream_scale_add(jnp.zeros(4), jnp.zeros(5))
+    with pytest.raises(ValueError, match="1-D"):
+        stream_scale_add(jnp.zeros((2, 2)), jnp.zeros((2, 2)))
+
+
+def test_stream_block_invariance():
+    x, y = _rand(0, (5000,), jnp.float32), _rand(1, (5000,), jnp.float32)
+    a = stream_scale_add(x, y, scale=0.3, passes=2, block=128)
+    c = stream_scale_add(x, y, scale=0.3, passes=2, block=4096)
+    np.testing.assert_allclose(a, c, rtol=1e-6, atol=1e-7)

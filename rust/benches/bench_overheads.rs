@@ -1,0 +1,72 @@
+//! §VIII-G overheads — the paper's three runtime-overhead claims:
+//!   * online prediction completes in < 1 ms (DT; RF > 5 ms rejected),
+//!   * the SA allocation solve completes in ~5 ms,
+//!   * IPC channel setup ~1 ms, per-message overhead tiny.
+//!
+//! Run with `cargo bench --bench bench_overheads`.
+
+use camelot::allocator::{max_load, AllocContext, SaParams};
+use camelot::comm::{fig11_point, hop_cost, CommMode};
+use camelot::config::{ClusterSpec, GpuSpec, IpcSpec, PcieSpec};
+use camelot::predictor::{
+    profile_stage, DecisionTree, ForestParams, LinReg, ProfileConfig, RandomForest,
+    StagePredictor, TreeParams,
+};
+use camelot::sim::PcieBus;
+use camelot::suite::real;
+use camelot::util::bench::{bench, header};
+
+fn main() {
+    header("predictor inference (paper: DT < 1 ms, RF > 5 ms)");
+    let gpu = GpuSpec::rtx2080ti();
+    let stage = real::img_to_text().stages[0].clone();
+    let samples = profile_stage(&stage, &gpu, &ProfileConfig::default());
+    let xs: Vec<Vec<f64>> = samples.iter().map(|s| vec![s.batch, s.sm_frac]).collect();
+    let ys: Vec<f64> = samples.iter().map(|s| s.duration_s).collect();
+    let lr = LinReg::fit(&xs, &ys).unwrap();
+    let dt = DecisionTree::fit(&xs, &ys, TreeParams::default());
+    let rf = RandomForest::fit(&xs, &ys, ForestParams { n_trees: 400, ..Default::default() }, 3);
+    let x = [32.0, 0.5];
+    bench("predict/LR (single)", 20_000, || lr.predict(&x));
+    bench("predict/DT (single)", 20_000, || dt.predict(&x));
+    bench("predict/RF-400 (single)", 2_000, || rf.predict(&x));
+    // "one prediction" in the paper = all stages × all quota candidates:
+    let preds: Vec<StagePredictor> = real::img_to_text()
+        .stages
+        .iter()
+        .map(|s| StagePredictor::train(s, &gpu, &ProfileConfig::default()))
+        .collect();
+    bench("predict/DT full-pipeline sweep (40 pts)", 2_000, || {
+        let mut acc = 0.0;
+        for p in &preds {
+            for q in 1..=20 {
+                acc += p.duration(32, q as f64 / 20.0);
+            }
+        }
+        acc
+    });
+
+    header("allocation solve (paper: ~5 ms)");
+    let cluster = ClusterSpec::two_2080ti();
+    let pipeline = real::img_to_text();
+    let ctx = AllocContext::new(&pipeline, &cluster, &preds, 32);
+    for iters in [200usize, 1_000, 4_000] {
+        let params = SaParams { iterations: iters, ..Default::default() };
+        bench(&format!("sa/max-load {iters} iters"), 10, || {
+            max_load::solve(&ctx, params)
+        });
+    }
+
+    header("communication setup + per-message overheads");
+    let ipc = IpcSpec::default();
+    bench("comm/ipc hop_cost (same gpu)", 100_000, || {
+        let mut bus = PcieBus::new(PcieSpec::default());
+        hop_cost(CommMode::GlobalIpc, true, 1e6, &mut bus, &ipc)
+    });
+    bench("comm/fig11 analytic point", 100_000, || {
+        let bus = PcieBus::new(PcieSpec::default());
+        fig11_point(1e6, &bus, &ipc)
+    });
+    println!("\n(model constants: IPC setup {:.1} ms once per channel, {:.0} µs/msg)",
+        ipc.setup_s * 1e3, ipc.per_msg_s * 1e6);
+}

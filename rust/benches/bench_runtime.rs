@@ -1,0 +1,66 @@
+//! PJRT request-path benchmarks: per-batch execution latency of the AOT
+//! stage artifacts (the L3 hot path of the real serving deployment) and
+//! the end-to-end coordinator round trip over the PJRT backend.
+//!
+//! Requires `make artifacts`. Run with `cargo bench --bench bench_runtime`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use camelot::coordinator::{Coordinator, CoordinatorConfig, ExecBackend, PjrtBackend};
+use camelot::runtime::Engine;
+use camelot::util::bench::{bench, header};
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping bench_runtime: run `make artifacts` first");
+        return Ok(());
+    }
+
+    header("PJRT stage execution (per batch)");
+    let mut engine = Engine::open("artifacts")?;
+    for (stage, batch) in [
+        ("vgg_features", 8u32),
+        ("vgg_features", 64),
+        ("lstm_caption", 8),
+        ("bert_summarize", 32),
+        ("artifact_memory", 32),
+    ] {
+        let exe = engine.load_stage(stage, batch)?;
+        let n_in: usize = exe.meta.input_shape.iter().product();
+        let input: Vec<f32> = (0..n_in).map(|i| (i % 17) as f32 * 0.02).collect();
+        let r = bench(&format!("pjrt/{stage}_b{batch}"), 30, || exe.run(&input).unwrap());
+        let gflops = exe.meta.flops / r.median_s / 1e9;
+        println!("    -> {gflops:.1} GFLOP/s effective");
+    }
+
+    header("coordinator + PJRT end-to-end (batch 8, 2 stages)");
+    let stages = vec!["vgg_features".to_string(), "lstm_caption".to_string()];
+    let backend = Arc::new(PjrtBackend::new("artifacts", &stages, 8)?);
+    {
+        let row = vec![0.1f32; 512];
+        let rows: Vec<&[f32]> = vec![row.as_slice(); 8];
+        bench("pjrt-backend/stage0 full batch", 30, || {
+            backend.execute(0, &rows).unwrap()
+        });
+    }
+    let coord = Coordinator::launch(
+        CoordinatorConfig {
+            stages,
+            instances: vec![1, 1],
+            batch: 8,
+            max_wait: Duration::from_millis(2),
+        },
+        backend,
+    );
+    bench("coordinator+pjrt/8-query batch roundtrip", 20, || {
+        for _ in 0..8 {
+            coord.submit(vec![0.1; 512]);
+        }
+        for _ in 0..8 {
+            coord.recv_timeout(Duration::from_secs(30)).unwrap();
+        }
+    });
+    coord.shutdown();
+    Ok(())
+}

@@ -1,0 +1,63 @@
+//! Simulator and coordinator hot-path benchmarks: event-engine
+//! throughput (the figure sweeps run thousands of these simulations)
+//! and the coordinator control-plane round trip.
+//!
+//! Run with `cargo bench --bench bench_sim`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use camelot::comm::CommMode;
+use camelot::config::ClusterSpec;
+use camelot::coordinator::{Coordinator, CoordinatorConfig, MockBackend};
+use camelot::sim::{Deployment, InstancePlacement, SimOptions, Simulator};
+use camelot::suite::real;
+use camelot::util::bench::{bench, header};
+
+fn main() {
+    header("discrete-event engine");
+    let p = real::img_to_text();
+    let c = ClusterSpec::two_2080ti();
+    let d = Deployment {
+        placements: vec![
+            InstancePlacement { stage: 0, gpu: 0, sm_frac: 0.5 },
+            InstancePlacement { stage: 0, gpu: 1, sm_frac: 0.5 },
+            InstancePlacement { stage: 1, gpu: 0, sm_frac: 0.4 },
+            InstancePlacement { stage: 1, gpu: 1, sm_frac: 0.4 },
+        ],
+        batch: 16,
+        comm: CommMode::GlobalIpc,
+    };
+    for queries in [1_000usize, 4_000, 16_000] {
+        let opts = SimOptions { queries, ..Default::default() };
+        let sim = Simulator::new(&p, &c, &d, opts);
+        let r = bench(&format!("sim/{queries} queries @300qps"), 10, || {
+            sim.run(300.0).unwrap().completed
+        });
+        let qps = queries as f64 / r.median_s;
+        println!("    -> {qps:.0} simulated queries/s of wall time");
+    }
+
+    header("coordinator control plane (mock backend)");
+    for instances in [1usize, 2, 4] {
+        let backend = Arc::new(MockBackend::identity(2));
+        let coord = Coordinator::launch(
+            CoordinatorConfig {
+                stages: vec!["a".into(), "b".into()],
+                instances: vec![instances; 2],
+                batch: 8,
+                max_wait: Duration::from_micros(200),
+            },
+            backend,
+        );
+        bench(&format!("coordinator/roundtrip x64 ({instances} inst/stage)"), 50, || {
+            for _ in 0..64 {
+                coord.submit(vec![1.0; 16]);
+            }
+            for _ in 0..64 {
+                coord.recv_timeout(Duration::from_secs(5)).unwrap();
+            }
+        });
+        coord.shutdown();
+    }
+}

@@ -1,0 +1,138 @@
+//! Case 2 (§VII-C): minimize GPU resource usage at a given (low) load
+//! while ensuring QoS.
+//!
+//! Two phases, as in the paper:
+//!  1. Eq. 2 — lower-bound the number of GPUs `y` from aggregate compute
+//!     (Σ C(i,s)·rate / G) and aggregate memory (Σ M(i,s) / F), then
+//!  2. Eq. 3 — minimize Σ N_i·p_i on those `y` GPUs subject to the same
+//!     constraint families plus a throughput floor at the target load.
+
+use crate::config::ClusterSpec;
+use crate::deploy::Allocation;
+
+use super::constraints::AllocContext;
+use super::sa::{anneal, SaParams, SaResult};
+
+/// Eq. 2: minimum GPU count for a target load (queries/s).
+pub fn min_gpus(ctx: &AllocContext<'_>, load_qps: f64) -> usize {
+    let batch = ctx.batch;
+    // compute demand: FLOPs per query × load, per stage
+    let flops_per_sec: f64 = ctx
+        .predictors
+        .iter()
+        .map(|p| p.flops(batch) / batch as f64 * load_qps)
+        .sum();
+    let mem_total: f64 = ctx.predictors.iter().map(|p| p.mem_bytes(batch)).sum();
+    let by_compute = flops_per_sec / ctx.cluster.gpu.flops_per_sec();
+    let by_memory = mem_total / ctx.cluster.gpu.mem_bytes as f64;
+    let y = by_compute.max(by_memory).ceil().max(1.0) as usize;
+    y.min(ctx.cluster.num_gpus)
+}
+
+/// Solve Case 2 for `load_qps`. The returned allocation is feasible on a
+/// cluster restricted to `min_gpus` devices and supports the load.
+pub fn solve(ctx: &AllocContext<'_>, load_qps: f64, params: SaParams) -> Option<(SaResult, usize)> {
+    let mut y = min_gpus(ctx, load_qps);
+    // Eq. 2 is a lower bound; grow y if the restricted problem is
+    // infeasible (e.g. bandwidth or QoS-bound rather than capacity-bound)
+    while y <= ctx.cluster.num_gpus {
+        let restricted = ClusterSpec { num_gpus: y, ..ctx.cluster.clone() };
+        let mut sub = AllocContext::new(ctx.pipeline, &restricted, ctx.predictors, ctx.batch);
+        sub.comm = ctx.comm;
+        sub.enforce_bw = ctx.enforce_bw;
+        sub.qos_headroom = ctx.qos_headroom;
+        let n = ctx.pipeline.n_stages();
+        let init = Allocation {
+            instances: vec![1; n],
+            quotas: vec![(1.0 / n as f64).min(0.9); n],
+        };
+        let result = anneal(
+            init,
+            params,
+            // feasible = all constraints + the load's predicted p99
+            // stays inside QoS (tail-aware, not just capacity)
+            |a| {
+                // 35% tail margin: Case 2 sits at the feasibility
+                // boundary by construction, so the predicted p99 needs
+                // real headroom over the tail-model error
+                sub.check(a).is_ok()
+                    && sub.predicted_p99(a, load_qps) <= ctx.pipeline.qos_target_s * 0.65
+            },
+            // maximize the negated usage ⇒ minimize Σ N_i·p_i
+            |a| -a.total_quota(),
+        );
+        if let Some(r) = result {
+            return Some((r, y));
+        }
+        y += 1;
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::predictor::{ProfileConfig, StagePredictor};
+    use crate::suite::{real, Pipeline};
+
+    fn fixture(p: &Pipeline) -> (ClusterSpec, Vec<StagePredictor>) {
+        let cluster = ClusterSpec::two_2080ti();
+        let preds = p
+            .stages
+            .iter()
+            .map(|s| StagePredictor::train(s, &GpuSpec::rtx2080ti(), &ProfileConfig::default()))
+            .collect();
+        (cluster, preds)
+    }
+
+    #[test]
+    fn min_gpus_grows_with_load() {
+        let p = real::img_to_img();
+        let (c, preds) = fixture(&p);
+        let ctx = AllocContext::new(&p, &c, &preds, 32);
+        assert!(min_gpus(&ctx, 10.0) <= min_gpus(&ctx, 10_000.0));
+        assert!(min_gpus(&ctx, 1.0) >= 1);
+    }
+
+    #[test]
+    fn solution_supports_load_and_minimizes() {
+        let p = real::text_to_text();
+        let (c, preds) = fixture(&p);
+        let ctx = AllocContext::new(&p, &c, &preds, 16);
+        let load = 50.0;
+        let (r, y) = solve(&ctx, load, SaParams::default()).expect("feasible");
+        assert!(y >= 1 && y <= c.num_gpus);
+        assert!(ctx.predicted_throughput(&r.best) >= load);
+        // uses strictly less than the full cluster for a low load
+        assert!(
+            r.best.total_quota() < c.total_compute(),
+            "usage {} should undercut {} GPUs",
+            r.best.total_quota(),
+            c.num_gpus
+        );
+    }
+
+    #[test]
+    fn lower_load_never_needs_more_quota() {
+        let p = real::img_to_text();
+        let (c, preds) = fixture(&p);
+        let ctx = AllocContext::new(&p, &c, &preds, 16);
+        let (lo, _) = solve(&ctx, 20.0, SaParams::default()).unwrap();
+        let (hi, _) = solve(&ctx, 200.0, SaParams::default()).unwrap();
+        assert!(
+            lo.best.total_quota() <= hi.best.total_quota() * 1.05,
+            "20 qps uses {} vs 200 qps {}",
+            lo.best.total_quota(),
+            hi.best.total_quota()
+        );
+    }
+
+    #[test]
+    fn infeasible_load_returns_none() {
+        let p = real::img_to_img();
+        let (c, preds) = fixture(&p);
+        let ctx = AllocContext::new(&p, &c, &preds, 32);
+        assert!(solve(&ctx, 1.0e9, SaParams::default()).is_none());
+    }
+}

@@ -1,0 +1,19 @@
+//! Contention-aware GPU resource allocation (§VII) — the paper's core
+//! algorithmic contribution.
+//!
+//! * [`constraints::AllocContext`] — the Eq. 1/3 constraint families,
+//!   evaluated against the trained [`crate::predictor::StagePredictor`]s
+//!   and the actual multi-GPU placement pass.
+//! * [`sa`] — the simulated-annealing engine over
+//!   `V = [n_1..n_N, p_1..p_N]`.
+//! * [`max_load`] — Case 1: maximize the supported peak load.
+//! * [`min_resource`] — Case 2: minimize resource usage at low load
+//!   (Eq. 2 GPU-count bound, then Eq. 3).
+
+pub mod constraints;
+pub mod max_load;
+pub mod min_resource;
+pub mod sa;
+
+pub use constraints::AllocContext;
+pub use sa::{anneal, SaParams, SaResult};

@@ -1,0 +1,214 @@
+//! Simulated annealing over the allocation vector
+//! `V = [n_1..n_N, p_1..p_N]` (§VII-C): random neighborhood moves,
+//! constraint check on every candidate, Metropolis acceptance with a
+//! geometric cooling schedule, best-feasible tracking.
+//!
+//! The same engine solves both optimization problems — it maximizes an
+//! arbitrary `objective(Allocation) -> f64` over the feasible set
+//! defined by an [`AllocContext`]-style checker.
+
+use crate::deploy::Allocation;
+use crate::util::Rng;
+
+/// Annealing hyperparameters. Defaults hit the paper's ≤5 ms solve
+/// budget (§VIII-G) on the pipeline sizes it evaluates.
+#[derive(Debug, Clone, Copy)]
+pub struct SaParams {
+    pub iterations: usize,
+    pub t_start: f64,
+    pub t_end: f64,
+    /// Largest SM-quota step of a move.
+    pub quota_step: f64,
+    /// Largest instance-count step of a move.
+    pub inst_step: i64,
+    pub max_instances: u32,
+    /// Smallest SM quota a move may produce. Keep this at or above the
+    /// profiling grid's smallest quota — below it the predictors
+    /// extrapolate and the optimizer would exploit model error.
+    pub min_quota: f64,
+    pub seed: u64,
+}
+
+impl Default for SaParams {
+    fn default() -> Self {
+        SaParams {
+            iterations: 2_000,
+            t_start: 1.0,
+            t_end: 1e-3,
+            quota_step: 0.10,
+            inst_step: 2,
+            max_instances: 16,
+            min_quota: 0.05,
+            seed: 2024,
+        }
+    }
+}
+
+/// Outcome of a search.
+#[derive(Debug, Clone)]
+pub struct SaResult {
+    pub best: Allocation,
+    pub best_objective: f64,
+    pub evaluated: usize,
+    pub feasible_found: usize,
+}
+
+/// Run simulated annealing.
+///
+/// * `init` — starting candidate (need not be feasible).
+/// * `feasible` — constraint predicate (Eq. 1/3 constraint set).
+/// * `objective` — score to MAXIMIZE (negate for minimization).
+///
+/// Returns `None` if no feasible candidate was ever found.
+pub fn anneal<F, G>(
+    init: Allocation,
+    params: SaParams,
+    mut feasible: F,
+    mut objective: G,
+) -> Option<SaResult>
+where
+    F: FnMut(&Allocation) -> bool,
+    G: FnMut(&Allocation) -> f64,
+{
+    let n = init.instances.len();
+    assert!(n > 0 && init.quotas.len() == n);
+    let mut rng = Rng::new(params.seed);
+    let cooling = (params.t_end / params.t_start).powf(1.0 / params.iterations.max(1) as f64);
+
+    let mut current = init;
+    let mut current_score = if feasible(&current) {
+        objective(&current)
+    } else {
+        f64::NEG_INFINITY
+    };
+    let mut best: Option<(Allocation, f64)> = if current_score.is_finite() {
+        Some((current.clone(), current_score))
+    } else {
+        None
+    };
+    let mut evaluated = 0;
+    let mut feasible_found = usize::from(current_score.is_finite());
+    let mut temp = params.t_start;
+    // objective scale estimate for the acceptance probability
+    let mut scale = current_score.abs().max(1.0);
+
+    for _ in 0..params.iterations {
+        // neighborhood move: perturb one stage's n or p
+        let mut cand = current.clone();
+        let stage = rng.below(n);
+        if rng.f64() < 0.5 {
+            let delta = rng.range(-params.inst_step, params.inst_step).max(
+                1 - cand.instances[stage] as i64,
+            );
+            cand.instances[stage] =
+                ((cand.instances[stage] as i64 + delta).max(1) as u32).min(params.max_instances);
+        } else {
+            let delta = rng.range_f64(-params.quota_step, params.quota_step);
+            // snap to 5% steps: Volta MPS quotas are coarse percentages,
+            // and the predictors are exact on the profiling grid
+            let q = (cand.quotas[stage] + delta).clamp(params.min_quota, 1.0);
+            cand.quotas[stage] = (q / 0.05).round() * 0.05;
+        }
+
+        evaluated += 1;
+        if !feasible(&cand) {
+            // while still searching for the feasible region, random-walk
+            // through infeasible space instead of freezing in place
+            if current_score == f64::NEG_INFINITY {
+                current = cand;
+            }
+            temp *= cooling;
+            continue;
+        }
+        feasible_found += 1;
+        let score = objective(&cand);
+        scale = scale.max(score.abs());
+        let accept = score > current_score || {
+            let delta = (score - current_score) / scale.max(1e-12);
+            rng.f64() < (delta / temp.max(1e-12)).exp()
+        };
+        if accept {
+            current = cand;
+            current_score = score;
+            if best.as_ref().map_or(true, |(_, b)| score > *b) {
+                best = Some((current.clone(), score));
+            }
+        }
+        temp *= cooling;
+    }
+
+    best.map(|(alloc, score)| SaResult {
+        best: alloc,
+        best_objective: score,
+        evaluated,
+        feasible_found,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// toy problem: maximize min(n_i * p_i) under Σ n·p ≤ 2.
+    fn toy_feasible(a: &Allocation) -> bool {
+        a.total_quota() <= 2.0
+            && a.instances.iter().all(|&x| x >= 1)
+            && a.quotas.iter().all(|&p| (0.02..=1.0).contains(&p))
+    }
+
+    fn toy_objective(a: &Allocation) -> f64 {
+        a.instances
+            .iter()
+            .zip(&a.quotas)
+            .map(|(&n, &p)| n as f64 * p)
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    #[test]
+    fn finds_near_optimal_toy_solution() {
+        // optimum: both stages get ΣN·p = 1.0 each → objective 1.0
+        let init = Allocation { instances: vec![1, 1], quotas: vec![0.1, 0.1] };
+        let r = anneal(init, SaParams::default(), toy_feasible, toy_objective).unwrap();
+        assert!(r.best_objective > 0.9, "objective {}", r.best_objective);
+        assert!(toy_feasible(&r.best));
+    }
+
+    #[test]
+    fn result_is_always_feasible() {
+        crate::util::testkit::forall(3, 10, |r| r.next_u64(), |&seed| {
+            let init = Allocation { instances: vec![1, 1, 1], quotas: vec![0.05, 0.05, 0.05] };
+            let params = SaParams { seed, iterations: 500, ..Default::default() };
+            match anneal(init, params, toy_feasible, toy_objective) {
+                Some(r) => toy_feasible(&r.best),
+                None => true,
+            }
+        });
+    }
+
+    #[test]
+    fn none_when_nothing_feasible() {
+        let init = Allocation { instances: vec![1], quotas: vec![0.5] };
+        let r = anneal(init, SaParams::default(), |_| false, toy_objective);
+        assert!(r.is_none());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let init = Allocation { instances: vec![1, 1], quotas: vec![0.2, 0.2] };
+        let p = SaParams::default();
+        let a = anneal(init.clone(), p, toy_feasible, toy_objective).unwrap();
+        let b = anneal(init, p, toy_feasible, toy_objective).unwrap();
+        assert_eq!(a.best, b.best);
+        assert_eq!(a.best_objective, b.best_objective);
+    }
+
+    #[test]
+    fn infeasible_init_recovers() {
+        let init = Allocation { instances: vec![9, 9], quotas: vec![1.0, 1.0] }; // ΣN·p = 18
+        let params = SaParams { iterations: 6_000, ..Default::default() };
+        let r = anneal(init, params, toy_feasible, toy_objective);
+        // moves shrink it back into the feasible region
+        assert!(r.is_some());
+        assert!(toy_feasible(&r.unwrap().best));
+    }
+}

@@ -1,0 +1,233 @@
+//! Comparison systems from the paper's evaluation (§VIII) and
+//! investigation (§IV): Even Allocation (EA), Laius [15], the standalone
+//! and balanced deployments of §IV-A, and Camelot itself (with the
+//! Camelot-NC ablation).
+//!
+//! Every planner consumes the same inputs and produces a runnable
+//! [`Deployment`], so the figure harnesses compare them symmetrically on
+//! the simulator.
+
+use crate::allocator::{max_load, AllocContext, SaParams};
+use crate::comm::CommMode;
+use crate::config::ClusterSpec;
+use crate::deploy::{self, Allocation};
+use crate::predictor::StagePredictor;
+use crate::sim::{Deployment, InstancePlacement};
+use crate::suite::Pipeline;
+
+/// Which system plans the deployment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Planner {
+    /// Even allocation: every stage gets the same share of every GPU,
+    /// one instance per stage per GPU, main-memory communication.
+    EvenAllocation,
+    /// Laius (ICS'19), adapted as the paper does (§VIII): per-GPU
+    /// balanced throughputs via predicted durations, one instance per
+    /// stage per GPU, no cross-GPU instance tuning, no bandwidth
+    /// constraint, main-memory communication.
+    Laius,
+    /// §IV-A standalone: each stage owns a whole GPU.
+    Standalone,
+    /// §IV-A balanced: single-GPU SM split equalizing *offline-profiled*
+    /// throughputs (contention-oblivious), main-memory communication.
+    Balanced,
+    /// Camelot (Case 1 planner + global-memory IPC + all constraints).
+    Camelot,
+    /// Camelot without the bandwidth constraint (§VIII-D ablation).
+    CamelotNC,
+}
+
+impl Planner {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Planner::EvenAllocation => "EA",
+            Planner::Laius => "Laius",
+            Planner::Standalone => "Standalone",
+            Planner::Balanced => "Balanced",
+            Planner::Camelot => "Camelot",
+            Planner::CamelotNC => "Camelot-NC",
+        }
+    }
+}
+
+/// Plan a deployment for `pipeline` on `cluster` at batch size `batch`.
+///
+/// Returns `Err` when the planner cannot produce a valid deployment
+/// (e.g. Standalone with fewer GPUs than stages).
+pub fn plan(
+    planner: Planner,
+    pipeline: &Pipeline,
+    cluster: &ClusterSpec,
+    predictors: &[StagePredictor],
+    batch: u32,
+    sa: SaParams,
+) -> Result<Deployment, String> {
+    let n = pipeline.n_stages();
+    match planner {
+        Planner::EvenAllocation => {
+            let quota = 1.0 / n as f64;
+            let alloc = Allocation {
+                instances: vec![cluster.num_gpus as u32; n],
+                quotas: vec![quota; n],
+            };
+            deploy::deploy(pipeline, cluster, &alloc, batch, CommMode::MainMemory, None)
+                .map_err(|e| e.to_string())
+        }
+        Planner::Laius => {
+            // balance per-GPU: quotas ∝ predicted full-GPU duration so
+            // the stage throughputs equalize; replicate on every GPU.
+            let quotas = balanced_quotas(predictors, batch);
+            let mut placements = Vec::new();
+            for g in 0..cluster.num_gpus {
+                for (stage, &q) in quotas.iter().enumerate() {
+                    placements.push(InstancePlacement { stage, gpu: g, sm_frac: q });
+                }
+            }
+            Ok(Deployment { placements, batch, comm: CommMode::MainMemory })
+        }
+        Planner::Standalone => {
+            if cluster.num_gpus < n {
+                return Err(format!(
+                    "standalone needs {} GPUs, cluster has {}",
+                    n, cluster.num_gpus
+                ));
+            }
+            Ok(Deployment {
+                placements: (0..n)
+                    .map(|stage| InstancePlacement { stage, gpu: stage, sm_frac: 1.0 })
+                    .collect(),
+                batch,
+                comm: CommMode::MainMemory,
+            })
+        }
+        Planner::Balanced => {
+            let quotas = balanced_quotas(predictors, batch);
+            Ok(Deployment {
+                placements: quotas
+                    .iter()
+                    .enumerate()
+                    .map(|(stage, &q)| InstancePlacement { stage, gpu: 0, sm_frac: q })
+                    .collect(),
+                batch,
+                comm: CommMode::MainMemory,
+            })
+        }
+        Planner::Camelot | Planner::CamelotNC => {
+            let mut ctx = AllocContext::new(pipeline, cluster, predictors, batch);
+            ctx.enforce_bw = matches!(planner, Planner::Camelot);
+            let r = max_load::solve(&ctx, sa)
+                .ok_or_else(|| "no feasible allocation".to_string())?;
+            let demands = ctx.bw_budget_storage(&r.best);
+            deploy::deploy(
+                pipeline, cluster, &r.best, batch, CommMode::GlobalIpc,
+                demands.as_deref().map(|d| crate::deploy::BwBudget {
+                    demands: d,
+                    cap: 0.75 * cluster.gpu.mem_bw,
+                }),
+            )
+            .map_err(|e| e.to_string())
+        }
+    }
+}
+
+/// SM split equalizing predicted stage throughputs on one GPU
+/// (used by both Laius and the §IV balanced deployment).
+pub fn balanced_quotas(predictors: &[StagePredictor], batch: u32) -> Vec<f64> {
+    // duration at full GPU approximates relative weight; iterate once to
+    // refine against the predictor's nonlinearity.
+    let n = predictors.len();
+    let mut quotas = vec![1.0 / n as f64; n];
+    for _ in 0..8 {
+        let thr: Vec<f64> = predictors
+            .iter()
+            .zip(&quotas)
+            .map(|(p, &q)| p.throughput(batch, q).max(1e-6))
+            .collect();
+        // shift quota from fast stages to slow ones, then renormalize
+        for i in 0..n {
+            quotas[i] = (quotas[i] / thr[i]).clamp(1e-6, 1e6);
+        }
+        let total: f64 = quotas.iter().sum();
+        for q in quotas.iter_mut() {
+            *q = (*q / total).clamp(0.02, 0.96);
+        }
+    }
+    // the clamp can push the sum past 1.0 (raising starved stages);
+    // renormalize so the split always fits one GPU
+    let total: f64 = quotas.iter().sum();
+    if total > 1.0 {
+        for q in quotas.iter_mut() {
+            *q /= total * 1.0001;
+        }
+    }
+    quotas
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+    use crate::predictor::ProfileConfig;
+    use crate::suite::real;
+
+    fn fixture(p: &Pipeline) -> (ClusterSpec, Vec<StagePredictor>) {
+        let cluster = ClusterSpec::two_2080ti();
+        let preds = p
+            .stages
+            .iter()
+            .map(|s| StagePredictor::train(s, &GpuSpec::rtx2080ti(), &ProfileConfig::default()))
+            .collect();
+        (cluster, preds)
+    }
+
+    #[test]
+    fn all_planners_produce_admissible_deployments() {
+        let p = real::img_to_text();
+        let (c, preds) = fixture(&p);
+        for planner in [
+            Planner::EvenAllocation,
+            Planner::Laius,
+            Planner::Standalone,
+            Planner::Balanced,
+            Planner::Camelot,
+            Planner::CamelotNC,
+        ] {
+            let d = plan(planner, &p, &c, &preds, 16, SaParams::default())
+                .unwrap_or_else(|e| panic!("{}: {e}", planner.name()));
+            let sim = crate::sim::Simulator::new(
+                &p,
+                &c,
+                &d,
+                crate::sim::SimOptions { queries: 1, ..Default::default() },
+            );
+            sim.admit().unwrap_or_else(|e| panic!("{}: {e}", planner.name()));
+        }
+    }
+
+    #[test]
+    fn standalone_requires_enough_gpus() {
+        let p = crate::suite::artifact::pipeline(1, 1, 1); // 3 stages
+        let (_, preds) = fixture(&p);
+        let c2 = ClusterSpec::two_2080ti();
+        assert!(plan(Planner::Standalone, &p, &c2, &preds, 16, SaParams::default()).is_err());
+    }
+
+    #[test]
+    fn balanced_gives_slow_stage_more_sm() {
+        let p = real::img_to_text(); // stage 0 (vgg) is much heavier
+        let (_, preds) = fixture(&p);
+        let q = balanced_quotas(&preds, 16);
+        assert!(q[0] > q[1], "vgg should get more SM: {q:?}");
+        crate::util::testkit::assert_close(q.iter().sum::<f64>(), 1.0, 1e-6, 0.0);
+    }
+
+    #[test]
+    fn camelot_uses_ipc_and_baselines_do_not() {
+        let p = real::text_to_text();
+        let (c, preds) = fixture(&p);
+        let ea = plan(Planner::EvenAllocation, &p, &c, &preds, 16, SaParams::default()).unwrap();
+        let cam = plan(Planner::Camelot, &p, &c, &preds, 16, SaParams::default()).unwrap();
+        assert_eq!(ea.comm, CommMode::MainMemory);
+        assert_eq!(cam.comm, CommMode::GlobalIpc);
+    }
+}

@@ -1,0 +1,139 @@
+//! Inter-microservice communication mechanisms (§VI).
+//!
+//! Two channel implementations:
+//!
+//! * [`CommMode::MainMemory`] — the default CUDA path (Fig 8a): the
+//!   producer copies device→host, the consumer copies host→device. Both
+//!   copies cross the contended PCIe bus, and the payload is resident
+//!   twice in global memory.
+//! * [`CommMode::GlobalIpc`] — Camelot's mechanism (Fig 8b/10): the
+//!   producer passes an 8-byte CUDA-IPC handle; the consumer maps the
+//!   producer's buffer directly. No bulk copy, a small fixed
+//!   probe/transfer/decode overhead per message, and a one-time channel
+//!   setup (~1 ms). Same-GPU only — cross-GPU hops always fall back to
+//!   the main-memory path (§VI-B last paragraph).
+
+use crate::config::IpcSpec;
+use crate::sim::pcie::PcieBus;
+
+/// Which mechanism a deployment uses for same-GPU hops.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommMode {
+    MainMemory,
+    GlobalIpc,
+}
+
+/// Cost of one hop, already resolved against bus state.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HopCost {
+    /// Wall-clock seconds the transfer takes.
+    pub duration_s: f64,
+    /// Whether a PCIe stream was registered (caller must release it via
+    /// `PcieBus::end_transfer` when the hop completes).
+    pub uses_bus: bool,
+    /// Extra global-memory bytes the payload occupies at the receiver
+    /// (a second copy under MainMemory; none under IPC).
+    pub receiver_copy_bytes: f64,
+}
+
+/// Resolve the cost of moving `bytes` from stage i to stage i+1.
+///
+/// `same_gpu` is whether both instances share a device. Registers a bus
+/// stream for bus-crossing hops (start-time rate approximation, like all
+/// bus transfers in the engine).
+pub fn hop_cost(
+    mode: CommMode,
+    same_gpu: bool,
+    bytes: f64,
+    bus: &mut PcieBus,
+    ipc: &IpcSpec,
+) -> HopCost {
+    match (mode, same_gpu) {
+        (CommMode::GlobalIpc, true) => HopCost {
+            // handle probe/transfer/decode only — payload never moves
+            duration_s: ipc.per_msg_s,
+            uses_bus: false,
+            receiver_copy_bytes: ipc.handle_bytes as f64,
+        },
+        _ => {
+            // device→host then host→device: 2× payload over the bus.
+            // Modeled as one stream occupying the bus for both copies.
+            let duration = bus.begin_transfer(2.0 * bytes);
+            HopCost {
+                duration_s: duration,
+                uses_bus: true,
+                receiver_copy_bytes: bytes,
+            }
+        }
+    }
+}
+
+/// Fig 11 exact analytic comparison (uncontended bus): communication
+/// time for one payload under both mechanisms.
+pub fn fig11_point(bytes: f64, bus: &PcieBus, ipc: &IpcSpec) -> (f64, f64) {
+    let main_mem = 2.0 * (bus.spec().setup_s + bytes / bus.spec().per_stream_bw);
+    let global_ipc = ipc.per_msg_s;
+    (main_mem, global_ipc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{IpcSpec, PcieSpec};
+
+    fn setup() -> (PcieBus, IpcSpec) {
+        (PcieBus::new(PcieSpec::default()), IpcSpec::default())
+    }
+
+    #[test]
+    fn ipc_same_gpu_is_constant_time() {
+        let (mut bus, ipc) = setup();
+        let small = hop_cost(CommMode::GlobalIpc, true, 2.0, &mut bus, &ipc);
+        let large = hop_cost(CommMode::GlobalIpc, true, 256e6, &mut bus, &ipc);
+        assert_eq!(small.duration_s, large.duration_s);
+        assert!(!small.uses_bus);
+        assert_eq!(small.receiver_copy_bytes, 8.0);
+        assert_eq!(bus.active_streams(), 0);
+    }
+
+    #[test]
+    fn ipc_cross_gpu_falls_back_to_main_memory() {
+        let (mut bus, ipc) = setup();
+        let hop = hop_cost(CommMode::GlobalIpc, false, 1e6, &mut bus, &ipc);
+        assert!(hop.uses_bus);
+        assert_eq!(bus.active_streams(), 1);
+        assert_eq!(hop.receiver_copy_bytes, 1e6);
+    }
+
+    #[test]
+    fn main_memory_pays_double_copy() {
+        let (mut bus, ipc) = setup();
+        let hop = hop_cost(CommMode::MainMemory, true, 10e6, &mut bus, &ipc);
+        // 2 × 10 MB at 3,150 MB/s + setup
+        let expected = 2.0 * 10e6 / 3.150e9 + bus.spec().setup_s;
+        crate::util::testkit::assert_close(hop.duration_s, expected, 0.01, 0.0);
+    }
+
+    #[test]
+    fn fig11_crossover_near_20kb() {
+        // Paper: IPC wins above ~0.02 MB, loses for tiny payloads.
+        let (bus, ipc) = setup();
+        let (mm_tiny, ipc_tiny) = fig11_point(2.0, &bus, &ipc);
+        assert!(mm_tiny < ipc_tiny, "tiny payloads favor main memory");
+        let (mm_big, ipc_big) = fig11_point(0.05e6, &bus, &ipc);
+        assert!(ipc_big < mm_big, "50 KB favors IPC");
+        // locate the crossover: must sit between 2 B and 0.05 MB
+        let mut lo = 2.0;
+        let mut hi = 0.05e6;
+        for _ in 0..60 {
+            let mid = 0.5 * (lo + hi);
+            let (mm, gi) = fig11_point(mid, &bus, &ipc);
+            if mm < gi {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        assert!(lo > 1e3 && lo < 40e3, "crossover at {lo} bytes");
+    }
+}

@@ -1,0 +1,172 @@
+//! Cluster and GPU configuration.
+//!
+//! Encodes Table III of the paper (the two testbeds) as presets, plus
+//! the PCIe constants of §VI-A. All resource-allocation constraints in
+//! `allocator/` read their capacities (R, BW, F, I, G in Table II) from
+//! a [`GpuSpec`].
+
+/// Static description of one spatial-multitasking GPU model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuSpec {
+    /// Marketing name, e.g. "RTX 2080Ti".
+    pub name: &'static str,
+    /// Number of streaming multiprocessors (the paper allocates SMs as a
+    /// percentage of this pool via Volta MPS).
+    pub sms: u32,
+    /// Peak fp32 throughput in GFLOPS (G in Table II).
+    pub gflops: f64,
+    /// Global memory capacity in bytes (F in Table II).
+    pub mem_bytes: u64,
+    /// Peak global memory bandwidth in bytes/s (BW in Table II).
+    pub mem_bw: f64,
+    /// Max concurrent MPS client contexts per device (I in Table II;
+    /// Volta MPS allows 48).
+    pub mps_contexts: u32,
+    /// Fixed kernel launch/dispatch overhead per batch, seconds.
+    pub launch_overhead_s: f64,
+}
+
+impl GpuSpec {
+    /// NVIDIA GeForce RTX 2080Ti — the paper's two-GPU testbed.
+    pub fn rtx2080ti() -> Self {
+        GpuSpec {
+            name: "RTX 2080Ti",
+            sms: 68,
+            gflops: 13_450.0,
+            mem_bytes: 11 * (1 << 30),
+            mem_bw: 616.0e9,
+            mps_contexts: 48,
+            launch_overhead_s: 30e-6,
+        }
+    }
+
+    /// NVIDIA Tesla V100-SXM3 32GB — one of the 16 GPUs of the DGX-2.
+    pub fn v100_sxm3() -> Self {
+        GpuSpec {
+            name: "V100-SXM3",
+            sms: 80,
+            gflops: 15_700.0,
+            mem_bytes: 32 * (1 << 30),
+            mem_bw: 897.0e9,
+            mps_contexts: 48,
+            launch_overhead_s: 30e-6,
+        }
+    }
+
+    /// Peak fp32 FLOP/s as a plain f64.
+    pub fn flops_per_sec(&self) -> f64 {
+        self.gflops * 1e9
+    }
+}
+
+/// PCIe bus model constants (§VI-A of the paper).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PcieSpec {
+    /// Effective bus bandwidth, bytes/s (paper: 12,160 MB/s for ×16 3.0).
+    pub effective_bw: f64,
+    /// Bandwidth one pageable-memory memcpy stream can sustain, bytes/s
+    /// (paper measurement: 3,150 MB/s).
+    pub per_stream_bw: f64,
+    /// Fixed DMA setup latency per transfer, seconds.
+    pub setup_s: f64,
+}
+
+impl Default for PcieSpec {
+    fn default() -> Self {
+        PcieSpec {
+            effective_bw: 12_160.0e6,
+            per_stream_bw: 3_150.0e6,
+            setup_s: 10e-6,
+        }
+    }
+}
+
+/// CUDA-IPC-style global-memory communication constants (§VI-B).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IpcSpec {
+    /// One-time channel setup (cudaIpcGetMemHandle + handshake): ~1 ms.
+    pub setup_s: f64,
+    /// Per-message overhead to probe/transfer/decode the 8-byte handle.
+    /// This is what makes tiny (<0.02 MB) payloads favor the main-memory
+    /// path in Fig 11.
+    pub per_msg_s: f64,
+    /// Handle size in bytes.
+    pub handle_bytes: u64,
+}
+
+impl Default for IpcSpec {
+    fn default() -> Self {
+        IpcSpec {
+            setup_s: 1e-3,
+            per_msg_s: 25e-6,
+            handle_bytes: 8,
+        }
+    }
+}
+
+/// A machine: homogeneous GPUs behind one PCIe root complex per pair.
+#[derive(Debug, Clone)]
+pub struct ClusterSpec {
+    pub gpu: GpuSpec,
+    pub num_gpus: usize,
+    pub pcie: PcieSpec,
+    pub ipc: IpcSpec,
+}
+
+impl ClusterSpec {
+    /// The paper's primary testbed: 2× RTX 2080Ti.
+    pub fn two_2080ti() -> Self {
+        ClusterSpec {
+            gpu: GpuSpec::rtx2080ti(),
+            num_gpus: 2,
+            pcie: PcieSpec::default(),
+            ipc: IpcSpec::default(),
+        }
+    }
+
+    /// The paper's large-scale testbed: DGX-2 with 16× V100.
+    pub fn dgx2() -> Self {
+        ClusterSpec {
+            gpu: GpuSpec::v100_sxm3(),
+            num_gpus: 16,
+            pcie: PcieSpec::default(),
+            ipc: IpcSpec::default(),
+        }
+    }
+
+    /// Total SM-fraction capacity across the cluster (C × R with R = 1.0).
+    pub fn total_compute(&self) -> f64 {
+        self.num_gpus as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_table3() {
+        let t = GpuSpec::rtx2080ti();
+        assert_eq!(t.sms, 68);
+        assert_eq!(t.mps_contexts, 48);
+        assert!((t.mem_bw - 616.0e9).abs() < 1.0);
+        let v = GpuSpec::v100_sxm3();
+        assert!((v.mem_bw - 897.0e9).abs() < 1.0);
+        assert_eq!(v.mem_bytes, 32 * (1 << 30));
+    }
+
+    #[test]
+    fn pcie_contention_knee_at_three_streams() {
+        // The paper's back-of-envelope: ⌊12160/3150⌋ = 3 concurrent
+        // pageable streams fit before contention begins.
+        let p = PcieSpec::default();
+        assert_eq!((p.effective_bw / p.per_stream_bw) as u32, 3);
+    }
+
+    #[test]
+    fn cluster_presets() {
+        assert_eq!(ClusterSpec::two_2080ti().num_gpus, 2);
+        assert_eq!(ClusterSpec::dgx2().num_gpus, 16);
+        assert_eq!(ClusterSpec::dgx2().gpu.name, "V100-SXM3");
+    }
+}

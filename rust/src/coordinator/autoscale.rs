@@ -1,0 +1,193 @@
+//! Load adaptation (§VIII-C): track the offered load and re-run the
+//! Case-2 (min-resource) policy whenever it drifts, so resource usage
+//! follows the diurnal curve while the 99%-ile QoS holds.
+//!
+//! The controller is deliberately hysteretic: replanning has a cost
+//! (~10 ms solve + instance churn), so it only fires when the load
+//! moves by more than `replan_threshold` relative to the load the
+//! current plan was provisioned for, and each plan carries a headroom
+//! factor so transient upticks don't immediately violate QoS.
+
+use crate::allocator::{max_load, min_resource, AllocContext, SaParams};
+use crate::comm::CommMode;
+use crate::config::ClusterSpec;
+use crate::deploy::{self, Allocation};
+use crate::predictor::StagePredictor;
+use crate::sim::Deployment;
+use crate::suite::Pipeline;
+
+/// Controller configuration.
+#[derive(Debug, Clone)]
+pub struct AutoscaleConfig {
+    /// Relative load change that triggers a replan (e.g. 0.2 = ±20%).
+    pub replan_threshold: f64,
+    /// Provision for `load × headroom` so short bursts stay in QoS.
+    pub headroom: f64,
+    pub batch: u32,
+    pub sa: SaParams,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            replan_threshold: 0.20,
+            headroom: 1.15,
+            batch: 32,
+            sa: SaParams::default(),
+        }
+    }
+}
+
+/// One autoscaling decision.
+#[derive(Debug, Clone)]
+pub struct Plan {
+    pub allocation: Allocation,
+    pub deployment: Deployment,
+    /// Load (queries/s) this plan was provisioned for.
+    pub provisioned_qps: f64,
+    /// Σ N·p resource usage.
+    pub usage: f64,
+}
+
+/// The §VIII-C controller: owns the predictors and the current plan.
+pub struct Autoscaler<'a> {
+    pipeline: &'a Pipeline,
+    cluster: &'a ClusterSpec,
+    predictors: &'a [StagePredictor],
+    config: AutoscaleConfig,
+    current: Option<Plan>,
+    replans: usize,
+}
+
+impl<'a> Autoscaler<'a> {
+    pub fn new(
+        pipeline: &'a Pipeline,
+        cluster: &'a ClusterSpec,
+        predictors: &'a [StagePredictor],
+        config: AutoscaleConfig,
+    ) -> Self {
+        Autoscaler { pipeline, cluster, predictors, config, current: None, replans: 0 }
+    }
+
+    pub fn current(&self) -> Option<&Plan> {
+        self.current.as_ref()
+    }
+
+    /// Number of replans performed so far (hysteresis effectiveness).
+    pub fn replans(&self) -> usize {
+        self.replans
+    }
+
+    /// Observe the current offered load; returns a new plan if the
+    /// controller decided to re-provision, None if the current plan
+    /// stands.
+    pub fn observe(&mut self, load_qps: f64) -> Option<&Plan> {
+        let needs_replan = match &self.current {
+            None => true,
+            Some(p) => {
+                let rel = (load_qps * self.config.headroom - p.provisioned_qps).abs()
+                    / p.provisioned_qps.max(1e-9);
+                rel > self.config.replan_threshold
+            }
+        };
+        if !needs_replan {
+            return None;
+        }
+        let target = load_qps * self.config.headroom;
+        let ctx = AllocContext::new(self.pipeline, self.cluster, self.predictors, self.config.batch);
+        // Case 2 at the target; near/above capacity fall back to Case 1
+        let allocation = match min_resource::solve(&ctx, target, self.config.sa) {
+            Some((r, _gpus)) => r.best,
+            None => max_load::solve(&ctx, self.config.sa)?.best,
+        };
+        let demands = ctx.bw_budget_storage(&allocation);
+        let deployment = deploy::deploy(
+            self.pipeline,
+            self.cluster,
+            &allocation,
+            self.config.batch,
+            CommMode::GlobalIpc,
+            demands.as_deref().map(|d| deploy::BwBudget {
+                demands: d,
+                cap: 0.75 * self.cluster.gpu.mem_bw,
+            }),
+        )
+        .ok()?;
+        let usage = allocation.total_quota();
+        self.replans += 1;
+        self.current = Some(Plan {
+            allocation,
+            deployment,
+            provisioned_qps: target,
+            usage,
+        });
+        self.current.as_ref()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::figures::common::train_predictors;
+    use crate::sim::{SimOptions, Simulator};
+    use crate::suite::{real, workload::DiurnalPattern};
+
+    #[test]
+    fn scales_usage_with_load() {
+        let p = real::img_to_img();
+        let c = ClusterSpec::two_2080ti();
+        let preds = train_predictors(&p, &c);
+        let mut a = Autoscaler::new(&p, &c, &preds, AutoscaleConfig::default());
+        a.observe(100.0).expect("initial plan");
+        let low = a.current().unwrap().usage;
+        a.observe(500.0).expect("replans upward");
+        let high = a.current().unwrap().usage;
+        assert!(high > low, "usage {high} must grow from {low}");
+        a.observe(100.0).expect("replans back down");
+        let back = a.current().unwrap().usage;
+        assert!(back < high, "usage {back} must shrink from {high}");
+    }
+
+    #[test]
+    fn hysteresis_suppresses_small_changes() {
+        let p = real::text_to_text();
+        let c = ClusterSpec::two_2080ti();
+        let preds = train_predictors(&p, &c);
+        let mut a = Autoscaler::new(&p, &c, &preds, AutoscaleConfig::default());
+        a.observe(200.0).expect("initial plan");
+        assert_eq!(a.replans(), 1);
+        // ±10% wobble: below the 20% threshold, no replans
+        for load in [210.0, 190.0, 205.0, 195.0] {
+            assert!(a.observe(load).is_none());
+        }
+        assert_eq!(a.replans(), 1);
+    }
+
+    #[test]
+    fn diurnal_day_meets_qos_with_few_replans() {
+        // sample a diurnal day at 2-hour ticks; every plan must meet the
+        // QoS at its tick's load on the simulator
+        let p = real::img_to_text();
+        let c = ClusterSpec::two_2080ti();
+        let preds = train_predictors(&p, &c);
+        let mut a = Autoscaler::new(&p, &c, &preds, AutoscaleConfig::default());
+        let day = DiurnalPattern::new(400.0);
+        let opts = SimOptions { queries: 1_200, ..Default::default() };
+        for tick in 0..12 {
+            let load = day.rate_at(tick as f64 * 7_200.0);
+            a.observe(load);
+            let plan = a.current().expect("always provisioned");
+            let rep = Simulator::new(&p, &c, &plan.deployment, opts.clone())
+                .run(load)
+                .unwrap();
+            assert!(
+                rep.p99() <= p.qos_target_s * 1.1,
+                "tick {tick}: p99 {} at load {load:.0}",
+                rep.p99()
+            );
+        }
+        // hysteresis: far fewer replans than ticks
+        assert!(a.replans() < 12, "replans {}", a.replans());
+        assert!(a.replans() >= 2, "must adapt at least twice over a day");
+    }
+}

@@ -1,0 +1,227 @@
+//! Execution backends for the coordinator.
+//!
+//! * [`PjrtBackend`] — the production path: each stage is an AOT HLO
+//!   artifact compiled on the PJRT CPU client; batches of query payloads
+//!   are packed into the artifact's batch dimension and executed.
+//! * [`MockBackend`] — deterministic stand-in for control-plane tests
+//!   and benches (configurable output width and synthetic service time).
+
+use std::path::PathBuf;
+use std::sync::mpsc::{self, Sender};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::Engine;
+
+/// A pipeline-stage executor: takes per-query payload rows, returns
+/// per-query output rows.
+pub trait ExecBackend: Send + Sync {
+    fn execute(&self, stage: usize, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>>;
+}
+
+/// One execution request routed to the PJRT executor thread.
+struct Job {
+    stage: usize,
+    rows: Vec<Vec<f32>>,
+    reply: Sender<Result<Vec<Vec<f32>>>>,
+}
+
+/// Production backend over the PJRT [`Engine`].
+///
+/// The `xla` crate's PJRT handles are not `Send`, so a dedicated
+/// executor thread owns the engine (one CPU "device") and worker
+/// threads submit batches over a channel — the same single-device
+/// serialization a real accelerator queue imposes.
+///
+/// Each stage maps to one artifact (stage name + compiled batch size).
+/// Incoming batches are zero-padded up to the artifact batch and the
+/// padding rows are discarded on output — the AOT program has a static
+/// shape, exactly like a real serving deployment with fixed batching.
+pub struct PjrtBackend {
+    jobs: Mutex<Sender<Job>>,
+    n_stages: usize,
+    batch: usize,
+}
+
+impl PjrtBackend {
+    /// Spawn the executor thread and pre-compile all (stage, batch)
+    /// artifacts from `artifacts_dir`.
+    pub fn new(
+        artifacts_dir: impl Into<PathBuf>,
+        stages: &[String],
+        batch: usize,
+    ) -> Result<PjrtBackend> {
+        let dir = artifacts_dir.into();
+        let stages_owned: Vec<String> = stages.to_vec();
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        std::thread::spawn(move || {
+            // the engine lives entirely on this thread (PJRT handles are
+            // not Send)
+            let mut engine = match Engine::open(&dir) {
+                Ok(e) => e,
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            for s in &stages_owned {
+                if let Err(e) = engine.load_stage(s, batch as u32) {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            }
+            let _ = ready_tx.send(Ok(()));
+            while let Ok(job) = rx.recv() {
+                let result = run_job(&mut engine, &stages_owned, batch, job.stage, &job.rows);
+                let _ = job.reply.send(result);
+            }
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))??;
+        Ok(PjrtBackend { jobs: Mutex::new(tx), n_stages: stages.len(), batch })
+    }
+}
+
+fn run_job(
+    engine: &mut Engine,
+    stages: &[String],
+    batch: usize,
+    stage: usize,
+    rows: &[Vec<f32>],
+) -> Result<Vec<Vec<f32>>> {
+    let name = stages
+        .get(stage)
+        .ok_or_else(|| anyhow!("stage index {stage} out of range"))?;
+    if rows.is_empty() || rows.len() > batch {
+        return Err(anyhow!(
+            "{name}: batch of {} rows (artifact batch {batch})",
+            rows.len()
+        ));
+    }
+    let exe = engine.load_stage(name, batch as u32)?;
+    let d_in = *exe
+        .meta
+        .input_shape
+        .last()
+        .ok_or_else(|| anyhow!("{name}: scalar input shape"))?;
+    let d_out = *exe.meta.output_shape.last().unwrap();
+    // pack rows + zero-pad to the artifact's static batch
+    let mut packed = vec![0.0f32; batch * d_in];
+    for (i, row) in rows.iter().enumerate() {
+        if row.len() != d_in {
+            return Err(anyhow!(
+                "{name}: row {i} has {} features, artifact wants {d_in}",
+                row.len()
+            ));
+        }
+        packed[i * d_in..(i + 1) * d_in].copy_from_slice(row);
+    }
+    let out = exe.run(&packed)?;
+    Ok((0..rows.len()).map(|i| out[i * d_out..(i + 1) * d_out].to_vec()).collect())
+}
+
+impl ExecBackend for PjrtBackend {
+    fn execute(&self, stage: usize, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if stage >= self.n_stages {
+            return Err(anyhow!("stage index {stage} out of range"));
+        }
+        if inputs.len() > self.batch {
+            return Err(anyhow!("batch {} exceeds artifact batch {}", inputs.len(), self.batch));
+        }
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.jobs
+            .lock()
+            .unwrap()
+            .send(Job {
+                stage,
+                rows: inputs.iter().map(|r| r.to_vec()).collect(),
+                reply: reply_tx,
+            })
+            .map_err(|_| anyhow!("executor thread gone"))?;
+        reply_rx.recv().map_err(|_| anyhow!("executor thread gone"))?
+    }
+}
+
+/// Deterministic mock: per-stage synthetic service time, configurable
+/// output width (or identity).
+pub struct MockBackend {
+    n_stages: usize,
+    out_width: Option<usize>,
+    work: Duration,
+}
+
+impl MockBackend {
+    pub fn new(n_stages: usize, out_width: usize, work: Duration) -> MockBackend {
+        MockBackend { n_stages, out_width: Some(out_width), work }
+    }
+
+    /// Pass payloads through unchanged, with zero service time.
+    pub fn identity(n_stages: usize) -> MockBackend {
+        MockBackend { n_stages, out_width: None, work: Duration::ZERO }
+    }
+}
+
+impl ExecBackend for MockBackend {
+    fn execute(&self, stage: usize, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        if stage >= self.n_stages {
+            return Err(anyhow!("stage {stage} out of range"));
+        }
+        if !self.work.is_zero() {
+            std::thread::sleep(self.work);
+        }
+        Ok(inputs
+            .iter()
+            .map(|row| match self.out_width {
+                Some(w) => {
+                    let s: f32 = row.iter().sum();
+                    vec![s / row.len().max(1) as f32; w]
+                }
+                None => row.to_vec(),
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_identity_roundtrip() {
+        let b = MockBackend::identity(1);
+        let out = b.execute(0, &[&[1.0, 2.0], &[3.0, 4.0]]).unwrap();
+        assert_eq!(out, vec![vec![1.0, 2.0], vec![3.0, 4.0]]);
+    }
+
+    #[test]
+    fn mock_rejects_bad_stage() {
+        let b = MockBackend::identity(2);
+        assert!(b.execute(2, &[&[1.0]]).is_err());
+    }
+
+    #[test]
+    fn pjrt_backend_runs_real_pipeline_if_artifacts_exist() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let stages = vec!["vgg_features".to_string(), "lstm_caption".to_string()];
+        let b = PjrtBackend::new(dir, &stages, 8).unwrap();
+        let row = vec![0.1f32; 512];
+        let rows: Vec<&[f32]> = vec![&row, &row, &row];
+        let s1 = b.execute(0, &rows).unwrap();
+        assert_eq!(s1.len(), 3);
+        assert_eq!(s1[0].len(), 512);
+        // identical inputs → identical outputs (padding must not leak)
+        assert_eq!(s1[0], s1[1]);
+        let s1_refs: Vec<&[f32]> = s1.iter().map(|r| r.as_slice()).collect();
+        let s2 = b.execute(1, &s1_refs).unwrap();
+        assert_eq!(s2[0].len(), 512);
+        assert!(s2[0].iter().all(|x| x.is_finite()));
+    }
+}

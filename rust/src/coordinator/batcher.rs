@@ -1,0 +1,170 @@
+//! Standalone dynamic batcher (§V-B steps 1–2): accumulate queries,
+//! flush when the batch is full or the head query's wait hits the
+//! QoS-derived deadline.
+//!
+//! The coordinator workers embed this policy inline against blocking
+//! channels; this type exposes the same policy over explicit timestamps
+//! so it can be unit-tested, property-tested, and reused by the
+//! simulator-side coordinator.
+
+use std::collections::VecDeque;
+
+/// When to flush a pending batch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BatchPolicy {
+    pub batch: usize,
+    /// Max head-of-line wait in seconds.
+    pub max_wait_s: f64,
+}
+
+/// Decision returned by [`Batcher::poll`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum BatchDecision<T> {
+    /// Issue these queries now.
+    Flush(Vec<T>),
+    /// Nothing to do until this absolute time (None = until new input).
+    Wait(Option<f64>),
+}
+
+/// Timestamped batching queue.
+#[derive(Debug, Clone)]
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    pending: VecDeque<(T, f64)>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.batch >= 1 && policy.max_wait_s >= 0.0);
+        Batcher { policy, pending: VecDeque::new() }
+    }
+
+    pub fn push(&mut self, item: T, now_s: f64) {
+        self.pending.push_back((item, now_s));
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Check the flush condition at time `now_s`.
+    pub fn poll(&mut self, now_s: f64) -> BatchDecision<T> {
+        if self.pending.is_empty() {
+            return BatchDecision::Wait(None);
+        }
+        let head_t = self.pending.front().unwrap().1;
+        let deadline = head_t + self.policy.max_wait_s;
+        if self.pending.len() >= self.policy.batch || now_s >= deadline - 1e-12 {
+            let n = self.pending.len().min(self.policy.batch);
+            return BatchDecision::Flush(
+                (0..n).map(|_| self.pending.pop_front().unwrap().0).collect(),
+            );
+        }
+        BatchDecision::Wait(Some(deadline))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit;
+
+    fn policy(batch: usize, wait: f64) -> BatchPolicy {
+        BatchPolicy { batch, max_wait_s: wait }
+    }
+
+    #[test]
+    fn flushes_when_full() {
+        let mut b = Batcher::new(policy(3, 10.0));
+        b.push(1, 0.0);
+        b.push(2, 0.1);
+        assert!(matches!(b.poll(0.2), BatchDecision::Wait(Some(_))));
+        b.push(3, 0.2);
+        assert_eq!(b.poll(0.2), BatchDecision::Flush(vec![1, 2, 3]));
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_partial_on_deadline() {
+        let mut b = Batcher::new(policy(8, 0.05));
+        b.push("q", 1.0);
+        assert_eq!(b.poll(1.01), BatchDecision::Wait(Some(1.05)));
+        assert_eq!(b.poll(1.05), BatchDecision::Flush(vec!["q"]));
+    }
+
+    #[test]
+    fn never_exceeds_batch_size() {
+        let mut b = Batcher::new(policy(4, 1.0));
+        for i in 0..10 {
+            b.push(i, 0.0);
+        }
+        match b.poll(0.0) {
+            BatchDecision::Flush(v) => {
+                assert_eq!(v, vec![0, 1, 2, 3]);
+                assert_eq!(b.len(), 6);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn fifo_order_property() {
+        testkit::forall_res(
+            17,
+            50,
+            |r| {
+                let n = 1 + r.below(40);
+                let batch = 1 + r.below(8);
+                let wait = r.range_f64(0.001, 0.1);
+                (n, batch, wait, r.next_u64())
+            },
+            |&(n, batch, wait, seed)| {
+                let mut r = crate::util::Rng::new(seed);
+                let mut b = Batcher::new(policy(batch, wait));
+                let mut t = 0.0;
+                let mut pushed = Vec::new();
+                let mut flushed = Vec::new();
+                for i in 0..n {
+                    t += r.range_f64(0.0, 0.05);
+                    b.push(i, t);
+                    pushed.push(i);
+                    if let BatchDecision::Flush(v) = b.poll(t) {
+                        if v.len() > batch {
+                            return Err("flush exceeds batch".into());
+                        }
+                        flushed.extend(v);
+                    }
+                }
+                // drain
+                loop {
+                    match b.poll(t + 1000.0) {
+                        BatchDecision::Flush(v) => flushed.extend(v),
+                        BatchDecision::Wait(_) => break,
+                    }
+                }
+                if flushed != pushed {
+                    return Err(format!("order broken: {flushed:?} vs {pushed:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn deadline_bounds_wait_property() {
+        // no query may sit in the batcher past its deadline if poll is
+        // called at the deadline
+        testkit::forall(23, 100, |r| (1 + r.below(16), r.range_f64(0.01, 0.2)), |&(batch, wait)| {
+            let mut b = Batcher::new(policy(batch, wait));
+            b.push(0u32, 5.0);
+            match b.poll(5.0 + wait) {
+                BatchDecision::Flush(_) => true,
+                BatchDecision::Wait(_) => false,
+            }
+        });
+    }
+}

@@ -1,0 +1,298 @@
+//! The online Camelot coordinator (§V-B): query wait queues, dynamic
+//! batching with QoS-aware deadlines, per-instance worker threads, and
+//! pipelined stage-to-stage handoff.
+//!
+//! This is the *real* serving loop, running on wall-clock time with a
+//! pluggable [`ExecBackend`]: the PJRT backend executes the AOT
+//! artifacts (Python never on this path), while the mock backend lets
+//! tests and benches drive the control plane deterministically.
+//!
+//! The event-driven simulator (`sim::engine`) is used for the paper's
+//! large parameter sweeps; this module is what a downstream user
+//! deploys.
+
+pub mod autoscale;
+pub mod backend;
+pub mod batcher;
+
+pub use autoscale::{AutoscaleConfig, Autoscaler};
+pub use backend::{ExecBackend, MockBackend, PjrtBackend};
+pub use batcher::{Batcher, BatchPolicy};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::metrics::LatencyHistogram;
+
+/// A query moving through the pipeline.
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub id: u64,
+    pub submitted: Instant,
+    /// Activation payload (row of the batched input).
+    pub payload: Vec<f32>,
+}
+
+/// A completed query.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub latency: Duration,
+    pub output: Vec<f32>,
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Stage names, in pipeline order (artifact stage names for PJRT).
+    pub stages: Vec<String>,
+    /// Instances per stage (N_i from the allocator).
+    pub instances: Vec<usize>,
+    /// Batch size.
+    pub batch: usize,
+    /// Batching deadline: a batch is issued when full or when its head
+    /// query has waited this long (§V-B step 2).
+    pub max_wait: Duration,
+}
+
+struct StageChannel {
+    tx: Sender<Query>,
+}
+
+/// The running coordinator: submit queries, receive completions.
+pub struct Coordinator {
+    stage_tx: Sender<Query>,
+    completions: Receiver<Completion>,
+    workers: Vec<JoinHandle<()>>,
+    submitted: Arc<AtomicU64>,
+    hist: Arc<Mutex<LatencyHistogram>>,
+    started: Instant,
+}
+
+impl Coordinator {
+    /// Launch worker threads for every instance of every stage.
+    pub fn launch(config: CoordinatorConfig, backend: Arc<dyn ExecBackend>) -> Coordinator {
+        assert_eq!(config.stages.len(), config.instances.len());
+        assert!(!config.stages.is_empty());
+        let n_stages = config.stages.len();
+        let (done_tx, done_rx) = mpsc::channel::<Completion>();
+        let hist = Arc::new(Mutex::new(LatencyHistogram::new()));
+
+        // build stage channels back-to-front so each worker knows its
+        // successor
+        let mut workers = Vec::new();
+        let mut next: Option<StageChannel> = None;
+        for stage_idx in (0..n_stages).rev() {
+            let (tx, rx) = mpsc::channel::<Query>();
+            let rx = Arc::new(Mutex::new(rx));
+            for _ in 0..config.instances[stage_idx] {
+                let rx = Arc::clone(&rx);
+                let backend = Arc::clone(&backend);
+                let succ = next.as_ref().map(|s| s.tx.clone());
+                let done = done_tx.clone();
+                let hist = Arc::clone(&hist);
+                let batch = config.batch;
+                let max_wait = config.max_wait;
+                workers.push(std::thread::spawn(move || {
+                    instance_loop(stage_idx, rx, backend, succ, done, hist, batch, max_wait);
+                }));
+            }
+            next = Some(StageChannel { tx });
+        }
+        let stage_tx = next.expect("at least one stage").tx;
+        drop(done_tx);
+
+        Coordinator {
+            stage_tx,
+            completions: done_rx,
+            workers,
+            submitted: Arc::new(AtomicU64::new(0)),
+            hist,
+            started: Instant::now(),
+        }
+    }
+
+    /// Submit one query (non-blocking).
+    pub fn submit(&self, payload: Vec<f32>) -> u64 {
+        let id = self.submitted.fetch_add(1, Ordering::Relaxed);
+        let q = Query { id, submitted: Instant::now(), payload };
+        self.stage_tx.send(q).expect("pipeline alive");
+        id
+    }
+
+    /// Blocking receive of the next completion.
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<Completion> {
+        self.completions.recv_timeout(timeout).ok()
+    }
+
+    /// Latency histogram of everything completed so far.
+    pub fn histogram(&self) -> LatencyHistogram {
+        self.hist.lock().unwrap().clone()
+    }
+
+    /// Overall completed-query throughput since launch.
+    pub fn qps(&self) -> f64 {
+        let n = self.hist.lock().unwrap().count();
+        n as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// Close the ingress and join all workers.
+    pub fn shutdown(self) {
+        drop(self.stage_tx);
+        drop(self.completions);
+        for w in self.workers {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Worker body: batch up to `batch` queries (deadline `max_wait`),
+/// execute via the backend, hand off to the successor (or complete).
+#[allow(clippy::too_many_arguments)]
+fn instance_loop(
+    stage_idx: usize,
+    rx: Arc<Mutex<Receiver<Query>>>,
+    backend: Arc<dyn ExecBackend>,
+    succ: Option<Sender<Query>>,
+    done: Sender<Completion>,
+    hist: Arc<Mutex<LatencyHistogram>>,
+    batch: usize,
+    max_wait: Duration,
+) {
+    loop {
+        // collect one batch, holding the receiver lock only while
+        // draining (instances of the same stage share the channel)
+        let mut queries: Vec<Query> = Vec::with_capacity(batch);
+        {
+            let guard = rx.lock().unwrap();
+            match guard.recv() {
+                Ok(q) => queries.push(q),
+                Err(_) => return, // ingress closed
+            }
+            let deadline = Instant::now() + max_wait;
+            while queries.len() < batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                match guard.recv_timeout(deadline - now) {
+                    Ok(q) => queries.push(q),
+                    Err(mpsc::RecvTimeoutError::Timeout) => break,
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        if queries.is_empty() {
+                            return;
+                        }
+                        break;
+                    }
+                }
+            }
+        }
+
+        let inputs: Vec<&[f32]> = queries.iter().map(|q| q.payload.as_slice()).collect();
+        match backend.execute(stage_idx, &inputs) {
+            Ok(outputs) => {
+                debug_assert_eq!(outputs.len(), queries.len());
+                for (q, out) in queries.into_iter().zip(outputs) {
+                    match &succ {
+                        Some(tx) => {
+                            let _ = tx.send(Query { payload: out, ..q });
+                        }
+                        None => {
+                            let latency = q.submitted.elapsed();
+                            hist.lock().unwrap().record(latency.as_secs_f64());
+                            let _ = done.send(Completion { id: q.id, latency, output: out });
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                // failed batch: drop queries, log once (no panic — the
+                // coordinator must survive backend hiccups)
+                eprintln!("stage {stage_idx} execute failed: {e}");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mock_config(stages: usize, instances: usize) -> CoordinatorConfig {
+        CoordinatorConfig {
+            stages: (0..stages).map(|i| format!("s{i}")).collect(),
+            instances: vec![instances; stages],
+            batch: 4,
+            max_wait: Duration::from_millis(5),
+        }
+    }
+
+    #[test]
+    fn completes_all_queries() {
+        let backend = Arc::new(MockBackend::new(2, 8, Duration::from_micros(200)));
+        let c = Coordinator::launch(mock_config(2, 1), backend);
+        for i in 0..50 {
+            c.submit(vec![i as f32; 8]);
+        }
+        let mut got = 0;
+        while got < 50 {
+            let comp = c.recv_timeout(Duration::from_secs(5)).expect("completion");
+            assert_eq!(comp.output.len(), 8);
+            got += 1;
+        }
+        assert_eq!(c.histogram().count(), 50);
+        c.shutdown();
+    }
+
+    #[test]
+    fn preserves_payload_through_identity_pipeline() {
+        let backend = Arc::new(MockBackend::identity(3));
+        let c = Coordinator::launch(mock_config(3, 2), backend);
+        let id = c.submit(vec![1.0, 2.0, 3.0]);
+        let comp = c.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(comp.id, id);
+        assert_eq!(comp.output, vec![1.0, 2.0, 3.0]);
+        c.shutdown();
+    }
+
+    #[test]
+    fn batching_deadline_flushes_partial_batches() {
+        // a single query must not wait forever for a full batch
+        let backend = Arc::new(MockBackend::identity(1));
+        let c = Coordinator::launch(mock_config(1, 1), backend);
+        c.submit(vec![9.0]);
+        let comp = c.recv_timeout(Duration::from_secs(2)).expect("deadline flush");
+        assert_eq!(comp.output, vec![9.0]);
+        c.shutdown();
+    }
+
+    #[test]
+    fn multi_instance_parallelism_increases_throughput() {
+        let work = Duration::from_millis(4);
+        let run = |instances: usize| -> Duration {
+            let backend = Arc::new(MockBackend::new(1, 4, work));
+            let mut cfg = mock_config(1, instances);
+            cfg.batch = 1; // force per-query execution
+            let c = Coordinator::launch(cfg, backend);
+            let t0 = Instant::now();
+            for _ in 0..32 {
+                c.submit(vec![0.0; 4]);
+            }
+            for _ in 0..32 {
+                c.recv_timeout(Duration::from_secs(10)).unwrap();
+            }
+            let dt = t0.elapsed();
+            c.shutdown();
+            dt
+        };
+        let one = run(1);
+        let four = run(4);
+        assert!(
+            four < one,
+            "4 instances ({four:?}) should beat 1 ({one:?})"
+        );
+    }
+}

@@ -1,0 +1,387 @@
+//! Multi-GPU deployment scheme (§VII-D, Fig 13).
+//!
+//! Given per-stage instance counts and SM quotas, place every instance
+//! on a concrete GPU:
+//!
+//! 1. Stages are deployed in descending memory-footprint order (global
+//!    memory is "the major resource bottleneck" — highest-priority
+//!    resource dimension).
+//! 2. For each instance, candidate GPUs are sorted by *fewest remaining
+//!    resources first* (remaining global memory, then remaining SMs) so
+//!    the pool does not fragment.
+//! 3. GPUs already hosting an instance of the same stage are preferred:
+//!    co-located same-stage instances share the model weights, reducing
+//!    global-memory pressure.
+//!
+//! Placement is validated with the same admission rules the simulator
+//! enforces (SM quota ≤ 100%, ≤48 MPS contexts, memory capacity with
+//! model sharing).
+
+use crate::config::ClusterSpec;
+use crate::sim::{Deployment, InstancePlacement, SimGpu};
+use crate::suite::Pipeline;
+
+/// Per-stage allocation produced by the policies in [`crate::allocator`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct Allocation {
+    /// N_i — instances per stage.
+    pub instances: Vec<u32>,
+    /// p_i — SM quota of each instance of stage i.
+    pub quotas: Vec<f64>,
+}
+
+impl Allocation {
+    /// Σ N_i·p_i — the resource-usage objective of Eq. 3.
+    pub fn total_quota(&self) -> f64 {
+        self.instances
+            .iter()
+            .zip(&self.quotas)
+            .map(|(&n, &p)| n as f64 * p)
+            .sum()
+    }
+}
+
+/// Reason a deployment attempt failed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeployError {
+    pub stage: usize,
+    pub detail: String,
+}
+
+impl std::fmt::Display for DeployError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cannot place stage {}: {}", self.stage, self.detail)
+    }
+}
+
+/// Per-instance global-memory-bandwidth demands, used as an additional
+/// placement dimension (the paper's Fig 13 multi-dimensional resource
+/// ordering): `demands[stage]` is the predicted b(p_stage) of one
+/// instance; `cap` is the per-GPU budget (margin × peak bandwidth).
+#[derive(Debug, Clone, Copy)]
+pub struct BwBudget<'a> {
+    pub demands: &'a [f64],
+    pub cap: f64,
+}
+
+/// Place an allocation on the cluster. Returns the placements and the
+/// final per-GPU states (for constraint inspection, e.g. Σ b(p) per GPU).
+///
+/// With a [`BwBudget`], a GPU whose accumulated bandwidth demand would
+/// exceed the cap is skipped — bandwidth-hungry instances spread across
+/// devices exactly like memory-hungry ones.
+pub fn place(
+    pipeline: &Pipeline,
+    cluster: &ClusterSpec,
+    alloc: &Allocation,
+    batch: u32,
+    bw: Option<BwBudget<'_>>,
+) -> Result<(Vec<InstancePlacement>, Vec<SimGpu>), DeployError> {
+    assert_eq!(alloc.instances.len(), pipeline.n_stages());
+    assert_eq!(alloc.quotas.len(), pipeline.n_stages());
+    let mut gpus: Vec<SimGpu> = (0..cluster.num_gpus)
+        .map(|_| SimGpu::new(cluster.gpu.clone()))
+        .collect();
+    let mut gpu_bw = vec![0.0f64; cluster.num_gpus];
+    let mut placements = Vec::new();
+    // which stages already occupy each GPU (for model-sharing preference)
+    let mut hosts: Vec<Vec<usize>> = vec![Vec::new(); cluster.num_gpus];
+
+    // deploy memory-hungriest stages first
+    let mut order: Vec<usize> = (0..pipeline.n_stages()).collect();
+    order.sort_by(|&a, &b| {
+        let ma = pipeline.stages[a].mem_footprint(batch);
+        let mb = pipeline.stages[b].mem_footprint(batch);
+        mb.partial_cmp(&ma).unwrap()
+    });
+
+    for &stage_idx in &order {
+        let st = &pipeline.stages[stage_idx];
+        let quota = alloc.quotas[stage_idx];
+        for _ in 0..alloc.instances[stage_idx] {
+            // candidate order: same-stage hosts first (model sharing),
+            // then scarcest remaining memory, then scarcest SMs.
+            let mut cand: Vec<usize> = (0..gpus.len()).collect();
+            cand.sort_by(|&a, &b| {
+                let share_a = hosts[a].contains(&stage_idx);
+                let share_b = hosts[b].contains(&stage_idx);
+                share_b
+                    .cmp(&share_a)
+                    .then(gpus[a].mem_free().partial_cmp(&gpus[b].mem_free()).unwrap())
+                    .then(gpus[a].sm_free().partial_cmp(&gpus[b].sm_free()).unwrap())
+            });
+            let mut placed = false;
+            let mut last_err = String::new();
+            for &g in &cand {
+                if let Some(b) = bw {
+                    let demand = b.demands[stage_idx];
+                    if gpu_bw[g] + demand > b.cap {
+                        last_err = format!(
+                            "bandwidth budget: {:.3e} + {demand:.3e} > {:.3e}",
+                            gpu_bw[g], b.cap
+                        );
+                        continue;
+                    }
+                }
+                match gpus[g].admit(
+                    &st.name,
+                    quota,
+                    st.model_bytes,
+                    st.act_bytes_per_query * batch as f64,
+                ) {
+                    Ok(()) => {
+                        if let Some(b) = bw {
+                            gpu_bw[g] += b.demands[stage_idx];
+                        }
+                        placements.push(InstancePlacement { stage: stage_idx, gpu: g, sm_frac: quota });
+                        if !hosts[g].contains(&stage_idx) {
+                            hosts[g].push(stage_idx);
+                        }
+                        placed = true;
+                        break;
+                    }
+                    Err(e) => last_err = e.to_string(),
+                }
+            }
+            if !placed {
+                return Err(DeployError { stage: stage_idx, detail: last_err });
+            }
+        }
+    }
+    Ok((placements, gpus))
+}
+
+/// Allocation-free feasibility check: answers "does a placement
+/// exist?" with the same greedy algorithm as [`place`] but on plain
+/// arrays (no `SimGpu`, no `HashMap`, no `Vec<InstancePlacement>`).
+/// This is the allocator's hot path — simulated annealing calls it for
+/// every candidate (§VIII-G budgets the whole solve at ~5 ms).
+///
+/// Invariant (property-tested): `feasible_placement(..) ==
+/// place(..).is_ok()`.
+pub fn feasible_placement(
+    pipeline: &Pipeline,
+    cluster: &ClusterSpec,
+    alloc: &Allocation,
+    batch: u32,
+    bw: Option<BwBudget<'_>>,
+) -> bool {
+    const MAX_GPUS: usize = 32;
+    const MAX_STAGES: usize = 8;
+    let n_stages = pipeline.n_stages();
+    let n_gpus = cluster.num_gpus;
+    assert!(n_gpus <= MAX_GPUS && n_stages <= MAX_STAGES, "raise MAX_* consts");
+    let cap_mem = cluster.gpu.mem_bytes as f64;
+    let cap_ctx = cluster.gpu.mps_contexts;
+    // per-GPU state on the stack — this runs thousands of times per
+    // allocator solve and must not allocate
+    let mut sm = [0.0f64; MAX_GPUS];
+    let mut mem = [0.0f64; MAX_GPUS];
+    let mut ctx = [0u32; MAX_GPUS];
+    let mut bw_used = [0.0f64; MAX_GPUS];
+    // model charged once per (gpu, stage): bitmask per gpu
+    let mut hosts = [0u64; MAX_GPUS];
+
+    // same order as place(): memory-hungriest stages first
+    let mut order = [0usize; MAX_STAGES];
+    for (i, o) in order[..n_stages].iter_mut().enumerate() {
+        *o = i;
+    }
+    let order = &mut order[..n_stages];
+    order.sort_by(|&a, &b| {
+        pipeline.stages[b]
+            .mem_footprint(batch)
+            .partial_cmp(&pipeline.stages[a].mem_footprint(batch))
+            .unwrap()
+    });
+
+    let mut cand = [0usize; MAX_GPUS];
+    let cand = &mut cand[..n_gpus];
+    for &stage_idx in order.iter() {
+        let st = &pipeline.stages[stage_idx];
+        let quota = alloc.quotas[stage_idx];
+        let act = st.act_bytes_per_query * batch as f64;
+        for _ in 0..alloc.instances[stage_idx] {
+            // candidate order: same-stage hosts first, then scarcest
+            // remaining memory, then scarcest SMs (mirrors place())
+            for (i, c) in cand.iter_mut().enumerate() {
+                *c = i;
+            }
+            cand.sort_by(|&a, &b| {
+                let share_a = hosts[a] >> stage_idx & 1;
+                let share_b = hosts[b] >> stage_idx & 1;
+                share_b
+                    .cmp(&share_a)
+                    .then((cap_mem - mem[a]).partial_cmp(&(cap_mem - mem[b])).unwrap())
+                    .then((1.0 - sm[a]).partial_cmp(&(1.0 - sm[b])).unwrap())
+            });
+            let mut placed = false;
+            for &g in cand.iter() {
+                if let Some(b) = bw {
+                    if bw_used[g] + b.demands[stage_idx] > b.cap {
+                        continue;
+                    }
+                }
+                if sm[g] + quota > 1.0 + 1e-9 || ctx[g] >= cap_ctx {
+                    continue;
+                }
+                let new_model = if hosts[g] >> stage_idx & 1 == 1 { 0.0 } else { st.model_bytes };
+                if mem[g] + new_model + act > cap_mem {
+                    continue;
+                }
+                sm[g] += quota;
+                ctx[g] += 1;
+                mem[g] += new_model + act;
+                hosts[g] |= 1 << stage_idx;
+                if let Some(b) = bw {
+                    bw_used[g] += b.demands[stage_idx];
+                }
+                placed = true;
+                break;
+            }
+            if !placed {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Convenience: place and wrap into a runnable [`Deployment`].
+pub fn deploy(
+    pipeline: &Pipeline,
+    cluster: &ClusterSpec,
+    alloc: &Allocation,
+    batch: u32,
+    comm: crate::comm::CommMode,
+    bw: Option<BwBudget<'_>>,
+) -> Result<Deployment, DeployError> {
+    let (placements, _) = place(pipeline, cluster, alloc, batch, bw)?;
+    Ok(Deployment { placements, batch, comm })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommMode;
+    use crate::config::ClusterSpec;
+    use crate::suite::{artifact, real};
+    use crate::util::testkit;
+
+    #[test]
+    fn places_simple_allocation() {
+        let p = real::img_to_text();
+        let c = ClusterSpec::two_2080ti();
+        let a = Allocation { instances: vec![2, 2], quotas: vec![0.4, 0.3] };
+        let (pl, gpus) = place(&p, &c, &a, 16, None).unwrap();
+        assert_eq!(pl.len(), 4);
+        // no GPU oversubscribed
+        for g in &gpus {
+            assert!(g.sm_allocated() <= 1.0 + 1e-9);
+            assert!(g.mem_free() >= 0.0);
+        }
+    }
+
+    #[test]
+    fn same_stage_instances_share_gpu_when_possible() {
+        let p = real::img_to_text();
+        let c = ClusterSpec::two_2080ti();
+        let a = Allocation { instances: vec![2, 1], quotas: vec![0.3, 0.2] };
+        let (pl, _) = place(&p, &c, &a, 16, None).unwrap();
+        let s0: Vec<usize> = pl.iter().filter(|x| x.stage == 0).map(|x| x.gpu).collect();
+        assert_eq!(s0[0], s0[1], "same-stage instances should co-locate");
+    }
+
+    #[test]
+    fn rejects_infeasible_sm_demand() {
+        let p = real::img_to_img();
+        let c = ClusterSpec::two_2080ti();
+        // 2 GPUs cannot host 3.0 GPUs worth of quota
+        let a = Allocation { instances: vec![3, 3], quotas: vec![0.5, 0.5] };
+        assert!(place(&p, &c, &a, 16, None).is_err());
+    }
+
+    #[test]
+    fn memory_first_ordering_avoids_fragmentation() {
+        // artifact pipeline with one fat-memory stage: it must be placed
+        // even when other stages could have crowded the GPUs first.
+        let p = artifact::pipeline(1, 1, 3);
+        let c = ClusterSpec::two_2080ti();
+        let a = Allocation { instances: vec![4, 4, 4], quotas: vec![0.1, 0.1, 0.2] };
+        let (pl, _) = place(&p, &c, &a, 64, None).unwrap();
+        assert_eq!(pl.len(), 12);
+    }
+
+    #[test]
+    fn feasible_placement_agrees_with_place() {
+        testkit::forall_res(
+            31,
+            300,
+            |r| {
+                let three_stage = r.below(2) == 0;
+                let stages = if three_stage { 3 } else { 2 };
+                let inst: Vec<u32> = (0..stages).map(|_| 1 + r.below(8) as u32).collect();
+                let quotas: Vec<f64> =
+                    (0..stages).map(|_| r.range_f64(0.05, 0.8)).collect();
+                (inst, quotas, three_stage, 8u32 << r.below(3))
+            },
+            |(inst, quotas, three_stage, batch)| {
+                let p = if *three_stage {
+                    artifact::pipeline(1, 2, 1)
+                } else {
+                    real::img_to_img()
+                };
+                let c = ClusterSpec::two_2080ti();
+                let a = Allocation { instances: inst.clone(), quotas: quotas.clone() };
+                let demands: Vec<f64> =
+                    p.stages.iter().map(|s| s.hbm_bytes(*batch) / 0.02).collect();
+                for bw in [
+                    None,
+                    Some(BwBudget { demands: &demands, cap: 0.75 * c.gpu.mem_bw }),
+                ] {
+                    let fast = feasible_placement(&p, &c, &a, *batch, bw);
+                    let slow = place(&p, &c, &a, *batch, bw).is_ok();
+                    if fast != slow {
+                        return Err(format!("disagree: fast={fast} slow={slow}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn deployment_admits_in_simulator() {
+        // whatever deploy() accepts, the simulator must also admit
+        testkit::forall_res(
+            21,
+            40,
+            |r| {
+                (
+                    1 + r.below(3) as u32,
+                    1 + r.below(3) as u32,
+                    r.range_f64(0.05, 0.5),
+                    r.range_f64(0.05, 0.5),
+                    8 << r.below(3),
+                )
+            },
+            |&(n0, n1, q0, q1, batch)| {
+                let p = real::text_to_text();
+                let c = ClusterSpec::two_2080ti();
+                let a = Allocation { instances: vec![n0, n1], quotas: vec![q0, q1] };
+                match deploy(&p, &c, &a, batch as u32, CommMode::GlobalIpc, None) {
+                    Ok(d) => {
+                        let sim = crate::sim::Simulator::new(
+                            &p,
+                            &c,
+                            &d,
+                            crate::sim::SimOptions { queries: 1, ..Default::default() },
+                        );
+                        sim.admit().map(|_| ()).map_err(|e| format!("sim rejects: {e}"))
+                    }
+                    Err(_) => Ok(()), // infeasible is fine; inconsistency is not
+                }
+            },
+        );
+    }
+}

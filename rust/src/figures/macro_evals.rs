@@ -1,0 +1,370 @@
+//! Macro-benchmark figures: Fig 4 (investigation), Figs 14/15 (peak
+//! load on 2×2080Ti), Figs 16/17 (resource usage), Figs 18/20/21 (the
+//! 27 artifact pipelines), Fig 19 (DGX-2).
+
+use crate::baselines::{plan, Planner};
+use crate::allocator::SaParams;
+use crate::config::ClusterSpec;
+use crate::sim::{SimOptions, Simulator};
+use crate::suite::{artifact, real};
+use crate::util::{fnum, Table};
+
+use super::common;
+
+const PEAK_PLANNERS: [Planner; 3] = [Planner::EvenAllocation, Planner::Laius, Planner::Camelot];
+
+fn batches() -> [u32; 4] {
+    [8, 16, 32, 64]
+}
+
+/// Fig 4a: standalone-deployment peak throughput, total vs per-stage.
+/// Fig 4b: balanced-deployment contention — offline vs co-located stage
+/// times and the resulting normalized p99.
+pub fn fig4() -> Vec<Table> {
+    let cluster = ClusterSpec::two_2080ti();
+    let opts = SimOptions { queries: 3_000, ..common::sweep_opts() };
+    let mut a = Table::new(
+        "Fig 4a: standalone deployment — peak QPS total and per stage",
+        &["benchmark", "total_peak", "stage1_solo", "stage2_solo", "bottleneck"],
+    );
+    let mut b = Table::new(
+        "Fig 4b: balanced deployment — offline vs co-located stage time, p99/QoS",
+        &["benchmark", "s1_offline_ms", "s1_coloc_ms", "s2_offline_ms", "s2_coloc_ms", "p99_over_qos"],
+    );
+    for p in real::all() {
+        let preds = common::train_predictors(&p, &cluster);
+        // 4a: standalone (stage i on GPU i, 100%)
+        if let Some((_, peak, _)) =
+            common::planner_peak(Planner::Standalone, &p, &cluster, &preds, 32, &opts)
+        {
+            let cost = crate::sim::CostModel::new(cluster.gpu.clone());
+            let s1 = cost.throughput_solo(&p.stages[0], 32, 1.0);
+            let s2 = cost.throughput_solo(&p.stages[1], 32, 1.0);
+            a.push(&[
+                p.name.clone(),
+                fnum(peak),
+                fnum(s1),
+                fnum(s2),
+                if s1 < s2 { "stage1" } else { "stage2" }.to_string(),
+            ]);
+        }
+        // 4b: balanced on a single GPU at its own predicted peak
+        if let Ok(d) = plan(Planner::Balanced, &p, &cluster, &preds, 32, SaParams::default()) {
+            let single = ClusterSpec { num_gpus: 1, ..cluster.clone() };
+            // the paper's protocol: tune offline (solo profiles, no
+            // contention/comm), predict the peak from those numbers,
+            // then run at that load and watch it violate QoS
+            let cost = crate::sim::CostModel::new(cluster.gpu.clone());
+            let offline: Vec<f64> = d
+                .placements
+                .iter()
+                .map(|pl| cost.duration_solo(&p.stages[pl.stage], 32, pl.sm_frac))
+                .collect();
+            let offline_peak = d
+                .placements
+                .iter()
+                .map(|pl| cost.throughput_solo(&p.stages[pl.stage], 32, pl.sm_frac))
+                .fold(f64::INFINITY, f64::min);
+            let overloaded = Simulator::new(&p, &single, &d, opts.clone())
+                .run(offline_peak.max(1.0))
+                .unwrap();
+            b.push(&[
+                p.name.clone(),
+                fnum(offline[0] * 1e3),
+                fnum(overloaded.stage_exec_mean_s[0] * 1e3),
+                fnum(offline[1] * 1e3),
+                fnum(overloaded.stage_exec_mean_s[1] * 1e3),
+                format!("{:.2}", overloaded.p99() / p.qos_target_s),
+            ]);
+        }
+    }
+    vec![a, b]
+}
+
+/// Figs 14 + 15 (and 19 on the DGX-2 cluster): peak load per
+/// (benchmark, batch) for EA / Laius / Camelot, plus Camelot's chosen
+/// allocation.
+pub fn peak_load_comparison(cluster: &ClusterSpec, tag: &str) -> Vec<Table> {
+    let opts = common::sweep_opts();
+    let mut peaks = Table::new(
+        &format!("Fig 14/19 ({tag}): supported peak load (QPS), p99 within QoS"),
+        &["benchmark", "batch", "EA", "Laius", "Camelot", "camelot_vs_ea", "camelot_p99_over_qos"],
+    );
+    let mut alloc = Table::new(
+        &format!("Fig 15/20 ({tag}): Camelot allocation per test case"),
+        &["benchmark", "batch", "instances", "sm_pct_per_instance"],
+    );
+    for p in real::all() {
+        let preds = common::train_predictors(&p, cluster);
+        for batch in batches() {
+            let mut row = vec![p.name.clone(), batch.to_string()];
+            let mut ea_peak = 0.0;
+            let mut cam_peak = 0.0;
+            let mut cam_p99 = f64::NAN;
+            for planner in PEAK_PLANNERS {
+                match common::planner_peak(planner, &p, cluster, &preds, batch, &opts) {
+                    Some((d, peak, report)) => {
+                        row.push(fnum(peak));
+                        match planner {
+                            Planner::EvenAllocation => ea_peak = peak,
+                            Planner::Camelot => {
+                                cam_peak = peak;
+                                cam_p99 = report.p99() / p.qos_target_s;
+                                let ni = d.instances_per_stage(p.n_stages());
+                                let mut quotas: Vec<f64> =
+                                    vec![0.0; p.n_stages()];
+                                for pl in &d.placements {
+                                    quotas[pl.stage] = pl.sm_frac;
+                                }
+                                alloc.push(&[
+                                    p.name.clone(),
+                                    batch.to_string(),
+                                    format!("{ni:?}"),
+                                    format!(
+                                        "{:?}",
+                                        quotas
+                                            .iter()
+                                            .map(|q| (q * 100.0).round() as u32)
+                                            .collect::<Vec<_>>()
+                                    ),
+                                ]);
+                            }
+                            _ => {}
+                        }
+                    }
+                    None => row.push("-".to_string()),
+                }
+            }
+            row.push(if ea_peak > 0.0 {
+                format!("{:+.1}%", 100.0 * (cam_peak / ea_peak - 1.0))
+            } else {
+                "-".to_string()
+            });
+            row.push(format!("{cam_p99:.2}"));
+            peaks.row(&row);
+        }
+    }
+    vec![peaks, alloc]
+}
+
+/// Fig 14 + 15 on the 2×2080Ti testbed.
+pub fn fig14() -> Vec<Table> {
+    peak_load_comparison(&ClusterSpec::two_2080ti(), "2x2080Ti")
+}
+
+/// Fig 19 on the DGX-2 (16×V100).
+pub fn fig19() -> Vec<Table> {
+    peak_load_comparison(&ClusterSpec::dgx2(), "DGX-2")
+}
+
+/// Fig 16: resource usage and p99 at low load (30% of Camelot's peak),
+/// Camelot vs Laius, normalized to one-GPU-per-stage.
+pub fn fig16() -> Vec<Table> {
+    let cluster = ClusterSpec::two_2080ti();
+    let opts = common::sweep_opts();
+    let mut t = Table::new(
+        "Fig 16: normalized resource usage and p99/QoS at 30% load",
+        &["benchmark", "camelot_usage", "camelot_p99", "laius_usage", "laius_p99"],
+    );
+    for p in real::all() {
+        let preds = common::train_predictors(&p, &cluster);
+        let Some((_, peak, _)) =
+            common::planner_peak(Planner::Camelot, &p, &cluster, &preds, 32, &opts)
+        else {
+            continue;
+        };
+        let low = peak * 0.3;
+        let mut row = vec![p.name.clone()];
+        for planner in [Planner::Camelot, Planner::Laius] {
+            match common::plan_low_load(planner, &p, &cluster, &preds, 32, low) {
+                Some(d) => {
+                    let r = Simulator::new(&p, &cluster, &d, opts.clone()).run(low.max(1.0));
+                    match r {
+                        Ok(rep) => {
+                            row.push(fnum(common::normalized_usage(&p, &d)));
+                            row.push(format!("{:.2}", rep.p99() / p.qos_target_s));
+                        }
+                        Err(_) => {
+                            row.push("-".into());
+                            row.push("-".into());
+                        }
+                    }
+                }
+                None => {
+                    row.push("-".into());
+                    row.push("-".into());
+                }
+            }
+        }
+        t.row(&row);
+    }
+    vec![t]
+}
+
+/// Fig 17: Camelot's usage + p99 across load levels, and the Camelot-NC
+/// ablation's p99 (unmanaged bandwidth contention).
+pub fn fig17() -> Vec<Table> {
+    let cluster = ClusterSpec::two_2080ti();
+    let opts = common::sweep_opts();
+    let mut t = Table::new(
+        "Fig 17: usage and p99 across load levels; Camelot-NC ablation",
+        &["benchmark", "load_pct", "usage", "p99_over_qos", "nc_p99_over_qos"],
+    );
+    let mut violations = 0;
+    let mut cases = 0;
+    // real benchmarks + the memory-heavy artifact composites, where the
+    // bandwidth constraint has the most to protect (on this substrate
+    // the real pipelines' bandwidth pressure is milder than the
+    // paper's testbed — see EXPERIMENTS.md §Deviations)
+    let mut benches = real::all();
+    benches.push(artifact::pipeline(1, 1, 3));
+    benches.push(artifact::pipeline(2, 2, 3));
+    benches.push(artifact::pipeline(1, 3, 3));
+    benches.push(artifact::pipeline(3, 1, 3));
+    for p in benches {
+        let preds = common::train_predictors(&p, &cluster);
+        let Some((_, peak, _)) =
+            common::planner_peak(Planner::Camelot, &p, &cluster, &preds, 32, &opts)
+        else {
+            continue;
+        };
+        for load_pct in [50u32, 95] {
+            let load = peak * load_pct as f64 / 100.0;
+            let cam = common::plan_low_load(Planner::Camelot, &p, &cluster, &preds, 32, load);
+            let nc = common::plan_low_load(Planner::CamelotNC, &p, &cluster, &preds, 32, load);
+            let mut row = vec![p.name.clone(), load_pct.to_string()];
+            match cam {
+                Some(d) => {
+                    let rep = Simulator::new(&p, &cluster, &d, opts.clone())
+                        .run(load.max(1.0))
+                        .unwrap();
+                    row.push(fnum(common::normalized_usage(&p, &d)));
+                    row.push(format!("{:.2}", rep.p99() / p.qos_target_s));
+                }
+                None => {
+                    row.push("-".into());
+                    row.push("-".into());
+                }
+            }
+            match nc {
+                Some(d) => {
+                    let rep = Simulator::new(&p, &cluster, &d, opts.clone())
+                        .run(load.max(1.0))
+                        .unwrap();
+                    let ratio = rep.p99() / p.qos_target_s;
+                    cases += 1;
+                    if ratio > 1.0 {
+                        violations += 1;
+                    }
+                    row.push(format!("{ratio:.2}"));
+                }
+                None => row.push("-".into()),
+            }
+            t.row(&row);
+        }
+    }
+    let mut summary = Table::new("Fig 17 summary", &["metric", "value"]);
+    summary.push(&["NC QoS violations".to_string(), format!("{violations}/{cases}")]);
+    vec![t, summary]
+}
+
+/// Figs 18/20/21: the 27 artifact pipelines — peak loads (EA / Laius /
+/// Camelot), Camelot's allocations, and low-load resource usage.
+pub fn fig18() -> Vec<Table> {
+    let cluster = ClusterSpec::two_2080ti();
+    let opts = SimOptions { queries: 2_500, ..common::sweep_opts() };
+    let batch = 32;
+    let mut peaks = Table::new(
+        "Fig 18: artifact-pipeline peak loads (QPS)",
+        &["benchmark", "EA", "Laius", "Camelot", "camelot_vs_ea"],
+    );
+    let mut alloc = Table::new(
+        "Fig 20: Camelot allocation for the artifact pipelines",
+        &["benchmark", "instances", "sm_pct_per_instance"],
+    );
+    let mut lowload = Table::new(
+        "Fig 21: low-load (30%) usage and p99/QoS for the artifact pipelines",
+        &["benchmark", "usage", "p99_over_qos"],
+    );
+    for p in artifact::all27() {
+        let preds = common::train_predictors(&p, &cluster);
+        let mut row = vec![p.name.clone()];
+        let mut ea_peak = 0.0;
+        let mut cam_peak = 0.0;
+        for planner in PEAK_PLANNERS {
+            match common::planner_peak(planner, &p, &cluster, &preds, batch, &opts) {
+                Some((d, peak, _)) => {
+                    row.push(fnum(peak));
+                    match planner {
+                        Planner::EvenAllocation => ea_peak = peak,
+                        Planner::Camelot => {
+                            cam_peak = peak;
+                            let ni = d.instances_per_stage(p.n_stages());
+                            let mut quotas = vec![0.0; p.n_stages()];
+                            for pl in &d.placements {
+                                quotas[pl.stage] = pl.sm_frac;
+                            }
+                            alloc.push(&[
+                                p.name.clone(),
+                                format!("{ni:?}"),
+                                format!(
+                                    "{:?}",
+                                    quotas
+                                        .iter()
+                                        .map(|q| (q * 100.0).round() as u32)
+                                        .collect::<Vec<_>>()
+                                ),
+                            ]);
+                        }
+                        _ => {}
+                    }
+                }
+                None => row.push("-".to_string()),
+            }
+        }
+        row.push(if ea_peak > 0.0 {
+            format!("{:+.1}%", 100.0 * (cam_peak / ea_peak - 1.0))
+        } else {
+            "-".into()
+        });
+        peaks.row(&row);
+        // Fig 21
+        let low = cam_peak * 0.3;
+        if low > 0.0 {
+            if let Some(d) =
+                common::plan_low_load(Planner::Camelot, &p, &cluster, &preds, batch, low)
+            {
+                if let Ok(rep) = Simulator::new(&p, &cluster, &d, opts.clone()).run(low.max(1.0)) {
+                    lowload.push(&[
+                        p.name.clone(),
+                        fnum(common::normalized_usage(&p, &d)),
+                        format!("{:.2}", rep.p99() / p.qos_target_s),
+                    ]);
+                }
+            }
+        }
+    }
+    vec![peaks, alloc, lowload]
+}
+
+#[cfg(test)]
+mod tests {
+    //! Smoke tests on reduced workloads; the ordering assertions
+    //! (Camelot ≥ Laius ≥ EA) live in the integration suite where the
+    //! full protocol runs.
+
+    use super::*;
+
+    #[test]
+    fn fig4_produces_rows() {
+        let ts = fig4();
+        assert_eq!(ts[0].rows.len(), 4);
+        assert_eq!(ts[1].rows.len(), 4);
+        // 4b: co-located times exceed offline times for stage 1
+        for row in &ts[1].rows {
+            let off: f64 = row[1].parse().unwrap();
+            let co: f64 = row[2].parse().unwrap();
+            assert!(co >= off * 0.95, "{}: coloc {co} vs offline {off}", row[0]);
+        }
+    }
+}

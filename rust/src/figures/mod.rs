@@ -1,0 +1,70 @@
+//! Figure harnesses: one entry per table/figure of the paper's
+//! evaluation (see DESIGN.md §6 for the experiment index). Each harness
+//! prints the paper-shaped rows and writes `results/<exp>.csv`.
+
+pub mod common;
+pub mod macro_evals;
+pub mod micro;
+
+use std::path::Path;
+
+use crate::util::Table;
+
+/// All experiment ids, in paper order.
+pub const ALL_EXPERIMENTS: &[&str] = &[
+    "fig3", "fig4", "fig5", "fig6", "fig9", "fig11", "fig12", "fig14", "fig16", "fig17",
+    "fig18", "fig19", "tab1",
+];
+
+/// Run one experiment by id.
+pub fn run(exp: &str) -> Result<Vec<Table>, String> {
+    match exp {
+        "fig3" => Ok(micro::fig3()),
+        "fig4" => Ok(macro_evals::fig4()),
+        "fig5" => Ok(micro::fig5()),
+        "fig6" => Ok(micro::fig6()),
+        "fig9" => Ok(micro::fig9()),
+        "fig11" => Ok(micro::fig11()),
+        "fig12" => Ok(micro::fig12()),
+        "fig14" | "fig15" => Ok(macro_evals::fig14()),
+        "fig16" => Ok(macro_evals::fig16()),
+        "fig17" => Ok(macro_evals::fig17()),
+        "fig18" | "fig20" | "fig21" => Ok(macro_evals::fig18()),
+        "fig19" => Ok(macro_evals::fig19()),
+        "tab1" => Ok(vec![crate::suite::real::table1()]),
+        other => Err(format!(
+            "unknown experiment '{other}'; available: {}",
+            ALL_EXPERIMENTS.join(", ")
+        )),
+    }
+}
+
+/// Run an experiment, print its tables, and persist CSVs.
+pub fn run_and_save(exp: &str, results_dir: &Path) -> Result<(), String> {
+    let tables = run(exp)?;
+    for (i, t) in tables.iter().enumerate() {
+        println!("{}", t.render());
+        let name = if tables.len() == 1 {
+            exp.to_string()
+        } else {
+            format!("{exp}_{i}")
+        };
+        t.write_csv(results_dir, &name)
+            .map_err(|e| format!("writing {name}.csv: {e}"))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unknown_experiment_rejected() {
+        assert!(super::run("fig99").is_err());
+    }
+
+    #[test]
+    fn tab1_runs() {
+        let t = super::run("tab1").unwrap();
+        assert_eq!(t.len(), 1);
+    }
+}

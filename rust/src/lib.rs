@@ -1,0 +1,37 @@
+//! # Camelot
+//!
+//! A QoS-aware, resource-efficient runtime for **GPU microservices** on
+//! spatial-multitasking GPUs — a full reproduction of Zhang et al.,
+//! *"Towards QoS-Aware and Resource-Efficient GPU Microservices Based on
+//! Spatial Multitasking GPUs In Datacenters"* (2020).
+//!
+//! The crate is the L3 (Rust) layer of a three-layer stack:
+//!
+//! * **L1** — Pallas kernels (`python/compile/kernels/`): the dense
+//!   compute hot-spots, AOT-lowered.
+//! * **L2** — JAX stage models (`python/compile/model.py`): microservice
+//!   forward graphs, exported once to `artifacts/*.hlo.txt`.
+//! * **L3** — this crate: the Camelot runtime (global-memory IPC
+//!   communication, contention-aware SM allocation, multi-GPU
+//!   deployment, online coordinator) plus the simulation substrate and
+//!   the full evaluation harness.
+//!
+//! Python never runs on the request path: the [`runtime`] module loads
+//! the AOT artifacts through PJRT and serves them from Rust.
+//!
+//! Start with [`suite`] (the benchmarks), [`allocator`] (the paper's two
+//! policies), and [`figures`] (one harness per paper figure).
+
+pub mod allocator;
+pub mod baselines;
+pub mod comm;
+pub mod coordinator;
+pub mod deploy;
+pub mod figures;
+pub mod predictor;
+pub mod runtime;
+pub mod config;
+pub mod metrics;
+pub mod sim;
+pub mod suite;
+pub mod util;

@@ -1,0 +1,291 @@
+//! `camelot` — CLI for the Camelot GPU-microservice runtime.
+//!
+//! Subcommands:
+//!   suite list                         Table I of the paper
+//!   plan  --pipeline <name> ...        run the allocation policies
+//!   serve --pipeline <name> ...        serve a real workload over PJRT
+//!   reproduce --exp <figN|all> ...     regenerate a paper figure/table
+//!
+//! (CLI parsing is hand-rolled: the offline build environment has no
+//! clap; see DESIGN.md §Environment-Substitutions.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use camelot::allocator::{max_load, min_resource, AllocContext, SaParams};
+use camelot::config::ClusterSpec;
+use camelot::coordinator::{Coordinator, CoordinatorConfig, PjrtBackend};
+use camelot::figures;
+use camelot::suite::{artifact, real, workload::PoissonArrivals, Pipeline};
+use camelot::util::fnum;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(String::as_str) {
+        Some("suite") => cmd_suite(&args[1..]),
+        Some("plan") => cmd_plan(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
+        Some("reproduce") => cmd_reproduce(&args[1..]),
+        Some("help") | None => {
+            usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'");
+            usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() {
+    eprintln!(
+        "camelot — QoS-aware GPU microservice runtime (Camelot reproduction)
+
+USAGE:
+  camelot suite list
+  camelot plan --pipeline <name> [--batch N] [--policy max-load|min-resource]
+               [--load QPS] [--cluster 2080ti|dgx2] [--no-bw]
+  camelot serve --pipeline <name> [--batch N] [--rate QPS] [--queries N]
+                [--artifacts DIR]
+  camelot reproduce [--exp figN|tab1|all] [--out DIR]
+
+PIPELINES: img-to-img img-to-text text-to-img text-to-text p<i>+c<j>+m<k>"
+    );
+}
+
+/// Parse `--key value` pairs (flags without values get "true").
+fn opts(args: &[String]) -> HashMap<String, String> {
+    let mut m = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            m.insert(key.to_string(), val);
+        }
+        i += 1;
+    }
+    m
+}
+
+fn pipeline_by_name(name: &str) -> Option<Pipeline> {
+    match name {
+        "img-to-img" => Some(real::img_to_img()),
+        "img-to-text" => Some(real::img_to_text()),
+        "text-to-img" => Some(real::text_to_img()),
+        "text-to-text" => Some(real::text_to_text()),
+        _ => {
+            // artifact composites: p<i>+c<j>+m<k>
+            let parts: Vec<&str> = name.split('+').collect();
+            if parts.len() == 3 {
+                let lvl = |s: &str, c: char| -> Option<u32> { s.strip_prefix(c)?.parse().ok() };
+                let (pi, cj, mk) =
+                    (lvl(parts[0], 'p')?, lvl(parts[1], 'c')?, lvl(parts[2], 'm')?);
+                if (1..=3).contains(&pi) && (1..=3).contains(&cj) && (1..=3).contains(&mk) {
+                    return Some(artifact::pipeline(pi, cj, mk));
+                }
+            }
+            None
+        }
+    }
+}
+
+fn cluster_by_name(name: &str) -> ClusterSpec {
+    match name {
+        "dgx2" => ClusterSpec::dgx2(),
+        _ => ClusterSpec::two_2080ti(),
+    }
+}
+
+fn cmd_suite(args: &[String]) -> i32 {
+    match args.first().map(String::as_str) {
+        Some("list") | None => {
+            println!("{}", real::table1().render());
+            println!("Artifact benchmarks: c1-c3, m1-m3, p1-p3 -> 27 pipelines p<i>+c<j>+m<k>");
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown suite subcommand '{other}'");
+            2
+        }
+    }
+}
+
+fn cmd_plan(args: &[String]) -> i32 {
+    let o = opts(args);
+    let Some(p) = o.get("pipeline").and_then(|n| pipeline_by_name(n)) else {
+        eprintln!("--pipeline required (run `camelot suite list`)");
+        return 2;
+    };
+    let batch: u32 = o.get("batch").and_then(|b| b.parse().ok()).unwrap_or(32);
+    let cluster = cluster_by_name(o.get("cluster").map(String::as_str).unwrap_or("2080ti"));
+    let policy = o.get("policy").map(String::as_str).unwrap_or("max-load");
+
+    eprintln!("training predictors for {} (offline phase)...", p.name);
+    let preds = figures::common::train_predictors(&p, &cluster);
+    let mut ctx = AllocContext::new(&p, &cluster, &preds, batch);
+    ctx.enforce_bw = !o.contains_key("no-bw");
+
+    let t0 = Instant::now();
+    match policy {
+        "max-load" => match max_load::solve(&ctx, SaParams::default()) {
+            Some(r) => {
+                println!("policy: maximize peak load (Eq. 1)");
+                println!("  instances per stage : {:?}", r.best.instances);
+                println!(
+                    "  SM quota per instance: {:?}",
+                    r.best
+                        .quotas
+                        .iter()
+                        .map(|q| format!("{:.0}%", q * 100.0))
+                        .collect::<Vec<_>>()
+                );
+                println!("  predicted peak load  : {} qps", fnum(r.best_objective));
+                println!("  solve time           : {:.2} ms", t0.elapsed().as_secs_f64() * 1e3);
+                0
+            }
+            None => {
+                eprintln!("no feasible allocation");
+                1
+            }
+        },
+        "min-resource" => {
+            let load: f64 = o.get("load").and_then(|l| l.parse().ok()).unwrap_or(50.0);
+            match min_resource::solve(&ctx, load, SaParams::default()) {
+                Some((r, gpus)) => {
+                    println!("policy: minimize resource usage at {load} qps (Eq. 2/3)");
+                    println!("  GPUs required        : {gpus}");
+                    println!("  instances per stage : {:?}", r.best.instances);
+                    println!(
+                        "  SM quota per instance: {:?}",
+                        r.best
+                            .quotas
+                            .iter()
+                            .map(|q| format!("{:.0}%", q * 100.0))
+                            .collect::<Vec<_>>()
+                    );
+                    println!("  Σ N·p (GPU-equiv)    : {}", fnum(r.best.total_quota()));
+                    println!("  solve time           : {:.2} ms", t0.elapsed().as_secs_f64() * 1e3);
+                    0
+                }
+                None => {
+                    eprintln!("no feasible allocation for load {load}");
+                    1
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown policy '{other}' (max-load | min-resource)");
+            2
+        }
+    }
+}
+
+/// Map a real pipeline to its AOT artifact stage names.
+fn artifact_stages(pipeline: &str) -> Option<Vec<String>> {
+    let s = match pipeline {
+        "img-to-img" => ["face_recognition", "fsrcnn_enhance"],
+        "img-to-text" => ["vgg_features", "lstm_caption"],
+        "text-to-img" => ["lstm_semantic", "dcgan_generate"],
+        "text-to-text" => ["bert_summarize", "nmt_translate"],
+        _ => return None,
+    };
+    Some(s.iter().map(|x| x.to_string()).collect())
+}
+
+fn artifact_input_width(stage: &str) -> usize {
+    match stage {
+        "bert_summarize" => 768,
+        "lstm_semantic" => 384,
+        "fsrcnn_enhance" => 256,
+        _ => 512,
+    }
+}
+
+fn cmd_serve(args: &[String]) -> i32 {
+    let o = opts(args);
+    let name = o.get("pipeline").map(String::as_str).unwrap_or("img-to-text");
+    let Some(stages) = artifact_stages(name) else {
+        eprintln!("--pipeline must be one of the four real benchmarks for serving");
+        return 2;
+    };
+    let batch: usize = o.get("batch").and_then(|b| b.parse().ok()).unwrap_or(8);
+    let rate: f64 = o.get("rate").and_then(|r| r.parse().ok()).unwrap_or(30.0);
+    let queries: usize = o.get("queries").and_then(|q| q.parse().ok()).unwrap_or(200);
+    let artifacts =
+        PathBuf::from(o.get("artifacts").map(String::as_str).unwrap_or("artifacts"));
+
+    eprintln!("compiling {} AOT artifacts via PJRT...", stages.len());
+    let backend = match PjrtBackend::new(artifacts, &stages, batch) {
+        Ok(b) => Arc::new(b),
+        Err(e) => {
+            eprintln!("backend: {e}\nhint: run `make artifacts` first");
+            return 1;
+        }
+    };
+    let d_in = artifact_input_width(&stages[0]);
+    let c = Coordinator::launch(
+        CoordinatorConfig {
+            stages: stages.clone(),
+            instances: vec![1; stages.len()],
+            batch,
+            max_wait: Duration::from_millis(20),
+        },
+        backend,
+    );
+
+    eprintln!("serving {queries} queries at {rate} qps (Poisson, open loop)...");
+    let mut arrivals = PoissonArrivals::new(rate, 7).times_until(queries as f64 / rate * 4.0 + 5.0);
+    arrivals.truncate(queries);
+    let t0 = Instant::now();
+    let mut sent = 0;
+    let mut received = 0;
+    while received < arrivals.len() {
+        while sent < arrivals.len() && t0.elapsed().as_secs_f64() >= arrivals[sent] {
+            c.submit(vec![0.1; d_in]);
+            sent += 1;
+        }
+        while let Some(_comp) = c.recv_timeout(Duration::from_millis(1)) {
+            received += 1;
+        }
+    }
+    let hist = c.histogram();
+    println!("== serve report ({name}, batch {batch}, {rate} qps offered) ==");
+    println!("  completed : {}", hist.count());
+    println!("  throughput: {} qps", fnum(c.qps()));
+    println!("  p50       : {:.1} ms", hist.p50() * 1e3);
+    println!("  p95       : {:.1} ms", hist.p95() * 1e3);
+    println!("  p99       : {:.1} ms", hist.p99() * 1e3);
+    println!("  max       : {:.1} ms", hist.max() * 1e3);
+    c.shutdown();
+    0
+}
+
+fn cmd_reproduce(args: &[String]) -> i32 {
+    let o = opts(args);
+    let out = PathBuf::from(o.get("out").map(String::as_str).unwrap_or("results"));
+    let exp = o.get("exp").map(String::as_str).unwrap_or("all");
+    let list: Vec<&str> = if exp == "all" {
+        figures::ALL_EXPERIMENTS.to_vec()
+    } else {
+        exp.split(',').collect()
+    };
+    for e in list {
+        eprintln!("--- reproducing {e} ---");
+        let t0 = Instant::now();
+        if let Err(msg) = figures::run_and_save(e, &out) {
+            eprintln!("{e}: {msg}");
+            return 1;
+        }
+        eprintln!("    ({e} took {:.1} s)", t0.elapsed().as_secs_f64());
+    }
+    0
+}

@@ -1,0 +1,273 @@
+//! Measurement: latency histograms with accurate tail percentiles, and
+//! throughput meters. Every QoS decision in the paper is a 99%-ile
+//! latency check, so the histogram is the ground-truth instrument for
+//! the whole evaluation.
+
+/// Log-bucketed latency histogram (HDR-style, base-10 coverage from
+/// 1 µs to ~1000 s with ~2% relative resolution).
+///
+/// Percentile error is bounded by the bucket width (≤ ~2.3%), which is
+/// far below the QoS margins the experiments check.
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    buckets: Vec<u64>,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+const BUCKETS_PER_DECADE: usize = 100;
+const DECADES: usize = 9; // 1e-6 .. 1e3 seconds
+const N_BUCKETS: usize = BUCKETS_PER_DECADE * DECADES + 2; // under/overflow
+const MIN_LAT: f64 = 1e-6;
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram {
+            buckets: vec![0; N_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    fn index(latency_s: f64) -> usize {
+        if latency_s < MIN_LAT {
+            return 0;
+        }
+        let log = (latency_s / MIN_LAT).log10();
+        let idx = 1 + (log * BUCKETS_PER_DECADE as f64) as usize;
+        idx.min(N_BUCKETS - 1)
+    }
+
+    /// Lower edge of a bucket in seconds.
+    fn edge(idx: usize) -> f64 {
+        if idx == 0 {
+            return 0.0;
+        }
+        MIN_LAT * 10f64.powf((idx - 1) as f64 / BUCKETS_PER_DECADE as f64)
+    }
+
+    pub fn record(&mut self, latency_s: f64) {
+        debug_assert!(latency_s.is_finite() && latency_s >= 0.0);
+        self.buckets[Self::index(latency_s)] += 1;
+        self.count += 1;
+        self.sum += latency_s;
+        self.min = self.min.min(latency_s);
+        self.max = self.max.max(latency_s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.min }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { 0.0 } else { self.max }
+    }
+
+    /// Latency at quantile `q` in [0, 1]; exact at the recorded min/max,
+    /// bucket-midpoint (geometric) inside.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let target = (q * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let lo = Self::edge(i).max(self.min);
+                let hi = if i + 1 < N_BUCKETS {
+                    Self::edge(i + 1).min(self.max)
+                } else {
+                    self.max
+                };
+                let hi = hi.max(lo);
+                return (lo * hi).sqrt().clamp(self.min, self.max);
+            }
+        }
+        self.max
+    }
+
+    /// The paper's QoS instrument.
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Counts completed queries over a time window → queries per second.
+#[derive(Debug, Clone, Default)]
+pub struct ThroughputMeter {
+    completed: u64,
+    window_start: f64,
+    window_end: f64,
+}
+
+impl ThroughputMeter {
+    pub fn new(start_s: f64) -> Self {
+        ThroughputMeter { completed: 0, window_start: start_s, window_end: start_s }
+    }
+
+    pub fn record(&mut self, now_s: f64, n: u64) {
+        self.completed += n;
+        self.window_end = self.window_end.max(now_s);
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Queries per second over the observed window.
+    pub fn qps(&self) -> f64 {
+        let dt = self.window_end - self.window_start;
+        if dt <= 0.0 {
+            0.0
+        } else {
+            self.completed as f64 / dt
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{testkit, Rng};
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.p99(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn single_sample_all_quantiles_equal() {
+        let mut h = LatencyHistogram::new();
+        h.record(0.123);
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            testkit::assert_close(h.quantile(q), 0.123, 0.03, 0.0);
+        }
+    }
+
+    #[test]
+    fn uniform_quantiles_within_bucket_error() {
+        let mut h = LatencyHistogram::new();
+        let mut r = Rng::new(1);
+        for _ in 0..100_000 {
+            h.record(r.range_f64(0.010, 0.110));
+        }
+        testkit::assert_close(h.p50(), 0.060, 0.05, 0.0);
+        testkit::assert_close(h.quantile(0.99), 0.109, 0.05, 0.0);
+    }
+
+    #[test]
+    fn quantiles_monotone_property() {
+        testkit::forall_res(
+            7,
+            50,
+            |r| {
+                let n = 1 + r.below(500);
+                (0..n).map(|_| r.range_f64(1e-5, 10.0)).collect::<Vec<f64>>()
+            },
+            |samples| {
+                let mut h = LatencyHistogram::new();
+                for &s in samples {
+                    h.record(s);
+                }
+                let mut prev = 0.0;
+                for i in 0..=20 {
+                    let q = h.quantile(i as f64 / 20.0);
+                    if q + 1e-12 < prev {
+                        return Err(format!("quantile not monotone: {q} < {prev}"));
+                    }
+                    prev = q;
+                }
+                if h.max() < h.quantile(1.0) - 1e-12 {
+                    return Err("q(1.0) exceeds max".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn merge_equals_combined() {
+        let mut r = Rng::new(3);
+        let (mut a, mut b, mut c) = (
+            LatencyHistogram::new(),
+            LatencyHistogram::new(),
+            LatencyHistogram::new(),
+        );
+        for i in 0..10_000 {
+            let x = r.range_f64(1e-4, 1.0);
+            if i % 2 == 0 {
+                a.record(x);
+            } else {
+                b.record(x);
+            }
+            c.record(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), c.count());
+        assert_eq!(a.p99(), c.p99());
+        assert_eq!(a.max(), c.max());
+    }
+
+    #[test]
+    fn throughput_meter() {
+        let mut m = ThroughputMeter::new(0.0);
+        m.record(0.5, 10);
+        m.record(2.0, 30);
+        assert_eq!(m.completed(), 40);
+        testkit::assert_close(m.qps(), 20.0, 1e-9, 0.0);
+    }
+
+    #[test]
+    fn overflow_bucket_clamps() {
+        let mut h = LatencyHistogram::new();
+        h.record(1e9); // absurd latency lands in the overflow bucket
+        assert_eq!(h.count(), 1);
+        assert!(h.p99() > 0.0);
+    }
+}

@@ -1,0 +1,209 @@
+//! CART regression tree — the modeling technique Camelot selects
+//! (§VII-A): accuracy comparable to a random forest at <1 ms prediction
+//! latency. Implemented from scratch: variance-reduction splits,
+//! depth/leaf-size stopping, mean-leaf prediction.
+
+/// Hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_leaf: usize,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams { max_depth: 12, min_leaf: 2 }
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    Leaf { value: f64 },
+    Split { feature: usize, threshold: f64, left: Box<Node>, right: Box<Node> },
+}
+
+/// A fitted regression tree.
+#[derive(Debug, Clone)]
+pub struct DecisionTree {
+    root: Node,
+    n_features: usize,
+}
+
+impl DecisionTree {
+    /// Fit on row-major samples. Panics on empty input.
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], params: TreeParams) -> DecisionTree {
+        assert!(!xs.is_empty() && xs.len() == ys.len(), "bad training set");
+        let n_features = xs[0].len();
+        let idx: Vec<usize> = (0..xs.len()).collect();
+        let root = build(xs, ys, &idx, params, 0);
+        DecisionTree { root, n_features }
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.n_features);
+        let mut node = &self.root;
+        loop {
+            match node {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    node = if x[*feature] <= *threshold { left } else { right };
+                }
+            }
+        }
+    }
+
+    /// Tree depth (for tests / perf accounting).
+    pub fn depth(&self) -> usize {
+        fn d(n: &Node) -> usize {
+            match n {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => 1 + d(left).max(d(right)),
+            }
+        }
+        d(&self.root)
+    }
+}
+
+fn mean(ys: &[f64], idx: &[usize]) -> f64 {
+    idx.iter().map(|&i| ys[i]).sum::<f64>() / idx.len() as f64
+}
+
+fn build(xs: &[Vec<f64>], ys: &[f64], idx: &[usize], params: TreeParams, depth: usize) -> Node {
+    if depth >= params.max_depth || idx.len() < 2 * params.min_leaf {
+        return Node::Leaf { value: mean(ys, idx) };
+    }
+    // best split = max variance reduction, found by scanning each
+    // feature's sorted values
+    let n = idx.len() as f64;
+    let sum: f64 = idx.iter().map(|&i| ys[i]).sum();
+    let sum2: f64 = idx.iter().map(|&i| ys[i] * ys[i]).sum();
+    let parent_sse = sum2 - sum * sum / n;
+    if parent_sse <= 1e-12 {
+        return Node::Leaf { value: mean(ys, idx) };
+    }
+
+    let mut best: Option<(f64, usize, f64)> = None; // (sse, feature, threshold)
+    let n_features = xs[0].len();
+    let mut order: Vec<usize> = idx.to_vec();
+    for f in 0..n_features {
+        order.sort_unstable_by(|&a, &b| xs[a][f].partial_cmp(&xs[b][f]).unwrap());
+        // prefix sums over the sorted order
+        let (mut ls, mut ls2, mut ln) = (0.0, 0.0, 0.0);
+        for k in 0..order.len() - 1 {
+            let y = ys[order[k]];
+            ls += y;
+            ls2 += y * y;
+            ln += 1.0;
+            // candidate split between k and k+1
+            if xs[order[k]][f] == xs[order[k + 1]][f] {
+                continue; // no threshold separates equal values
+            }
+            let rn = n - ln;
+            if (ln as usize) < params.min_leaf || (rn as usize) < params.min_leaf {
+                continue;
+            }
+            let rs = sum - ls;
+            let rs2 = sum2 - ls2;
+            let sse = (ls2 - ls * ls / ln) + (rs2 - rs * rs / rn);
+            let threshold = 0.5 * (xs[order[k]][f] + xs[order[k + 1]][f]);
+            if best.map_or(true, |(b, _, _)| sse < b) {
+                best = Some((sse, f, threshold));
+            }
+        }
+    }
+
+    match best {
+        Some((sse, feature, threshold)) if sse < parent_sse - 1e-12 => {
+            let (li, ri): (Vec<usize>, Vec<usize>) =
+                idx.iter().partition(|&&i| xs[i][feature] <= threshold);
+            Node::Split {
+                feature,
+                threshold,
+                left: Box::new(build(xs, ys, &li, params, depth + 1)),
+                right: Box::new(build(xs, ys, &ri, params, depth + 1)),
+            }
+        }
+        _ => Node::Leaf { value: mean(ys, idx) },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{testkit, Rng};
+
+    #[test]
+    fn fits_step_function_exactly() {
+        let xs: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64]).collect();
+        let ys: Vec<f64> = (0..100).map(|i| if i < 50 { 1.0 } else { 5.0 }).collect();
+        let t = DecisionTree::fit(&xs, &ys, TreeParams::default());
+        assert_eq!(t.predict(&[10.0]), 1.0);
+        assert_eq!(t.predict(&[80.0]), 5.0);
+    }
+
+    #[test]
+    fn approximates_smooth_2d_surface() {
+        // the actual prediction task: duration(batch, quota)
+        let mut r = Rng::new(3);
+        let f = |b: f64, p: f64| 0.01 * b * (0.1 + 0.9 / p);
+        let xs: Vec<Vec<f64>> = (0..2000)
+            .map(|_| vec![r.range_f64(1.0, 64.0), r.range_f64(0.05, 1.0)])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| f(x[0], x[1])).collect();
+        let t = DecisionTree::fit(&xs, &ys, TreeParams::default());
+        let mut err_sum = 0.0;
+        let mut n = 0;
+        for _ in 0..200 {
+            let (b, p) = (r.range_f64(2.0, 60.0), r.range_f64(0.1, 1.0));
+            let truth = f(b, p);
+            err_sum += ((t.predict(&[b, p]) - truth) / truth).abs();
+            n += 1;
+        }
+        let mape = err_sum / n as f64;
+        assert!(mape < 0.15, "MAPE {mape}");
+    }
+
+    #[test]
+    fn respects_min_leaf_and_depth() {
+        let xs: Vec<Vec<f64>> = (0..64).map(|i| vec![i as f64]).collect();
+        let ys: Vec<f64> = (0..64).map(|i| i as f64).collect();
+        let t = DecisionTree::fit(&xs, &ys, TreeParams { max_depth: 3, min_leaf: 1 });
+        assert!(t.depth() <= 3);
+    }
+
+    #[test]
+    fn constant_target_single_leaf() {
+        let xs: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let ys = vec![7.0; 10];
+        let t = DecisionTree::fit(&xs, &ys, TreeParams::default());
+        assert_eq!(t.depth(), 0);
+        assert_eq!(t.predict(&[3.0]), 7.0);
+    }
+
+    #[test]
+    fn predictions_within_target_range_property() {
+        testkit::forall_res(
+            9,
+            20,
+            |r| r.next_u64(),
+            |&seed| {
+                let mut r = Rng::new(seed);
+                let xs: Vec<Vec<f64>> =
+                    (0..100).map(|_| vec![r.range_f64(0.0, 1.0), r.range_f64(0.0, 1.0)]).collect();
+                let ys: Vec<f64> = (0..100).map(|_| r.range_f64(-5.0, 5.0)).collect();
+                let t = DecisionTree::fit(&xs, &ys, TreeParams::default());
+                let lo = ys.iter().cloned().fold(f64::INFINITY, f64::min);
+                let hi = ys.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+                for _ in 0..50 {
+                    let x = vec![r.range_f64(-1.0, 2.0), r.range_f64(-1.0, 2.0)];
+                    let p = t.predict(&x);
+                    // mean-of-subset predictions can never escape [lo, hi]
+                    if !(lo - 1e-9 <= p && p <= hi + 1e-9) {
+                        return Err(format!("prediction {p} outside [{lo}, {hi}]"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,152 @@
+//! Multivariate linear regression via the normal equations.
+//!
+//! The paper uses LR for the quantities that really are linear — FLOPs
+//! C(i,s) and global-memory footprint M(i,s) versus batch size — and as
+//! one of the three candidates in the Fig 12 accuracy comparison.
+
+/// Fitted linear model: `y = w·x + b`.
+#[derive(Debug, Clone)]
+pub struct LinReg {
+    pub weights: Vec<f64>,
+    pub bias: f64,
+}
+
+impl LinReg {
+    /// Least-squares fit. `xs` is row-major (n_samples × n_features).
+    /// Solves (XᵀX)w = Xᵀy with Gaussian elimination + partial pivoting
+    /// (augmented with a bias column). Returns None on degenerate input.
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64]) -> Option<LinReg> {
+        let n = xs.len();
+        if n == 0 || n != ys.len() {
+            return None;
+        }
+        let d = xs[0].len() + 1; // + bias
+        // build normal-equation system a (d×d), rhs (d)
+        let mut a = vec![vec![0.0; d]; d];
+        let mut rhs = vec![0.0; d];
+        for (x, &y) in xs.iter().zip(ys) {
+            debug_assert_eq!(x.len() + 1, d);
+            let mut xb = x.clone();
+            xb.push(1.0);
+            for i in 0..d {
+                rhs[i] += xb[i] * y;
+                for j in 0..d {
+                    a[i][j] += xb[i] * xb[j];
+                }
+            }
+        }
+        // ridge epsilon keeps near-singular systems solvable
+        for (i, row) in a.iter_mut().enumerate() {
+            row[i] += 1e-9;
+        }
+        let w = solve(&mut a, &mut rhs)?;
+        let bias = w[d - 1];
+        Some(LinReg { weights: w[..d - 1].to_vec(), bias })
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        debug_assert_eq!(x.len(), self.weights.len());
+        self.bias + self.weights.iter().zip(x).map(|(w, v)| w * v).sum::<f64>()
+    }
+}
+
+/// In-place Gaussian elimination with partial pivoting.
+fn solve(a: &mut [Vec<f64>], b: &mut [f64]) -> Option<Vec<f64>> {
+    let n = b.len();
+    for col in 0..n {
+        // pivot
+        let pivot = (col..n).max_by(|&i, &j| {
+            a[i][col].abs().partial_cmp(&a[j][col].abs()).unwrap()
+        })?;
+        if a[pivot][col].abs() < 1e-12 {
+            return None;
+        }
+        a.swap(col, pivot);
+        b.swap(col, pivot);
+        for row in col + 1..n {
+            let f = a[row][col] / a[col][col];
+            for k in col..n {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    // back substitution
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut v = b[i];
+        for j in i + 1..n {
+            v -= a[i][j] * x[j];
+        }
+        x[i] = v / a[i][i];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::{testkit, Rng};
+
+    #[test]
+    fn recovers_exact_linear_function() {
+        // y = 3x₀ - 2x₁ + 5
+        let mut r = Rng::new(1);
+        let xs: Vec<Vec<f64>> = (0..50)
+            .map(|_| vec![r.range_f64(-5.0, 5.0), r.range_f64(-5.0, 5.0)])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 3.0 * x[0] - 2.0 * x[1] + 5.0).collect();
+        let m = LinReg::fit(&xs, &ys).unwrap();
+        testkit::assert_close(m.weights[0], 3.0, 1e-6, 1e-6);
+        testkit::assert_close(m.weights[1], -2.0, 1e-6, 1e-6);
+        testkit::assert_close(m.bias, 5.0, 1e-6, 1e-6);
+        testkit::assert_close(m.predict(&[1.0, 1.0]), 6.0, 1e-6, 1e-6);
+    }
+
+    #[test]
+    fn robust_to_noise() {
+        let mut r = Rng::new(2);
+        let xs: Vec<Vec<f64>> = (0..500).map(|_| vec![r.range_f64(0.0, 10.0)]).collect();
+        let ys: Vec<f64> = xs.iter().map(|x| 2.0 * x[0] + 1.0 + 0.1 * r.normal()).collect();
+        let m = LinReg::fit(&xs, &ys).unwrap();
+        testkit::assert_close(m.weights[0], 2.0, 0.02, 0.0);
+    }
+
+    #[test]
+    fn rejects_empty_and_mismatched() {
+        assert!(LinReg::fit(&[], &[]).is_none());
+        assert!(LinReg::fit(&[vec![1.0]], &[1.0, 2.0]).is_none());
+    }
+
+    #[test]
+    fn property_fits_random_linear_models() {
+        testkit::forall_res(
+            5,
+            20,
+            |r| {
+                let d = 1 + r.below(4);
+                let w: Vec<f64> = (0..d).map(|_| r.range_f64(-3.0, 3.0)).collect();
+                let b = r.range_f64(-3.0, 3.0);
+                (w, b, r.next_u64())
+            },
+            |(w, b, seed)| {
+                let mut r = Rng::new(*seed);
+                let xs: Vec<Vec<f64>> = (0..80)
+                    .map(|_| (0..w.len()).map(|_| r.range_f64(-4.0, 4.0)).collect())
+                    .collect();
+                let ys: Vec<f64> = xs
+                    .iter()
+                    .map(|x| b + w.iter().zip(x).map(|(wi, xi)| wi * xi).sum::<f64>())
+                    .collect();
+                let m = LinReg::fit(&xs, &ys).ok_or("fit failed")?;
+                for (xi, yi) in xs.iter().zip(&ys) {
+                    let p = m.predict(xi);
+                    if (p - yi).abs() > 1e-5 * (1.0 + yi.abs()) {
+                        return Err(format!("pred {p} vs {yi}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

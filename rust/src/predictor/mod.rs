@@ -1,0 +1,174 @@
+//! Performance prediction (§VII-A): per-microservice models that map
+//! (batch size, SM quota) → processing duration, global-memory-bandwidth
+//! usage, and throughput; plus LR models for FLOPs and memory footprint
+//! (linear in batch).
+//!
+//! The modeling techniques — linear regression, CART decision tree, and
+//! random forest — are implemented from scratch in this module, and
+//! `figures::fig12` reproduces the paper's accuracy comparison. Camelot
+//! uses the decision tree online (<1 ms predictions, §VIII-G).
+
+pub mod dtree;
+pub mod linreg;
+pub mod profile;
+pub mod rforest;
+
+pub use dtree::{DecisionTree, TreeParams};
+pub use linreg::LinReg;
+pub use profile::{profile_stage, split, ProfileConfig, Sample};
+pub use rforest::{ForestParams, RandomForest};
+
+use crate::config::GpuSpec;
+use crate::suite::StageProfile;
+
+/// The trained per-microservice predictor bundle Camelot consults at
+/// allocation time (Table II: f(p), g(p)/b(p), M(i,s), C(i,s)).
+#[derive(Debug, Clone)]
+pub struct StagePredictor {
+    pub stage_name: String,
+    duration: DecisionTree,
+    bandwidth: DecisionTree,
+    throughput: DecisionTree,
+    flops: LinReg,
+    mem: LinReg,
+}
+
+impl StagePredictor {
+    /// Profile a stage solo and train all five models (the §VIII-G
+    /// "offline overhead" path).
+    pub fn train(stage: &StageProfile, gpu: &GpuSpec, cfg: &ProfileConfig) -> StagePredictor {
+        let samples = profile_stage(stage, gpu, cfg);
+        Self::train_from_samples(&stage.name, &samples)
+    }
+
+    pub fn train_from_samples(name: &str, samples: &[Sample]) -> StagePredictor {
+        let xs: Vec<Vec<f64>> = samples.iter().map(|s| vec![s.batch, s.sm_frac]).collect();
+        let dur: Vec<f64> = samples.iter().map(|s| s.duration_s).collect();
+        let bw: Vec<f64> = samples.iter().map(|s| s.bw_bytes_per_s).collect();
+        let thr: Vec<f64> = samples.iter().map(|s| s.throughput_qps).collect();
+        let xb: Vec<Vec<f64>> = samples.iter().map(|s| vec![s.batch]).collect();
+        let fl: Vec<f64> = samples.iter().map(|s| s.flops).collect();
+        let mm: Vec<f64> = samples.iter().map(|s| s.mem_bytes).collect();
+        let tp = TreeParams::default();
+        StagePredictor {
+            stage_name: name.to_string(),
+            duration: DecisionTree::fit(&xs, &dur, tp),
+            bandwidth: DecisionTree::fit(&xs, &bw, tp),
+            throughput: DecisionTree::fit(&xs, &thr, tp),
+            flops: LinReg::fit(&xb, &fl).expect("flops fit"),
+            mem: LinReg::fit(&xb, &mm).expect("mem fit"),
+        }
+    }
+
+    /// Predicted processing duration (seconds) of one batch.
+    pub fn duration(&self, batch: u32, sm_frac: f64) -> f64 {
+        self.duration.predict(&[batch as f64, sm_frac]).max(1e-6)
+    }
+
+    /// Predicted global-memory-bandwidth usage (bytes/s) — g/b in Eq. 1.
+    pub fn bandwidth(&self, batch: u32, sm_frac: f64) -> f64 {
+        self.bandwidth.predict(&[batch as f64, sm_frac]).max(0.0)
+    }
+
+    /// Predicted instance throughput (queries/s) — f(p) in Eq. 1.
+    pub fn throughput(&self, batch: u32, sm_frac: f64) -> f64 {
+        self.throughput.predict(&[batch as f64, sm_frac]).max(0.0)
+    }
+
+    /// Predicted FLOPs per batch — C(i,s) in Eq. 2.
+    pub fn flops(&self, batch: u32) -> f64 {
+        self.flops.predict(&[batch as f64]).max(0.0)
+    }
+
+    /// Predicted global-memory footprint — M(i,s) in Eq. 2/3.
+    pub fn mem_bytes(&self, batch: u32) -> f64 {
+        self.mem.predict(&[batch as f64]).max(0.0)
+    }
+}
+
+/// Mean absolute percentage error of `pred` on held-out samples — the
+/// Fig 12 metric.
+pub fn mape<F: Fn(&Sample) -> (f64, f64)>(samples: &[Sample], pred: F) -> f64 {
+    let mut sum = 0.0;
+    let mut n = 0;
+    for s in samples {
+        let (p, truth) = pred(s);
+        if truth.abs() > 1e-12 {
+            sum += ((p - truth) / truth).abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        sum / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::CostModel;
+    use crate::suite::{artifact, real};
+
+    fn gpu() -> GpuSpec {
+        GpuSpec::rtx2080ti()
+    }
+
+    #[test]
+    fn predictor_tracks_cost_model() {
+        let stage = artifact::compute(2);
+        let p = StagePredictor::train(&stage, &gpu(), &ProfileConfig::default());
+        let cost = CostModel::new(gpu());
+        for &(b, q) in &[(8u32, 0.2f64), (32, 0.5), (64, 0.9)] {
+            let truth = cost.duration_solo(&stage, b, q);
+            let got = p.duration(b, q);
+            assert!(
+                (got - truth).abs() / truth < 0.15,
+                "duration({b},{q}): {got} vs {truth}"
+            );
+            let t_truth = cost.throughput_solo(&stage, b, q);
+            let t_got = p.throughput(b, q);
+            assert!(
+                (t_got - t_truth).abs() / t_truth < 0.15,
+                "throughput({b},{q}): {t_got} vs {t_truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn flops_and_mem_linear_models_exact() {
+        let stage = real::img_to_img().stages[0].clone();
+        let p = StagePredictor::train(&stage, &gpu(), &ProfileConfig::default());
+        for b in [4u32, 40, 200] {
+            crate::util::testkit::assert_close(p.flops(b), stage.flops(b), 1e-3, 1e6);
+            crate::util::testkit::assert_close(p.mem_bytes(b), stage.mem_footprint(b), 1e-3, 1e6);
+        }
+    }
+
+    #[test]
+    fn dt_accuracy_beats_lr_on_duration() {
+        // the Fig 12 headline: LR cannot capture the 1/p shape
+        let stage = artifact::compute(3);
+        let samples = profile_stage(&stage, &gpu(), &ProfileConfig::default());
+        let (train, test) = split(&samples, 0.7, 9);
+        let xs: Vec<Vec<f64>> = train.iter().map(|s| vec![s.batch, s.sm_frac]).collect();
+        let ys: Vec<f64> = train.iter().map(|s| s.duration_s).collect();
+        let dt = DecisionTree::fit(&xs, &ys, TreeParams::default());
+        let lr = LinReg::fit(&xs, &ys).unwrap();
+        let dt_err = mape(&test, |s| (dt.predict(&[s.batch, s.sm_frac]), s.duration_s));
+        let lr_err = mape(&test, |s| (lr.predict(&[s.batch, s.sm_frac]), s.duration_s));
+        assert!(dt_err < lr_err, "dt {dt_err} vs lr {lr_err}");
+        assert!(dt_err < 0.10, "dt error {dt_err}");
+    }
+
+    #[test]
+    fn predictions_are_positive() {
+        let p = StagePredictor::train(&artifact::memory(3), &gpu(), &ProfileConfig::default());
+        crate::util::testkit::forall(3, 200, |r| {
+            (1 + r.below(128) as u32, r.range_f64(0.01, 1.0))
+        }, |&(b, q)| {
+            p.duration(b, q) > 0.0 && p.throughput(b, q) >= 0.0 && p.bandwidth(b, q) >= 0.0
+        });
+    }
+}

@@ -1,0 +1,149 @@
+//! Offline profiling: collect (batch, SM-quota) → performance samples
+//! for each microservice by solo-running it (§VII-A: "queries are
+//! executed in solo-run mode to avoid interference"), then train the
+//! per-stage predictors.
+//!
+//! On the real testbed this is a day of Nsight-Compute runs; here the
+//! solo runs execute on the simulator's cost model with multiplicative
+//! measurement noise (profilers are not noise-free; this is also what
+//! makes the Fig 12 error comparison non-degenerate).
+
+use crate::config::GpuSpec;
+use crate::sim::CostModel;
+use crate::suite::StageProfile;
+use crate::util::Rng;
+
+/// One profiled sample.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    pub batch: f64,
+    pub sm_frac: f64,
+    pub duration_s: f64,
+    pub bw_bytes_per_s: f64,
+    pub throughput_qps: f64,
+    pub flops: f64,
+    pub mem_bytes: f64,
+}
+
+/// Profiling configuration.
+#[derive(Debug, Clone)]
+pub struct ProfileConfig {
+    pub batches: Vec<u32>,
+    pub quotas: Vec<f64>,
+    /// Repetitions per grid point.
+    pub reps: usize,
+    /// Multiplicative measurement noise std-dev (e.g. 0.03 = 3%).
+    pub noise: f64,
+    pub seed: u64,
+}
+
+impl Default for ProfileConfig {
+    fn default() -> Self {
+        ProfileConfig {
+            batches: vec![1, 2, 4, 8, 16, 24, 32, 48, 64, 96, 128],
+            quotas: (1..=20).map(|i| i as f64 * 0.05).collect(),
+            reps: 3,
+            noise: 0.03,
+            seed: 1234,
+        }
+    }
+}
+
+/// Solo-run profile of one stage over the full grid.
+pub fn profile_stage(stage: &StageProfile, gpu: &GpuSpec, cfg: &ProfileConfig) -> Vec<Sample> {
+    let cost = CostModel::new(gpu.clone());
+    let mut rng = Rng::new(cfg.seed ^ hash_name(&stage.name));
+    let mut out = Vec::with_capacity(cfg.batches.len() * cfg.quotas.len() * cfg.reps);
+    for &b in &cfg.batches {
+        for &p in &cfg.quotas {
+            for _ in 0..cfg.reps {
+                let noise = |r: &mut Rng| 1.0 + cfg.noise * r.normal();
+                let d = cost.duration_solo(stage, b, p) * noise(&mut rng);
+                out.push(Sample {
+                    batch: b as f64,
+                    sm_frac: p,
+                    duration_s: d,
+                    bw_bytes_per_s: stage.hbm_bytes(b) / d,
+                    throughput_qps: b as f64 / d,
+                    flops: stage.flops(b),
+                    mem_bytes: stage.mem_footprint(b),
+                });
+            }
+        }
+    }
+    out
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a, stable across runs
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// 70/30 train/test split in the paper's protocol.
+pub fn split(samples: &[Sample], train_frac: f64, seed: u64) -> (Vec<Sample>, Vec<Sample>) {
+    let mut idx: Vec<usize> = (0..samples.len()).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut idx);
+    let cut = (samples.len() as f64 * train_frac) as usize;
+    let train = idx[..cut].iter().map(|&i| samples[i]).collect();
+    let test = idx[cut..].iter().map(|&i| samples[i]).collect();
+    (train, test)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suite::artifact;
+
+    #[test]
+    fn grid_coverage() {
+        let cfg = ProfileConfig::default();
+        let s = profile_stage(&artifact::compute(2), &GpuSpec::rtx2080ti(), &cfg);
+        assert_eq!(s.len(), cfg.batches.len() * cfg.quotas.len() * cfg.reps);
+        assert!(s.iter().all(|x| x.duration_s > 0.0 && x.throughput_qps > 0.0));
+    }
+
+    #[test]
+    fn noise_centered_on_model() {
+        let cfg = ProfileConfig { reps: 50, ..Default::default() };
+        let gpu = GpuSpec::rtx2080ti();
+        let stage = artifact::compute(1);
+        let cost = CostModel::new(gpu.clone());
+        let samples = profile_stage(&stage, &gpu, &cfg);
+        let b = 32.0;
+        let p = 0.5;
+        let subset: Vec<f64> = samples
+            .iter()
+            .filter(|s| s.batch == b && (s.sm_frac - p).abs() < 1e-9)
+            .map(|s| s.duration_s)
+            .collect();
+        assert_eq!(subset.len(), 50);
+        let mean = subset.iter().sum::<f64>() / 50.0;
+        let truth = cost.duration_solo(&stage, 32, 0.5);
+        crate::util::testkit::assert_close(mean, truth, 0.03, 0.0);
+    }
+
+    #[test]
+    fn split_partitions() {
+        let cfg = ProfileConfig::default();
+        let s = profile_stage(&artifact::memory(1), &GpuSpec::rtx2080ti(), &cfg);
+        let (tr, te) = split(&s, 0.7, 1);
+        assert_eq!(tr.len() + te.len(), s.len());
+        assert!((tr.len() as f64 / s.len() as f64 - 0.7).abs() < 0.01);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = ProfileConfig::default();
+        let gpu = GpuSpec::rtx2080ti();
+        let a = profile_stage(&artifact::pcie(1), &gpu, &cfg);
+        let b = profile_stage(&artifact::pcie(1), &gpu, &cfg);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.duration_s == y.duration_s));
+    }
+}

@@ -1,0 +1,98 @@
+//! Random forest (bagged CART trees) — the third candidate of the
+//! Fig 12 comparison. Camelot ultimately rejects it: its accuracy is
+//! comparable to the single tree but its prediction latency (>5 ms in
+//! the paper for large forests) violates the online budget.
+
+use super::dtree::{DecisionTree, TreeParams};
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct ForestParams {
+    pub n_trees: usize,
+    pub tree: TreeParams,
+    /// Bootstrap sample fraction.
+    pub subsample: f64,
+}
+
+impl Default for ForestParams {
+    fn default() -> Self {
+        ForestParams { n_trees: 50, tree: TreeParams::default(), subsample: 0.8 }
+    }
+}
+
+/// A fitted forest.
+#[derive(Debug, Clone)]
+pub struct RandomForest {
+    trees: Vec<DecisionTree>,
+}
+
+impl RandomForest {
+    pub fn fit(xs: &[Vec<f64>], ys: &[f64], params: ForestParams, seed: u64) -> RandomForest {
+        assert!(!xs.is_empty() && xs.len() == ys.len(), "bad training set");
+        let mut rng = Rng::new(seed);
+        let m = ((xs.len() as f64 * params.subsample) as usize).max(1);
+        let trees = (0..params.n_trees)
+            .map(|_| {
+                let mut bx = Vec::with_capacity(m);
+                let mut by = Vec::with_capacity(m);
+                for _ in 0..m {
+                    let i = rng.below(xs.len());
+                    bx.push(xs[i].clone());
+                    by.push(ys[i]);
+                }
+                DecisionTree::fit(&bx, &by, params.tree)
+            })
+            .collect();
+        RandomForest { trees }
+    }
+
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        self.trees.iter().map(|t| t.predict(x)).sum::<f64>() / self.trees.len() as f64
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn forest_tracks_smooth_surface() {
+        let mut r = Rng::new(4);
+        let f = |b: f64, p: f64| 0.01 * b * (0.1 + 0.9 / p);
+        let xs: Vec<Vec<f64>> = (0..1500)
+            .map(|_| vec![r.range_f64(1.0, 64.0), r.range_f64(0.05, 1.0)])
+            .collect();
+        let ys: Vec<f64> = xs.iter().map(|x| f(x[0], x[1]) * (1.0 + 0.05 * r.normal())).collect();
+        let rf = RandomForest::fit(&xs, &ys, ForestParams::default(), 7);
+        let mut mape = 0.0;
+        for _ in 0..200 {
+            let (b, p) = (r.range_f64(2.0, 60.0), r.range_f64(0.1, 1.0));
+            let truth = f(b, p);
+            mape += ((rf.predict(&[b, p]) - truth) / truth).abs();
+        }
+        mape /= 200.0;
+        assert!(mape < 0.15, "MAPE {mape}");
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let xs: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64]).collect();
+        let ys: Vec<f64> = (0..100).map(|i| (i * i) as f64).collect();
+        let a = RandomForest::fit(&xs, &ys, ForestParams::default(), 1);
+        let b = RandomForest::fit(&xs, &ys, ForestParams::default(), 1);
+        assert_eq!(a.predict(&[42.0]), b.predict(&[42.0]));
+    }
+
+    #[test]
+    fn respects_tree_count() {
+        let xs: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let ys: Vec<f64> = (0..20).map(|i| i as f64).collect();
+        let p = ForestParams { n_trees: 7, ..Default::default() };
+        assert_eq!(RandomForest::fit(&xs, &ys, p, 0).n_trees(), 7);
+    }
+}

@@ -1,0 +1,138 @@
+//! `artifacts/manifest.json` reader: the metadata bridge between the L2
+//! exporter (`python/compile/aot.py`) and the L3 runtime/coordinator.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+/// Metadata of one exported (stage, batch) artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub stage: String,
+    pub kind: String,
+    pub batch: u32,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub flops: f64,
+    pub param_bytes: f64,
+    pub file: String,
+}
+
+/// The parsed manifest, keyed by artifact name.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let json = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let arr = json.as_arr().ok_or_else(|| anyhow!("manifest: not an array"))?;
+        let mut entries = BTreeMap::new();
+        for (i, e) in arr.iter().enumerate() {
+            let shape = |key: &str| -> Result<Vec<usize>> {
+                e.get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("entry {i}: missing {key}"))?
+                    .iter()
+                    .map(|v| {
+                        v.as_f64()
+                            .map(|x| x as usize)
+                            .ok_or_else(|| anyhow!("entry {i}: bad dim in {key}"))
+                    })
+                    .collect()
+            };
+            let meta = ArtifactMeta {
+                name: e
+                    .get_str("name")
+                    .ok_or_else(|| anyhow!("entry {i}: missing name"))?
+                    .to_string(),
+                stage: e.get_str("stage").unwrap_or_default().to_string(),
+                kind: e.get_str("kind").unwrap_or_default().to_string(),
+                batch: e.get_f64("batch").unwrap_or(0.0) as u32,
+                input_shape: shape("input_shape")?,
+                output_shape: shape("output_shape")?,
+                flops: e.get_f64("flops").unwrap_or(0.0),
+                param_bytes: e.get_f64("param_bytes").unwrap_or(0.0),
+                file: e
+                    .get_str("file")
+                    .ok_or_else(|| anyhow!("entry {i}: missing file"))?
+                    .to_string(),
+            };
+            entries.insert(meta.name.clone(), meta);
+        }
+        Ok(Manifest { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.entries.get(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactMeta> {
+        self.entries.values()
+    }
+
+    /// All batch variants of one stage, sorted by batch size.
+    pub fn variants(&self, stage: &str) -> Vec<&ArtifactMeta> {
+        let mut v: Vec<&ArtifactMeta> =
+            self.entries.values().filter(|m| m.stage == stage).collect();
+        v.sort_by_key(|m| m.batch);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"[
+        {"name": "s_b8", "stage": "s", "kind": "mlp", "batch": 8,
+         "input_shape": [8, 512], "output_shape": [8, 256],
+         "flops": 1.5e9, "param_bytes": 4.0e6, "file": "s_b8.hlo.txt"},
+        {"name": "s_b16", "stage": "s", "kind": "mlp", "batch": 16,
+         "input_shape": [16, 512], "output_shape": [16, 256],
+         "flops": 3.0e9, "param_bytes": 4.0e6, "file": "s_b16.hlo.txt"}
+    ]"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 2);
+        let e = m.get("s_b8").unwrap();
+        assert_eq!(e.input_shape, vec![8, 512]);
+        assert_eq!(e.flops, 1.5e9);
+    }
+
+    #[test]
+    fn variants_sorted_by_batch() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let v = m.variants("s");
+        assert_eq!(v.len(), 2);
+        assert!(v[0].batch < v[1].batch);
+        assert!(m.variants("nope").is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"[{"name": "x"}]"#).is_err());
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt` produced
+//! by `python/compile/aot.py`) and execute them from Rust.
+//!
+//! This is the request-path compute engine — Python is never involved
+//! after `make artifacts`. HLO *text* is the interchange format (jax ≥
+//! 0.5 emits 64-bit instruction ids that xla_extension 0.5.1's proto
+//! path rejects; the text parser reassigns ids).
+
+pub mod manifest;
+
+pub use manifest::{ArtifactMeta, Manifest};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+/// A compiled stage executable plus its metadata.
+pub struct StageExecutable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl StageExecutable {
+    /// Run the stage on a row-major f32 activation of shape
+    /// `meta.input_shape`. Returns the output activation.
+    pub fn run(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let expected: usize = self.meta.input_shape.iter().product();
+        if input.len() != expected {
+            return Err(anyhow!(
+                "{}: input length {} != expected {} ({:?})",
+                self.meta.name,
+                input.len(),
+                expected,
+                self.meta.input_shape
+            ));
+        }
+        let lit = xla::Literal::vec1(input)
+            .reshape(&self.meta.input_shape.iter().map(|&d| d as i64).collect::<Vec<_>>())?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+}
+
+/// The engine: a PJRT CPU client plus the compiled stage executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: HashMap<String, StageExecutable>,
+}
+
+impl Engine {
+    /// Open `artifacts/` (reads `manifest.json`, compiles lazily).
+    pub fn open(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch the cached) executable for an artifact name,
+    /// e.g. `"vgg_features_b16"`.
+    pub fn load(&mut self, name: &str) -> Result<&StageExecutable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+                .clone();
+            let path = self.dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), StageExecutable { meta, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Load the artifact for a (stage, batch) pair.
+    pub fn load_stage(&mut self, stage: &str, batch: u32) -> Result<&StageExecutable> {
+        let name = format!("{stage}_b{batch}");
+        self.load(&name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! These tests require `make artifacts` to have run; they are the
+    //! integration seam between the L2 exporter and the L3 runtime.
+
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn engine() -> Option<Engine> {
+        let dir = artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Engine::open(dir).expect("engine opens"))
+        } else {
+            eprintln!("skipping runtime test: run `make artifacts` first");
+            None
+        }
+    }
+
+    #[test]
+    fn loads_and_runs_mlp_stage() {
+        let Some(mut e) = engine() else { return };
+        let exe = e.load("fsrcnn_enhance_b8").unwrap();
+        let n_in: usize = exe.meta.input_shape.iter().product();
+        let input: Vec<f32> = (0..n_in).map(|i| (i % 13) as f32 * 0.01).collect();
+        let out = exe.run(&input).unwrap();
+        let n_out: usize = exe.meta.output_shape.iter().product();
+        assert_eq!(out.len(), n_out);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let Some(mut e) = engine() else { return };
+        let exe = e.load("lstm_caption_b8").unwrap();
+        let n_in: usize = exe.meta.input_shape.iter().product();
+        let input: Vec<f32> = (0..n_in).map(|i| ((i * 31) % 7) as f32 * 0.1).collect();
+        let a = exe.run(&input).unwrap();
+        let b = exe.run(&input).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn rejects_wrong_input_length() {
+        let Some(mut e) = engine() else { return };
+        let exe = e.load("fsrcnn_enhance_b8").unwrap();
+        assert!(exe.run(&[1.0, 2.0]).is_err());
+    }
+
+    #[test]
+    fn manifest_covers_pipeline_pairs() {
+        let Some(e) = engine() else { return };
+        for stage in ["vgg_features", "lstm_caption", "bert_summarize", "nmt_translate"] {
+            for batch in [8, 16, 32, 64] {
+                assert!(
+                    e.manifest().get(&format!("{stage}_b{batch}")).is_some(),
+                    "{stage}_b{batch} missing"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,604 @@
+//! Discrete-event simulation of a microservice pipeline deployed on a
+//! cluster of spatial-multitasking GPUs.
+//!
+//! Models exactly the phenomena the paper measures: per-instance
+//! dynamic batching, SM-quota execution (Amdahl + roofline via
+//! [`CostModel`]), global-memory-bandwidth contention between co-located
+//! kernels, PCIe contention on uploads/hops/downloads, and the choice of
+//! communication mechanism per hop (§VI). The engine is the measurement
+//! substrate for every figure harness and for the coordinator's ramp
+//! searches.
+
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::comm::{hop_cost, CommMode};
+use crate::config::ClusterSpec;
+use crate::metrics::LatencyHistogram;
+use crate::suite::workload::PoissonArrivals;
+use crate::suite::Pipeline;
+
+use super::cost::CostModel;
+use super::gpu::SimGpu;
+use super::pcie::PcieBus;
+
+/// One microservice instance pinned to a GPU with an SM quota.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct InstancePlacement {
+    pub stage: usize,
+    pub gpu: usize,
+    pub sm_frac: f64,
+}
+
+/// A full deployment of one pipeline.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub placements: Vec<InstancePlacement>,
+    /// Query batch size (the x-axis of Figs 14/19).
+    pub batch: u32,
+    /// Mechanism used for same-GPU hops.
+    pub comm: CommMode,
+}
+
+impl Deployment {
+    /// Instances per stage (N_i in Table II).
+    pub fn instances_per_stage(&self, n_stages: usize) -> Vec<usize> {
+        let mut n = vec![0; n_stages];
+        for p in &self.placements {
+            n[p.stage] += 1;
+        }
+        n
+    }
+
+    /// Σ SM quota across all instances (the resource-usage metric of
+    /// Figs 16/17/21, in GPU-equivalents).
+    pub fn total_sm_usage(&self) -> f64 {
+        self.placements.iter().map(|p| p.sm_frac).sum()
+    }
+
+    /// Number of distinct GPUs used.
+    pub fn gpus_used(&self) -> usize {
+        let mut gpus: Vec<usize> = self.placements.iter().map(|p| p.gpu).collect();
+        gpus.sort_unstable();
+        gpus.dedup();
+        gpus.len()
+    }
+}
+
+/// Simulation options.
+///
+/// The arrival unit is a *request* of `deployment.batch` queries — the
+/// paper's workload protocol (the Fig 14/19 x-axis is "the batch size of
+/// processing user queries": clients submit batched queries, and the
+/// coordinator's own dynamic batcher — exercised by the real
+/// `coordinator::Batcher` — is already full at the loads the peak search
+/// measures).
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    pub seed: u64,
+    /// Total user queries injected (requests = queries / batch).
+    pub queries: usize,
+    /// Fraction of earliest completions excluded from the histogram.
+    pub warmup_frac: f64,
+    /// Retained for the coordinator-side batcher; the request-granular
+    /// engine issues immediately.
+    pub max_wait_frac: f64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { seed: 42, queries: 6_000, warmup_frac: 0.1, max_wait_frac: 0.15 }
+    }
+}
+
+/// Where the wall-clock time of completed queries went (Fig 5).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TimeBreakdown {
+    pub queue_s: f64,
+    pub exec_s: f64,
+    /// host→device input upload (stage-1 ingress)
+    pub upload_s: f64,
+    /// inter-stage hops
+    pub hop_s: f64,
+    /// device→host result download (egress)
+    pub download_s: f64,
+}
+
+impl TimeBreakdown {
+    pub fn comm_total(&self) -> f64 {
+        self.upload_s + self.hop_s + self.download_s
+    }
+
+    pub fn total(&self) -> f64 {
+        self.queue_s + self.exec_s + self.comm_total()
+    }
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub hist: LatencyHistogram,
+    pub offered_qps: f64,
+    pub achieved_qps: f64,
+    pub completed: u64,
+    pub breakdown: TimeBreakdown,
+    /// Mean exec time per stage (co-located, i.e. contended) — Fig 4b.
+    pub stage_exec_mean_s: Vec<f64>,
+}
+
+impl SimReport {
+    pub fn p99(&self) -> f64 {
+        self.hist.p99()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+enum Ev {
+    Arrival { qid: u32 },
+    ExecDone { inst: usize },
+    /// Release one PCIe stream registered at transfer start.
+    BusRelease,
+    /// Deliver queries to `target` (None = final completion).
+    XferDone { target: Option<usize>, qids: Vec<u32> },
+}
+
+#[derive(Debug)]
+struct Event {
+    t: f64,
+    seq: u64,
+    ev: Ev,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Event {}
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap: reverse on time, then sequence for determinism
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct Instance {
+    stage: usize,
+    gpu: usize,
+    sm_frac: f64,
+    queue: VecDeque<(u32, f64)>, // (qid, ready time)
+    busy: bool,
+    /// qids of the batch currently executing (while busy)
+    exec: Option<Vec<u32>>,
+}
+
+/// The engine itself. Build with [`Simulator::new`], run with
+/// [`Simulator::run`].
+pub struct Simulator<'a> {
+    pipeline: &'a Pipeline,
+    cluster: &'a ClusterSpec,
+    deployment: &'a Deployment,
+    opts: SimOptions,
+}
+
+impl<'a> Simulator<'a> {
+    pub fn new(
+        pipeline: &'a Pipeline,
+        cluster: &'a ClusterSpec,
+        deployment: &'a Deployment,
+        opts: SimOptions,
+    ) -> Self {
+        Simulator { pipeline, cluster, deployment, opts }
+    }
+
+    /// Statically validate the deployment (capacity, contexts, memory —
+    /// Constraints 1/2/4 of Eq. 1). Returns the admitted GPU states.
+    pub fn admit(&self) -> Result<Vec<SimGpu>, String> {
+        let mut gpus: Vec<SimGpu> = (0..self.cluster.num_gpus)
+            .map(|_| SimGpu::new(self.cluster.gpu.clone()))
+            .collect();
+        let n_stages = self.pipeline.n_stages();
+        for p in &self.deployment.placements {
+            if p.stage >= n_stages {
+                return Err(format!("placement references stage {}", p.stage));
+            }
+            if p.gpu >= gpus.len() {
+                return Err(format!("placement references gpu {}", p.gpu));
+            }
+            let st = &self.pipeline.stages[p.stage];
+            gpus[p.gpu]
+                .admit(
+                    &st.name,
+                    p.sm_frac,
+                    st.model_bytes,
+                    st.act_bytes_per_query * self.deployment.batch as f64,
+                )
+                .map_err(|e| format!("gpu {} rejects {}: {e}", p.gpu, st.name))?;
+        }
+        for i in 0..n_stages {
+            if !self.deployment.placements.iter().any(|p| p.stage == i) {
+                return Err(format!("stage {i} has no instances"));
+            }
+        }
+        Ok(gpus)
+    }
+
+    /// Run the simulation at the given offered load.
+    pub fn run(&self, offered_qps: f64) -> Result<SimReport, String> {
+        let mut gpus = self.admit()?;
+        let cost = CostModel::new(self.cluster.gpu.clone());
+        let mut bus = PcieBus::new(self.cluster.pcie.clone());
+        let ipc = &self.cluster.ipc;
+        let batch = self.deployment.batch.max(1) as usize;
+        // arrival unit: one request = `batch` queries
+        let n_requests = (self.opts.queries + batch - 1) / batch;
+        let req_rate = offered_qps / batch as f64;
+
+        let mut instances: Vec<Instance> = self
+            .deployment
+            .placements
+            .iter()
+            .map(|p| Instance {
+                stage: p.stage,
+                gpu: p.gpu,
+                sm_frac: p.sm_frac,
+                queue: VecDeque::new(),
+                busy: false,
+                exec: None,
+            })
+            .collect();
+        let mut by_stage: Vec<Vec<usize>> = vec![Vec::new(); self.pipeline.n_stages()];
+        for (i, inst) in instances.iter().enumerate() {
+            by_stage[inst.stage].push(i);
+        }
+
+        // generate all request arrivals up front
+        let mut arrivals: Vec<f64>;
+        {
+            let mut horizon = n_requests as f64 / req_rate * 1.25 + 1.0;
+            loop {
+                arrivals = PoissonArrivals::new(req_rate, self.opts.seed).times_until(horizon);
+                if arrivals.len() >= n_requests {
+                    arrivals.truncate(n_requests);
+                    break;
+                }
+                horizon *= 1.5;
+            }
+        }
+
+        let mut heap = BinaryHeap::with_capacity(n_requests * 6);
+        let mut seq = 0u64;
+        let push = |heap: &mut BinaryHeap<Event>, seq: &mut u64, t: f64, ev: Ev| {
+            *seq += 1;
+            heap.push(Event { t, seq: *seq, ev });
+        };
+        for (qid, &t) in arrivals.iter().enumerate() {
+            push(&mut heap, &mut seq, t, Ev::Arrival { qid: qid as u32 });
+        }
+
+        let mut hist = LatencyHistogram::new();
+        let mut breakdown = TimeBreakdown::default();
+        let mut stage_exec_sum = vec![0.0f64; self.pipeline.n_stages()];
+        let mut stage_exec_n = vec![0u64; self.pipeline.n_stages()];
+        let warmup = (n_requests as f64 * self.opts.warmup_frac) as u64;
+        let mut completed = 0u64;
+        let mut first_counted_t = f64::NAN;
+        let mut last_t = 0.0f64;
+
+        // borrow-friendly helper: join-shortest-queue routing counting
+        // the in-flight request, preferring same-GPU targets (IPC
+        // locality) and breaking remaining ties round-robin so idle
+        // instances share work (the paper's scheduler routes across
+        // instances).
+        fn route(
+            by_stage: &[Vec<usize>],
+            instances: &[Instance],
+            stage: usize,
+            from_gpu: Option<usize>,
+            rr: &mut usize,
+        ) -> usize {
+            let cands = &by_stage[stage];
+            *rr = rr.wrapping_add(1);
+            let start = *rr % cands.len();
+            let mut best = cands[start];
+            let mut best_key = (usize::MAX, true);
+            for k in 0..cands.len() {
+                let i = cands[(start + k) % cands.len()];
+                let load = instances[i].queue.len() + instances[i].busy as usize;
+                let cross = from_gpu.map_or(false, |g| instances[i].gpu != g);
+                let key = (load, cross);
+                if key < best_key {
+                    best_key = key;
+                    best = i;
+                }
+            }
+            best
+        }
+        let mut rr_counters = vec![0usize; self.pipeline.n_stages()];
+
+        // issue a batch on `inst` if warranted; schedules events.
+        #[allow(clippy::too_many_arguments)]
+        fn try_issue(
+            inst_id: usize,
+            now: f64,
+            instances: &mut [Instance],
+            gpus: &mut [SimGpu],
+            bus: &mut PcieBus,
+            cost: &CostModel,
+            pipeline: &Pipeline,
+            batch: usize,
+            heap: &mut BinaryHeap<Event>,
+            seq: &mut u64,
+            breakdown: &mut TimeBreakdown,
+            stage_exec_sum: &mut [f64],
+            stage_exec_n: &mut [u64],
+        ) {
+            let push = |heap: &mut BinaryHeap<Event>, seq: &mut u64, t: f64, ev: Ev| {
+                *seq += 1;
+                heap.push(Event { t, seq: *seq, ev });
+            };
+            let inst = &mut instances[inst_id];
+            if inst.busy || inst.queue.is_empty() {
+                return;
+            }
+            // one request (= `batch` queries) per execution
+            let (rid, ready) = inst.queue.pop_front().unwrap();
+            let qids = vec![rid];
+            let n = batch;
+            breakdown.queue_s += (now - ready) * n as f64;
+            inst.busy = true;
+
+            let stage = &pipeline.stages[inst.stage];
+            let gpu = inst.gpu;
+            let sm = inst.sm_frac;
+            let stage_idx = inst.stage;
+
+            // stage-0 ingress crosses PCIe before the kernel runs
+            let mut start = now;
+            if stage_idx == 0 {
+                let bytes = stage.in_bytes_per_query * n as f64;
+                let up = bus.begin_transfer(bytes);
+                push(heap, seq, now + up, Ev::BusRelease);
+                breakdown.upload_s += up * n as f64;
+                start += up;
+            }
+            let others = gpus[gpu].kernel_start(
+                inst_id,
+                cost.bw_demand(stage, n as u32, sm),
+            );
+            let dur = cost.duration_contended(stage, n as u32, sm, others);
+            stage_exec_sum[stage_idx] += dur;
+            stage_exec_n[stage_idx] += 1;
+            breakdown.exec_s += dur * n as f64;
+            push(heap, seq, start + dur, Ev::ExecDone { inst: inst_id });
+            instances[inst_id].exec = Some(qids);
+        }
+
+        while let Some(Event { t: now, ev, .. }) = heap.pop() {
+            last_t = now;
+            match ev {
+                Ev::Arrival { qid } => {
+                    let target = route(&by_stage, &instances, 0, None, &mut rr_counters[0]);
+                    instances[target].queue.push_back((qid, now));
+                    try_issue(
+                        target, now, &mut instances, &mut gpus, &mut bus, &cost,
+                        self.pipeline, batch, &mut heap,
+                        &mut seq, &mut breakdown, &mut stage_exec_sum, &mut stage_exec_n,
+                    );
+                }
+                Ev::BusRelease => bus.end_transfer(),
+                Ev::ExecDone { inst: inst_id } => {
+                    let qids = instances[inst_id].exec.take().unwrap_or_default();
+                    let stage_idx = instances[inst_id].stage;
+                    let gpu = instances[inst_id].gpu;
+                    gpus[gpu].kernel_end(inst_id);
+                    instances[inst_id].busy = false;
+                    let n = (qids.len() * batch) as f64;
+                    let is_last = stage_idx + 1 == self.pipeline.n_stages();
+                    if is_last {
+                        // egress download crosses PCIe
+                        let bytes =
+                            self.pipeline.stages[stage_idx].out_bytes_per_query * n;
+                        let dl = bus.begin_transfer(bytes);
+                        push(&mut heap, &mut seq, now + dl, Ev::BusRelease);
+                        breakdown.download_s += dl * n;
+                        push(&mut heap, &mut seq, now + dl, Ev::XferDone { target: None, qids });
+                    } else {
+                        let target = route(
+                            &by_stage, &instances, stage_idx + 1, Some(gpu),
+                            &mut rr_counters[stage_idx + 1],
+                        );
+                        let same_gpu = instances[target].gpu == gpu;
+                        let bytes =
+                            self.pipeline.stages[stage_idx].out_bytes_per_query * n;
+                        let hop = hop_cost(self.deployment.comm, same_gpu, bytes, &mut bus, ipc);
+                        if hop.uses_bus {
+                            push(&mut heap, &mut seq, now + hop.duration_s, Ev::BusRelease);
+                        }
+                        breakdown.hop_s += hop.duration_s * n;
+                        push(
+                            &mut heap, &mut seq, now + hop.duration_s,
+                            Ev::XferDone { target: Some(target), qids },
+                        );
+                    }
+                    // instance freed: maybe issue the next batch
+                    try_issue(
+                        inst_id, now, &mut instances, &mut gpus, &mut bus, &cost,
+                        self.pipeline, batch, &mut heap,
+                        &mut seq, &mut breakdown, &mut stage_exec_sum, &mut stage_exec_n,
+                    );
+                }
+                Ev::XferDone { target, qids } => match target {
+                    Some(t_inst) => {
+                        for qid in qids {
+                            instances[t_inst].queue.push_back((qid, now));
+                        }
+                        try_issue(
+                            t_inst, now, &mut instances, &mut gpus, &mut bus, &cost,
+                            self.pipeline, batch, &mut heap,
+                            &mut seq, &mut breakdown, &mut stage_exec_sum, &mut stage_exec_n,
+                        );
+                    }
+                    None => {
+                        for rid in qids {
+                            completed += 1;
+                            if completed > warmup {
+                                if first_counted_t.is_nan() {
+                                    first_counted_t = now;
+                                }
+                                hist.record(now - arrivals[rid as usize]);
+                            }
+                        }
+                    }
+                },
+            }
+        }
+
+        let span = (last_t - first_counted_t).max(1e-9);
+        let counted = completed.saturating_sub(warmup);
+        Ok(SimReport {
+            achieved_qps: counted as f64 * batch as f64 / span,
+            offered_qps,
+            completed,
+            hist,
+            breakdown,
+            stage_exec_mean_s: stage_exec_sum
+                .iter()
+                .zip(&stage_exec_n)
+                .map(|(s, &n)| if n == 0 { 0.0 } else { s / n as f64 })
+                .collect(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::suite::real;
+
+    fn simple_deployment(comm: CommMode) -> Deployment {
+        Deployment {
+            placements: vec![
+                InstancePlacement { stage: 0, gpu: 0, sm_frac: 0.5 },
+                InstancePlacement { stage: 1, gpu: 0, sm_frac: 0.5 },
+            ],
+            batch: 16,
+            comm,
+        }
+    }
+
+    #[test]
+    fn all_queries_complete_at_low_load() {
+        let p = real::img_to_text();
+        let c = ClusterSpec::two_2080ti();
+        let d = simple_deployment(CommMode::GlobalIpc);
+        let sim = Simulator::new(&p, &c, &d, SimOptions { queries: 1_000, ..Default::default() });
+        let r = sim.run(50.0).unwrap();
+        // completion unit is the request (= batch of 16 queries)
+        assert_eq!(r.completed, 1_000 / 16 + 1);
+        assert!(r.p99() > 0.0);
+        assert!(r.p99() < 10.0);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = real::text_to_text();
+        let c = ClusterSpec::two_2080ti();
+        let d = simple_deployment(CommMode::MainMemory);
+        let o = SimOptions { queries: 500, ..Default::default() };
+        let a = Simulator::new(&p, &c, &d, o.clone()).run(40.0).unwrap();
+        let b = Simulator::new(&p, &c, &d, o).run(40.0).unwrap();
+        assert_eq!(a.p99(), b.p99());
+        assert_eq!(a.completed, b.completed);
+    }
+
+    #[test]
+    fn latency_grows_with_load() {
+        let p = real::img_to_img();
+        let c = ClusterSpec::two_2080ti();
+        let d = simple_deployment(CommMode::GlobalIpc);
+        let o = SimOptions { queries: 2_000, ..Default::default() };
+        let lo = Simulator::new(&p, &c, &d, o.clone()).run(20.0).unwrap();
+        let hi = Simulator::new(&p, &c, &d, o).run(2_000.0).unwrap();
+        assert!(
+            hi.p99() > lo.p99(),
+            "overload p99 {} must exceed light-load p99 {}",
+            hi.p99(),
+            lo.p99()
+        );
+    }
+
+    #[test]
+    fn ipc_beats_main_memory_on_image_pipeline() {
+        // Fig 5/11: heavy payloads + same GPU ⇒ IPC reduces latency.
+        let p = real::img_to_img();
+        let c = ClusterSpec::two_2080ti();
+        let o = SimOptions { queries: 2_000, ..Default::default() };
+        let mm = Simulator::new(&p, &c, &simple_deployment(CommMode::MainMemory), o.clone())
+            .run(60.0)
+            .unwrap();
+        let gi = Simulator::new(&p, &c, &simple_deployment(CommMode::GlobalIpc), o)
+            .run(60.0)
+            .unwrap();
+        assert!(
+            gi.hist.mean() < mm.hist.mean(),
+            "ipc mean {} vs mm mean {}",
+            gi.hist.mean(),
+            mm.hist.mean()
+        );
+        assert!(gi.breakdown.hop_s < mm.breakdown.hop_s);
+    }
+
+    #[test]
+    fn admit_rejects_oversubscription() {
+        let p = real::img_to_img();
+        let c = ClusterSpec::two_2080ti();
+        let d = Deployment {
+            placements: vec![
+                InstancePlacement { stage: 0, gpu: 0, sm_frac: 0.8 },
+                InstancePlacement { stage: 1, gpu: 0, sm_frac: 0.5 },
+            ],
+            batch: 8,
+            comm: CommMode::GlobalIpc,
+        };
+        assert!(Simulator::new(&p, &c, &d, SimOptions::default()).admit().is_err());
+    }
+
+    #[test]
+    fn admit_rejects_missing_stage() {
+        let p = real::img_to_img();
+        let c = ClusterSpec::two_2080ti();
+        let d = Deployment {
+            placements: vec![InstancePlacement { stage: 0, gpu: 0, sm_frac: 0.5 }],
+            batch: 8,
+            comm: CommMode::GlobalIpc,
+        };
+        assert!(Simulator::new(&p, &c, &d, SimOptions::default()).admit().is_err());
+    }
+
+    #[test]
+    fn breakdown_accounts_communication() {
+        let p = real::img_to_img();
+        let c = ClusterSpec::two_2080ti();
+        let d = simple_deployment(CommMode::MainMemory);
+        let r = Simulator::new(&p, &c, &d, SimOptions { queries: 1_000, ..Default::default() })
+            .run(40.0)
+            .unwrap();
+        let b = &r.breakdown;
+        assert!(b.upload_s > 0.0 && b.hop_s > 0.0 && b.download_s > 0.0);
+        // Fig 5 decomposes processing vs data transfer (queueing aside):
+        // with main-memory comm the transfer share is large.
+        let frac = b.comm_total() / (b.comm_total() + b.exec_s);
+        assert!(frac > 0.15, "comm fraction {frac}");
+    }
+}

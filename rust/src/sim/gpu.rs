@@ -1,0 +1,211 @@
+//! Per-GPU runtime state for the spatial-multitasking model: SM quota
+//! ledger, MPS context count, global-memory capacity ledger (with
+//! same-stage model sharing, §VII-D), and the set of running kernels'
+//! bandwidth demands (the contention input to `CostModel`).
+
+use std::collections::HashMap;
+
+use crate::config::GpuSpec;
+
+/// Static admission error for a deployment.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AdmitError {
+    /// Σ SM quotas would exceed 100% of the device.
+    SmOversubscribed { have: f64, want: f64 },
+    /// Would exceed the MPS client-context limit (48 on Volta).
+    ContextLimit { have: u32, limit: u32 },
+    /// Global-memory capacity exceeded (F in Table II).
+    MemoryExceeded { have_bytes: f64, cap_bytes: f64 },
+}
+
+impl std::fmt::Display for AdmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmitError::SmOversubscribed { have, want } => {
+                write!(f, "SM oversubscribed: {have:.2} + {want:.2} > 1.0")
+            }
+            AdmitError::ContextLimit { have, limit } => {
+                write!(f, "MPS context limit: {have} >= {limit}")
+            }
+            AdmitError::MemoryExceeded { have_bytes, cap_bytes } => {
+                write!(f, "global memory exceeded: {have_bytes:.3e} > {cap_bytes:.3e} B")
+            }
+        }
+    }
+}
+
+/// One simulated GPU.
+#[derive(Debug, Clone)]
+pub struct SimGpu {
+    pub spec: GpuSpec,
+    /// Σ SM fractions of admitted instances.
+    sm_allocated: f64,
+    /// Number of admitted instances (MPS client contexts).
+    contexts: u32,
+    /// Memory charged per stage name: (model bytes charged once, per-
+    /// instance activation bytes × instance count).
+    mem_by_stage: HashMap<String, (f64, f64)>,
+    /// Bandwidth demand (bytes/s) of each currently-running kernel,
+    /// keyed by instance id.
+    running: HashMap<usize, f64>,
+}
+
+impl SimGpu {
+    pub fn new(spec: GpuSpec) -> Self {
+        SimGpu {
+            spec,
+            sm_allocated: 0.0,
+            contexts: 0,
+            mem_by_stage: HashMap::new(),
+            running: HashMap::new(),
+        }
+    }
+
+    /// Try to admit one instance of `stage_name` with the given SM quota
+    /// and memory needs. Same-stage instances on the same GPU share the
+    /// model weights (charged once), per §VII-D.
+    pub fn admit(
+        &mut self,
+        stage_name: &str,
+        sm_frac: f64,
+        model_bytes: f64,
+        act_bytes: f64,
+    ) -> Result<(), AdmitError> {
+        if self.sm_allocated + sm_frac > 1.0 + 1e-9 {
+            return Err(AdmitError::SmOversubscribed {
+                have: self.sm_allocated,
+                want: sm_frac,
+            });
+        }
+        if self.contexts >= self.spec.mps_contexts {
+            return Err(AdmitError::ContextLimit {
+                have: self.contexts,
+                limit: self.spec.mps_contexts,
+            });
+        }
+        let new_model = if self.mem_by_stage.contains_key(stage_name) {
+            0.0
+        } else {
+            model_bytes
+        };
+        let want = self.mem_used() + new_model + act_bytes;
+        if want > self.spec.mem_bytes as f64 {
+            return Err(AdmitError::MemoryExceeded {
+                have_bytes: want,
+                cap_bytes: self.spec.mem_bytes as f64,
+            });
+        }
+        let entry = self
+            .mem_by_stage
+            .entry(stage_name.to_string())
+            .or_insert((model_bytes, 0.0));
+        entry.1 += act_bytes;
+        self.sm_allocated += sm_frac;
+        self.contexts += 1;
+        Ok(())
+    }
+
+    /// Total global memory currently charged.
+    pub fn mem_used(&self) -> f64 {
+        self.mem_by_stage.values().map(|(m, a)| m + a).sum()
+    }
+
+    pub fn sm_allocated(&self) -> f64 {
+        self.sm_allocated
+    }
+
+    pub fn contexts(&self) -> u32 {
+        self.contexts
+    }
+
+    pub fn mem_free(&self) -> f64 {
+        self.spec.mem_bytes as f64 - self.mem_used()
+    }
+
+    pub fn sm_free(&self) -> f64 {
+        (1.0 - self.sm_allocated).max(0.0)
+    }
+
+    // ---- runtime kernel tracking (bandwidth contention) ----
+
+    /// Register a kernel starting on instance `inst` with the given
+    /// bandwidth demand; returns the Σ demand of the *other* kernels.
+    pub fn kernel_start(&mut self, inst: usize, bw_demand: f64) -> f64 {
+        let others: f64 = self.running.values().sum();
+        self.running.insert(inst, bw_demand);
+        others
+    }
+
+    pub fn kernel_end(&mut self, inst: usize) {
+        self.running.remove(&inst);
+    }
+
+    /// Σ bandwidth demand of all running kernels.
+    pub fn total_bw_demand(&self) -> f64 {
+        self.running.values().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuSpec;
+
+    fn gpu() -> SimGpu {
+        SimGpu::new(GpuSpec::rtx2080ti())
+    }
+
+    #[test]
+    fn admits_until_sm_full() {
+        let mut g = gpu();
+        for _ in 0..4 {
+            g.admit("s", 0.25, 1e9, 1e8).unwrap();
+        }
+        let err = g.admit("s", 0.25, 1e9, 1e8).unwrap_err();
+        assert!(matches!(err, AdmitError::SmOversubscribed { .. }));
+    }
+
+    #[test]
+    fn model_shared_within_stage() {
+        let mut g = gpu();
+        g.admit("a", 0.1, 2e9, 1e8).unwrap();
+        let one = g.mem_used();
+        g.admit("a", 0.1, 2e9, 1e8).unwrap();
+        // second instance adds only activations, not another model copy
+        assert!((g.mem_used() - (one + 1e8)).abs() < 1.0);
+        g.admit("b", 0.1, 2e9, 1e8).unwrap();
+        assert!((g.mem_used() - (one + 1e8 + 2e9 + 1e8)).abs() < 1.0);
+    }
+
+    #[test]
+    fn memory_capacity_enforced() {
+        let mut g = gpu();
+        // 11 GB card: a 9 GB model + 3 GB activations must not fit
+        let err = g.admit("big", 0.1, 9.0e9, 3.0e9).unwrap_err();
+        assert!(matches!(err, AdmitError::MemoryExceeded { .. }));
+        // but 9 GB + 1 GB fits
+        g.admit("big", 0.1, 9.0e9, 1.0e9).unwrap();
+    }
+
+    #[test]
+    fn context_limit_48() {
+        let mut g = gpu();
+        for i in 0..48 {
+            g.admit(&format!("s{i}"), 0.01, 1e6, 1e5).unwrap();
+        }
+        let err = g.admit("s48", 0.01, 1e6, 1e5).unwrap_err();
+        assert!(matches!(err, AdmitError::ContextLimit { .. }));
+    }
+
+    #[test]
+    fn kernel_tracking_sums_demands() {
+        let mut g = gpu();
+        assert_eq!(g.kernel_start(0, 100.0), 0.0);
+        assert_eq!(g.kernel_start(1, 50.0), 100.0);
+        assert_eq!(g.total_bw_demand(), 150.0);
+        g.kernel_end(0);
+        assert_eq!(g.total_bw_demand(), 50.0);
+        g.kernel_end(1);
+        assert_eq!(g.total_bw_demand(), 0.0);
+    }
+}

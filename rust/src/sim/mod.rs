@@ -1,0 +1,19 @@
+//! Spatial-multitasking GPU simulation substrate: cost model, GPU and
+//! PCIe resource state, and the discrete-event pipeline engine.
+//!
+//! This is the hardware substitution for the paper's 2×2080Ti / DGX-2
+//! testbeds (see DESIGN.md §2): the allocator and coordinator interact
+//! with it through exactly the quantities the paper's runtime sees
+//! (durations, bandwidth demands, memory footprints, PCIe transfers).
+
+pub mod cost;
+pub mod engine;
+pub mod gpu;
+pub mod pcie;
+
+pub use cost::CostModel;
+pub use engine::{
+    Deployment, InstancePlacement, SimOptions, SimReport, Simulator, TimeBreakdown,
+};
+pub use gpu::{AdmitError, SimGpu};
+pub use pcie::PcieBus;

@@ -1,0 +1,115 @@
+//! PCIe bus contention model (§VI-A).
+//!
+//! Each in-flight memcpy stream sustains at most `per_stream_bw`
+//! (3,150 MB/s for pageable memory); the bus as a whole sustains
+//! `effective_bw` (12,160 MB/s). With `k` concurrent streams, each gets
+//! `min(per_stream_bw, effective_bw / k)` — so up to ⌊12160/3150⌋ = 3
+//! streams run at full speed and further streams contend (Fig 9).
+//!
+//! Rates are evaluated at transfer start (start-time approximation); the
+//! engine registers/unregisters streams around each transfer.
+
+use crate::config::PcieSpec;
+
+/// Mutable bus state owned by the simulation engine.
+#[derive(Debug, Clone)]
+pub struct PcieBus {
+    spec: PcieSpec,
+    active_streams: u32,
+}
+
+impl PcieBus {
+    pub fn new(spec: PcieSpec) -> Self {
+        PcieBus { spec, active_streams: 0 }
+    }
+
+    pub fn active_streams(&self) -> u32 {
+        self.active_streams
+    }
+
+    /// Per-stream rate if one more stream joined right now.
+    pub fn rate_with_one_more(&self) -> f64 {
+        let k = (self.active_streams + 1) as f64;
+        self.spec.per_stream_bw.min(self.spec.effective_bw / k)
+    }
+
+    /// Begin a transfer of `bytes`; returns its duration in seconds.
+    /// Caller must `end_transfer()` when the completion event fires.
+    pub fn begin_transfer(&mut self, bytes: f64) -> f64 {
+        let rate = self.rate_with_one_more();
+        self.active_streams += 1;
+        self.spec.setup_s + bytes / rate
+    }
+
+    pub fn end_transfer(&mut self) {
+        debug_assert!(self.active_streams > 0, "unbalanced end_transfer");
+        self.active_streams = self.active_streams.saturating_sub(1);
+    }
+
+    /// Duration a transfer *would* take right now, without registering.
+    pub fn probe_transfer(&self, bytes: f64) -> f64 {
+        self.spec.setup_s + bytes / self.rate_with_one_more()
+    }
+
+    pub fn spec(&self) -> &PcieSpec {
+        &self.spec
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::testkit;
+
+    fn bus() -> PcieBus {
+        PcieBus::new(PcieSpec::default())
+    }
+
+    #[test]
+    fn solo_stream_runs_at_per_stream_rate() {
+        let mut b = bus();
+        let five_gb = 5.0e9;
+        let t = b.begin_transfer(five_gb);
+        // paper: a single pageable memcpy sustains 3,150 MB/s
+        testkit::assert_close(t, five_gb / 3.150e9, 0.01, 0.0);
+    }
+
+    #[test]
+    fn contention_knee_at_four_streams() {
+        // Fig 9: transfer time flat up to 3 instances, grows beyond.
+        let mut b = bus();
+        let bytes = 5.0e9;
+        let mut times = Vec::new();
+        for _ in 0..6 {
+            times.push(b.begin_transfer(bytes));
+        }
+        testkit::assert_close(times[0], times[2], 0.01, 0.0); // 1..3 equal
+        assert!(times[3] > times[2] * 1.02, "4th stream must contend");
+        assert!(times[5] > times[4]); // monotone under load
+    }
+
+    #[test]
+    fn end_transfer_restores_rate() {
+        let mut b = bus();
+        for _ in 0..5 {
+            b.begin_transfer(1.0e9);
+        }
+        let congested = b.probe_transfer(1.0e9);
+        for _ in 0..5 {
+            b.end_transfer();
+        }
+        assert_eq!(b.active_streams(), 0);
+        assert!(b.probe_transfer(1.0e9) < congested);
+    }
+
+    #[test]
+    fn aggregate_rate_capped_at_effective_bw() {
+        let mut b = bus();
+        for _ in 0..10 {
+            b.begin_transfer(1.0);
+        }
+        let per = b.spec().effective_bw / 10.0;
+        testkit::assert_close(b.rate_with_one_more(), b.spec().effective_bw / 11.0, 1e-9, 0.0);
+        assert!(per < b.spec().per_stream_bw);
+    }
+}

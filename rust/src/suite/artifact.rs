@@ -1,0 +1,132 @@
+//! The artifact benchmark family (§III-B, §VIII-E): compute-intensive
+//! `c1..c3`, memory-intensive `m1..m3`, and PCIe-intensive `p1..p3`
+//! microservices, composable into the 27 three-stage pipelines
+//! `p_i + c_j + m_k` the paper evaluates in Figs 18, 20, 21.
+//!
+//! Intensities scale by powers of two, matching Fig 3's c1<c2<c3 and
+//! m1<m2<m3 ordering (i > j ⇒ more intensive).
+
+use super::service::{Pipeline, StageKind, StageProfile};
+
+const KB: f64 = 1e3;
+const MB: f64 = 1e6;
+
+/// Compute-intensive artifact microservice `c<level>` (level 1..=3).
+pub fn compute(level: u32) -> StageProfile {
+    assert!((1..=3).contains(&level));
+    let scale = (1u32 << (level - 1)) as f64; // 1, 2, 4
+    StageProfile {
+        name: format!("c{level}"),
+        kind: StageKind::Compute,
+        flops_per_query: 3.0e9 * scale,
+        hbm_bytes_per_query: 60.0 * MB,
+        model_bytes: 180.0 * MB,
+        act_bytes_per_query: 6.0 * MB,
+        in_bytes_per_query: 64.0 * KB,
+        out_bytes_per_query: 64.0 * KB,
+        serial_frac: 0.05,
+        batch_half: 16.0,
+    }
+}
+
+/// Memory-bandwidth-intensive artifact microservice `m<level>`.
+pub fn memory(level: u32) -> StageProfile {
+    assert!((1..=3).contains(&level));
+    let scale = (1u32 << (level - 1)) as f64;
+    StageProfile {
+        name: format!("m{level}"),
+        kind: StageKind::Memory,
+        flops_per_query: 0.4e9,
+        hbm_bytes_per_query: 220.0 * MB * scale,
+        model_bytes: 120.0 * MB,
+        act_bytes_per_query: 10.0 * MB,
+        in_bytes_per_query: 64.0 * KB,
+        out_bytes_per_query: 32.0 * KB,
+        serial_frac: 0.10,
+        batch_half: 16.0,
+    }
+}
+
+/// PCIe-intensive artifact microservice `p<level>` (large input uploads).
+pub fn pcie(level: u32) -> StageProfile {
+    assert!((1..=3).contains(&level));
+    let scale = (1u32 << (level - 1)) as f64;
+    StageProfile {
+        name: format!("p{level}"),
+        kind: StageKind::Pcie,
+        flops_per_query: 0.5e9,
+        hbm_bytes_per_query: 40.0 * MB,
+        model_bytes: 90.0 * MB,
+        act_bytes_per_query: 4.0 * MB,
+        in_bytes_per_query: 1.0 * MB * scale,
+        out_bytes_per_query: 64.0 * KB,
+        serial_frac: 0.08,
+        batch_half: 16.0,
+    }
+}
+
+/// One synthetic three-stage pipeline `p_i + c_j + m_k` (paper naming).
+pub fn pipeline(pi: u32, cj: u32, mk: u32) -> Pipeline {
+    let mut p_stage = pcie(pi);
+    let mut c_stage = compute(cj);
+    let m_stage = memory(mk);
+    // chain payload sizes so the pipeline validates
+    p_stage.out_bytes_per_query = 64.0 * KB;
+    c_stage.in_bytes_per_query = 64.0 * KB;
+    Pipeline {
+        name: format!("p{pi}+c{cj}+m{mk}"),
+        stages: vec![p_stage, c_stage, m_stage],
+        qos_target_s: 0.300,
+    }
+}
+
+/// The 27 composite benchmarks, in the paper's enumeration order.
+pub fn all27() -> Vec<Pipeline> {
+    let mut out = Vec::with_capacity(27);
+    for pi in 1..=3 {
+        for cj in 1..=3 {
+            for mk in 1..=3 {
+                out.push(pipeline(pi, cj, mk));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intensity_ordering() {
+        assert!(compute(3).flops_per_query > compute(2).flops_per_query);
+        assert!(compute(2).flops_per_query > compute(1).flops_per_query);
+        assert!(memory(3).hbm_bytes_per_query > memory(1).hbm_bytes_per_query);
+        assert!(pcie(3).in_bytes_per_query > pcie(1).in_bytes_per_query);
+    }
+
+    #[test]
+    fn twenty_seven_valid_pipelines() {
+        let ps = all27();
+        assert_eq!(ps.len(), 27);
+        let mut names = std::collections::HashSet::new();
+        for p in &ps {
+            p.validate().unwrap_or_else(|e| panic!("{e}"));
+            assert_eq!(p.n_stages(), 3);
+            assert!(names.insert(p.name.clone()), "duplicate {}", p.name);
+        }
+        assert_eq!(ps[0].name, "p1+c1+m1");
+        assert_eq!(ps[26].name, "p3+c3+m3");
+    }
+
+    #[test]
+    fn kinds_are_distinguishable_on_roofline() {
+        assert!(compute(1).arithmetic_intensity() > 10.0 * memory(1).arithmetic_intensity());
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_level_zero() {
+        compute(0);
+    }
+}

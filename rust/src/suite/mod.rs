@@ -1,0 +1,10 @@
+//! Camelot suite: the microservice/pipeline domain model, the four
+//! real-system benchmarks (Table I), the 27 artifact benchmarks
+//! (§VIII-E), and the workload generators used by the evaluation.
+
+pub mod artifact;
+pub mod real;
+pub mod service;
+pub mod workload;
+
+pub use service::{Pipeline, StageKind, StageProfile};

@@ -1,0 +1,209 @@
+//! Microservice & pipeline abstraction — the domain model everything
+//! else (simulator, predictors, allocator, baselines, figures) consumes.
+//!
+//! A [`StageProfile`] is the *resource signature* of one GPU
+//! microservice: analytic FLOPs / HBM traffic / memory footprint / PCIe
+//! payloads as functions of batch size, plus an Amdahl serial fraction
+//! that shapes SM scalability (Fig 3a). A [`Pipeline`] chains stages and
+//! carries the end-to-end QoS target.
+
+/// Broad resource class of a microservice (paper §III-B taxonomy).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum StageKind {
+    /// MXU/ALU-bound (VGG, BERT, DC-GAN style dense stacks).
+    Compute,
+    /// Global-memory-bandwidth-bound (streaming artifact microservices).
+    Memory,
+    /// PCIe-transfer-bound (upload-heavy artifact microservices).
+    Pcie,
+}
+
+/// Analytic resource signature of one microservice stage.
+///
+/// All per-query quantities are for batch size 1; batched quantities are
+/// linear in batch (the paper's LR captures exactly this, §VII-A).
+#[derive(Debug, Clone)]
+pub struct StageProfile {
+    pub name: String,
+    pub kind: StageKind,
+    /// FLOPs per query (C(i,s)/s in Table II).
+    pub flops_per_query: f64,
+    /// HBM bytes moved per query during the kernel.
+    pub hbm_bytes_per_query: f64,
+    /// Weight footprint in bytes — shared by instances of the same stage
+    /// co-located on one GPU (§VII-D model sharing).
+    pub model_bytes: f64,
+    /// Activation/workspace bytes per query in flight (M(i,s) slope;
+    /// Fig 6 is linear in batch).
+    pub act_bytes_per_query: f64,
+    /// Input payload per query arriving over PCIe or from the previous
+    /// stage.
+    pub in_bytes_per_query: f64,
+    /// Output payload per query handed to the next stage.
+    pub out_bytes_per_query: f64,
+    /// Amdahl serial fraction: exec time ~ serial + (1-serial)/p.
+    /// Higher ⇒ poorer SM scaling (Fig 3a saturation).
+    pub serial_frac: f64,
+    /// Fixed per-kernel work expressed in query-equivalents: every
+    /// batch pays `batch_half` extra queries of compute/traffic (weight
+    /// reads, launch ramp, underfilled waves). This is what makes large
+    /// batches more efficient — the paper's motivation for batching.
+    pub batch_half: f64,
+}
+
+impl StageProfile {
+    /// Effective work units for a batch (affine: fixed + per-query).
+    #[inline]
+    pub fn work_units(&self, batch: u32) -> f64 {
+        batch as f64 + self.batch_half
+    }
+
+    /// Total FLOPs for a batch (C(i,s) in Table II) — affine in batch.
+    pub fn flops(&self, batch: u32) -> f64 {
+        self.flops_per_query * self.work_units(batch)
+    }
+
+    /// Global-memory footprint of one instance at batch `s`
+    /// (M(i,s) in Table II).
+    pub fn mem_footprint(&self, batch: u32) -> f64 {
+        self.model_bytes + self.act_bytes_per_query * batch as f64
+    }
+
+    /// HBM traffic for a batch (weights re-read per kernel ⇒ affine).
+    pub fn hbm_bytes(&self, batch: u32) -> f64 {
+        self.hbm_bytes_per_query * self.work_units(batch)
+    }
+
+    /// Arithmetic intensity (FLOPs / HBM byte) — classifies the stage on
+    /// the roofline.
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops_per_query / self.hbm_bytes_per_query.max(1.0)
+    }
+}
+
+/// An end-to-end user-facing service: a linear chain of stages
+/// (the paper's pipelines are 2–3 stages; the model supports any length).
+#[derive(Debug, Clone)]
+pub struct Pipeline {
+    pub name: String,
+    pub stages: Vec<StageProfile>,
+    /// End-to-end 99%-ile latency target, seconds.
+    pub qos_target_s: f64,
+}
+
+impl Pipeline {
+    pub fn n_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Payload size on the hop out of stage `i` (into `i + 1`).
+    pub fn hop_bytes(&self, i: usize, batch: u32) -> f64 {
+        self.stages[i].out_bytes_per_query * batch as f64
+    }
+
+    /// Sanity: adjacent stages must agree on payload sizes.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.stages.is_empty() {
+            return Err(format!("pipeline {} has no stages", self.name));
+        }
+        if !(self.qos_target_s > 0.0) {
+            return Err(format!("pipeline {} has no QoS target", self.name));
+        }
+        for (i, w) in self.stages.windows(2).enumerate() {
+            if (w[0].out_bytes_per_query - w[1].in_bytes_per_query).abs()
+                > 1e-6 * w[0].out_bytes_per_query.max(1.0)
+            {
+                return Err(format!(
+                    "pipeline {}: stage {} out ({} B) != stage {} in ({} B)",
+                    self.name,
+                    i,
+                    w[0].out_bytes_per_query,
+                    i + 1,
+                    w[1].in_bytes_per_query
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// How many SMs a fractional quota maps to (MPS percentages are coarse).
+pub fn quota_to_sms(sm_frac: f64, total_sms: u32) -> u32 {
+    ((sm_frac * total_sms as f64).round() as u32).clamp(1, total_sms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stage(name: &str, out_b: f64, in_b: f64) -> StageProfile {
+        StageProfile {
+            name: name.into(),
+            kind: StageKind::Compute,
+            flops_per_query: 1e9,
+            hbm_bytes_per_query: 1e6,
+            model_bytes: 1e8,
+            act_bytes_per_query: 1e5,
+            in_bytes_per_query: in_b,
+            out_bytes_per_query: out_b,
+            serial_frac: 0.05,
+            batch_half: 16.0,
+        }
+    }
+
+    #[test]
+    fn affine_in_batch() {
+        let s = stage("s", 10.0, 10.0);
+        // fixed work of batch_half query-equivalents, then linear
+        assert_eq!(s.flops(4), 20e9);
+        assert_eq!(s.flops(8) - s.flops(4), 4e9);
+        assert_eq!(s.hbm_bytes(16) - s.hbm_bytes(8), 8e6);
+        assert_eq!(s.mem_footprint(10), 1e8 + 1e6);
+        // batching amortizes the fixed work: throughput-per-query improves
+        assert!(s.flops(64) / 64.0 < s.flops(8) / 8.0);
+    }
+
+    #[test]
+    fn validate_catches_mismatched_hops() {
+        let p = Pipeline {
+            name: "bad".into(),
+            stages: vec![stage("a", 100.0, 10.0), stage("b", 5.0, 999.0)],
+            qos_target_s: 0.2,
+        };
+        assert!(p.validate().is_err());
+        let ok = Pipeline {
+            name: "ok".into(),
+            stages: vec![stage("a", 100.0, 10.0), stage("b", 5.0, 100.0)],
+            qos_target_s: 0.2,
+        };
+        assert!(ok.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_empty_and_no_qos() {
+        let p = Pipeline { name: "e".into(), stages: vec![], qos_target_s: 0.1 };
+        assert!(p.validate().is_err());
+        let p2 = Pipeline {
+            name: "q".into(),
+            stages: vec![stage("a", 1.0, 1.0)],
+            qos_target_s: 0.0,
+        };
+        assert!(p2.validate().is_err());
+    }
+
+    #[test]
+    fn quota_mapping_clamps() {
+        assert_eq!(quota_to_sms(0.0, 68), 1);
+        assert_eq!(quota_to_sms(1.0, 68), 68);
+        assert_eq!(quota_to_sms(0.5, 68), 34);
+    }
+
+    #[test]
+    fn intensity_orders_kinds() {
+        let mut c = stage("c", 1.0, 1.0);
+        c.flops_per_query = 1e10;
+        let mut m = stage("m", 1.0, 1.0);
+        m.hbm_bytes_per_query = 1e9;
+        assert!(c.arithmetic_intensity() > m.arithmetic_intensity());
+    }
+}

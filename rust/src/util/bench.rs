@@ -1,0 +1,98 @@
+//! Minimal benchmarking harness (the environment has no criterion).
+//!
+//! Measures wall-clock per iteration with warmup, reports
+//! min/median/mean, and prints rows `cargo bench` style. Used by the
+//! `benches/` targets (declared `harness = false`).
+
+use std::time::Instant;
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        format!(
+            "{:44} {:>12} {:>12} {:>12}   ({} iters)",
+            self.name,
+            humanize(self.mean_s),
+            humanize(self.median_s),
+            humanize(self.min_s),
+            self.iters
+        )
+    }
+}
+
+/// Pretty-print a duration in s/ms/µs/ns.
+pub fn humanize(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Run `f` repeatedly: a few warmup calls, then `iters` timed calls.
+/// Each call's return value passes through `black_box`.
+pub fn bench<T>(name: &str, iters: usize, mut f: impl FnMut() -> T) -> BenchResult {
+    assert!(iters > 0);
+    for _ in 0..iters.min(3) {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let result = BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: times.iter().sum::<f64>() / iters as f64,
+        median_s: times[iters / 2],
+        min_s: times[0],
+    };
+    println!("{}", result.row());
+    result
+}
+
+/// Print the standard header once per bench binary.
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "{:44} {:>12} {:>12} {:>12}",
+        "benchmark", "mean", "median", "min"
+    );
+    println!("{}", "-".repeat(90));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_positive_times() {
+        let r = bench("noop", 10, || 1 + 1);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.median_s && r.median_s <= r.mean_s * 10.0);
+    }
+
+    #[test]
+    fn humanize_ranges() {
+        assert!(humanize(2.0).ends_with(" s"));
+        assert!(humanize(2e-3).ends_with(" ms"));
+        assert!(humanize(2e-6).ends_with(" µs"));
+        assert!(humanize(2e-9).ends_with(" ns"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Cross-cutting utilities: deterministic RNG, minimal JSON, result
+//! tables/CSV, and the in-house property-testing kit.
+//!
+//! The build environment is fully offline with a small vendored crate
+//! set (no `rand`, `serde_json`, `proptest`, `criterion`), so these are
+//! implemented here from scratch — see DESIGN.md §Environment-Substitutions.
+
+pub mod bench;
+pub mod json;
+pub mod rng;
+pub mod table;
+pub mod testkit;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use table::{fnum, Table};

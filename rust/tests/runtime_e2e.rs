@@ -1,0 +1,109 @@
+//! Runtime + coordinator end-to-end integration over the real AOT
+//! artifacts (requires `make artifacts`; tests skip gracefully without).
+//!
+//! This is the seam where all three layers compose: Pallas kernels (L1)
+//! inside JAX stage graphs (L2), served through PJRT by the Rust
+//! coordinator (L3) with Python nowhere at runtime.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Duration;
+
+use camelot::coordinator::{Coordinator, CoordinatorConfig, ExecBackend, PjrtBackend};
+use camelot::runtime::Engine;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn manifest_lists_all_default_variants() {
+    let Some(dir) = artifacts() else { return };
+    let e = Engine::open(dir).unwrap();
+    // 10 stages × 4 batch sizes from python/compile/model.py
+    assert_eq!(e.manifest().len(), 40);
+    for m in e.manifest().iter() {
+        assert!(m.flops > 0.0, "{}: flops", m.name);
+        assert_eq!(m.input_shape.len(), 2);
+        assert_eq!(m.input_shape[0] as u32, m.batch);
+    }
+}
+
+#[test]
+fn every_pipeline_pair_composes_through_pjrt() {
+    // chain both stages of each real pipeline at batch 8; the output of
+    // stage 1 must be a valid input for stage 2
+    let Some(dir) = artifacts() else { return };
+    let mut e = Engine::open(dir).unwrap();
+    let pipelines = [
+        ("face_recognition", "fsrcnn_enhance"),
+        ("vgg_features", "lstm_caption"),
+        ("lstm_semantic", "dcgan_generate"),
+        ("bert_summarize", "nmt_translate"),
+    ];
+    for (s1, s2) in pipelines {
+        let n_in: usize = e.load_stage(s1, 8).unwrap().meta.input_shape.iter().product();
+        let input: Vec<f32> = (0..n_in).map(|i| ((i % 29) as f32 - 14.0) * 0.01).collect();
+        let mid = e.load_stage(s1, 8).unwrap().run(&input).unwrap();
+        let out = e.load_stage(s2, 8).unwrap().run(&mid).unwrap();
+        assert!(out.iter().all(|x| x.is_finite()), "{s1}->{s2}");
+        let expected: usize =
+            e.load_stage(s2, 8).unwrap().meta.output_shape.iter().product();
+        assert_eq!(out.len(), expected, "{s1}->{s2}");
+    }
+}
+
+#[test]
+fn pjrt_backend_batch_padding_is_invisible() {
+    // a 3-row batch through a batch-8 artifact must equal the same rows
+    // in a full batch (zero-padding must not leak into real rows)
+    let Some(dir) = artifacts() else { return };
+    let stages = vec!["fsrcnn_enhance".to_string()];
+    let b = PjrtBackend::new(dir, &stages, 8).unwrap();
+    let rows: Vec<Vec<f32>> = (0..8)
+        .map(|r| (0..256).map(|i| ((i + r * 7) % 11) as f32 * 0.1).collect())
+        .collect();
+    let all: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+    let full = b.execute(0, &all).unwrap();
+    let partial = b.execute(0, &all[..3]).unwrap();
+    for i in 0..3 {
+        assert_eq!(full[i], partial[i], "row {i} differs under padding");
+    }
+}
+
+#[test]
+fn coordinator_serves_real_pipeline_under_load() {
+    // the E2E serving path: Poisson-less burst of 48 queries through
+    // the 2-stage img-to-text proxy, all complete within a wall-clock
+    // budget and with finite outputs
+    let Some(dir) = artifacts() else { return };
+    let stages = vec!["vgg_features".to_string(), "lstm_caption".to_string()];
+    let backend = Arc::new(PjrtBackend::new(dir, &stages, 8).unwrap());
+    let c = Coordinator::launch(
+        CoordinatorConfig {
+            stages,
+            instances: vec![2, 2],
+            batch: 8,
+            max_wait: Duration::from_millis(10),
+        },
+        backend,
+    );
+    for _ in 0..48 {
+        c.submit(vec![0.25; 512]);
+    }
+    for _ in 0..48 {
+        let comp = c.recv_timeout(Duration::from_secs(60)).expect("completion");
+        assert_eq!(comp.output.len(), 512);
+        assert!(comp.output.iter().all(|x| x.is_finite()));
+    }
+    let hist = c.histogram();
+    assert_eq!(hist.count(), 48);
+    assert!(hist.p99() > 0.0);
+    c.shutdown();
+}
