@@ -1,6 +1,13 @@
 //! Shared measurement protocol for the figure harnesses: predictor
 //! training, peak-load ramp search on the simulator, and low-load
 //! resource planning — the same procedure for every system compared.
+//!
+//! The peak search is coarse-to-fine (see EXPERIMENTS.md): an analytic
+//! throughput bound brackets the ramp, quarter-precision simulations
+//! locate the neighborhood, and full-precision runs confirm it with
+//! speculative bisection probes fanned across threads.
+
+use std::cell::RefCell;
 
 use crate::allocator::{min_resource, AllocContext, SaParams};
 use crate::baselines::{plan, Planner};
@@ -8,8 +15,9 @@ use crate::comm::CommMode;
 use crate::config::ClusterSpec;
 use crate::deploy;
 use crate::predictor::{ProfileConfig, StagePredictor};
-use crate::sim::{Deployment, InstancePlacement, SimOptions, SimReport, Simulator};
+use crate::sim::{CostModel, Deployment, InstancePlacement, SimOptions, SimReport, Simulator};
 use crate::suite::{workload, Pipeline};
+use crate::util::par;
 
 /// Train the per-stage predictors for a pipeline (offline phase).
 pub fn train_predictors(pipeline: &Pipeline, cluster: &ClusterSpec) -> Vec<StagePredictor> {
@@ -26,25 +34,108 @@ pub fn sweep_opts() -> SimOptions {
     SimOptions { queries: 4_000, warmup_frac: 0.15, ..Default::default() }
 }
 
+/// Analytic (contention- and queueing-free) upper bound on a
+/// deployment's supported load: the bottleneck stage's aggregate solo
+/// throughput. The measured peak always sits below it, so it makes a
+/// tight initial bracket for the ramp search.
+pub fn analytic_peak_bound(
+    pipeline: &Pipeline,
+    cluster: &ClusterSpec,
+    deployment: &Deployment,
+) -> f64 {
+    let cost = CostModel::new(cluster.gpu.clone());
+    let batch = deployment.batch.max(1);
+    let mut per_stage = vec![0.0f64; pipeline.n_stages()];
+    for p in &deployment.placements {
+        per_stage[p.stage] += cost.throughput_solo(&pipeline.stages[p.stage], batch, p.sm_frac);
+    }
+    per_stage
+        .iter()
+        .fold(f64::INFINITY, |a, &b| a.min(b))
+        .max(1.0)
+}
+
 /// Measure the supported peak load of a fixed deployment: the highest
 /// Poisson rate whose simulated p99 meets the pipeline QoS.
+///
+/// Coarse-to-fine protocol (EXPERIMENTS.md §Peak-load search):
+/// 1. bracket with [`analytic_peak_bound`] — no simulated growth phase;
+/// 2. locate the peak with quarter-precision (≥ 1k-query) simulations;
+/// 3. confirm inside the coarse bracket at full precision — three
+///    speculative probes per round fanned across threads when called
+///    from a non-parallel context, plain bisection when already inside
+///    a sweep worker (`util::par::in_worker`); every full-precision
+///    report is cached so the final rate is never re-simulated.
+///
+/// Deterministic regardless of thread count: the probe set depends only
+/// on bracket values and every simulation seeds from `opts.seed`.
 pub fn peak_load(
     pipeline: &Pipeline,
     cluster: &ClusterSpec,
     deployment: &Deployment,
     opts: &SimOptions,
 ) -> (f64, SimReport) {
-    let sim = Simulator::new(pipeline, cluster, deployment, opts.clone());
     let qos = pipeline.qos_target_s;
-    let (peak, _trials) = workload::peak_load_search(
-        |rate| sim.run(rate).map(|r| r.p99()).unwrap_or(f64::INFINITY),
+    let sim = Simulator::new(pipeline, cluster, deployment, opts.clone());
+    let bound = analytic_peak_bound(pipeline, cluster, deployment);
+
+    // phase 1+2: cheap sims, loose tolerance, analytic top bracket
+    let coarse_queries = (opts.queries / 4).clamp(1_000.min(opts.queries.max(1)), opts.queries.max(1));
+    let coarse_opts = SimOptions { queries: coarse_queries, ..opts.clone() };
+    let coarse_sim = Simulator::new(pipeline, cluster, deployment, coarse_opts);
+    let (coarse, _) = workload::peak_load_search(
+        |rate| coarse_sim.run(rate).map(|r| r.p99()).unwrap_or(f64::INFINITY),
         qos,
-        50.0,
-        0.03,
+        bound,
+        0.10,
     );
-    let report = sim
-        .run(peak.max(1.0))
-        .unwrap_or_else(|e| panic!("sim at peak failed: {e}"));
+
+    // phase 3: full-precision confirm with speculative parallel probes.
+    // The cache is only touched from this thread (the par_map workers
+    // return their reports), hence RefCell rather than a lock.
+    let cache: RefCell<Vec<(u64, SimReport)>> = RefCell::new(Vec::new());
+    let eval_many = |rates: &[f64]| -> Vec<f64> {
+        let reports = par::par_map(rates, |_, &rate| match sim.run(rate) {
+            Ok(r) => (r.p99(), Some(r)),
+            Err(_) => (f64::INFINITY, None),
+        });
+        let mut cache = cache.borrow_mut();
+        reports
+            .into_iter()
+            .zip(rates)
+            .map(|((p99, rep), &rate)| {
+                if let Some(rep) = rep {
+                    cache.push((rate.to_bits(), rep));
+                }
+                p99
+            })
+            .collect()
+    };
+    // speculative 3-probe rounds only pay off when the probes actually
+    // fan across threads; inside an already-parallel sweep cell they
+    // would run serially, where plain bisection needs fewer sims
+    let probes = if par::in_worker() { 1 } else { 3 };
+    let (peak, _trials) = if coarse > 0.0 {
+        workload::peak_load_search_bracketed(
+            eval_many, qos, coarse * 0.7, coarse * 1.3, 0.03, probes,
+        )
+    } else {
+        // even the cheap sims found nothing feasible below the analytic
+        // bound — confirm (or overturn) at full precision from scratch
+        workload::peak_load_search_bracketed(eval_many, qos, 0.0, bound, 0.03, probes)
+    };
+
+    let final_rate = peak.max(1.0);
+    let report = {
+        let mut cache = cache.borrow_mut();
+        let key = final_rate.to_bits();
+        match cache.iter().position(|(k, _)| *k == key) {
+            Some(i) => cache.swap_remove(i).1,
+            None => sim
+                .run(final_rate)
+                .unwrap_or_else(|e| panic!("sim at peak failed: {e}")),
+        }
+    };
     (peak, report)
 }
 
@@ -190,6 +281,28 @@ mod tests {
         let (peak, report) = peak_load(&p, &c, &d, &opts);
         assert!(peak > 10.0, "peak {peak}");
         assert!(report.p99() <= p.qos_target_s * 1.2);
+    }
+
+    #[test]
+    fn analytic_bound_caps_measured_peak() {
+        let p = real::img_to_text();
+        let c = ClusterSpec::two_2080ti();
+        let d = Deployment {
+            placements: vec![
+                InstancePlacement { stage: 0, gpu: 0, sm_frac: 0.6 },
+                InstancePlacement { stage: 1, gpu: 1, sm_frac: 0.6 },
+            ],
+            batch: 16,
+            comm: CommMode::GlobalIpc,
+        };
+        let bound = analytic_peak_bound(&p, &c, &d);
+        assert!(bound > 1.0);
+        let opts = SimOptions { queries: 1_200, ..sweep_opts() };
+        let (peak, _) = peak_load(&p, &c, &d, &opts);
+        assert!(
+            peak <= bound * 1.05,
+            "measured peak {peak} must sit below the analytic bound {bound}"
+        );
     }
 
     #[test]

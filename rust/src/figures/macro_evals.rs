@@ -1,13 +1,18 @@
 //! Macro-benchmark figures: Fig 4 (investigation), Figs 14/15 (peak
 //! load on 2×2080Ti), Figs 16/17 (resource usage), Figs 18/20/21 (the
 //! 27 artifact pipelines), Fig 19 (DGX-2).
+//!
+//! Every harness fans its independent sweep cells (benchmark × batch ×
+//! load level) across cores with `util::par::par_map`; rows are
+//! collected back in deterministic input order, so the tables are
+//! identical regardless of thread count (see EXPERIMENTS.md).
 
-use crate::baselines::{plan, Planner};
 use crate::allocator::SaParams;
+use crate::baselines::{plan, Planner};
 use crate::config::ClusterSpec;
 use crate::sim::{SimOptions, Simulator};
-use crate::suite::{artifact, real};
-use crate::util::{fnum, Table};
+use crate::suite::{artifact, real, Pipeline};
+use crate::util::{fnum, par, Table};
 
 use super::common;
 
@@ -31,59 +36,78 @@ pub fn fig4() -> Vec<Table> {
         "Fig 4b: balanced deployment — offline vs co-located stage time, p99/QoS",
         &["benchmark", "s1_offline_ms", "s1_coloc_ms", "s2_offline_ms", "s2_coloc_ms", "p99_over_qos"],
     );
-    for p in real::all() {
-        let preds = common::train_predictors(&p, &cluster);
-        // 4a: standalone (stage i on GPU i, 100%)
-        if let Some((_, peak, _)) =
-            common::planner_peak(Planner::Standalone, &p, &cluster, &preds, 32, &opts)
-        {
-            let cost = crate::sim::CostModel::new(cluster.gpu.clone());
-            let s1 = cost.throughput_solo(&p.stages[0], 32, 1.0);
-            let s2 = cost.throughput_solo(&p.stages[1], 32, 1.0);
-            a.push(&[
-                p.name.clone(),
-                fnum(peak),
-                fnum(s1),
-                fnum(s2),
-                if s1 < s2 { "stage1" } else { "stage2" }.to_string(),
-            ]);
+    let pipelines = real::all();
+    let cells: Vec<(Option<Vec<String>>, Option<Vec<String>>)> =
+        par::par_map(&pipelines, |_, p| {
+            let preds = common::train_predictors(p, &cluster);
+            // 4a: standalone (stage i on GPU i, 100%)
+            let row_a = common::planner_peak(Planner::Standalone, p, &cluster, &preds, 32, &opts)
+                .map(|(_, peak, _)| {
+                    let cost = crate::sim::CostModel::new(cluster.gpu.clone());
+                    let s1 = cost.throughput_solo(&p.stages[0], 32, 1.0);
+                    let s2 = cost.throughput_solo(&p.stages[1], 32, 1.0);
+                    vec![
+                        p.name.clone(),
+                        fnum(peak),
+                        fnum(s1),
+                        fnum(s2),
+                        if s1 < s2 { "stage1" } else { "stage2" }.to_string(),
+                    ]
+                });
+            // 4b: balanced on a single GPU at its own predicted peak
+            let row_b = plan(Planner::Balanced, p, &cluster, &preds, 32, SaParams::default())
+                .ok()
+                .map(|d| {
+                    let single = ClusterSpec { num_gpus: 1, ..cluster.clone() };
+                    // the paper's protocol: tune offline (solo profiles, no
+                    // contention/comm), predict the peak from those numbers,
+                    // then run at that load and watch it violate QoS
+                    let cost = crate::sim::CostModel::new(cluster.gpu.clone());
+                    let offline: Vec<f64> = d
+                        .placements
+                        .iter()
+                        .map(|pl| cost.duration_solo(&p.stages[pl.stage], 32, pl.sm_frac))
+                        .collect();
+                    let offline_peak = d
+                        .placements
+                        .iter()
+                        .map(|pl| cost.throughput_solo(&p.stages[pl.stage], 32, pl.sm_frac))
+                        .fold(f64::INFINITY, f64::min);
+                    let overloaded = Simulator::new(p, &single, &d, opts.clone())
+                        .run(offline_peak.max(1.0))
+                        .unwrap();
+                    vec![
+                        p.name.clone(),
+                        fnum(offline[0] * 1e3),
+                        fnum(overloaded.stage_exec_mean_s[0] * 1e3),
+                        fnum(offline[1] * 1e3),
+                        fnum(overloaded.stage_exec_mean_s[1] * 1e3),
+                        format!("{:.2}", overloaded.p99() / p.qos_target_s),
+                    ]
+                });
+            (row_a, row_b)
+        });
+    for (row_a, row_b) in cells {
+        if let Some(r) = row_a {
+            a.row(&r);
         }
-        // 4b: balanced on a single GPU at its own predicted peak
-        if let Ok(d) = plan(Planner::Balanced, &p, &cluster, &preds, 32, SaParams::default()) {
-            let single = ClusterSpec { num_gpus: 1, ..cluster.clone() };
-            // the paper's protocol: tune offline (solo profiles, no
-            // contention/comm), predict the peak from those numbers,
-            // then run at that load and watch it violate QoS
-            let cost = crate::sim::CostModel::new(cluster.gpu.clone());
-            let offline: Vec<f64> = d
-                .placements
-                .iter()
-                .map(|pl| cost.duration_solo(&p.stages[pl.stage], 32, pl.sm_frac))
-                .collect();
-            let offline_peak = d
-                .placements
-                .iter()
-                .map(|pl| cost.throughput_solo(&p.stages[pl.stage], 32, pl.sm_frac))
-                .fold(f64::INFINITY, f64::min);
-            let overloaded = Simulator::new(&p, &single, &d, opts.clone())
-                .run(offline_peak.max(1.0))
-                .unwrap();
-            b.push(&[
-                p.name.clone(),
-                fnum(offline[0] * 1e3),
-                fnum(overloaded.stage_exec_mean_s[0] * 1e3),
-                fnum(offline[1] * 1e3),
-                fnum(overloaded.stage_exec_mean_s[1] * 1e3),
-                format!("{:.2}", overloaded.p99() / p.qos_target_s),
-            ]);
+        if let Some(r) = row_b {
+            b.row(&r);
         }
     }
     vec![a, b]
 }
 
+/// Per-cell output of the Fig 14/19 sweep.
+struct PeakCell {
+    row: Vec<String>,
+    alloc_row: Option<Vec<String>>,
+}
+
 /// Figs 14 + 15 (and 19 on the DGX-2 cluster): peak load per
 /// (benchmark, batch) for EA / Laius / Camelot, plus Camelot's chosen
-/// allocation.
+/// allocation. Cells run concurrently; the table order is the serial
+/// sweep order.
 pub fn peak_load_comparison(cluster: &ClusterSpec, tag: &str) -> Vec<Table> {
     let opts = common::sweep_opts();
     let mut peaks = Table::new(
@@ -94,57 +118,77 @@ pub fn peak_load_comparison(cluster: &ClusterSpec, tag: &str) -> Vec<Table> {
         &format!("Fig 15/20 ({tag}): Camelot allocation per test case"),
         &["benchmark", "batch", "instances", "sm_pct_per_instance"],
     );
-    for p in real::all() {
-        let preds = common::train_predictors(&p, cluster);
-        for batch in batches() {
-            let mut row = vec![p.name.clone(), batch.to_string()];
-            let mut ea_peak = 0.0;
-            let mut cam_peak = 0.0;
-            let mut cam_p99 = f64::NAN;
-            for planner in PEAK_PLANNERS {
-                match common::planner_peak(planner, &p, cluster, &preds, batch, &opts) {
-                    Some((d, peak, report)) => {
-                        row.push(fnum(peak));
-                        match planner {
-                            Planner::EvenAllocation => ea_peak = peak,
-                            Planner::Camelot => {
-                                cam_peak = peak;
-                                cam_p99 = report.p99() / p.qos_target_s;
-                                let ni = d.instances_per_stage(p.n_stages());
-                                let mut quotas: Vec<f64> =
-                                    vec![0.0; p.n_stages()];
-                                for pl in &d.placements {
-                                    quotas[pl.stage] = pl.sm_frac;
-                                }
-                                alloc.push(&[
-                                    p.name.clone(),
-                                    batch.to_string(),
-                                    format!("{ni:?}"),
-                                    format!(
-                                        "{:?}",
-                                        quotas
-                                            .iter()
-                                            .map(|q| (q * 100.0).round() as u32)
-                                            .collect::<Vec<_>>()
-                                    ),
-                                ]);
-                            }
-                            _ => {}
-                        }
-                    }
-                    None => row.push("-".to_string()),
-                }
-            }
-            row.push(if ea_peak > 0.0 {
-                format!("{:+.1}%", 100.0 * (cam_peak / ea_peak - 1.0))
-            } else {
-                "-".to_string()
-            });
-            row.push(format!("{cam_p99:.2}"));
-            peaks.row(&row);
+    let pipelines = real::all();
+    // offline phase once per pipeline, itself fanned across cores
+    let preds: Vec<_> = par::par_map(&pipelines, |_, p| common::train_predictors(p, cluster));
+    let cells: Vec<(usize, u32)> = (0..pipelines.len())
+        .flat_map(|pi| batches().into_iter().map(move |b| (pi, b)))
+        .collect();
+    let results: Vec<PeakCell> = par::par_map(&cells, |_, &(pi, batch)| {
+        peak_cell(&pipelines[pi], cluster, &preds[pi], batch, &opts)
+    });
+    for cell in results {
+        peaks.row(&cell.row);
+        if let Some(a) = cell.alloc_row {
+            alloc.row(&a);
         }
     }
     vec![peaks, alloc]
+}
+
+/// One (benchmark, batch) cell of the Fig 14/18/19 sweeps.
+fn peak_cell(
+    p: &Pipeline,
+    cluster: &ClusterSpec,
+    preds: &[crate::predictor::StagePredictor],
+    batch: u32,
+    opts: &SimOptions,
+) -> PeakCell {
+    let mut row = vec![p.name.clone(), batch.to_string()];
+    let mut alloc_row = None;
+    let mut ea_peak = 0.0;
+    let mut cam_peak = 0.0;
+    let mut cam_p99 = f64::NAN;
+    for planner in PEAK_PLANNERS {
+        match common::planner_peak(planner, p, cluster, preds, batch, opts) {
+            Some((d, peak, report)) => {
+                row.push(fnum(peak));
+                match planner {
+                    Planner::EvenAllocation => ea_peak = peak,
+                    Planner::Camelot => {
+                        cam_peak = peak;
+                        cam_p99 = report.p99() / p.qos_target_s;
+                        let ni = d.instances_per_stage(p.n_stages());
+                        let mut quotas: Vec<f64> = vec![0.0; p.n_stages()];
+                        for pl in &d.placements {
+                            quotas[pl.stage] = pl.sm_frac;
+                        }
+                        alloc_row = Some(vec![
+                            p.name.clone(),
+                            batch.to_string(),
+                            format!("{ni:?}"),
+                            format!(
+                                "{:?}",
+                                quotas
+                                    .iter()
+                                    .map(|q| (q * 100.0).round() as u32)
+                                    .collect::<Vec<_>>()
+                            ),
+                        ]);
+                    }
+                    _ => {}
+                }
+            }
+            None => row.push("-".to_string()),
+        }
+    }
+    row.push(if ea_peak > 0.0 {
+        format!("{:+.1}%", 100.0 * (cam_peak / ea_peak - 1.0))
+    } else {
+        "-".to_string()
+    });
+    row.push(format!("{cam_p99:.2}"));
+    PeakCell { row, alloc_row }
 }
 
 /// Fig 14 + 15 on the 2×2080Ti testbed.
@@ -166,22 +210,20 @@ pub fn fig16() -> Vec<Table> {
         "Fig 16: normalized resource usage and p99/QoS at 30% load",
         &["benchmark", "camelot_usage", "camelot_p99", "laius_usage", "laius_p99"],
     );
-    for p in real::all() {
-        let preds = common::train_predictors(&p, &cluster);
-        let Some((_, peak, _)) =
-            common::planner_peak(Planner::Camelot, &p, &cluster, &preds, 32, &opts)
-        else {
-            continue;
-        };
+    let pipelines = real::all();
+    let rows: Vec<Option<Vec<String>>> = par::par_map(&pipelines, |_, p| {
+        let preds = common::train_predictors(p, &cluster);
+        let (_, peak, _) =
+            common::planner_peak(Planner::Camelot, p, &cluster, &preds, 32, &opts)?;
         let low = peak * 0.3;
         let mut row = vec![p.name.clone()];
         for planner in [Planner::Camelot, Planner::Laius] {
-            match common::plan_low_load(planner, &p, &cluster, &preds, 32, low) {
+            match common::plan_low_load(planner, p, &cluster, &preds, 32, low) {
                 Some(d) => {
-                    let r = Simulator::new(&p, &cluster, &d, opts.clone()).run(low.max(1.0));
+                    let r = Simulator::new(p, &cluster, &d, opts.clone()).run(low.max(1.0));
                     match r {
                         Ok(rep) => {
-                            row.push(fnum(common::normalized_usage(&p, &d)));
+                            row.push(fnum(common::normalized_usage(p, &d)));
                             row.push(format!("{:.2}", rep.p99() / p.qos_target_s));
                         }
                         Err(_) => {
@@ -196,9 +238,19 @@ pub fn fig16() -> Vec<Table> {
                 }
             }
         }
+        Some(row)
+    });
+    for row in rows.into_iter().flatten() {
         t.row(&row);
     }
     vec![t]
+}
+
+/// Per-benchmark output of the Fig 17 sweep.
+struct Fig17Out {
+    rows: Vec<Vec<String>>,
+    violations: u32,
+    cases: u32,
 }
 
 /// Fig 17: Camelot's usage + p99 across load levels, and the Camelot-NC
@@ -210,8 +262,6 @@ pub fn fig17() -> Vec<Table> {
         "Fig 17: usage and p99 across load levels; Camelot-NC ablation",
         &["benchmark", "load_pct", "usage", "p99_over_qos", "nc_p99_over_qos"],
     );
-    let mut violations = 0;
-    let mut cases = 0;
     // real benchmarks + the memory-heavy artifact composites, where the
     // bandwidth constraint has the most to protect (on this substrate
     // the real pipelines' bandwidth pressure is milder than the
@@ -221,24 +271,22 @@ pub fn fig17() -> Vec<Table> {
     benches.push(artifact::pipeline(2, 2, 3));
     benches.push(artifact::pipeline(1, 3, 3));
     benches.push(artifact::pipeline(3, 1, 3));
-    for p in benches {
-        let preds = common::train_predictors(&p, &cluster);
-        let Some((_, peak, _)) =
-            common::planner_peak(Planner::Camelot, &p, &cluster, &preds, 32, &opts)
-        else {
-            continue;
-        };
+    let outs: Vec<Option<Fig17Out>> = par::par_map(&benches, |_, p| {
+        let preds = common::train_predictors(p, &cluster);
+        let (_, peak, _) =
+            common::planner_peak(Planner::Camelot, p, &cluster, &preds, 32, &opts)?;
+        let mut out = Fig17Out { rows: Vec::new(), violations: 0, cases: 0 };
         for load_pct in [50u32, 95] {
             let load = peak * load_pct as f64 / 100.0;
-            let cam = common::plan_low_load(Planner::Camelot, &p, &cluster, &preds, 32, load);
-            let nc = common::plan_low_load(Planner::CamelotNC, &p, &cluster, &preds, 32, load);
+            let cam = common::plan_low_load(Planner::Camelot, p, &cluster, &preds, 32, load);
+            let nc = common::plan_low_load(Planner::CamelotNC, p, &cluster, &preds, 32, load);
             let mut row = vec![p.name.clone(), load_pct.to_string()];
             match cam {
                 Some(d) => {
-                    let rep = Simulator::new(&p, &cluster, &d, opts.clone())
+                    let rep = Simulator::new(p, &cluster, &d, opts.clone())
                         .run(load.max(1.0))
                         .unwrap();
-                    row.push(fnum(common::normalized_usage(&p, &d)));
+                    row.push(fnum(common::normalized_usage(p, &d)));
                     row.push(format!("{:.2}", rep.p99() / p.qos_target_s));
                 }
                 None => {
@@ -248,24 +296,41 @@ pub fn fig17() -> Vec<Table> {
             }
             match nc {
                 Some(d) => {
-                    let rep = Simulator::new(&p, &cluster, &d, opts.clone())
+                    let rep = Simulator::new(p, &cluster, &d, opts.clone())
                         .run(load.max(1.0))
                         .unwrap();
                     let ratio = rep.p99() / p.qos_target_s;
-                    cases += 1;
+                    out.cases += 1;
                     if ratio > 1.0 {
-                        violations += 1;
+                        out.violations += 1;
                     }
                     row.push(format!("{ratio:.2}"));
                 }
                 None => row.push("-".into()),
             }
-            t.row(&row);
+            out.rows.push(row);
         }
+        Some(out)
+    });
+    let mut violations = 0;
+    let mut cases = 0;
+    for out in outs.into_iter().flatten() {
+        for row in &out.rows {
+            t.row(row);
+        }
+        violations += out.violations;
+        cases += out.cases;
     }
     let mut summary = Table::new("Fig 17 summary", &["metric", "value"]);
     summary.push(&["NC QoS violations".to_string(), format!("{violations}/{cases}")]);
     vec![t, summary]
+}
+
+/// Per-pipeline output of the Fig 18/20/21 sweep.
+struct ArtifactCell {
+    row: Vec<String>,
+    alloc_row: Option<Vec<String>>,
+    lowload_row: Option<Vec<String>>,
 }
 
 /// Figs 18/20/21: the 27 artifact pipelines — peak loads (EA / Laius /
@@ -286,13 +351,15 @@ pub fn fig18() -> Vec<Table> {
         "Fig 21: low-load (30%) usage and p99/QoS for the artifact pipelines",
         &["benchmark", "usage", "p99_over_qos"],
     );
-    for p in artifact::all27() {
-        let preds = common::train_predictors(&p, &cluster);
+    let pipelines = artifact::all27();
+    let cells: Vec<ArtifactCell> = par::par_map(&pipelines, |_, p| {
+        let preds = common::train_predictors(p, &cluster);
         let mut row = vec![p.name.clone()];
+        let mut alloc_row = None;
         let mut ea_peak = 0.0;
         let mut cam_peak = 0.0;
         for planner in PEAK_PLANNERS {
-            match common::planner_peak(planner, &p, &cluster, &preds, batch, &opts) {
+            match common::planner_peak(planner, p, &cluster, &preds, batch, &opts) {
                 Some((d, peak, _)) => {
                     row.push(fnum(peak));
                     match planner {
@@ -304,7 +371,7 @@ pub fn fig18() -> Vec<Table> {
                             for pl in &d.placements {
                                 quotas[pl.stage] = pl.sm_frac;
                             }
-                            alloc.push(&[
+                            alloc_row = Some(vec![
                                 p.name.clone(),
                                 format!("{ni:?}"),
                                 format!(
@@ -327,21 +394,32 @@ pub fn fig18() -> Vec<Table> {
         } else {
             "-".into()
         });
-        peaks.row(&row);
         // Fig 21
         let low = cam_peak * 0.3;
+        let mut lowload_row = None;
         if low > 0.0 {
             if let Some(d) =
-                common::plan_low_load(Planner::Camelot, &p, &cluster, &preds, batch, low)
+                common::plan_low_load(Planner::Camelot, p, &cluster, &preds, batch, low)
             {
-                if let Ok(rep) = Simulator::new(&p, &cluster, &d, opts.clone()).run(low.max(1.0)) {
-                    lowload.push(&[
+                if let Ok(rep) = Simulator::new(p, &cluster, &d, opts.clone()).run(low.max(1.0))
+                {
+                    lowload_row = Some(vec![
                         p.name.clone(),
-                        fnum(common::normalized_usage(&p, &d)),
+                        fnum(common::normalized_usage(p, &d)),
                         format!("{:.2}", rep.p99() / p.qos_target_s),
                     ]);
                 }
             }
+        }
+        ArtifactCell { row, alloc_row, lowload_row }
+    });
+    for cell in cells {
+        peaks.row(&cell.row);
+        if let Some(a) = cell.alloc_row {
+            alloc.row(&a);
+        }
+        if let Some(l) = cell.lowload_row {
+            lowload.row(&l);
         }
     }
     vec![peaks, alloc, lowload]

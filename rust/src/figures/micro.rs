@@ -14,7 +14,7 @@ use crate::predictor::{
 };
 use crate::sim::{CostModel, PcieBus, SimOptions};
 use crate::suite::{artifact, real};
-use crate::util::{fnum, Table};
+use crate::util::{fnum, par, Table};
 
 use super::common;
 
@@ -51,51 +51,53 @@ pub fn fig3() -> Vec<Table> {
 
 /// Fig 5: end-to-end latency breakdown under the default (main-memory)
 /// communication — the data-transfer share the paper reports as
-/// 32.4–46.9%.
+/// 32.4–46.9%. One sweep cell per benchmark, fanned across cores.
 pub fn fig5() -> Vec<Table> {
     let cluster = ClusterSpec::two_2080ti();
     let mut t = Table::new(
         "Fig 5: latency breakdown per query (main-memory comm, EA deployment)",
         &["benchmark", "exec_ms", "upload_ms", "hop_ms", "download_ms", "comm_pct"],
     );
-    for p in real::all() {
-        let preds = common::train_predictors(&p, &cluster);
+    let pipelines = real::all();
+    let rows: Vec<Option<Vec<String>>> = par::par_map(&pipelines, |_, p| {
+        let preds = common::train_predictors(p, &cluster);
         let opts = SimOptions { queries: 3_000, ..common::sweep_opts() };
-        let Some((_, peak, _)) = common::planner_peak(
+        let (_, peak, _) = common::planner_peak(
             Planner::EvenAllocation,
-            &p,
+            p,
             &cluster,
             &preds,
             32,
             &opts,
-        ) else {
-            continue;
-        };
+        )?;
         // measure at 70% of peak: loaded but stable
         let d = crate::baselines::plan(
             Planner::EvenAllocation,
-            &p,
+            p,
             &cluster,
             &preds,
             32,
             crate::allocator::SaParams::default(),
         )
         .unwrap();
-        let r = crate::sim::Simulator::new(&p, &cluster, &d, opts)
+        let r = crate::sim::Simulator::new(p, &cluster, &d, opts)
             .run((peak * 0.7).max(1.0))
             .unwrap();
         // completion unit is the request (= batch queries)
         let n = r.completed as f64 * 32.0;
         let bd = &r.breakdown;
         let comm = bd.comm_total();
-        t.push(&[
+        Some(vec![
             p.name.clone(),
             fnum(bd.exec_s / n * 1e3),
             fnum(bd.upload_s / n * 1e3),
             fnum(bd.hop_s / n * 1e3),
             fnum(bd.download_s / n * 1e3),
             format!("{:.1}", 100.0 * comm / (comm + bd.exec_s)),
-        ]);
+        ])
+    });
+    for row in rows.into_iter().flatten() {
+        t.row(&row);
     }
     vec![t]
 }

@@ -103,6 +103,62 @@ impl CostModel {
     pub fn throughput_solo(&self, stage: &StageProfile, batch: u32, p: f64) -> f64 {
         batch as f64 / self.duration_solo(stage, batch, p)
     }
+
+    /// Precompute the per-instance cost quantities for an instance whose
+    /// (stage, batch, SM quota) are fixed for the lifetime of a
+    /// simulation — the engine's hot path then pays only the contention
+    /// terms per kernel launch instead of re-deriving the roofline and
+    /// Amdahl quantities on every event.
+    ///
+    /// Contract: [`InstanceCost::duration_contended`] is bit-identical
+    /// to [`CostModel::duration_contended`] for the same inputs (the
+    /// golden-equivalence tests depend on this).
+    pub fn instance_cost(&self, stage: &StageProfile, batch: u32, p: f64) -> InstanceCost {
+        InstanceCost {
+            launch_s: self.gpu.launch_overhead_s,
+            mem_bw: self.gpu.mem_bw,
+            compute_time_s: self.compute_time(stage, batch, p),
+            mem_time_solo_s: self.mem_time_solo(stage, batch, p),
+            bw_demand: self.bw_demand(stage, batch, p),
+        }
+    }
+}
+
+/// Frozen cost quantities of one placed instance (fixed stage, batch
+/// size, and SM quota). Built once per simulation by
+/// [`CostModel::instance_cost`]; evaluated per kernel launch.
+#[derive(Debug, Clone, Copy)]
+pub struct InstanceCost {
+    pub launch_s: f64,
+    pub mem_bw: f64,
+    /// Amdahl-scaled compute time at the instance's quota.
+    pub compute_time_s: f64,
+    /// Solo memory-side time at the instance's quota.
+    pub mem_time_solo_s: f64,
+    /// Intrinsic bandwidth demand rate (bytes/s) while running.
+    pub bw_demand: f64,
+}
+
+impl InstanceCost {
+    /// Same expression tree as [`CostModel::duration_contended`], with
+    /// the quota-dependent factors taken from the cache — identical
+    /// floating-point operations in identical order, so the result is
+    /// bit-for-bit the value the per-event path computes.
+    #[inline]
+    pub fn duration_contended(&self, other_demand: f64) -> f64 {
+        let total = self.bw_demand + other_demand;
+        let cong = (other_demand / self.mem_bw).min(1.0);
+        let sat_factor = (total / self.mem_bw).max(1.0);
+        let t_c = self.compute_time_s * (1.0 + CACHE_INTERFERENCE * cong);
+        let t_m = self.mem_time_solo_s * sat_factor * (1.0 + MEM_INTERFERENCE * cong);
+        self.launch_s + t_c.max(t_m)
+    }
+
+    /// Solo duration (no co-runners) from the cached quantities.
+    #[inline]
+    pub fn duration_solo(&self) -> f64 {
+        self.launch_s + self.compute_time_s.max(self.mem_time_solo_s)
+    }
 }
 
 #[cfg(test)]
@@ -193,6 +249,40 @@ mod tests {
             assert!(f >= prev);
             prev = f;
         }
+    }
+
+    #[test]
+    fn instance_cost_cache_is_bit_exact() {
+        // The engine's per-instance cache must reproduce the per-event
+        // CostModel path bit-for-bit, including the contention terms.
+        let m = model();
+        crate::util::testkit::forall(17, 400, |r| {
+            (
+                r.range(1, 3) as u32,
+                r.range(1, 3) as u32,
+                1 + r.below(256) as u32,
+                r.range_f64(0.01, 1.0),
+                r.range_f64(0.0, 2.0e12),
+            )
+        }, |&(lvl, mem_lvl, batch, p, other)| {
+            for stage in [artifact::compute(lvl), artifact::memory(mem_lvl)] {
+                let cached = m.instance_cost(&stage, batch, p);
+                let a = cached.duration_contended(other);
+                let b = m.duration_contended(&stage, batch, p, other);
+                if a.to_bits() != b.to_bits() {
+                    return false;
+                }
+                if cached.duration_solo().to_bits()
+                    != m.duration_solo(&stage, batch, p).to_bits()
+                {
+                    return false;
+                }
+                if cached.bw_demand.to_bits() != m.bw_demand(&stage, batch, p).to_bits() {
+                    return false;
+                }
+            }
+            true
+        });
     }
 
     #[test]

@@ -8,6 +8,19 @@
 //! communication mechanism per hop (§VI). The engine is the measurement
 //! substrate for every figure harness and for the coordinator's ramp
 //! searches.
+//!
+//! Two implementations share the same semantics:
+//!
+//! * [`Simulator::run`] — the optimized hot path: per-instance cost
+//!   quantities are frozen once ([`cost::InstanceCost`]), events carry
+//!   `u32` request handles instead of heap-allocated `Vec<u32>`
+//!   payloads, Poisson arrivals stream lazily (no horizon guessing),
+//!   and per-GPU contention is a sorted vector summed in instance-id
+//!   order.
+//! * [`Simulator::run_reference`] — the seed algorithm, kept as the
+//!   golden reference: per-event [`CostModel`] calls, materialized
+//!   arrival vector, vector-payload events. `tests/golden_engine.rs`
+//!   asserts both produce identical results for fixed seeds.
 
 use std::cmp::Ordering;
 use std::collections::{BinaryHeap, VecDeque};
@@ -18,7 +31,7 @@ use crate::metrics::LatencyHistogram;
 use crate::suite::workload::PoissonArrivals;
 use crate::suite::Pipeline;
 
-use super::cost::CostModel;
+use super::cost::{CostModel, InstanceCost};
 use super::gpu::SimGpu;
 use super::pcie::PcieBus;
 
@@ -72,7 +85,9 @@ impl Deployment {
 /// processing user queries": clients submit batched queries, and the
 /// coordinator's own dynamic batcher — exercised by the real
 /// `coordinator::Batcher` — is already full at the loads the peak search
-/// measures).
+/// measures). Batching *timeouts* therefore live in the coordinator's
+/// `Batcher`, not here: the request-granular engine issues each request
+/// as soon as its instance frees up.
 #[derive(Debug, Clone)]
 pub struct SimOptions {
     pub seed: u64,
@@ -80,14 +95,11 @@ pub struct SimOptions {
     pub queries: usize,
     /// Fraction of earliest completions excluded from the histogram.
     pub warmup_frac: f64,
-    /// Retained for the coordinator-side batcher; the request-granular
-    /// engine issues immediately.
-    pub max_wait_frac: f64,
 }
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { seed: 42, queries: 6_000, warmup_frac: 0.1, max_wait_frac: 0.15 }
+        SimOptions { seed: 42, queries: 6_000, warmup_frac: 0.1 }
     }
 }
 
@@ -132,35 +144,27 @@ impl SimReport {
     }
 }
 
-#[derive(Debug, Clone, PartialEq)]
-enum Ev {
-    Arrival { qid: u32 },
-    ExecDone { inst: usize },
-    /// Release one PCIe stream registered at transfer start.
-    BusRelease,
-    /// Deliver queries to `target` (None = final completion).
-    XferDone { target: Option<usize>, qids: Vec<u32> },
-}
-
+/// Time-and-sequence-ordered heap entry (min-heap on time, then on
+/// insertion sequence for deterministic tie-breaking).
 #[derive(Debug)]
-struct Event {
+struct Event<E> {
     t: f64,
     seq: u64,
-    ev: Ev,
+    ev: E,
 }
 
-impl PartialEq for Event {
+impl<E> PartialEq for Event<E> {
     fn eq(&self, other: &Self) -> bool {
         self.t == other.t && self.seq == other.seq
     }
 }
-impl Eq for Event {}
-impl PartialOrd for Event {
+impl<E> Eq for Event<E> {}
+impl<E> PartialOrd for Event<E> {
     fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
         Some(self.cmp(other))
     }
 }
-impl Ord for Event {
+impl<E> Ord for Event<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // min-heap: reverse on time, then sequence for determinism
         other
@@ -171,14 +175,99 @@ impl Ord for Event {
     }
 }
 
-struct Instance {
+/// Join-shortest-queue routing counting the in-flight request,
+/// preferring same-GPU targets (IPC locality) and breaking remaining
+/// ties round-robin so idle instances share work (the paper's scheduler
+/// routes across instances). Shared by both engine implementations so
+/// their trajectories are identical.
+fn route_by<Fl, Fg>(
+    cands: &[usize],
+    from_gpu: Option<usize>,
+    rr: &mut usize,
+    load: Fl,
+    gpu_of: Fg,
+) -> usize
+where
+    Fl: Fn(usize) -> usize,
+    Fg: Fn(usize) -> usize,
+{
+    *rr = rr.wrapping_add(1);
+    let start = *rr % cands.len();
+    let mut best = cands[start];
+    let mut best_key = (usize::MAX, true);
+    for k in 0..cands.len() {
+        let i = cands[(start + k) % cands.len()];
+        let cross = from_gpu.map_or(false, |g| gpu_of(i) != g);
+        let key = (load(i), cross);
+        if key < best_key {
+            best_key = key;
+            best = i;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------
+// Optimized engine
+// ---------------------------------------------------------------------
+
+/// Optimized event payloads: request ids are plain `u32` handles into
+/// the arrival-time arena — no per-event heap allocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ev {
+    /// Request `rid` enters the system (schedules the next arrival).
+    Arrival { rid: u32 },
+    ExecDone { inst: usize },
+    /// Release one PCIe stream registered at transfer start.
+    BusRelease,
+    /// Deliver request `rid` to instance `target`.
+    Deliver { target: usize, rid: u32 },
+    /// Request `rid` leaves the system.
+    Complete { rid: u32 },
+}
+
+/// Per-instance runtime state with the frozen cost quantities inline.
+struct Inst {
     stage: usize,
     gpu: usize,
-    sm_frac: f64,
-    queue: VecDeque<(u32, f64)>, // (qid, ready time)
+    queue: VecDeque<(u32, f64)>, // (rid, ready time)
     busy: bool,
-    /// qids of the batch currently executing (while busy)
-    exec: Option<Vec<u32>>,
+    /// rid of the request currently executing (valid while busy)
+    exec_rid: u32,
+    cost: InstanceCost,
+    /// `in_bytes_per_query * batch`, frozen (stage-0 ingress payload).
+    in_bytes_batch: f64,
+    /// `out_bytes_per_query * batch`, frozen (hop/egress payload).
+    out_bytes_batch: f64,
+}
+
+/// Per-GPU ledger of running kernels' bandwidth demands, kept sorted by
+/// instance id so the Σ-demand reduction accumulates in the same order
+/// as the reference engine's BTreeMap (bit-identical f64 sums).
+#[derive(Default)]
+struct GpuLedger {
+    running: Vec<(usize, f64)>,
+}
+
+impl GpuLedger {
+    /// Register a starting kernel; returns Σ demand of the others.
+    #[inline]
+    fn kernel_start(&mut self, inst: usize, demand: f64) -> f64 {
+        let mut others = 0.0;
+        for &(_, d) in &self.running {
+            others += d;
+        }
+        let pos = self.running.partition_point(|&(i, _)| i < inst);
+        self.running.insert(pos, (inst, demand));
+        others
+    }
+
+    #[inline]
+    fn kernel_end(&mut self, inst: usize) {
+        if let Some(pos) = self.running.iter().position(|&(i, _)| i == inst) {
+            self.running.remove(pos);
+        }
+    }
 }
 
 /// The engine itself. Build with [`Simulator::new`], run with
@@ -232,8 +321,234 @@ impl<'a> Simulator<'a> {
         Ok(gpus)
     }
 
-    /// Run the simulation at the given offered load.
+    /// Run the simulation at the given offered load (optimized engine).
     pub fn run(&self, offered_qps: f64) -> Result<SimReport, String> {
+        self.admit()?;
+        let cost = CostModel::new(self.cluster.gpu.clone());
+        let mut bus = PcieBus::new(self.cluster.pcie.clone());
+        let ipc = &self.cluster.ipc;
+        let batch = self.deployment.batch.max(1) as usize;
+        let batch_f = batch as f64;
+        // arrival unit: one request = `batch` queries
+        let n_requests = (self.opts.queries + batch - 1) / batch;
+        let req_rate = offered_qps / batch as f64;
+        let n_stages = self.pipeline.n_stages();
+        let last_stage = n_stages - 1;
+
+        // freeze every per-instance quantity the hot loop would
+        // otherwise re-derive per event
+        let mut instances: Vec<Inst> = self
+            .deployment
+            .placements
+            .iter()
+            .map(|p| {
+                let stage = &self.pipeline.stages[p.stage];
+                Inst {
+                    stage: p.stage,
+                    gpu: p.gpu,
+                    queue: VecDeque::with_capacity(16),
+                    busy: false,
+                    exec_rid: 0,
+                    cost: cost.instance_cost(stage, batch as u32, p.sm_frac),
+                    in_bytes_batch: stage.in_bytes_per_query * batch as f64,
+                    out_bytes_batch: stage.out_bytes_per_query * batch as f64,
+                }
+            })
+            .collect();
+        let mut by_stage: Vec<Vec<usize>> = vec![Vec::new(); n_stages];
+        for (i, inst) in instances.iter().enumerate() {
+            by_stage[inst.stage].push(i);
+        }
+        let mut ledgers: Vec<GpuLedger> = (0..self.cluster.num_gpus)
+            .map(|_| GpuLedger::default())
+            .collect();
+
+        // lazy open-loop arrivals: exactly one pending Arrival event at
+        // a time; timestamps land in the arena as they are drawn
+        let mut gen = PoissonArrivals::new(req_rate, self.opts.seed);
+        let mut arrivals: Vec<f64> = Vec::with_capacity(n_requests);
+
+        let mut heap: BinaryHeap<Event<Ev>> =
+            BinaryHeap::with_capacity(instances.len() * 4 + 16);
+        let mut seq = 0u64;
+        let push = |heap: &mut BinaryHeap<Event<Ev>>, seq: &mut u64, t: f64, ev: Ev| {
+            *seq += 1;
+            heap.push(Event { t, seq: *seq, ev });
+        };
+        if n_requests > 0 {
+            let t = gen.next_time();
+            arrivals.push(t);
+            push(&mut heap, &mut seq, t, Ev::Arrival { rid: 0 });
+        }
+
+        let mut hist = LatencyHistogram::new();
+        let mut breakdown = TimeBreakdown::default();
+        let mut stage_exec_sum = vec![0.0f64; n_stages];
+        let mut stage_exec_n = vec![0u64; n_stages];
+        let warmup = (n_requests as f64 * self.opts.warmup_frac) as u64;
+        let mut completed = 0u64;
+        let mut first_counted_t = f64::NAN;
+        let mut last_t = 0.0f64;
+        let mut rr_counters = vec![0usize; n_stages];
+
+        // issue a request on `inst_id` if it is idle with queued work
+        #[allow(clippy::too_many_arguments)]
+        fn try_issue(
+            inst_id: usize,
+            now: f64,
+            instances: &mut [Inst],
+            ledgers: &mut [GpuLedger],
+            bus: &mut PcieBus,
+            batch_f: f64,
+            heap: &mut BinaryHeap<Event<Ev>>,
+            seq: &mut u64,
+            breakdown: &mut TimeBreakdown,
+            stage_exec_sum: &mut [f64],
+            stage_exec_n: &mut [u64],
+        ) {
+            let push = |heap: &mut BinaryHeap<Event<Ev>>, seq: &mut u64, t: f64, ev: Ev| {
+                *seq += 1;
+                heap.push(Event { t, seq: *seq, ev });
+            };
+            let inst = &mut instances[inst_id];
+            if inst.busy || inst.queue.is_empty() {
+                return;
+            }
+            // one request (= `batch` queries) per execution
+            let (rid, ready) = inst.queue.pop_front().unwrap();
+            breakdown.queue_s += (now - ready) * batch_f;
+            inst.busy = true;
+            inst.exec_rid = rid;
+
+            let gpu = inst.gpu;
+            let stage_idx = inst.stage;
+            let icost = inst.cost;
+            let in_bytes = inst.in_bytes_batch;
+
+            // stage-0 ingress crosses PCIe before the kernel runs
+            let mut start = now;
+            if stage_idx == 0 {
+                let up = bus.begin_transfer(in_bytes);
+                push(heap, seq, now + up, Ev::BusRelease);
+                breakdown.upload_s += up * batch_f;
+                start += up;
+            }
+            let others = ledgers[gpu].kernel_start(inst_id, icost.bw_demand);
+            let dur = icost.duration_contended(others);
+            stage_exec_sum[stage_idx] += dur;
+            stage_exec_n[stage_idx] += 1;
+            breakdown.exec_s += dur * batch_f;
+            push(heap, seq, start + dur, Ev::ExecDone { inst: inst_id });
+        }
+
+        while let Some(Event { t: now, ev, .. }) = heap.pop() {
+            last_t = now;
+            match ev {
+                Ev::Arrival { rid } => {
+                    // keep the open loop primed: draw the next arrival
+                    let next_rid = rid as usize + 1;
+                    if next_rid < n_requests {
+                        let t = gen.next_time();
+                        arrivals.push(t);
+                        push(&mut heap, &mut seq, t, Ev::Arrival { rid: next_rid as u32 });
+                    }
+                    let target = route_by(
+                        &by_stage[0],
+                        None,
+                        &mut rr_counters[0],
+                        |i| instances[i].queue.len() + instances[i].busy as usize,
+                        |i| instances[i].gpu,
+                    );
+                    instances[target].queue.push_back((rid, now));
+                    try_issue(
+                        target, now, &mut instances, &mut ledgers, &mut bus, batch_f,
+                        &mut heap, &mut seq, &mut breakdown,
+                        &mut stage_exec_sum, &mut stage_exec_n,
+                    );
+                }
+                Ev::BusRelease => bus.end_transfer(),
+                Ev::ExecDone { inst: inst_id } => {
+                    let rid = instances[inst_id].exec_rid;
+                    let stage_idx = instances[inst_id].stage;
+                    let gpu = instances[inst_id].gpu;
+                    let out_bytes = instances[inst_id].out_bytes_batch;
+                    ledgers[gpu].kernel_end(inst_id);
+                    instances[inst_id].busy = false;
+                    if stage_idx == last_stage {
+                        // egress download crosses PCIe
+                        let dl = bus.begin_transfer(out_bytes);
+                        push(&mut heap, &mut seq, now + dl, Ev::BusRelease);
+                        breakdown.download_s += dl * batch_f;
+                        push(&mut heap, &mut seq, now + dl, Ev::Complete { rid });
+                    } else {
+                        let target = route_by(
+                            &by_stage[stage_idx + 1],
+                            Some(gpu),
+                            &mut rr_counters[stage_idx + 1],
+                            |i| instances[i].queue.len() + instances[i].busy as usize,
+                            |i| instances[i].gpu,
+                        );
+                        let same_gpu = instances[target].gpu == gpu;
+                        let hop =
+                            hop_cost(self.deployment.comm, same_gpu, out_bytes, &mut bus, ipc);
+                        if hop.uses_bus {
+                            push(&mut heap, &mut seq, now + hop.duration_s, Ev::BusRelease);
+                        }
+                        breakdown.hop_s += hop.duration_s * batch_f;
+                        push(
+                            &mut heap, &mut seq, now + hop.duration_s,
+                            Ev::Deliver { target, rid },
+                        );
+                    }
+                    // instance freed: maybe issue the next request
+                    try_issue(
+                        inst_id, now, &mut instances, &mut ledgers, &mut bus, batch_f,
+                        &mut heap, &mut seq, &mut breakdown,
+                        &mut stage_exec_sum, &mut stage_exec_n,
+                    );
+                }
+                Ev::Deliver { target, rid } => {
+                    instances[target].queue.push_back((rid, now));
+                    try_issue(
+                        target, now, &mut instances, &mut ledgers, &mut bus, batch_f,
+                        &mut heap, &mut seq, &mut breakdown,
+                        &mut stage_exec_sum, &mut stage_exec_n,
+                    );
+                }
+                Ev::Complete { rid } => {
+                    completed += 1;
+                    if completed > warmup {
+                        if first_counted_t.is_nan() {
+                            first_counted_t = now;
+                        }
+                        hist.record(now - arrivals[rid as usize]);
+                    }
+                }
+            }
+        }
+
+        let span = (last_t - first_counted_t).max(1e-9);
+        let counted = completed.saturating_sub(warmup);
+        Ok(SimReport {
+            achieved_qps: counted as f64 * batch as f64 / span,
+            offered_qps,
+            completed,
+            hist,
+            breakdown,
+            stage_exec_mean_s: stage_exec_sum
+                .iter()
+                .zip(&stage_exec_n)
+                .map(|(s, &n)| if n == 0 { 0.0 } else { s / n as f64 })
+                .collect(),
+        })
+    }
+
+    /// Run the simulation with the seed (reference) engine: per-event
+    /// [`CostModel`] evaluation, materialized arrivals, vector-payload
+    /// events. Slow but simple — kept as the golden oracle the optimized
+    /// [`run`](Self::run) must match bit-for-bit, and as the baseline
+    /// `benches/bench_sim.rs` measures speedups against.
+    pub fn run_reference(&self, offered_qps: f64) -> Result<SimReport, String> {
         let mut gpus = self.admit()?;
         let cost = CostModel::new(self.cluster.gpu.clone());
         let mut bus = PcieBus::new(self.cluster.pcie.clone());
@@ -243,11 +558,28 @@ impl<'a> Simulator<'a> {
         let n_requests = (self.opts.queries + batch - 1) / batch;
         let req_rate = offered_qps / batch as f64;
 
-        let mut instances: Vec<Instance> = self
+        struct RefInstance {
+            stage: usize,
+            gpu: usize,
+            sm_frac: f64,
+            queue: VecDeque<(u32, f64)>,
+            busy: bool,
+            exec: Option<Vec<u32>>,
+        }
+
+        #[derive(Debug, Clone, PartialEq)]
+        enum RefEv {
+            Arrival { qid: u32 },
+            ExecDone { inst: usize },
+            BusRelease,
+            XferDone { target: Option<usize>, qids: Vec<u32> },
+        }
+
+        let mut instances: Vec<RefInstance> = self
             .deployment
             .placements
             .iter()
-            .map(|p| Instance {
+            .map(|p| RefInstance {
                 stage: p.stage,
                 gpu: p.gpu,
                 sm_frac: p.sm_frac,
@@ -262,27 +594,17 @@ impl<'a> Simulator<'a> {
         }
 
         // generate all request arrivals up front
-        let mut arrivals: Vec<f64>;
-        {
-            let mut horizon = n_requests as f64 / req_rate * 1.25 + 1.0;
-            loop {
-                arrivals = PoissonArrivals::new(req_rate, self.opts.seed).times_until(horizon);
-                if arrivals.len() >= n_requests {
-                    arrivals.truncate(n_requests);
-                    break;
-                }
-                horizon *= 1.5;
-            }
-        }
+        let arrivals: Vec<f64> =
+            PoissonArrivals::new(req_rate, self.opts.seed).take_times(n_requests);
 
         let mut heap = BinaryHeap::with_capacity(n_requests * 6);
         let mut seq = 0u64;
-        let push = |heap: &mut BinaryHeap<Event>, seq: &mut u64, t: f64, ev: Ev| {
+        let push = |heap: &mut BinaryHeap<Event<RefEv>>, seq: &mut u64, t: f64, ev: RefEv| {
             *seq += 1;
             heap.push(Event { t, seq: *seq, ev });
         };
         for (qid, &t) in arrivals.iter().enumerate() {
-            push(&mut heap, &mut seq, t, Ev::Arrival { qid: qid as u32 });
+            push(&mut heap, &mut seq, t, RefEv::Arrival { qid: qid as u32 });
         }
 
         let mut hist = LatencyHistogram::new();
@@ -293,36 +615,6 @@ impl<'a> Simulator<'a> {
         let mut completed = 0u64;
         let mut first_counted_t = f64::NAN;
         let mut last_t = 0.0f64;
-
-        // borrow-friendly helper: join-shortest-queue routing counting
-        // the in-flight request, preferring same-GPU targets (IPC
-        // locality) and breaking remaining ties round-robin so idle
-        // instances share work (the paper's scheduler routes across
-        // instances).
-        fn route(
-            by_stage: &[Vec<usize>],
-            instances: &[Instance],
-            stage: usize,
-            from_gpu: Option<usize>,
-            rr: &mut usize,
-        ) -> usize {
-            let cands = &by_stage[stage];
-            *rr = rr.wrapping_add(1);
-            let start = *rr % cands.len();
-            let mut best = cands[start];
-            let mut best_key = (usize::MAX, true);
-            for k in 0..cands.len() {
-                let i = cands[(start + k) % cands.len()];
-                let load = instances[i].queue.len() + instances[i].busy as usize;
-                let cross = from_gpu.map_or(false, |g| instances[i].gpu != g);
-                let key = (load, cross);
-                if key < best_key {
-                    best_key = key;
-                    best = i;
-                }
-            }
-            best
-        }
         let mut rr_counters = vec![0usize; self.pipeline.n_stages()];
 
         // issue a batch on `inst` if warranted; schedules events.
@@ -330,19 +622,19 @@ impl<'a> Simulator<'a> {
         fn try_issue(
             inst_id: usize,
             now: f64,
-            instances: &mut [Instance],
+            instances: &mut [RefInstance],
             gpus: &mut [SimGpu],
             bus: &mut PcieBus,
             cost: &CostModel,
             pipeline: &Pipeline,
             batch: usize,
-            heap: &mut BinaryHeap<Event>,
+            heap: &mut BinaryHeap<Event<RefEv>>,
             seq: &mut u64,
             breakdown: &mut TimeBreakdown,
             stage_exec_sum: &mut [f64],
             stage_exec_n: &mut [u64],
         ) {
-            let push = |heap: &mut BinaryHeap<Event>, seq: &mut u64, t: f64, ev: Ev| {
+            let push = |heap: &mut BinaryHeap<Event<RefEv>>, seq: &mut u64, t: f64, ev: RefEv| {
                 *seq += 1;
                 heap.push(Event { t, seq: *seq, ev });
             };
@@ -367,7 +659,7 @@ impl<'a> Simulator<'a> {
             if stage_idx == 0 {
                 let bytes = stage.in_bytes_per_query * n as f64;
                 let up = bus.begin_transfer(bytes);
-                push(heap, seq, now + up, Ev::BusRelease);
+                push(heap, seq, now + up, RefEv::BusRelease);
                 breakdown.upload_s += up * n as f64;
                 start += up;
             }
@@ -379,15 +671,21 @@ impl<'a> Simulator<'a> {
             stage_exec_sum[stage_idx] += dur;
             stage_exec_n[stage_idx] += 1;
             breakdown.exec_s += dur * n as f64;
-            push(heap, seq, start + dur, Ev::ExecDone { inst: inst_id });
+            push(heap, seq, start + dur, RefEv::ExecDone { inst: inst_id });
             instances[inst_id].exec = Some(qids);
         }
 
         while let Some(Event { t: now, ev, .. }) = heap.pop() {
             last_t = now;
             match ev {
-                Ev::Arrival { qid } => {
-                    let target = route(&by_stage, &instances, 0, None, &mut rr_counters[0]);
+                RefEv::Arrival { qid } => {
+                    let target = route_by(
+                        &by_stage[0],
+                        None,
+                        &mut rr_counters[0],
+                        |i| instances[i].queue.len() + instances[i].busy as usize,
+                        |i| instances[i].gpu,
+                    );
                     instances[target].queue.push_back((qid, now));
                     try_issue(
                         target, now, &mut instances, &mut gpus, &mut bus, &cost,
@@ -395,8 +693,8 @@ impl<'a> Simulator<'a> {
                         &mut seq, &mut breakdown, &mut stage_exec_sum, &mut stage_exec_n,
                     );
                 }
-                Ev::BusRelease => bus.end_transfer(),
-                Ev::ExecDone { inst: inst_id } => {
+                RefEv::BusRelease => bus.end_transfer(),
+                RefEv::ExecDone { inst: inst_id } => {
                     let qids = instances[inst_id].exec.take().unwrap_or_default();
                     let stage_idx = instances[inst_id].stage;
                     let gpu = instances[inst_id].gpu;
@@ -409,25 +707,31 @@ impl<'a> Simulator<'a> {
                         let bytes =
                             self.pipeline.stages[stage_idx].out_bytes_per_query * n;
                         let dl = bus.begin_transfer(bytes);
-                        push(&mut heap, &mut seq, now + dl, Ev::BusRelease);
+                        push(&mut heap, &mut seq, now + dl, RefEv::BusRelease);
                         breakdown.download_s += dl * n;
-                        push(&mut heap, &mut seq, now + dl, Ev::XferDone { target: None, qids });
+                        push(
+                            &mut heap, &mut seq, now + dl,
+                            RefEv::XferDone { target: None, qids },
+                        );
                     } else {
-                        let target = route(
-                            &by_stage, &instances, stage_idx + 1, Some(gpu),
+                        let target = route_by(
+                            &by_stage[stage_idx + 1],
+                            Some(gpu),
                             &mut rr_counters[stage_idx + 1],
+                            |i| instances[i].queue.len() + instances[i].busy as usize,
+                            |i| instances[i].gpu,
                         );
                         let same_gpu = instances[target].gpu == gpu;
                         let bytes =
                             self.pipeline.stages[stage_idx].out_bytes_per_query * n;
                         let hop = hop_cost(self.deployment.comm, same_gpu, bytes, &mut bus, ipc);
                         if hop.uses_bus {
-                            push(&mut heap, &mut seq, now + hop.duration_s, Ev::BusRelease);
+                            push(&mut heap, &mut seq, now + hop.duration_s, RefEv::BusRelease);
                         }
                         breakdown.hop_s += hop.duration_s * n;
                         push(
                             &mut heap, &mut seq, now + hop.duration_s,
-                            Ev::XferDone { target: Some(target), qids },
+                            RefEv::XferDone { target: Some(target), qids },
                         );
                     }
                     // instance freed: maybe issue the next batch
@@ -437,7 +741,7 @@ impl<'a> Simulator<'a> {
                         &mut seq, &mut breakdown, &mut stage_exec_sum, &mut stage_exec_n,
                     );
                 }
-                Ev::XferDone { target, qids } => match target {
+                RefEv::XferDone { target, qids } => match target {
                     Some(t_inst) => {
                         for qid in qids {
                             instances[t_inst].queue.push_back((qid, now));
@@ -600,5 +904,21 @@ mod tests {
         // with main-memory comm the transfer share is large.
         let frac = b.comm_total() / (b.comm_total() + b.exec_s);
         assert!(frac > 0.15, "comm fraction {frac}");
+    }
+
+    #[test]
+    fn optimized_matches_reference_smoke() {
+        // the exhaustive version lives in tests/golden_engine.rs; this
+        // in-module check keeps the contract visible next to the code
+        let p = real::img_to_text();
+        let c = ClusterSpec::two_2080ti();
+        let d = simple_deployment(CommMode::GlobalIpc);
+        let o = SimOptions { queries: 800, ..Default::default() };
+        let sim = Simulator::new(&p, &c, &d, o);
+        let opt = sim.run(120.0).unwrap();
+        let refr = sim.run_reference(120.0).unwrap();
+        assert_eq!(opt.completed, refr.completed);
+        assert_eq!(opt.p99().to_bits(), refr.p99().to_bits());
+        assert_eq!(opt.breakdown.exec_s.to_bits(), refr.breakdown.exec_s.to_bits());
     }
 }

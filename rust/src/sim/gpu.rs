@@ -3,7 +3,7 @@
 //! same-stage model sharing, §VII-D), and the set of running kernels'
 //! bandwidth demands (the contention input to `CostModel`).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 use crate::config::GpuSpec;
 
@@ -46,8 +46,11 @@ pub struct SimGpu {
     /// instance activation bytes × instance count).
     mem_by_stage: HashMap<String, (f64, f64)>,
     /// Bandwidth demand (bytes/s) of each currently-running kernel,
-    /// keyed by instance id.
-    running: HashMap<usize, f64>,
+    /// keyed by instance id. A BTreeMap so demand sums accumulate in
+    /// instance-id order — floating-point summation order is part of
+    /// the engine's determinism contract (the optimized engine must
+    /// reproduce these sums bit-for-bit).
+    running: BTreeMap<usize, f64>,
 }
 
 impl SimGpu {
@@ -57,7 +60,7 @@ impl SimGpu {
             sm_allocated: 0.0,
             contexts: 0,
             mem_by_stage: HashMap::new(),
-            running: HashMap::new(),
+            running: BTreeMap::new(),
         }
     }
 

@@ -11,7 +11,7 @@ pub mod engine;
 pub mod gpu;
 pub mod pcie;
 
-pub use cost::CostModel;
+pub use cost::{CostModel, InstanceCost};
 pub use engine::{
     Deployment, InstancePlacement, SimOptions, SimReport, Simulator, TimeBreakdown,
 };

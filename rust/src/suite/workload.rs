@@ -34,6 +34,24 @@ impl PoissonArrivals {
         }
         out
     }
+
+    /// Pop the next arrival timestamp, advancing the stream. The
+    /// sequence is identical to what [`times_until`](Self::times_until)
+    /// materializes — this is the lazy form the event engine uses so it
+    /// never has to guess a horizon and retry.
+    #[inline]
+    pub fn next_time(&mut self) -> f64 {
+        let t = self.next;
+        self.next += self.rng.exponential(self.rate);
+        t
+    }
+
+    /// Generate exactly `n` arrival timestamps (the first `n` of the
+    /// stream, bit-identical to a sufficient-horizon `times_until`
+    /// truncated to `n`).
+    pub fn take_times(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.next_time()).collect()
+    }
 }
 
 /// Diurnal modulation: scales a base rate by a day-shaped curve,
@@ -68,6 +86,56 @@ pub struct LoadTrial {
     pub qos_met: bool,
 }
 
+/// Establish the bisection invariant — `lo` feasible, `hi` infeasible —
+/// from a starting bracket. Shared by the serial and speculative
+/// searches so the grow/halve scaffolding exists once. Returns
+/// `Err(peak)` when the search is already decided: `Err(0.0)` if no
+/// feasible rate exists, or the last feasible rate if the bracket grew
+/// past its budget (effectively unbounded on this testbed).
+fn establish_bracket<C>(mut check: C, lo_hint: f64, hi_start: f64) -> Result<(f64, f64), f64>
+where
+    C: FnMut(f64) -> bool,
+{
+    let mut lo = 0.0;
+    let mut hi = hi_start;
+    if lo_hint > 0.0 && check(lo_hint) {
+        lo = lo_hint;
+    }
+    if check(hi) {
+        // top of the bracket is feasible: grow until infeasible
+        let mut grow_budget = 24;
+        loop {
+            lo = hi;
+            hi *= 2.0;
+            grow_budget -= 1;
+            if grow_budget == 0 {
+                return Err(lo);
+            }
+            if !check(hi) {
+                break;
+            }
+        }
+    }
+    if lo == 0.0 {
+        // no feasible point yet: halve down from the bracket top
+        let mut probe = hi / 2.0;
+        let mut budget = 24;
+        while probe > 1e-3 && !check(probe) {
+            hi = probe;
+            probe /= 2.0;
+            budget -= 1;
+            if budget == 0 {
+                return Err(0.0);
+            }
+        }
+        if probe <= 1e-3 {
+            return Err(0.0);
+        }
+        lo = probe;
+    }
+    Ok((lo, hi))
+}
+
 /// Binary-search the peak supported load: the highest arrival rate whose
 /// p99 stays within QoS, per the paper's measurement protocol
 /// ("gradually increase the load of each benchmark until its 99%-ile
@@ -92,34 +160,10 @@ where
         ok
     };
 
-    // grow until infeasible
-    let mut lo = 0.0;
-    let mut hi = hi_start;
-    let mut grow_budget = 24;
-    while check(hi, &mut trials) {
-        lo = hi;
-        hi *= 2.0;
-        grow_budget -= 1;
-        if grow_budget == 0 {
-            return (lo, trials); // effectively unbounded on this testbed
-        }
-    }
-    if lo == 0.0 {
-        // even hi_start violates: shrink to find any feasible point
-        let mut probe = hi_start / 2.0;
-        let mut budget = 24;
-        while probe > 1e-3 && !check(probe, &mut trials) {
-            probe /= 2.0;
-            budget -= 1;
-            if budget == 0 {
-                return (0.0, trials);
-            }
-        }
-        if probe <= 1e-3 {
-            return (0.0, trials);
-        }
-        lo = probe;
-    }
+    let (mut lo, mut hi) = match establish_bracket(|r| check(r, &mut trials), 0.0, hi_start) {
+        Ok(bracket) => bracket,
+        Err(peak) => return (peak, trials),
+    };
     // bisect
     while (hi - lo) / hi.max(1e-9) > rel_tol {
         let mid = 0.5 * (lo + hi);
@@ -127,6 +171,77 @@ where
             lo = mid;
         } else {
             hi = mid;
+        }
+    }
+    (lo, trials)
+}
+
+/// Speculative bracketed peak search: like [`peak_load_search`], but
+/// takes an initial bracket hint and evaluates *batches* of candidate
+/// rates through `eval_many` so the caller can fan the trials of one
+/// round across threads (`util::par`). Each refinement round probes
+/// `probes_per_round` evenly spaced interior points and keeps the
+/// sub-bracket that straddles the QoS threshold — a `(k+1)×` bracket
+/// shrink per parallel round. Use `probes_per_round = 1` (classic
+/// bisection, fewest total evaluations) when the evaluations will run
+/// serially anyway (e.g. from inside a `par_map` worker), and 3 when
+/// the probes genuinely fan across threads.
+///
+/// `eval_many(&rates) -> p99s` must return one p99 per rate, position
+/// for position, and must be deterministic per rate — given that, the
+/// returned peak and trial list are identical regardless of how many
+/// threads the caller uses.
+pub fn peak_load_search_bracketed<F>(
+    mut eval_many: F,
+    qos_s: f64,
+    lo_hint: f64,
+    hi_hint: f64,
+    rel_tol: f64,
+    probes_per_round: usize,
+) -> (f64, Vec<LoadTrial>)
+where
+    F: FnMut(&[f64]) -> Vec<f64>,
+{
+    assert!(qos_s > 0.0 && hi_hint > 0.0 && lo_hint >= 0.0 && lo_hint < hi_hint);
+    let k = probes_per_round.clamp(1, 8);
+    let mut trials: Vec<LoadTrial> = Vec::new();
+    let mut check_many = |rates: &[f64], trials: &mut Vec<LoadTrial>| -> Vec<bool> {
+        let p99s = eval_many(rates);
+        assert_eq!(p99s.len(), rates.len(), "eval_many must answer every rate");
+        rates
+            .iter()
+            .zip(&p99s)
+            .map(|(&rate_qps, &p99_s)| {
+                let ok = p99_s <= qos_s;
+                trials.push(LoadTrial { rate_qps, p99_s, qos_met: ok });
+                ok
+            })
+            .collect()
+    };
+
+    let (mut lo, mut hi) = match establish_bracket(
+        |r| check_many(&[r], &mut trials)[0],
+        lo_hint,
+        hi_hint,
+    ) {
+        Ok(bracket) => bracket,
+        Err(peak) => return (peak, trials),
+    };
+
+    // speculative rounds: k concurrent probes, keep the straddling slice
+    while (hi - lo) / hi.max(1e-9) > rel_tol {
+        let d = hi - lo;
+        let probes: Vec<f64> = (1..=k)
+            .map(|i| lo + d * i as f64 / (k + 1) as f64)
+            .collect();
+        let ok = check_many(&probes, &mut trials);
+        match ok.iter().position(|&b| !b) {
+            Some(0) => hi = probes[0],
+            Some(i) => {
+                lo = probes[i - 1];
+                hi = probes[i];
+            }
+            None => lo = probes[k - 1],
         }
     }
     (lo, trials)
@@ -187,5 +302,79 @@ mod tests {
     fn peak_search_zero_when_nothing_feasible() {
         let (peak, _) = peak_load_search(|_| 10.0, 0.5, 8.0, 0.02);
         assert_eq!(peak, 0.0);
+    }
+
+    #[test]
+    fn lazy_stream_matches_materialized() {
+        let mut eager = PoissonArrivals::new(80.0, 11);
+        let times = eager.times_until(50.0);
+        let mut lazy = PoissonArrivals::new(80.0, 11);
+        let streamed = lazy.take_times(times.len());
+        assert_eq!(times, streamed, "lazy stream must be bit-identical");
+        let mut one_by_one = PoissonArrivals::new(80.0, 11);
+        for &t in times.iter().take(100) {
+            assert_eq!(t, one_by_one.next_time());
+        }
+    }
+
+    #[test]
+    fn bracketed_search_finds_threshold() {
+        // same synthetic system as the serial test: peak = 100
+        let (peak, trials) = peak_load_search_bracketed(
+            |rates| rates.iter().map(|r| r / 100.0).collect(),
+            1.0,
+            40.0,
+            160.0,
+            0.01,
+            3,
+        );
+        testkit::assert_close(peak, 100.0, 0.02, 0.0);
+        assert!(!trials.is_empty());
+    }
+
+    #[test]
+    fn bracketed_search_recovers_from_bad_hints() {
+        // bracket entirely below the true peak: must grow
+        let (peak, _) = peak_load_search_bracketed(
+            |rates| rates.iter().map(|r| r / 100.0).collect(),
+            1.0,
+            5.0,
+            20.0,
+            0.02,
+            3,
+        );
+        testkit::assert_close(peak, 100.0, 0.05, 0.0);
+        // bracket entirely above: must halve down, then refine
+        let (peak, _) = peak_load_search_bracketed(
+            |rates| rates.iter().map(|r| r / 100.0).collect(),
+            1.0,
+            400.0,
+            800.0,
+            0.02,
+            3,
+        );
+        testkit::assert_close(peak, 100.0, 0.05, 0.0);
+        // nothing feasible at all
+        let (peak, _) =
+            peak_load_search_bracketed(|rates| vec![10.0; rates.len()], 0.5, 1.0, 8.0, 0.02, 3);
+        assert_eq!(peak, 0.0);
+    }
+
+    #[test]
+    fn bracketed_and_serial_search_agree() {
+        for probes in [1usize, 3, 5] {
+            for qos in [0.4, 1.0, 3.0] {
+                let (serial, _) = peak_load_search(|r| r / 100.0, qos, 10.0, 0.01);
+                let (bracketed, _) = peak_load_search_bracketed(
+                    |rates| rates.iter().map(|r| r / 100.0).collect(),
+                    qos,
+                    serial * 0.5,
+                    serial * 1.5,
+                    0.01,
+                    probes,
+                );
+                testkit::assert_close(bracketed, serial, 0.03, 0.0);
+            }
+        }
     }
 }

@@ -3,7 +3,12 @@
 //! Measures wall-clock per iteration with warmup, reports
 //! min/median/mean, and prints rows `cargo bench` style. Used by the
 //! `benches/` targets (declared `harness = false`).
+//!
+//! [`JsonReport`] additionally persists results machine-readably
+//! (`BENCH_sim.json` at the repo root) so successive PRs accumulate a
+//! perf trajectory — see EXPERIMENTS.md §Benchmarks.
 
+use std::path::Path;
 use std::time::Instant;
 
 /// One benchmark result.
@@ -77,6 +82,92 @@ pub fn header(title: &str) {
     println!("{}", "-".repeat(90));
 }
 
+/// Machine-readable benchmark report: bench name → median/mean/min plus
+/// optional per-bench extras (e.g. simulated-queries/s) and top-level
+/// derived metrics (e.g. speedup ratios). Hand-rendered JSON — the
+/// environment has no serde.
+#[derive(Debug, Clone, Default)]
+pub struct JsonReport {
+    entries: Vec<(BenchResult, Vec<(String, f64)>)>,
+    derived: Vec<(String, f64)>,
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl JsonReport {
+    pub fn new() -> JsonReport {
+        JsonReport::default()
+    }
+
+    /// Record a result with no extra metrics.
+    pub fn add(&mut self, result: &BenchResult) {
+        self.entries.push((result.clone(), Vec::new()));
+    }
+
+    /// Record a result plus derived per-bench metrics.
+    pub fn add_with(&mut self, result: &BenchResult, extras: &[(&str, f64)]) {
+        self.entries.push((
+            result.clone(),
+            extras.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        ));
+    }
+
+    /// Record a top-level derived metric (e.g. a speedup ratio).
+    pub fn derived(&mut self, key: &str, value: f64) {
+        self.derived.push((key.to_string(), value));
+    }
+
+    /// Render the full JSON document.
+    pub fn render(&self, note: &str) -> String {
+        let mut out = String::from("{\n  \"schema\": \"camelot-bench-v1\",\n");
+        out.push_str(&format!("  \"note\": \"{}\",\n", json_escape(note)));
+        out.push_str("  \"benches\": {\n");
+        for (i, (r, extras)) in self.entries.iter().enumerate() {
+            out.push_str(&format!(
+                "    \"{}\": {{\"median_s\": {}, \"mean_s\": {}, \"min_s\": {}, \"iters\": {}",
+                json_escape(&r.name),
+                json_num(r.median_s),
+                json_num(r.mean_s),
+                json_num(r.min_s),
+                r.iters
+            ));
+            for (k, v) in extras {
+                out.push_str(&format!(", \"{}\": {}", json_escape(k), json_num(*v)));
+            }
+            out.push('}');
+            if i + 1 < self.entries.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("  },\n  \"derived\": {\n");
+        for (i, (k, v)) in self.derived.iter().enumerate() {
+            out.push_str(&format!("    \"{}\": {}", json_escape(k), json_num(*v)));
+            if i + 1 < self.derived.len() {
+                out.push(',');
+            }
+            out.push('\n');
+        }
+        out.push_str("  }\n}\n");
+        out
+    }
+
+    /// Write the report to `path`.
+    pub fn write(&self, path: &Path, note: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.render(note))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,5 +185,35 @@ mod tests {
         assert!(humanize(2e-3).ends_with(" ms"));
         assert!(humanize(2e-6).ends_with(" µs"));
         assert!(humanize(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn json_report_parses_back() {
+        let mut rep = JsonReport::new();
+        let r = BenchResult {
+            name: "sim/16k queries".into(),
+            iters: 10,
+            mean_s: 0.012,
+            median_s: 0.011,
+            min_s: 0.010,
+        };
+        rep.add_with(&r, &[("sim_queries_per_s", 1.45e6)]);
+        rep.add(&BenchResult { name: "other".into(), ..r.clone() });
+        rep.derived("speedup_vs_reference", 4.2);
+        rep.derived("nan_becomes_null", f64::NAN);
+        let text = rep.render("unit test");
+        let json = crate::util::Json::parse(&text).expect("valid json");
+        let benches = json.get("benches").unwrap();
+        let e = benches.get("sim/16k queries").unwrap();
+        assert_eq!(e.get_f64("median_s"), Some(0.011));
+        assert_eq!(e.get_f64("sim_queries_per_s"), Some(1.45e6));
+        assert_eq!(
+            json.get("derived").unwrap().get_f64("speedup_vs_reference"),
+            Some(4.2)
+        );
+        assert_eq!(
+            json.get("derived").unwrap().get("nan_becomes_null"),
+            Some(&crate::util::Json::Null)
+        );
     }
 }

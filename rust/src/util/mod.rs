@@ -7,10 +7,12 @@
 
 pub mod bench;
 pub mod json;
+pub mod par;
 pub mod rng;
 pub mod table;
 pub mod testkit;
 
 pub use json::Json;
+pub use par::{par_map, par_map_threads};
 pub use rng::Rng;
 pub use table::{fnum, Table};

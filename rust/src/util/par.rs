@@ -1,0 +1,180 @@
+//! Std-only deterministic parallel map over scoped threads.
+//!
+//! The figure harnesses fan `pipeline × planner × load` sweep cells
+//! across cores with [`par_map`]; the peak-load search evaluates its
+//! speculative bisection probes the same way. Every result lands in the
+//! output slot of its input index and every cell derives its randomness
+//! from its own inputs (seeds, SA params), so the output is identical
+//! regardless of the thread count — including `threads == 1`. The
+//! determinism test in `tests/golden_engine.rs` pins that property.
+//!
+//! No rayon in this environment; `std::thread::scope` (Rust ≥ 1.63) is
+//! all that is needed for a work-stealing index queue.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+thread_local! {
+    static IN_WORKER: Cell<bool> = Cell::new(false);
+}
+
+/// Whether the current code runs inside a [`par_map`] call — on a
+/// spawned worker thread, or on the calling thread when the map ran
+/// serially (`threads == 1`). Nested `par_map` calls use this to
+/// degrade to serial execution instead of oversubscribing the machine,
+/// and `peak_load` uses it to pick its probe width. Marking the serial
+/// path too keeps the answer a static property of the call structure,
+/// not of `CAMELOT_THREADS` — required for thread-count-invariant
+/// sweep results.
+pub fn in_worker() -> bool {
+    IN_WORKER.with(|c| c.get())
+}
+
+/// Sets IN_WORKER for a scope, restoring the previous value on drop
+/// (panic-safe).
+struct WorkerFlag {
+    prev: bool,
+}
+
+impl WorkerFlag {
+    fn set() -> WorkerFlag {
+        WorkerFlag { prev: IN_WORKER.with(|c| c.replace(true)) }
+    }
+}
+
+impl Drop for WorkerFlag {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_WORKER.with(|c| c.set(prev));
+    }
+}
+
+/// Worker count: `CAMELOT_THREADS` if set (≥ 1), else the machine's
+/// available parallelism.
+pub fn max_threads() -> usize {
+    std::env::var("CAMELOT_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+/// Apply `f(index, item)` to every item with up to `threads` workers;
+/// results are returned in input order. `f` must be deterministic per
+/// (index, item) — then the output does not depend on `threads`.
+pub fn par_map_threads<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.max(1).min(n);
+    if threads == 1 {
+        let _flag = WorkerFlag::set();
+        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<R>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| {
+                let _flag = WorkerFlag::set();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = f(i, &items[i]);
+                    *slots[i].lock().unwrap() = Some(r);
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker filled every slot"))
+        .collect()
+}
+
+/// [`par_map_threads`] with the default worker count — serial when
+/// already inside a worker (no nested oversubscription).
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = if in_worker() { 1 } else { max_threads() };
+    par_map_threads(items, threads, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_input_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = par_map_threads(&items, 8, |i, &x| {
+            assert_eq!(i, x);
+            x * 2
+        });
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn identical_across_thread_counts() {
+        let items: Vec<u64> = (0..64).collect();
+        let work = |_: usize, &x: &u64| -> u64 {
+            // deterministic per-item "randomness" from the item itself
+            let mut r = crate::util::Rng::new(x);
+            (0..100).map(|_| r.next_u64() % 1000).sum()
+        };
+        let serial = par_map_threads(&items, 1, work);
+        for threads in [2, 3, 8, 64] {
+            assert_eq!(serial, par_map_threads(&items, threads, work));
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map_threads(&empty, 4, |_, &x| x).is_empty());
+        assert_eq!(par_map_threads(&[7u32], 4, |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn max_threads_is_positive() {
+        assert!(max_threads() >= 1);
+    }
+
+    #[test]
+    fn nested_par_map_degrades_to_serial() {
+        assert!(!in_worker(), "test thread is not a worker");
+        let outer: Vec<u32> = (0..4).collect();
+        for threads in [1usize, 4] {
+            // in_worker must be a property of the call structure, not of
+            // the thread count — the serial path marks the caller too
+            let out = par_map_threads(&outer, threads, |_, &x| {
+                assert!(in_worker(), "par_map must mark its execution scope");
+                // nested call still produces correct, ordered results
+                let inner: Vec<u32> = (0..8).map(|i| x * 10 + i).collect();
+                par_map(&inner, |_, &y| y + 1)
+            });
+            for (x, row) in out.iter().enumerate() {
+                let want: Vec<u32> = (0..8).map(|i| x as u32 * 10 + i + 1).collect();
+                assert_eq!(row, &want);
+            }
+            assert!(!in_worker(), "flag must not leak back to the caller");
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! Golden-equivalence and determinism tests for the optimized engine
+//! and the parallel sweep executor (ISSUE 1 acceptance criteria):
+//!
+//! * `Simulator::run` (optimized) must reproduce the seed algorithm
+//!   (`Simulator::run_reference`) exactly — same `p99`, `completed`,
+//!   and time-breakdown totals for fixed seeds on every real pipeline;
+//! * parallel sweeps must be bit-identical regardless of thread count.
+
+use camelot::comm::CommMode;
+use camelot::config::ClusterSpec;
+use camelot::sim::{Deployment, InstancePlacement, SimOptions, Simulator};
+use camelot::suite::{real, workload};
+use camelot::util::par::par_map_threads;
+
+fn colocated(batch: u32, comm: CommMode) -> Deployment {
+    Deployment {
+        placements: vec![
+            InstancePlacement { stage: 0, gpu: 0, sm_frac: 0.5 },
+            InstancePlacement { stage: 1, gpu: 0, sm_frac: 0.5 },
+        ],
+        batch,
+        comm,
+    }
+}
+
+fn spread(batch: u32, comm: CommMode) -> Deployment {
+    Deployment {
+        placements: vec![
+            InstancePlacement { stage: 0, gpu: 0, sm_frac: 0.5 },
+            InstancePlacement { stage: 0, gpu: 1, sm_frac: 0.5 },
+            InstancePlacement { stage: 1, gpu: 0, sm_frac: 0.4 },
+            InstancePlacement { stage: 1, gpu: 1, sm_frac: 0.4 },
+        ],
+        batch,
+        comm,
+    }
+}
+
+fn assert_reports_identical(tag: &str, sim: &Simulator, rate: f64) {
+    let opt = sim.run(rate).unwrap();
+    let refr = sim.run_reference(rate).unwrap();
+    assert_eq!(opt.completed, refr.completed, "{tag}: completed");
+    assert_eq!(
+        opt.p99().to_bits(),
+        refr.p99().to_bits(),
+        "{tag}: p99 {} vs {}",
+        opt.p99(),
+        refr.p99()
+    );
+    assert_eq!(
+        opt.hist.count(),
+        refr.hist.count(),
+        "{tag}: histogram count"
+    );
+    assert_eq!(
+        opt.hist.mean().to_bits(),
+        refr.hist.mean().to_bits(),
+        "{tag}: mean latency"
+    );
+    for (name, a, b) in [
+        ("queue_s", opt.breakdown.queue_s, refr.breakdown.queue_s),
+        ("exec_s", opt.breakdown.exec_s, refr.breakdown.exec_s),
+        ("upload_s", opt.breakdown.upload_s, refr.breakdown.upload_s),
+        ("hop_s", opt.breakdown.hop_s, refr.breakdown.hop_s),
+        ("download_s", opt.breakdown.download_s, refr.breakdown.download_s),
+    ] {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: breakdown {name}: {a} vs {b}");
+    }
+    assert_eq!(
+        opt.achieved_qps.to_bits(),
+        refr.achieved_qps.to_bits(),
+        "{tag}: achieved_qps"
+    );
+    for (i, (a, b)) in opt
+        .stage_exec_mean_s
+        .iter()
+        .zip(&refr.stage_exec_mean_s)
+        .enumerate()
+    {
+        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: stage {i} exec mean");
+    }
+}
+
+#[test]
+fn optimized_engine_matches_reference_on_all_real_pipelines() {
+    let cluster = ClusterSpec::two_2080ti();
+    for p in real::all() {
+        for (dname, d) in [
+            ("colocated-ipc", colocated(16, CommMode::GlobalIpc)),
+            ("colocated-mm", colocated(16, CommMode::MainMemory)),
+            ("spread-ipc", spread(16, CommMode::GlobalIpc)),
+            ("spread-mm", spread(16, CommMode::MainMemory)),
+        ] {
+            for seed in [42u64, 7] {
+                let opts = SimOptions { seed, queries: 800, ..Default::default() };
+                let sim = Simulator::new(&p, &cluster, &d, opts);
+                if sim.admit().is_err() {
+                    continue;
+                }
+                // light load, near saturation, and overload
+                for rate in [30.0, 150.0, 900.0] {
+                    assert_reports_identical(
+                        &format!("{}/{dname}/seed{seed}@{rate}", p.name),
+                        &sim,
+                        rate,
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_equivalence_on_large_batches_and_dgx2() {
+    // batch and cluster variation: the request-granular arithmetic must
+    // agree everywhere, not just on the 2×2080Ti defaults
+    let p = real::text_to_text();
+    for (cluster, batch) in [
+        (ClusterSpec::two_2080ti(), 64u32),
+        (ClusterSpec::dgx2(), 32),
+    ] {
+        let d = spread(batch, CommMode::GlobalIpc);
+        let opts = SimOptions { queries: 1_600, ..Default::default() };
+        let sim = Simulator::new(&p, &cluster, &d, opts);
+        if sim.admit().is_err() {
+            continue;
+        }
+        for rate in [80.0, 400.0] {
+            assert_reports_identical(&format!("{}@{rate}", cluster.gpu.name), &sim, rate);
+        }
+    }
+}
+
+#[test]
+fn parallel_sim_sweep_identical_across_thread_counts() {
+    let p = real::img_to_text();
+    let cluster = ClusterSpec::two_2080ti();
+    let d = spread(16, CommMode::GlobalIpc);
+    let opts = SimOptions { queries: 600, ..Default::default() };
+    let sim = Simulator::new(&p, &cluster, &d, opts);
+    let rates: Vec<f64> = (1..=8).map(|i| 40.0 * i as f64).collect();
+    let sweep = |threads: usize| {
+        par_map_threads(&rates, threads, |_, &rate| {
+            let rep = sim.run(rate).unwrap();
+            (
+                rep.completed,
+                rep.p99().to_bits(),
+                rep.breakdown.total().to_bits(),
+            )
+        })
+    };
+    let serial = sweep(1);
+    for threads in [2, 4, 7] {
+        assert_eq!(serial, sweep(threads), "sweep differs at {threads} threads");
+    }
+}
+
+#[test]
+fn speculative_peak_search_identical_across_thread_counts() {
+    let p = real::img_to_text();
+    let cluster = ClusterSpec::two_2080ti();
+    let d = colocated(16, CommMode::GlobalIpc);
+    let opts = SimOptions { queries: 600, ..Default::default() };
+    let sim = Simulator::new(&p, &cluster, &d, opts);
+    let search = |threads: usize| {
+        workload::peak_load_search_bracketed(
+            |rates| {
+                par_map_threads(rates, threads, |_, &rate| {
+                    sim.run(rate).map(|r| r.p99()).unwrap_or(f64::INFINITY)
+                })
+            },
+            p.qos_target_s,
+            50.0,
+            2_000.0,
+            0.03,
+            3,
+        )
+    };
+    let (peak1, trials1) = search(1);
+    for threads in [3, 8] {
+        let (peak_n, trials_n) = search(threads);
+        assert_eq!(peak1.to_bits(), peak_n.to_bits(), "{threads} threads");
+        assert_eq!(trials1.len(), trials_n.len());
+        for (a, b) in trials1.iter().zip(&trials_n) {
+            assert_eq!(a.rate_qps.to_bits(), b.rate_qps.to_bits());
+            assert_eq!(a.p99_s.to_bits(), b.p99_s.to_bits());
+            assert_eq!(a.qos_met, b.qos_met);
+        }
+    }
+    assert!(peak1 > 0.0, "search must find a feasible load");
+}

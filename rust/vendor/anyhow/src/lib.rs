@@ -1,0 +1,135 @@
+//! Minimal offline shim for the `anyhow` crate (see vendor/README.md).
+//!
+//! Implements exactly the subset this repository uses: a
+//! message-carrying [`Error`], the [`anyhow!`] macro, the [`Context`]
+//! extension trait, and a blanket `From<E: std::error::Error>` so `?`
+//! conversions from concrete error types work.
+
+use std::fmt;
+
+/// A boxed-message error. Unlike the real crate it keeps only the
+/// rendered message chain, which is all the call sites here need.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+
+    /// Prepend a context line (the `Context` trait calls this).
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// `?` conversions from any std error. `Error` itself deliberately does
+// NOT implement `std::error::Error`, mirroring the real crate — that is
+// what keeps this blanket impl coherent.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` alias with the shim error as default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to errors (and to `None`).
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(context)
+        })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| {
+            let err: Error = e.into();
+            err.context(f())
+        })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format an [`Error`] from format-string arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::Other, "disk"))?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("disk"));
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let r: Result<()> = io_fail().with_context(|| "opening manifest");
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.starts_with("opening manifest:"), "{msg}");
+        assert!(msg.contains("disk"));
+    }
+
+    #[test]
+    fn option_context() {
+        let r: Result<i32> = None.context("missing");
+        assert_eq!(r.unwrap_err().to_string(), "missing");
+    }
+
+    #[test]
+    fn macro_formats_inline_args() {
+        let stage = 3;
+        let e = anyhow!("stage {stage} out of range");
+        assert_eq!(e.to_string(), "stage 3 out of range");
+    }
+}
