@@ -9,7 +9,9 @@
 //! §Benchmarks).
 //!
 //! Run with `cargo bench --bench bench_sim`. Set `CAMELOT_BENCH_FIGS=1`
-//! to also time a full `fig17()` sweep (minutes, not seconds).
+//! to also time a full `fig17()` sweep (minutes, not seconds). The
+//! optimized-vs-reference speedup sections need the seed engine:
+//! `cargo bench --bench bench_sim --features reference-engine`.
 
 use std::path::PathBuf;
 use std::sync::Arc;
@@ -20,7 +22,9 @@ use camelot::config::ClusterSpec;
 use camelot::coordinator::{Coordinator, CoordinatorConfig, MockBackend};
 use camelot::figures::common;
 use camelot::sim::{Deployment, InstancePlacement, SimOptions, Simulator};
-use camelot::suite::{real, workload};
+use camelot::suite::real;
+#[cfg(feature = "reference-engine")]
+use camelot::suite::workload;
 use camelot::util::bench::{bench, header, JsonReport};
 
 fn main() {
@@ -48,13 +52,17 @@ fn main() {
         let qps = queries as f64 / opt.median_s;
         println!("    -> {qps:.0} simulated queries/s of wall time");
         json.add_with(&opt, &[("sim_queries_per_s", qps)]);
-        let refr = bench(&format!("sim/{queries} queries @300qps (reference)"), 10, || {
-            sim.run_reference(300.0).unwrap().completed
-        });
-        json.add_with(&refr, &[("sim_queries_per_s", queries as f64 / refr.median_s)]);
-        let speedup = refr.median_s / opt.median_s;
-        println!("    -> optimized engine speedup: {speedup:.2}x");
-        json.derived(&format!("engine_speedup_{queries}q"), speedup);
+        #[cfg(feature = "reference-engine")]
+        {
+            let refr =
+                bench(&format!("sim/{queries} queries @300qps (reference)"), 10, || {
+                    sim.run_reference(300.0).unwrap().completed
+                });
+            json.add_with(&refr, &[("sim_queries_per_s", queries as f64 / refr.median_s)]);
+            let speedup = refr.median_s / opt.median_s;
+            println!("    -> optimized engine speedup: {speedup:.2}x");
+            json.derived(&format!("engine_speedup_{queries}q"), speedup);
+        }
     }
 
     header("peak-load search protocol (coarse-to-fine vs serial seed)");
@@ -64,22 +72,27 @@ fn main() {
             common::peak_load(&p, &c, &d, &opts).0
         });
         json.add(&new_proto);
-        let sim = Simulator::new(&p, &c, &d, opts.clone());
-        let old_proto = bench("peak/serial seed protocol (reference engine)", 3, || {
-            let (peak, _) = workload::peak_load_search(
-                |rate| sim.run_reference(rate).map(|r| r.p99()).unwrap_or(f64::INFINITY),
-                p.qos_target_s,
-                50.0,
-                0.03,
-            );
-            // the seed protocol re-ran the final rate for the report
-            sim.run_reference(peak.max(1.0)).unwrap();
-            peak
-        });
-        json.add(&old_proto);
-        let speedup = old_proto.median_s / new_proto.median_s;
-        println!("    -> peak-search speedup: {speedup:.2}x");
-        json.derived("peak_search_speedup", speedup);
+        #[cfg(feature = "reference-engine")]
+        {
+            let sim = Simulator::new(&p, &c, &d, opts.clone());
+            let old_proto = bench("peak/serial seed protocol (reference engine)", 3, || {
+                let (peak, _) = workload::peak_load_search(
+                    |rate| {
+                        sim.run_reference(rate).map(|r| r.p99()).unwrap_or(f64::INFINITY)
+                    },
+                    p.qos_target_s,
+                    50.0,
+                    0.03,
+                );
+                // the seed protocol re-ran the final rate for the report
+                sim.run_reference(peak.max(1.0)).unwrap();
+                peak
+            });
+            json.add(&old_proto);
+            let speedup = old_proto.median_s / new_proto.median_s;
+            println!("    -> peak-search speedup: {speedup:.2}x");
+            json.derived("peak_search_speedup", speedup);
+        }
     }
 
     if std::env::var("CAMELOT_BENCH_FIGS").is_ok() {

@@ -18,7 +18,7 @@
 
 use crate::comm::CommMode;
 use crate::config::ClusterSpec;
-use crate::deploy::Allocation;
+use crate::deploy::{Allocation, GpuReservation};
 use crate::predictor::StagePredictor;
 use crate::suite::Pipeline;
 
@@ -35,6 +35,11 @@ pub struct AllocContext<'a> {
     /// communication (the rest absorbs batching wait and queueing
     /// jitter). Matches the engine's batching deadline policy.
     pub qos_headroom: f64,
+    /// Shared-cluster accounting: capacity co-located tenants already
+    /// hold on each GPU. Empty = exclusive cluster (the default); when
+    /// set it must have one entry per GPU and every constraint family
+    /// (C1/C2/C4 and the placement pass) sees only the remainder.
+    pub reserved: Vec<GpuReservation>,
     comm_cache: std::cell::Cell<Option<f64>>,
     dur_grid: Vec<[f64; 20]>,
     bw_grid: Vec<[f64; 20]>,
@@ -72,11 +77,38 @@ impl<'a> AllocContext<'a> {
             comm: CommMode::GlobalIpc,
             enforce_bw: true,
             qos_headroom: 0.80,
+            reserved: Vec::new(),
             comm_cache: std::cell::Cell::new(None),
             dur_grid,
             bw_grid,
             thr_grid,
         }
+    }
+
+    /// Builder form: plan into the capacity co-located tenants leave
+    /// free (`reserved` must have one entry per GPU).
+    pub fn with_reserved(mut self, reserved: Vec<GpuReservation>) -> Self {
+        assert!(
+            reserved.is_empty() || reserved.len() == self.cluster.num_gpus,
+            "reservations must cover every GPU"
+        );
+        self.reserved = reserved;
+        self
+    }
+
+    /// Cluster SM-quota capacity left after co-located tenants' holds
+    /// (the C1 right-hand side).
+    pub fn available_compute(&self) -> f64 {
+        let held: f64 = self.reserved.iter().map(|r| r.sm_frac).sum();
+        (self.cluster.total_compute() - held).max(0.0)
+    }
+
+    /// MPS context capacity left after co-located tenants' holds
+    /// (the C2 right-hand side).
+    pub fn available_contexts(&self) -> u32 {
+        let cap = self.cluster.num_gpus as u32 * self.cluster.gpu.mps_contexts;
+        let held: u32 = self.reserved.iter().map(|r| r.contexts).sum();
+        cap.saturating_sub(held)
     }
 
     #[inline]
@@ -262,19 +294,19 @@ impl<'a> AllocContext<'a> {
         if alloc.quotas.iter().any(|&p| !(0.045..=1.0).contains(&p)) {
             return Err("C1: quota outside the profiled range [0.05, 1]".into());
         }
-        // C1 cluster-level
-        if alloc.total_quota() > self.cluster.total_compute() + 1e-9 {
+        // C1 cluster-level (net of co-located tenants' holds)
+        if alloc.total_quota() > self.available_compute() + 1e-9 {
             return Err(format!(
-                "C1: ΣN·p = {:.2} > C·R = {:.2}",
+                "C1: ΣN·p = {:.2} > available C·R = {:.2}",
                 alloc.total_quota(),
-                self.cluster.total_compute()
+                self.available_compute()
             ));
         }
         // C2 cluster-level
         let total_inst: u32 = alloc.instances.iter().sum();
-        let ctx_cap = self.cluster.num_gpus as u32 * self.cluster.gpu.mps_contexts;
+        let ctx_cap = self.available_contexts();
         if total_inst > ctx_cap {
-            return Err(format!("C2: ΣN = {total_inst} > C·I = {ctx_cap}"));
+            return Err(format!("C2: ΣN = {total_inst} > available C·I = {ctx_cap}"));
         }
         // C5 first (cheap): even an unloaded query must fit the QoS
         // (with headroom for arrival jitter)
@@ -288,7 +320,7 @@ impl<'a> AllocContext<'a> {
         // GPUs (Fig 13's multi-dimensional ordering) and fails when no
         // assignment satisfies every per-GPU budget.
         let demands = self.bw_budget_storage(alloc);
-        let feasible = crate::deploy::feasible_placement(
+        let feasible = crate::deploy::feasible_placement_reserved(
             self.pipeline,
             self.cluster,
             alloc,
@@ -297,6 +329,7 @@ impl<'a> AllocContext<'a> {
                 demands: d,
                 cap: Self::BW_MARGIN * self.cluster.gpu.mem_bw,
             }),
+            &self.reserved,
         );
         if !feasible {
             return Err("C2/C3/C4: no valid placement".into());
@@ -378,6 +411,32 @@ mod tests {
                 assert!(without.is_ok() || !without.unwrap_err().contains("C3"));
             }
         }
+    }
+
+    #[test]
+    fn reservations_tighten_every_family() {
+        let p = real::img_to_text();
+        let (c, preds) = ctx_fixture(&p);
+        let a = Allocation { instances: vec![2, 2], quotas: vec![0.45, 0.45] };
+        let free = AllocContext::new(&p, &c, &preds, 16);
+        free.check(&a).expect("fits an exclusive cluster");
+        // a tenant holding 50% SM + 8 contexts per GPU squeezes it out
+        let held = vec![
+            GpuReservation { sm_frac: 0.5, contexts: 8, ..Default::default() };
+            c.num_gpus
+        ];
+        let shared = AllocContext::new(&p, &c, &preds, 16).with_reserved(held);
+        assert!((shared.available_compute() - 1.0).abs() < 1e-9);
+        assert_eq!(shared.available_contexts(), 2 * 48 - 16);
+        let err = shared.check(&a).unwrap_err();
+        assert!(
+            err.contains("C1") || err.contains("placement"),
+            "expected a capacity rejection, got: {err}"
+        );
+        // the known-feasible exclusive-cluster allocation still fits the
+        // remainder (QoS is load-independent here; only capacity shrank)
+        let small = Allocation { instances: vec![1, 1], quotas: vec![0.5, 0.4] };
+        shared.check(&small).expect("remainder admits a small tenant");
     }
 
     #[test]

@@ -31,8 +31,18 @@ pub fn min_gpus(ctx: &AllocContext<'_>, load_qps: f64) -> usize {
 
 /// Solve Case 2 for `load_qps`. The returned allocation is feasible on a
 /// cluster restricted to `min_gpus` devices and supports the load.
+///
+/// With shared-cluster reservations (`ctx.reserved` non-empty) the
+/// GPU-count restriction is skipped — which devices remain is dictated
+/// by the co-located tenant's holds, so the solve runs on the full
+/// cluster with the reservations applied and the usage objective alone
+/// keeps the plan small.
 pub fn solve(ctx: &AllocContext<'_>, load_qps: f64, params: SaParams) -> Option<(SaResult, usize)> {
-    let mut y = min_gpus(ctx, load_qps);
+    let mut y = if ctx.reserved.is_empty() {
+        min_gpus(ctx, load_qps)
+    } else {
+        ctx.cluster.num_gpus
+    };
     // Eq. 2 is a lower bound; grow y if the restricted problem is
     // infeasible (e.g. bandwidth or QoS-bound rather than capacity-bound)
     while y <= ctx.cluster.num_gpus {
@@ -41,6 +51,7 @@ pub fn solve(ctx: &AllocContext<'_>, load_qps: f64, params: SaParams) -> Option<
         sub.comm = ctx.comm;
         sub.enforce_bw = ctx.enforce_bw;
         sub.qos_headroom = ctx.qos_headroom;
+        sub.reserved = ctx.reserved.clone();
         let n = ctx.pipeline.n_stages();
         let init = Allocation {
             instances: vec![1; n],

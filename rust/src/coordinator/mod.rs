@@ -15,7 +15,10 @@ pub mod autoscale;
 pub mod backend;
 pub mod batcher;
 
-pub use autoscale::{AutoscaleConfig, Autoscaler};
+pub use autoscale::{
+    run_closed_loop, AutoscaleConfig, Autoscaler, ClosedLoopReport, EpochLoopConfig,
+    EpochRecord,
+};
 pub use backend::{ExecBackend, MockBackend, PjrtBackend};
 pub use batcher::{Batcher, BatchPolicy};
 

@@ -64,6 +64,53 @@ pub struct BwBudget<'a> {
     pub cap: f64,
 }
 
+/// Capacity on one GPU already committed to a co-located tenant
+/// (shared-cluster planning): the planner for a new pipeline sees only
+/// the remaining SM quota, memory, MPS contexts, and bandwidth budget.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct GpuReservation {
+    /// Σ SM fractions the resident tenant holds on this GPU.
+    pub sm_frac: f64,
+    /// Global-memory bytes the resident tenant charges (models counted
+    /// once per stage, activations per instance).
+    pub mem_bytes: f64,
+    /// MPS client contexts the resident tenant occupies.
+    pub contexts: u32,
+    /// Σ predicted bandwidth demands of the resident instances — the
+    /// worst case where all of them run concurrently (conservative
+    /// input to the C3 budget).
+    pub bw_demand: f64,
+}
+
+/// Derive per-GPU [`GpuReservation`]s from a tenant already deployed on
+/// the cluster, so a second pipeline can be planned into the remaining
+/// capacity. Same-stage model sharing *within* the resident tenant is
+/// honored; sharing across tenants is not assumed (conservative).
+pub fn reservations_for(
+    pipeline: &Pipeline,
+    cluster: &ClusterSpec,
+    deployment: &Deployment,
+) -> Vec<GpuReservation> {
+    let cost = crate::sim::CostModel::new(cluster.gpu.clone());
+    let batch = deployment.batch.max(1);
+    let mut res = vec![GpuReservation::default(); cluster.num_gpus];
+    // model charged once per (gpu, stage)
+    let mut model_seen = vec![0u64; cluster.num_gpus];
+    for p in &deployment.placements {
+        let st = &pipeline.stages[p.stage];
+        let r = &mut res[p.gpu];
+        r.sm_frac += p.sm_frac;
+        r.contexts += 1;
+        r.mem_bytes += st.act_bytes_per_query * batch as f64;
+        if model_seen[p.gpu] >> p.stage & 1 == 0 {
+            model_seen[p.gpu] |= 1 << p.stage;
+            r.mem_bytes += st.model_bytes;
+        }
+        r.bw_demand += cost.bw_demand(st, batch, p.sm_frac);
+    }
+    res
+}
+
 /// Place an allocation on the cluster. Returns the placements and the
 /// final per-GPU states (for constraint inspection, e.g. Σ b(p) per GPU).
 ///
@@ -77,12 +124,34 @@ pub fn place(
     batch: u32,
     bw: Option<BwBudget<'_>>,
 ) -> Result<(Vec<InstancePlacement>, Vec<SimGpu>), DeployError> {
+    place_reserved(pipeline, cluster, alloc, batch, bw, &[])
+}
+
+/// [`place`] on a cluster whose GPUs are partially occupied by
+/// co-located tenants. `reserved` is either empty (exclusive cluster)
+/// or one entry per GPU.
+pub fn place_reserved(
+    pipeline: &Pipeline,
+    cluster: &ClusterSpec,
+    alloc: &Allocation,
+    batch: u32,
+    bw: Option<BwBudget<'_>>,
+    reserved: &[GpuReservation],
+) -> Result<(Vec<InstancePlacement>, Vec<SimGpu>), DeployError> {
     assert_eq!(alloc.instances.len(), pipeline.n_stages());
     assert_eq!(alloc.quotas.len(), pipeline.n_stages());
+    assert!(
+        reserved.is_empty() || reserved.len() == cluster.num_gpus,
+        "reservations must cover every GPU"
+    );
     let mut gpus: Vec<SimGpu> = (0..cluster.num_gpus)
         .map(|_| SimGpu::new(cluster.gpu.clone()))
         .collect();
     let mut gpu_bw = vec![0.0f64; cluster.num_gpus];
+    for (g, r) in reserved.iter().enumerate() {
+        gpus[g].reserve(r.sm_frac, r.mem_bytes, r.contexts);
+        gpu_bw[g] += r.bw_demand;
+    }
     let mut placements = Vec::new();
     // which stages already occupy each GPU (for model-sharing preference)
     let mut hosts: Vec<Vec<usize>> = vec![Vec::new(); cluster.num_gpus];
@@ -166,11 +235,31 @@ pub fn feasible_placement(
     batch: u32,
     bw: Option<BwBudget<'_>>,
 ) -> bool {
+    feasible_placement_reserved(pipeline, cluster, alloc, batch, bw, &[])
+}
+
+/// [`feasible_placement`] on a partially occupied cluster (see
+/// [`place_reserved`]). Still allocation-free.
+///
+/// Invariant (property-tested): `feasible_placement_reserved(..) ==
+/// place_reserved(..).is_ok()`.
+pub fn feasible_placement_reserved(
+    pipeline: &Pipeline,
+    cluster: &ClusterSpec,
+    alloc: &Allocation,
+    batch: u32,
+    bw: Option<BwBudget<'_>>,
+    reserved: &[GpuReservation],
+) -> bool {
     const MAX_GPUS: usize = 32;
     const MAX_STAGES: usize = 8;
     let n_stages = pipeline.n_stages();
     let n_gpus = cluster.num_gpus;
     assert!(n_gpus <= MAX_GPUS && n_stages <= MAX_STAGES, "raise MAX_* consts");
+    assert!(
+        reserved.is_empty() || reserved.len() == n_gpus,
+        "reservations must cover every GPU"
+    );
     let cap_mem = cluster.gpu.mem_bytes as f64;
     let cap_ctx = cluster.gpu.mps_contexts;
     // per-GPU state on the stack — this runs thousands of times per
@@ -181,6 +270,12 @@ pub fn feasible_placement(
     let mut bw_used = [0.0f64; MAX_GPUS];
     // model charged once per (gpu, stage): bitmask per gpu
     let mut hosts = [0u64; MAX_GPUS];
+    for (g, r) in reserved.iter().enumerate() {
+        sm[g] = r.sm_frac;
+        mem[g] = r.mem_bytes;
+        ctx[g] = r.contexts;
+        bw_used[g] = r.bw_demand;
+    }
 
     // same order as place(): memory-hungriest stages first
     let mut order = [0usize; MAX_STAGES];
@@ -260,6 +355,20 @@ pub fn deploy(
     Ok(Deployment { placements, batch, comm })
 }
 
+/// [`deploy`] into the capacity a co-located tenant leaves free.
+pub fn deploy_reserved(
+    pipeline: &Pipeline,
+    cluster: &ClusterSpec,
+    alloc: &Allocation,
+    batch: u32,
+    comm: crate::comm::CommMode,
+    bw: Option<BwBudget<'_>>,
+    reserved: &[GpuReservation],
+) -> Result<Deployment, DeployError> {
+    let (placements, _) = place_reserved(pipeline, cluster, alloc, batch, bw, reserved)?;
+    Ok(Deployment { placements, batch, comm })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -323,9 +432,22 @@ mod tests {
                 let inst: Vec<u32> = (0..stages).map(|_| 1 + r.below(8) as u32).collect();
                 let quotas: Vec<f64> =
                     (0..stages).map(|_| r.range_f64(0.05, 0.8)).collect();
-                (inst, quotas, three_stage, 8u32 << r.below(3))
+                // sometimes plan into a partially occupied cluster
+                let reserved = if r.below(2) == 0 {
+                    Vec::new()
+                } else {
+                    (0..2)
+                        .map(|_| GpuReservation {
+                            sm_frac: r.range_f64(0.0, 0.6),
+                            mem_bytes: r.range_f64(0.0, 6.0e9),
+                            contexts: r.below(8) as u32,
+                            bw_demand: r.range_f64(0.0, 0.4) * 616.0e9,
+                        })
+                        .collect()
+                };
+                (inst, quotas, three_stage, 8u32 << r.below(3), reserved)
             },
-            |(inst, quotas, three_stage, batch)| {
+            |(inst, quotas, three_stage, batch, reserved)| {
                 let p = if *three_stage {
                     artifact::pipeline(1, 2, 1)
                 } else {
@@ -339,8 +461,10 @@ mod tests {
                     None,
                     Some(BwBudget { demands: &demands, cap: 0.75 * c.gpu.mem_bw }),
                 ] {
-                    let fast = feasible_placement(&p, &c, &a, *batch, bw);
-                    let slow = place(&p, &c, &a, *batch, bw).is_ok();
+                    let fast =
+                        feasible_placement_reserved(&p, &c, &a, *batch, bw, reserved);
+                    let slow =
+                        place_reserved(&p, &c, &a, *batch, bw, reserved).is_ok();
                     if fast != slow {
                         return Err(format!("disagree: fast={fast} slow={slow}"));
                     }
@@ -348,6 +472,65 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn reservations_shrink_capacity() {
+        let p = real::img_to_img();
+        let c = ClusterSpec::two_2080ti();
+        let a = Allocation { instances: vec![2, 2], quotas: vec![0.45, 0.45] };
+        // fits an empty cluster (Σ quota 1.8 on 2 GPUs)
+        assert!(feasible_placement(&p, &c, &a, 16, None));
+        // a tenant holding 60% of each GPU leaves too little
+        let held = vec![
+            GpuReservation { sm_frac: 0.6, ..Default::default() };
+            c.num_gpus
+        ];
+        assert!(!feasible_placement_reserved(&p, &c, &a, 16, None, &held));
+        // but a smaller allocation still fits around the tenant
+        let small = Allocation { instances: vec![1, 1], quotas: vec![0.3, 0.3] };
+        assert!(feasible_placement_reserved(&p, &c, &small, 16, None, &held));
+    }
+
+    #[test]
+    fn reservations_for_accounts_sharing_and_counts() {
+        let p = real::img_to_text();
+        let c = ClusterSpec::two_2080ti();
+        let d = Deployment {
+            placements: vec![
+                InstancePlacement { stage: 0, gpu: 0, sm_frac: 0.3 },
+                InstancePlacement { stage: 0, gpu: 0, sm_frac: 0.3 },
+                InstancePlacement { stage: 1, gpu: 1, sm_frac: 0.5 },
+            ],
+            batch: 16,
+            comm: CommMode::GlobalIpc,
+        };
+        let res = reservations_for(&p, &c, &d);
+        assert_eq!(res.len(), 2);
+        assert!((res[0].sm_frac - 0.6).abs() < 1e-12);
+        assert_eq!(res[0].contexts, 2);
+        assert_eq!(res[1].contexts, 1);
+        // same-stage model charged once, activations per instance
+        let s0 = &p.stages[0];
+        let expect0 = s0.model_bytes + 2.0 * s0.act_bytes_per_query * 16.0;
+        assert!((res[0].mem_bytes - expect0).abs() < 1.0);
+        assert!(res[0].bw_demand > 0.0 && res[1].bw_demand > 0.0);
+        // derived reservations must be admissible around the original:
+        // the cluster sim admits the deployment, so a second tenant
+        // planned into the remainder co-exists by construction
+        let (_, gpus) = place_reserved(
+            &p,
+            &c,
+            &Allocation { instances: vec![1, 1], quotas: vec![0.2, 0.2] },
+            16,
+            None,
+            &res,
+        )
+        .expect("remainder fits a small tenant");
+        for g in &gpus {
+            assert!(g.sm_allocated() <= 1.0 + 1e-9);
+            assert!(g.mem_free() >= 0.0);
+        }
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Macro-benchmark figures: Fig 4 (investigation), Figs 14/15 (peak
 //! load on 2×2080Ti), Figs 16/17 (resource usage), Figs 18/20/21 (the
-//! 27 artifact pipelines), Fig 19 (DGX-2).
+//! 27 artifact pipelines), Fig 19 (DGX-2), and the cluster-level
+//! co-location + diurnal-autoscaling scenario (§VIII-C / Cases 1+2 at
+//! cluster scope).
 //!
 //! Every harness fans its independent sweep cells (benchmark × batch ×
 //! load level) across cores with `util::par::par_map`; rows are
@@ -10,7 +12,10 @@
 use crate::allocator::SaParams;
 use crate::baselines::{plan, Planner};
 use crate::config::ClusterSpec;
-use crate::sim::{SimOptions, Simulator};
+use crate::coordinator::{run_closed_loop, AutoscaleConfig, Autoscaler, EpochLoopConfig};
+use crate::deploy::reservations_for;
+use crate::sim::{ClusterSim, SimOptions, Simulator, TenantSpec};
+use crate::suite::workload::{ArrivalProcess, DiurnalPattern};
 use crate::suite::{artifact, real, Pipeline};
 use crate::util::{fnum, par, Table};
 
@@ -425,6 +430,216 @@ pub fn fig18() -> Vec<Table> {
     vec![peaks, alloc, lowload]
 }
 
+/// Parameters of the co-location / diurnal-autoscaling scenario (the
+/// `camelot colocate` subcommand exposes them).
+#[derive(Debug, Clone)]
+pub struct ColocateConfig {
+    /// Tenant A's constant planning load (queries/s).
+    pub load_a: f64,
+    /// Tenant B's constant planning load (queries/s).
+    pub load_b: f64,
+    /// Diurnal peak for the closed-loop day (queries/s).
+    pub diurnal_peak: f64,
+    /// Plan epochs over the simulated day.
+    pub epochs: usize,
+    /// Queries per simulation trial.
+    pub queries: usize,
+    pub seed: u64,
+}
+
+impl Default for ColocateConfig {
+    fn default() -> Self {
+        ColocateConfig {
+            load_a: 150.0,
+            load_b: 100.0,
+            diurnal_peak: 400.0,
+            epochs: 12,
+            queries: 1_500,
+            seed: 42,
+        }
+    }
+}
+
+/// Cluster-level co-location + diurnal savings: tenant A plans first,
+/// tenant B plans into the capacity A's reservations leave free, both
+/// run together in one [`ClusterSim`] (constant and diurnally modulated
+/// arrivals), and each pipeline's diurnal day runs closed-loop through
+/// `coordinator::run_closed_loop`.
+pub fn colocate_tables(
+    pipe_a: &Pipeline,
+    pipe_b: &Pipeline,
+    cfg: &ColocateConfig,
+) -> Result<Vec<Table>, String> {
+    if !(cfg.load_a > 0.0 && cfg.load_b > 0.0 && cfg.diurnal_peak > 0.0) {
+        return Err("loads and diurnal peak must be positive".into());
+    }
+    if cfg.epochs == 0 || cfg.queries == 0 {
+        return Err("epochs and queries must be at least 1".into());
+    }
+    let cluster = ClusterSpec::two_2080ti();
+    let pipes = [pipe_a, pipe_b];
+    let preds: Vec<_> = par::par_map(&pipes, |_, p| common::train_predictors(p, &cluster));
+
+    // --- co-located deployment: A first, B into the remainder ---
+    let mut sa = Autoscaler::new(pipe_a, &cluster, &preds[0], AutoscaleConfig::default());
+    sa.observe(cfg.load_a)
+        .ok_or_else(|| format!("tenant A ({}) has no feasible plan", pipe_a.name))?;
+    let da = sa.current().unwrap().deployment.clone();
+    let usage_a = sa.current().unwrap().usage;
+    let held = reservations_for(pipe_a, &cluster, &da);
+    let mut sb = Autoscaler::new(pipe_b, &cluster, &preds[1], AutoscaleConfig::default());
+    sb.observe_with_reservations(cfg.load_b, &held)
+        .ok_or_else(|| format!("tenant B ({}) does not fit the remainder", pipe_b.name))?;
+    let db = sb.current().unwrap().deployment.clone();
+    let usage_b = sb.current().unwrap().usage;
+
+    let opts = SimOptions { seed: cfg.seed, queries: cfg.queries, ..Default::default() };
+    // solo baselines (same deployments, exclusive cluster)
+    let solo_a = Simulator::new(pipe_a, &cluster, &da, opts.clone())
+        .run(cfg.load_a.max(1.0))
+        .map_err(|e| format!("solo A: {e}"))?;
+    let solo_b = Simulator::new(pipe_b, &cluster, &db, opts.clone())
+        .run(cfg.load_b.max(1.0))
+        .map_err(|e| format!("solo B: {e}"))?;
+    // co-located, constant rates
+    let coloc = ClusterSim::new(
+        &cluster,
+        vec![
+            TenantSpec {
+                pipeline: pipe_a,
+                deployment: &da,
+                arrivals: ArrivalProcess::constant(cfg.load_a),
+            },
+            TenantSpec {
+                pipeline: pipe_b,
+                deployment: &db,
+                arrivals: ArrivalProcess::constant(cfg.load_b),
+            },
+        ],
+        opts.clone(),
+    )
+    .run()
+    .map_err(|e| format!("co-located run: {e}"))?;
+    // co-located, diurnally modulated arrivals (compressed day so the
+    // fixed query budget actually sees the rate move)
+    let day_a = DiurnalPattern { peak_qps: cfg.load_a, trough_frac: 0.3, period_s: 30.0 };
+    let day_b = DiurnalPattern { peak_qps: cfg.load_b, trough_frac: 0.3, period_s: 30.0 };
+    let diurnal = ClusterSim::new(
+        &cluster,
+        vec![
+            TenantSpec {
+                pipeline: pipe_a,
+                deployment: &da,
+                arrivals: ArrivalProcess::diurnal(day_a),
+            },
+            TenantSpec {
+                pipeline: pipe_b,
+                deployment: &db,
+                arrivals: ArrivalProcess::diurnal(day_b),
+            },
+        ],
+        opts,
+    )
+    .run()
+    .map_err(|e| format!("diurnal co-located run: {e}"))?;
+
+    let mut t1 = Table::new(
+        "Co-location: two pipelines share the cluster (B planned into A's remainder)",
+        &["tenant", "arrivals", "load_qps", "usage", "p99_solo_ms", "p99_coloc_ms", "p99_over_qos"],
+    );
+    for (name, load, usage, solo, co, dz, qos) in [
+        (&pipe_a.name, cfg.load_a, usage_a, &solo_a, &coloc[0], &diurnal[0], pipe_a.qos_target_s),
+        (&pipe_b.name, cfg.load_b, usage_b, &solo_b, &coloc[1], &diurnal[1], pipe_b.qos_target_s),
+    ] {
+        t1.push(&[
+            name.clone(),
+            "poisson".into(),
+            fnum(load),
+            format!("{usage:.2}"),
+            format!("{:.1}", solo.p99() * 1e3),
+            format!("{:.1}", co.p99() * 1e3),
+            format!("{:.2}", co.p99() / qos),
+        ]);
+        t1.push(&[
+            name.clone(),
+            "diurnal".into(),
+            fnum(dz.offered_qps),
+            format!("{usage:.2}"),
+            "-".into(),
+            format!("{:.1}", dz.p99() * 1e3),
+            format!("{:.2}", dz.p99() / qos),
+        ]);
+    }
+
+    // --- closed-loop diurnal day per pipeline ---
+    let day = DiurnalPattern::new(cfg.diurnal_peak);
+    let loop_cfg = EpochLoopConfig {
+        epochs: cfg.epochs,
+        epoch_s: day.period_s / cfg.epochs as f64,
+        queries_per_epoch: cfg.queries,
+        seed: cfg.seed,
+        ..Default::default()
+    };
+    let loops: Vec<Option<crate::coordinator::ClosedLoopReport>> =
+        par::par_map(&pipes, |i, p| {
+            run_closed_loop(
+                p,
+                &cluster,
+                &preds[i],
+                AutoscaleConfig::default(),
+                &day,
+                &loop_cfg,
+            )
+        });
+
+    let mut t2 = Table::new(
+        "Diurnal closed loop: per-epoch usage follows the load while p99 holds",
+        &["benchmark", "hour", "load_qps", "replanned", "churn", "usage", "p99_ms", "qos_met"],
+    );
+    let mut t3 = Table::new(
+        "Diurnal savings vs static peak provisioning (§VIII-C)",
+        &["benchmark", "mean_usage", "static_usage", "savings_pct", "replans", "churn_s", "qos_violations"],
+    );
+    for (p, rep) in pipes.iter().zip(&loops) {
+        let Some(rep) = rep else {
+            t3.push(&[p.name.clone(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into(), "-".into()]);
+            continue;
+        };
+        for e in &rep.epochs {
+            t2.push(&[
+                p.name.clone(),
+                format!("{:02.0}:00", e.t_s / 3_600.0),
+                fnum(e.load_qps),
+                if e.replanned { "yes" } else { "" }.to_string(),
+                e.churn_instances.to_string(),
+                format!("{:.2}", e.usage),
+                format!("{:.1}", e.p99_s * 1e3),
+                e.qos_met.to_string(),
+            ]);
+        }
+        t3.push(&[
+            p.name.clone(),
+            format!("{:.2}", rep.mean_usage),
+            format!("{:.2}", rep.static_usage),
+            format!("{:.1}%", rep.savings_vs_static() * 100.0),
+            rep.replans.to_string(),
+            format!("{:.1}", rep.churn_s),
+            rep.qos_violations.to_string(),
+        ]);
+    }
+    Ok(vec![t1, t2, t3])
+}
+
+/// The registered `colocate` experiment: img-to-text + text-to-text on
+/// the 2×2080Ti testbed with default loads.
+pub fn colocate() -> Result<Vec<Table>, String> {
+    colocate_tables(
+        &real::img_to_text(),
+        &real::text_to_text(),
+        &ColocateConfig::default(),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     //! Smoke tests on reduced workloads; the ordering assertions
@@ -432,6 +647,27 @@ mod tests {
     //! full protocol runs.
 
     use super::*;
+
+    #[test]
+    fn colocate_emits_coherent_tables() {
+        let cfg = ColocateConfig {
+            epochs: 6,
+            queries: 800,
+            ..Default::default()
+        };
+        let ts = colocate_tables(&real::img_to_text(), &real::text_to_text(), &cfg)
+            .expect("scenario runs");
+        assert_eq!(ts.len(), 3);
+        // two tenants × (poisson + diurnal) rows
+        assert_eq!(ts[0].rows.len(), 4);
+        // per-epoch rows for both pipelines
+        assert_eq!(ts[1].rows.len(), 2 * cfg.epochs);
+        // savings summary: positive savings, QoS mostly held
+        for row in &ts[2].rows {
+            let savings: f64 = row[3].trim_end_matches('%').parse().unwrap();
+            assert!(savings > 5.0, "{}: savings {savings}%", row[0]);
+        }
+    }
 
     #[test]
     fn fig4_produces_rows() {

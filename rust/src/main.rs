@@ -4,6 +4,7 @@
 //!   suite list                         Table I of the paper
 //!   plan  --pipeline <name> ...        run the allocation policies
 //!   serve --pipeline <name> ...        serve a real workload over PJRT
+//!   colocate [--pipelines a,b] ...     co-location + diurnal autoscaling
 //!   reproduce --exp <figN|all> ...     regenerate a paper figure/table
 //!
 //! (CLI parsing is hand-rolled: the offline build environment has no
@@ -27,6 +28,7 @@ fn main() {
         Some("suite") => cmd_suite(&args[1..]),
         Some("plan") => cmd_plan(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("colocate") => cmd_colocate(&args[1..]),
         Some("reproduce") => cmd_reproduce(&args[1..]),
         Some("help") | None => {
             usage();
@@ -51,7 +53,9 @@ USAGE:
                [--load QPS] [--cluster 2080ti|dgx2] [--no-bw]
   camelot serve --pipeline <name> [--batch N] [--rate QPS] [--queries N]
                 [--artifacts DIR]
-  camelot reproduce [--exp figN|tab1|all] [--out DIR]
+  camelot colocate [--pipelines a,b] [--load-a QPS] [--load-b QPS]
+                   [--peak QPS] [--epochs N] [--queries N] [--seed S]
+  camelot reproduce [--exp figN|tab1|all|colocate] [--out DIR]
 
 PIPELINES: img-to-img img-to-text text-to-img text-to-text p<i>+c<j>+m<k>"
     );
@@ -185,6 +189,63 @@ fn cmd_plan(args: &[String]) -> i32 {
         other => {
             eprintln!("unknown policy '{other}' (max-load | min-resource)");
             2
+        }
+    }
+}
+
+/// Two-pipeline co-location + diurnal closed-loop autoscaling on the
+/// shared 2×2080Ti cluster (the cluster-level §VIII-C scenario).
+fn cmd_colocate(args: &[String]) -> i32 {
+    let o = opts(args);
+    let names = o
+        .get("pipelines")
+        .map(String::as_str)
+        .unwrap_or("img-to-text,text-to-text");
+    let parts: Vec<&str> = names.split(',').collect();
+    if parts.len() != 2 {
+        eprintln!("--pipelines takes exactly two comma-separated names");
+        return 2;
+    }
+    let (Some(pa), Some(pb)) = (pipeline_by_name(parts[0]), pipeline_by_name(parts[1]))
+    else {
+        eprintln!("unknown pipeline in '{names}' (run `camelot suite list`)");
+        return 2;
+    };
+    let mut cfg = figures::macro_evals::ColocateConfig::default();
+    if let Some(v) = o.get("load-a").and_then(|v| v.parse().ok()) {
+        cfg.load_a = v;
+    }
+    if let Some(v) = o.get("load-b").and_then(|v| v.parse().ok()) {
+        cfg.load_b = v;
+    }
+    if let Some(v) = o.get("peak").and_then(|v| v.parse().ok()) {
+        cfg.diurnal_peak = v;
+    }
+    if let Some(v) = o.get("epochs").and_then(|v| v.parse().ok()) {
+        cfg.epochs = v;
+    }
+    if let Some(v) = o.get("queries").and_then(|v| v.parse().ok()) {
+        cfg.queries = v;
+    }
+    if let Some(v) = o.get("seed").and_then(|v| v.parse().ok()) {
+        cfg.seed = v;
+    }
+    eprintln!(
+        "co-locating {} (A, {} qps) + {} (B, {} qps); diurnal peak {} qps over {} epochs...",
+        pa.name, cfg.load_a, pb.name, cfg.load_b, cfg.diurnal_peak, cfg.epochs
+    );
+    let t0 = Instant::now();
+    match figures::macro_evals::colocate_tables(&pa, &pb, &cfg) {
+        Ok(tables) => {
+            for t in &tables {
+                println!("{}", t.render());
+            }
+            eprintln!("(colocate took {:.1} s)", t0.elapsed().as_secs_f64());
+            0
+        }
+        Err(e) => {
+            eprintln!("colocate: {e}");
+            1
         }
     }
 }

@@ -1,0 +1,587 @@
+//! Multi-pipeline co-location engine: several tenants — each a
+//! (pipeline, deployment, arrival process) triple — share one cluster's
+//! GPUs and PCIe bus inside a single merged discrete-event simulation.
+//!
+//! This is the measurement substrate for the paper's cluster-level
+//! claims (Case 1 peak load under co-location, Case 2 diurnal resource
+//! savings, §VIII-C): cross-pipeline global-memory-bandwidth contention
+//! falls out of the shared per-GPU [`GpuLedger`]s (demand sums
+//! accumulate in cluster-global instance-id order, preserving the
+//! engine's floating-point determinism contract), and PCIe streams of
+//! all tenants contend on one [`PcieBus`].
+//!
+//! Degenerate-equivalence contract: a [`ClusterSim`] with exactly one
+//! tenant whose arrivals are [`ArrivalProcess::Constant`] replays the
+//! event trajectory of [`Simulator::run`] operation-for-operation —
+//! same arrival stream (tenant 0 seeds from `opts.seed` directly), same
+//! event insertion order, same contention sums — so its `SimReport` is
+//! bit-identical. `tests/golden_engine.rs` pins this.
+//!
+//! The event loop deliberately mirrors (rather than calls) the
+//! single-tenant engine: the hot path stays free of tenant indirection
+//! for the thousands of solo-pipeline sweeps the figures run, and the
+//! degenerate golden test is what keeps the two copies in lock-step —
+//! any behavioral change to `Simulator::run` that is not mirrored here
+//! fails that suite immediately.
+
+use std::collections::{BinaryHeap, VecDeque};
+
+use crate::comm::hop_cost;
+use crate::config::ClusterSpec;
+use crate::metrics::LatencyHistogram;
+use crate::suite::workload::{ArrivalProcess, ArrivalStream};
+use crate::suite::Pipeline;
+
+use super::cost::CostModel;
+use super::engine::{route_by, Deployment, Event, GpuLedger, SimOptions, SimReport, TimeBreakdown};
+use super::gpu::SimGpu;
+use super::pcie::PcieBus;
+
+/// One co-located pipeline: its deployment on the shared cluster and
+/// its offered-load model.
+#[derive(Debug, Clone)]
+pub struct TenantSpec<'a> {
+    pub pipeline: &'a Pipeline,
+    pub deployment: &'a Deployment,
+    pub arrivals: ArrivalProcess,
+}
+
+/// Mix the base seed with the tenant index so co-located arrival
+/// streams decorrelate while tenant 0 keeps the base seed exactly (the
+/// degenerate-equivalence contract).
+#[inline]
+fn tenant_seed(base: u64, tn: usize) -> u64 {
+    crate::util::rng::mix_seed(base, tn as u64)
+}
+
+/// Multi-tenant event payloads. Request ids are tenant-local handles
+/// into that tenant's arrival-time arena; instance ids are
+/// cluster-global.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Ev {
+    Arrival { tn: u32, rid: u32 },
+    ExecDone { inst: usize },
+    BusRelease,
+    Deliver { target: usize, rid: u32 },
+    Complete { tn: u32, rid: u32 },
+}
+
+/// Per-instance runtime state (the engine's `Inst` plus tenant wiring).
+struct Inst {
+    tn: usize,
+    stage: usize,
+    gpu: usize,
+    /// Whether `stage` is the tenant pipeline's final stage.
+    last_stage: bool,
+    queue: VecDeque<(u32, f64)>, // (rid, ready time)
+    busy: bool,
+    exec_rid: u32,
+    cost: super::cost::InstanceCost,
+    in_bytes_batch: f64,
+    out_bytes_batch: f64,
+    /// Tenant batch size as f64 (query-weighting of breakdown terms).
+    batch_f: f64,
+}
+
+/// The co-location engine. Build with [`ClusterSim::new`], run with
+/// [`ClusterSim::run`] — one [`SimReport`] per tenant, in input order.
+pub struct ClusterSim<'a> {
+    cluster: &'a ClusterSpec,
+    tenants: Vec<TenantSpec<'a>>,
+    opts: SimOptions,
+}
+
+impl<'a> ClusterSim<'a> {
+    pub fn new(
+        cluster: &'a ClusterSpec,
+        tenants: Vec<TenantSpec<'a>>,
+        opts: SimOptions,
+    ) -> Self {
+        assert!(!tenants.is_empty(), "cluster sim needs at least one tenant");
+        ClusterSim { cluster, tenants, opts }
+    }
+
+    /// Statically validate the merged deployment: every tenant's
+    /// instances must be admitted on the *shared* GPU states (Σ SM
+    /// quotas across tenants ≤ 100% per device, shared MPS context and
+    /// memory ledgers). Same-named stages share model weights across
+    /// tenants, exactly as same-stage instances do within one (§VII-D).
+    pub fn admit(&self) -> Result<Vec<SimGpu>, String> {
+        let mut gpus: Vec<SimGpu> = (0..self.cluster.num_gpus)
+            .map(|_| SimGpu::new(self.cluster.gpu.clone()))
+            .collect();
+        for (tn, t) in self.tenants.iter().enumerate() {
+            super::engine::admit_deployment(t.pipeline, t.deployment, &mut gpus)
+                .map_err(|e| format!("tenant {tn} ({}): {e}", t.pipeline.name))?;
+        }
+        Ok(gpus)
+    }
+
+    /// Run the merged simulation. Each tenant injects
+    /// `opts.queries` queries (requests of its own batch size); the
+    /// report order matches the tenant order passed to [`new`](Self::new).
+    pub fn run(&self) -> Result<Vec<SimReport>, String> {
+        self.admit()?;
+        let cost = CostModel::new(self.cluster.gpu.clone());
+        let mut bus = PcieBus::new(self.cluster.pcie.clone());
+        let ipc = &self.cluster.ipc;
+        let n_tenants = self.tenants.len();
+
+        // per-tenant request bookkeeping
+        let mut batches: Vec<usize> = Vec::with_capacity(n_tenants);
+        let mut n_requests: Vec<usize> = Vec::with_capacity(n_tenants);
+        for t in &self.tenants {
+            let batch = t.deployment.batch.max(1) as usize;
+            batches.push(batch);
+            n_requests.push((self.opts.queries + batch - 1) / batch);
+        }
+
+        // freeze per-instance cost quantities; instance ids are global,
+        // assigned in (tenant, placement) order
+        let mut instances: Vec<Inst> = Vec::new();
+        let mut by_stage: Vec<Vec<Vec<usize>>> = Vec::with_capacity(n_tenants);
+        for (tn, t) in self.tenants.iter().enumerate() {
+            let n_stages = t.pipeline.n_stages();
+            let batch = batches[tn] as u32;
+            let mut stage_map: Vec<Vec<usize>> = vec![Vec::new(); n_stages];
+            for p in &t.deployment.placements {
+                let stage = &t.pipeline.stages[p.stage];
+                stage_map[p.stage].push(instances.len());
+                instances.push(Inst {
+                    tn,
+                    stage: p.stage,
+                    gpu: p.gpu,
+                    last_stage: p.stage + 1 == n_stages,
+                    queue: VecDeque::with_capacity(16),
+                    busy: false,
+                    exec_rid: 0,
+                    cost: cost.instance_cost(stage, batch, p.sm_frac),
+                    in_bytes_batch: stage.in_bytes_per_query * batch as f64,
+                    out_bytes_batch: stage.out_bytes_per_query * batch as f64,
+                    batch_f: batch as f64,
+                });
+            }
+            by_stage.push(stage_map);
+        }
+        let mut ledgers: Vec<GpuLedger> = (0..self.cluster.num_gpus)
+            .map(|_| GpuLedger::default())
+            .collect();
+
+        // lazy open-loop arrivals: one pending Arrival event per tenant
+        let mut streams: Vec<ArrivalStream> = self
+            .tenants
+            .iter()
+            .enumerate()
+            .map(|(tn, t)| {
+                t.arrivals
+                    .request_stream(t.deployment.batch, tenant_seed(self.opts.seed, tn))
+            })
+            .collect();
+        let mut arrivals: Vec<Vec<f64>> = n_requests
+            .iter()
+            .map(|&n| Vec::with_capacity(n))
+            .collect();
+
+        let mut heap: BinaryHeap<Event<Ev>> =
+            BinaryHeap::with_capacity(instances.len() * 4 + 16);
+        let mut seq = 0u64;
+        let push = |heap: &mut BinaryHeap<Event<Ev>>, seq: &mut u64, t: f64, ev: Ev| {
+            *seq += 1;
+            heap.push(Event { t, seq: *seq, ev });
+        };
+        for tn in 0..n_tenants {
+            if n_requests[tn] > 0 {
+                let t = streams[tn].next_time();
+                arrivals[tn].push(t);
+                push(&mut heap, &mut seq, t, Ev::Arrival { tn: tn as u32, rid: 0 });
+            }
+        }
+
+        let mut hists: Vec<LatencyHistogram> =
+            (0..n_tenants).map(|_| LatencyHistogram::new()).collect();
+        let mut breakdowns: Vec<TimeBreakdown> = vec![TimeBreakdown::default(); n_tenants];
+        let mut stage_exec_sum: Vec<Vec<f64>> = self
+            .tenants
+            .iter()
+            .map(|t| vec![0.0f64; t.pipeline.n_stages()])
+            .collect();
+        let mut stage_exec_n: Vec<Vec<u64>> = self
+            .tenants
+            .iter()
+            .map(|t| vec![0u64; t.pipeline.n_stages()])
+            .collect();
+        let warmups: Vec<u64> = n_requests
+            .iter()
+            .map(|&n| (n as f64 * self.opts.warmup_frac) as u64)
+            .collect();
+        let mut completed = vec![0u64; n_tenants];
+        let mut first_counted_t = vec![f64::NAN; n_tenants];
+        // per-tenant last completion: a fast tenant's throughput must
+        // not be diluted by a slow neighbor's tail. In the degenerate
+        // single-tenant case this equals the engine's global last event
+        // time (the final pop is always the last Complete), preserving
+        // bit-equality.
+        let mut last_complete_t = vec![0.0f64; n_tenants];
+        let mut rr_counters: Vec<Vec<usize>> = self
+            .tenants
+            .iter()
+            .map(|t| vec![0usize; t.pipeline.n_stages()])
+            .collect();
+
+        // issue a request on `inst_id` if it is idle with queued work —
+        // same float-op sequence as the single-tenant engine's try_issue
+        #[allow(clippy::too_many_arguments)]
+        fn try_issue(
+            inst_id: usize,
+            now: f64,
+            instances: &mut [Inst],
+            ledgers: &mut [GpuLedger],
+            bus: &mut PcieBus,
+            heap: &mut BinaryHeap<Event<Ev>>,
+            seq: &mut u64,
+            breakdowns: &mut [TimeBreakdown],
+            stage_exec_sum: &mut [Vec<f64>],
+            stage_exec_n: &mut [Vec<u64>],
+        ) {
+            let push = |heap: &mut BinaryHeap<Event<Ev>>, seq: &mut u64, t: f64, ev: Ev| {
+                *seq += 1;
+                heap.push(Event { t, seq: *seq, ev });
+            };
+            let inst = &mut instances[inst_id];
+            if inst.busy || inst.queue.is_empty() {
+                return;
+            }
+            let (rid, ready) = inst.queue.pop_front().unwrap();
+            let tn = inst.tn;
+            let batch_f = inst.batch_f;
+            breakdowns[tn].queue_s += (now - ready) * batch_f;
+            inst.busy = true;
+            inst.exec_rid = rid;
+
+            let gpu = inst.gpu;
+            let stage_idx = inst.stage;
+            let icost = inst.cost;
+            let in_bytes = inst.in_bytes_batch;
+
+            // stage-0 ingress crosses PCIe before the kernel runs
+            let mut start = now;
+            if stage_idx == 0 {
+                let up = bus.begin_transfer(in_bytes);
+                push(heap, seq, now + up, Ev::BusRelease);
+                breakdowns[tn].upload_s += up * batch_f;
+                start += up;
+            }
+            let others = ledgers[gpu].kernel_start(inst_id, icost.bw_demand);
+            let dur = icost.duration_contended(others);
+            stage_exec_sum[tn][stage_idx] += dur;
+            stage_exec_n[tn][stage_idx] += 1;
+            breakdowns[tn].exec_s += dur * batch_f;
+            push(heap, seq, start + dur, Ev::ExecDone { inst: inst_id });
+        }
+
+        while let Some(Event { t: now, ev, .. }) = heap.pop() {
+            match ev {
+                Ev::Arrival { tn, rid } => {
+                    let tn = tn as usize;
+                    // keep this tenant's open loop primed
+                    let next_rid = rid as usize + 1;
+                    if next_rid < n_requests[tn] {
+                        let t = streams[tn].next_time();
+                        arrivals[tn].push(t);
+                        push(
+                            &mut heap,
+                            &mut seq,
+                            t,
+                            Ev::Arrival { tn: tn as u32, rid: next_rid as u32 },
+                        );
+                    }
+                    let target = route_by(
+                        &by_stage[tn][0],
+                        None,
+                        &mut rr_counters[tn][0],
+                        |i| instances[i].queue.len() + instances[i].busy as usize,
+                        |i| instances[i].gpu,
+                    );
+                    instances[target].queue.push_back((rid, now));
+                    try_issue(
+                        target, now, &mut instances, &mut ledgers, &mut bus,
+                        &mut heap, &mut seq, &mut breakdowns,
+                        &mut stage_exec_sum, &mut stage_exec_n,
+                    );
+                }
+                Ev::BusRelease => bus.end_transfer(),
+                Ev::ExecDone { inst: inst_id } => {
+                    let rid = instances[inst_id].exec_rid;
+                    let tn = instances[inst_id].tn;
+                    let stage_idx = instances[inst_id].stage;
+                    let gpu = instances[inst_id].gpu;
+                    let out_bytes = instances[inst_id].out_bytes_batch;
+                    let batch_f = instances[inst_id].batch_f;
+                    let is_last = instances[inst_id].last_stage;
+                    ledgers[gpu].kernel_end(inst_id);
+                    instances[inst_id].busy = false;
+                    if is_last {
+                        // egress download crosses PCIe
+                        let dl = bus.begin_transfer(out_bytes);
+                        push(&mut heap, &mut seq, now + dl, Ev::BusRelease);
+                        breakdowns[tn].download_s += dl * batch_f;
+                        push(
+                            &mut heap,
+                            &mut seq,
+                            now + dl,
+                            Ev::Complete { tn: tn as u32, rid },
+                        );
+                    } else {
+                        let target = route_by(
+                            &by_stage[tn][stage_idx + 1],
+                            Some(gpu),
+                            &mut rr_counters[tn][stage_idx + 1],
+                            |i| instances[i].queue.len() + instances[i].busy as usize,
+                            |i| instances[i].gpu,
+                        );
+                        let same_gpu = instances[target].gpu == gpu;
+                        let hop = hop_cost(
+                            self.tenants[tn].deployment.comm,
+                            same_gpu,
+                            out_bytes,
+                            &mut bus,
+                            ipc,
+                        );
+                        if hop.uses_bus {
+                            push(&mut heap, &mut seq, now + hop.duration_s, Ev::BusRelease);
+                        }
+                        breakdowns[tn].hop_s += hop.duration_s * batch_f;
+                        push(
+                            &mut heap, &mut seq, now + hop.duration_s,
+                            Ev::Deliver { target, rid },
+                        );
+                    }
+                    // instance freed: maybe issue the next request
+                    try_issue(
+                        inst_id, now, &mut instances, &mut ledgers, &mut bus,
+                        &mut heap, &mut seq, &mut breakdowns,
+                        &mut stage_exec_sum, &mut stage_exec_n,
+                    );
+                }
+                Ev::Deliver { target, rid } => {
+                    instances[target].queue.push_back((rid, now));
+                    try_issue(
+                        target, now, &mut instances, &mut ledgers, &mut bus,
+                        &mut heap, &mut seq, &mut breakdowns,
+                        &mut stage_exec_sum, &mut stage_exec_n,
+                    );
+                }
+                Ev::Complete { tn, rid } => {
+                    let tn = tn as usize;
+                    completed[tn] += 1;
+                    last_complete_t[tn] = now;
+                    if completed[tn] > warmups[tn] {
+                        if first_counted_t[tn].is_nan() {
+                            first_counted_t[tn] = now;
+                        }
+                        hists[tn].record(now - arrivals[tn][rid as usize]);
+                    }
+                }
+            }
+        }
+
+        // one report per tenant, each spanning to its own last completion
+        let mut reports = Vec::with_capacity(n_tenants);
+        for tn in 0..n_tenants {
+            let span = (last_complete_t[tn] - first_counted_t[tn]).max(1e-9);
+            let counted = completed[tn].saturating_sub(warmups[tn]);
+            reports.push(SimReport {
+                achieved_qps: counted as f64 * batches[tn] as f64 / span,
+                offered_qps: self.tenants[tn].arrivals.mean_qps(),
+                completed: completed[tn],
+                hist: std::mem::take(&mut hists[tn]),
+                breakdown: breakdowns[tn],
+                stage_exec_mean_s: stage_exec_sum[tn]
+                    .iter()
+                    .zip(&stage_exec_n[tn])
+                    .map(|(s, &n)| if n == 0 { 0.0 } else { s / n as f64 })
+                    .collect(),
+            });
+        }
+        Ok(reports)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommMode;
+    use crate::sim::{InstancePlacement, Simulator};
+    use crate::suite::real;
+    use crate::suite::workload::DiurnalPattern;
+
+    fn colocated(batch: u32) -> Deployment {
+        Deployment {
+            placements: vec![
+                InstancePlacement { stage: 0, gpu: 0, sm_frac: 0.5 },
+                InstancePlacement { stage: 1, gpu: 0, sm_frac: 0.5 },
+            ],
+            batch,
+            comm: CommMode::GlobalIpc,
+        }
+    }
+
+    fn split(batch: u32, g0: usize, g1: usize, q: f64) -> Deployment {
+        Deployment {
+            placements: vec![
+                InstancePlacement { stage: 0, gpu: g0, sm_frac: q },
+                InstancePlacement { stage: 1, gpu: g1, sm_frac: q },
+            ],
+            batch,
+            comm: CommMode::GlobalIpc,
+        }
+    }
+
+    #[test]
+    fn degenerate_single_tenant_matches_engine_smoke() {
+        // the exhaustive version lives in tests/golden_engine.rs
+        let p = real::img_to_text();
+        let c = crate::config::ClusterSpec::two_2080ti();
+        let d = colocated(16);
+        let opts = SimOptions { queries: 600, ..Default::default() };
+        let single = Simulator::new(&p, &c, &d, opts.clone()).run(80.0).unwrap();
+        let multi = ClusterSim::new(
+            &c,
+            vec![TenantSpec {
+                pipeline: &p,
+                deployment: &d,
+                arrivals: ArrivalProcess::constant(80.0),
+            }],
+            opts,
+        )
+        .run()
+        .unwrap();
+        assert_eq!(multi.len(), 1);
+        assert_eq!(multi[0].completed, single.completed);
+        assert_eq!(multi[0].p99().to_bits(), single.p99().to_bits());
+        assert_eq!(
+            multi[0].breakdown.exec_s.to_bits(),
+            single.breakdown.exec_s.to_bits()
+        );
+        assert_eq!(
+            multi[0].achieved_qps.to_bits(),
+            single.achieved_qps.to_bits()
+        );
+    }
+
+    #[test]
+    fn admit_rejects_cross_tenant_oversubscription() {
+        let p1 = real::img_to_text();
+        let p2 = real::text_to_text();
+        let c = crate::config::ClusterSpec::two_2080ti();
+        let d1 = split(16, 0, 1, 0.6);
+        let d2 = split(16, 0, 1, 0.6); // 0.6 + 0.6 > 1.0 on both GPUs
+        let sim = ClusterSim::new(
+            &c,
+            vec![
+                TenantSpec {
+                    pipeline: &p1,
+                    deployment: &d1,
+                    arrivals: ArrivalProcess::constant(50.0),
+                },
+                TenantSpec {
+                    pipeline: &p2,
+                    deployment: &d2,
+                    arrivals: ArrivalProcess::constant(50.0),
+                },
+            ],
+            SimOptions::default(),
+        );
+        assert!(sim.admit().is_err());
+    }
+
+    #[test]
+    fn co_located_tenant_inflates_neighbor_latency() {
+        // cross-pipeline contention must be visible: tenant A alone vs
+        // tenant A sharing its GPUs with a busy tenant B
+        let pa = real::img_to_img();
+        let pb = real::text_to_text();
+        let c = crate::config::ClusterSpec::two_2080ti();
+        let da = split(16, 0, 1, 0.45);
+        let db = split(16, 0, 1, 0.45);
+        let opts = SimOptions { queries: 1_200, ..Default::default() };
+        let alone = ClusterSim::new(
+            &c,
+            vec![TenantSpec {
+                pipeline: &pa,
+                deployment: &da,
+                arrivals: ArrivalProcess::constant(60.0),
+            }],
+            opts.clone(),
+        )
+        .run()
+        .unwrap();
+        let shared = ClusterSim::new(
+            &c,
+            vec![
+                TenantSpec {
+                    pipeline: &pa,
+                    deployment: &da,
+                    arrivals: ArrivalProcess::constant(60.0),
+                },
+                TenantSpec {
+                    pipeline: &pb,
+                    deployment: &db,
+                    arrivals: ArrivalProcess::constant(120.0),
+                },
+            ],
+            opts,
+        )
+        .run()
+        .unwrap();
+        assert!(
+            shared[0].hist.mean() > alone[0].hist.mean(),
+            "co-location must cost something: shared {} vs alone {}",
+            shared[0].hist.mean(),
+            alone[0].hist.mean()
+        );
+        // and the neighbor's report is independent bookkeeping
+        assert_eq!(shared[1].completed, (1_200 / 16) as u64);
+    }
+
+    #[test]
+    fn diurnal_tenant_runs_and_completes() {
+        let p = real::img_to_text();
+        let c = crate::config::ClusterSpec::two_2080ti();
+        let d = colocated(16);
+        // compressed day so the query budget sees the rate actually move
+        let pattern = DiurnalPattern {
+            peak_qps: 120.0,
+            trough_frac: 0.3,
+            period_s: 10.0,
+        };
+        let opts = SimOptions { queries: 1_600, ..Default::default() };
+        let reps = ClusterSim::new(
+            &c,
+            vec![TenantSpec {
+                pipeline: &p,
+                deployment: &d,
+                arrivals: ArrivalProcess::diurnal(pattern.clone()),
+            }],
+            opts.clone(),
+        )
+        .run()
+        .unwrap();
+        assert_eq!(reps[0].completed, (1_600 / 16) as u64);
+        assert!(reps[0].p99() > 0.0 && reps[0].p99().is_finite());
+        assert!((reps[0].offered_qps - pattern.mean_qps()).abs() < 1e-9);
+        // deterministic per seed
+        let again = ClusterSim::new(
+            &c,
+            vec![TenantSpec {
+                pipeline: &p,
+                deployment: &d,
+                arrivals: ArrivalProcess::diurnal(pattern),
+            }],
+            opts,
+        )
+        .run()
+        .unwrap();
+        assert_eq!(reps[0].p99().to_bits(), again[0].p99().to_bits());
+    }
+}

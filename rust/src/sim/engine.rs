@@ -145,12 +145,13 @@ impl SimReport {
 }
 
 /// Time-and-sequence-ordered heap entry (min-heap on time, then on
-/// insertion sequence for deterministic tie-breaking).
+/// insertion sequence for deterministic tie-breaking). Shared with the
+/// multi-tenant engine in [`super::cluster`].
 #[derive(Debug)]
-struct Event<E> {
-    t: f64,
-    seq: u64,
-    ev: E,
+pub(crate) struct Event<E> {
+    pub(crate) t: f64,
+    pub(crate) seq: u64,
+    pub(crate) ev: E,
 }
 
 impl<E> PartialEq for Event<E> {
@@ -178,9 +179,10 @@ impl<E> Ord for Event<E> {
 /// Join-shortest-queue routing counting the in-flight request,
 /// preferring same-GPU targets (IPC locality) and breaking remaining
 /// ties round-robin so idle instances share work (the paper's scheduler
-/// routes across instances). Shared by both engine implementations so
-/// their trajectories are identical.
-fn route_by<Fl, Fg>(
+/// routes across instances). Shared by both engine implementations and
+/// the multi-tenant [`super::cluster`] engine so their trajectories are
+/// identical.
+pub(crate) fn route_by<Fl, Fg>(
     cands: &[usize],
     from_gpu: Option<usize>,
     rr: &mut usize,
@@ -205,6 +207,42 @@ where
         }
     }
     best
+}
+
+/// Validate one deployment's placements and admit them into `gpus`
+/// (stage/GPU bounds, per-GPU SM/context/memory ledgers, stage
+/// coverage). Shared by [`Simulator::admit`] and the multi-tenant
+/// merged admission in [`super::cluster::ClusterSim`], so a new
+/// admission rule automatically applies to both.
+pub(crate) fn admit_deployment(
+    pipeline: &Pipeline,
+    deployment: &Deployment,
+    gpus: &mut [SimGpu],
+) -> Result<(), String> {
+    let n_stages = pipeline.n_stages();
+    for p in &deployment.placements {
+        if p.stage >= n_stages {
+            return Err(format!("placement references stage {}", p.stage));
+        }
+        if p.gpu >= gpus.len() {
+            return Err(format!("placement references gpu {}", p.gpu));
+        }
+        let st = &pipeline.stages[p.stage];
+        gpus[p.gpu]
+            .admit(
+                &st.name,
+                p.sm_frac,
+                st.model_bytes,
+                st.act_bytes_per_query * deployment.batch as f64,
+            )
+            .map_err(|e| format!("gpu {} rejects {}: {e}", p.gpu, st.name))?;
+    }
+    for i in 0..n_stages {
+        if !deployment.placements.iter().any(|p| p.stage == i) {
+            return Err(format!("stage {i} has no instances"));
+        }
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------
@@ -243,16 +281,18 @@ struct Inst {
 
 /// Per-GPU ledger of running kernels' bandwidth demands, kept sorted by
 /// instance id so the Σ-demand reduction accumulates in the same order
-/// as the reference engine's BTreeMap (bit-identical f64 sums).
+/// as the reference engine's BTreeMap (bit-identical f64 sums). With
+/// multiple tenants the ids are cluster-global, so cross-pipeline
+/// contention sums stay instance-id-ordered too.
 #[derive(Default)]
-struct GpuLedger {
+pub(crate) struct GpuLedger {
     running: Vec<(usize, f64)>,
 }
 
 impl GpuLedger {
     /// Register a starting kernel; returns Σ demand of the others.
     #[inline]
-    fn kernel_start(&mut self, inst: usize, demand: f64) -> f64 {
+    pub(crate) fn kernel_start(&mut self, inst: usize, demand: f64) -> f64 {
         let mut others = 0.0;
         for &(_, d) in &self.running {
             others += d;
@@ -263,7 +303,7 @@ impl GpuLedger {
     }
 
     #[inline]
-    fn kernel_end(&mut self, inst: usize) {
+    pub(crate) fn kernel_end(&mut self, inst: usize) {
         if let Some(pos) = self.running.iter().position(|&(i, _)| i == inst) {
             self.running.remove(pos);
         }
@@ -295,29 +335,7 @@ impl<'a> Simulator<'a> {
         let mut gpus: Vec<SimGpu> = (0..self.cluster.num_gpus)
             .map(|_| SimGpu::new(self.cluster.gpu.clone()))
             .collect();
-        let n_stages = self.pipeline.n_stages();
-        for p in &self.deployment.placements {
-            if p.stage >= n_stages {
-                return Err(format!("placement references stage {}", p.stage));
-            }
-            if p.gpu >= gpus.len() {
-                return Err(format!("placement references gpu {}", p.gpu));
-            }
-            let st = &self.pipeline.stages[p.stage];
-            gpus[p.gpu]
-                .admit(
-                    &st.name,
-                    p.sm_frac,
-                    st.model_bytes,
-                    st.act_bytes_per_query * self.deployment.batch as f64,
-                )
-                .map_err(|e| format!("gpu {} rejects {}: {e}", p.gpu, st.name))?;
-        }
-        for i in 0..n_stages {
-            if !self.deployment.placements.iter().any(|p| p.stage == i) {
-                return Err(format!("stage {i} has no instances"));
-            }
-        }
+        admit_deployment(self.pipeline, self.deployment, &mut gpus)?;
         Ok(gpus)
     }
 
@@ -548,6 +566,11 @@ impl<'a> Simulator<'a> {
     /// events. Slow but simple — kept as the golden oracle the optimized
     /// [`run`](Self::run) must match bit-for-bit, and as the baseline
     /// `benches/bench_sim.rs` measures speedups against.
+    ///
+    /// Compiled only for in-crate tests and under the `reference-engine`
+    /// feature (the golden suite and the engine benches enable it), so
+    /// ordinary builds carry no dead reference path to keep in sync.
+    #[cfg(any(test, feature = "reference-engine"))]
     pub fn run_reference(&self, offered_qps: f64) -> Result<SimReport, String> {
         let mut gpus = self.admit()?;
         let cost = CostModel::new(self.cluster.gpu.clone());

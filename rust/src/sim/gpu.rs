@@ -108,6 +108,23 @@ impl SimGpu {
         Ok(())
     }
 
+    /// Pre-commit capacity held by a co-located tenant (shared-cluster
+    /// planning): shrinks the SM, context, and memory slack the regular
+    /// [`admit`](Self::admit) checks see, without tying the charge to a
+    /// stage name (no model sharing across the reservation boundary —
+    /// conservative).
+    pub fn reserve(&mut self, sm_frac: f64, mem_bytes: f64, contexts: u32) {
+        self.sm_allocated += sm_frac;
+        self.contexts += contexts;
+        if mem_bytes > 0.0 {
+            let entry = self
+                .mem_by_stage
+                .entry("__reserved__".to_string())
+                .or_insert((0.0, 0.0));
+            entry.1 += mem_bytes;
+        }
+    }
+
     /// Total global memory currently charged.
     pub fn mem_used(&self) -> f64 {
         self.mem_by_stage.values().map(|(m, a)| m + a).sum()

@@ -6,11 +6,13 @@
 //! with it through exactly the quantities the paper's runtime sees
 //! (durations, bandwidth demands, memory footprints, PCIe transfers).
 
+pub mod cluster;
 pub mod cost;
 pub mod engine;
 pub mod gpu;
 pub mod pcie;
 
+pub use cluster::{ClusterSim, TenantSpec};
 pub use cost::{CostModel, InstanceCost};
 pub use engine::{
     Deployment, InstancePlacement, SimOptions, SimReport, Simulator, TimeBreakdown,

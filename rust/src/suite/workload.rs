@@ -1,7 +1,8 @@
 //! Workload generation: open-loop Poisson arrivals (the datacenter
 //! measurement protocol), diurnal load shaping (Google's pattern, [1] in
-//! the paper), and the peak-load ramp search used by every "supported
-//! peak load" figure.
+//! the paper), non-homogeneous arrivals over the diurnal curve
+//! (Lewis–Shedler thinning, for the co-location simulator), and the
+//! peak-load ramp search used by every "supported peak load" figure.
 
 use crate::util::Rng;
 
@@ -75,6 +76,180 @@ impl DiurnalPattern {
         let lo = self.trough_frac * self.peak_qps;
         // cos=1 at t=0 → treat t=0 as midnight trough
         lo + (self.peak_qps - lo) * 0.5 * (1.0 - phase)
+    }
+
+    /// Time-averaged rate over a whole period: the sinusoid spends half
+    /// its excursion above the midpoint, so the mean is (trough+peak)/2.
+    pub fn mean_qps(&self) -> f64 {
+        0.5 * (self.trough_frac * self.peak_qps + self.peak_qps)
+    }
+
+    /// Same day shape with every instantaneous rate scaled by `k`
+    /// (trough fraction and period unchanged).
+    pub fn scaled(&self, k: f64) -> DiurnalPattern {
+        DiurnalPattern { peak_qps: self.peak_qps * k, ..*self }
+    }
+}
+
+/// Non-homogeneous Poisson arrivals over a [`DiurnalPattern`], generated
+/// by Lewis–Shedler thinning: candidates stream from a homogeneous
+/// process at a dominating rate `λ_max ≥ max_t rate_at(t)` and survive
+/// with probability `rate_at(t)/λ_max`.
+///
+/// Determinism contract: every candidate consumes exactly two RNG draws
+/// (one exponential, one uniform) whether or not it survives, so two
+/// streams built with the same seed and the *same dominating rate* see
+/// identical candidate times and acceptance draws. Pointwise-larger
+/// patterns (under a shared dominating rate) therefore accept a
+/// superset of arrivals — per-seed monotonicity in rate scale, which
+/// `tests/golden_engine.rs` pins.
+#[derive(Debug, Clone)]
+pub struct NonHomogeneousArrivals {
+    pattern: DiurnalPattern,
+    dominating_qps: f64,
+    t: f64,
+    /// Accepted arrival drawn past a [`times_until`](Self::times_until)
+    /// horizon, buffered so windowed and lazy access interleave without
+    /// losing it (mirrors `PoissonArrivals` keeping its overshoot in
+    /// `next`).
+    pending: Option<f64>,
+    rng: Rng,
+}
+
+impl NonHomogeneousArrivals {
+    /// Thin at the pattern's own peak (the tight dominating rate).
+    pub fn new(pattern: DiurnalPattern, seed: u64) -> Self {
+        let dominating_qps = pattern.peak_qps;
+        Self::with_dominating_rate(pattern, dominating_qps, seed)
+    }
+
+    /// Thin at an explicit dominating rate — share it across streams to
+    /// couple them (the monotonicity property above).
+    pub fn with_dominating_rate(
+        pattern: DiurnalPattern,
+        dominating_qps: f64,
+        seed: u64,
+    ) -> Self {
+        assert!(
+            dominating_qps > 0.0 && dominating_qps >= pattern.peak_qps * (1.0 - 1e-12),
+            "dominating rate {dominating_qps} must cover the pattern peak {}",
+            pattern.peak_qps
+        );
+        NonHomogeneousArrivals {
+            pattern,
+            dominating_qps,
+            t: 0.0,
+            pending: None,
+            rng: Rng::new(seed),
+        }
+    }
+
+    /// Pop the next arrival timestamp, advancing the stream (lazy form,
+    /// mirrors [`PoissonArrivals::next_time`]).
+    pub fn next_time(&mut self) -> f64 {
+        if let Some(t) = self.pending.take() {
+            return t;
+        }
+        loop {
+            self.t += self.rng.exponential(self.dominating_qps);
+            let u = self.rng.f64();
+            if u * self.dominating_qps <= self.pattern.rate_at(self.t) {
+                return self.t;
+            }
+        }
+    }
+
+    /// Generate exactly `n` arrival timestamps.
+    pub fn take_times(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.next_time()).collect()
+    }
+
+    /// Generate all arrival timestamps in `[0, horizon_s)`. The first
+    /// accepted arrival past the horizon stays buffered, so follow-up
+    /// windows (or [`next_time`](Self::next_time) calls) see the exact
+    /// continuation of the stream — same contract as
+    /// [`PoissonArrivals::times_until`].
+    pub fn times_until(&mut self, horizon_s: f64) -> Vec<f64> {
+        let mut out = Vec::new();
+        loop {
+            let t = self.next_time();
+            if t >= horizon_s {
+                self.pending = Some(t);
+                return out;
+            }
+            out.push(t);
+        }
+    }
+}
+
+/// A tenant's offered-load model for the cluster simulator: either the
+/// classic constant-rate Poisson stream or a diurnally modulated
+/// non-homogeneous one. Rates are in *queries*/s; the engine divides by
+/// the tenant's batch to get the request-granular stream.
+#[derive(Debug, Clone)]
+pub enum ArrivalProcess {
+    Constant { rate_qps: f64 },
+    Diurnal { pattern: DiurnalPattern },
+}
+
+/// A materialized request-granular arrival stream (one request = `batch`
+/// queries), lazily poppable by the event engine.
+#[derive(Debug, Clone)]
+pub enum ArrivalStream {
+    Poisson(PoissonArrivals),
+    NonHomogeneous(NonHomogeneousArrivals),
+}
+
+impl ArrivalStream {
+    #[inline]
+    pub fn next_time(&mut self) -> f64 {
+        match self {
+            ArrivalStream::Poisson(s) => s.next_time(),
+            ArrivalStream::NonHomogeneous(s) => s.next_time(),
+        }
+    }
+}
+
+impl ArrivalProcess {
+    pub fn constant(rate_qps: f64) -> Self {
+        ArrivalProcess::Constant { rate_qps }
+    }
+
+    pub fn diurnal(pattern: DiurnalPattern) -> Self {
+        ArrivalProcess::Diurnal { pattern }
+    }
+
+    /// Highest instantaneous query rate the process ever offers.
+    pub fn peak_qps(&self) -> f64 {
+        match self {
+            ArrivalProcess::Constant { rate_qps } => *rate_qps,
+            ArrivalProcess::Diurnal { pattern } => pattern.peak_qps,
+        }
+    }
+
+    /// Long-run average query rate (what `SimReport::offered_qps`
+    /// reports for the tenant).
+    pub fn mean_qps(&self) -> f64 {
+        match self {
+            ArrivalProcess::Constant { rate_qps } => *rate_qps,
+            ArrivalProcess::Diurnal { pattern } => pattern.mean_qps(),
+        }
+    }
+
+    /// Build the request-granular stream for a tenant with the given
+    /// batch size. The constant case is bit-identical to the stream
+    /// `Simulator::run` draws for `offered_qps = rate_qps` at the same
+    /// seed — the degenerate-equivalence golden test depends on this.
+    pub fn request_stream(&self, batch: u32, seed: u64) -> ArrivalStream {
+        let b = batch.max(1) as f64;
+        match self {
+            ArrivalProcess::Constant { rate_qps } => {
+                ArrivalStream::Poisson(PoissonArrivals::new(rate_qps / b, seed))
+            }
+            ArrivalProcess::Diurnal { pattern } => ArrivalStream::NonHomogeneous(
+                NonHomogeneousArrivals::new(pattern.scaled(1.0 / b), seed),
+            ),
+        }
     }
 }
 
@@ -315,6 +490,74 @@ mod tests {
         for &t in times.iter().take(100) {
             assert_eq!(t, one_by_one.next_time());
         }
+    }
+
+    #[test]
+    fn nonhomogeneous_rate_tracks_pattern() {
+        // counts in a window should approximate ∫ rate dt (compressed
+        // day so the test stays cheap: 10 periods of 600 s)
+        let pattern = DiurnalPattern { peak_qps: 200.0, trough_frac: 0.3, period_s: 600.0 };
+        let mut gen = NonHomogeneousArrivals::new(pattern.clone(), 13);
+        let horizon = 10.0 * pattern.period_s;
+        let times = gen.times_until(horizon);
+        let expect = pattern.mean_qps() * horizon;
+        testkit::assert_close(times.len() as f64, expect, 0.02, 0.0);
+        // the trough slice is sparser than the midday slice
+        let slice = pattern.period_s / 10.0;
+        let trough = times.iter().filter(|&&t| t < slice).count();
+        let midday_start = pattern.period_s / 2.0;
+        let midday = times
+            .iter()
+            .filter(|&&t| t >= midday_start && t < midday_start + slice)
+            .count();
+        assert!(
+            (midday as f64) > 2.0 * trough as f64,
+            "midday {midday} vs trough {trough}"
+        );
+        // strictly increasing
+        assert!(times.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn nonhomogeneous_windowed_matches_lazy() {
+        // the overshoot arrival at each horizon stays buffered, so
+        // windowed reads concatenate to the lazy stream exactly
+        let p = DiurnalPattern { peak_qps: 120.0, trough_frac: 0.3, period_s: 300.0 };
+        let mut windowed = NonHomogeneousArrivals::new(p.clone(), 21);
+        let mut all = windowed.times_until(100.0);
+        all.extend(windowed.times_until(200.0));
+        let mut lazy = NonHomogeneousArrivals::new(p, 21);
+        assert_eq!(all, lazy.take_times(all.len()));
+    }
+
+    #[test]
+    fn nonhomogeneous_deterministic_per_seed() {
+        let p = DiurnalPattern::new(150.0);
+        let a = NonHomogeneousArrivals::new(p.clone(), 5).take_times(500);
+        let b = NonHomogeneousArrivals::new(p, 5).take_times(500);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn constant_request_stream_matches_poisson() {
+        // ArrivalProcess::Constant must reproduce the engine's stream
+        // bit-for-bit (degenerate-equivalence contract)
+        let mut direct = PoissonArrivals::new(120.0 / 16.0, 42);
+        let mut via = ArrivalProcess::constant(120.0).request_stream(16, 42);
+        for _ in 0..200 {
+            assert_eq!(direct.next_time(), via.next_time());
+        }
+    }
+
+    #[test]
+    fn scaled_pattern_scales_pointwise() {
+        let p = DiurnalPattern::new(400.0);
+        let q = p.scaled(0.25);
+        for i in 0..50 {
+            let t = i as f64 * 1_000.0;
+            testkit::assert_close(q.rate_at(t), p.rate_at(t) * 0.25, 1e-12, 0.0);
+        }
+        testkit::assert_close(p.mean_qps(), 0.5 * (400.0 + 120.0), 1e-12, 0.0);
     }
 
     #[test]

@@ -2,6 +2,15 @@
 //! crate, and determinism is a feature: every experiment in
 //! EXPERIMENTS.md reproduces bit-for-bit from its seed.
 
+/// Derive the k-th member of a seed family: golden-ratio XOR mix, with
+/// `mix_seed(base, 0) == base` so "member 0" keeps the base stream
+/// exactly (the cluster simulator's degenerate-equivalence contract and
+/// the closed loop's epoch seeds both rely on this).
+#[inline]
+pub fn mix_seed(base: u64, k: u64) -> u64 {
+    base ^ k.wrapping_mul(0x9E3779B97F4A7C15)
+}
+
 /// xoshiro256** by Blackman & Vigna (public domain reference).
 #[derive(Debug, Clone)]
 pub struct Rng {

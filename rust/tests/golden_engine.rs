@@ -1,14 +1,26 @@
-//! Golden-equivalence and determinism tests for the optimized engine
-//! and the parallel sweep executor (ISSUE 1 acceptance criteria):
+//! Golden-equivalence, property, and determinism tests for the
+//! simulation engines and the parallel sweep executor:
 //!
 //! * `Simulator::run` (optimized) must reproduce the seed algorithm
-//!   (`Simulator::run_reference`) exactly — same `p99`, `completed`,
-//!   and time-breakdown totals for fixed seeds on every real pipeline;
-//! * parallel sweeps must be bit-identical regardless of thread count.
+//!   (`Simulator::run_reference`) exactly — these oracle tests compile
+//!   only under `--features reference-engine` (the CI golden leg), so
+//!   ordinary builds don't carry the reference path;
+//! * `ClusterSim` with one tenant and constant-rate arrivals must be
+//!   bit-identical to `Simulator::run` (degenerate equivalence — always
+//!   on, it needs no reference engine);
+//! * non-homogeneous arrivals are reproducible per seed and monotone in
+//!   rate scale under a shared dominating rate;
+//! * single- and multi-tenant sweeps are bit-identical regardless of
+//!   thread count.
 
 use camelot::comm::CommMode;
 use camelot::config::ClusterSpec;
-use camelot::sim::{Deployment, InstancePlacement, SimOptions, Simulator};
+use camelot::sim::{
+    ClusterSim, Deployment, InstancePlacement, SimOptions, SimReport, Simulator, TenantSpec,
+};
+use camelot::suite::workload::{
+    ArrivalProcess, DiurnalPattern, NonHomogeneousArrivals,
+};
 use camelot::suite::{real, workload};
 use camelot::util::par::par_map_threads;
 
@@ -36,51 +48,71 @@ fn spread(batch: u32, comm: CommMode) -> Deployment {
     }
 }
 
-fn assert_reports_identical(tag: &str, sim: &Simulator, rate: f64) {
-    let opt = sim.run(rate).unwrap();
-    let refr = sim.run_reference(rate).unwrap();
-    assert_eq!(opt.completed, refr.completed, "{tag}: completed");
+/// Two half-cluster deployments that co-exist on the 2×2080Ti: each
+/// tenant gets 45% + 35% of both GPUs.
+fn half_cluster_pair(batch: u32) -> (Deployment, Deployment) {
+    let mk = |q0: f64, q1: f64| Deployment {
+        placements: vec![
+            InstancePlacement { stage: 0, gpu: 0, sm_frac: q0 },
+            InstancePlacement { stage: 1, gpu: 1, sm_frac: q1 },
+        ],
+        batch,
+        comm: CommMode::GlobalIpc,
+    };
+    (mk(0.45, 0.35), mk(0.35, 0.45))
+}
+
+fn assert_same_report(tag: &str, a: &SimReport, b: &SimReport) {
+    assert_eq!(a.completed, b.completed, "{tag}: completed");
     assert_eq!(
-        opt.p99().to_bits(),
-        refr.p99().to_bits(),
+        a.p99().to_bits(),
+        b.p99().to_bits(),
         "{tag}: p99 {} vs {}",
-        opt.p99(),
-        refr.p99()
+        a.p99(),
+        b.p99()
     );
+    assert_eq!(a.hist.count(), b.hist.count(), "{tag}: histogram count");
     assert_eq!(
-        opt.hist.count(),
-        refr.hist.count(),
-        "{tag}: histogram count"
-    );
-    assert_eq!(
-        opt.hist.mean().to_bits(),
-        refr.hist.mean().to_bits(),
+        a.hist.mean().to_bits(),
+        b.hist.mean().to_bits(),
         "{tag}: mean latency"
     );
-    for (name, a, b) in [
-        ("queue_s", opt.breakdown.queue_s, refr.breakdown.queue_s),
-        ("exec_s", opt.breakdown.exec_s, refr.breakdown.exec_s),
-        ("upload_s", opt.breakdown.upload_s, refr.breakdown.upload_s),
-        ("hop_s", opt.breakdown.hop_s, refr.breakdown.hop_s),
-        ("download_s", opt.breakdown.download_s, refr.breakdown.download_s),
+    for (name, x, y) in [
+        ("queue_s", a.breakdown.queue_s, b.breakdown.queue_s),
+        ("exec_s", a.breakdown.exec_s, b.breakdown.exec_s),
+        ("upload_s", a.breakdown.upload_s, b.breakdown.upload_s),
+        ("hop_s", a.breakdown.hop_s, b.breakdown.hop_s),
+        ("download_s", a.breakdown.download_s, b.breakdown.download_s),
     ] {
-        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: breakdown {name}: {a} vs {b}");
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: breakdown {name}: {x} vs {y}");
     }
     assert_eq!(
-        opt.achieved_qps.to_bits(),
-        refr.achieved_qps.to_bits(),
+        a.achieved_qps.to_bits(),
+        b.achieved_qps.to_bits(),
         "{tag}: achieved_qps"
     );
-    for (i, (a, b)) in opt
+    for (i, (x, y)) in a
         .stage_exec_mean_s
         .iter()
-        .zip(&refr.stage_exec_mean_s)
+        .zip(&b.stage_exec_mean_s)
         .enumerate()
     {
-        assert_eq!(a.to_bits(), b.to_bits(), "{tag}: stage {i} exec mean");
+        assert_eq!(x.to_bits(), y.to_bits(), "{tag}: stage {i} exec mean");
     }
 }
 
+// ---------------------------------------------------------------------
+// Optimized engine vs the seed reference (needs `reference-engine`)
+// ---------------------------------------------------------------------
+
+#[cfg(feature = "reference-engine")]
+fn assert_reports_identical(tag: &str, sim: &Simulator, rate: f64) {
+    let opt = sim.run(rate).unwrap();
+    let refr = sim.run_reference(rate).unwrap();
+    assert_same_report(tag, &opt, &refr);
+}
+
+#[cfg(feature = "reference-engine")]
 #[test]
 fn optimized_engine_matches_reference_on_all_real_pipelines() {
     let cluster = ClusterSpec::two_2080ti();
@@ -110,6 +142,7 @@ fn optimized_engine_matches_reference_on_all_real_pipelines() {
     }
 }
 
+#[cfg(feature = "reference-engine")]
 #[test]
 fn golden_equivalence_on_large_batches_and_dgx2() {
     // batch and cluster variation: the request-granular arithmetic must
@@ -130,6 +163,117 @@ fn golden_equivalence_on_large_batches_and_dgx2() {
         }
     }
 }
+
+// ---------------------------------------------------------------------
+// Degenerate equivalence: ClusterSim(1 tenant, constant) == Simulator
+// ---------------------------------------------------------------------
+
+#[test]
+fn cluster_sim_degenerates_to_single_engine_bit_identically() {
+    let cluster = ClusterSpec::two_2080ti();
+    for p in real::all() {
+        for (dname, d) in [
+            ("colocated-ipc", colocated(16, CommMode::GlobalIpc)),
+            ("colocated-mm", colocated(16, CommMode::MainMemory)),
+            ("spread-ipc", spread(16, CommMode::GlobalIpc)),
+            ("spread-mm", spread(32, CommMode::MainMemory)),
+        ] {
+            for seed in [42u64, 7] {
+                let opts = SimOptions { seed, queries: 800, ..Default::default() };
+                let sim = Simulator::new(&p, &cluster, &d, opts.clone());
+                if sim.admit().is_err() {
+                    continue;
+                }
+                for rate in [30.0, 150.0, 900.0] {
+                    let single = sim.run(rate).unwrap();
+                    let multi = ClusterSim::new(
+                        &cluster,
+                        vec![TenantSpec {
+                            pipeline: &p,
+                            deployment: &d,
+                            arrivals: ArrivalProcess::constant(rate),
+                        }],
+                        opts.clone(),
+                    )
+                    .run()
+                    .unwrap();
+                    assert_eq!(multi.len(), 1);
+                    assert_same_report(
+                        &format!("{}/{dname}/seed{seed}@{rate}", p.name),
+                        &multi[0],
+                        &single,
+                    );
+                    // offered_qps is the constant rate verbatim
+                    assert_eq!(multi[0].offered_qps.to_bits(), single.offered_qps.to_bits());
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Non-homogeneous arrival properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn nonhomogeneous_arrivals_reproducible_per_seed() {
+    for seed in [1u64, 42, 9_999] {
+        let pattern = DiurnalPattern::new(250.0);
+        let a = NonHomogeneousArrivals::new(pattern.clone(), seed).take_times(2_000);
+        let b = NonHomogeneousArrivals::new(pattern, seed).take_times(2_000);
+        assert_eq!(a, b, "seed {seed} must replay bit-identically");
+    }
+}
+
+#[test]
+fn nonhomogeneous_arrivals_monotone_in_rate_scale() {
+    // under a shared dominating rate, a pointwise-larger pattern accepts
+    // a superset of the candidate arrivals — so every prefix horizon
+    // contains at least as many arrivals, per seed, deterministically
+    let dominating = 400.0;
+    let base = DiurnalPattern::new(100.0);
+    for seed in [3u64, 17, 1234] {
+        let mut counts = Vec::new();
+        for scale in [1.0, 2.0, 4.0] {
+            let pattern = base.scaled(scale);
+            let mut gen = NonHomogeneousArrivals::with_dominating_rate(
+                pattern, dominating, seed,
+            );
+            counts.push(gen.times_until(2_000.0).len());
+        }
+        assert!(
+            counts[0] <= counts[1] && counts[1] <= counts[2],
+            "seed {seed}: counts {counts:?} must be monotone in rate scale"
+        );
+        // and the superset property holds arrival-by-arrival
+        let lo: Vec<f64> = NonHomogeneousArrivals::with_dominating_rate(
+            base.clone(),
+            dominating,
+            seed,
+        )
+        .times_until(2_000.0);
+        let hi: Vec<f64> = NonHomogeneousArrivals::with_dominating_rate(
+            base.scaled(4.0),
+            dominating,
+            seed,
+        )
+        .times_until(2_000.0);
+        let mut j = 0;
+        for t in &lo {
+            while j < hi.len() && hi[j] < *t {
+                j += 1;
+            }
+            assert!(
+                j < hi.len() && hi[j] == *t,
+                "seed {seed}: low-rate arrival {t} missing from scaled stream"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Thread-count invariance of single- and multi-tenant sweeps
+// ---------------------------------------------------------------------
 
 #[test]
 fn parallel_sim_sweep_identical_across_thread_counts() {
@@ -152,6 +296,65 @@ fn parallel_sim_sweep_identical_across_thread_counts() {
     let serial = sweep(1);
     for threads in [2, 4, 7] {
         assert_eq!(serial, sweep(threads), "sweep differs at {threads} threads");
+    }
+}
+
+#[test]
+fn colocated_sweep_identical_across_thread_counts() {
+    // the ISSUE-2 determinism satellite: fan a co-located two-tenant
+    // load grid across 1/2/8 workers — every cell must come back
+    // bit-identical, constant and diurnal arrivals alike
+    let pa = real::img_to_text();
+    let pb = real::text_to_text();
+    let cluster = ClusterSpec::two_2080ti();
+    let (da, db) = half_cluster_pair(16);
+    let opts = SimOptions { queries: 500, ..Default::default() };
+    let cells: Vec<(f64, f64, bool)> = (1..=4)
+        .flat_map(|i| {
+            let a = 30.0 * i as f64;
+            [(a, 45.0, false), (a, 90.0, false), (a, 60.0, true)]
+        })
+        .collect();
+    let sweep = |threads: usize| {
+        par_map_threads(&cells, threads, |_, &(ra, rb, diurnal)| {
+            let arr = |rate: f64| {
+                if diurnal {
+                    ArrivalProcess::diurnal(DiurnalPattern {
+                        peak_qps: rate,
+                        trough_frac: 0.3,
+                        period_s: 90.0,
+                    })
+                } else {
+                    ArrivalProcess::constant(rate)
+                }
+            };
+            let reps = ClusterSim::new(
+                &cluster,
+                vec![
+                    TenantSpec { pipeline: &pa, deployment: &da, arrivals: arr(ra) },
+                    TenantSpec { pipeline: &pb, deployment: &db, arrivals: arr(rb) },
+                ],
+                opts.clone(),
+            )
+            .run()
+            .unwrap();
+            (
+                reps[0].completed,
+                reps[0].p99().to_bits(),
+                reps[0].breakdown.total().to_bits(),
+                reps[1].completed,
+                reps[1].p99().to_bits(),
+                reps[1].breakdown.total().to_bits(),
+            )
+        })
+    };
+    let serial = sweep(1);
+    for threads in [2, 8] {
+        assert_eq!(
+            serial,
+            sweep(threads),
+            "co-located sweep differs at {threads} threads"
+        );
     }
 }
 
