@@ -29,19 +29,32 @@ pub fn min_gpus(ctx: &AllocContext<'_>, load_qps: f64) -> usize {
     y.min(ctx.cluster.num_gpus)
 }
 
+/// Whether a reservation actually holds anything on its GPU (an
+/// all-default entry is indistinguishable from an unheld device).
+fn holds_capacity(r: &crate::deploy::GpuReservation) -> bool {
+    r.sm_frac > 0.0 || r.mem_bytes > 0.0 || r.contexts > 0 || r.bw_demand > 0.0
+}
+
 /// Solve Case 2 for `load_qps`. The returned allocation is feasible on a
 /// cluster restricted to `min_gpus` devices and supports the load.
 ///
-/// With shared-cluster reservations (`ctx.reserved` non-empty) the
-/// GPU-count restriction is skipped — which devices remain is dictated
-/// by the co-located tenant's holds, so the solve runs on the full
-/// cluster with the reservations applied and the usage objective alone
-/// keeps the plan small.
+/// With shared-cluster reservations (`ctx.reserved` non-empty) the Eq. 2
+/// GPU-count restriction still applies as long as the co-tenants' holds
+/// do not overlap the candidate GPUs (the first `y` devices): unheld
+/// trailing GPUs are simply dropped, and the restricted sub-problem
+/// carries the truncated reservation vector. Only when a hold sits
+/// inside the candidate set is the Eq. 2 bound invalid (it assumes
+/// empty devices) — then the solve starts from the full cluster with
+/// the reservations applied and the usage objective alone keeps the
+/// plan small.
 pub fn solve(ctx: &AllocContext<'_>, load_qps: f64, params: SaParams) -> Option<(SaResult, usize)> {
-    let mut y = if ctx.reserved.is_empty() {
-        min_gpus(ctx, load_qps)
-    } else {
-        ctx.cluster.num_gpus
+    let mut y = {
+        let bound = min_gpus(ctx, load_qps);
+        if ctx.reserved.iter().take(bound).any(holds_capacity) {
+            ctx.cluster.num_gpus
+        } else {
+            bound
+        }
     };
     // Eq. 2 is a lower bound; grow y if the restricted problem is
     // infeasible (e.g. bandwidth or QoS-bound rather than capacity-bound)
@@ -51,7 +64,14 @@ pub fn solve(ctx: &AllocContext<'_>, load_qps: f64, params: SaParams) -> Option<
         sub.comm = ctx.comm;
         sub.enforce_bw = ctx.enforce_bw;
         sub.qos_headroom = ctx.qos_headroom;
-        sub.reserved = ctx.reserved.clone();
+        // the restricted cluster keeps GPUs 0..y, so it keeps exactly
+        // their holds (growth past the initial bound can pull held
+        // devices into scope — their truncated entries come with them)
+        sub.reserved = if ctx.reserved.is_empty() {
+            Vec::new()
+        } else {
+            ctx.reserved[..y].to_vec()
+        };
         let n = ctx.pipeline.n_stages();
         let init = Allocation {
             instances: vec![1; n],
@@ -137,6 +157,47 @@ mod tests {
             lo.best.total_quota(),
             hi.best.total_quota()
         );
+    }
+
+    #[test]
+    fn non_overlapping_reservations_keep_gpu_restriction() {
+        use crate::deploy::GpuReservation;
+        let p = real::text_to_text();
+        let (c, preds) = fixture(&p);
+        let load = 15.0; // low enough that Eq. 2 bounds y to 1 GPU
+        let exclusive = AllocContext::new(&p, &c, &preds, 16);
+        let (r0, y0) = solve(&exclusive, load, SaParams::default()).expect("exclusive solves");
+        assert_eq!(y0, 1, "low load must restrict to one GPU");
+
+        // a co-tenant holding only GPU 1 does not overlap the candidate
+        // set {GPU 0}: the restriction must survive and the solution
+        // must match the exclusive solve exactly
+        let tail_held = vec![
+            GpuReservation::default(),
+            GpuReservation { sm_frac: 0.7, contexts: 4, ..Default::default() },
+        ];
+        let shared = AllocContext::new(&p, &c, &preds, 16).with_reserved(tail_held);
+        let (r1, y1) = solve(&shared, load, SaParams::default()).expect("tail-held solves");
+        assert_eq!(y1, 1, "non-overlapping holds must not void the Eq. 2 bound");
+        assert_eq!(r1.best, r0.best);
+
+        // an all-default reservation vector is equivalent to an
+        // exclusive cluster
+        let trivial = AllocContext::new(&p, &c, &preds, 16)
+            .with_reserved(vec![GpuReservation::default(); c.num_gpus]);
+        let (r2, y2) = solve(&trivial, load, SaParams::default()).expect("trivial solves");
+        assert_eq!(y2, 1);
+        assert_eq!(r2.best, r0.best);
+
+        // a hold on GPU 0 overlaps the candidate set: the restriction is
+        // skipped (full cluster) and the solve still succeeds around it
+        let head_held = vec![
+            GpuReservation { sm_frac: 0.5, contexts: 4, ..Default::default() },
+            GpuReservation::default(),
+        ];
+        let overlapped = AllocContext::new(&p, &c, &preds, 16).with_reserved(head_held);
+        let (_, y3) = solve(&overlapped, load, SaParams::default()).expect("overlap solves");
+        assert_eq!(y3, c.num_gpus, "overlapping holds must skip the restriction");
     }
 
     #[test]

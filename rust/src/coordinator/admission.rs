@@ -1,0 +1,1083 @@
+//! N-tenant online admission over the shared cluster — the layer that
+//! turns the PR-2 two-tenant co-location demo into a datacenter-shaped
+//! control loop (ROADMAP "scale-out next steps"; cf. MISO's and
+//! ParvaGPU's finding that multi-tenant GPU sharing lives or dies on
+//! the admission/re-packing policy).
+//!
+//! * [`AdmissionController::try_admit`] — a tenant arrives with a
+//!   pipeline, a QoS target (carried by the pipeline), and an offered
+//!   load; it is admitted iff a reservation-aware plan (Case 2 with
+//!   Case-1 fallback, every constraint family seeing the co-tenant
+//!   remainder) exists *and* every resident tenant's predicted p99 —
+//!   inflated by the cross-tenant bandwidth interference the newcomer
+//!   adds — stays within its target. Otherwise the tenant is rejected
+//!   with a typed [`RejectReason`].
+//! * [`AdmissionController::depart`] — when a tenant leaves, a
+//!   re-packing pass reclaims fragmented GPU share: a greedy first-fit
+//!   re-placement of every surviving allocation (cheapest possible
+//!   migration: allocations unchanged, instances just move), with a
+//!   simulated-annealing re-solve (`allocator::min_resource`, which
+//!   drives [`crate::allocator::sa::anneal`]) as the fallback for any
+//!   tenant the greedy pass cannot seat. The resulting migration plan
+//!   prices churn per instance started/stopped
+//!   ([`placement_churn`]) and is applied only when the reclaimed
+//!   whole-GPU gain beats that churn cost — the same hysteresis
+//!   philosophy as `run_closed_loop`.
+//! * [`replay_trace`] — drives the controller over a seed-reproducible
+//!   [`TenantTrace`] and validates every between-event interval
+//!   end-to-end in [`ClusterSim`], fanning the interval simulations
+//!   across cores deterministically.
+//! * [`static_partition_replay`] — the baseline the paper's cluster
+//!   claims are measured against: tenants get dedicated whole GPUs,
+//!   no spatial sharing.
+
+use crate::allocator::{max_load, min_resource, AllocContext, SaParams};
+use crate::comm::CommMode;
+use crate::config::ClusterSpec;
+use crate::coordinator::autoscale::placement_churn;
+use crate::deploy::{
+    self, gpus_in_use, merge_reservations, reservations_for, Allocation, GpuReservation,
+};
+use crate::predictor::StagePredictor;
+use crate::sim::{ClusterSim, Deployment, SimOptions, TenantSpec};
+use crate::suite::workload::{ArrivalProcess, TenantTrace, TraceEventKind};
+use crate::suite::Pipeline;
+use crate::util::{par, rng};
+
+/// Controller configuration.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Provision each tenant for `plan_qps × headroom` (same role as
+    /// [`super::AutoscaleConfig::headroom`]).
+    pub headroom: f64,
+    pub batch: u32,
+    pub sa: SaParams,
+    /// Seconds of provisioning disruption charged per instance started
+    /// or stopped by a re-pack migration.
+    pub churn_cost_s: f64,
+    /// Disruption-seconds a whole reclaimed GPU is worth; a re-pack is
+    /// applied only when `GPUs freed × this` exceeds the churn cost.
+    pub repack_gain_s_per_gpu: f64,
+    pub seed: u64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            headroom: 1.15,
+            batch: 32,
+            sa: SaParams::default(),
+            churn_cost_s: 0.5,
+            repack_gain_s_per_gpu: 10.0,
+            seed: 42,
+        }
+    }
+}
+
+/// Why an arrival was turned away.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RejectReason {
+    /// No reservation-aware allocation + placement exists in the
+    /// capacity the residents leave free (C1/C2/placement over the
+    /// co-tenant remainder).
+    NoFeasiblePlan { detail: String },
+    /// A plan exists, but some tenant's predicted p99 (resident or the
+    /// newcomer itself, under cross-tenant bandwidth interference)
+    /// would leave its QoS target.
+    QosViolation {
+        tenant: String,
+        predicted_p99_s: f64,
+        target_s: f64,
+    },
+}
+
+impl std::fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RejectReason::NoFeasiblePlan { detail } => {
+                write!(f, "no feasible reservation-aware plan: {detail}")
+            }
+            RejectReason::QosViolation { tenant, predicted_p99_s, target_s } => write!(
+                f,
+                "QoS violation for {tenant}: predicted p99 {predicted_p99_s:.4}s > target {target_s:.4}s"
+            ),
+        }
+    }
+}
+
+/// One admitted tenant and everything needed to re-plan it.
+#[derive(Debug, Clone)]
+pub struct Resident {
+    pub id: u64,
+    pub name: String,
+    pub pipeline: Pipeline,
+    pub predictors: Vec<StagePredictor>,
+    /// Load (queries/s) the plan was provisioned for (pre-headroom).
+    pub plan_qps: f64,
+    pub arrivals: ArrivalProcess,
+    pub allocation: Allocation,
+    pub deployment: Deployment,
+}
+
+/// One tenant's move in a re-pack migration plan.
+#[derive(Debug, Clone)]
+pub struct TenantMigration {
+    pub tenant: String,
+    pub old: Deployment,
+    pub new: Deployment,
+    /// Instances started + stopped by this move (its churn).
+    pub churn_instances: usize,
+}
+
+/// Outcome of a departure's re-packing pass.
+#[derive(Debug, Clone)]
+pub struct RepackPlan {
+    /// Moves for tenants whose deployment actually changes.
+    pub migrations: Vec<TenantMigration>,
+    pub gpus_before: usize,
+    pub gpus_after: usize,
+    pub churn_instances: usize,
+    /// `churn_instances × churn_cost_s`.
+    pub churn_cost_s: f64,
+    /// `(gpus_before − gpus_after) × repack_gain_s_per_gpu`.
+    pub gain_s: f64,
+    /// Whether the hysteresis check let the plan through (false = the
+    /// churn would cost more than the reclaimed share is worth; the old
+    /// placements stay).
+    pub applied: bool,
+}
+
+impl RepackPlan {
+    fn no_op(gpus: usize) -> RepackPlan {
+        RepackPlan {
+            migrations: Vec::new(),
+            gpus_before: gpus,
+            gpus_after: gpus,
+            churn_instances: 0,
+            churn_cost_s: 0.0,
+            gain_s: 0.0,
+            applied: false,
+        }
+    }
+
+    /// One-line summary for event logs and determinism comparisons.
+    pub fn summary(&self) -> String {
+        format!(
+            "repack: gpus {}->{} churn {} cost {:.2}s gain {:.2}s {}",
+            self.gpus_before,
+            self.gpus_after,
+            self.churn_instances,
+            self.churn_cost_s,
+            self.gain_s,
+            if self.applied { "applied" } else { "held" }
+        )
+    }
+}
+
+/// The online N-tenant admission controller. Owns the resident set;
+/// all planning is deterministic (seeded SA, no wall-clock input), so
+/// feeding the same arrival/departure sequence always reproduces the
+/// same decisions.
+pub struct AdmissionController {
+    cluster: ClusterSpec,
+    cfg: AdmissionConfig,
+    residents: Vec<Resident>,
+    next_id: u64,
+    admitted: usize,
+    rejected: usize,
+    /// Predictors per pipeline name (training is deterministic, so the
+    /// cache is purely a speedup for traces that repeat pipelines).
+    predictor_cache: Vec<(String, Vec<StagePredictor>)>,
+}
+
+impl AdmissionController {
+    pub fn new(cluster: ClusterSpec, cfg: AdmissionConfig) -> Self {
+        AdmissionController {
+            cluster,
+            cfg,
+            residents: Vec::new(),
+            next_id: 0,
+            admitted: 0,
+            rejected: 0,
+            predictor_cache: Vec::new(),
+        }
+    }
+
+    pub fn residents(&self) -> &[Resident] {
+        &self.residents
+    }
+
+    pub fn admitted(&self) -> usize {
+        self.admitted
+    }
+
+    pub fn rejected(&self) -> usize {
+        self.rejected
+    }
+
+    /// Distinct GPUs currently hosting at least one instance.
+    pub fn gpus_in_use(&self) -> usize {
+        gpus_in_use(self.residents.iter().map(|r| &r.deployment))
+    }
+
+    /// Σ N·p across residents (GPU-equivalents of SM share).
+    pub fn total_usage(&self) -> f64 {
+        self.residents.iter().map(|r| r.allocation.total_quota()).sum()
+    }
+
+    fn predictors_for(&mut self, pipeline: &Pipeline) -> Vec<StagePredictor> {
+        if let Some((_, preds)) =
+            self.predictor_cache.iter().find(|(n, _)| *n == pipeline.name)
+        {
+            return preds.clone();
+        }
+        let preds = crate::predictor::train_pipeline(pipeline, &self.cluster.gpu);
+        self.predictor_cache.push((pipeline.name.clone(), preds.clone()));
+        preds
+    }
+
+    /// Per-GPU holds of each resident, in resident order (one
+    /// `reservations_for` per resident — callers fold subsets of these
+    /// instead of recomputing).
+    fn resident_holds(&self) -> Vec<Vec<GpuReservation>> {
+        self.residents
+            .iter()
+            .map(|r| reservations_for(&r.pipeline, &self.cluster, &r.deployment))
+            .collect()
+    }
+
+    /// Fold `holds` into one per-GPU vector, skipping index `skip`.
+    fn fold_holds(
+        &self,
+        holds: &[Vec<GpuReservation>],
+        skip: Option<usize>,
+    ) -> Vec<GpuReservation> {
+        let mut held = vec![GpuReservation::default(); self.cluster.num_gpus];
+        for (i, h) in holds.iter().enumerate() {
+            if Some(i) == skip {
+                continue;
+            }
+            merge_reservations(&mut held, h);
+        }
+        held
+    }
+
+    /// Cross-tenant interference inflation for one tenant: the largest
+    /// fraction of any single GPU's memory bandwidth its neighbors'
+    /// worst-case demands occupy, scaled by the same 30% sensitivity
+    /// `AllocContext` uses for self-inflicted congestion. Per-GPU (a
+    /// cluster-wide average would dilute contention concentrated on one
+    /// device), conservative (assumes all neighbor instances run
+    /// concurrently), and monotone in the number of co-tenants —
+    /// exactly what an admission test needs.
+    fn neighbor_inflation(&self, others: &[GpuReservation]) -> f64 {
+        let worst = others
+            .iter()
+            .map(|r| r.bw_demand / self.cluster.gpu.mem_bw)
+            .fold(0.0f64, f64::max);
+        1.0 + 0.30 * worst.min(1.0)
+    }
+
+    /// Predicted p99 of a (pipeline, allocation) at its planning load,
+    /// inflated by its neighbors' bandwidth pressure.
+    fn tenant_p99(
+        &self,
+        pipeline: &Pipeline,
+        predictors: &[StagePredictor],
+        allocation: &Allocation,
+        plan_qps: f64,
+        others: &[GpuReservation],
+    ) -> f64 {
+        let ctx = AllocContext::new(pipeline, &self.cluster, predictors, self.cfg.batch);
+        ctx.predicted_p99(allocation, plan_qps) * self.neighbor_inflation(others)
+    }
+
+    /// Plan `pipeline` at `plan_qps` into the capacity `reserved`
+    /// leaves free: Case 2 (min resource) with a Case-1 (max load)
+    /// fallback near capacity, then bandwidth-aware placement — the
+    /// same ladder `Autoscaler::observe_with_reservations` climbs.
+    fn plan_into(
+        &self,
+        pipeline: &Pipeline,
+        predictors: &[StagePredictor],
+        plan_qps: f64,
+        reserved: &[GpuReservation],
+    ) -> Result<(Allocation, Deployment), String> {
+        let target = plan_qps * self.cfg.headroom;
+        let ctx = AllocContext::new(pipeline, &self.cluster, predictors, self.cfg.batch)
+            .with_reserved(reserved.to_vec());
+        let allocation = match min_resource::solve(&ctx, target, self.cfg.sa) {
+            Some((r, _gpus)) => r.best,
+            None => max_load::solve(&ctx, self.cfg.sa)
+                .filter(|r| r.best_objective >= target)
+                .map(|r| r.best)
+                .ok_or_else(|| format!("no allocation supports {target:.1} qps"))?,
+        };
+        let demands = ctx.bw_budget_storage(&allocation);
+        let deployment = deploy::deploy_reserved(
+            pipeline,
+            &self.cluster,
+            &allocation,
+            self.cfg.batch,
+            CommMode::GlobalIpc,
+            demands.as_deref().map(|d| deploy::BwBudget {
+                demands: d,
+                cap: 0.75 * self.cluster.gpu.mem_bw,
+            }),
+            reserved,
+        )
+        .map_err(|e| e.to_string())?;
+        Ok((allocation, deployment))
+    }
+
+    /// Decide admission for an arriving tenant. On success the tenant
+    /// becomes resident and its id is returned; on rejection the
+    /// cluster state is untouched.
+    pub fn try_admit(
+        &mut self,
+        name: &str,
+        pipeline: &Pipeline,
+        arrivals: ArrivalProcess,
+        plan_qps: f64,
+    ) -> Result<u64, RejectReason> {
+        assert!(plan_qps > 0.0, "planning load must be positive");
+        let predictors = self.predictors_for(pipeline);
+        // one reservations_for per resident; every view below folds
+        // subsets of these
+        let holds = self.resident_holds();
+        let reserved = self.fold_holds(&holds, None);
+        let (allocation, deployment) = self
+            .plan_into(pipeline, &predictors, plan_qps, &reserved)
+            .map_err(|detail| {
+                self.rejected += 1;
+                RejectReason::NoFeasiblePlan { detail }
+            })?;
+
+        // QoS check over the hypothetical resident set: every tenant —
+        // the newcomer included — must keep its predicted p99 within
+        // target once the newcomer's bandwidth pressure is on the bus.
+        let new_holds = reservations_for(pipeline, &self.cluster, &deployment);
+        let mut worst: Option<(String, f64, f64)> = None;
+        for (i, r) in self.residents.iter().enumerate() {
+            let mut others = self.fold_holds(&holds, Some(i));
+            merge_reservations(&mut others, &new_holds);
+            let p99 = self.tenant_p99(
+                &r.pipeline,
+                &r.predictors,
+                &r.allocation,
+                r.plan_qps,
+                &others,
+            );
+            if p99 > r.pipeline.qos_target_s
+                && worst.as_ref().map_or(true, |(_, w, _)| p99 > *w)
+            {
+                worst = Some((r.name.clone(), p99, r.pipeline.qos_target_s));
+            }
+        }
+        let own_p99 =
+            self.tenant_p99(pipeline, &predictors, &allocation, plan_qps, &reserved);
+        if own_p99 > pipeline.qos_target_s
+            && worst.as_ref().map_or(true, |(_, w, _)| own_p99 > *w)
+        {
+            worst = Some((name.to_string(), own_p99, pipeline.qos_target_s));
+        }
+        if let Some((tenant, predicted_p99_s, target_s)) = worst {
+            self.rejected += 1;
+            return Err(RejectReason::QosViolation { tenant, predicted_p99_s, target_s });
+        }
+
+        let id = self.next_id;
+        self.next_id += 1;
+        self.admitted += 1;
+        self.residents.push(Resident {
+            id,
+            name: name.to_string(),
+            pipeline: pipeline.clone(),
+            predictors,
+            plan_qps,
+            arrivals,
+            allocation,
+            deployment,
+        });
+        Ok(id)
+    }
+
+    /// Test-only: install a resident with a hand-built plan, bypassing
+    /// the planner, so re-packing scenarios are exactly reproducible.
+    #[cfg(test)]
+    fn insert_resident(
+        &mut self,
+        name: &str,
+        pipeline: &Pipeline,
+        allocation: Allocation,
+        deployment: Deployment,
+        plan_qps: f64,
+    ) -> u64 {
+        let predictors = self.predictors_for(pipeline);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.admitted += 1;
+        self.residents.push(Resident {
+            id,
+            name: name.to_string(),
+            pipeline: pipeline.clone(),
+            predictors,
+            plan_qps,
+            arrivals: ArrivalProcess::constant(plan_qps),
+            allocation,
+            deployment,
+        });
+        id
+    }
+
+    /// Remove a resident and re-pack the survivors. Returns `None` when
+    /// `id` is not resident (e.g. the arrival was rejected).
+    pub fn depart(&mut self, id: u64) -> Option<RepackPlan> {
+        let pos = self.residents.iter().position(|r| r.id == id)?;
+        self.residents.remove(pos);
+        Some(self.repack())
+    }
+
+    /// Re-packing pass (greedy fill first, SA re-solve fallback):
+    /// compute a candidate placement for every surviving tenant into a
+    /// cluster packed from scratch, price the migration churn, and
+    /// apply only if the whole-GPU reclaim is worth it.
+    fn repack(&mut self) -> RepackPlan {
+        let gpus_before = self.gpus_in_use();
+        if self.residents.is_empty() {
+            return RepackPlan::no_op(gpus_before);
+        }
+
+        // deterministic packing order: big footprints first (classic
+        // first-fit-decreasing), admission order as the tiebreak
+        let mut order: Vec<usize> = (0..self.residents.len()).collect();
+        order.sort_by(|&a, &b| {
+            let qa = self.residents[a].allocation.total_quota();
+            let qb = self.residents[b].allocation.total_quota();
+            qb.partial_cmp(&qa)
+                .unwrap()
+                .then(self.residents[a].id.cmp(&self.residents[b].id))
+        });
+
+        let mut held = vec![GpuReservation::default(); self.cluster.num_gpus];
+        let mut planned: Vec<(usize, Allocation, Deployment)> =
+            Vec::with_capacity(order.len());
+        for &i in &order {
+            let r = &self.residents[i];
+            let ctx =
+                AllocContext::new(&r.pipeline, &self.cluster, &r.predictors, self.cfg.batch);
+            let demands = ctx.bw_budget_storage(&r.allocation);
+            // greedy: keep the allocation, just re-place it — the
+            // place() heuristic (scarcest-remaining first) packs the
+            // freed share without touching instance counts or quotas
+            let greedy = deploy::deploy_reserved(
+                &r.pipeline,
+                &self.cluster,
+                &r.allocation,
+                self.cfg.batch,
+                CommMode::GlobalIpc,
+                demands.as_deref().map(|d| deploy::BwBudget {
+                    demands: d,
+                    cap: 0.75 * self.cluster.gpu.mem_bw,
+                }),
+                &held,
+            );
+            let (alloc, dep) = match greedy {
+                Ok(dep) => (r.allocation.clone(), dep),
+                // fallback: re-solve the tenant from scratch into the
+                // remainder (min_resource drives allocator::sa's
+                // annealer — quotas and counts may change)
+                Err(_) => match self.plan_into(&r.pipeline, &r.predictors, r.plan_qps, &held)
+                {
+                    Ok(pair) => pair,
+                    // even the SA fallback cannot seat this tenant in
+                    // the packed prefix: abort, keep every placement
+                    Err(_) => return RepackPlan::no_op(gpus_before),
+                },
+            };
+            let res = reservations_for(&r.pipeline, &self.cluster, &dep);
+            merge_reservations(&mut held, &res);
+            planned.push((i, alloc, dep));
+        }
+
+        let gpus_after = gpus_in_use(planned.iter().map(|(_, _, d)| d));
+        let mut migrations = Vec::new();
+        let mut churn_instances = 0usize;
+        for (i, _alloc, dep) in &planned {
+            let r = &self.residents[*i];
+            let churn = placement_churn(&r.deployment.placements, &dep.placements);
+            if churn > 0 {
+                churn_instances += churn;
+                migrations.push(TenantMigration {
+                    tenant: r.name.clone(),
+                    old: r.deployment.clone(),
+                    new: dep.clone(),
+                    churn_instances: churn,
+                });
+            }
+        }
+        let churn_cost_s = churn_instances as f64 * self.cfg.churn_cost_s;
+        let gain_s =
+            gpus_before.saturating_sub(gpus_after) as f64 * self.cfg.repack_gain_s_per_gpu;
+        let applied = gain_s > churn_cost_s;
+        if applied {
+            for (i, alloc, dep) in planned {
+                self.residents[i].allocation = alloc;
+                self.residents[i].deployment = dep;
+            }
+        }
+        RepackPlan {
+            migrations,
+            gpus_before,
+            gpus_after: if applied { gpus_after } else { gpus_before },
+            churn_instances,
+            churn_cost_s,
+            gain_s,
+            applied,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Trace replay (ClusterSim validation) and the static baseline
+// ---------------------------------------------------------------------
+
+/// Replay configuration.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    pub admission: AdmissionConfig,
+    /// Queries per tenant in each between-event validation simulation.
+    pub queries: usize,
+    /// Worker threads for the interval simulations (0 = default pool).
+    pub threads: usize,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> Self {
+        ReplayConfig { admission: AdmissionConfig::default(), queries: 1_000, threads: 0 }
+    }
+}
+
+/// One trace event as the controller saw it.
+#[derive(Debug, Clone)]
+pub struct ReplayEvent {
+    pub t_s: f64,
+    pub tenant: u64,
+    /// "arrive <pipeline> @ <qps>" or "depart".
+    pub desc: String,
+    /// "admitted", "rejected: <reason>", or a [`RepackPlan::summary`].
+    pub decision: String,
+    pub residents: usize,
+    pub gpus_in_use: usize,
+    pub usage: f64,
+}
+
+/// End-to-end measurement of one between-event interval: all residents
+/// co-run in a single merged [`ClusterSim`].
+#[derive(Debug, Clone)]
+pub struct IntervalReport {
+    pub t_start_s: f64,
+    /// Names of the residents during this interval (admission order).
+    pub tenants: Vec<String>,
+    /// Per-tenant measured p99 (same order as `tenants`).
+    pub p99_s: Vec<f64>,
+    /// p99 within the tenant's QoS target.
+    pub qos_met: Vec<bool>,
+}
+
+/// Full outcome of a trace replay.
+#[derive(Debug, Clone)]
+pub struct ReplayReport {
+    pub events: Vec<ReplayEvent>,
+    pub intervals: Vec<IntervalReport>,
+    pub admitted: usize,
+    pub rejected: usize,
+    pub repacks_applied: usize,
+    pub peak_residents: usize,
+    /// Mean GPUs in use across intervals (time-unweighted).
+    pub mean_gpus_in_use: f64,
+}
+
+/// Drive an [`AdmissionController`] over a [`TenantTrace`] and validate
+/// every between-event interval in the merged multi-tenant simulator.
+///
+/// Phase 1 (sequential, inherently): admission decisions in event
+/// order — each decision only depends on the controller state, never on
+/// simulation results, so the decision sequence is a pure function of
+/// `(trace, cfg)`. Phase 2 (parallel): one [`ClusterSim`] per interval
+/// with at least one resident, seeded `mix_seed(cfg.admission.seed,
+/// interval index)`, fanned with [`par::par_map_threads`] — results
+/// land by input index, so the report is bit-identical for any
+/// `cfg.threads` (the golden suite pins 1/2/8).
+pub fn replay_trace(
+    cluster: &ClusterSpec,
+    trace: &TenantTrace,
+    cfg: &ReplayConfig,
+) -> Result<ReplayReport, String> {
+    let mut ctl = AdmissionController::new(cluster.clone(), cfg.admission.clone());
+    // trace tenant id -> controller resident id
+    let mut resident_ids: Vec<(u64, u64)> = Vec::new();
+    let mut events = Vec::with_capacity(trace.events.len());
+    let mut peak_residents = 0usize;
+    let mut repacks_applied = 0usize;
+    // interval snapshots: (t_start, owned copies of the resident set)
+    type Snapshot = (f64, Vec<(String, Pipeline, Deployment, ArrivalProcess)>);
+    let mut snapshots: Vec<Snapshot> = Vec::new();
+
+    for e in &trace.events {
+        let (desc, decision) = match &e.kind {
+            TraceEventKind::Arrive { pipeline, arrivals, plan_qps } => {
+                let desc = format!("arrive {pipeline} @ {plan_qps:.0} qps");
+                let p = crate::suite::pipeline_by_name(pipeline)
+                    .ok_or_else(|| format!("trace names unknown pipeline '{pipeline}'"))?;
+                let name = format!("{pipeline}#{}", e.tenant);
+                let decision =
+                    match ctl.try_admit(&name, &p, arrivals.clone(), *plan_qps) {
+                        Ok(id) => {
+                            resident_ids.push((e.tenant, id));
+                            "admitted".to_string()
+                        }
+                        Err(reason) => format!("rejected: {reason}"),
+                    };
+                (desc, decision)
+            }
+            TraceEventKind::Depart => {
+                let desc = "depart".to_string();
+                let decision = match resident_ids.iter().position(|(t, _)| *t == e.tenant)
+                {
+                    Some(pos) => {
+                        let (_, id) = resident_ids.remove(pos);
+                        let plan = ctl.depart(id).expect("resident departs");
+                        if plan.applied {
+                            repacks_applied += 1;
+                        }
+                        plan.summary()
+                    }
+                    None => "no-op (was not admitted)".to_string(),
+                };
+                (desc, decision)
+            }
+        };
+        peak_residents = peak_residents.max(ctl.residents().len());
+        events.push(ReplayEvent {
+            t_s: e.t_s,
+            tenant: e.tenant,
+            desc,
+            decision,
+            residents: ctl.residents().len(),
+            gpus_in_use: ctl.gpus_in_use(),
+            usage: ctl.total_usage(),
+        });
+        if !ctl.residents().is_empty() {
+            snapshots.push((
+                e.t_s,
+                ctl.residents()
+                    .iter()
+                    .map(|r| {
+                        (
+                            r.name.clone(),
+                            r.pipeline.clone(),
+                            r.deployment.clone(),
+                            r.arrivals.clone(),
+                        )
+                    })
+                    .collect(),
+            ));
+        }
+    }
+
+    // phase 2: merged end-to-end measurement per interval
+    let threads = if cfg.threads == 0 { par::max_threads() } else { cfg.threads };
+    let seed = cfg.admission.seed;
+    let queries = cfg.queries;
+    let intervals: Vec<Result<IntervalReport, String>> =
+        par::par_map_threads(&snapshots, threads, |idx, (t_start, tenants)| {
+            let specs: Vec<TenantSpec> = tenants
+                .iter()
+                .map(|(_, p, d, a)| TenantSpec {
+                    pipeline: p,
+                    deployment: d,
+                    arrivals: a.clone(),
+                })
+                .collect();
+            let opts = SimOptions {
+                seed: rng::mix_seed(seed, idx as u64),
+                queries,
+                ..Default::default()
+            };
+            let reports = ClusterSim::new(cluster, specs, opts)
+                .run()
+                .map_err(|e| format!("interval {idx}: {e}"))?;
+            let p99_s: Vec<f64> = reports.iter().map(|r| r.p99()).collect();
+            let qos_met: Vec<bool> = tenants
+                .iter()
+                .zip(&p99_s)
+                .map(|((_, p, _, _), &x)| x <= p.qos_target_s)
+                .collect();
+            Ok(IntervalReport {
+                t_start_s: *t_start,
+                tenants: tenants.iter().map(|(n, _, _, _)| n.clone()).collect(),
+                p99_s,
+                qos_met,
+            })
+        });
+    let intervals = intervals.into_iter().collect::<Result<Vec<_>, _>>()?;
+
+    let with_gpus: Vec<usize> = events
+        .iter()
+        .filter(|e| e.residents > 0)
+        .map(|e| e.gpus_in_use)
+        .collect();
+    let mean_gpus_in_use = if with_gpus.is_empty() {
+        0.0
+    } else {
+        with_gpus.iter().sum::<usize>() as f64 / with_gpus.len() as f64
+    };
+    Ok(ReplayReport {
+        admitted: ctl.admitted(),
+        rejected: ctl.rejected(),
+        repacks_applied,
+        peak_residents,
+        mean_gpus_in_use,
+        events,
+        intervals,
+    })
+}
+
+/// Outcome of the static-partitioning baseline replay.
+#[derive(Debug, Clone)]
+pub struct StaticReplayReport {
+    pub admitted: usize,
+    pub rejected: usize,
+    pub peak_residents: usize,
+    /// Mean whole GPUs occupied while at least one tenant is resident.
+    pub mean_gpus_in_use: f64,
+}
+
+/// Static partitioning baseline: each tenant demands *dedicated whole
+/// GPUs* (the smallest exclusive sub-cluster on which Case 2 solves at
+/// its planning load) and is admitted iff that many free GPUs remain.
+/// No spatial sharing — this is the peak-load ceiling the paper's
+/// contention-aware allocation beats by up to 64.5%.
+pub fn static_partition_replay(
+    cluster: &ClusterSpec,
+    trace: &TenantTrace,
+    cfg: &AdmissionConfig,
+) -> Result<StaticReplayReport, String> {
+    let mut free = cluster.num_gpus;
+    // trace tenant id -> GPUs held
+    let mut holds: Vec<(u64, usize)> = Vec::new();
+    let mut admitted = 0usize;
+    let mut rejected = 0usize;
+    let mut peak_residents = 0usize;
+    let mut gpu_samples: Vec<usize> = Vec::new();
+    let mut predictor_cache: Vec<(String, Vec<StagePredictor>)> = Vec::new();
+
+    for e in &trace.events {
+        match &e.kind {
+            TraceEventKind::Arrive { pipeline, plan_qps, .. } => {
+                let p = crate::suite::pipeline_by_name(pipeline)
+                    .ok_or_else(|| format!("trace names unknown pipeline '{pipeline}'"))?;
+                let preds = match predictor_cache.iter().find(|(n, _)| *n == p.name) {
+                    Some((_, preds)) => preds.clone(),
+                    None => {
+                        let preds = crate::predictor::train_pipeline(&p, &cluster.gpu);
+                        predictor_cache.push((p.name.clone(), preds.clone()));
+                        preds
+                    }
+                };
+                // smallest dedicated sub-cluster that serves the tenant
+                let target = plan_qps * cfg.headroom;
+                let mut need = None;
+                for k in 1..=free {
+                    let sub = ClusterSpec { num_gpus: k, ..cluster.clone() };
+                    let ctx = AllocContext::new(&p, &sub, &preds, cfg.batch);
+                    if min_resource::solve(&ctx, target, cfg.sa).is_some() {
+                        need = Some(k);
+                        break;
+                    }
+                }
+                match need {
+                    Some(k) => {
+                        free -= k;
+                        holds.push((e.tenant, k));
+                        admitted += 1;
+                    }
+                    None => rejected += 1,
+                }
+            }
+            TraceEventKind::Depart => {
+                if let Some(pos) = holds.iter().position(|(t, _)| *t == e.tenant) {
+                    let (_, k) = holds.remove(pos);
+                    free += k;
+                }
+            }
+        }
+        peak_residents = peak_residents.max(holds.len());
+        if !holds.is_empty() {
+            gpu_samples.push(cluster.num_gpus - free);
+        }
+    }
+    let mean_gpus_in_use = if gpu_samples.is_empty() {
+        0.0
+    } else {
+        gpu_samples.iter().sum::<usize>() as f64 / gpu_samples.len() as f64
+    };
+    Ok(StaticReplayReport { admitted, rejected, peak_residents, mean_gpus_in_use })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::suite::real;
+
+    fn controller() -> AdmissionController {
+        AdmissionController::new(ClusterSpec::two_2080ti(), AdmissionConfig::default())
+    }
+
+    fn arrive(
+        ctl: &mut AdmissionController,
+        name: &str,
+        pipeline: &Pipeline,
+        qps: f64,
+    ) -> Result<u64, RejectReason> {
+        ctl.try_admit(name, pipeline, ArrivalProcess::constant(qps), qps)
+    }
+
+    #[test]
+    fn admits_then_rejects_at_capacity_with_reason() {
+        let mut ctl = controller();
+        let p = real::text_to_text();
+        let first = arrive(&mut ctl, "a", &p, 120.0).expect("empty cluster admits");
+        assert_eq!(first, 0);
+        // keep admitting identical tenants until the cluster is full:
+        // the first rejection must carry a typed, non-empty reason
+        let mut rejections = 0;
+        for i in 1..8 {
+            match arrive(&mut ctl, &format!("t{i}"), &p, 120.0) {
+                Ok(_) => {}
+                Err(reason) => {
+                    rejections += 1;
+                    match &reason {
+                        RejectReason::NoFeasiblePlan { detail } => {
+                            assert!(!detail.is_empty())
+                        }
+                        RejectReason::QosViolation { predicted_p99_s, target_s, .. } => {
+                            assert!(predicted_p99_s > target_s)
+                        }
+                    }
+                    assert!(!reason.to_string().is_empty());
+                }
+            }
+        }
+        assert!(rejections > 0, "a 2-GPU cluster cannot hold 8 such tenants");
+        assert!(ctl.admitted() >= 1 && ctl.rejected() == rejections);
+        // rejection left the resident set coherent
+        assert_eq!(ctl.residents().len(), ctl.admitted());
+        assert!(ctl.gpus_in_use() <= 2);
+    }
+
+    #[test]
+    fn admission_respects_resident_footprints() {
+        // the merged deployment after two admissions must co-exist:
+        // ClusterSim's admission check is the arbiter
+        let mut ctl = controller();
+        let pa = real::img_to_text();
+        let pb = real::text_to_text();
+        arrive(&mut ctl, "a", &pa, 100.0).expect("A admits");
+        arrive(&mut ctl, "b", &pb, 80.0).expect("B fits the remainder");
+        let c = ClusterSpec::two_2080ti();
+        let specs: Vec<TenantSpec> = ctl
+            .residents()
+            .iter()
+            .map(|r| TenantSpec {
+                pipeline: &r.pipeline,
+                deployment: &r.deployment,
+                arrivals: r.arrivals.clone(),
+            })
+            .collect();
+        ClusterSim::new(&c, specs, SimOptions { queries: 64, ..Default::default() })
+            .admit()
+            .expect("admitted tenants co-exist on the shared GPUs");
+    }
+
+    /// A tenant deliberately fragmented across both GPUs (stage 0 on
+    /// GPU 0, stage 1 on GPU 1) next to a departing neighbor — the
+    /// canonical re-packing setup, installed directly so the scenario
+    /// does not depend on planner heuristics.
+    fn fragmented_pair(
+        cfg: AdmissionConfig,
+    ) -> (AdmissionController, u64 /* survivor */, u64 /* departer */) {
+        use crate::sim::InstancePlacement;
+        let mut ctl = AdmissionController::new(ClusterSpec::two_2080ti(), cfg);
+        let p = real::img_to_text();
+        let split = |q: f64| Deployment {
+            placements: vec![
+                InstancePlacement { stage: 0, gpu: 0, sm_frac: q },
+                InstancePlacement { stage: 1, gpu: 1, sm_frac: q },
+            ],
+            batch: 32,
+            comm: CommMode::GlobalIpc,
+        };
+        let survivor = ctl.insert_resident(
+            "survivor",
+            &p,
+            Allocation { instances: vec![1, 1], quotas: vec![0.3, 0.3] },
+            split(0.3),
+            40.0,
+        );
+        let departer = ctl.insert_resident(
+            "departer",
+            &p,
+            Allocation { instances: vec![1, 1], quotas: vec![0.5, 0.5] },
+            split(0.5),
+            100.0,
+        );
+        (ctl, survivor, departer)
+    }
+
+    #[test]
+    fn departure_repack_strictly_reduces_gpu_count() {
+        let (mut ctl, survivor, departer) = fragmented_pair(AdmissionConfig::default());
+        assert_eq!(ctl.gpus_in_use(), 2);
+        let plan = ctl.depart(departer).expect("resident departs");
+        // the survivor's two instances (Σ 0.6 SM) fit one GPU: greedy
+        // re-placement must reclaim a whole device, and one reclaimed
+        // GPU (worth 10 s) beats moving one instance (0.5 s × 2)
+        assert!(plan.applied, "{}", plan.summary());
+        assert_eq!(plan.gpus_before, 2);
+        assert_eq!(plan.gpus_after, 1);
+        assert!(
+            plan.gpus_after < plan.gpus_before,
+            "applied re-pack must strictly reduce the GPU count"
+        );
+        assert_eq!(ctl.gpus_in_use(), 1);
+        assert_eq!(plan.migrations.len(), 1);
+        assert_eq!(plan.migrations[0].tenant, "survivor");
+        // one instance moved: one stop + one start
+        assert_eq!(plan.churn_instances, 2);
+        assert!((plan.churn_cost_s - 1.0).abs() < 1e-9);
+        assert!(plan.gain_s > plan.churn_cost_s);
+        // the survivor's allocation is untouched (greedy pass moves
+        // instances, it does not re-solve)
+        let r = &ctl.residents()[0];
+        assert_eq!(r.id, survivor);
+        assert_eq!(r.allocation.instances, vec![1, 1]);
+        assert_eq!(r.allocation.quotas, vec![0.3, 0.3]);
+    }
+
+    #[test]
+    fn repack_noop_when_churn_cost_exceeds_savings() {
+        // same fragmentation, but a reclaimed GPU is worth less than
+        // moving a single instance: hysteresis must hold every placement
+        let cfg = AdmissionConfig {
+            repack_gain_s_per_gpu: 0.4,
+            churn_cost_s: 0.5,
+            ..AdmissionConfig::default()
+        };
+        let (mut ctl, survivor, departer) = fragmented_pair(cfg);
+        let before: Vec<_> = ctl
+            .residents()
+            .iter()
+            .map(|r| (r.id, r.deployment.placements.clone()))
+            .collect();
+        let plan = ctl.depart(departer).expect("resident departs");
+        assert!(!plan.applied, "{}", plan.summary());
+        // the candidate would have saved a GPU, but 0.4 s gain < 1.0 s churn
+        assert!(plan.gain_s < plan.churn_cost_s);
+        assert_eq!(plan.gpus_after, plan.gpus_before, "held plan reports no change");
+        assert_eq!(ctl.gpus_in_use(), 2, "no instance may move");
+        let r = &ctl.residents()[0];
+        assert_eq!(r.id, survivor);
+        let (_, old) = before.iter().find(|(id, _)| *id == survivor).unwrap();
+        assert_eq!(&r.deployment.placements, old, "survivor must not move");
+    }
+
+    #[test]
+    fn depart_unknown_id_is_none_and_departures_free_capacity() {
+        let mut ctl = controller();
+        let p = real::img_to_text();
+        assert!(ctl.depart(99).is_none());
+        let id = arrive(&mut ctl, "a", &p, 150.0).expect("admits");
+        assert_eq!(ctl.residents().len(), 1);
+        let plan = ctl.depart(id).expect("departs");
+        assert_eq!(ctl.residents().len(), 0);
+        assert_eq!(plan.gpus_after, 0, "empty cluster has no footprint");
+        assert_eq!(ctl.gpus_in_use(), 0);
+        // capacity is actually free again: the same tenant re-admits
+        arrive(&mut ctl, "a2", &p, 150.0).expect("re-admits after departure");
+    }
+
+    #[test]
+    fn static_baseline_admits_fewer_than_sharing() {
+        // the headline claim, qualitatively: contention-aware sharing
+        // absorbs at least as many tenants as dedicated whole GPUs
+        let c = ClusterSpec::two_2080ti();
+        let cfg = ReplayConfig { queries: 300, ..Default::default() };
+        let trace = TenantTrace::generate(
+            &crate::suite::workload::TenantTraceConfig {
+                tenants: 6,
+                mean_interarrival_s: 100.0,
+                mean_lifetime_s: 100_000.0, // everyone stays: pure fill
+                peak_qps_lo: 40.0,
+                peak_qps_hi: 80.0,
+                ..Default::default()
+            },
+            7,
+        );
+        let shared = replay_trace(&c, &trace, &cfg).expect("replay runs");
+        let dedicated = static_partition_replay(&c, &trace, &cfg.admission).unwrap();
+        assert!(
+            shared.admitted >= dedicated.admitted,
+            "sharing admitted {} vs static {}",
+            shared.admitted,
+            dedicated.admitted
+        );
+        assert!(dedicated.admitted + dedicated.rejected == 6);
+        assert!(shared.admitted + shared.rejected == 6);
+        assert!(shared.peak_residents >= dedicated.peak_residents);
+    }
+
+    #[test]
+    fn replayed_intervals_hold_qos_for_admitted_tenants() {
+        let c = ClusterSpec::two_2080ti();
+        let cfg = ReplayConfig { queries: 600, ..Default::default() };
+        let trace = TenantTrace::generate(
+            &crate::suite::workload::TenantTraceConfig {
+                tenants: 4,
+                peak_qps_lo: 50.0,
+                peak_qps_hi: 120.0,
+                ..Default::default()
+            },
+            11,
+        );
+        let rep = replay_trace(&c, &trace, &cfg).expect("replay runs");
+        assert_eq!(rep.events.len(), trace.events.len());
+        assert!(!rep.intervals.is_empty());
+        assert!(rep.admitted >= 1, "at least the first tenant must admit");
+        // the controller's promise: what it admits, it serves — allow a
+        // small tail tolerance as every QoS test in this repo does
+        let mut checked = 0;
+        for iv in &rep.intervals {
+            for (name, &p99) in iv.tenants.iter().zip(&iv.p99_s) {
+                let pname = name.split('#').next().unwrap();
+                let q = crate::suite::pipeline_by_name(pname).unwrap().qos_target_s;
+                assert!(
+                    p99 <= q * 1.25,
+                    "{name}: measured p99 {p99:.4}s vs target {q:.4}s"
+                );
+                checked += 1;
+            }
+        }
+        assert!(checked > 0);
+        // diurnal pattern means offered load is usually below the peak
+        // the plan provisioned for, so most intervals should meet QoS
+        let met: usize = rep
+            .intervals
+            .iter()
+            .flat_map(|iv| iv.qos_met.iter())
+            .filter(|&&m| m)
+            .count();
+        assert!(met * 2 >= checked, "QoS met in {met}/{checked} tenant-intervals");
+    }
+}

@@ -11,10 +11,15 @@
 //! large parameter sweeps; this module is what a downstream user
 //! deploys.
 
+pub mod admission;
 pub mod autoscale;
 pub mod backend;
 pub mod batcher;
 
+pub use admission::{
+    replay_trace, static_partition_replay, AdmissionConfig, AdmissionController,
+    RejectReason, RepackPlan, ReplayConfig, ReplayReport,
+};
 pub use autoscale::{
     run_closed_loop, AutoscaleConfig, Autoscaler, ClosedLoopReport, EpochLoopConfig,
     EpochRecord,

@@ -111,6 +111,41 @@ pub fn reservations_for(
     res
 }
 
+/// Accumulate `extra`'s per-GPU holds into `into` (same cluster, one
+/// entry per GPU): the N-tenant form of [`reservations_for`], where the
+/// remainder a newcomer plans into is the sum of every resident
+/// tenant's footprint.
+pub fn merge_reservations(into: &mut [GpuReservation], extra: &[GpuReservation]) {
+    assert_eq!(
+        into.len(),
+        extra.len(),
+        "reservation vectors must cover the same GPUs"
+    );
+    for (a, b) in into.iter_mut().zip(extra) {
+        a.sm_frac += b.sm_frac;
+        a.mem_bytes += b.mem_bytes;
+        a.contexts += b.contexts;
+        a.bw_demand += b.bw_demand;
+    }
+}
+
+/// Number of distinct GPUs hosting at least one instance across a set
+/// of deployments — the footprint the departure re-packing pass tries
+/// to shrink.
+pub fn gpus_in_use<'a, I>(deployments: I) -> usize
+where
+    I: IntoIterator<Item = &'a Deployment>,
+{
+    let mut mask = 0u64;
+    for d in deployments {
+        for p in &d.placements {
+            assert!(p.gpu < 64, "raise the gpu mask width");
+            mask |= 1u64 << p.gpu;
+        }
+    }
+    mask.count_ones() as usize
+}
+
 /// Place an allocation on the cluster. Returns the placements and the
 /// final per-GPU states (for constraint inspection, e.g. Σ b(p) per GPU).
 ///
@@ -531,6 +566,44 @@ mod tests {
             assert!(g.sm_allocated() <= 1.0 + 1e-9);
             assert!(g.mem_free() >= 0.0);
         }
+    }
+
+    #[test]
+    fn merge_reservations_sums_per_gpu() {
+        let mut a = vec![
+            GpuReservation { sm_frac: 0.3, mem_bytes: 1.0e9, contexts: 2, bw_demand: 5.0e9 },
+            GpuReservation::default(),
+        ];
+        let b = vec![
+            GpuReservation { sm_frac: 0.2, mem_bytes: 2.0e9, contexts: 1, bw_demand: 1.0e9 },
+            GpuReservation { sm_frac: 0.4, mem_bytes: 0.5e9, contexts: 3, bw_demand: 2.0e9 },
+        ];
+        merge_reservations(&mut a, &b);
+        assert!((a[0].sm_frac - 0.5).abs() < 1e-12);
+        assert!((a[0].mem_bytes - 3.0e9).abs() < 1.0);
+        assert_eq!(a[0].contexts, 3);
+        assert!((a[0].bw_demand - 6.0e9).abs() < 1.0);
+        assert!((a[1].sm_frac - 0.4).abs() < 1e-12);
+        assert_eq!(a[1].contexts, 3);
+    }
+
+    #[test]
+    fn gpus_in_use_counts_distinct_devices() {
+        let mk = |gpus: &[usize]| Deployment {
+            placements: gpus
+                .iter()
+                .map(|&g| InstancePlacement { stage: 0, gpu: g, sm_frac: 0.1 })
+                .collect(),
+            batch: 8,
+            comm: CommMode::GlobalIpc,
+        };
+        let a = mk(&[0, 0, 1]);
+        let b = mk(&[1]);
+        let c = mk(&[3]);
+        assert_eq!(gpus_in_use([&a]), 2);
+        assert_eq!(gpus_in_use([&a, &b]), 2);
+        assert_eq!(gpus_in_use([&a, &b, &c]), 3);
+        assert_eq!(gpus_in_use(std::iter::empty::<&Deployment>()), 0);
     }
 
     #[test]

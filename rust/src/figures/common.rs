@@ -14,18 +14,14 @@ use crate::baselines::{plan, Planner};
 use crate::comm::CommMode;
 use crate::config::ClusterSpec;
 use crate::deploy;
-use crate::predictor::{ProfileConfig, StagePredictor};
+use crate::predictor::StagePredictor;
 use crate::sim::{CostModel, Deployment, InstancePlacement, SimOptions, SimReport, Simulator};
 use crate::suite::{workload, Pipeline};
 use crate::util::par;
 
 /// Train the per-stage predictors for a pipeline (offline phase).
 pub fn train_predictors(pipeline: &Pipeline, cluster: &ClusterSpec) -> Vec<StagePredictor> {
-    pipeline
-        .stages
-        .iter()
-        .map(|s| StagePredictor::train(s, &cluster.gpu, &ProfileConfig::default()))
-        .collect()
+    crate::predictor::train_pipeline(pipeline, &cluster.gpu)
 }
 
 /// Simulation defaults for the sweeps: enough queries for a stable p99

@@ -640,6 +640,152 @@ pub fn colocate() -> Result<Vec<Table>, String> {
     )
 }
 
+/// Parameters of the N-tenant online-admission scenario (the `camelot
+/// admit` subcommand exposes them).
+#[derive(Debug, Clone)]
+pub struct AdmissionExpConfig {
+    /// Tenant arrivals in the trace.
+    pub tenants: usize,
+    /// Mean gap between tenant arrivals / mean residency (seconds).
+    pub mean_interarrival_s: f64,
+    pub mean_lifetime_s: f64,
+    /// Per-tenant diurnal peak band (queries/s).
+    pub peak_qps_lo: f64,
+    pub peak_qps_hi: f64,
+    /// Queries per tenant in each between-event validation simulation.
+    pub queries: usize,
+    pub seed: u64,
+}
+
+impl Default for AdmissionExpConfig {
+    fn default() -> Self {
+        AdmissionExpConfig {
+            tenants: 10,
+            mean_interarrival_s: 600.0,
+            mean_lifetime_s: 2_400.0,
+            peak_qps_lo: 50.0,
+            peak_qps_hi: 150.0,
+            queries: 1_000,
+            seed: 42,
+        }
+    }
+}
+
+/// N-tenant online admission with departure re-packing vs static whole-
+/// GPU partitioning: generate a seed-reproducible [`TenantTrace`],
+/// replay it through `coordinator::admission` (every between-event
+/// interval validated end-to-end in `ClusterSim`), replay the same
+/// trace against the dedicated-GPU baseline, and table the decision
+/// log, the measured per-interval QoS, and the admitted-count /
+/// utilization comparison.
+pub fn admission_tables(cfg: &AdmissionExpConfig) -> Result<Vec<Table>, String> {
+    use crate::coordinator::admission::{replay_trace, static_partition_replay, ReplayConfig};
+    use crate::suite::workload::{TenantTrace, TenantTraceConfig};
+
+    if cfg.tenants == 0 || cfg.queries == 0 {
+        return Err("tenants and queries must be at least 1".into());
+    }
+    if !(cfg.peak_qps_lo > 0.0 && cfg.peak_qps_hi >= cfg.peak_qps_lo) {
+        return Err("peak band must be positive and ordered".into());
+    }
+    if !(cfg.mean_interarrival_s > 0.0 && cfg.mean_lifetime_s > 0.0) {
+        return Err("mean interarrival and lifetime must be positive".into());
+    }
+    let cluster = ClusterSpec::two_2080ti();
+    let trace = TenantTrace::generate(
+        &TenantTraceConfig {
+            tenants: cfg.tenants,
+            mean_interarrival_s: cfg.mean_interarrival_s,
+            mean_lifetime_s: cfg.mean_lifetime_s,
+            peak_qps_lo: cfg.peak_qps_lo,
+            peak_qps_hi: cfg.peak_qps_hi,
+            ..Default::default()
+        },
+        cfg.seed,
+    );
+    let mut replay_cfg = ReplayConfig { queries: cfg.queries, ..Default::default() };
+    replay_cfg.admission.seed = cfg.seed;
+    let shared = replay_trace(&cluster, &trace, &replay_cfg)?;
+    let dedicated = static_partition_replay(&cluster, &trace, &replay_cfg.admission)?;
+
+    let mut t1 = Table::new(
+        "Admission: online decision log (contention-aware shared cluster)",
+        &["t_s", "tenant", "event", "decision", "residents", "gpus", "usage"],
+    );
+    for e in &shared.events {
+        t1.push(&[
+            format!("{:.0}", e.t_s),
+            format!("#{}", e.tenant),
+            e.desc.clone(),
+            e.decision.clone(),
+            e.residents.to_string(),
+            e.gpus_in_use.to_string(),
+            format!("{:.2}", e.usage),
+        ]);
+    }
+
+    let mut t2 = Table::new(
+        "Admission: measured per-interval p99 (merged ClusterSim validation)",
+        &["t_start_s", "tenants", "p99_ms", "qos_met"],
+    );
+    for iv in &shared.intervals {
+        t2.push(&[
+            format!("{:.0}", iv.t_start_s),
+            // comma, not '+': artifact pipeline names (p1+c2+m3) may
+            // appear in tenant names
+            iv.tenants.join(","),
+            iv.p99_s
+                .iter()
+                .map(|p| format!("{:.1}", p * 1e3))
+                .collect::<Vec<_>>()
+                .join("/"),
+            iv.qos_met
+                .iter()
+                .map(|m| if *m { "y" } else { "N" }.to_string())
+                .collect::<Vec<_>>()
+                .join("/"),
+        ]);
+    }
+
+    let mut t3 = Table::new(
+        "Admission: shared spatial multitasking vs static whole-GPU partitioning",
+        &["policy", "admitted", "rejected", "peak_residents", "mean_gpus_in_use"],
+    );
+    t3.push(&[
+        "camelot (shared)".into(),
+        shared.admitted.to_string(),
+        shared.rejected.to_string(),
+        shared.peak_residents.to_string(),
+        format!("{:.2}", shared.mean_gpus_in_use),
+    ]);
+    t3.push(&[
+        "static partition".into(),
+        dedicated.admitted.to_string(),
+        dedicated.rejected.to_string(),
+        dedicated.peak_residents.to_string(),
+        format!("{:.2}", dedicated.mean_gpus_in_use),
+    ]);
+    let mut t4 = Table::new("Admission summary", &["metric", "value"]);
+    t4.push(&[
+        "admitted uplift vs static".to_string(),
+        if dedicated.admitted > 0 {
+            format!(
+                "{:+.1}%",
+                100.0 * (shared.admitted as f64 / dedicated.admitted as f64 - 1.0)
+            )
+        } else {
+            "-".to_string()
+        },
+    ]);
+    t4.push(&["repacks applied".to_string(), shared.repacks_applied.to_string()]);
+    Ok(vec![t1, t2, t3, t4])
+}
+
+/// The registered `admission` experiment, at the default trace shape.
+pub fn admission() -> Result<Vec<Table>, String> {
+    admission_tables(&AdmissionExpConfig::default())
+}
+
 #[cfg(test)]
 mod tests {
     //! Smoke tests on reduced workloads; the ordering assertions
@@ -667,6 +813,33 @@ mod tests {
             let savings: f64 = row[3].trim_end_matches('%').parse().unwrap();
             assert!(savings > 5.0, "{}: savings {savings}%", row[0]);
         }
+    }
+
+    #[test]
+    fn admission_emits_coherent_tables() {
+        let cfg = AdmissionExpConfig {
+            tenants: 4,
+            queries: 400,
+            ..Default::default()
+        };
+        let ts = admission_tables(&cfg).expect("scenario runs");
+        assert_eq!(ts.len(), 4);
+        // one decision-log row per trace event (arrive + depart each)
+        assert_eq!(ts[0].rows.len(), 2 * cfg.tenants);
+        // every interval row reports as many p99s as resident tenants
+        for row in &ts[1].rows {
+            assert_eq!(
+                row[1].split(',').count(),
+                row[2].split('/').count(),
+                "tenants and p99s must align: {row:?}"
+            );
+        }
+        // the comparison table has both policies, and sharing never
+        // admits fewer tenants than dedicated whole GPUs
+        assert_eq!(ts[2].rows.len(), 2);
+        let admitted: Vec<usize> =
+            ts[2].rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        assert!(admitted[0] >= admitted[1], "shared {admitted:?}");
     }
 
     #[test]

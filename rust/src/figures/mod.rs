@@ -11,11 +11,12 @@ use std::path::Path;
 use crate::util::Table;
 
 /// All experiment ids, in paper order (plus the cluster-level
-/// co-location/diurnal scenario, which has no single figure number —
-/// it reproduces the §VIII-C savings protocol end-to-end).
+/// scenarios, which have no single figure number: `colocate` reproduces
+/// the §VIII-C savings protocol end-to-end, `admission` the N-tenant
+/// online admission / re-packing loop vs static partitioning).
 pub const ALL_EXPERIMENTS: &[&str] = &[
     "fig3", "fig4", "fig5", "fig6", "fig9", "fig11", "fig12", "fig14", "fig16", "fig17",
-    "fig18", "fig19", "tab1", "colocate",
+    "fig18", "fig19", "tab1", "colocate", "admission",
 ];
 
 /// Run one experiment by id.
@@ -35,6 +36,7 @@ pub fn run(exp: &str) -> Result<Vec<Table>, String> {
         "fig19" => Ok(macro_evals::fig19()),
         "tab1" => Ok(vec![crate::suite::real::table1()]),
         "colocate" => macro_evals::colocate(),
+        "admission" => macro_evals::admission(),
         other => Err(format!(
             "unknown experiment '{other}'; available: {}",
             ALL_EXPERIMENTS.join(", ")

@@ -5,6 +5,7 @@
 //!   plan  --pipeline <name> ...        run the allocation policies
 //!   serve --pipeline <name> ...        serve a real workload over PJRT
 //!   colocate [--pipelines a,b] ...     co-location + diurnal autoscaling
+//!   admit [--tenants N] ...            N-tenant online admission trace
 //!   reproduce --exp <figN|all> ...     regenerate a paper figure/table
 //!
 //! (CLI parsing is hand-rolled: the offline build environment has no
@@ -19,7 +20,7 @@ use camelot::allocator::{max_load, min_resource, AllocContext, SaParams};
 use camelot::config::ClusterSpec;
 use camelot::coordinator::{Coordinator, CoordinatorConfig, PjrtBackend};
 use camelot::figures;
-use camelot::suite::{artifact, real, workload::PoissonArrivals, Pipeline};
+use camelot::suite::{real, workload::PoissonArrivals, Pipeline};
 use camelot::util::fnum;
 
 fn main() {
@@ -29,6 +30,7 @@ fn main() {
         Some("plan") => cmd_plan(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
         Some("colocate") => cmd_colocate(&args[1..]),
+        Some("admit") => cmd_admit(&args[1..]),
         Some("reproduce") => cmd_reproduce(&args[1..]),
         Some("help") | None => {
             usage();
@@ -55,7 +57,9 @@ USAGE:
                 [--artifacts DIR]
   camelot colocate [--pipelines a,b] [--load-a QPS] [--load-b QPS]
                    [--peak QPS] [--epochs N] [--queries N] [--seed S]
-  camelot reproduce [--exp figN|tab1|all|colocate] [--out DIR]
+  camelot admit [--tenants N] [--gap S] [--life S] [--peak-lo QPS]
+                [--peak-hi QPS] [--queries N] [--seed S]
+  camelot reproduce [--exp figN|tab1|all|colocate|admission] [--out DIR]
 
 PIPELINES: img-to-img img-to-text text-to-img text-to-text p<i>+c<j>+m<k>"
     );
@@ -81,25 +85,7 @@ fn opts(args: &[String]) -> HashMap<String, String> {
 }
 
 fn pipeline_by_name(name: &str) -> Option<Pipeline> {
-    match name {
-        "img-to-img" => Some(real::img_to_img()),
-        "img-to-text" => Some(real::img_to_text()),
-        "text-to-img" => Some(real::text_to_img()),
-        "text-to-text" => Some(real::text_to_text()),
-        _ => {
-            // artifact composites: p<i>+c<j>+m<k>
-            let parts: Vec<&str> = name.split('+').collect();
-            if parts.len() == 3 {
-                let lvl = |s: &str, c: char| -> Option<u32> { s.strip_prefix(c)?.parse().ok() };
-                let (pi, cj, mk) =
-                    (lvl(parts[0], 'p')?, lvl(parts[1], 'c')?, lvl(parts[2], 'm')?);
-                if (1..=3).contains(&pi) && (1..=3).contains(&cj) && (1..=3).contains(&mk) {
-                    return Some(artifact::pipeline(pi, cj, mk));
-                }
-            }
-            None
-        }
-    }
+    camelot::suite::pipeline_by_name(name)
 }
 
 fn cluster_by_name(name: &str) -> ClusterSpec {
@@ -245,6 +231,58 @@ fn cmd_colocate(args: &[String]) -> i32 {
         }
         Err(e) => {
             eprintln!("colocate: {e}");
+            1
+        }
+    }
+}
+
+/// N-tenant online admission with departure re-packing over a
+/// seed-reproducible tenant trace, compared against static whole-GPU
+/// partitioning (the ROADMAP scale-out scenario).
+fn cmd_admit(args: &[String]) -> i32 {
+    let o = opts(args);
+    let mut cfg = figures::macro_evals::AdmissionExpConfig::default();
+    if let Some(v) = o.get("tenants").and_then(|v| v.parse().ok()) {
+        cfg.tenants = v;
+    }
+    if let Some(v) = o.get("gap").and_then(|v| v.parse().ok()) {
+        cfg.mean_interarrival_s = v;
+    }
+    if let Some(v) = o.get("life").and_then(|v| v.parse().ok()) {
+        cfg.mean_lifetime_s = v;
+    }
+    if let Some(v) = o.get("peak-lo").and_then(|v| v.parse().ok()) {
+        cfg.peak_qps_lo = v;
+    }
+    if let Some(v) = o.get("peak-hi").and_then(|v| v.parse().ok()) {
+        cfg.peak_qps_hi = v;
+    }
+    if let Some(v) = o.get("queries").and_then(|v| v.parse().ok()) {
+        cfg.queries = v;
+    }
+    if let Some(v) = o.get("seed").and_then(|v| v.parse().ok()) {
+        cfg.seed = v;
+    }
+    eprintln!(
+        "replaying a {}-tenant trace (seed {}, peaks {}-{} qps, mean gap {} s, mean life {} s)...",
+        cfg.tenants,
+        cfg.seed,
+        cfg.peak_qps_lo,
+        cfg.peak_qps_hi,
+        cfg.mean_interarrival_s,
+        cfg.mean_lifetime_s
+    );
+    let t0 = Instant::now();
+    match figures::macro_evals::admission_tables(&cfg) {
+        Ok(tables) => {
+            for t in &tables {
+                println!("{}", t.render());
+            }
+            eprintln!("(admit took {:.1} s)", t0.elapsed().as_secs_f64());
+            0
+        }
+        Err(e) => {
+            eprintln!("admit: {e}");
             1
         }
     }

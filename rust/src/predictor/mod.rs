@@ -19,7 +19,19 @@ pub use profile::{profile_stage, split, ProfileConfig, Sample};
 pub use rforest::{ForestParams, RandomForest};
 
 use crate::config::GpuSpec;
-use crate::suite::StageProfile;
+use crate::suite::{Pipeline, StageProfile};
+
+/// Train one [`StagePredictor`] per stage of a pipeline with the
+/// default profiling grid — the offline phase every planner runs. One
+/// definition so the figure harnesses, the admission controller, and
+/// the static baseline cannot drift apart.
+pub fn train_pipeline(pipeline: &Pipeline, gpu: &GpuSpec) -> Vec<StagePredictor> {
+    pipeline
+        .stages
+        .iter()
+        .map(|s| StagePredictor::train(s, gpu, &ProfileConfig::default()))
+        .collect()
+}
 
 /// The trained per-microservice predictor bundle Camelot consults at
 /// allocation time (Table II: f(p), g(p)/b(p), M(i,s), C(i,s)).

@@ -8,3 +8,39 @@ pub mod service;
 pub mod workload;
 
 pub use service::{Pipeline, StageKind, StageProfile};
+
+/// Resolve a benchmark name to its [`Pipeline`]: one of the four real
+/// benchmarks, or an artifact composite `p<i>+c<j>+m<k>` with levels in
+/// 1..=3. The CLI, the admission controller's trace replay, and the
+/// tenant-trace catalog all share this resolver.
+pub fn pipeline_by_name(name: &str) -> Option<Pipeline> {
+    match name {
+        "img-to-img" => Some(real::img_to_img()),
+        "img-to-text" => Some(real::img_to_text()),
+        "text-to-img" => Some(real::text_to_img()),
+        "text-to-text" => Some(real::text_to_text()),
+        _ => {
+            let parts: Vec<&str> = name.split('+').collect();
+            if parts.len() == 3 {
+                let lvl = |s: &str, c: char| -> Option<u32> { s.strip_prefix(c)?.parse().ok() };
+                let (pi, cj, mk) =
+                    (lvl(parts[0], 'p')?, lvl(parts[1], 'c')?, lvl(parts[2], 'm')?);
+                if (1..=3).contains(&pi) && (1..=3).contains(&cj) && (1..=3).contains(&mk) {
+                    return Some(artifact::pipeline(pi, cj, mk));
+                }
+            }
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn pipeline_by_name_resolves_real_and_artifact() {
+        assert_eq!(super::pipeline_by_name("img-to-text").unwrap().name, "img-to-text");
+        assert!(super::pipeline_by_name("p1+c2+m3").is_some());
+        assert!(super::pipeline_by_name("p0+c2+m3").is_none());
+        assert!(super::pipeline_by_name("nope").is_none());
+    }
+}

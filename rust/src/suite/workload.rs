@@ -253,6 +253,154 @@ impl ArrivalProcess {
     }
 }
 
+/// What a tenant does at one point of a [`TenantTrace`].
+#[derive(Debug, Clone)]
+pub enum TraceEventKind {
+    /// A tenant arrives asking for admission: a pipeline (resolvable by
+    /// [`crate::suite::pipeline_by_name`]), an offered-load model while
+    /// resident, and the load the admission controller must plan for
+    /// (the arrival process's instantaneous peak).
+    Arrive {
+        pipeline: String,
+        arrivals: ArrivalProcess,
+        plan_qps: f64,
+    },
+    /// The tenant leaves; its capacity can be re-packed.
+    Depart,
+}
+
+/// One arrival or departure of a tenant trace.
+#[derive(Debug, Clone)]
+pub struct TenantTraceEvent {
+    pub t_s: f64,
+    /// Trace-unique tenant id; arrival and departure share it.
+    pub tenant: u64,
+    pub kind: TraceEventKind,
+}
+
+/// Knobs of the seed-reproducible tenant arrival/departure generator.
+#[derive(Debug, Clone)]
+pub struct TenantTraceConfig {
+    /// Tenant arrivals to draw (each gets a matching departure).
+    pub tenants: usize,
+    /// Mean gap between tenant arrivals (exponential).
+    pub mean_interarrival_s: f64,
+    /// Mean residency before departure (exponential).
+    pub mean_lifetime_s: f64,
+    /// Diurnal peak of each tenant, uniform in `[peak_qps_lo, peak_qps_hi]`.
+    pub peak_qps_lo: f64,
+    pub peak_qps_hi: f64,
+    /// Period of each tenant's diurnal arrival process (compressed so a
+    /// fixed query budget spans several periods, as in `colocate`).
+    pub period_s: f64,
+    /// Pipeline names drawn uniformly per tenant.
+    pub catalog: Vec<String>,
+}
+
+impl Default for TenantTraceConfig {
+    fn default() -> Self {
+        TenantTraceConfig {
+            tenants: 8,
+            mean_interarrival_s: 600.0,
+            mean_lifetime_s: 2_400.0,
+            peak_qps_lo: 60.0,
+            peak_qps_hi: 180.0,
+            period_s: 30.0,
+            catalog: vec![
+                "img-to-img".into(),
+                "img-to-text".into(),
+                "text-to-img".into(),
+                "text-to-text".into(),
+            ],
+        }
+    }
+}
+
+/// A time-ordered tenant arrival/departure trace: the input the
+/// N-tenant admission controller (`coordinator::admission`) replays.
+///
+/// Determinism contract: [`generate`](Self::generate) draws a fixed
+/// number of RNG values per tenant (one inter-arrival gap, one
+/// lifetime, one peak, one catalog pick) from a single seeded stream,
+/// so the same `(config, seed)` always yields the identical event list,
+/// and the sort breaks time ties by `(tenant, departure-first)` — the
+/// trace is bit-reproducible.
+#[derive(Debug, Clone)]
+pub struct TenantTrace {
+    pub events: Vec<TenantTraceEvent>,
+}
+
+impl TenantTrace {
+    /// Draw a seed-reproducible trace.
+    pub fn generate(cfg: &TenantTraceConfig, seed: u64) -> TenantTrace {
+        assert!(cfg.tenants > 0, "trace needs at least one tenant");
+        assert!(!cfg.catalog.is_empty(), "trace needs a pipeline catalog");
+        assert!(cfg.mean_interarrival_s > 0.0 && cfg.mean_lifetime_s > 0.0);
+        assert!(cfg.peak_qps_lo > 0.0 && cfg.peak_qps_hi >= cfg.peak_qps_lo);
+        let mut rng = Rng::new(seed);
+        let mut events = Vec::with_capacity(cfg.tenants * 2);
+        let mut t = 0.0;
+        for tenant in 0..cfg.tenants as u64 {
+            t += rng.exponential(1.0 / cfg.mean_interarrival_s);
+            let lifetime = rng.exponential(1.0 / cfg.mean_lifetime_s);
+            let peak = rng.range_f64(cfg.peak_qps_lo, cfg.peak_qps_hi);
+            let pipeline = rng.choose(&cfg.catalog).clone();
+            let pattern = DiurnalPattern {
+                peak_qps: peak,
+                trough_frac: 0.3,
+                period_s: cfg.period_s,
+            };
+            events.push(TenantTraceEvent {
+                t_s: t,
+                tenant,
+                kind: TraceEventKind::Arrive {
+                    pipeline,
+                    arrivals: ArrivalProcess::diurnal(pattern),
+                    plan_qps: peak,
+                },
+            });
+            events.push(TenantTraceEvent {
+                t_s: t + lifetime,
+                tenant,
+                kind: TraceEventKind::Depart,
+            });
+        }
+        // departures first at equal times (free capacity before the next
+        // admission decision), then tenant id — a total, stable order
+        events.sort_by(|a, b| {
+            a.t_s
+                .partial_cmp(&b.t_s)
+                .unwrap()
+                .then_with(|| {
+                    let rank = |k: &TraceEventKind| match k {
+                        TraceEventKind::Depart => 0u8,
+                        TraceEventKind::Arrive { .. } => 1,
+                    };
+                    rank(&a.kind).cmp(&rank(&b.kind))
+                })
+                .then(a.tenant.cmp(&b.tenant))
+        });
+        TenantTrace { events }
+    }
+
+    /// Highest number of tenants ever resident at once, assuming every
+    /// arrival were admitted (an upper bound on controller occupancy).
+    pub fn peak_concurrency(&self) -> usize {
+        let mut now = 0usize;
+        let mut peak = 0usize;
+        for e in &self.events {
+            match e.kind {
+                TraceEventKind::Arrive { .. } => {
+                    now += 1;
+                    peak = peak.max(now);
+                }
+                TraceEventKind::Depart => now = now.saturating_sub(1),
+            }
+        }
+        peak
+    }
+}
+
 /// Result of a single load trial.
 #[derive(Debug, Clone, Copy)]
 pub struct LoadTrial {
@@ -601,6 +749,59 @@ mod tests {
         let (peak, _) =
             peak_load_search_bracketed(|rates| vec![10.0; rates.len()], 0.5, 1.0, 8.0, 0.02, 3);
         assert_eq!(peak, 0.0);
+    }
+
+    #[test]
+    fn tenant_trace_reproducible_and_ordered() {
+        let cfg = TenantTraceConfig::default();
+        let a = TenantTrace::generate(&cfg, 17);
+        let b = TenantTrace::generate(&cfg, 17);
+        assert_eq!(a.events.len(), cfg.tenants * 2);
+        assert_eq!(a.events.len(), b.events.len());
+        for (x, y) in a.events.iter().zip(&b.events) {
+            assert_eq!(x.t_s.to_bits(), y.t_s.to_bits());
+            assert_eq!(x.tenant, y.tenant);
+            match (&x.kind, &y.kind) {
+                (
+                    TraceEventKind::Arrive { pipeline: pa, plan_qps: qa, .. },
+                    TraceEventKind::Arrive { pipeline: pb, plan_qps: qb, .. },
+                ) => {
+                    assert_eq!(pa, pb);
+                    assert_eq!(qa.to_bits(), qb.to_bits());
+                }
+                (TraceEventKind::Depart, TraceEventKind::Depart) => {}
+                _ => panic!("event kinds diverge"),
+            }
+        }
+        // time-ordered, every tenant arrives before it departs, and the
+        // peaks sit inside the configured band
+        assert!(a.events.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+        for tenant in 0..cfg.tenants as u64 {
+            let idx = |want_arrive: bool| {
+                a.events
+                    .iter()
+                    .position(|e| {
+                        e.tenant == tenant
+                            && matches!(e.kind, TraceEventKind::Arrive { .. }) == want_arrive
+                    })
+                    .unwrap()
+            };
+            assert!(idx(true) < idx(false), "tenant {tenant} departs before arriving");
+        }
+        for e in &a.events {
+            if let TraceEventKind::Arrive { plan_qps, pipeline, .. } = &e.kind {
+                assert!((cfg.peak_qps_lo..=cfg.peak_qps_hi).contains(plan_qps));
+                assert!(cfg.catalog.contains(pipeline));
+            }
+        }
+        assert!(a.peak_concurrency() >= 1 && a.peak_concurrency() <= cfg.tenants);
+        // different seeds give different traces
+        let c = TenantTrace::generate(&cfg, 18);
+        assert!(a
+            .events
+            .iter()
+            .zip(&c.events)
+            .any(|(x, y)| x.t_s.to_bits() != y.t_s.to_bits()));
     }
 
     #[test]
