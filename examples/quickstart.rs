@@ -2,16 +2,16 @@
 //!
 //! 1. Load one AOT artifact through the PJRT runtime and run a batch
 //!    (the L1/L2 compute path, Python-free).
-//! 2. Train a performance predictor and plan an allocation with the
-//!    Case-1 policy.
+//! 2. Train a performance predictor and plan an allocation through the
+//!    unified planner API (Case-1 max-load objective).
 //! 3. Validate the plan on the simulator.
 //!
 //! Run with: `cargo run --release --example quickstart`
 //! (requires `make artifacts` for step 1; skipped gracefully otherwise)
 
-use camelot::allocator::{max_load, AllocContext, SaParams};
 use camelot::config::ClusterSpec;
 use camelot::figures::common::train_predictors;
+use camelot::planner::{CamelotPlanner, ClusterState, Objective, PlanRequest, Planner as _};
 use camelot::runtime::Engine;
 use camelot::sim::{SimOptions, Simulator};
 use camelot::suite::real;
@@ -34,41 +34,40 @@ fn main() -> anyhow::Result<()> {
         println!("(artifacts/ missing — run `make artifacts` for the PJRT demo)");
     }
 
-    // --- 2. plan an allocation ----------------------------------------
+    // --- 2. plan an allocation through the unified planner -------------
     let pipeline = real::img_to_text();
     let cluster = ClusterSpec::two_2080ti();
     println!("\nplanning {} on 2x {}...", pipeline.name, cluster.gpu.name);
     let predictors = train_predictors(&pipeline, &cluster);
-    let ctx = AllocContext::new(&pipeline, &cluster, &predictors, 16);
-    let plan = max_load::solve(&ctx, SaParams::default()).expect("feasible plan");
-    println!("  instances : {:?}", plan.best.instances);
+    let request = PlanRequest::new(
+        Objective::MaxLoad,
+        ClusterState::exclusive(&cluster),
+        &pipeline,
+        &predictors,
+    )
+    .batch(16);
+    let plan = CamelotPlanner.plan(&request).expect("feasible plan");
+    println!("  instances : {:?}", plan.allocation.instances);
     println!(
         "  SM quotas : {:?}",
-        plan.best
+        plan.allocation
             .quotas
             .iter()
             .map(|q| format!("{:.0}%", q * 100.0))
             .collect::<Vec<_>>()
     );
-    println!("  predicted peak: {:.0} qps", plan.best_objective);
+    println!("  predicted peak: {:.0} qps", plan.objective_value);
+    println!("  predicted p99 : {:.1} ms", plan.predicted_p99_s * 1e3);
 
     // --- 3. validate on the simulator ----------------------------------
-    let deployment = camelot::deploy::deploy(
-        &pipeline,
-        &cluster,
-        &plan.best,
-        16,
-        camelot::comm::CommMode::GlobalIpc,
-        None,
-    )
-    .expect("deployable");
+    // the solution already carries the bandwidth-aware placement
     let report = Simulator::new(
         &pipeline,
         &cluster,
-        &deployment,
+        &plan.deployment,
         SimOptions { queries: 3_000, ..Default::default() },
     )
-    .run(plan.best_objective * 0.8)
+    .run(plan.objective_value * 0.8)
     .expect("sim runs");
     println!(
         "  simulated at 80% of predicted peak: p99 = {:.1} ms (QoS {:.0} ms)",

@@ -18,14 +18,14 @@
 
 use crate::comm::CommMode;
 use crate::config::ClusterSpec;
-use crate::deploy::{Allocation, GpuReservation};
+use crate::deploy::Allocation;
+use crate::planner::ClusterState;
 use crate::predictor::StagePredictor;
 use crate::suite::Pipeline;
 
 /// Everything the checker (and the policies) need to evaluate candidates.
 pub struct AllocContext<'a> {
     pub pipeline: &'a Pipeline,
-    pub cluster: &'a ClusterSpec,
     pub predictors: &'a [StagePredictor],
     pub batch: u32,
     pub comm: CommMode,
@@ -35,11 +35,11 @@ pub struct AllocContext<'a> {
     /// communication (the rest absorbs batching wait and queueing
     /// jitter). Matches the engine's batching deadline policy.
     pub qos_headroom: f64,
-    /// Shared-cluster accounting: capacity co-located tenants already
-    /// hold on each GPU. Empty = exclusive cluster (the default); when
-    /// set it must have one entry per GPU and every constraint family
-    /// (C1/C2/C4 and the placement pass) sees only the remainder.
-    pub reserved: Vec<GpuReservation>,
+    /// The cluster plus the merged holds of co-located tenants: every
+    /// constraint family (C1/C2/C4 and the placement pass) sees only
+    /// the remainder. [`ClusterState::exclusive`] for an unshared
+    /// cluster.
+    state: ClusterState,
     comm_cache: std::cell::Cell<Option<f64>>,
     dur_grid: Vec<[f64; 20]>,
     bw_grid: Vec<[f64; 20]>,
@@ -47,9 +47,21 @@ pub struct AllocContext<'a> {
 }
 
 impl<'a> AllocContext<'a> {
+    /// Context over an exclusive (hold-free) cluster.
     pub fn new(
         pipeline: &'a Pipeline,
-        cluster: &'a ClusterSpec,
+        cluster: &ClusterSpec,
+        predictors: &'a [StagePredictor],
+        batch: u32,
+    ) -> Self {
+        Self::shared(pipeline, ClusterState::exclusive(cluster), predictors, batch)
+    }
+
+    /// Context over a shared cluster: plan into the capacity the
+    /// state's co-tenant holds leave free.
+    pub fn shared(
+        pipeline: &'a Pipeline,
+        state: ClusterState,
         predictors: &'a [StagePredictor],
         batch: u32,
     ) -> Self {
@@ -71,13 +83,12 @@ impl<'a> AllocContext<'a> {
         }
         AllocContext {
             pipeline,
-            cluster,
             predictors,
             batch,
             comm: CommMode::GlobalIpc,
             enforce_bw: true,
             qos_headroom: 0.80,
-            reserved: Vec::new(),
+            state,
             comm_cache: std::cell::Cell::new(None),
             dur_grid,
             bw_grid,
@@ -85,30 +96,26 @@ impl<'a> AllocContext<'a> {
         }
     }
 
-    /// Builder form: plan into the capacity co-located tenants leave
-    /// free (`reserved` must have one entry per GPU).
-    pub fn with_reserved(mut self, reserved: Vec<GpuReservation>) -> Self {
-        assert!(
-            reserved.is_empty() || reserved.len() == self.cluster.num_gpus,
-            "reservations must cover every GPU"
-        );
-        self.reserved = reserved;
-        self
+    /// The static cluster description (spec of [`state`](Self::state)).
+    pub fn cluster(&self) -> &ClusterSpec {
+        self.state.spec()
+    }
+
+    /// The cluster state (spec + merged co-tenant holds).
+    pub fn state(&self) -> &ClusterState {
+        &self.state
     }
 
     /// Cluster SM-quota capacity left after co-located tenants' holds
     /// (the C1 right-hand side).
     pub fn available_compute(&self) -> f64 {
-        let held: f64 = self.reserved.iter().map(|r| r.sm_frac).sum();
-        (self.cluster.total_compute() - held).max(0.0)
+        self.state.available_compute()
     }
 
     /// MPS context capacity left after co-located tenants' holds
     /// (the C2 right-hand side).
     pub fn available_contexts(&self) -> u32 {
-        let cap = self.cluster.num_gpus as u32 * self.cluster.gpu.mps_contexts;
-        let held: u32 = self.reserved.iter().map(|r| r.contexts).sum();
-        cap.saturating_sub(held)
+        self.state.available_contexts()
     }
 
     #[inline]
@@ -153,8 +160,8 @@ impl<'a> AllocContext<'a> {
         if let Some(v) = self.comm_cache.get() {
             return v;
         }
-        let bus_rate = self.cluster.pcie.per_stream_bw;
-        let setup = self.cluster.pcie.setup_s;
+        let bus_rate = self.cluster().pcie.per_stream_bw;
+        let setup = self.cluster().pcie.setup_s;
         let n = self.pipeline.n_stages();
         let b = self.batch as f64;
         // ingress upload + egress download always cross the bus
@@ -165,7 +172,7 @@ impl<'a> AllocContext<'a> {
         for i in 0..n - 1 {
             let bytes = self.pipeline.hop_bytes(i, self.batch);
             t += match self.comm {
-                CommMode::GlobalIpc => self.cluster.ipc.per_msg_s,
+                CommMode::GlobalIpc => self.cluster().ipc.per_msg_s,
                 CommMode::MainMemory => setup + 2.0 * bytes / bus_rate,
             };
         }
@@ -212,7 +219,38 @@ impl<'a> AllocContext<'a> {
             .iter()
             .map(|st| st.hbm_bytes(self.batch) * req_rate)
             .sum();
-        (traffic / (self.cluster.num_gpus as f64 * self.cluster.gpu.mem_bw)).min(1.0)
+        (traffic / (self.cluster().num_gpus as f64 * self.cluster().gpu.mem_bw)).min(1.0)
+    }
+
+    /// Duration-inflation factor the offered load's own interference
+    /// applies to the solo-trained predictors. Camelot-NC neither
+    /// constrains nor models bandwidth contention (§VIII-D), which is
+    /// exactly why its plans violate QoS at runtime.
+    #[inline]
+    fn load_inflation(&self, load_qps: f64) -> f64 {
+        if self.enforce_bw {
+            1.0 + 0.30 * self.expected_congestion(load_qps)
+        } else {
+            1.0
+        }
+    }
+
+    /// One stage's contribution to the p99 prediction: inflated service
+    /// time plus an Allen–Cunneen-style mean wait for an N-server
+    /// station with deterministic-ish service, scaled to the 99th
+    /// percentile. `INFINITY` when the stage saturates (ρ ≥ 1). The
+    /// single source of truth behind both [`predicted_p99`](Self::predicted_p99)
+    /// and [`predicted_stage_p99`](Self::predicted_stage_p99).
+    #[inline]
+    fn stage_p99_term(&self, alloc: &Allocation, stage: usize, req_rate: f64, inflate: f64) -> f64 {
+        let d = self.duration_at(stage, alloc.quotas[stage]) * inflate;
+        let n = alloc.instances[stage] as f64;
+        let rho = req_rate * d / n;
+        if rho >= 1.0 {
+            return f64::INFINITY;
+        }
+        let wait = d * rho / (n * (1.0 - rho)) * Self::TAIL_K;
+        d + wait
     }
 
     /// Predicted 99%-ile end-to-end latency at a given offered load
@@ -223,28 +261,29 @@ impl<'a> AllocContext<'a> {
     pub fn predicted_p99(&self, alloc: &Allocation, load_qps: f64) -> f64 {
         let req_rate = load_qps / self.batch as f64;
         let mut t = self.comm_estimate();
-        // predictors are trained on solo runs; inflate their durations
-        // by the interference the load itself will generate. Camelot-NC
-        // neither constrains nor models bandwidth contention (§VIII-D),
-        // which is exactly why its plans violate QoS at runtime.
-        let inflate = if self.enforce_bw {
-            1.0 + 0.30 * self.expected_congestion(load_qps)
-        } else {
-            1.0
-        };
+        let inflate = self.load_inflation(load_qps);
         for i in 0..self.pipeline.n_stages() {
-            let d = self.duration_at(i, alloc.quotas[i]) * inflate;
-            let n = alloc.instances[i] as f64;
-            let rho = req_rate * d / n;
-            if rho >= 1.0 {
+            let term = self.stage_p99_term(alloc, i, req_rate, inflate);
+            if term.is_infinite() {
                 return f64::INFINITY;
             }
-            // Allen–Cunneen-style mean wait for an N-server station with
-            // deterministic-ish service, scaled to the 99th percentile
-            let wait = d * rho / (n * (1.0 - rho)) * Self::TAIL_K;
-            t += d + wait;
+            t += term;
         }
         t
+    }
+
+    /// Per-stage decomposition of [`predicted_p99`](Self::predicted_p99)
+    /// at `load_qps`: each entry is one stage's inflated service time
+    /// plus its queueing tail (`INFINITY` when the stage saturates).
+    /// Their sum plus [`comm_estimate`](Self::comm_estimate) equals the
+    /// scalar prediction — the planner reports this vector so operators
+    /// can see which stage eats the QoS budget.
+    pub fn predicted_stage_p99(&self, alloc: &Allocation, load_qps: f64) -> Vec<f64> {
+        let req_rate = load_qps / self.batch as f64;
+        let inflate = self.load_inflation(load_qps);
+        (0..self.pipeline.n_stages())
+            .map(|i| self.stage_p99_term(alloc, i, req_rate, inflate))
+            .collect()
     }
 
     /// Predicted supported peak load: the largest queries/s whose
@@ -320,16 +359,15 @@ impl<'a> AllocContext<'a> {
         // GPUs (Fig 13's multi-dimensional ordering) and fails when no
         // assignment satisfies every per-GPU budget.
         let demands = self.bw_budget_storage(alloc);
-        let feasible = crate::deploy::feasible_placement_reserved(
+        let feasible = crate::deploy::feasible_placement(
             self.pipeline,
-            self.cluster,
+            &self.state,
             alloc,
             self.batch,
             demands.as_deref().map(|d| crate::deploy::BwBudget {
                 demands: d,
-                cap: Self::BW_MARGIN * self.cluster.gpu.mem_bw,
+                cap: Self::BW_MARGIN * self.cluster().gpu.mem_bw,
             }),
-            &self.reserved,
         );
         if !feasible {
             return Err("C2/C3/C4: no valid placement".into());
@@ -415,6 +453,7 @@ mod tests {
 
     #[test]
     fn reservations_tighten_every_family() {
+        use crate::deploy::GpuReservation;
         let p = real::img_to_text();
         let (c, preds) = ctx_fixture(&p);
         let a = Allocation { instances: vec![2, 2], quotas: vec![0.45, 0.45] };
@@ -425,7 +464,8 @@ mod tests {
             GpuReservation { sm_frac: 0.5, contexts: 8, ..Default::default() };
             c.num_gpus
         ];
-        let shared = AllocContext::new(&p, &c, &preds, 16).with_reserved(held);
+        let shared =
+            AllocContext::shared(&p, ClusterState::with_reservations(&c, &held), &preds, 16);
         assert!((shared.available_compute() - 1.0).abs() < 1e-9);
         assert_eq!(shared.available_contexts(), 2 * 48 - 16);
         let err = shared.check(&a).unwrap_err();

@@ -1,98 +1,27 @@
 //! Case 1 (§VII-B): maximize the supported peak load with limited GPUs.
 //!
-//! Objective: MAX min_i N_i·f(p_i) — the end-to-end peak load is set by
-//! the slowest stage, so the optimizer raises the floor — under the
-//! Eq. 1 constraint set (checked by [`AllocContext`]).
-
-use crate::deploy::Allocation;
+//! This module is a compatibility shim: the solve body lives in the
+//! unified planning surface (`planner::engine`, driven by
+//! [`crate::planner::Planner::plan`] with
+//! [`crate::planner::Objective::MaxLoad`]). [`solve`] remains the
+//! stable low-level entry for callers that already hold an
+//! [`AllocContext`]; both paths are golden-tested to agree bit-for-bit
+//! (`tests/planner_golden.rs`).
 
 use super::constraints::AllocContext;
-use super::sa::{anneal, SaParams, SaResult};
+use super::sa::{SaParams, SaResult};
 
 /// Solve Case 1. Returns the best allocation, its predicted pipeline
 /// throughput (queries/s), and search statistics.
 pub fn solve(ctx: &AllocContext<'_>, params: SaParams) -> Option<SaResult> {
-    let n = ctx.pipeline.n_stages();
-    let max_inst = (ctx.cluster.num_gpus as u32 * ctx.cluster.gpu.mps_contexts).min(48);
-    let c = ctx.cluster.num_gpus as f64;
-    // throughput-balanced per-GPU quotas (the Laius shape) — a strong
-    // starting corner the optimizer should dominate, never lose to
-    let balanced: Vec<f64> = crate::baselines::balanced_quotas(ctx.predictors, ctx.batch)
-        .into_iter()
-        .map(|q| ((q / 0.05).round() * 0.05).clamp(0.05, 0.95))
-        .collect();
-    // several starting corners: the annealer keeps the best feasible
-    // result across them (the landscape has disconnected feasible
-    // islands when the QoS budget is tight)
-    let inits = [
-        // conservative: one instance per stage, even share of one GPU
-        Allocation { instances: vec![1; n], quotas: vec![((1.0 / n as f64).min(0.9) / 0.05).round() * 0.05; n] },
-        // fat: one instance per stage at (near-)full quota — the only
-        // feasible corner when per-stage durations are QoS-tight
-        Allocation {
-            instances: vec![1; n],
-            quotas: vec![((c / n as f64).min(0.95) / 0.05).round() * 0.05; n],
-        },
-        // replicated: one instance per stage per GPU, even shares
-        Allocation {
-            instances: vec![ctx.cluster.num_gpus as u32; n],
-            quotas: vec![((1.0 / n as f64).min(0.9) / 0.05).round() * 0.05; n],
-        },
-        // replicated balanced (the Laius corner)
-        Allocation {
-            instances: vec![ctx.cluster.num_gpus as u32; n],
-            quotas: balanced,
-        },
-    ];
-    let params = SaParams { max_instances: max_inst, ..params };
-    let mut inits: Vec<Allocation> = inits.to_vec();
-    // If none of the corners is feasible (tight QoS + bandwidth budgets
-    // leave a needle-shaped feasible region, e.g. the m3-heavy artifact
-    // pipelines), seed from a coarse quota grid search.
-    if !inits.iter().any(|a| ctx.check(a).is_ok()) {
-        const GRID: [f64; 6] = [0.1, 0.25, 0.4, 0.6, 0.8, 0.95];
-        let mut combo = vec![0usize; n];
-        'grid: loop {
-            let cand = Allocation {
-                instances: vec![1; n],
-                quotas: combo.iter().map(|&i| GRID[i]).collect(),
-            };
-            if ctx.check(&cand).is_ok() {
-                inits.push(cand);
-                break;
-            }
-            // odometer increment
-            for d in 0..n {
-                combo[d] += 1;
-                if combo[d] < GRID.len() {
-                    continue 'grid;
-                }
-                combo[d] = 0;
-            }
-            break;
-        }
-    }
-    let mut best: Option<SaResult> = None;
-    for (i, init) in inits.into_iter().enumerate() {
-        let p = SaParams { seed: params.seed ^ (i as u64) << 32, ..params };
-        if let Some(r) = anneal(
-            init,
-            p,
-            |a| ctx.check(a).is_ok(),
-            |a| ctx.predicted_peak(a),
-        ) {
-            if best.as_ref().map_or(true, |b| r.best_objective > b.best_objective) {
-                best = Some(r);
-            }
-        }
-    }
-    best
+    crate::planner::engine::solve_case1(ctx, params)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::config::{ClusterSpec, GpuSpec};
+    use crate::deploy::Allocation;
     use crate::predictor::{ProfileConfig, StagePredictor};
     use crate::suite::{real, Pipeline};
 

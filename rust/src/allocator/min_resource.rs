@@ -1,17 +1,14 @@
 //! Case 2 (§VII-C): minimize GPU resource usage at a given (low) load
 //! while ensuring QoS.
 //!
-//! Two phases, as in the paper:
-//!  1. Eq. 2 — lower-bound the number of GPUs `y` from aggregate compute
-//!     (Σ C(i,s)·rate / G) and aggregate memory (Σ M(i,s) / F), then
-//!  2. Eq. 3 — minimize Σ N_i·p_i on those `y` GPUs subject to the same
-//!     constraint families plus a throughput floor at the target load.
-
-use crate::config::ClusterSpec;
-use crate::deploy::Allocation;
+//! [`min_gpus`] is the Eq. 2 GPU-count lower bound; [`solve`] is a
+//! compatibility shim over the unified planning surface
+//! (`planner::engine`, driven by [`crate::planner::Planner::plan`] with
+//! [`crate::planner::Objective::MinResource`]). Both paths are
+//! golden-tested to agree bit-for-bit (`tests/planner_golden.rs`).
 
 use super::constraints::AllocContext;
-use super::sa::{anneal, SaParams, SaResult};
+use super::sa::{SaParams, SaResult};
 
 /// Eq. 2: minimum GPU count for a target load (queries/s).
 pub fn min_gpus(ctx: &AllocContext<'_>, load_qps: f64) -> usize {
@@ -23,87 +20,25 @@ pub fn min_gpus(ctx: &AllocContext<'_>, load_qps: f64) -> usize {
         .map(|p| p.flops(batch) / batch as f64 * load_qps)
         .sum();
     let mem_total: f64 = ctx.predictors.iter().map(|p| p.mem_bytes(batch)).sum();
-    let by_compute = flops_per_sec / ctx.cluster.gpu.flops_per_sec();
-    let by_memory = mem_total / ctx.cluster.gpu.mem_bytes as f64;
+    let by_compute = flops_per_sec / ctx.cluster().gpu.flops_per_sec();
+    let by_memory = mem_total / ctx.cluster().gpu.mem_bytes as f64;
     let y = by_compute.max(by_memory).ceil().max(1.0) as usize;
-    y.min(ctx.cluster.num_gpus)
-}
-
-/// Whether a reservation actually holds anything on its GPU (an
-/// all-default entry is indistinguishable from an unheld device).
-fn holds_capacity(r: &crate::deploy::GpuReservation) -> bool {
-    r.sm_frac > 0.0 || r.mem_bytes > 0.0 || r.contexts > 0 || r.bw_demand > 0.0
+    y.min(ctx.cluster().num_gpus)
 }
 
 /// Solve Case 2 for `load_qps`. The returned allocation is feasible on a
-/// cluster restricted to `min_gpus` devices and supports the load.
-///
-/// With shared-cluster reservations (`ctx.reserved` non-empty) the Eq. 2
-/// GPU-count restriction still applies as long as the co-tenants' holds
-/// do not overlap the candidate GPUs (the first `y` devices): unheld
-/// trailing GPUs are simply dropped, and the restricted sub-problem
-/// carries the truncated reservation vector. Only when a hold sits
-/// inside the candidate set is the Eq. 2 bound invalid (it assumes
-/// empty devices) — then the solve starts from the full cluster with
-/// the reservations applied and the usage objective alone keeps the
-/// plan small.
+/// cluster restricted to the returned GPU count and supports the load.
+/// See `planner::engine::solve_case2` for the reservation semantics
+/// (the Eq. 2 restriction survives non-overlapping co-tenant holds).
 pub fn solve(ctx: &AllocContext<'_>, load_qps: f64, params: SaParams) -> Option<(SaResult, usize)> {
-    let mut y = {
-        let bound = min_gpus(ctx, load_qps);
-        if ctx.reserved.iter().take(bound).any(holds_capacity) {
-            ctx.cluster.num_gpus
-        } else {
-            bound
-        }
-    };
-    // Eq. 2 is a lower bound; grow y if the restricted problem is
-    // infeasible (e.g. bandwidth or QoS-bound rather than capacity-bound)
-    while y <= ctx.cluster.num_gpus {
-        let restricted = ClusterSpec { num_gpus: y, ..ctx.cluster.clone() };
-        let mut sub = AllocContext::new(ctx.pipeline, &restricted, ctx.predictors, ctx.batch);
-        sub.comm = ctx.comm;
-        sub.enforce_bw = ctx.enforce_bw;
-        sub.qos_headroom = ctx.qos_headroom;
-        // the restricted cluster keeps GPUs 0..y, so it keeps exactly
-        // their holds (growth past the initial bound can pull held
-        // devices into scope — their truncated entries come with them)
-        sub.reserved = if ctx.reserved.is_empty() {
-            Vec::new()
-        } else {
-            ctx.reserved[..y].to_vec()
-        };
-        let n = ctx.pipeline.n_stages();
-        let init = Allocation {
-            instances: vec![1; n],
-            quotas: vec![(1.0 / n as f64).min(0.9); n],
-        };
-        let result = anneal(
-            init,
-            params,
-            // feasible = all constraints + the load's predicted p99
-            // stays inside QoS (tail-aware, not just capacity)
-            |a| {
-                // 35% tail margin: Case 2 sits at the feasibility
-                // boundary by construction, so the predicted p99 needs
-                // real headroom over the tail-model error
-                sub.check(a).is_ok()
-                    && sub.predicted_p99(a, load_qps) <= ctx.pipeline.qos_target_s * 0.65
-            },
-            // maximize the negated usage ⇒ minimize Σ N_i·p_i
-            |a| -a.total_quota(),
-        );
-        if let Some(r) = result {
-            return Some((r, y));
-        }
-        y += 1;
-    }
-    None
+    crate::planner::engine::solve_case2(ctx, load_qps, params)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::GpuSpec;
+    use crate::config::{ClusterSpec, GpuSpec};
+    use crate::planner::ClusterState;
     use crate::predictor::{ProfileConfig, StagePredictor};
     use crate::suite::{real, Pipeline};
 
@@ -176,15 +111,24 @@ mod tests {
             GpuReservation::default(),
             GpuReservation { sm_frac: 0.7, contexts: 4, ..Default::default() },
         ];
-        let shared = AllocContext::new(&p, &c, &preds, 16).with_reserved(tail_held);
+        let shared = AllocContext::shared(
+            &p,
+            ClusterState::with_reservations(&c, &tail_held),
+            &preds,
+            16,
+        );
         let (r1, y1) = solve(&shared, load, SaParams::default()).expect("tail-held solves");
         assert_eq!(y1, 1, "non-overlapping holds must not void the Eq. 2 bound");
         assert_eq!(r1.best, r0.best);
 
         // an all-default reservation vector is equivalent to an
         // exclusive cluster
-        let trivial = AllocContext::new(&p, &c, &preds, 16)
-            .with_reserved(vec![GpuReservation::default(); c.num_gpus]);
+        let trivial = AllocContext::shared(
+            &p,
+            ClusterState::with_reservations(&c, &vec![GpuReservation::default(); c.num_gpus]),
+            &preds,
+            16,
+        );
         let (r2, y2) = solve(&trivial, load, SaParams::default()).expect("trivial solves");
         assert_eq!(y2, 1);
         assert_eq!(r2.best, r0.best);
@@ -195,7 +139,12 @@ mod tests {
             GpuReservation { sm_frac: 0.5, contexts: 4, ..Default::default() },
             GpuReservation::default(),
         ];
-        let overlapped = AllocContext::new(&p, &c, &preds, 16).with_reserved(head_held);
+        let overlapped = AllocContext::shared(
+            &p,
+            ClusterState::with_reservations(&c, &head_held),
+            &preds,
+            16,
+        );
         let (_, y3) = solve(&overlapped, load, SaParams::default()).expect("overlap solves");
         assert_eq!(y3, c.num_gpus, "overlapping holds must skip the restriction");
     }

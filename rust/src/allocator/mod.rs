@@ -1,14 +1,21 @@
 //! Contention-aware GPU resource allocation (§VII) — the paper's core
 //! algorithmic contribution.
 //!
+//! **Entry point:** [`crate::planner`] — the unified planning surface.
+//! Build a `PlanRequest` (objective + `ClusterState` + pipeline) and
+//! call `Planner::plan`; the solve bodies live in `planner::engine`.
+//! This module keeps the building blocks and the stable low-level
+//! shims:
+//!
 //! * [`constraints::AllocContext`] — the Eq. 1/3 constraint families,
 //!   evaluated against the trained [`crate::predictor::StagePredictor`]s
-//!   and the actual multi-GPU placement pass.
+//!   and the actual multi-GPU placement pass, over a
+//!   [`crate::planner::ClusterState`] (reservation-aware throughout).
 //! * [`sa`] — the simulated-annealing engine over
 //!   `V = [n_1..n_N, p_1..p_N]`.
-//! * [`max_load`] — Case 1: maximize the supported peak load.
-//! * [`min_resource`] — Case 2: minimize resource usage at low load
-//!   (Eq. 2 GPU-count bound, then Eq. 3).
+//! * [`max_load`] — Case 1 shim: maximize the supported peak load.
+//! * [`min_resource`] — Case 2 shim: minimize resource usage at low
+//!   load (Eq. 2 GPU-count bound, then Eq. 3).
 
 pub mod constraints;
 pub mod max_load;

@@ -7,10 +7,13 @@
 //! [`Deployment`], so the figure harnesses compare them symmetrically on
 //! the simulator.
 
-use crate::allocator::{max_load, AllocContext, SaParams};
+use crate::allocator::SaParams;
 use crate::comm::CommMode;
 use crate::config::ClusterSpec;
 use crate::deploy::{self, Allocation};
+use crate::planner::{
+    CamelotPlanner, ClusterState, Objective, PlanRequest, Planner as _,
+};
 use crate::predictor::StagePredictor;
 use crate::sim::{Deployment, InstancePlacement};
 use crate::suite::Pipeline;
@@ -70,8 +73,15 @@ pub fn plan(
                 instances: vec![cluster.num_gpus as u32; n],
                 quotas: vec![quota; n],
             };
-            deploy::deploy(pipeline, cluster, &alloc, batch, CommMode::MainMemory, None)
-                .map_err(|e| e.to_string())
+            deploy::deploy(
+                pipeline,
+                &ClusterState::exclusive(cluster),
+                &alloc,
+                batch,
+                CommMode::MainMemory,
+                None,
+            )
+            .map_err(|e| e.to_string())
         }
         Planner::Laius => {
             // balance per-GPU: quotas ∝ predicted full-GPU duration so
@@ -113,19 +123,19 @@ pub fn plan(
             })
         }
         Planner::Camelot | Planner::CamelotNC => {
-            let mut ctx = AllocContext::new(pipeline, cluster, predictors, batch);
-            ctx.enforce_bw = matches!(planner, Planner::Camelot);
-            let r = max_load::solve(&ctx, sa)
-                .ok_or_else(|| "no feasible allocation".to_string())?;
-            let demands = ctx.bw_budget_storage(&r.best);
-            deploy::deploy(
-                pipeline, cluster, &r.best, batch, CommMode::GlobalIpc,
-                demands.as_deref().map(|d| crate::deploy::BwBudget {
-                    demands: d,
-                    cap: 0.75 * cluster.gpu.mem_bw,
-                }),
+            let req = PlanRequest::new(
+                Objective::MaxLoad,
+                ClusterState::exclusive(cluster),
+                pipeline,
+                predictors,
             )
-            .map_err(|e| e.to_string())
+            .batch(batch)
+            .sa(sa)
+            .enforce_bw(matches!(planner, Planner::Camelot));
+            CamelotPlanner
+                .plan(&req)
+                .map(|s| s.deployment)
+                .map_err(|e| e.to_string())
         }
     }
 }

@@ -4,6 +4,11 @@
 //! ParvaGPU's finding that multi-tenant GPU sharing lives or dies on
 //! the admission/re-packing policy).
 //!
+//! All planning goes through the unified planner
+//! ([`crate::planner::Planner::plan`]): admission, re-packing, and
+//! shrinking are each one typed [`PlanRequest`] against a
+//! [`ClusterState`] holding the co-tenant remainder.
+//!
 //! * [`AdmissionController::try_admit`] — a tenant arrives with a
 //!   pipeline, a QoS target (carried by the pipeline), and an offered
 //!   load; it is admitted iff a reservation-aware plan (Case 2 with
@@ -12,6 +17,11 @@
 //!   inflated by the cross-tenant bandwidth interference the newcomer
 //!   adds — stays within its target. Otherwise the tenant is rejected
 //!   with a typed [`RejectReason`].
+//! * [`AdmissionController::shrink_resident`] — online re-admission at
+//!   a lower load ([`Objective::Shrink`]): a resident whose offered
+//!   load fell gets a strictly smaller plan and the difference returns
+//!   to the pool (previously residents held their provisioned peak
+//!   until departure).
 //! * [`AdmissionController::depart`] — when a tenant leaves, a
 //!   re-packing pass reclaims fragmented GPU share: a greedy first-fit
 //!   re-placement of every surviving allocation (cheapest possible
@@ -31,13 +41,13 @@
 //!   claims are measured against: tenants get dedicated whole GPUs,
 //!   no spatial sharing.
 
-use crate::allocator::{max_load, min_resource, AllocContext, SaParams};
-use crate::comm::CommMode;
+use crate::allocator::{AllocContext, SaParams};
 use crate::config::ClusterSpec;
 use crate::coordinator::autoscale::placement_churn;
 use crate::deploy::{
-    self, gpus_in_use, merge_reservations, reservations_for, Allocation, GpuReservation,
+    gpus_in_use, merge_reservations, reservations_for, Allocation, GpuReservation,
 };
+use crate::planner::{CamelotPlanner, ClusterState, Objective, PlanRequest, Planner};
 use crate::predictor::StagePredictor;
 use crate::sim::{ClusterSim, Deployment, SimOptions, TenantSpec};
 use crate::suite::workload::{ArrivalProcess, TenantTrace, TraceEventKind};
@@ -174,6 +184,44 @@ impl RepackPlan {
     }
 }
 
+/// Outcome of an online resident shrink
+/// ([`AdmissionController::shrink_resident`]).
+#[derive(Debug, Clone)]
+pub struct ShrinkReport {
+    pub tenant: String,
+    /// Load the plan was provisioned for before/after (pre-headroom).
+    pub old_plan_qps: f64,
+    pub target_qps: f64,
+    /// Σ N·p before and after (equal when the shrink was held).
+    pub old_usage: f64,
+    pub new_usage: f64,
+    /// Instances started + stopped by the move (0 when held).
+    pub churn_instances: usize,
+    pub applied: bool,
+    /// "shrunk", or the planner's diagnostic when held.
+    pub reason: String,
+}
+
+impl ShrinkReport {
+    /// One-line summary for event logs and determinism comparisons.
+    pub fn summary(&self) -> String {
+        let status = if self.applied {
+            "applied".to_string()
+        } else {
+            format!("held ({})", self.reason)
+        };
+        format!(
+            "shrink: {:.0}->{:.0} qps usage {:.2}->{:.2} churn {} {}",
+            self.old_plan_qps,
+            self.target_qps,
+            self.old_usage,
+            self.new_usage,
+            self.churn_instances,
+            status
+        )
+    }
+}
+
 /// The online N-tenant admission controller. Owns the resident set;
 /// all planning is deterministic (seeded SA, no wall-clock input), so
 /// feeding the same arrival/departure sequence always reproduces the
@@ -293,9 +341,10 @@ impl AdmissionController {
     }
 
     /// Plan `pipeline` at `plan_qps` into the capacity `reserved`
-    /// leaves free: Case 2 (min resource) with a Case-1 (max load)
-    /// fallback near capacity, then bandwidth-aware placement — the
-    /// same ladder `Autoscaler::observe_with_reservations` climbs.
+    /// leaves free: one unified-planner ladder — Case 2 (min resource)
+    /// first, Case-1 (max load) fallback near capacity (accepted only
+    /// when its solved peak covers the target) — the same ladder
+    /// `Autoscaler::observe_with_reservations` climbs.
     fn plan_into(
         &self,
         pipeline: &Pipeline,
@@ -304,30 +353,23 @@ impl AdmissionController {
         reserved: &[GpuReservation],
     ) -> Result<(Allocation, Deployment), String> {
         let target = plan_qps * self.cfg.headroom;
-        let ctx = AllocContext::new(pipeline, &self.cluster, predictors, self.cfg.batch)
-            .with_reserved(reserved.to_vec());
-        let allocation = match min_resource::solve(&ctx, target, self.cfg.sa) {
-            Some((r, _gpus)) => r.best,
-            None => max_load::solve(&ctx, self.cfg.sa)
-                .filter(|r| r.best_objective >= target)
-                .map(|r| r.best)
+        let request = PlanRequest::new(
+            Objective::MinResource { load_qps: target },
+            ClusterState::with_reservations(&self.cluster, reserved),
+            pipeline,
+            predictors,
+        )
+        .batch(self.cfg.batch)
+        .sa(self.cfg.sa);
+        let solution = match CamelotPlanner.plan(&request) {
+            Ok(s) => s,
+            Err(_) => CamelotPlanner
+                .plan(&request.clone().objective(Objective::MaxLoad))
+                .ok()
+                .filter(|s| s.objective_value >= target)
                 .ok_or_else(|| format!("no allocation supports {target:.1} qps"))?,
         };
-        let demands = ctx.bw_budget_storage(&allocation);
-        let deployment = deploy::deploy_reserved(
-            pipeline,
-            &self.cluster,
-            &allocation,
-            self.cfg.batch,
-            CommMode::GlobalIpc,
-            demands.as_deref().map(|d| deploy::BwBudget {
-                demands: d,
-                cap: 0.75 * self.cluster.gpu.mem_bw,
-            }),
-            reserved,
-        )
-        .map_err(|e| e.to_string())?;
-        Ok((allocation, deployment))
+        Ok((solution.allocation, solution.deployment))
     }
 
     /// Decide admission for an arriving tenant. On success the tenant
@@ -430,6 +472,122 @@ impl AdmissionController {
         id
     }
 
+    /// Online resident shrink — the ROADMAP's re-admission path: when a
+    /// resident's offered load falls, re-plan it for `target_qps` via
+    /// [`Objective::Shrink`] into the capacity the *other* residents
+    /// leave free, and apply only when the planner finds a strictly
+    /// smaller plan (otherwise every placement stays — shrinking would
+    /// churn instances for nothing). On apply, the resident's arrival
+    /// process is re-pinned to the new peak. Returns `None` when `id`
+    /// is not resident.
+    pub fn shrink_resident(&mut self, id: u64, target_qps: f64) -> Option<ShrinkReport> {
+        assert!(target_qps > 0.0, "shrink target must be positive");
+        let pos = self.residents.iter().position(|r| r.id == id)?;
+        let holds = self.resident_holds();
+        let others = self.fold_holds(&holds, Some(pos));
+        let r = &self.residents[pos];
+        let target = target_qps * self.cfg.headroom;
+        let outcome = CamelotPlanner.plan(
+            &PlanRequest::new(
+                Objective::Shrink { target_qps: target, current: r.allocation.clone() },
+                ClusterState::with_reservations(&self.cluster, &others),
+                &r.pipeline,
+                &r.predictors,
+            )
+            .batch(self.cfg.batch)
+            .sa(self.cfg.sa),
+        );
+        let old_usage = r.allocation.total_quota();
+        let held = |reason: String| ShrinkReport {
+            tenant: r.name.clone(),
+            old_plan_qps: r.plan_qps,
+            target_qps,
+            old_usage,
+            new_usage: old_usage,
+            churn_instances: 0,
+            applied: false,
+            reason,
+        };
+        let report = match outcome {
+            Ok(s) => {
+                // same cross-tenant QoS contract as try_admit: the
+                // re-placed (smaller) footprint moves bandwidth pressure
+                // around, so every tenant's predicted p99 must still
+                // hold under the candidate holds before anything moves
+                let new_holds = reservations_for(&r.pipeline, &self.cluster, &s.deployment);
+                let mut qos_block: Option<String> = None;
+                for (i, other) in self.residents.iter().enumerate() {
+                    if i == pos {
+                        continue;
+                    }
+                    // tenant i's view: every resident except itself and
+                    // the shrinking tenant's OLD footprint, plus the
+                    // shrinking tenant's candidate footprint
+                    let mut rest = vec![GpuReservation::default(); self.cluster.num_gpus];
+                    for (j, h) in holds.iter().enumerate() {
+                        if j != pos && j != i {
+                            merge_reservations(&mut rest, h);
+                        }
+                    }
+                    merge_reservations(&mut rest, &new_holds);
+                    let p99 = self.tenant_p99(
+                        &other.pipeline,
+                        &other.predictors,
+                        &other.allocation,
+                        other.plan_qps,
+                        &rest,
+                    );
+                    if p99 > other.pipeline.qos_target_s {
+                        qos_block = Some(format!(
+                            "would break QoS for {}: predicted p99 {p99:.4}s > target {:.4}s",
+                            other.name, other.pipeline.qos_target_s
+                        ));
+                        break;
+                    }
+                }
+                if qos_block.is_none() {
+                    let own = self.tenant_p99(
+                        &r.pipeline,
+                        &r.predictors,
+                        &s.allocation,
+                        target_qps,
+                        &others,
+                    );
+                    if own > r.pipeline.qos_target_s {
+                        qos_block = Some(format!(
+                            "own predicted p99 {own:.4}s > target {:.4}s",
+                            r.pipeline.qos_target_s
+                        ));
+                    }
+                }
+                if let Some(reason) = qos_block {
+                    held(reason)
+                } else {
+                    let churn_instances =
+                        placement_churn(&r.deployment.placements, &s.deployment.placements);
+                    let report = ShrinkReport {
+                        tenant: r.name.clone(),
+                        old_plan_qps: r.plan_qps,
+                        target_qps,
+                        old_usage,
+                        new_usage: s.usage,
+                        churn_instances,
+                        applied: true,
+                        reason: "shrunk".to_string(),
+                    };
+                    let r = &mut self.residents[pos];
+                    r.allocation = s.allocation;
+                    r.deployment = s.deployment;
+                    r.plan_qps = target_qps;
+                    r.arrivals = r.arrivals.scaled_to_peak(target_qps);
+                    report
+                }
+            }
+            Err(e) => held(e.to_string()),
+        };
+        Some(report)
+    }
+
     /// Remove a resident and re-pack the survivors. Returns `None` when
     /// `id` is not resident (e.g. the arrival was rejected).
     pub fn depart(&mut self, id: u64) -> Option<RepackPlan> {
@@ -464,26 +622,22 @@ impl AdmissionController {
             Vec::with_capacity(order.len());
         for &i in &order {
             let r = &self.residents[i];
-            let ctx =
-                AllocContext::new(&r.pipeline, &self.cluster, &r.predictors, self.cfg.batch);
-            let demands = ctx.bw_budget_storage(&r.allocation);
-            // greedy: keep the allocation, just re-place it — the
-            // place() heuristic (scarcest-remaining first) packs the
-            // freed share without touching instance counts or quotas
-            let greedy = deploy::deploy_reserved(
-                &r.pipeline,
-                &self.cluster,
-                &r.allocation,
-                self.cfg.batch,
-                CommMode::GlobalIpc,
-                demands.as_deref().map(|d| deploy::BwBudget {
-                    demands: d,
-                    cap: 0.75 * self.cluster.gpu.mem_bw,
-                }),
-                &held,
+            // greedy: keep the allocation, just re-place it
+            // (Objective::Repack) — the placement heuristic
+            // (scarcest-remaining first) packs the freed share without
+            // touching instance counts or quotas
+            let greedy = CamelotPlanner.plan(
+                &PlanRequest::new(
+                    Objective::Repack { allocation: r.allocation.clone() },
+                    ClusterState::with_reservations(&self.cluster, &held),
+                    &r.pipeline,
+                    &r.predictors,
+                )
+                .batch(self.cfg.batch)
+                .sa(self.cfg.sa),
             );
             let (alloc, dep) = match greedy {
-                Ok(dep) => (r.allocation.clone(), dep),
+                Ok(s) => (s.allocation, s.deployment),
                 // fallback: re-solve the tenant from scratch into the
                 // remainder (min_resource drives allocator::sa's
                 // annealer — quotas and counts may change)
@@ -626,11 +780,13 @@ pub fn replay_trace(
 
     for e in &trace.events {
         let (desc, decision) = match &e.kind {
-            TraceEventKind::Arrive { pipeline, arrivals, plan_qps } => {
+            TraceEventKind::Arrive { pipeline, name, arrivals, plan_qps } => {
                 let desc = format!("arrive {pipeline} @ {plan_qps:.0} qps");
                 let p = crate::suite::pipeline_by_name(pipeline)
                     .ok_or_else(|| format!("trace names unknown pipeline '{pipeline}'"))?;
-                let name = format!("{pipeline}#{}", e.tenant);
+                let name = name
+                    .clone()
+                    .unwrap_or_else(|| format!("{pipeline}#{}", e.tenant));
                 let decision =
                     match ctl.try_admit(&name, &p, arrivals.clone(), *plan_qps) {
                         Ok(id) => {
@@ -639,6 +795,17 @@ pub fn replay_trace(
                         }
                         Err(reason) => format!("rejected: {reason}"),
                     };
+                (desc, decision)
+            }
+            TraceEventKind::Shrink { target_qps } => {
+                let desc = format!("shrink to {target_qps:.0} qps");
+                let decision = match resident_ids.iter().find(|(t, _)| *t == e.tenant) {
+                    Some(&(_, id)) => ctl
+                        .shrink_resident(id, *target_qps)
+                        .expect("resident shrinks")
+                        .summary(),
+                    None => "no-op (was not admitted)".to_string(),
+                };
                 (desc, decision)
             }
             TraceEventKind::Depart => {
@@ -791,8 +958,15 @@ pub fn static_partition_replay(
                 let mut need = None;
                 for k in 1..=free {
                     let sub = ClusterSpec { num_gpus: k, ..cluster.clone() };
-                    let ctx = AllocContext::new(&p, &sub, &preds, cfg.batch);
-                    if min_resource::solve(&ctx, target, cfg.sa).is_some() {
+                    let req = PlanRequest::new(
+                        Objective::MinResource { load_qps: target },
+                        ClusterState::exclusive(&sub),
+                        &p,
+                        &preds,
+                    )
+                    .batch(cfg.batch)
+                    .sa(cfg.sa);
+                    if CamelotPlanner.plan(&req).is_ok() {
                         need = Some(k);
                         break;
                     }
@@ -812,6 +986,10 @@ pub fn static_partition_replay(
                     free += k;
                 }
             }
+            // static partitioning has no online shrink: dedicated whole
+            // GPUs stay dedicated until departure — exactly the rigidity
+            // the shared planner's Objective::Shrink removes
+            TraceEventKind::Shrink { .. } => {}
         }
         peak_residents = peak_residents.max(holds.len());
         if !holds.is_empty() {
@@ -829,6 +1007,7 @@ pub fn static_partition_replay(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::comm::CommMode;
     use crate::suite::real;
 
     fn controller() -> AdmissionController {
@@ -991,6 +1170,52 @@ mod tests {
         assert_eq!(r.id, survivor);
         let (_, old) = before.iter().find(|(id, _)| *id == survivor).unwrap();
         assert_eq!(&r.deployment.placements, old, "survivor must not move");
+    }
+
+    #[test]
+    fn shrink_frees_capacity_for_the_next_arrival() {
+        // provision a tenant for a daytime load, shrink it to its
+        // overnight trough, and verify the freed share is real
+        let mut ctl = controller();
+        let p = real::img_to_text();
+        let id = arrive(&mut ctl, "big", &p, 150.0).expect("tenant admits");
+        let before = ctl.total_usage();
+        let rep = ctl.shrink_resident(id, 30.0).expect("resident shrinks");
+        assert!(rep.applied, "{}", rep.summary());
+        assert!(
+            rep.new_usage < rep.old_usage,
+            "shrink must reduce usage: {}",
+            rep.summary()
+        );
+        assert!(ctl.total_usage() < before);
+        // the resident's bookkeeping followed the shrink
+        let r = &ctl.residents()[0];
+        assert_eq!(r.id, id);
+        assert!((r.plan_qps - 30.0).abs() < 1e-12);
+        assert!((r.arrivals.peak_qps() - 30.0).abs() < 1e-12);
+        // freed capacity is real: another tenant fits next to the
+        // shrunken resident
+        arrive(&mut ctl, "next", &real::text_to_text(), 80.0)
+            .expect("freed share admits the next tenant");
+    }
+
+    #[test]
+    fn shrink_holds_when_no_smaller_plan_exists() {
+        let mut ctl = controller();
+        let p = real::text_to_text();
+        let id = arrive(&mut ctl, "a", &p, 60.0).expect("admits");
+        let before: Vec<_> = ctl.residents()[0].deployment.placements.clone();
+        let qps_before = ctl.residents()[0].plan_qps;
+        // "shrinking" to a larger load cannot use less — must be held
+        let rep = ctl.shrink_resident(id, 200.0).expect("resident exists");
+        assert!(!rep.applied, "{}", rep.summary());
+        assert_eq!(rep.churn_instances, 0);
+        assert!((rep.new_usage - rep.old_usage).abs() < 1e-12);
+        let r = &ctl.residents()[0];
+        assert_eq!(r.deployment.placements, before, "held shrink must not move instances");
+        assert!((r.plan_qps - qps_before).abs() < 1e-12);
+        // unknown id is None
+        assert!(ctl.shrink_resident(999, 10.0).is_none());
     }
 
     #[test]

@@ -8,10 +8,10 @@
 //! current plan was provisioned for, and each plan carries a headroom
 //! factor so transient upticks don't immediately violate QoS.
 
-use crate::allocator::{max_load, min_resource, AllocContext, SaParams};
-use crate::comm::CommMode;
+use crate::allocator::SaParams;
 use crate::config::ClusterSpec;
-use crate::deploy::{self, Allocation, GpuReservation};
+use crate::deploy::{Allocation, GpuReservation};
+use crate::planner::{CamelotPlanner, ClusterState, Objective, PlanRequest, Planner};
 use crate::predictor::StagePredictor;
 use crate::sim::{Deployment, InstancePlacement, SimOptions, Simulator};
 use crate::suite::workload::DiurnalPattern;
@@ -102,7 +102,8 @@ impl<'a> Autoscaler<'a> {
 
     /// [`observe`](Self::observe) on a shared cluster: plan only into
     /// the capacity co-located tenants leave free (`reserved` is empty
-    /// or one entry per GPU, e.g. from [`deploy::reservations_for`]).
+    /// or one entry per GPU, e.g. from
+    /// [`crate::deploy::reservations_for`]).
     ///
     /// Returns `Some` with the fresh plan after a replan, `None` when
     /// the current plan stands. A replan that finds *no feasible plan*
@@ -130,32 +131,21 @@ impl<'a> Autoscaler<'a> {
             return None;
         }
         let target = load_qps * self.config.headroom;
-        let ctx =
-            AllocContext::new(self.pipeline, self.cluster, self.predictors, self.config.batch)
-                .with_reserved(reserved.to_vec());
-        // Case 2 at the target; near/above capacity fall back to Case 1
-        let allocation = match min_resource::solve(&ctx, target, self.config.sa) {
-            Some((r, _gpus)) => Some(r.best),
-            None => max_load::solve(&ctx, self.config.sa).map(|r| r.best),
-        };
-        let planned = allocation.and_then(|allocation| {
-            let demands = ctx.bw_budget_storage(&allocation);
-            deploy::deploy_reserved(
-                self.pipeline,
-                self.cluster,
-                &allocation,
-                self.config.batch,
-                CommMode::GlobalIpc,
-                demands.as_deref().map(|d| deploy::BwBudget {
-                    demands: d,
-                    cap: 0.75 * self.cluster.gpu.mem_bw,
-                }),
-                reserved,
-            )
-            .ok()
-            .map(|deployment| (allocation, deployment))
-        });
-        let Some((allocation, deployment)) = planned else {
+        // one plan-driven path: Case 2 at the target against the shared
+        // cluster state; near/above capacity fall back to Case 1
+        let state = ClusterState::with_reservations(self.cluster, reserved);
+        let request = PlanRequest::new(
+            Objective::MinResource { load_qps: target },
+            state,
+            self.pipeline,
+            self.predictors,
+        )
+        .batch(self.config.batch)
+        .sa(self.config.sa);
+        let solution = CamelotPlanner
+            .plan(&request)
+            .or_else(|_| CamelotPlanner.plan(&request.clone().objective(Objective::MaxLoad)));
+        let Ok(solution) = solution else {
             if reserved_changed {
                 // the old plan was solved against different holds and
                 // may now be oversubscribed — do not keep serving it
@@ -163,14 +153,13 @@ impl<'a> Autoscaler<'a> {
             }
             return None;
         };
-        let usage = allocation.total_quota();
         self.replans += 1;
         self.last_reserved = reserved.to_vec();
         self.current = Some(Plan {
-            allocation,
-            deployment,
+            allocation: solution.allocation,
+            deployment: solution.deployment,
             provisioned_qps: target,
-            usage,
+            usage: solution.usage,
         });
         self.current.as_ref()
     }

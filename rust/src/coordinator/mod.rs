@@ -10,6 +10,12 @@
 //! The event-driven simulator (`sim::engine`) is used for the paper's
 //! large parameter sweeps; this module is what a downstream user
 //! deploys.
+//!
+//! All resource planning — the [`autoscale::Autoscaler`]'s Case-2
+//! replans, [`admission::AdmissionController`]'s admission / re-pack /
+//! shrink decisions — goes through the unified [`crate::planner`] API
+//! (one typed `PlanRequest` per decision; no hand-threaded reservation
+//! plumbing).
 
 pub mod admission;
 pub mod autoscale;
@@ -18,7 +24,7 @@ pub mod batcher;
 
 pub use admission::{
     replay_trace, static_partition_replay, AdmissionConfig, AdmissionController,
-    RejectReason, RepackPlan, ReplayConfig, ReplayReport,
+    RejectReason, RepackPlan, ReplayConfig, ReplayReport, ShrinkReport,
 };
 pub use autoscale::{
     run_closed_loop, AutoscaleConfig, Autoscaler, ClosedLoopReport, EpochLoopConfig,

@@ -16,12 +16,19 @@
 //! Placement is validated with the same admission rules the simulator
 //! enforces (SM quota ≤ 100%, ≤48 MPS contexts, memory capacity with
 //! model sharing).
+//!
+//! Every entry point takes a [`ClusterState`], which carries the
+//! cluster spec *and* the merged per-GPU holds of co-located tenants —
+//! there is exactly one placement path, reservation-aware by
+//! construction (the former non-reserved/`*_reserved` variant pairs are
+//! gone; an exclusive cluster is just a hold-free state).
 
 use crate::config::ClusterSpec;
+use crate::planner::ClusterState;
 use crate::sim::{Deployment, InstancePlacement, SimGpu};
 use crate::suite::Pipeline;
 
-/// Per-stage allocation produced by the policies in [`crate::allocator`].
+/// Per-stage allocation produced by the policies in [`crate::planner`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct Allocation {
     /// N_i — instances per stage.
@@ -114,7 +121,7 @@ pub fn reservations_for(
 /// Accumulate `extra`'s per-GPU holds into `into` (same cluster, one
 /// entry per GPU): the N-tenant form of [`reservations_for`], where the
 /// remainder a newcomer plans into is the sum of every resident
-/// tenant's footprint.
+/// tenant's footprint. [`ClusterState::reserve`] is the owned form.
 pub fn merge_reservations(into: &mut [GpuReservation], extra: &[GpuReservation]) {
     assert_eq!(
         into.len(),
@@ -146,44 +153,28 @@ where
     mask.count_ones() as usize
 }
 
-/// Place an allocation on the cluster. Returns the placements and the
-/// final per-GPU states (for constraint inspection, e.g. Σ b(p) per GPU).
+/// Place an allocation on the cluster state (spec + co-tenant holds).
+/// Returns the placements and the final per-GPU states (for constraint
+/// inspection, e.g. Σ b(p) per GPU).
 ///
 /// With a [`BwBudget`], a GPU whose accumulated bandwidth demand would
 /// exceed the cap is skipped — bandwidth-hungry instances spread across
 /// devices exactly like memory-hungry ones.
 pub fn place(
     pipeline: &Pipeline,
-    cluster: &ClusterSpec,
+    state: &ClusterState,
     alloc: &Allocation,
     batch: u32,
     bw: Option<BwBudget<'_>>,
 ) -> Result<(Vec<InstancePlacement>, Vec<SimGpu>), DeployError> {
-    place_reserved(pipeline, cluster, alloc, batch, bw, &[])
-}
-
-/// [`place`] on a cluster whose GPUs are partially occupied by
-/// co-located tenants. `reserved` is either empty (exclusive cluster)
-/// or one entry per GPU.
-pub fn place_reserved(
-    pipeline: &Pipeline,
-    cluster: &ClusterSpec,
-    alloc: &Allocation,
-    batch: u32,
-    bw: Option<BwBudget<'_>>,
-    reserved: &[GpuReservation],
-) -> Result<(Vec<InstancePlacement>, Vec<SimGpu>), DeployError> {
+    let cluster = state.spec();
     assert_eq!(alloc.instances.len(), pipeline.n_stages());
     assert_eq!(alloc.quotas.len(), pipeline.n_stages());
-    assert!(
-        reserved.is_empty() || reserved.len() == cluster.num_gpus,
-        "reservations must cover every GPU"
-    );
     let mut gpus: Vec<SimGpu> = (0..cluster.num_gpus)
         .map(|_| SimGpu::new(cluster.gpu.clone()))
         .collect();
     let mut gpu_bw = vec![0.0f64; cluster.num_gpus];
-    for (g, r) in reserved.iter().enumerate() {
+    for (g, r) in state.reservations().iter().enumerate() {
         gpus[g].reserve(r.sm_frac, r.mem_bytes, r.contexts);
         gpu_bw[g] += r.bw_demand;
     }
@@ -265,36 +256,17 @@ pub fn place_reserved(
 /// place(..).is_ok()`.
 pub fn feasible_placement(
     pipeline: &Pipeline,
-    cluster: &ClusterSpec,
+    state: &ClusterState,
     alloc: &Allocation,
     batch: u32,
     bw: Option<BwBudget<'_>>,
-) -> bool {
-    feasible_placement_reserved(pipeline, cluster, alloc, batch, bw, &[])
-}
-
-/// [`feasible_placement`] on a partially occupied cluster (see
-/// [`place_reserved`]). Still allocation-free.
-///
-/// Invariant (property-tested): `feasible_placement_reserved(..) ==
-/// place_reserved(..).is_ok()`.
-pub fn feasible_placement_reserved(
-    pipeline: &Pipeline,
-    cluster: &ClusterSpec,
-    alloc: &Allocation,
-    batch: u32,
-    bw: Option<BwBudget<'_>>,
-    reserved: &[GpuReservation],
 ) -> bool {
     const MAX_GPUS: usize = 32;
     const MAX_STAGES: usize = 8;
+    let cluster = state.spec();
     let n_stages = pipeline.n_stages();
     let n_gpus = cluster.num_gpus;
     assert!(n_gpus <= MAX_GPUS && n_stages <= MAX_STAGES, "raise MAX_* consts");
-    assert!(
-        reserved.is_empty() || reserved.len() == n_gpus,
-        "reservations must cover every GPU"
-    );
     let cap_mem = cluster.gpu.mem_bytes as f64;
     let cap_ctx = cluster.gpu.mps_contexts;
     // per-GPU state on the stack — this runs thousands of times per
@@ -305,7 +277,7 @@ pub fn feasible_placement_reserved(
     let mut bw_used = [0.0f64; MAX_GPUS];
     // model charged once per (gpu, stage): bitmask per gpu
     let mut hosts = [0u64; MAX_GPUS];
-    for (g, r) in reserved.iter().enumerate() {
+    for (g, r) in state.reservations().iter().enumerate() {
         sm[g] = r.sm_frac;
         mem[g] = r.mem_bytes;
         ctx[g] = r.contexts;
@@ -380,27 +352,13 @@ pub fn feasible_placement_reserved(
 /// Convenience: place and wrap into a runnable [`Deployment`].
 pub fn deploy(
     pipeline: &Pipeline,
-    cluster: &ClusterSpec,
+    state: &ClusterState,
     alloc: &Allocation,
     batch: u32,
     comm: crate::comm::CommMode,
     bw: Option<BwBudget<'_>>,
 ) -> Result<Deployment, DeployError> {
-    let (placements, _) = place(pipeline, cluster, alloc, batch, bw)?;
-    Ok(Deployment { placements, batch, comm })
-}
-
-/// [`deploy`] into the capacity a co-located tenant leaves free.
-pub fn deploy_reserved(
-    pipeline: &Pipeline,
-    cluster: &ClusterSpec,
-    alloc: &Allocation,
-    batch: u32,
-    comm: crate::comm::CommMode,
-    bw: Option<BwBudget<'_>>,
-    reserved: &[GpuReservation],
-) -> Result<Deployment, DeployError> {
-    let (placements, _) = place_reserved(pipeline, cluster, alloc, batch, bw, reserved)?;
+    let (placements, _) = place(pipeline, state, alloc, batch, bw)?;
     Ok(Deployment { placements, batch, comm })
 }
 
@@ -412,12 +370,16 @@ mod tests {
     use crate::suite::{artifact, real};
     use crate::util::testkit;
 
+    fn free(c: &ClusterSpec) -> ClusterState {
+        ClusterState::exclusive(c)
+    }
+
     #[test]
     fn places_simple_allocation() {
         let p = real::img_to_text();
         let c = ClusterSpec::two_2080ti();
         let a = Allocation { instances: vec![2, 2], quotas: vec![0.4, 0.3] };
-        let (pl, gpus) = place(&p, &c, &a, 16, None).unwrap();
+        let (pl, gpus) = place(&p, &free(&c), &a, 16, None).unwrap();
         assert_eq!(pl.len(), 4);
         // no GPU oversubscribed
         for g in &gpus {
@@ -431,7 +393,7 @@ mod tests {
         let p = real::img_to_text();
         let c = ClusterSpec::two_2080ti();
         let a = Allocation { instances: vec![2, 1], quotas: vec![0.3, 0.2] };
-        let (pl, _) = place(&p, &c, &a, 16, None).unwrap();
+        let (pl, _) = place(&p, &free(&c), &a, 16, None).unwrap();
         let s0: Vec<usize> = pl.iter().filter(|x| x.stage == 0).map(|x| x.gpu).collect();
         assert_eq!(s0[0], s0[1], "same-stage instances should co-locate");
     }
@@ -442,7 +404,7 @@ mod tests {
         let c = ClusterSpec::two_2080ti();
         // 2 GPUs cannot host 3.0 GPUs worth of quota
         let a = Allocation { instances: vec![3, 3], quotas: vec![0.5, 0.5] };
-        assert!(place(&p, &c, &a, 16, None).is_err());
+        assert!(place(&p, &free(&c), &a, 16, None).is_err());
     }
 
     #[test]
@@ -452,7 +414,7 @@ mod tests {
         let p = artifact::pipeline(1, 1, 3);
         let c = ClusterSpec::two_2080ti();
         let a = Allocation { instances: vec![4, 4, 4], quotas: vec![0.1, 0.1, 0.2] };
-        let (pl, _) = place(&p, &c, &a, 64, None).unwrap();
+        let (pl, _) = place(&p, &free(&c), &a, 64, None).unwrap();
         assert_eq!(pl.len(), 12);
     }
 
@@ -489,6 +451,7 @@ mod tests {
                     real::img_to_img()
                 };
                 let c = ClusterSpec::two_2080ti();
+                let state = ClusterState::with_reservations(&c, reserved);
                 let a = Allocation { instances: inst.clone(), quotas: quotas.clone() };
                 let demands: Vec<f64> =
                     p.stages.iter().map(|s| s.hbm_bytes(*batch) / 0.02).collect();
@@ -496,10 +459,8 @@ mod tests {
                     None,
                     Some(BwBudget { demands: &demands, cap: 0.75 * c.gpu.mem_bw }),
                 ] {
-                    let fast =
-                        feasible_placement_reserved(&p, &c, &a, *batch, bw, reserved);
-                    let slow =
-                        place_reserved(&p, &c, &a, *batch, bw, reserved).is_ok();
+                    let fast = feasible_placement(&p, &state, &a, *batch, bw);
+                    let slow = place(&p, &state, &a, *batch, bw).is_ok();
                     if fast != slow {
                         return Err(format!("disagree: fast={fast} slow={slow}"));
                     }
@@ -515,16 +476,17 @@ mod tests {
         let c = ClusterSpec::two_2080ti();
         let a = Allocation { instances: vec![2, 2], quotas: vec![0.45, 0.45] };
         // fits an empty cluster (Σ quota 1.8 on 2 GPUs)
-        assert!(feasible_placement(&p, &c, &a, 16, None));
+        assert!(feasible_placement(&p, &free(&c), &a, 16, None));
         // a tenant holding 60% of each GPU leaves too little
         let held = vec![
             GpuReservation { sm_frac: 0.6, ..Default::default() };
             c.num_gpus
         ];
-        assert!(!feasible_placement_reserved(&p, &c, &a, 16, None, &held));
+        let shared = ClusterState::with_reservations(&c, &held);
+        assert!(!feasible_placement(&p, &shared, &a, 16, None));
         // but a smaller allocation still fits around the tenant
         let small = Allocation { instances: vec![1, 1], quotas: vec![0.3, 0.3] };
-        assert!(feasible_placement_reserved(&p, &c, &small, 16, None, &held));
+        assert!(feasible_placement(&p, &shared, &small, 16, None));
     }
 
     #[test]
@@ -553,13 +515,12 @@ mod tests {
         // derived reservations must be admissible around the original:
         // the cluster sim admits the deployment, so a second tenant
         // planned into the remainder co-exists by construction
-        let (_, gpus) = place_reserved(
+        let (_, gpus) = place(
             &p,
-            &c,
+            &ClusterState::with_reservations(&c, &res),
             &Allocation { instances: vec![1, 1], quotas: vec![0.2, 0.2] },
             16,
             None,
-            &res,
         )
         .expect("remainder fits a small tenant");
         for g in &gpus {
@@ -625,7 +586,7 @@ mod tests {
                 let p = real::text_to_text();
                 let c = ClusterSpec::two_2080ti();
                 let a = Allocation { instances: vec![n0, n1], quotas: vec![q0, q1] };
-                match deploy(&p, &c, &a, batch as u32, CommMode::GlobalIpc, None) {
+                match deploy(&p, &free(&c), &a, batch as u32, CommMode::GlobalIpc, None) {
                     Ok(d) => {
                         let sim = crate::sim::Simulator::new(
                             &p,

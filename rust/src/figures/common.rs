@@ -9,11 +9,11 @@
 
 use std::cell::RefCell;
 
-use crate::allocator::{min_resource, AllocContext, SaParams};
+use crate::allocator::SaParams;
 use crate::baselines::{plan, Planner};
 use crate::comm::CommMode;
 use crate::config::ClusterSpec;
-use crate::deploy;
+use crate::planner::{CamelotPlanner, ClusterState, Objective, PlanRequest, Planner as _};
 use crate::predictor::StagePredictor;
 use crate::sim::{CostModel, Deployment, InstancePlacement, SimOptions, SimReport, Simulator};
 use crate::suite::{workload, Pipeline};
@@ -166,25 +166,22 @@ pub fn plan_low_load(
 ) -> Option<Deployment> {
     match planner {
         Planner::Camelot | Planner::CamelotNC => {
-            let mut ctx = AllocContext::new(pipeline, cluster, predictors, batch);
-            ctx.enforce_bw = matches!(planner, Planner::Camelot);
-            match min_resource::solve(&ctx, load_qps, SaParams::default()) {
-                Some((r, _gpus)) => {
-                    let demands = ctx.bw_budget_storage(&r.best);
-                    deploy::deploy(
-                        pipeline, cluster, &r.best, batch, CommMode::GlobalIpc,
-                        demands.as_deref().map(|d| deploy::BwBudget {
-                            demands: d,
-                            cap: 0.75 * cluster.gpu.mem_bw,
-                        }),
-                    )
-                    .ok()
-                }
+            let req = PlanRequest::new(
+                Objective::MinResource { load_qps },
+                ClusterState::exclusive(cluster),
+                pipeline,
+                predictors,
+            )
+            .batch(batch)
+            .enforce_bw(matches!(planner, Planner::Camelot));
+            match CamelotPlanner.plan(&req) {
+                Ok(s) => Some(s.deployment),
                 // near the peak, Case 2 has no slack left: fall back to
                 // the Case-1 (max-load) plan, as the online system does
                 // when the load approaches capacity
-                None => plan(planner, pipeline, cluster, predictors, batch, SaParams::default())
-                    .ok(),
+                Err(_) => {
+                    plan(planner, pipeline, cluster, predictors, batch, SaParams::default()).ok()
+                }
             }
         }
         Planner::Laius | Planner::EvenAllocation => {

@@ -444,6 +444,10 @@ pub struct ColocateConfig {
     pub epochs: usize,
     /// Queries per simulation trial.
     pub queries: usize,
+    /// Batch size both tenants plan and serve at.
+    pub batch: u32,
+    /// The shared cluster both tenants co-locate on.
+    pub cluster: ClusterSpec,
     pub seed: u64,
 }
 
@@ -455,6 +459,8 @@ impl Default for ColocateConfig {
             diurnal_peak: 400.0,
             epochs: 12,
             queries: 1_500,
+            batch: AutoscaleConfig::default().batch,
+            cluster: ClusterSpec::two_2080ti(),
             seed: 42,
         }
     }
@@ -473,21 +479,22 @@ pub fn colocate_tables(
     if !(cfg.load_a > 0.0 && cfg.load_b > 0.0 && cfg.diurnal_peak > 0.0) {
         return Err("loads and diurnal peak must be positive".into());
     }
-    if cfg.epochs == 0 || cfg.queries == 0 {
-        return Err("epochs and queries must be at least 1".into());
+    if cfg.epochs == 0 || cfg.queries == 0 || cfg.batch == 0 {
+        return Err("epochs, queries, and batch must be at least 1".into());
     }
-    let cluster = ClusterSpec::two_2080ti();
+    let cluster = cfg.cluster.clone();
     let pipes = [pipe_a, pipe_b];
     let preds: Vec<_> = par::par_map(&pipes, |_, p| common::train_predictors(p, &cluster));
+    let scale_cfg = AutoscaleConfig { batch: cfg.batch, ..Default::default() };
 
     // --- co-located deployment: A first, B into the remainder ---
-    let mut sa = Autoscaler::new(pipe_a, &cluster, &preds[0], AutoscaleConfig::default());
+    let mut sa = Autoscaler::new(pipe_a, &cluster, &preds[0], scale_cfg.clone());
     sa.observe(cfg.load_a)
         .ok_or_else(|| format!("tenant A ({}) has no feasible plan", pipe_a.name))?;
     let da = sa.current().unwrap().deployment.clone();
     let usage_a = sa.current().unwrap().usage;
     let held = reservations_for(pipe_a, &cluster, &da);
-    let mut sb = Autoscaler::new(pipe_b, &cluster, &preds[1], AutoscaleConfig::default());
+    let mut sb = Autoscaler::new(pipe_b, &cluster, &preds[1], scale_cfg.clone());
     sb.observe_with_reservations(cfg.load_b, &held)
         .ok_or_else(|| format!("tenant B ({}) does not fit the remainder", pipe_b.name))?;
     let db = sb.current().unwrap().deployment.clone();
@@ -582,14 +589,7 @@ pub fn colocate_tables(
     };
     let loops: Vec<Option<crate::coordinator::ClosedLoopReport>> =
         par::par_map(&pipes, |i, p| {
-            run_closed_loop(
-                p,
-                &cluster,
-                &preds[i],
-                AutoscaleConfig::default(),
-                &day,
-                &loop_cfg,
-            )
+            run_closed_loop(p, &cluster, &preds[i], scale_cfg.clone(), &day, &loop_cfg)
         });
 
     let mut t2 = Table::new(
@@ -679,7 +679,6 @@ impl Default for AdmissionExpConfig {
 /// log, the measured per-interval QoS, and the admitted-count /
 /// utilization comparison.
 pub fn admission_tables(cfg: &AdmissionExpConfig) -> Result<Vec<Table>, String> {
-    use crate::coordinator::admission::{replay_trace, static_partition_replay, ReplayConfig};
     use crate::suite::workload::{TenantTrace, TenantTraceConfig};
 
     if cfg.tenants == 0 || cfg.queries == 0 {
@@ -703,10 +702,44 @@ pub fn admission_tables(cfg: &AdmissionExpConfig) -> Result<Vec<Table>, String> 
         },
         cfg.seed,
     );
-    let mut replay_cfg = ReplayConfig { queries: cfg.queries, ..Default::default() };
-    replay_cfg.admission.seed = cfg.seed;
-    let shared = replay_trace(&cluster, &trace, &replay_cfg)?;
-    let dedicated = static_partition_replay(&cluster, &trace, &replay_cfg.admission)?;
+    let knobs = ReplayKnobs {
+        queries: cfg.queries,
+        batch: crate::coordinator::AdmissionConfig::default().batch,
+        seed: cfg.seed,
+    };
+    admission_tables_for_trace(&cluster, &trace, knobs)
+}
+
+/// Bundled replay knobs for [`admission_tables_for_trace`].
+#[derive(Debug, Clone, Copy)]
+pub struct ReplayKnobs {
+    pub queries: usize,
+    pub batch: u32,
+    pub seed: u64,
+}
+
+/// The admission experiment over an *explicit* tenant trace — the
+/// entry `camelot admit --spec` uses for [`crate::planner::ScenarioSpec`]
+/// scenarios (arrive/shrink/depart events, cluster + batch from the
+/// spec).
+pub fn admission_tables_for_trace(
+    cluster: &ClusterSpec,
+    trace: &crate::suite::workload::TenantTrace,
+    knobs: ReplayKnobs,
+) -> Result<Vec<Table>, String> {
+    use crate::coordinator::admission::{replay_trace, static_partition_replay, ReplayConfig};
+
+    if knobs.queries == 0 {
+        return Err("queries must be at least 1".into());
+    }
+    if knobs.batch == 0 {
+        return Err("batch must be at least 1".into());
+    }
+    let mut replay_cfg = ReplayConfig { queries: knobs.queries, ..Default::default() };
+    replay_cfg.admission.seed = knobs.seed;
+    replay_cfg.admission.batch = knobs.batch;
+    let shared = replay_trace(cluster, trace, &replay_cfg)?;
+    let dedicated = static_partition_replay(cluster, trace, &replay_cfg.admission)?;
 
     let mut t1 = Table::new(
         "Admission: online decision log (contention-aware shared cluster)",

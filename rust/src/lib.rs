@@ -19,8 +19,9 @@
 //! Python never runs on the request path: the [`runtime`] module loads
 //! the AOT artifacts through PJRT and serves them from Rust.
 //!
-//! Start with [`suite`] (the benchmarks), [`allocator`] (the paper's two
-//! policies), and [`figures`] (one harness per paper figure).
+//! Start with [`suite`] (the benchmarks), [`planner`] (the unified
+//! planning surface over the paper's two policies), and [`figures`]
+//! (one harness per paper figure).
 
 pub mod allocator;
 pub mod baselines;
@@ -28,6 +29,7 @@ pub mod comm;
 pub mod coordinator;
 pub mod deploy;
 pub mod figures;
+pub mod planner;
 pub mod predictor;
 pub mod runtime;
 pub mod config;
@@ -35,3 +37,11 @@ pub mod metrics;
 pub mod sim;
 pub mod suite;
 pub mod util;
+
+// The unified planning surface is the crate's primary API: every
+// spatial-partitioning decision (Case-1 max-load, Case-2 min-resource,
+// re-pack, resident shrink) is one typed request against one trait.
+pub use planner::{
+    CamelotPlanner, ClusterState, Infeasible, Objective, PlanOutcome, PlanRequest, Planner,
+    ScenarioSpec, Solution,
+};

@@ -3,23 +3,31 @@
 //! Subcommands:
 //!   suite list                         Table I of the paper
 //!   plan  --pipeline <name> ...        run the allocation policies
+//!   plan  --spec <file.json> ...       run a declarative ScenarioSpec
 //!   serve --pipeline <name> ...        serve a real workload over PJRT
 //!   colocate [--pipelines a,b] ...     co-location + diurnal autoscaling
 //!   admit [--tenants N] ...            N-tenant online admission trace
 //!   reproduce --exp <figN|all> ...     regenerate a paper figure/table
 //!
+//! Planning always goes through the unified `planner` API
+//! (`PlanRequest` -> `Planner::plan` -> `PlanOutcome`); `--spec` files
+//! are the declarative form (see EXPERIMENTS.md §ScenarioSpec and
+//! `examples/*.json`).
+//!
 //! (CLI parsing is hand-rolled: the offline build environment has no
 //! clap; see DESIGN.md §Environment-Substitutions.)
 
 use std::collections::HashMap;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use camelot::allocator::{max_load, min_resource, AllocContext, SaParams};
 use camelot::config::ClusterSpec;
 use camelot::coordinator::{Coordinator, CoordinatorConfig, PjrtBackend};
 use camelot::figures;
+use camelot::planner::{
+    CamelotPlanner, ClusterState, Objective, PlanRequest, Planner as _, ScenarioSpec,
+};
 use camelot::suite::{real, workload::PoissonArrivals, Pipeline};
 use camelot::util::fnum;
 
@@ -53,35 +61,64 @@ USAGE:
   camelot suite list
   camelot plan --pipeline <name> [--batch N] [--policy max-load|min-resource]
                [--load QPS] [--cluster 2080ti|dgx2] [--no-bw]
+  camelot plan --spec <file.json>        (declarative ScenarioSpec:
+               Case-1/Case-2 plans per tenant + resident shrink)
   camelot serve --pipeline <name> [--batch N] [--rate QPS] [--queries N]
                 [--artifacts DIR]
   camelot colocate [--pipelines a,b] [--load-a QPS] [--load-b QPS]
                    [--peak QPS] [--epochs N] [--queries N] [--seed S]
+                   [--spec <file.json>]
   camelot admit [--tenants N] [--gap S] [--life S] [--peak-lo QPS]
-                [--peak-hi QPS] [--queries N] [--seed S]
+                [--peak-hi QPS] [--queries N] [--seed S] [--spec <file.json>]
   camelot reproduce [--exp figN|tab1|all|colocate|admission] [--out DIR]
 
-PIPELINES: img-to-img img-to-text text-to-img text-to-text p<i>+c<j>+m<k>"
+PIPELINES: img-to-img img-to-text text-to-img text-to-text p<i>+c<j>+m<k>
+SPEC: see EXPERIMENTS.md (ScenarioSpec) and examples/*.json"
     );
 }
 
-/// Parse `--key value` pairs (flags without values get "true").
+/// Parse `--key value`, `--key=value`, and bare `--flag` arguments
+/// (valueless flags store "true"; a following `--token` is never
+/// swallowed as a value).
 fn opts(args: &[String]) -> HashMap<String, String> {
     let mut m = HashMap::new();
     let mut i = 0;
     while i < args.len() {
         if let Some(key) = args[i].strip_prefix("--") {
-            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
-                i += 1;
-                args[i].clone()
+            if let Some((k, v)) = key.split_once('=') {
+                m.insert(k.to_string(), v.to_string());
             } else {
-                "true".to_string()
-            };
-            m.insert(key.to_string(), val);
+                let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    i += 1;
+                    args[i].clone()
+                } else {
+                    "true".to_string()
+                };
+                m.insert(key.to_string(), val);
+            }
         }
         i += 1;
     }
     m
+}
+
+/// Load a [`ScenarioSpec`] and print the tables a runner produces.
+fn run_spec<F>(cmd: &str, path: &str, run: F) -> i32
+where
+    F: FnOnce(&ScenarioSpec) -> Result<Vec<camelot::util::Table>, String>,
+{
+    match ScenarioSpec::load(Path::new(path)).and_then(|spec| run(&spec)) {
+        Ok(tables) => {
+            for t in &tables {
+                println!("{}", t.render());
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{cmd} --spec: {e}");
+            1
+        }
+    }
 }
 
 fn pipeline_by_name(name: &str) -> Option<Pipeline> {
@@ -111,70 +148,67 @@ fn cmd_suite(args: &[String]) -> i32 {
 
 fn cmd_plan(args: &[String]) -> i32 {
     let o = opts(args);
+    // declarative path: one spec file describes cluster + tenants +
+    // objectives (Case-1/Case-2 per tenant, then resident shrink)
+    if let Some(spec) = o.get("spec") {
+        return run_spec("plan", spec, ScenarioSpec::plan_tables);
+    }
     let Some(p) = o.get("pipeline").and_then(|n| pipeline_by_name(n)) else {
-        eprintln!("--pipeline required (run `camelot suite list`)");
+        eprintln!("--pipeline or --spec required (run `camelot suite list`)");
         return 2;
     };
     let batch: u32 = o.get("batch").and_then(|b| b.parse().ok()).unwrap_or(32);
     let cluster = cluster_by_name(o.get("cluster").map(String::as_str).unwrap_or("2080ti"));
     let policy = o.get("policy").map(String::as_str).unwrap_or("max-load");
+    let load: f64 = o.get("load").and_then(|l| l.parse().ok()).unwrap_or(50.0);
+
+    let objective = match policy {
+        "max-load" => Objective::MaxLoad,
+        "min-resource" => Objective::MinResource { load_qps: load },
+        other => {
+            eprintln!("unknown policy '{other}' (max-load | min-resource)");
+            return 2;
+        }
+    };
 
     eprintln!("training predictors for {} (offline phase)...", p.name);
     let preds = figures::common::train_predictors(&p, &cluster);
-    let mut ctx = AllocContext::new(&p, &cluster, &preds, batch);
-    ctx.enforce_bw = !o.contains_key("no-bw");
+    let request = PlanRequest::new(objective, ClusterState::exclusive(&cluster), &p, &preds)
+        .batch(batch)
+        .enforce_bw(!o.contains_key("no-bw"));
 
     let t0 = Instant::now();
-    match policy {
-        "max-load" => match max_load::solve(&ctx, SaParams::default()) {
-            Some(r) => {
-                println!("policy: maximize peak load (Eq. 1)");
-                println!("  instances per stage : {:?}", r.best.instances);
-                println!(
-                    "  SM quota per instance: {:?}",
-                    r.best
-                        .quotas
-                        .iter()
-                        .map(|q| format!("{:.0}%", q * 100.0))
-                        .collect::<Vec<_>>()
-                );
-                println!("  predicted peak load  : {} qps", fnum(r.best_objective));
-                println!("  solve time           : {:.2} ms", t0.elapsed().as_secs_f64() * 1e3);
-                0
+    match CamelotPlanner.plan(&request) {
+        Ok(s) => {
+            match request.objective {
+                Objective::MaxLoad => println!("policy: maximize peak load (Eq. 1)"),
+                _ => println!("policy: minimize resource usage at {load} qps (Eq. 2/3)"),
             }
-            None => {
-                eprintln!("no feasible allocation");
-                1
+            println!("  GPUs used            : {}", s.gpus);
+            println!("  instances per stage : {:?}", s.allocation.instances);
+            println!(
+                "  SM quota per instance: {:?}",
+                s.allocation
+                    .quotas
+                    .iter()
+                    .map(|q| format!("{:.0}%", q * 100.0))
+                    .collect::<Vec<_>>()
+            );
+            if matches!(request.objective, Objective::MaxLoad) {
+                println!("  predicted peak load  : {} qps", fnum(s.objective_value));
             }
-        },
-        "min-resource" => {
-            let load: f64 = o.get("load").and_then(|l| l.parse().ok()).unwrap_or(50.0);
-            match min_resource::solve(&ctx, load, SaParams::default()) {
-                Some((r, gpus)) => {
-                    println!("policy: minimize resource usage at {load} qps (Eq. 2/3)");
-                    println!("  GPUs required        : {gpus}");
-                    println!("  instances per stage : {:?}", r.best.instances);
-                    println!(
-                        "  SM quota per instance: {:?}",
-                        r.best
-                            .quotas
-                            .iter()
-                            .map(|q| format!("{:.0}%", q * 100.0))
-                            .collect::<Vec<_>>()
-                    );
-                    println!("  Σ N·p (GPU-equiv)    : {}", fnum(r.best.total_quota()));
-                    println!("  solve time           : {:.2} ms", t0.elapsed().as_secs_f64() * 1e3);
-                    0
-                }
-                None => {
-                    eprintln!("no feasible allocation for load {load}");
-                    1
-                }
-            }
+            println!("  Σ N·p (GPU-equiv)    : {}", fnum(s.usage));
+            println!(
+                "  predicted p99        : {:.1} ms (QoS {:.1} ms)",
+                s.predicted_p99_s * 1e3,
+                p.qos_target_s * 1e3
+            );
+            println!("  solve time           : {:.2} ms", t0.elapsed().as_secs_f64() * 1e3);
+            0
         }
-        other => {
-            eprintln!("unknown policy '{other}' (max-load | min-resource)");
-            2
+        Err(e) => {
+            eprintln!("infeasible: {e}");
+            1
         }
     }
 }
@@ -183,6 +217,27 @@ fn cmd_plan(args: &[String]) -> i32 {
 /// shared 2×2080Ti cluster (the cluster-level §VIII-C scenario).
 fn cmd_colocate(args: &[String]) -> i32 {
     let o = opts(args);
+    // declarative path: the spec's first two tenants co-locate
+    if let Some(spec) = o.get("spec") {
+        return run_spec("colocate", spec, |spec| {
+            if spec.tenants.len() < 2 {
+                return Err("colocate --spec needs at least two tenants".to_string());
+            }
+            let (ta, tb) = (&spec.tenants[0], &spec.tenants[1]);
+            let pa = pipeline_by_name(&ta.pipeline).ok_or("unknown pipeline")?;
+            let pb = pipeline_by_name(&tb.pipeline).ok_or("unknown pipeline")?;
+            let cfg = figures::macro_evals::ColocateConfig {
+                load_a: ta.plan_qps,
+                load_b: tb.plan_qps,
+                queries: spec.queries,
+                batch: spec.batch,
+                cluster: spec.cluster.clone(),
+                seed: spec.seed,
+                ..Default::default()
+            };
+            figures::macro_evals::colocate_tables(&pa, &pb, &cfg)
+        });
+    }
     let names = o
         .get("pipelines")
         .map(String::as_str)
@@ -241,6 +296,18 @@ fn cmd_colocate(args: &[String]) -> i32 {
 /// partitioning (the ROADMAP scale-out scenario).
 fn cmd_admit(args: &[String]) -> i32 {
     let o = opts(args);
+    // declarative path: replay the spec's explicit tenant trace
+    // (arrive / shrink / depart events) against the spec's cluster
+    if let Some(spec) = o.get("spec") {
+        return run_spec("admit", spec, |spec| {
+            let knobs = figures::macro_evals::ReplayKnobs {
+                queries: spec.queries,
+                batch: spec.batch,
+                seed: spec.seed,
+            };
+            figures::macro_evals::admission_tables_for_trace(&spec.cluster, &spec.trace(), knobs)
+        });
+    }
     let mut cfg = figures::macro_evals::AdmissionExpConfig::default();
     if let Some(v) = o.get("tenants").and_then(|v| v.parse().ok()) {
         cfg.tenants = v;
@@ -366,6 +433,54 @@ fn cmd_serve(args: &[String]) -> i32 {
     println!("  max       : {:.1} ms", hist.max() * 1e3);
     c.shutdown();
     0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::opts;
+
+    fn parse(args: &[&str]) -> std::collections::HashMap<String, String> {
+        opts(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn key_value_pairs_parse() {
+        let m = parse(&["--pipeline", "img-to-text", "--batch", "16"]);
+        assert_eq!(m.get("pipeline").map(String::as_str), Some("img-to-text"));
+        assert_eq!(m.get("batch").map(String::as_str), Some("16"));
+    }
+
+    #[test]
+    fn valueless_flag_before_another_flag_stores_true() {
+        // `--no-bw --pipeline x`: the following flag token must never be
+        // swallowed as no-bw's value
+        let m = parse(&["--no-bw", "--pipeline", "img-to-text"]);
+        assert_eq!(m.get("no-bw").map(String::as_str), Some("true"));
+        assert_eq!(m.get("pipeline").map(String::as_str), Some("img-to-text"));
+        // trailing valueless flag
+        let m = parse(&["--load", "50", "--no-bw"]);
+        assert_eq!(m.get("no-bw").map(String::as_str), Some("true"));
+        assert_eq!(m.get("load").map(String::as_str), Some("50"));
+    }
+
+    #[test]
+    fn equals_syntax_and_negative_values() {
+        let m = parse(&["--batch=64", "--spec=examples/a.json", "--offset", "-5"]);
+        assert_eq!(m.get("batch").map(String::as_str), Some("64"));
+        assert_eq!(m.get("spec").map(String::as_str), Some("examples/a.json"));
+        // single-dash values are values, not flags
+        assert_eq!(m.get("offset").map(String::as_str), Some("-5"));
+        // `=` in the value survives
+        let m = parse(&["--define", "a=b"]);
+        assert_eq!(m.get("define").map(String::as_str), Some("a=b"));
+    }
+
+    #[test]
+    fn non_flag_tokens_are_ignored() {
+        let m = parse(&["positional", "--key", "v", "stray"]);
+        assert_eq!(m.len(), 1);
+        assert_eq!(m.get("key").map(String::as_str), Some("v"));
+    }
 }
 
 fn cmd_reproduce(args: &[String]) -> i32 {

@@ -1,0 +1,184 @@
+//! [`ClusterState`] — cluster capacity as one value: the static
+//! [`ClusterSpec`] plus the *merged* per-GPU holds of every co-located
+//! tenant.
+//!
+//! Before the planner existed, every layer threaded a bare
+//! `&[GpuReservation]` by hand (the allocator's constraint checker, the
+//! Case-1/Case-2 solvers, the placement pass, the autoscaler, the
+//! admission controller), with "empty slice means exclusive cluster" as
+//! an implicit convention. `ClusterState` owns that vector, normalizes
+//! the empty case away (the reservation vector always has one entry per
+//! GPU; an all-default entry is an unheld device), and provides the
+//! capacity arithmetic every consumer was re-deriving.
+
+use crate::config::ClusterSpec;
+use crate::deploy::{merge_reservations, reservations_for, GpuReservation};
+use crate::sim::Deployment;
+use crate::suite::Pipeline;
+
+/// A cluster plus the capacity co-located tenants already hold on it.
+///
+/// Invariant: `reserved.len() == spec.num_gpus` — always. Constructors
+/// normalize the legacy "empty = exclusive" convention into a vector of
+/// default (zero-hold) entries, which every downstream consumer treats
+/// identically.
+#[derive(Debug, Clone)]
+pub struct ClusterState {
+    spec: ClusterSpec,
+    reserved: Vec<GpuReservation>,
+}
+
+impl ClusterState {
+    /// An exclusive (unshared) cluster: every GPU fully free.
+    pub fn exclusive(spec: &ClusterSpec) -> ClusterState {
+        ClusterState {
+            reserved: vec![GpuReservation::default(); spec.num_gpus],
+            spec: spec.clone(),
+        }
+    }
+
+    /// A cluster with co-tenant holds. `reserved` is either empty
+    /// (exclusive — the legacy convention) or one entry per GPU.
+    pub fn with_reservations(spec: &ClusterSpec, reserved: &[GpuReservation]) -> ClusterState {
+        assert!(
+            reserved.is_empty() || reserved.len() == spec.num_gpus,
+            "reservations must cover every GPU"
+        );
+        let mut state = ClusterState::exclusive(spec);
+        if !reserved.is_empty() {
+            state.reserved.copy_from_slice(reserved);
+        }
+        state
+    }
+
+    pub fn spec(&self) -> &ClusterSpec {
+        &self.spec
+    }
+
+    pub fn num_gpus(&self) -> usize {
+        self.spec.num_gpus
+    }
+
+    /// The merged per-GPU holds (always one entry per GPU).
+    pub fn reservations(&self) -> &[GpuReservation] {
+        &self.reserved
+    }
+
+    /// Whether any GPU carries a hold (false ⇒ behaves exactly like an
+    /// exclusive cluster).
+    pub fn is_shared(&self) -> bool {
+        self.reserved.iter().any(holds_capacity)
+    }
+
+    /// Whether any of the first `bound` GPUs carries a hold — the Eq. 2
+    /// GPU-count restriction in the Case-2 solver is only valid when the
+    /// candidate prefix is unheld (the bound assumes empty devices).
+    pub fn has_holds_within(&self, bound: usize) -> bool {
+        self.reserved.iter().take(bound).any(holds_capacity)
+    }
+
+    /// Merge another tenant's per-GPU holds into this state.
+    pub fn reserve(&mut self, extra: &[GpuReservation]) {
+        merge_reservations(&mut self.reserved, extra);
+    }
+
+    /// Merge the footprint of a deployed tenant (via
+    /// [`reservations_for`]) into this state.
+    pub fn reserve_tenant(&mut self, pipeline: &Pipeline, deployment: &Deployment) {
+        let holds = reservations_for(pipeline, &self.spec, deployment);
+        self.reserve(&holds);
+    }
+
+    /// Cluster SM-quota capacity left after the holds (the C1
+    /// right-hand side).
+    pub fn available_compute(&self) -> f64 {
+        let held: f64 = self.reserved.iter().map(|r| r.sm_frac).sum();
+        (self.spec.total_compute() - held).max(0.0)
+    }
+
+    /// MPS context capacity left after the holds (the C2 right-hand
+    /// side).
+    pub fn available_contexts(&self) -> u32 {
+        let cap = self.spec.num_gpus as u32 * self.spec.gpu.mps_contexts;
+        let held: u32 = self.reserved.iter().map(|r| r.contexts).sum();
+        cap.saturating_sub(held)
+    }
+
+    /// The sub-cluster of the first `y` GPUs, carrying their (possibly
+    /// truncated) holds — the restricted problem the Case-2 solver
+    /// grows from its Eq. 2 lower bound.
+    pub fn restrict(&self, y: usize) -> ClusterState {
+        assert!(y >= 1 && y <= self.spec.num_gpus, "restriction out of range");
+        ClusterState {
+            spec: ClusterSpec { num_gpus: y, ..self.spec.clone() },
+            reserved: self.reserved[..y].to_vec(),
+        }
+    }
+}
+
+/// Whether a reservation actually holds anything on its GPU (an
+/// all-default entry is indistinguishable from an unheld device).
+fn holds_capacity(r: &GpuReservation) -> bool {
+    r.sm_frac > 0.0 || r.mem_bytes > 0.0 || r.contexts > 0 || r.bw_demand > 0.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn held(sm: f64, ctxs: u32) -> GpuReservation {
+        GpuReservation { sm_frac: sm, contexts: ctxs, ..Default::default() }
+    }
+
+    #[test]
+    fn exclusive_has_full_capacity() {
+        let c = ClusterSpec::two_2080ti();
+        let s = ClusterState::exclusive(&c);
+        assert_eq!(s.reservations().len(), 2);
+        assert!(!s.is_shared());
+        assert!((s.available_compute() - 2.0).abs() < 1e-12);
+        assert_eq!(s.available_contexts(), 2 * 48);
+    }
+
+    #[test]
+    fn empty_slice_normalizes_to_exclusive() {
+        let c = ClusterSpec::two_2080ti();
+        let s = ClusterState::with_reservations(&c, &[]);
+        assert_eq!(s.reservations().len(), 2);
+        assert!(!s.is_shared());
+        // all-default entries are also exclusive
+        let t = ClusterState::with_reservations(&c, &[GpuReservation::default(); 2]);
+        assert!(!t.is_shared());
+    }
+
+    #[test]
+    fn holds_shrink_capacity_and_merge() {
+        let c = ClusterSpec::two_2080ti();
+        let mut s = ClusterState::with_reservations(&c, &[held(0.5, 8), held(0.0, 0)]);
+        assert!(s.is_shared());
+        assert!((s.available_compute() - 1.5).abs() < 1e-12);
+        assert_eq!(s.available_contexts(), 96 - 8);
+        s.reserve(&[held(0.2, 2), held(0.3, 4)]);
+        assert!((s.available_compute() - 1.0).abs() < 1e-12);
+        assert_eq!(s.available_contexts(), 96 - 14);
+    }
+
+    #[test]
+    fn restrict_truncates_holds() {
+        let c = ClusterSpec::two_2080ti();
+        let s = ClusterState::with_reservations(&c, &[held(0.0, 0), held(0.7, 4)]);
+        assert!(!s.has_holds_within(1));
+        assert!(s.has_holds_within(2));
+        let sub = s.restrict(1);
+        assert_eq!(sub.num_gpus(), 1);
+        assert!(!sub.is_shared());
+        assert!((sub.available_compute() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic(expected = "reservations must cover every GPU")]
+    fn rejects_partial_reservation_vectors() {
+        let c = ClusterSpec::two_2080ti();
+        let _ = ClusterState::with_reservations(&c, &[held(0.1, 1)]);
+    }
+}

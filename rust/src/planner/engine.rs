@@ -1,0 +1,172 @@
+//! The planning engine: the paper's two contention-aware solve bodies
+//! (§VII Case 1 / Case 2), shared by [`super::CamelotPlanner`] and the
+//! legacy `allocator::{max_load, min_resource}::solve` shims.
+//!
+//! Both solvers evaluate candidates against an [`AllocContext`], whose
+//! [`ClusterState`](super::ClusterState) carries the merged co-tenant
+//! holds — reservation awareness is structural, not threaded by hand.
+
+use crate::allocator::constraints::AllocContext;
+use crate::allocator::sa::{anneal, SaParams, SaResult};
+use crate::deploy::Allocation;
+
+/// Case 1 (§VII-B): maximize the supported peak load with limited GPUs.
+///
+/// Objective: MAX min_i N_i·f(p_i) — the end-to-end peak load is set by
+/// the slowest stage, so the optimizer raises the floor — under the
+/// Eq. 1 constraint set (checked by [`AllocContext`]).
+pub(crate) fn solve_case1(ctx: &AllocContext<'_>, params: SaParams) -> Option<SaResult> {
+    let n = ctx.pipeline.n_stages();
+    let max_inst = (ctx.cluster().num_gpus as u32 * ctx.cluster().gpu.mps_contexts).min(48);
+    let c = ctx.cluster().num_gpus as f64;
+    // throughput-balanced per-GPU quotas (the Laius shape) — a strong
+    // starting corner the optimizer should dominate, never lose to
+    let balanced: Vec<f64> = crate::baselines::balanced_quotas(ctx.predictors, ctx.batch)
+        .into_iter()
+        .map(|q| ((q / 0.05).round() * 0.05).clamp(0.05, 0.95))
+        .collect();
+    // several starting corners: the annealer keeps the best feasible
+    // result across them (the landscape has disconnected feasible
+    // islands when the QoS budget is tight)
+    let inits = [
+        // conservative: one instance per stage, even share of one GPU
+        Allocation { instances: vec![1; n], quotas: vec![((1.0 / n as f64).min(0.9) / 0.05).round() * 0.05; n] },
+        // fat: one instance per stage at (near-)full quota — the only
+        // feasible corner when per-stage durations are QoS-tight
+        Allocation {
+            instances: vec![1; n],
+            quotas: vec![((c / n as f64).min(0.95) / 0.05).round() * 0.05; n],
+        },
+        // replicated: one instance per stage per GPU, even shares
+        Allocation {
+            instances: vec![ctx.cluster().num_gpus as u32; n],
+            quotas: vec![((1.0 / n as f64).min(0.9) / 0.05).round() * 0.05; n],
+        },
+        // replicated balanced (the Laius corner)
+        Allocation {
+            instances: vec![ctx.cluster().num_gpus as u32; n],
+            quotas: balanced,
+        },
+    ];
+    let params = SaParams { max_instances: max_inst, ..params };
+    let mut inits: Vec<Allocation> = inits.to_vec();
+    // If none of the corners is feasible (tight QoS + bandwidth budgets
+    // leave a needle-shaped feasible region, e.g. the m3-heavy artifact
+    // pipelines), seed from a coarse quota grid search.
+    if !inits.iter().any(|a| ctx.check(a).is_ok()) {
+        const GRID: [f64; 6] = [0.1, 0.25, 0.4, 0.6, 0.8, 0.95];
+        let mut combo = vec![0usize; n];
+        'grid: loop {
+            let cand = Allocation {
+                instances: vec![1; n],
+                quotas: combo.iter().map(|&i| GRID[i]).collect(),
+            };
+            if ctx.check(&cand).is_ok() {
+                inits.push(cand);
+                break;
+            }
+            // odometer increment
+            for digit in combo.iter_mut() {
+                *digit += 1;
+                if *digit < GRID.len() {
+                    continue 'grid;
+                }
+                *digit = 0;
+            }
+            break;
+        }
+    }
+    let mut best: Option<SaResult> = None;
+    for (i, init) in inits.into_iter().enumerate() {
+        let p = SaParams { seed: params.seed ^ ((i as u64) << 32), ..params };
+        if let Some(r) = anneal(
+            init,
+            p,
+            |a| ctx.check(a).is_ok(),
+            |a| ctx.predicted_peak(a),
+        ) {
+            if best.as_ref().map_or(true, |b| r.best_objective > b.best_objective) {
+                best = Some(r);
+            }
+        }
+    }
+    best
+}
+
+/// Case 2 (§VII-C): minimize GPU resource usage at a given (low) load
+/// while ensuring QoS. Two phases, as in the paper:
+///
+///  1. Eq. 2 — lower-bound the number of GPUs `y` from aggregate
+///     compute and memory ([`crate::allocator::min_resource::min_gpus`]),
+///     then
+///  2. Eq. 3 — minimize Σ N_i·p_i on those `y` GPUs subject to the same
+///     constraint families plus a throughput floor at the target load.
+///
+/// The returned allocation is feasible on a cluster restricted to the
+/// returned GPU count and supports the load.
+///
+/// With co-tenant holds in the context's [`ClusterState`]
+/// (`is_shared()`), the Eq. 2 GPU-count restriction still applies as
+/// long as the holds do not overlap the candidate GPUs (the first `y`
+/// devices): unheld trailing GPUs are simply dropped, and the
+/// restricted sub-problem carries the truncated holds
+/// ([`ClusterState::restrict`](super::ClusterState::restrict)). Only
+/// when a hold sits inside the candidate set is the Eq. 2 bound invalid
+/// (it assumes empty devices) — then the solve starts from the full
+/// cluster with the holds applied and the usage objective alone keeps
+/// the plan small.
+pub(crate) fn solve_case2(
+    ctx: &AllocContext<'_>,
+    load_qps: f64,
+    params: SaParams,
+) -> Option<(SaResult, usize)> {
+    let mut y = {
+        let bound = crate::allocator::min_resource::min_gpus(ctx, load_qps);
+        if ctx.state().has_holds_within(bound) {
+            ctx.cluster().num_gpus
+        } else {
+            bound
+        }
+    };
+    // Eq. 2 is a lower bound; grow y if the restricted problem is
+    // infeasible (e.g. bandwidth or QoS-bound rather than capacity-bound)
+    while y <= ctx.cluster().num_gpus {
+        // the restricted cluster keeps GPUs 0..y, so it keeps exactly
+        // their holds (growth past the initial bound can pull held
+        // devices into scope — their truncated entries come with them)
+        let mut sub = AllocContext::shared(
+            ctx.pipeline,
+            ctx.state().restrict(y),
+            ctx.predictors,
+            ctx.batch,
+        );
+        sub.comm = ctx.comm;
+        sub.enforce_bw = ctx.enforce_bw;
+        sub.qos_headroom = ctx.qos_headroom;
+        let n = ctx.pipeline.n_stages();
+        let init = Allocation {
+            instances: vec![1; n],
+            quotas: vec![(1.0 / n as f64).min(0.9); n],
+        };
+        let result = anneal(
+            init,
+            params,
+            // feasible = all constraints + the load's predicted p99
+            // stays inside QoS (tail-aware, not just capacity)
+            |a| {
+                // 35% tail margin: Case 2 sits at the feasibility
+                // boundary by construction, so the predicted p99 needs
+                // real headroom over the tail-model error
+                sub.check(a).is_ok()
+                    && sub.predicted_p99(a, load_qps) <= ctx.pipeline.qos_target_s * 0.65
+            },
+            // maximize the negated usage ⇒ minimize Σ N_i·p_i
+            |a| -a.total_quota(),
+        );
+        if let Some(r) = result {
+            return Some((r, y));
+        }
+        y += 1;
+    }
+    None
+}

@@ -1,0 +1,564 @@
+//! The unified planning surface — **the** public API for every
+//! spatial-partitioning decision Camelot makes.
+//!
+//! Before this module, the repo had four divergent call shapes for the
+//! same underlying question ("what (N_i, p_i) vector and placement
+//! serve this pipeline on this cluster?"): `max_load::solve`,
+//! `min_resource::solve`, `Autoscaler::observe*`, and
+//! `AdmissionController::try_admit`, each hand-threading
+//! `&[GpuReservation]` through the constraint checker and the
+//! placement pass. MISO and ParvaGPU both frame spatial-partition
+//! decisions as one plan-request/plan-outcome interface over cluster
+//! state; this module adopts that shape:
+//!
+//! * [`ClusterState`] — the cluster spec plus the *merged* per-GPU
+//!   holds of co-located tenants, owned in one value.
+//! * [`PlanRequest`] — a typed request: an [`Objective`] (Case-1
+//!   max-load, Case-2 min-resource, a placement-only re-pack, or a
+//!   resident shrink), the cluster state, the pipeline and its trained
+//!   predictors, and the knobs that used to live on `AllocContext`.
+//! * [`Planner::plan`] — `&PlanRequest -> PlanOutcome`. The outcome is
+//!   a typed `Result`: a [`Solution`] carrying the solved allocation,
+//!   the concrete placement, the predicted p99 (total and per stage),
+//!   GPU count and usage — or an [`Infeasible`] diagnostic instead of
+//!   a bare `None`.
+//! * [`CamelotPlanner`] — the paper's policies behind the trait; the
+//!   legacy `allocator::{max_load, min_resource}::solve` entry points
+//!   are thin shims over the same engine (`engine`), golden-tested to
+//!   agree bit-for-bit.
+//! * [`ScenarioSpec`] — a declarative JSON description of cluster +
+//!   tenants + objectives (`camelot plan/admit/colocate --spec`),
+//!   replacing hand-rolled scenario construction.
+
+pub mod cluster;
+pub(crate) mod engine;
+pub mod scenario;
+
+pub use cluster::ClusterState;
+pub use scenario::{ScenarioSpec, ScenarioTenant};
+
+use crate::allocator::{AllocContext, SaParams};
+use crate::comm::CommMode;
+use crate::deploy::{self, Allocation, BwBudget};
+use crate::predictor::StagePredictor;
+use crate::sim::Deployment;
+use crate::suite::Pipeline;
+
+/// What the planner optimizes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Objective {
+    /// Case 1 (§VII-B): maximize the supported peak load.
+    MaxLoad,
+    /// Case 2 (§VII-C): minimize Σ N_i·p_i while serving `load_qps`
+    /// within QoS.
+    MinResource { load_qps: f64 },
+    /// Re-place an existing allocation into the current cluster state
+    /// without re-solving — the cheapest migration (instance counts and
+    /// quotas unchanged, instances just move). The departure re-packing
+    /// pass runs this before falling back to a full re-solve.
+    Repack { allocation: Allocation },
+    /// Resident shrink (online re-admission): re-solve an existing plan
+    /// for a lower `target_qps` and succeed only if the new plan
+    /// actually uses less than `current` — the path that lets the
+    /// controller reclaim capacity from a resident whose offered load
+    /// fell, instead of holding its provisioned peak until departure.
+    Shrink { target_qps: f64, current: Allocation },
+}
+
+impl Objective {
+    /// Short label for tables and logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Objective::MaxLoad => "max-load",
+            Objective::MinResource { .. } => "min-resource",
+            Objective::Repack { .. } => "repack",
+            Objective::Shrink { .. } => "shrink",
+        }
+    }
+}
+
+/// A typed planning request: everything [`Planner::plan`] needs, in one
+/// value. Construct with [`PlanRequest::new`] and override the knobs
+/// with the builder methods.
+#[derive(Debug, Clone)]
+pub struct PlanRequest<'a> {
+    pub objective: Objective,
+    /// The cluster plus merged co-tenant reservations.
+    pub cluster: ClusterState,
+    pub pipeline: &'a Pipeline,
+    pub predictors: &'a [StagePredictor],
+    pub batch: u32,
+    pub comm: CommMode,
+    /// Enforce the C3 bandwidth constraint (false = Camelot-NC).
+    pub enforce_bw: bool,
+    /// Fraction of the QoS budget available to stage processing +
+    /// communication (C5 headroom).
+    pub qos_headroom: f64,
+    pub sa: SaParams,
+}
+
+impl<'a> PlanRequest<'a> {
+    /// A request with the repo-wide defaults (batch 32, global-IPC
+    /// communication, bandwidth constraint on, 80% C5 headroom,
+    /// default SA budget).
+    pub fn new(
+        objective: Objective,
+        cluster: ClusterState,
+        pipeline: &'a Pipeline,
+        predictors: &'a [StagePredictor],
+    ) -> Self {
+        PlanRequest {
+            objective,
+            cluster,
+            pipeline,
+            predictors,
+            batch: 32,
+            comm: CommMode::GlobalIpc,
+            enforce_bw: true,
+            qos_headroom: 0.80,
+            sa: SaParams::default(),
+        }
+    }
+
+    pub fn batch(mut self, batch: u32) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn sa(mut self, sa: SaParams) -> Self {
+        self.sa = sa;
+        self
+    }
+
+    pub fn comm(mut self, comm: CommMode) -> Self {
+        self.comm = comm;
+        self
+    }
+
+    pub fn enforce_bw(mut self, enforce: bool) -> Self {
+        self.enforce_bw = enforce;
+        self
+    }
+
+    /// Same request, different objective (the Case-2 → Case-1 fallback
+    /// ladder the coordinator climbs).
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// The [`AllocContext`] this request evaluates candidates against.
+    fn alloc_context(&self) -> AllocContext<'a> {
+        let mut ctx = AllocContext::shared(
+            self.pipeline,
+            self.cluster.clone(),
+            self.predictors,
+            self.batch,
+        );
+        ctx.comm = self.comm;
+        ctx.enforce_bw = self.enforce_bw;
+        ctx.qos_headroom = self.qos_headroom;
+        ctx
+    }
+}
+
+/// A solved plan: the paper's `(n_i, p_i)` vector plus everything the
+/// coordinator needs to run and reason about it.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    /// N_i / p_i per stage.
+    pub allocation: Allocation,
+    /// Concrete bandwidth-aware placement on the cluster state.
+    pub deployment: Deployment,
+    /// Load (queries/s) the predictions below are evaluated at: the
+    /// solved peak for `MaxLoad`, the requested load for
+    /// `MinResource`/`Shrink`, and 0 for `Repack` (unloaded latencies —
+    /// the re-pack pass consumes only the placement).
+    pub plan_qps: f64,
+    /// Predicted end-to-end 99%-ile latency at `plan_qps`.
+    pub predicted_p99_s: f64,
+    /// Per-stage decomposition of the p99 prediction (service +
+    /// queueing tail per stage; communication is the remainder).
+    pub stage_p99_s: Vec<f64>,
+    /// Σ N_i·p_i — GPU-equivalents of SM share.
+    pub usage: f64,
+    /// Distinct devices the placement actually occupies. (The Case-2
+    /// Eq. 2 sub-cluster size proves feasibility on a prefix, but the
+    /// full-cluster bandwidth-aware placement may deliberately spread
+    /// wider — this field counts what is really held, so operators can
+    /// tally devices from it.)
+    pub gpus: usize,
+    /// Raw solver objective: predicted peak qps (`MaxLoad`), negated
+    /// usage (`MinResource`/`Shrink`), 0 for `Repack` (nothing is
+    /// optimized — the allocation is given).
+    pub objective_value: f64,
+    /// SA search statistics (0 for `Repack`, which does not search).
+    pub evaluated: usize,
+    pub feasible_found: usize,
+}
+
+/// Why a request has no plan — typed diagnostics instead of `None`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Infeasible {
+    /// The request itself is malformed (non-positive load, shape
+    /// mismatch between `current` and the pipeline, …).
+    BadRequest { detail: String },
+    /// No feasible allocation exists in the capacity the co-tenant
+    /// holds leave free (C1/C2/C5 over the remainder).
+    NoAllocation { detail: String },
+    /// An allocation exists but no placement satisfies every per-GPU
+    /// budget (C2/C3/C4 structurally).
+    NoPlacement { stage: usize, detail: String },
+    /// `Shrink` only: a plan exists at the target load but would not
+    /// use less than the current plan — shrinking would churn instances
+    /// for nothing.
+    NoImprovement { current_usage: f64, planned_usage: f64 },
+}
+
+impl std::fmt::Display for Infeasible {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            // NoAllocation renders its detail verbatim: the legacy
+            // callers' error strings (and the admission trace golden
+            // fingerprints) depend on it
+            Infeasible::NoAllocation { detail } => write!(f, "{detail}"),
+            Infeasible::NoPlacement { stage, detail } => {
+                write!(f, "cannot place stage {stage}: {detail}")
+            }
+            Infeasible::BadRequest { detail } => write!(f, "bad plan request: {detail}"),
+            Infeasible::NoImprovement { current_usage, planned_usage } => write!(
+                f,
+                "no improvement: planned usage {planned_usage:.3} >= current {current_usage:.3}"
+            ),
+        }
+    }
+}
+
+/// The outcome of [`Planner::plan`].
+pub type PlanOutcome = Result<Solution, Infeasible>;
+
+/// A planning strategy: anything that can answer a [`PlanRequest`].
+/// The paper's policies live behind [`CamelotPlanner`]; alternative
+/// strategies (baselines, heterogeneous-cluster planners) implement the
+/// same trait and become drop-in interchangeable.
+pub trait Planner {
+    fn plan(&self, req: &PlanRequest<'_>) -> PlanOutcome;
+}
+
+/// The paper's contention-aware planner: Case-1/Case-2 simulated
+/// annealing over the Eq. 1/3 constraint set, bandwidth-aware
+/// placement, reservation-aware throughout via [`ClusterState`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CamelotPlanner;
+
+impl Planner for CamelotPlanner {
+    fn plan(&self, req: &PlanRequest<'_>) -> PlanOutcome {
+        validate(req)?;
+        let ctx = req.alloc_context();
+        match &req.objective {
+            Objective::MaxLoad => {
+                let r = engine::solve_case1(&ctx, req.sa).ok_or_else(|| {
+                    Infeasible::NoAllocation { detail: "no feasible allocation".to_string() }
+                })?;
+                let peak = r.best_objective;
+                finish(req, &ctx, r.best, peak, peak, (r.evaluated, r.feasible_found))
+            }
+            Objective::MinResource { load_qps } => {
+                let (r, _y) = engine::solve_case2(&ctx, *load_qps, req.sa).ok_or_else(|| {
+                    Infeasible::NoAllocation {
+                        detail: format!("no allocation supports {load_qps:.1} qps"),
+                    }
+                })?;
+                let stats = (r.evaluated, r.feasible_found);
+                finish(req, &ctx, r.best, *load_qps, r.best_objective, stats)
+            }
+            Objective::Repack { allocation } => {
+                // placement-only: no solve, and no peak search either —
+                // the re-pack pass consumes only the placement, so the
+                // prediction block is evaluated at zero load (unloaded
+                // latencies) instead of paying a bisection per survivor
+                finish(req, &ctx, allocation.clone(), 0.0, 0.0, (0, 0))
+            }
+            Objective::Shrink { target_qps, current } => {
+                let (r, _y) = engine::solve_case2(&ctx, *target_qps, req.sa).ok_or_else(|| {
+                    Infeasible::NoAllocation {
+                        detail: format!("no allocation supports {target_qps:.1} qps"),
+                    }
+                })?;
+                let planned_usage = r.best.total_quota();
+                let current_usage = current.total_quota();
+                if planned_usage >= current_usage - 1e-9 {
+                    return Err(Infeasible::NoImprovement { current_usage, planned_usage });
+                }
+                let stats = (r.evaluated, r.feasible_found);
+                finish(req, &ctx, r.best, *target_qps, r.best_objective, stats)
+            }
+        }
+    }
+}
+
+/// Request sanity checks shared by every objective.
+fn validate(req: &PlanRequest<'_>) -> Result<(), Infeasible> {
+    let bad = |detail: String| Err(Infeasible::BadRequest { detail });
+    if req.predictors.len() != req.pipeline.n_stages() {
+        return bad(format!(
+            "{} predictors for a {}-stage pipeline",
+            req.predictors.len(),
+            req.pipeline.n_stages()
+        ));
+    }
+    if req.batch == 0 {
+        return bad("batch must be at least 1".to_string());
+    }
+    match &req.objective {
+        Objective::MinResource { load_qps } if load_qps.is_nan() || *load_qps <= 0.0 => {
+            bad(format!("load must be positive, got {load_qps}"))
+        }
+        Objective::Shrink { target_qps, current } => {
+            if target_qps.is_nan() || *target_qps <= 0.0 {
+                return bad(format!("shrink target must be positive, got {target_qps}"));
+            }
+            if !shaped_like(current, req.pipeline) {
+                return bad("shrink `current` does not match the pipeline".to_string());
+            }
+            Ok(())
+        }
+        Objective::Repack { allocation } if !shaped_like(allocation, req.pipeline) => {
+            bad("repack allocation does not match the pipeline".to_string())
+        }
+        _ => Ok(()),
+    }
+}
+
+/// Both per-stage vectors of an allocation match the pipeline's shape.
+fn shaped_like(alloc: &Allocation, pipeline: &Pipeline) -> bool {
+    alloc.instances.len() == pipeline.n_stages() && alloc.quotas.len() == pipeline.n_stages()
+}
+
+/// Shared tail of every successful plan: bandwidth-aware placement on
+/// the cluster state, then the prediction block of the [`Solution`].
+fn finish(
+    req: &PlanRequest<'_>,
+    ctx: &AllocContext<'_>,
+    allocation: Allocation,
+    plan_qps: f64,
+    objective_value: f64,
+    (evaluated, feasible_found): (usize, usize),
+) -> PlanOutcome {
+    let demands = ctx.bw_budget_storage(&allocation);
+    let deployment = deploy::deploy(
+        req.pipeline,
+        &req.cluster,
+        &allocation,
+        req.batch,
+        req.comm,
+        demands.as_deref().map(|d| BwBudget {
+            demands: d,
+            cap: 0.75 * req.cluster.spec().gpu.mem_bw,
+        }),
+    )
+    .map_err(|e| Infeasible::NoPlacement { stage: e.stage, detail: e.detail })?;
+    let gpus = deploy::gpus_in_use([&deployment]);
+    let usage = allocation.total_quota();
+    Ok(Solution {
+        predicted_p99_s: ctx.predicted_p99(&allocation, plan_qps),
+        stage_p99_s: ctx.predicted_stage_p99(&allocation, plan_qps),
+        allocation,
+        deployment,
+        plan_qps,
+        usage,
+        gpus,
+        objective_value,
+        evaluated,
+        feasible_found,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::deploy::GpuReservation;
+    use crate::predictor::train_pipeline;
+    use crate::suite::real;
+
+    fn fixture() -> (ClusterSpec, crate::suite::Pipeline, Vec<StagePredictor>) {
+        let c = ClusterSpec::two_2080ti();
+        let p = real::img_to_text();
+        let preds = train_pipeline(&p, &c.gpu);
+        (c, p, preds)
+    }
+
+    #[test]
+    fn max_load_plan_carries_full_solution() {
+        let (c, p, preds) = fixture();
+        let req = PlanRequest::new(
+            Objective::MaxLoad,
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let s = CamelotPlanner.plan(&req).expect("feasible");
+        assert_eq!(s.allocation.instances.len(), p.n_stages());
+        assert_eq!(s.stage_p99_s.len(), p.n_stages());
+        assert!(s.objective_value > 0.0 && s.plan_qps == s.objective_value);
+        assert!(s.predicted_p99_s <= p.qos_target_s);
+        assert!(s.gpus >= 1 && s.gpus <= c.num_gpus);
+        assert!((s.usage - s.allocation.total_quota()).abs() < 1e-12);
+        assert!(!s.deployment.placements.is_empty());
+        assert!(s.evaluated > 0 && s.feasible_found > 0);
+    }
+
+    #[test]
+    fn min_resource_plan_respects_reservations() {
+        let (c, p, preds) = fixture();
+        let free = PlanRequest::new(
+            Objective::MinResource { load_qps: 30.0 },
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let sf = CamelotPlanner.plan(&free).expect("exclusive solves");
+        // a co-tenant holding half of each GPU squeezes the plan, and
+        // placements must avoid the held share
+        let held = vec![
+            GpuReservation { sm_frac: 0.5, contexts: 8, ..Default::default() };
+            c.num_gpus
+        ];
+        let shared = PlanRequest::new(
+            Objective::MinResource { load_qps: 30.0 },
+            ClusterState::with_reservations(&c, &held),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let ss = CamelotPlanner.plan(&shared).expect("remainder solves");
+        // per GPU, the tenant's own share fits inside the remainder
+        let mut per_gpu = vec![0.0f64; c.num_gpus];
+        for pl in &ss.deployment.placements {
+            per_gpu[pl.gpu] += pl.sm_frac;
+        }
+        for share in per_gpu {
+            assert!(share <= 0.5 + 1e-9, "placement overlaps the hold: {share}");
+        }
+        assert!(sf.usage > 0.0 && ss.usage > 0.0);
+    }
+
+    #[test]
+    fn infeasible_is_typed_not_silent() {
+        let (c, p, preds) = fixture();
+        let req = PlanRequest::new(
+            Objective::MinResource { load_qps: 1.0e9 },
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        match CamelotPlanner.plan(&req) {
+            Err(Infeasible::NoAllocation { detail }) => {
+                assert!(detail.contains("1000000000.0 qps"), "{detail}")
+            }
+            other => panic!("expected NoAllocation, got {other:?}"),
+        }
+        // malformed request: zero batch
+        let bad = PlanRequest::new(
+            Objective::MaxLoad,
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(0);
+        assert!(matches!(
+            CamelotPlanner.plan(&bad),
+            Err(Infeasible::BadRequest { .. })
+        ));
+        // negative shrink target
+        let neg = PlanRequest::new(
+            Objective::Shrink {
+                target_qps: -5.0,
+                current: Allocation { instances: vec![1, 1], quotas: vec![0.5, 0.5] },
+            },
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        );
+        assert!(matches!(
+            CamelotPlanner.plan(&neg),
+            Err(Infeasible::BadRequest { .. })
+        ));
+    }
+
+    #[test]
+    fn repack_keeps_allocation_and_places() {
+        let (c, p, preds) = fixture();
+        let alloc = Allocation { instances: vec![1, 2], quotas: vec![0.5, 0.4] };
+        let req = PlanRequest::new(
+            Objective::Repack { allocation: alloc.clone() },
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let s = CamelotPlanner.plan(&req).expect("placeable");
+        assert_eq!(s.allocation, alloc, "repack must not re-solve");
+        assert_eq!(s.deployment.placements.len(), 3);
+        assert_eq!(s.evaluated, 0);
+    }
+
+    #[test]
+    fn shrink_requires_a_real_improvement() {
+        let (c, p, preds) = fixture();
+        // provision generously at a high load...
+        let big = CamelotPlanner
+            .plan(
+                &PlanRequest::new(
+                    Objective::MinResource { load_qps: 200.0 },
+                    ClusterState::exclusive(&c),
+                    &p,
+                    &preds,
+                )
+                .batch(16),
+            )
+            .expect("high load solves");
+        // ...then shrink to a much lower target: must use less
+        let shrunk = CamelotPlanner
+            .plan(
+                &PlanRequest::new(
+                    Objective::Shrink {
+                        target_qps: 25.0,
+                        current: big.allocation.clone(),
+                    },
+                    ClusterState::exclusive(&c),
+                    &p,
+                    &preds,
+                )
+                .batch(16),
+            )
+            .expect("shrink finds a smaller plan");
+        assert!(
+            shrunk.usage < big.usage,
+            "shrunk {} must undercut {}",
+            shrunk.usage,
+            big.usage
+        );
+        // shrinking an already-minimal plan to its own load is refused
+        let noop = CamelotPlanner.plan(
+            &PlanRequest::new(
+                Objective::Shrink {
+                    target_qps: 25.0,
+                    current: shrunk.allocation.clone(),
+                },
+                ClusterState::exclusive(&c),
+                &p,
+                &preds,
+            )
+            .batch(16),
+        );
+        assert!(
+            matches!(noop, Err(Infeasible::NoImprovement { .. })),
+            "{noop:?}"
+        );
+    }
+}

@@ -1,0 +1,578 @@
+//! Declarative scenarios: a JSON [`ScenarioSpec`] describing cluster +
+//! tenants + objectives, parsed with the in-tree [`crate::util::json`]
+//! parser (the environment has no serde) and runnable through the
+//! unified planner.
+//!
+//! One spec file drives three CLI entry points:
+//!
+//! * `camelot plan --spec f.json` — [`ScenarioSpec::plan_tables`]:
+//!   sequential shared-cluster planning (each tenant plans into the
+//!   remainder the previous tenants leave), per-tenant objectives
+//!   (Case-1 `max-load` / Case-2 `min-resource`), then a resident-shrink
+//!   pass ([`Objective::Shrink`]) for tenants with `shrink_to`.
+//! * `camelot admit --spec f.json` — [`ScenarioSpec::trace`]: the
+//!   tenants become a [`TenantTrace`] (arrive/depart/shrink events) the
+//!   N-tenant admission controller replays with `ClusterSim`
+//!   validation.
+//! * `camelot colocate --spec f.json` — the first two tenants feed the
+//!   co-location + diurnal-autoscaling experiment.
+//!
+//! Schema (all fields with defaults optional — see EXPERIMENTS.md
+//! §ScenarioSpec for the full reference, `examples/*.json` for
+//! runnable instances):
+//!
+//! ```json
+//! {
+//!   "name": "case1-case2-shrink",
+//!   "cluster": {"preset": "2080ti", "gpus": 2},
+//!   "batch": 16,
+//!   "seed": 42,
+//!   "queries": 600,
+//!   "tenants": [
+//!     {"name": "captioner", "pipeline": "img-to-text",
+//!      "objective": "max-load", "plan_qps": 150.0},
+//!     {"name": "translator", "pipeline": "text-to-text",
+//!      "objective": "min-resource", "plan_qps": 80.0,
+//!      "arrivals": "diurnal", "period_s": 30.0, "trough_frac": 0.3,
+//!      "arrive_s": 60.0, "depart_s": 900.0,
+//!      "shrink_to": 30.0, "shrink_at_s": 300.0}
+//!   ]
+//! }
+//! ```
+
+use std::path::Path;
+
+use crate::config::ClusterSpec;
+use crate::predictor::{train_pipeline, StagePredictor};
+use crate::suite::workload::{
+    ArrivalProcess, DiurnalPattern, TenantTrace, TenantTraceEvent, TraceEventKind,
+};
+use crate::suite::Pipeline;
+use crate::util::json::Json;
+use crate::util::{fnum, Table};
+
+use super::{CamelotPlanner, ClusterState, Objective, Planner, Solution};
+
+/// One tenant of a declarative scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioTenant {
+    pub name: String,
+    /// Benchmark name, resolvable by [`crate::suite::pipeline_by_name`].
+    pub pipeline: String,
+    /// `"max-load"` (Case 1) or `"min-resource"` (Case 2, the default).
+    pub objective: ScenarioObjective,
+    /// Planning load in queries/s (also the arrival process's peak).
+    pub plan_qps: f64,
+    /// Offered-load model while resident.
+    pub arrivals: ArrivalProcess,
+    /// Trace timing (used by `admit --spec`).
+    pub arrive_s: f64,
+    pub depart_s: Option<f64>,
+    /// Resident shrink: re-admit at this lower load after planning.
+    pub shrink_to: Option<f64>,
+    pub shrink_at_s: Option<f64>,
+}
+
+/// The per-tenant objective kinds a spec may name.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScenarioObjective {
+    MaxLoad,
+    MinResource,
+}
+
+/// A parsed declarative scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub cluster: ClusterSpec,
+    pub batch: u32,
+    pub seed: u64,
+    /// Queries per tenant in validation simulations (`admit --spec`).
+    pub queries: usize,
+    pub tenants: Vec<ScenarioTenant>,
+}
+
+impl ScenarioSpec {
+    /// Parse a spec from JSON text.
+    pub fn parse(text: &str) -> Result<ScenarioSpec, String> {
+        let doc = Json::parse(text).map_err(|e| format!("scenario spec: {e}"))?;
+        Self::from_json(&doc)
+    }
+
+    /// Read and parse a spec file.
+    pub fn load(path: &Path) -> Result<ScenarioSpec, String> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("reading {}: {e}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    fn from_json(doc: &Json) -> Result<ScenarioSpec, String> {
+        let obj = doc.as_obj().ok_or("scenario spec must be a JSON object")?;
+        for key in obj.keys() {
+            const KNOWN: [&str; 6] = ["name", "cluster", "batch", "seed", "queries", "tenants"];
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(format!("unknown scenario field '{key}'"));
+            }
+        }
+        let name = doc.get_str("name").unwrap_or("scenario").to_string();
+        let cluster = parse_cluster(doc.get("cluster"))?;
+        let batch = parse_count(doc, "batch", 32)?;
+        if batch == 0 || batch > u32::MAX as u64 {
+            return Err(format!("'batch' must be in 1..={}, got {batch}", u32::MAX));
+        }
+        let batch = batch as u32;
+        let seed = parse_count(doc, "seed", 42)?;
+        let queries = parse_count(doc, "queries", 800)? as usize;
+        let tenants_json = doc
+            .get("tenants")
+            .and_then(Json::as_arr)
+            .ok_or("scenario spec needs a 'tenants' array")?;
+        if tenants_json.is_empty() {
+            return Err("scenario spec needs at least one tenant".to_string());
+        }
+        let mut tenants: Vec<ScenarioTenant> = Vec::with_capacity(tenants_json.len());
+        for (i, t) in tenants_json.iter().enumerate() {
+            let tenant = parse_tenant(t, i)?;
+            if tenants.iter().any(|u| u.name == tenant.name) {
+                return Err(format!("duplicate tenant name '{}'", tenant.name));
+            }
+            tenants.push(tenant);
+        }
+        Ok(ScenarioSpec { name, cluster, batch, seed, queries, tenants })
+    }
+
+    /// The tenants as a time-ordered arrival/departure/shrink trace for
+    /// the admission controller.
+    pub fn trace(&self) -> TenantTrace {
+        let mut events = Vec::new();
+        for (i, t) in self.tenants.iter().enumerate() {
+            let tenant = i as u64;
+            events.push(TenantTraceEvent {
+                t_s: t.arrive_s,
+                tenant,
+                kind: TraceEventKind::Arrive {
+                    pipeline: t.pipeline.clone(),
+                    name: Some(t.name.clone()),
+                    arrivals: t.arrivals.clone(),
+                    plan_qps: t.plan_qps,
+                },
+            });
+            if let Some(target) = t.shrink_to {
+                events.push(TenantTraceEvent {
+                    t_s: t.shrink_at_s.unwrap_or(t.arrive_s + 1.0),
+                    tenant,
+                    kind: TraceEventKind::Shrink { target_qps: target },
+                });
+            }
+            if let Some(at) = t.depart_s {
+                events.push(TenantTraceEvent { t_s: at, tenant, kind: TraceEventKind::Depart });
+            }
+        }
+        TenantTrace::sort_events(&mut events);
+        TenantTrace { events }
+    }
+
+    /// Run the spec through the unified planner: sequential
+    /// shared-cluster planning in tenant order (each tenant's plan
+    /// becomes a reservation the next tenant plans around), then the
+    /// resident-shrink pass. Returns the plan table and — when any
+    /// tenant declares `shrink_to` — the shrink table.
+    pub fn plan_tables(&self) -> Result<Vec<Table>, String> {
+        struct Planned {
+            pipeline: Pipeline,
+            predictors: Vec<StagePredictor>,
+            solution: Solution,
+        }
+        let mut plan_t = Table::new(
+            &format!("Scenario '{}': sequential shared-cluster planning", self.name),
+            &[
+                "tenant", "pipeline", "objective", "instances", "sm_pct", "usage", "gpus",
+                "pred_p99_ms", "qos_ms",
+            ],
+        );
+        let mut planned: Vec<Planned> = Vec::with_capacity(self.tenants.len());
+        let mut state = ClusterState::exclusive(&self.cluster);
+        // training is deterministic, so the per-pipeline memo is purely
+        // a speedup for specs that repeat pipelines (same pattern as
+        // AdmissionController::predictors_for)
+        let mut predictor_cache: Vec<(String, Vec<StagePredictor>)> = Vec::new();
+        for t in &self.tenants {
+            let pipeline = crate::suite::pipeline_by_name(&t.pipeline)
+                .ok_or_else(|| format!("tenant '{}': unknown pipeline '{}'", t.name, t.pipeline))?;
+            let predictors = match predictor_cache.iter().find(|(n, _)| *n == pipeline.name) {
+                Some((_, preds)) => preds.clone(),
+                None => {
+                    let preds = train_pipeline(&pipeline, &self.cluster.gpu);
+                    predictor_cache.push((pipeline.name.clone(), preds.clone()));
+                    preds
+                }
+            };
+            let objective = match t.objective {
+                ScenarioObjective::MaxLoad => Objective::MaxLoad,
+                ScenarioObjective::MinResource => {
+                    Objective::MinResource { load_qps: t.plan_qps }
+                }
+            };
+            let req = super::PlanRequest::new(objective, state.clone(), &pipeline, &predictors)
+                .batch(self.batch);
+            let solution = CamelotPlanner
+                .plan(&req)
+                .map_err(|e| format!("tenant '{}': {e}", t.name))?;
+            state.reserve_tenant(&pipeline, &solution.deployment);
+            plan_t.push(&[
+                t.name.clone(),
+                pipeline.name.clone(),
+                req.objective.name().to_string(),
+                format!("{:?}", solution.allocation.instances),
+                quota_pcts(&solution.allocation.quotas),
+                format!("{:.2}", solution.usage),
+                solution.gpus.to_string(),
+                format!("{:.1}", solution.predicted_p99_s * 1e3),
+                format!("{:.1}", pipeline.qos_target_s * 1e3),
+            ]);
+            planned.push(Planned { pipeline, predictors, solution });
+        }
+
+        let mut tables = vec![plan_t];
+        if self.tenants.iter().any(|t| t.shrink_to.is_some()) {
+            let mut shrink_t = Table::new(
+                &format!("Scenario '{}': resident shrink (Objective::Shrink)", self.name),
+                &["tenant", "target_qps", "usage_before", "usage_after", "gpus", "outcome"],
+            );
+            for (i, t) in self.tenants.iter().enumerate() {
+                let Some(target) = t.shrink_to else { continue };
+                // the remainder this tenant re-plans into: every OTHER
+                // tenant's current footprint
+                let mut others = ClusterState::exclusive(&self.cluster);
+                for (j, pl) in planned.iter().enumerate() {
+                    if j != i {
+                        others.reserve_tenant(&pl.pipeline, &pl.solution.deployment);
+                    }
+                }
+                let outcome = {
+                    let pl = &planned[i];
+                    let req = super::PlanRequest::new(
+                        Objective::Shrink {
+                            target_qps: target,
+                            current: pl.solution.allocation.clone(),
+                        },
+                        others,
+                        &pl.pipeline,
+                        &pl.predictors,
+                    )
+                    .batch(self.batch);
+                    CamelotPlanner.plan(&req)
+                };
+                let before = planned[i].solution.usage;
+                match outcome {
+                    Ok(s) => {
+                        shrink_t.push(&[
+                            t.name.clone(),
+                            fnum(target),
+                            format!("{before:.2}"),
+                            format!("{:.2}", s.usage),
+                            s.gpus.to_string(),
+                            "shrunk".to_string(),
+                        ]);
+                        planned[i].solution = s;
+                    }
+                    Err(e) => shrink_t.push(&[
+                        t.name.clone(),
+                        fnum(target),
+                        format!("{before:.2}"),
+                        format!("{before:.2}"),
+                        planned[i].solution.gpus.to_string(),
+                        format!("held: {e}"),
+                    ]),
+                }
+            }
+            tables.push(shrink_t);
+        }
+        Ok(tables)
+    }
+}
+
+fn quota_pcts(quotas: &[f64]) -> String {
+    format!(
+        "{:?}",
+        quotas.iter().map(|q| (q * 100.0).round() as u32).collect::<Vec<_>>()
+    )
+}
+
+fn parse_cluster(node: Option<&Json>) -> Result<ClusterSpec, String> {
+    let Some(node) = node else {
+        return Ok(ClusterSpec::two_2080ti());
+    };
+    let obj = node.as_obj().ok_or("'cluster' must be a JSON object")?;
+    for key in obj.keys() {
+        if key != "preset" && key != "gpus" {
+            return Err(format!("cluster: unknown field '{key}'"));
+        }
+    }
+    let preset = node.get_str("preset").unwrap_or("2080ti");
+    let mut cluster = match preset {
+        "2080ti" => ClusterSpec::two_2080ti(),
+        "dgx2" => ClusterSpec::dgx2(),
+        other => return Err(format!("unknown cluster preset '{other}' (2080ti | dgx2)")),
+    };
+    if let Some(g) = node.get_f64("gpus") {
+        let gpus = g as usize;
+        if g.fract() != 0.0 || !(1..=32).contains(&gpus) {
+            return Err(format!("cluster gpus must be an integer in 1..=32, got {g}"));
+        }
+        cluster.num_gpus = gpus;
+    }
+    Ok(cluster)
+}
+
+/// Read a non-negative integer field with a default.
+fn parse_count(doc: &Json, key: &str, default: u64) -> Result<u64, String> {
+    match doc.get(key) {
+        None => Ok(default),
+        Some(v) => {
+            let x = v.as_f64().ok_or_else(|| format!("'{key}' must be a number"))?;
+            if x.fract() != 0.0 || x < 0.0 || x > u64::MAX as f64 {
+                return Err(format!("'{key}' must be a non-negative integer, got {x}"));
+            }
+            Ok(x as u64)
+        }
+    }
+}
+
+fn parse_tenant(node: &Json, index: usize) -> Result<ScenarioTenant, String> {
+    let obj = node
+        .as_obj()
+        .ok_or_else(|| format!("tenant #{index} must be a JSON object"))?;
+    for key in obj.keys() {
+        const KNOWN: [&str; 11] = [
+            "name", "pipeline", "objective", "plan_qps", "arrivals", "period_s",
+            "trough_frac", "arrive_s", "depart_s", "shrink_to", "shrink_at_s",
+        ];
+        if !KNOWN.contains(&key.as_str()) {
+            return Err(format!("tenant #{index}: unknown field '{key}'"));
+        }
+    }
+    let pipeline = node
+        .get_str("pipeline")
+        .ok_or_else(|| format!("tenant #{index} needs a 'pipeline'"))?
+        .to_string();
+    if crate::suite::pipeline_by_name(&pipeline).is_none() {
+        return Err(format!("tenant #{index}: unknown pipeline '{pipeline}'"));
+    }
+    let name = node
+        .get_str("name")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{pipeline}#{index}"));
+    let objective = match node.get_str("objective").unwrap_or("min-resource") {
+        "max-load" => ScenarioObjective::MaxLoad,
+        "min-resource" => ScenarioObjective::MinResource,
+        other => {
+            return Err(format!(
+                "tenant '{name}': unknown objective '{other}' (max-load | min-resource)"
+            ))
+        }
+    };
+    let plan_qps = node
+        .get_f64("plan_qps")
+        .ok_or_else(|| format!("tenant '{name}' needs a positive 'plan_qps'"))?;
+    if plan_qps.is_nan() || plan_qps <= 0.0 {
+        return Err(format!("tenant '{name}': plan_qps must be positive, got {plan_qps}"));
+    }
+    let period_s = node.get_f64("period_s").unwrap_or(30.0);
+    let trough_frac = node.get_f64("trough_frac").unwrap_or(0.3);
+    if !(0.0..=1.0).contains(&trough_frac) {
+        return Err(format!("tenant '{name}': trough_frac must be in [0, 1]"));
+    }
+    let arrivals = match node.get_str("arrivals").unwrap_or("constant") {
+        "constant" => ArrivalProcess::constant(plan_qps),
+        "diurnal" => ArrivalProcess::diurnal(DiurnalPattern {
+            peak_qps: plan_qps,
+            trough_frac,
+            period_s,
+        }),
+        other => {
+            return Err(format!(
+                "tenant '{name}': unknown arrivals '{other}' (constant | diurnal)"
+            ))
+        }
+    };
+    let arrive_s = node.get_f64("arrive_s").unwrap_or(index as f64);
+    let depart_s = node.get_f64("depart_s");
+    if let Some(d) = depart_s {
+        if d <= arrive_s {
+            return Err(format!("tenant '{name}': depart_s {d} must follow arrive_s {arrive_s}"));
+        }
+    }
+    let shrink_to = node.get_f64("shrink_to");
+    if let Some(s) = shrink_to {
+        if s.is_nan() || s <= 0.0 {
+            return Err(format!("tenant '{name}': shrink_to must be positive, got {s}"));
+        }
+    }
+    let shrink_at_s = node.get_f64("shrink_at_s");
+    if shrink_to.is_some() {
+        // a shrink outside the tenant's residency window would sort
+        // before the arrival (or after the departure) and silently
+        // no-op in the trace replay — reject it here instead
+        let at = shrink_at_s.unwrap_or(arrive_s + 1.0);
+        if at <= arrive_s {
+            return Err(format!(
+                "tenant '{name}': shrink_at_s {at} must follow arrive_s {arrive_s}"
+            ));
+        }
+        if let Some(d) = depart_s {
+            if at >= d {
+                return Err(format!(
+                    "tenant '{name}': shrink_at_s {at} must precede depart_s {d} \
+                     (set shrink_at_s explicitly for short residencies)"
+                ));
+            }
+        }
+    } else if shrink_at_s.is_some() {
+        return Err(format!("tenant '{name}': shrink_at_s without shrink_to"));
+    }
+    Ok(ScenarioTenant {
+        name,
+        pipeline,
+        objective,
+        plan_qps,
+        arrivals,
+        arrive_s,
+        depart_s,
+        shrink_to,
+        shrink_at_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // min-resource tenant plans first; the max-load tenant fills the
+    // remainder and is later shrunk back to its off-peak load — the
+    // same shape as examples/scenario_plan_shrink.json
+    const SPEC: &str = r#"{
+        "name": "test",
+        "cluster": {"preset": "2080ti"},
+        "batch": 16,
+        "queries": 200,
+        "tenants": [
+            {"name": "b", "pipeline": "text-to-text", "objective": "min-resource",
+             "plan_qps": 80.0},
+            {"name": "a", "pipeline": "img-to-text", "objective": "max-load",
+             "plan_qps": 150.0, "arrivals": "diurnal", "arrive_s": 10.0,
+             "depart_s": 500.0, "shrink_to": 40.0, "shrink_at_s": 200.0}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_the_reference_spec() {
+        let spec = ScenarioSpec::parse(SPEC).unwrap();
+        assert_eq!(spec.name, "test");
+        assert_eq!(spec.batch, 16);
+        assert_eq!(spec.queries, 200);
+        assert_eq!(spec.seed, 42, "default seed");
+        assert_eq!(spec.tenants.len(), 2);
+        assert_eq!(spec.tenants[0].objective, ScenarioObjective::MinResource);
+        assert_eq!(spec.tenants[1].objective, ScenarioObjective::MaxLoad);
+        assert_eq!(spec.tenants[1].shrink_to, Some(40.0));
+        assert!(matches!(
+            spec.tenants[1].arrivals,
+            ArrivalProcess::Diurnal { .. }
+        ));
+    }
+
+    #[test]
+    fn trace_orders_arrive_shrink_depart() {
+        let spec = ScenarioSpec::parse(SPEC).unwrap();
+        let trace = spec.trace();
+        assert_eq!(trace.events.len(), 4);
+        assert!(trace.events.windows(2).all(|w| w[0].t_s <= w[1].t_s));
+        let kinds: Vec<&'static str> = trace
+            .events
+            .iter()
+            .map(|e| match e.kind {
+                TraceEventKind::Arrive { .. } => "arrive",
+                TraceEventKind::Shrink { .. } => "shrink",
+                TraceEventKind::Depart => "depart",
+            })
+            .collect();
+        assert_eq!(kinds, ["arrive", "arrive", "shrink", "depart"]);
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for (frag, what) in [
+            (r#"{"tenants": []}"#, "empty tenants"),
+            (r#"{"tenants": [{"pipeline": "nope", "plan_qps": 10}]}"#, "bad pipeline"),
+            (
+                r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": -1}]}"#,
+                "negative load",
+            ),
+            (
+                r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": 10, "objective": "x"}]}"#,
+                "bad objective",
+            ),
+            (
+                r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": 10, "arrive_s": 5, "depart_s": 2}]}"#,
+                "departure before arrival",
+            ),
+            (
+                r#"{"cluster": {"preset": "tpu"}, "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "bad preset",
+            ),
+            (
+                r#"{"cluster": {"preset": "dgx2", "gpu": 8}, "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "unknown cluster field (typo for gpus)",
+            ),
+            (
+                r#"{"typo": 1, "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "unknown field",
+            ),
+            (
+                r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": 10, "arrive_s": 60, "shrink_to": 5, "shrink_at_s": 10}]}"#,
+                "shrink before arrival",
+            ),
+            (
+                r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": 10, "depart_s": 100, "shrink_to": 5, "shrink_at_s": 200}]}"#,
+                "shrink after departure",
+            ),
+            (
+                r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": 10, "shrink_at_s": 5}]}"#,
+                "shrink_at_s without shrink_to",
+            ),
+        ] {
+            assert!(ScenarioSpec::parse(frag).is_err(), "{what} must be rejected");
+        }
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let spec = ScenarioSpec::parse(
+            r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": 50}]}"#,
+        )
+        .unwrap();
+        assert_eq!(spec.batch, 32);
+        assert_eq!(spec.cluster.num_gpus, 2);
+        let t = &spec.tenants[0];
+        assert_eq!(t.name, "img-to-text#0");
+        assert_eq!(t.objective, ScenarioObjective::MinResource);
+        assert!(matches!(t.arrivals, ArrivalProcess::Constant { .. }));
+        assert_eq!(t.arrive_s, 0.0);
+    }
+
+    #[test]
+    fn plan_tables_runs_case1_case2_and_shrink() {
+        let spec = ScenarioSpec::parse(SPEC).unwrap();
+        let tables = spec.plan_tables().expect("scenario plans");
+        assert_eq!(tables.len(), 2, "plan table + shrink table");
+        assert_eq!(tables[0].rows.len(), 2);
+        assert_eq!(tables[1].rows.len(), 1);
+        let shrink_row = &tables[1].rows[0];
+        assert_eq!(shrink_row[0], "a");
+        let before: f64 = shrink_row[2].parse().unwrap();
+        let after: f64 = shrink_row[3].parse().unwrap();
+        assert_eq!(shrink_row[5], "shrunk", "{shrink_row:?}");
+        assert!(after < before, "shrink must reduce usage: {shrink_row:?}");
+    }
+}

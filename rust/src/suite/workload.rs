@@ -236,6 +236,20 @@ impl ArrivalProcess {
         }
     }
 
+    /// The same process shape re-pinned to a new peak rate (constant
+    /// rate replaced, diurnal pattern re-peaked with its shape kept) —
+    /// what a resident-shrink re-admission does to the tenant's offered
+    /// load model.
+    pub fn scaled_to_peak(&self, peak_qps: f64) -> ArrivalProcess {
+        assert!(peak_qps > 0.0, "peak must be positive");
+        match self {
+            ArrivalProcess::Constant { .. } => ArrivalProcess::Constant { rate_qps: peak_qps },
+            ArrivalProcess::Diurnal { pattern } => ArrivalProcess::Diurnal {
+                pattern: DiurnalPattern { peak_qps, ..*pattern },
+            },
+        }
+    }
+
     /// Build the request-granular stream for a tenant with the given
     /// batch size. The constant case is bit-identical to the stream
     /// `Simulator::run` draws for `offered_qps = rate_qps` at the same
@@ -262,11 +276,18 @@ pub enum TraceEventKind {
     /// (the arrival process's instantaneous peak).
     Arrive {
         pipeline: String,
+        /// Display name for decision logs; `None` synthesizes
+        /// `"<pipeline>#<tenant>"` (what generated traces use).
+        name: Option<String>,
         arrivals: ArrivalProcess,
         plan_qps: f64,
     },
     /// The tenant leaves; its capacity can be re-packed.
     Depart,
+    /// The tenant's offered load fell and it asks to be re-admitted at
+    /// a smaller plan (`coordinator::admission` shrinks the resident via
+    /// `planner::Objective::Shrink`, freeing the difference).
+    Shrink { target_qps: f64 },
 }
 
 /// One arrival or departure of a tenant trace.
@@ -355,6 +376,7 @@ impl TenantTrace {
                 tenant,
                 kind: TraceEventKind::Arrive {
                     pipeline,
+                    name: None,
                     arrivals: ArrivalProcess::diurnal(pattern),
                     plan_qps: peak,
                 },
@@ -367,6 +389,15 @@ impl TenantTrace {
         }
         // departures first at equal times (free capacity before the next
         // admission decision), then tenant id — a total, stable order
+        Self::sort_events(&mut events);
+        TenantTrace { events }
+    }
+
+    /// The canonical event order: time, then capacity-freeing events
+    /// first at equal times (departures, then shrinks, then arrivals),
+    /// then tenant id — a total, stable order shared with
+    /// [`crate::planner::ScenarioSpec`]-built traces.
+    pub fn sort_events(events: &mut [TenantTraceEvent]) {
         events.sort_by(|a, b| {
             a.t_s
                 .partial_cmp(&b.t_s)
@@ -374,13 +405,13 @@ impl TenantTrace {
                 .then_with(|| {
                     let rank = |k: &TraceEventKind| match k {
                         TraceEventKind::Depart => 0u8,
-                        TraceEventKind::Arrive { .. } => 1,
+                        TraceEventKind::Shrink { .. } => 1,
+                        TraceEventKind::Arrive { .. } => 2,
                     };
                     rank(&a.kind).cmp(&rank(&b.kind))
                 })
                 .then(a.tenant.cmp(&b.tenant))
         });
-        TenantTrace { events }
     }
 
     /// Highest number of tenants ever resident at once, assuming every
@@ -395,6 +426,8 @@ impl TenantTrace {
                     peak = peak.max(now);
                 }
                 TraceEventKind::Depart => now = now.saturating_sub(1),
+                // a shrink changes a resident's plan, not the head count
+                TraceEventKind::Shrink { .. } => {}
             }
         }
         peak

@@ -97,6 +97,7 @@ fn degenerate_single_tenant_trace_matches_simulator_run() {
             tenant: 0,
             kind: TraceEventKind::Arrive {
                 pipeline: "img-to-text".into(),
+                name: None,
                 arrivals: ArrivalProcess::constant(rate),
                 plan_qps: rate,
             },

@@ -13,6 +13,7 @@ use camelot::deploy;
 use camelot::figures::common::{
     peak_load, plan_low_load, planner_peak, train_predictors,
 };
+use camelot::planner::ClusterState;
 use camelot::sim::{SimOptions, Simulator};
 use camelot::suite::{artifact, real};
 use camelot::util::testkit;
@@ -82,7 +83,15 @@ fn case2_allocation_deploys_and_meets_qos_in_sim() {
     let ctx = AllocContext::new(&p, &cluster, &preds, 16);
     let (r, gpus) = min_resource::solve(&ctx, 80.0, SaParams::default()).unwrap();
     assert!(gpus >= 1);
-    let d = deploy::deploy(&p, &cluster, &r.best, 16, CommMode::GlobalIpc, None).unwrap();
+    let d = deploy::deploy(
+        &p,
+        &ClusterState::exclusive(&cluster),
+        &r.best,
+        16,
+        CommMode::GlobalIpc,
+        None,
+    )
+    .unwrap();
     let rep = Simulator::new(&p, &cluster, &d, opts()).run(80.0).unwrap();
     assert!(rep.p99() <= p.qos_target_s, "p99 {} > QoS", rep.p99());
 }
