@@ -1,0 +1,119 @@
+//! Online control-loop benchmarks: end-to-end admission trace replay
+//! (admit / shrink / depart / re-pack, every interval validated in the
+//! simulator) with the control-loop caches **cold** (disabled) vs
+//! **warm** (memoized planner + deduplicated incremental replay), plus
+//! the planner-memoization micro-benchmark.
+//!
+//! The trace deliberately repeats configurations (arrive/depart/arrive
+//! cycles at fixed loads) because that is what real admission traffic
+//! looks like — diurnal days revisit the same states — and it is
+//! exactly what the `SolveCache` and interval dedup exploit. Cold and
+//! warm runs produce bit-identical reports (`tests/control_loop_cache.rs`
+//! pins this); only the wall clock differs.
+//!
+//! Results merge into `BENCH_sim.json` (run after `bench_sim`, which
+//! rewrites the file): `derived.control_loop_speedup` is the headline
+//! cold/warm ratio, `derived.solve_cache_hit_rate` the warm replay's
+//! planner hit rate. `tools/bench_check` gates the replay benches with
+//! a looser threshold than the sim benches (trace replay is noisier).
+//!
+//! Run with `cargo bench --bench bench_admission`.
+
+use std::path::PathBuf;
+
+use camelot::config::ClusterSpec;
+use camelot::coordinator::admission::{replay_trace, ReplayConfig};
+use camelot::coordinator::AdmissionConfig;
+use camelot::planner::{
+    CamelotPlanner, ClusterState, Objective, PlanRequest, Planner as _, SolveCache,
+};
+use camelot::predictor::train_pipeline;
+use camelot::suite::real;
+use camelot::suite::workload::TenantTrace;
+use camelot::util::bench::{bench, header, JsonReport};
+
+fn main() {
+    let mut json = JsonReport::new();
+    let cluster = ClusterSpec::two_2080ti();
+    // the golden-gated repeated-configuration trace (same fixture the
+    // control-loop golden suite replays)
+    let trace = TenantTrace::repeated_cycle();
+    let events = trace.events.len() as f64;
+
+    header("online control loop (admission trace replay, cold vs warm)");
+    let cold_cfg = ReplayConfig {
+        queries: 300,
+        dedup: false,
+        admission: AdmissionConfig { solve_cache: 0, ..Default::default() },
+        ..Default::default()
+    };
+    let warm_cfg = ReplayConfig { queries: 300, ..Default::default() };
+
+    let cold = bench("admission/trace replay cold (no cache)", 5, || {
+        replay_trace(&cluster, &trace, &cold_cfg).unwrap().admitted
+    });
+    json.add_with(&cold, &[("replay_events_per_s", events / cold.median_s)]);
+    let warm = bench("admission/trace replay warm (memoized)", 5, || {
+        replay_trace(&cluster, &trace, &warm_cfg).unwrap().admitted
+    });
+    json.add_with(&warm, &[("replay_events_per_s", events / warm.median_s)]);
+    let speedup = cold.median_s / warm.median_s;
+    println!("    -> control-loop speedup (cold/warm): {speedup:.2}x");
+    json.derived("control_loop_speedup", speedup);
+
+    // observability numbers from one warm replay: planner hit rate and
+    // how many interval sims dedup absorbed
+    let report = replay_trace(&cluster, &trace, &warm_cfg).unwrap();
+    let hit_rate = report.solve_cache.hit_rate();
+    println!(
+        "    -> warm replay: solve-cache {}/{} hits ({:.0}%), intervals simulated {}/{}",
+        report.solve_cache.hits,
+        report.solve_cache.hits + report.solve_cache.misses,
+        hit_rate * 100.0,
+        report.intervals_simulated,
+        report.intervals.len()
+    );
+    json.derived("solve_cache_hit_rate", hit_rate);
+    json.derived(
+        "replay_interval_dedup_frac",
+        1.0 - report.intervals_simulated as f64 / report.intervals.len().max(1) as f64,
+    );
+
+    header("planner memoization (single Case-2 solve)");
+    let p = real::img_to_text();
+    let preds = train_pipeline(&p, &cluster.gpu);
+    let req = PlanRequest::new(
+        Objective::MinResource { load_qps: 80.0 },
+        ClusterState::exclusive(&cluster),
+        &p,
+        &preds,
+    );
+    let uncached = bench("admission/solve min-resource (uncached)", 20, || {
+        CamelotPlanner.plan(&req).is_ok()
+    });
+    json.add_with(&uncached, &[("solves_per_s", 1.0 / uncached.median_s)]);
+    let cache = SolveCache::new(64);
+    let _ = cache.plan(&req); // install the entry
+    let hit = bench("admission/solve min-resource (cache hit)", 20, || {
+        cache.plan(&req).is_ok()
+    });
+    // `cache_hits_per_s` is deliberately NOT a gated metric: a hit is a
+    // key build + map lookup (microseconds), far too noisy to gate on a
+    // shared runner — informational only
+    json.add_with(&hit, &[("cache_hits_per_s", 1.0 / hit.median_s)]);
+    let solve_speedup = uncached.median_s / hit.median_s;
+    println!("    -> solve-cache hit speedup: {solve_speedup:.2}x");
+    json.derived("solve_cache_speedup", solve_speedup);
+
+    // merge into the file bench_sim wrote (repo root = parent of the
+    // cargo package dir); entries this binary does not produce survive
+    let out = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("../BENCH_sim.json");
+    let note = format!(
+        "generated by `cargo bench --bench bench_sim` + `--bench bench_admission` with {} worker threads",
+        camelot::util::par::max_threads()
+    );
+    match json.merge_write(&out, &note) {
+        Ok(()) => println!("\nmerged into {}", out.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out.display()),
+    }
+}

@@ -16,12 +16,55 @@
 //! exists the candidate is infeasible, which keeps the optimizer honest
 //! about fragmentation.
 
+use std::sync::Arc;
+
 use crate::comm::CommMode;
 use crate::config::ClusterSpec;
 use crate::deploy::Allocation;
 use crate::planner::ClusterState;
 use crate::predictor::StagePredictor;
 use crate::suite::Pipeline;
+
+/// Per-stage predictor evaluations memoized on the 5% MPS-quota grid
+/// (the only quotas the optimizer emits): SA evaluates thousands of
+/// candidates per solve and tree traversals would dominate otherwise
+/// (§VIII-G budgets the whole solve at ~5 ms).
+///
+/// The grid depends only on `(predictors, batch)` — not on the cluster
+/// state — so one build is shared (via `Arc`) across every
+/// [`AllocContext`] evaluating the same tenant: the Case-2 solver's
+/// restricted sub-problems, the admission controller's per-resident QoS
+/// checks, and repeated planner invocations all reuse it instead of
+/// re-querying the predictor trees 60×stages times each.
+#[derive(Debug, Clone)]
+pub struct StageGrids {
+    dur: Vec<[f64; 20]>,
+    bw: Vec<[f64; 20]>,
+    thr: Vec<[f64; 20]>,
+}
+
+impl StageGrids {
+    /// Evaluate all three predictor families on the quota grid.
+    pub fn build(predictors: &[StagePredictor], batch: u32) -> StageGrids {
+        let n = predictors.len();
+        let mut dur = vec![[0.0f64; 20]; n];
+        let mut bw = vec![[0.0f64; 20]; n];
+        let mut thr = vec![[0.0f64; 20]; n];
+        for (i, pred) in predictors.iter().enumerate() {
+            for k in 0..20 {
+                let q = (k + 1) as f64 * 0.05;
+                dur[i][k] = pred.duration(batch, q);
+                bw[i][k] = pred.bandwidth(batch, q);
+                thr[i][k] = pred.throughput(batch, q);
+            }
+        }
+        StageGrids { dur, bw, thr }
+    }
+
+    pub fn n_stages(&self) -> usize {
+        self.dur.len()
+    }
+}
 
 /// Everything the checker (and the policies) need to evaluate candidates.
 pub struct AllocContext<'a> {
@@ -41,9 +84,7 @@ pub struct AllocContext<'a> {
     /// cluster.
     state: ClusterState,
     comm_cache: std::cell::Cell<Option<f64>>,
-    dur_grid: Vec<[f64; 20]>,
-    bw_grid: Vec<[f64; 20]>,
-    thr_grid: Vec<[f64; 20]>,
+    grids: Arc<StageGrids>,
 }
 
 impl<'a> AllocContext<'a> {
@@ -65,22 +106,23 @@ impl<'a> AllocContext<'a> {
         predictors: &'a [StagePredictor],
         batch: u32,
     ) -> Self {
-        // memoize predictions on the 5% MPS-quota grid (the only quotas
-        // the optimizer emits): SA evaluates thousands of candidates per
-        // solve and tree traversals would dominate otherwise (§VIII-G
-        // budgets the whole solve at ~5 ms)
-        let n = pipeline.n_stages();
-        let mut dur_grid = vec![[0.0f64; 20]; n];
-        let mut bw_grid = vec![[0.0f64; 20]; n];
-        let mut thr_grid = vec![[0.0f64; 20]; n];
-        for (i, pred) in predictors.iter().enumerate() {
-            for k in 0..20 {
-                let q = (k + 1) as f64 * 0.05;
-                dur_grid[i][k] = pred.duration(batch, q);
-                bw_grid[i][k] = pred.bandwidth(batch, q);
-                thr_grid[i][k] = pred.throughput(batch, q);
-            }
-        }
+        let grids = Arc::new(StageGrids::build(predictors, batch));
+        Self::shared_with_grids(pipeline, state, predictors, batch, grids)
+    }
+
+    /// [`shared`](Self::shared) reusing an already-built predictor grid
+    /// (the per-stage predictor-evaluation memo). The grid must have
+    /// been built from the same `(predictors, batch)` — it is purely a
+    /// recomputation saving, so the context behaves bit-identically to
+    /// a fresh [`shared`](Self::shared).
+    pub fn shared_with_grids(
+        pipeline: &'a Pipeline,
+        state: ClusterState,
+        predictors: &'a [StagePredictor],
+        batch: u32,
+        grids: Arc<StageGrids>,
+    ) -> Self {
+        debug_assert_eq!(grids.n_stages(), pipeline.n_stages(), "grid/pipeline shape mismatch");
         AllocContext {
             pipeline,
             predictors,
@@ -90,10 +132,15 @@ impl<'a> AllocContext<'a> {
             qos_headroom: 0.80,
             state,
             comm_cache: std::cell::Cell::new(None),
-            dur_grid,
-            bw_grid,
-            thr_grid,
+            grids,
         }
+    }
+
+    /// The shared predictor-evaluation memo (hand to
+    /// [`shared_with_grids`](Self::shared_with_grids) to avoid
+    /// rebuilding it for another context over the same tenant).
+    pub fn grids(&self) -> Arc<StageGrids> {
+        self.grids.clone()
     }
 
     /// The static cluster description (spec of [`state`](Self::state)).
@@ -128,7 +175,7 @@ impl<'a> AllocContext<'a> {
     pub fn duration_at(&self, stage: usize, q: f64) -> f64 {
         let k = Self::grid_idx(q);
         if ((k + 1) as f64 * 0.05 - q).abs() < 1e-9 {
-            self.dur_grid[stage][k]
+            self.grids.dur[stage][k]
         } else {
             self.predictors[stage].duration(self.batch, q)
         }
@@ -138,7 +185,7 @@ impl<'a> AllocContext<'a> {
     pub fn bandwidth_at(&self, stage: usize, q: f64) -> f64 {
         let k = Self::grid_idx(q);
         if ((k + 1) as f64 * 0.05 - q).abs() < 1e-9 {
-            self.bw_grid[stage][k]
+            self.grids.bw[stage][k]
         } else {
             self.predictors[stage].bandwidth(self.batch, q)
         }
@@ -148,7 +195,7 @@ impl<'a> AllocContext<'a> {
     pub fn throughput_at(&self, stage: usize, q: f64) -> f64 {
         let k = Self::grid_idx(q);
         if ((k + 1) as f64 * 0.05 - q).abs() < 1e-9 {
-            self.thr_grid[stage][k]
+            self.grids.thr[stage][k]
         } else {
             self.predictors[stage].throughput(self.batch, q)
         }
@@ -477,6 +524,38 @@ mod tests {
         // remainder (QoS is load-independent here; only capacity shrank)
         let small = Allocation { instances: vec![1, 1], quotas: vec![0.5, 0.4] };
         shared.check(&small).expect("remainder admits a small tenant");
+    }
+
+    #[test]
+    fn shared_grid_reuse_is_bit_identical() {
+        // the per-stage predictor-evaluation memo is a pure
+        // recomputation saving: a context built on a borrowed grid
+        // predicts exactly what a fresh context predicts
+        let p = real::img_to_text();
+        let (c, preds) = ctx_fixture(&p);
+        let fresh = AllocContext::new(&p, &c, &preds, 16);
+        let reused = AllocContext::shared_with_grids(
+            &p,
+            ClusterState::exclusive(&c),
+            &preds,
+            16,
+            fresh.grids(),
+        );
+        let a = Allocation { instances: vec![1, 2], quotas: vec![0.5, 0.4] };
+        assert_eq!(
+            fresh.predicted_p99(&a, 50.0).to_bits(),
+            reused.predicted_p99(&a, 50.0).to_bits()
+        );
+        assert_eq!(
+            fresh.predicted_peak(&a).to_bits(),
+            reused.predicted_peak(&a).to_bits()
+        );
+        assert_eq!(
+            fresh.predicted_service_time(&a).to_bits(),
+            reused.predicted_service_time(&a).to_bits()
+        );
+        assert_eq!(fresh.bw_budget_storage(&a), reused.bw_budget_storage(&a));
+        assert_eq!(fresh.check(&a).is_ok(), reused.check(&a).is_ok());
     }
 
     #[test]

@@ -22,5 +22,5 @@ pub mod max_load;
 pub mod min_resource;
 pub mod sa;
 
-pub use constraints::AllocContext;
+pub use constraints::{AllocContext, StageGrids};
 pub use sa::{anneal, SaParams, SaResult};

@@ -11,7 +11,8 @@
 use crate::allocator::SaParams;
 use crate::config::ClusterSpec;
 use crate::deploy::{Allocation, GpuReservation};
-use crate::planner::{CamelotPlanner, ClusterState, Objective, PlanRequest, Planner};
+use crate::planner::cache::{CacheStats, SolveCache};
+use crate::planner::{ClusterState, Objective, PlanRequest};
 use crate::predictor::StagePredictor;
 use crate::sim::{Deployment, InstancePlacement, SimOptions, Simulator};
 use crate::suite::workload::DiurnalPattern;
@@ -27,6 +28,11 @@ pub struct AutoscaleConfig {
     pub headroom: f64,
     pub batch: u32,
     pub sa: SaParams,
+    /// Capacity of the controller's planner [`SolveCache`] (0 disables
+    /// memoization). Diurnal days revisit the same load levels, so
+    /// replans at a previously seen `(target, holds)` return the cached
+    /// — bit-identical — plan instead of re-running the solver.
+    pub solve_cache: usize,
 }
 
 impl Default for AutoscaleConfig {
@@ -36,6 +42,7 @@ impl Default for AutoscaleConfig {
             headroom: 1.15,
             batch: 32,
             sa: SaParams::default(),
+            solve_cache: 256,
         }
     }
 }
@@ -64,6 +71,9 @@ pub struct Autoscaler<'a> {
     /// inside the hysteresis band (the old plan may overlap capacity
     /// the neighbors now claim).
     last_reserved: Vec<GpuReservation>,
+    /// Memoized planner: replans at a previously seen (target, holds)
+    /// return the cached solution bit-identically.
+    cache: SolveCache,
 }
 
 impl<'a> Autoscaler<'a> {
@@ -73,6 +83,7 @@ impl<'a> Autoscaler<'a> {
         predictors: &'a [StagePredictor],
         config: AutoscaleConfig,
     ) -> Self {
+        let cache = SolveCache::new(config.solve_cache);
         Autoscaler {
             pipeline,
             cluster,
@@ -81,6 +92,7 @@ impl<'a> Autoscaler<'a> {
             current: None,
             replans: 0,
             last_reserved: Vec::new(),
+            cache,
         }
     }
 
@@ -91,6 +103,11 @@ impl<'a> Autoscaler<'a> {
     /// Number of replans performed so far (hysteresis effectiveness).
     pub fn replans(&self) -> usize {
         self.replans
+    }
+
+    /// Planner solve-cache counters (hits/misses/evictions).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
     }
 
     /// Observe the current offered load; returns a new plan if the
@@ -142,9 +159,10 @@ impl<'a> Autoscaler<'a> {
         )
         .batch(self.config.batch)
         .sa(self.config.sa);
-        let solution = CamelotPlanner
+        let solution = self
+            .cache
             .plan(&request)
-            .or_else(|_| CamelotPlanner.plan(&request.clone().objective(Objective::MaxLoad)));
+            .or_else(|_| self.cache.plan(&request.clone().objective(Objective::MaxLoad)));
         let Ok(solution) = solution else {
             if reserved_changed {
                 // the old plan was solved against different holds and
@@ -241,6 +259,9 @@ pub struct ClosedLoopReport {
     /// Total churn charged (instances changed × churn_cost_s).
     pub churn_s: f64,
     pub qos_violations: usize,
+    /// Planner solve-cache counters of the loop's autoscaler (diurnal
+    /// days revisit load levels, so warm epochs hit).
+    pub solve_cache: CacheStats,
 }
 
 impl ClosedLoopReport {
@@ -354,6 +375,7 @@ pub fn run_closed_loop(
         static_usage,
         churn_s: churn_total as f64 * cfg.churn_cost_s,
         qos_violations: violations,
+        solve_cache: scaler.cache_stats(),
         epochs,
     })
 }

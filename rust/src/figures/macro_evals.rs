@@ -627,7 +627,24 @@ pub fn colocate_tables(
             rep.qos_violations.to_string(),
         ]);
     }
-    Ok(vec![t1, t2, t3])
+
+    // control-loop memoization observability (closed-loop autoscaler)
+    let mut t4 = Table::new(
+        "Control-loop solve cache (closed-loop autoscaler)",
+        &["benchmark", "hits", "misses", "hit_rate", "evictions"],
+    );
+    for (p, rep) in pipes.iter().zip(&loops) {
+        let Some(rep) = rep else { continue };
+        let sc = &rep.solve_cache;
+        t4.push(&[
+            p.name.clone(),
+            sc.hits.to_string(),
+            sc.misses.to_string(),
+            format!("{:.1}%", sc.hit_rate() * 100.0),
+            sc.evictions.to_string(),
+        ]);
+    }
+    Ok(vec![t1, t2, t3, t4])
 }
 
 /// The registered `colocate` experiment: img-to-text + text-to-text on
@@ -811,6 +828,22 @@ pub fn admission_tables_for_trace(
         },
     ]);
     t4.push(&["repacks applied".to_string(), shared.repacks_applied.to_string()]);
+    // control-loop memoization observability: how much planning and
+    // simulation the caches absorbed for this trace
+    let sc = &shared.solve_cache;
+    t4.push(&[
+        "solve-cache hits/misses".to_string(),
+        format!("{}/{}", sc.hits, sc.misses),
+    ]);
+    t4.push(&[
+        "solve-cache hit rate".to_string(),
+        format!("{:.1}%", sc.hit_rate() * 100.0),
+    ]);
+    t4.push(&["solve-cache evictions".to_string(), sc.evictions.to_string()]);
+    t4.push(&[
+        "intervals simulated (of total)".to_string(),
+        format!("{}/{}", shared.intervals_simulated, shared.intervals.len()),
+    ]);
     Ok(vec![t1, t2, t3, t4])
 }
 
@@ -836,7 +869,7 @@ mod tests {
         };
         let ts = colocate_tables(&real::img_to_text(), &real::text_to_text(), &cfg)
             .expect("scenario runs");
-        assert_eq!(ts.len(), 3);
+        assert_eq!(ts.len(), 4);
         // two tenants × (poisson + diurnal) rows
         assert_eq!(ts[0].rows.len(), 4);
         // per-epoch rows for both pipelines

@@ -42,6 +42,6 @@ pub mod util;
 // spatial-partitioning decision (Case-1 max-load, Case-2 min-resource,
 // re-pack, resident shrink) is one typed request against one trait.
 pub use planner::{
-    CamelotPlanner, ClusterState, Infeasible, Objective, PlanOutcome, PlanRequest, Planner,
-    ScenarioSpec, Solution,
+    CacheStats, CamelotPlanner, ClusterState, Infeasible, Objective, PlanOutcome, PlanRequest,
+    Planner, ScenarioSpec, Solution, SolveCache,
 };

@@ -1,0 +1,492 @@
+//! Planner memoization — the [`SolveCache`] that makes the *online*
+//! control loop fast.
+//!
+//! Camelot is a runtime system: admission, shrink, and re-packing
+//! decisions happen while queries are in flight, so planner latency is
+//! a budget of its own (§VIII-G prices one solve at ~5 ms — an
+//! admission attempt runs several, and a departure re-pack runs one per
+//! survivor). MISO and ParvaGPU both observe that reallocation-decision
+//! latency bounds how fine-grained GPU sharing can get; the control
+//! loop therefore must not re-derive a plan it has already computed.
+//!
+//! The cache is exact, not approximate: entries are keyed on a
+//! **canonical fingerprint** of everything [`Planner::plan`] reads —
+//! the objective (including embedded allocations and load targets, as
+//! f64 bit patterns), the full [`ClusterState`] (spec constants and the
+//! merged per-GPU co-tenant holds), the pipeline (per-stage resource
+//! signature and QoS target), the *predictor identity* (each stage
+//! predictor evaluated over the entire 5% planning grid — the values
+//! the solver consults — so differently trained predictor sets never
+//! collide even under the same stage names; see
+//! [`request_fingerprint`] for the exact scope of this guarantee), and
+//! every knob (`batch`, `comm`, `enforce_bw`, `qos_headroom`, the full
+//! `SaParams` including the seed). Planning is a pure function of
+//! exactly these inputs (seeded SA, no wall clock), so a hit returns a
+//! [`Solution`](super::Solution) **bit-identical** to a fresh solve —
+//! `tests/control_loop_cache.rs` pins this, and the keys are exact
+//! strings, never lossy hashes.
+//!
+//! Capacity is bounded: a least-recently-used entry is evicted when the
+//! cache is full, so week-long admission traces cannot grow memory
+//! unboundedly. Statistics (`hits`/`misses`/`evictions`) are surfaced
+//! through `camelot admit` / `camelot colocate` so cache behavior is
+//! observable.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use crate::deploy::Allocation;
+use crate::sim::Deployment;
+use crate::suite::workload::ArrivalProcess;
+use crate::suite::Pipeline;
+
+use super::{CamelotPlanner, Objective, PlanOutcome, PlanRequest, Planner};
+
+/// Snapshot of a [`SolveCache`]'s counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Entries currently resident (≤ capacity).
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// hits / (hits + misses); 0 when the cache saw no traffic.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+struct Entry {
+    outcome: PlanOutcome,
+    last_used: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<String, Entry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Bounded-capacity LRU memo over [`Planner::plan`]. Interior-mutable
+/// (`&self` methods) so callers holding shared borrows of their own
+/// state can still consult it; single-threaded by design — each
+/// controller owns its cache, and the parallel phases of the replay
+/// harnesses never plan.
+pub struct SolveCache {
+    capacity: usize,
+    inner: RefCell<Inner>,
+}
+
+impl SolveCache {
+    /// A cache holding at most `capacity` solved requests. `capacity`
+    /// 0 disables memoization entirely (every call plans fresh and
+    /// counts as a miss) — the "cold" configuration the benches and
+    /// golden tests compare against.
+    pub fn new(capacity: usize) -> SolveCache {
+        SolveCache { capacity, inner: RefCell::new(Inner::default()) }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Plan `req` through the paper's [`CamelotPlanner`], memoized.
+    pub fn plan(&self, req: &PlanRequest<'_>) -> PlanOutcome {
+        self.plan_with(&CamelotPlanner, req)
+    }
+
+    /// Plan `req` through an arbitrary strategy, memoized. The planner
+    /// must be a pure function of the request (every [`Planner`] in
+    /// this crate is); with caching disabled this is exactly
+    /// `planner.plan(req)`.
+    pub fn plan_with<P: Planner>(&self, planner: &P, req: &PlanRequest<'_>) -> PlanOutcome {
+        if self.capacity == 0 {
+            self.inner.borrow_mut().misses += 1;
+            return planner.plan(req);
+        }
+        let key = request_fingerprint(req);
+        {
+            let mut inner = self.inner.borrow_mut();
+            inner.tick += 1;
+            let tick = inner.tick;
+            let cached = inner.map.get_mut(&key).map(|e| {
+                e.last_used = tick;
+                e.outcome.clone()
+            });
+            if let Some(outcome) = cached {
+                inner.hits += 1;
+                return outcome;
+            }
+            inner.misses += 1;
+        }
+        // solve outside the borrow: a strategy is free to consult the
+        // cache itself without tripping the RefCell
+        let outcome = planner.plan(req);
+        let mut inner = self.inner.borrow_mut();
+        if inner.map.len() >= self.capacity {
+            let oldest = inner
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone());
+            if let Some(k) = oldest {
+                inner.map.remove(&k);
+                inner.evictions += 1;
+            }
+        }
+        let tick = inner.tick;
+        inner.map.insert(key, Entry { outcome: outcome.clone(), last_used: tick });
+        outcome
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.borrow();
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            entries: inner.map.len(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Canonical fingerprints
+// ---------------------------------------------------------------------
+//
+// f64s are rendered as their raw bit patterns (hex), so two inputs
+// fingerprint equal iff they are bit-identical — the same standard the
+// golden suites hold outputs to.
+
+fn fp_f64(out: &mut String, x: f64) {
+    let _ = write!(out, "{:x},", x.to_bits());
+}
+
+pub(crate) fn fp_alloc(out: &mut String, a: &Allocation) {
+    let _ = write!(out, "n{:?}p", a.instances);
+    for &q in &a.quotas {
+        fp_f64(out, q);
+    }
+}
+
+/// Pipeline identity: name, QoS target, and the full per-stage resource
+/// signature (every field the cost model and placement pass read).
+pub(crate) fn fp_pipeline(out: &mut String, p: &Pipeline) {
+    let _ = write!(out, "pipe={};", p.name);
+    fp_f64(out, p.qos_target_s);
+    for st in &p.stages {
+        let _ = write!(out, "st={},{:?};", st.name, st.kind);
+        for x in [
+            st.flops_per_query,
+            st.hbm_bytes_per_query,
+            st.model_bytes,
+            st.act_bytes_per_query,
+            st.in_bytes_per_query,
+            st.out_bytes_per_query,
+            st.serial_frac,
+            st.batch_half,
+        ] {
+            fp_f64(out, x);
+        }
+    }
+}
+
+/// Deployment identity: placements in order, batch, comm mode.
+pub(crate) fn fp_deployment(out: &mut String, d: &Deployment) {
+    let _ = write!(out, "dep=b{},{:?};", d.batch, d.comm);
+    for pl in &d.placements {
+        let _ = write!(out, "s{}g{}q", pl.stage, pl.gpu);
+        fp_f64(out, pl.sm_frac);
+    }
+}
+
+/// Arrival-process identity (the offered-load model, not a drawn
+/// stream — streams are derived from seeds the caller fingerprints
+/// separately).
+pub(crate) fn fp_arrivals(out: &mut String, a: &ArrivalProcess) {
+    match a {
+        ArrivalProcess::Constant { rate_qps } => {
+            out.push_str("arr=c");
+            fp_f64(out, *rate_qps);
+        }
+        ArrivalProcess::Diurnal { pattern } => {
+            out.push_str("arr=d");
+            fp_f64(out, pattern.peak_qps);
+            fp_f64(out, pattern.trough_frac);
+            fp_f64(out, pattern.period_s);
+        }
+    }
+}
+
+/// The canonical cache key: everything [`Planner::plan`] reads.
+pub fn request_fingerprint(req: &PlanRequest<'_>) -> String {
+    let mut s = String::with_capacity(512);
+    match &req.objective {
+        Objective::MaxLoad => s.push_str("obj=ml"),
+        Objective::MinResource { load_qps } => {
+            s.push_str("obj=mr");
+            fp_f64(&mut s, *load_qps);
+        }
+        Objective::Repack { allocation } => {
+            s.push_str("obj=rp");
+            fp_alloc(&mut s, allocation);
+        }
+        Objective::Shrink { target_qps, current } => {
+            s.push_str("obj=sh");
+            fp_f64(&mut s, *target_qps);
+            fp_alloc(&mut s, current);
+        }
+    }
+    // cluster spec: every constant the cost model / constraint checker
+    // reads (presets differ in all of these)
+    let spec = req.cluster.spec();
+    let _ = write!(
+        s,
+        "|cl={},{},{},{};",
+        spec.gpu.name, spec.num_gpus, spec.gpu.sms, spec.gpu.mps_contexts
+    );
+    for x in [
+        spec.gpu.gflops,
+        spec.gpu.mem_bytes as f64,
+        spec.gpu.mem_bw,
+        spec.gpu.launch_overhead_s,
+        spec.pcie.effective_bw,
+        spec.pcie.per_stream_bw,
+        spec.pcie.setup_s,
+        spec.ipc.setup_s,
+        spec.ipc.per_msg_s,
+        spec.ipc.handle_bytes as f64,
+    ] {
+        fp_f64(&mut s, x);
+    }
+    // merged co-tenant holds, per GPU
+    s.push_str("|res=");
+    for r in req.cluster.reservations() {
+        let _ = write!(s, "c{},", r.contexts);
+        fp_f64(&mut s, r.sm_frac);
+        fp_f64(&mut s, r.mem_bytes);
+        fp_f64(&mut s, r.bw_demand);
+    }
+    s.push('|');
+    fp_pipeline(&mut s, req.pipeline);
+    // predictor identity: all three predictor families evaluated over
+    // the full 5% quota grid at the request's batch — exactly the
+    // surface the solver consults (`StageGrids` memoizes the same
+    // values), so two predictor sets alias only if they agree at every
+    // on-grid point the solve can read. (Off-grid probes — possible for
+    // a hand-rolled Planner — are not fingerprinted; in this repo
+    // predictors are pure functions of the pipeline, the GPU spec, and
+    // the default profiling config, all of which this key covers.)
+    //
+    // Cost note, deliberate: this re-runs ~60 tree evaluations per
+    // stage per lookup (hits included), a few µs — against the ≥ms SA
+    // solve a hit avoids. Exactness is worth that ratio; sharing the
+    // already-built StageGrids here would couple the key builder to
+    // allocator internals for a <1% saving.
+    s.push_str("|pred=");
+    for p in req.predictors {
+        let _ = write!(s, "{}:", p.stage_name);
+        for k in 0..20u32 {
+            let q = (k + 1) as f64 * 0.05;
+            fp_f64(&mut s, p.duration(req.batch, q));
+            fp_f64(&mut s, p.bandwidth(req.batch, q));
+            fp_f64(&mut s, p.throughput(req.batch, q));
+        }
+    }
+    // knobs
+    let _ = write!(s, "|k=b{},{:?},bw{};", req.batch, req.comm, req.enforce_bw);
+    fp_f64(&mut s, req.qos_headroom);
+    let sa = req.sa;
+    let _ = write!(
+        s,
+        "|sa=i{},n{},m{},s{};",
+        sa.iterations, sa.inst_step, sa.max_instances, sa.seed
+    );
+    for x in [sa.t_start, sa.t_end, sa.quota_step, sa.min_quota] {
+        fp_f64(&mut s, x);
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::deploy::GpuReservation;
+    use crate::planner::ClusterState;
+    use crate::predictor::train_pipeline;
+    use crate::suite::real;
+
+    fn fixture() -> (ClusterSpec, Pipeline, Vec<crate::predictor::StagePredictor>) {
+        let c = ClusterSpec::two_2080ti();
+        let p = real::img_to_text();
+        let preds = train_pipeline(&p, &c.gpu);
+        (c, p, preds)
+    }
+
+    #[test]
+    fn fingerprint_separates_every_knob() {
+        let (c, p, preds) = fixture();
+        let base = PlanRequest::new(
+            Objective::MinResource { load_qps: 50.0 },
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let fp = request_fingerprint(&base);
+        // identical request -> identical key
+        assert_eq!(fp, request_fingerprint(&base.clone()));
+        // every knob perturbation must change the key
+        assert_ne!(fp, request_fingerprint(&base.clone().batch(32)));
+        assert_ne!(fp, request_fingerprint(&base.clone().enforce_bw(false)));
+        assert_ne!(
+            fp,
+            request_fingerprint(&base.clone().objective(Objective::MaxLoad))
+        );
+        assert_ne!(
+            fp,
+            request_fingerprint(
+                &base
+                    .clone()
+                    .objective(Objective::MinResource { load_qps: 50.0 + 1e-9 })
+            )
+        );
+        let mut sa = base.sa;
+        sa.seed ^= 1;
+        assert_ne!(fp, request_fingerprint(&base.clone().sa(sa)));
+        // co-tenant holds change the key
+        let held = vec![
+            GpuReservation { sm_frac: 0.25, contexts: 2, ..Default::default() };
+            c.num_gpus
+        ];
+        let shared = PlanRequest::new(
+            Objective::MinResource { load_qps: 50.0 },
+            ClusterState::with_reservations(&c, &held),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        assert_ne!(fp, request_fingerprint(&shared));
+        // and so does the cluster preset
+        let dgx = ClusterSpec::dgx2();
+        let preds_dgx = train_pipeline(&p, &dgx.gpu);
+        let other = PlanRequest::new(
+            Objective::MinResource { load_qps: 50.0 },
+            ClusterState::exclusive(&dgx),
+            &p,
+            &preds_dgx,
+        )
+        .batch(16);
+        assert_ne!(fp, request_fingerprint(&other));
+    }
+
+    #[test]
+    fn hit_returns_bit_identical_solution() {
+        let (c, p, preds) = fixture();
+        let req = PlanRequest::new(
+            Objective::MaxLoad,
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let direct = CamelotPlanner.plan(&req).expect("solves");
+        let cache = SolveCache::new(8);
+        let miss = cache.plan(&req).expect("solves");
+        let hit = cache.plan(&req).expect("solves");
+        for s in [&miss, &hit] {
+            assert_eq!(s.allocation, direct.allocation);
+            assert_eq!(s.deployment.placements, direct.deployment.placements);
+            assert_eq!(s.objective_value.to_bits(), direct.objective_value.to_bits());
+            assert_eq!(s.predicted_p99_s.to_bits(), direct.predicted_p99_s.to_bits());
+            assert_eq!(
+                (s.evaluated, s.feasible_found),
+                (direct.evaluated, direct.feasible_found)
+            );
+        }
+        let stats = cache.stats();
+        assert_eq!((stats.hits, stats.misses, stats.entries), (1, 1, 1));
+        assert!((stats.hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_eviction_bounds_entries() {
+        let (c, p, preds) = fixture();
+        let cache = SolveCache::new(2);
+        for load in [30.0, 40.0, 50.0] {
+            let req = PlanRequest::new(
+                Objective::MinResource { load_qps: load },
+                ClusterState::exclusive(&c),
+                &p,
+                &preds,
+            )
+            .batch(16);
+            let _ = cache.plan(&req);
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 2, "capacity must bound the map");
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.misses, 3);
+        // the least-recently-used entry (load 30) was evicted: planning
+        // it again misses but still matches a fresh solve exactly
+        let req = PlanRequest::new(
+            Objective::MinResource { load_qps: 30.0 },
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let again = cache.plan(&req).expect("solves");
+        assert_eq!(cache.stats().misses, 4);
+        let direct = CamelotPlanner.plan(&req).expect("solves");
+        assert_eq!(again.allocation, direct.allocation);
+        // the most-recent entries survive: 30 (just re-inserted) and 50
+        // are resident, so re-planning 50 hits without evicting
+        let req50 = PlanRequest::new(
+            Objective::MinResource { load_qps: 50.0 },
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let _ = cache.plan(&req50);
+        let s = cache.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 4);
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 2);
+    }
+
+    #[test]
+    fn zero_capacity_disables_memoization() {
+        let (c, p, preds) = fixture();
+        let cache = SolveCache::new(0);
+        let req = PlanRequest::new(
+            Objective::MaxLoad,
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let a = cache.plan(&req).expect("solves");
+        let b = cache.plan(&req).expect("solves");
+        assert_eq!(a.allocation, b.allocation);
+        let stats = cache.stats();
+        assert_eq!(stats.hits, 0);
+        assert_eq!(stats.misses, 2);
+        assert_eq!(stats.entries, 0);
+    }
+}

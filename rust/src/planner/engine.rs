@@ -133,12 +133,16 @@ pub(crate) fn solve_case2(
     while y <= ctx.cluster().num_gpus {
         // the restricted cluster keeps GPUs 0..y, so it keeps exactly
         // their holds (growth past the initial bound can pull held
-        // devices into scope — their truncated entries come with them)
-        let mut sub = AllocContext::shared(
+        // devices into scope — their truncated entries come with them).
+        // The predictor grid depends only on (predictors, batch), so
+        // every restriction shares the parent context's memo instead of
+        // re-querying the trees.
+        let mut sub = AllocContext::shared_with_grids(
             ctx.pipeline,
             ctx.state().restrict(y),
             ctx.predictors,
             ctx.batch,
+            ctx.grids(),
         );
         sub.comm = ctx.comm;
         sub.enforce_bw = ctx.enforce_bw;

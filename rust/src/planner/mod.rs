@@ -29,11 +29,18 @@
 //! * [`ScenarioSpec`] — a declarative JSON description of cluster +
 //!   tenants + objectives (`camelot plan/admit/colocate --spec`),
 //!   replacing hand-rolled scenario construction.
+//! * [`SolveCache`] — bounded-LRU memoization of `Planner::plan` keyed
+//!   on a canonical request fingerprint; the online control loop
+//!   (admission, re-pack, shrink, autoscale) plans through it and gets
+//!   bit-identical `Solution`s back without re-running the SA solver
+//!   for configurations it has already priced.
 
+pub mod cache;
 pub mod cluster;
 pub(crate) mod engine;
 pub mod scenario;
 
+pub use cache::{CacheStats, SolveCache};
 pub use cluster::ClusterState;
 pub use scenario::{ScenarioSpec, ScenarioTenant};
 

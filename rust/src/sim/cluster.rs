@@ -70,6 +70,10 @@ enum Ev {
 struct Inst {
     tn: usize,
     stage: usize,
+    /// Global stage index (`stage_base[tn] + stage`) into the flat
+    /// per-(tenant, stage) arenas — routing lists, round-robin
+    /// counters, and exec accumulators all index by this.
+    gstage: usize,
     gpu: usize,
     /// Whether `stage` is the tenant pipeline's final stage.
     last_stage: bool,
@@ -133,26 +137,61 @@ impl<'a> ClusterSim<'a> {
         for t in &self.tenants {
             let batch = t.deployment.batch.max(1) as usize;
             batches.push(batch);
-            n_requests.push((self.opts.queries + batch - 1) / batch);
+            n_requests.push(self.opts.queries.div_ceil(batch));
         }
+
+        // flat per-(tenant, stage) arenas: global stage index
+        // `gs = stage_base[tn] + stage`, and
+        // `stage_insts[insts_off[gs]..insts_off[gs + 1]]` lists that
+        // stage's instances in placement order — identical content and
+        // order to the former `Vec<Vec<Vec<usize>>>` routing map, with
+        // the nested allocations and double pointer-chase removed from
+        // the hot path
+        let mut stage_base: Vec<usize> = Vec::with_capacity(n_tenants);
+        let mut total_stages = 0usize;
+        for t in &self.tenants {
+            stage_base.push(total_stages);
+            total_stages += t.pipeline.n_stages();
+        }
+        let total_insts: usize = self
+            .tenants
+            .iter()
+            .map(|t| t.deployment.placements.len())
+            .sum();
+        let mut insts_off = vec![0usize; total_stages + 1];
+        for (tn, t) in self.tenants.iter().enumerate() {
+            for p in &t.deployment.placements {
+                insts_off[stage_base[tn] + p.stage] += 1;
+            }
+        }
+        // exclusive prefix sum: counts -> offsets, sentinel at the end
+        let mut acc = 0usize;
+        for slot in insts_off.iter_mut() {
+            let count = *slot;
+            *slot = acc;
+            acc += count;
+        }
+        let mut stage_insts = vec![0usize; total_insts];
+        let mut fill_cursor = insts_off.clone();
 
         // freeze per-instance cost quantities; instance ids are global,
         // assigned in (tenant, placement) order
-        let mut instances: Vec<Inst> = Vec::new();
-        let mut by_stage: Vec<Vec<Vec<usize>>> = Vec::with_capacity(n_tenants);
+        let mut instances: Vec<Inst> = Vec::with_capacity(total_insts);
         for (tn, t) in self.tenants.iter().enumerate() {
             let n_stages = t.pipeline.n_stages();
             let batch = batches[tn] as u32;
-            let mut stage_map: Vec<Vec<usize>> = vec![Vec::new(); n_stages];
             for p in &t.deployment.placements {
                 let stage = &t.pipeline.stages[p.stage];
-                stage_map[p.stage].push(instances.len());
+                let gs = stage_base[tn] + p.stage;
+                stage_insts[fill_cursor[gs]] = instances.len();
+                fill_cursor[gs] += 1;
                 instances.push(Inst {
                     tn,
                     stage: p.stage,
+                    gstage: gs,
                     gpu: p.gpu,
                     last_stage: p.stage + 1 == n_stages,
-                    queue: VecDeque::with_capacity(16),
+                    queue: VecDeque::with_capacity(n_requests[tn].clamp(16, 64)),
                     busy: false,
                     exec_rid: 0,
                     cost: cost.instance_cost(stage, batch, p.sm_frac),
@@ -161,7 +200,6 @@ impl<'a> ClusterSim<'a> {
                     batch_f: batch as f64,
                 });
             }
-            by_stage.push(stage_map);
         }
         let mut ledgers: Vec<GpuLedger> = (0..self.cluster.num_gpus)
             .map(|_| GpuLedger::default())
@@ -182,8 +220,11 @@ impl<'a> ClusterSim<'a> {
             .map(|&n| Vec::with_capacity(n))
             .collect();
 
+        // heap sized from the trace shape: ≤2 in-flight events per
+        // instance (exec + hop), one pending arrival per tenant, plus
+        // bus releases bounded by concurrent transfers
         let mut heap: BinaryHeap<Event<Ev>> =
-            BinaryHeap::with_capacity(instances.len() * 4 + 16);
+            BinaryHeap::with_capacity(instances.len() * 4 + n_tenants * 2 + 16);
         let mut seq = 0u64;
         let push = |heap: &mut BinaryHeap<Event<Ev>>, seq: &mut u64, t: f64, ev: Ev| {
             *seq += 1;
@@ -200,16 +241,9 @@ impl<'a> ClusterSim<'a> {
         let mut hists: Vec<LatencyHistogram> =
             (0..n_tenants).map(|_| LatencyHistogram::new()).collect();
         let mut breakdowns: Vec<TimeBreakdown> = vec![TimeBreakdown::default(); n_tenants];
-        let mut stage_exec_sum: Vec<Vec<f64>> = self
-            .tenants
-            .iter()
-            .map(|t| vec![0.0f64; t.pipeline.n_stages()])
-            .collect();
-        let mut stage_exec_n: Vec<Vec<u64>> = self
-            .tenants
-            .iter()
-            .map(|t| vec![0u64; t.pipeline.n_stages()])
-            .collect();
+        // flat per-(tenant, stage) accumulators, indexed by gstage
+        let mut stage_exec_sum: Vec<f64> = vec![0.0f64; total_stages];
+        let mut stage_exec_n: Vec<u64> = vec![0u64; total_stages];
         let warmups: Vec<u64> = n_requests
             .iter()
             .map(|&n| (n as f64 * self.opts.warmup_frac) as u64)
@@ -222,11 +256,7 @@ impl<'a> ClusterSim<'a> {
         // time (the final pop is always the last Complete), preserving
         // bit-equality.
         let mut last_complete_t = vec![0.0f64; n_tenants];
-        let mut rr_counters: Vec<Vec<usize>> = self
-            .tenants
-            .iter()
-            .map(|t| vec![0usize; t.pipeline.n_stages()])
-            .collect();
+        let mut rr_counters: Vec<usize> = vec![0usize; total_stages];
 
         // issue a request on `inst_id` if it is idle with queued work —
         // same float-op sequence as the single-tenant engine's try_issue
@@ -240,8 +270,8 @@ impl<'a> ClusterSim<'a> {
             heap: &mut BinaryHeap<Event<Ev>>,
             seq: &mut u64,
             breakdowns: &mut [TimeBreakdown],
-            stage_exec_sum: &mut [Vec<f64>],
-            stage_exec_n: &mut [Vec<u64>],
+            stage_exec_sum: &mut [f64],
+            stage_exec_n: &mut [u64],
         ) {
             let push = |heap: &mut BinaryHeap<Event<Ev>>, seq: &mut u64, t: f64, ev: Ev| {
                 *seq += 1;
@@ -259,6 +289,7 @@ impl<'a> ClusterSim<'a> {
             inst.exec_rid = rid;
 
             let gpu = inst.gpu;
+            let gstage = inst.gstage;
             let stage_idx = inst.stage;
             let icost = inst.cost;
             let in_bytes = inst.in_bytes_batch;
@@ -273,8 +304,8 @@ impl<'a> ClusterSim<'a> {
             }
             let others = ledgers[gpu].kernel_start(inst_id, icost.bw_demand);
             let dur = icost.duration_contended(others);
-            stage_exec_sum[tn][stage_idx] += dur;
-            stage_exec_n[tn][stage_idx] += 1;
+            stage_exec_sum[gstage] += dur;
+            stage_exec_n[gstage] += 1;
             breakdowns[tn].exec_s += dur * batch_f;
             push(heap, seq, start + dur, Ev::ExecDone { inst: inst_id });
         }
@@ -295,10 +326,11 @@ impl<'a> ClusterSim<'a> {
                             Ev::Arrival { tn: tn as u32, rid: next_rid as u32 },
                         );
                     }
+                    let gs = stage_base[tn];
                     let target = route_by(
-                        &by_stage[tn][0],
+                        &stage_insts[insts_off[gs]..insts_off[gs + 1]],
                         None,
-                        &mut rr_counters[tn][0],
+                        &mut rr_counters[gs],
                         |i| instances[i].queue.len() + instances[i].busy as usize,
                         |i| instances[i].gpu,
                     );
@@ -313,7 +345,6 @@ impl<'a> ClusterSim<'a> {
                 Ev::ExecDone { inst: inst_id } => {
                     let rid = instances[inst_id].exec_rid;
                     let tn = instances[inst_id].tn;
-                    let stage_idx = instances[inst_id].stage;
                     let gpu = instances[inst_id].gpu;
                     let out_bytes = instances[inst_id].out_bytes_batch;
                     let batch_f = instances[inst_id].batch_f;
@@ -332,10 +363,13 @@ impl<'a> ClusterSim<'a> {
                             Ev::Complete { tn: tn as u32, rid },
                         );
                     } else {
+                        // next stage of the same tenant is the next
+                        // global stage index
+                        let gs = instances[inst_id].gstage + 1;
                         let target = route_by(
-                            &by_stage[tn][stage_idx + 1],
+                            &stage_insts[insts_off[gs]..insts_off[gs + 1]],
                             Some(gpu),
-                            &mut rr_counters[tn][stage_idx + 1],
+                            &mut rr_counters[gs],
                             |i| instances[i].queue.len() + instances[i].busy as usize,
                             |i| instances[i].gpu,
                         );
@@ -390,15 +424,17 @@ impl<'a> ClusterSim<'a> {
         for tn in 0..n_tenants {
             let span = (last_complete_t[tn] - first_counted_t[tn]).max(1e-9);
             let counted = completed[tn].saturating_sub(warmups[tn]);
+            let base = stage_base[tn];
+            let n_stages = self.tenants[tn].pipeline.n_stages();
             reports.push(SimReport {
                 achieved_qps: counted as f64 * batches[tn] as f64 / span,
                 offered_qps: self.tenants[tn].arrivals.mean_qps(),
                 completed: completed[tn],
                 hist: std::mem::take(&mut hists[tn]),
                 breakdown: breakdowns[tn],
-                stage_exec_mean_s: stage_exec_sum[tn]
+                stage_exec_mean_s: stage_exec_sum[base..base + n_stages]
                     .iter()
-                    .zip(&stage_exec_n[tn])
+                    .zip(&stage_exec_n[base..base + n_stages])
                     .map(|(s, &n)| if n == 0 { 0.0 } else { s / n as f64 })
                     .collect(),
             });

@@ -348,7 +348,7 @@ impl<'a> Simulator<'a> {
         let batch = self.deployment.batch.max(1) as usize;
         let batch_f = batch as f64;
         // arrival unit: one request = `batch` queries
-        let n_requests = (self.opts.queries + batch - 1) / batch;
+        let n_requests = self.opts.queries.div_ceil(batch);
         let req_rate = offered_qps / batch as f64;
         let n_stages = self.pipeline.n_stages();
         let last_stage = n_stages - 1;
@@ -578,7 +578,7 @@ impl<'a> Simulator<'a> {
         let ipc = &self.cluster.ipc;
         let batch = self.deployment.batch.max(1) as usize;
         // arrival unit: one request = `batch` queries
-        let n_requests = (self.opts.queries + batch - 1) / batch;
+        let n_requests = self.opts.queries.div_ceil(batch);
         let req_rate = offered_qps / batch as f64;
 
         struct RefInstance {

@@ -393,6 +393,43 @@ impl TenantTrace {
         TenantTrace { events }
     }
 
+    /// A small repeated-configuration admission trace: one long-lived
+    /// constant-rate resident plus arrive/shrink/depart cycles of an
+    /// identical second tenant. This is the canonical workload for the
+    /// memoized control loop — the same configurations recur, which is
+    /// exactly what the planner solve cache and the replay's interval
+    /// dedup exploit (diurnal traffic looks like this). Shared by the
+    /// golden suite (`tests/control_loop_cache.rs`) and
+    /// `benches/bench_admission.rs` so the benched workload is the
+    /// golden-gated one.
+    pub fn repeated_cycle() -> TenantTrace {
+        let mk = |t_s: f64, tenant: u64, kind: TraceEventKind| TenantTraceEvent {
+            t_s,
+            tenant,
+            kind,
+        };
+        let arrive = |pipeline: &str, qps: f64| TraceEventKind::Arrive {
+            pipeline: pipeline.into(),
+            name: None,
+            arrivals: ArrivalProcess::constant(qps),
+            plan_qps: qps,
+        };
+        TenantTrace {
+            events: vec![
+                mk(0.0, 0, arrive("img-to-text", 100.0)),
+                mk(10.0, 1, arrive("text-to-text", 70.0)),
+                mk(20.0, 1, TraceEventKind::Depart),
+                mk(30.0, 2, arrive("text-to-text", 70.0)),
+                mk(40.0, 2, TraceEventKind::Shrink { target_qps: 40.0 }),
+                mk(50.0, 2, TraceEventKind::Depart),
+                mk(60.0, 3, arrive("text-to-text", 70.0)),
+                mk(70.0, 3, TraceEventKind::Depart),
+                mk(80.0, 4, arrive("text-to-text", 70.0)),
+                mk(90.0, 4, TraceEventKind::Depart),
+            ],
+        }
+    }
+
     /// The canonical event order: time, then capacity-freeing events
     /// first at equal times (departures, then shrinks, then arrivals),
     /// then tenant id — a total, stable order shared with

@@ -166,6 +166,69 @@ impl JsonReport {
     pub fn write(&self, path: &Path, note: &str) -> std::io::Result<()> {
         std::fs::write(path, self.render(note))
     }
+
+    /// Write the report to `path`, preserving any benches/derived
+    /// entries an existing report at that path carries which this one
+    /// does not redefine. Multiple bench binaries (`bench_sim`,
+    /// `bench_admission`) contribute sections to one `BENCH_sim.json`
+    /// this way instead of clobbering each other; retained entries keep
+    /// their values exactly (nulls round-trip as nulls).
+    pub fn merge_write(&self, path: &Path, note: &str) -> std::io::Result<()> {
+        let mut merged = self.clone();
+        if let Ok(text) = std::fs::read_to_string(path) {
+            if let Ok(doc) = crate::util::Json::parse(&text) {
+                merged.absorb_existing(&doc);
+            }
+        }
+        std::fs::write(path, merged.render(note))
+    }
+
+    /// Prepend entries from a previously written report that this one
+    /// does not redefine (retained entries come first so stable section
+    /// order is kept run over run).
+    fn absorb_existing(&mut self, doc: &crate::util::Json) {
+        use crate::util::Json;
+        let num = |v: Option<&Json>| v.and_then(Json::as_f64).unwrap_or(f64::NAN);
+        if let Some(benches) = doc.get("benches").and_then(Json::as_obj) {
+            let have: std::collections::HashSet<String> =
+                self.entries.iter().map(|(r, _)| r.name.clone()).collect();
+            let mut retained: Vec<(BenchResult, Vec<(String, f64)>)> = Vec::new();
+            for (name, entry) in benches {
+                if have.contains(name) {
+                    continue;
+                }
+                let Some(obj) = entry.as_obj() else { continue };
+                let result = BenchResult {
+                    name: name.clone(),
+                    iters: num(obj.get("iters")).max(0.0) as usize,
+                    mean_s: num(obj.get("mean_s")),
+                    median_s: num(obj.get("median_s")),
+                    min_s: num(obj.get("min_s")),
+                };
+                let extras: Vec<(String, f64)> = obj
+                    .iter()
+                    .filter(|(k, _)| {
+                        !matches!(k.as_str(), "median_s" | "mean_s" | "min_s" | "iters")
+                    })
+                    .map(|(k, v)| (k.clone(), v.as_f64().unwrap_or(f64::NAN)))
+                    .collect();
+                retained.push((result, extras));
+            }
+            retained.append(&mut self.entries);
+            self.entries = retained;
+        }
+        if let Some(derived) = doc.get("derived").and_then(Json::as_obj) {
+            let have: std::collections::HashSet<String> =
+                self.derived.iter().map(|(k, _)| k.clone()).collect();
+            let mut retained: Vec<(String, f64)> = derived
+                .iter()
+                .filter(|(k, _)| !have.contains(k.as_str()))
+                .map(|(k, v)| (k.clone(), v.as_f64().unwrap_or(f64::NAN)))
+                .collect();
+            retained.append(&mut self.derived);
+            self.derived = retained;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -185,6 +248,67 @@ mod tests {
         assert!(humanize(2e-3).ends_with(" ms"));
         assert!(humanize(2e-6).ends_with(" µs"));
         assert!(humanize(2e-9).ends_with(" ns"));
+    }
+
+    #[test]
+    fn merge_preserves_foreign_entries_and_overrides_own() {
+        // first binary writes sim entries...
+        let mut sim = JsonReport::new();
+        sim.add_with(
+            &BenchResult {
+                name: "sim/a".into(),
+                iters: 10,
+                mean_s: 0.02,
+                median_s: 0.01,
+                min_s: 0.005,
+            },
+            &[("sim_queries_per_s", 1000.0)],
+        );
+        sim.derived("engine_speedup", 3.0);
+        let existing = crate::util::Json::parse(&sim.render("sim run")).unwrap();
+        // ...the second binary absorbs them and adds its own sections
+        let mut adm = JsonReport::new();
+        adm.add_with(
+            &BenchResult {
+                name: "admission/replay".into(),
+                iters: 5,
+                mean_s: 0.2,
+                median_s: 0.1,
+                min_s: 0.05,
+            },
+            &[("replay_events_per_s", 80.0)],
+        );
+        adm.derived("control_loop_speedup", 2.5);
+        adm.absorb_existing(&existing);
+        let merged = crate::util::Json::parse(&adm.render("merged")).unwrap();
+        let benches = merged.get("benches").unwrap();
+        assert_eq!(
+            benches.get("sim/a").unwrap().get_f64("sim_queries_per_s"),
+            Some(1000.0)
+        );
+        assert_eq!(
+            benches
+                .get("admission/replay")
+                .unwrap()
+                .get_f64("replay_events_per_s"),
+            Some(80.0)
+        );
+        let derived = merged.get("derived").unwrap();
+        assert_eq!(derived.get_f64("engine_speedup"), Some(3.0));
+        assert_eq!(derived.get_f64("control_loop_speedup"), Some(2.5));
+        // null placeholders round-trip as nulls, not as numbers
+        let placeholder = crate::util::Json::parse(
+            r#"{"benches": {"old/null": {"median_s": null, "mean_s": null, "min_s": null, "iters": 0}}, "derived": {"d": null}}"#,
+        )
+        .unwrap();
+        let mut rep = JsonReport::new();
+        rep.absorb_existing(&placeholder);
+        let out = crate::util::Json::parse(&rep.render("x")).unwrap();
+        assert_eq!(
+            out.get("benches").unwrap().get("old/null").unwrap().get("median_s"),
+            Some(&crate::util::Json::Null)
+        );
+        assert_eq!(out.get("derived").unwrap().get("d"), Some(&crate::util::Json::Null));
     }
 
     #[test]
