@@ -507,7 +507,7 @@ impl AdmissionController {
     /// Test-only: install a resident with a hand-built plan, bypassing
     /// the planner, so re-packing scenarios are exactly reproducible.
     #[cfg(test)]
-    fn insert_resident(
+    pub(crate) fn insert_resident(
         &mut self,
         name: &str,
         pipeline: &Pipeline,
@@ -787,7 +787,7 @@ impl Default for ReplayConfig {
 /// interval simulation reads except the seed (assigned separately by
 /// first occurrence) and the cluster (fixed per replay). Tenant names
 /// and the interval start time are display-only and excluded.
-fn interval_fingerprint(
+pub(crate) fn interval_fingerprint(
     tenants: &[(String, Pipeline, Deployment, ArrivalProcess)],
     queries: usize,
 ) -> String {
@@ -846,6 +846,47 @@ pub struct ReplayReport {
     pub intervals_simulated: usize,
     /// Planner solve-cache counters of the replay's controller.
     pub solve_cache: CacheStats,
+}
+
+impl ReplayReport {
+    /// Everything a replay decides or measures, flattened to exact bits
+    /// — the golden suites compare replays with `Vec<String>` equality
+    /// on this. Cache counters and dedup bookkeeping are deliberately
+    /// excluded (they differ between the cached and uncached paths by
+    /// design).
+    pub fn fingerprint(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for e in &self.events {
+            out.push(format!(
+                "event t={} tenant={} {} -> {} residents={} gpus={} usage={}",
+                e.t_s.to_bits(),
+                e.tenant,
+                e.desc,
+                e.decision,
+                e.residents,
+                e.gpus_in_use,
+                e.usage.to_bits()
+            ));
+        }
+        for iv in &self.intervals {
+            out.push(format!(
+                "interval t={} tenants={:?} p99={:?} qos={:?}",
+                iv.t_start_s.to_bits(),
+                iv.tenants,
+                iv.p99_s.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
+                iv.qos_met
+            ));
+        }
+        out.push(format!(
+            "summary admitted={} rejected={} repacks={} peak={} mean_gpus={}",
+            self.admitted,
+            self.rejected,
+            self.repacks_applied,
+            self.peak_residents,
+            self.mean_gpus_in_use.to_bits()
+        ));
+        out
+    }
 }
 
 /// Drive an [`AdmissionController`] over a [`TenantTrace`] and validate

@@ -1,0 +1,924 @@
+//! Sharded cluster-of-cells scale-out: one flat datacenter cluster is
+//! split into N **cells**, each owning its own [`AdmissionController`]
+//! (and therefore its own `ClusterState` and planner `SolveCache`),
+//! fronted by a [`CellRouter`] that places arriving tenants load-aware
+//! and keeps the fleet defragmented with cross-cell migrations.
+//!
+//! This is the two-level master/local shape MISO and ParvaGPU argue
+//! cloud-scale spatial GPU sharing needs: every planning decision runs
+//! against a cell of `G/N` GPUs instead of the whole fleet, so the
+//! per-decision cost (QoS folds are `O(residents² × GPUs)`, re-pack
+//! passes `O(residents × GPUs)`, request fingerprints `O(GPUs)`)
+//! shrinks with the cell size — the scale-out win `bench_cells`
+//! measures in replay events/s.
+//!
+//! * **Routing** ([`CellRouter::try_admit`]): cells are tried
+//!   least-utilized first (Σ quota / cell GPUs, ties broken by cell
+//!   index — fully deterministic), and a rejection falls through to the
+//!   next-best cell; the arrival is rejected only when every cell turns
+//!   it away, reporting the first-choice cell's reason.
+//! * **Migration** ([`CellRouter::depart`]): when a departure's local
+//!   re-pack reclaims whole GPUs, the router tries to back-fill the
+//!   freed capacity with a *small* tenant (Σ N·p ≤
+//!   [`CellsConfig::migrate_max_quota`]) from the most-loaded donor
+//!   cell — but only a tenant whose removal immediately frees a whole
+//!   GPU in its donor, and at most
+//!   [`CellsConfig::migrations_per_repack`] moves per departure. Both
+//!   conditions are hysteresis: migrations happen exactly when they
+//!   reclaim devices on both ends, never to chase marginal balance.
+//! * **Sharded replay** ([`replay_trace_cells`]): admission decisions
+//!   stay sequential in global event order (phase 1), but the
+//!   between-event interval simulations shard by cell — cells share
+//!   nothing, so each cell's intervals dedup and simulate independently
+//!   against the cell's own `ClusterSpec`, fanned as a two-level
+//!   cell × interval map under [`par::split_budget`]. With `cells = 1`
+//!   the merged report is **bit-identical** to the flat
+//!   [`replay_trace`](super::admission::replay_trace) (the golden suite
+//!   pins it), and any cell count is thread-count-deterministic.
+
+use std::collections::HashMap;
+
+use crate::config::ClusterSpec;
+use crate::coordinator::admission::{
+    self, AdmissionConfig, AdmissionController, IntervalReport, RejectReason, RepackPlan,
+    ReplayConfig, ReplayEvent, ReplayReport, ShrinkReport,
+};
+use crate::deploy::gpus_in_use;
+use crate::planner::CacheStats;
+use crate::sim::{ClusterSim, Deployment, SimOptions, Simulator, TenantSpec};
+use crate::suite::workload::{ArrivalProcess, TenantTrace, TraceEventKind};
+use crate::suite::Pipeline;
+use crate::util::{par, rng};
+
+/// Router configuration: cell count plus the per-cell admission knobs.
+#[derive(Debug, Clone)]
+pub struct CellsConfig {
+    /// Number of cells the cluster splits into (1 = the flat path).
+    pub cells: usize,
+    /// Per-cell controller configuration (every cell plans with the
+    /// same seed; cells are independent, so this never correlates
+    /// their decisions).
+    pub admission: AdmissionConfig,
+    /// Largest footprint (Σ N·p over stages) a tenant may have and
+    /// still be migration-eligible — only *small* tenants move.
+    pub migrate_max_quota: f64,
+    /// Cross-cell migration attempts per applied departure re-pack
+    /// (churn hysteresis; 0 disables migration entirely).
+    pub migrations_per_repack: usize,
+}
+
+impl Default for CellsConfig {
+    fn default() -> Self {
+        CellsConfig {
+            cells: 1,
+            admission: AdmissionConfig::default(),
+            migrate_max_quota: 1.0,
+            migrations_per_repack: 1,
+        }
+    }
+}
+
+/// Split `spec` into `cells` disjoint sub-clusters, distributing GPUs
+/// as evenly as possible (the first `num_gpus mod cells` cells get one
+/// extra). Errors when the split is degenerate.
+pub fn split_cluster(spec: &ClusterSpec, cells: usize) -> Result<Vec<ClusterSpec>, String> {
+    if cells == 0 {
+        return Err("cells must be >= 1".into());
+    }
+    if cells > spec.num_gpus {
+        return Err(format!(
+            "cannot split {} GPUs into {} cells (each cell needs >= 1 GPU)",
+            spec.num_gpus, cells
+        ));
+    }
+    let base = spec.num_gpus / cells;
+    let extra = spec.num_gpus % cells;
+    Ok((0..cells)
+        .map(|i| ClusterSpec {
+            num_gpus: base + usize::from(i < extra),
+            ..spec.clone()
+        })
+        .collect())
+}
+
+/// One cross-cell move the router performed during a departure re-pack.
+#[derive(Debug, Clone)]
+pub struct CellMigration {
+    pub tenant: String,
+    pub from_cell: usize,
+    pub to_cell: usize,
+    /// Whether the donor cell's own post-departure re-pack applied.
+    pub donor_repack_applied: bool,
+}
+
+/// Outcome of [`CellRouter::depart`]: the owning cell's re-pack plan
+/// plus any cross-cell migrations it triggered.
+#[derive(Debug, Clone)]
+pub struct DepartOutcome {
+    /// Cell the departing tenant lived in.
+    pub cell: usize,
+    pub plan: RepackPlan,
+    pub migrations: Vec<CellMigration>,
+}
+
+/// router resident id -> (cell, cell-local resident id)
+#[derive(Debug, Clone, Copy)]
+struct Assignment {
+    router_id: u64,
+    cell: usize,
+    local_id: u64,
+}
+
+/// The top-level router fronting N per-cell [`AdmissionController`]s.
+/// All routing is deterministic: identical call sequences produce
+/// identical placements, migrations, and counters.
+pub struct CellRouter {
+    cfg: CellsConfig,
+    specs: Vec<ClusterSpec>,
+    cells: Vec<AdmissionController>,
+    assignments: Vec<Assignment>,
+    next_id: u64,
+    admitted: usize,
+    rejected: usize,
+    migrations: usize,
+}
+
+impl CellRouter {
+    pub fn new(cluster: &ClusterSpec, cfg: CellsConfig) -> Result<CellRouter, String> {
+        let specs = split_cluster(cluster, cfg.cells)?;
+        let cells = specs
+            .iter()
+            .map(|s| AdmissionController::new(s.clone(), cfg.admission.clone()))
+            .collect();
+        Ok(CellRouter {
+            cfg,
+            specs,
+            cells,
+            assignments: Vec::new(),
+            next_id: 0,
+            admitted: 0,
+            rejected: 0,
+            migrations: 0,
+        })
+    }
+
+    pub fn num_cells(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn cell(&self, c: usize) -> &AdmissionController {
+        &self.cells[c]
+    }
+
+    pub fn cell_spec(&self, c: usize) -> &ClusterSpec {
+        &self.specs[c]
+    }
+
+    /// Arrivals the router admitted (each counted once, whichever cell
+    /// took it; migrations are not arrivals and do not count).
+    pub fn admitted(&self) -> usize {
+        self.admitted
+    }
+
+    /// Arrivals every cell turned away (counted once per arrival; the
+    /// per-cell controllers additionally count each *attempt* they saw).
+    pub fn rejected(&self) -> usize {
+        self.rejected
+    }
+
+    /// Cross-cell migrations performed so far.
+    pub fn migrations(&self) -> usize {
+        self.migrations
+    }
+
+    pub fn residents_total(&self) -> usize {
+        self.cells.iter().map(|c| c.residents().len()).sum()
+    }
+
+    /// Whole GPUs occupied fleet-wide (cells own disjoint devices, so
+    /// the per-cell counts just add).
+    pub fn gpus_in_use(&self) -> usize {
+        self.cells.iter().map(|c| c.gpus_in_use()).sum()
+    }
+
+    /// Fleet-wide Σ quota over all residents.
+    pub fn total_usage(&self) -> f64 {
+        self.cells.iter().map(|c| c.total_usage()).sum()
+    }
+
+    /// Summed planner-cache counters across every cell.
+    pub fn cache_stats(&self) -> CacheStats {
+        merge_cache_stats(self.cells.iter().map(|c| c.cache_stats()))
+    }
+
+    fn utilization(&self, c: usize) -> f64 {
+        self.cells[c].total_usage() / self.specs[c].num_gpus as f64
+    }
+
+    /// Cells in placement-preference order: least utilized first, ties
+    /// broken by cell index (utilizations are exact arithmetic on
+    /// deterministic quotas, so this order is reproducible).
+    fn placement_order(&self) -> Vec<usize> {
+        let mut order: Vec<usize> = (0..self.cells.len()).collect();
+        order.sort_by(|&a, &b| {
+            self.utilization(a)
+                .partial_cmp(&self.utilization(b))
+                .expect("utilization is finite")
+                .then(a.cmp(&b))
+        });
+        order
+    }
+
+    /// Route an arrival: try cells least-utilized first, falling
+    /// through to the next-best cell on rejection. Returns the router
+    /// resident id and the cell that took the tenant; when every cell
+    /// rejects, the *first-choice* cell's reason is reported.
+    pub fn try_admit(
+        &mut self,
+        name: &str,
+        pipeline: &Pipeline,
+        arrivals: ArrivalProcess,
+        plan_qps: f64,
+    ) -> Result<(u64, usize), RejectReason> {
+        let mut first_reason: Option<RejectReason> = None;
+        for c in self.placement_order() {
+            match self.cells[c].try_admit(name, pipeline, arrivals.clone(), plan_qps) {
+                Ok(local_id) => {
+                    let router_id = self.next_id;
+                    self.next_id += 1;
+                    self.admitted += 1;
+                    self.assignments.push(Assignment { router_id, cell: c, local_id });
+                    return Ok((router_id, c));
+                }
+                Err(reason) => {
+                    if first_reason.is_none() {
+                        first_reason = Some(reason);
+                    }
+                }
+            }
+        }
+        self.rejected += 1;
+        Err(first_reason.expect("router has at least one cell"))
+    }
+
+    /// Shrink a resident in place (the owning cell re-plans it).
+    pub fn shrink_resident(&mut self, router_id: u64, target_qps: f64) -> Option<ShrinkReport> {
+        let a = *self.assignments.iter().find(|a| a.router_id == router_id)?;
+        self.cells[a.cell].shrink_resident(a.local_id, target_qps)
+    }
+
+    /// Remove a resident; the owning cell re-packs, and when that
+    /// re-pack reclaims whole GPUs the router back-fills the freed
+    /// capacity by migrating small tenants in from the most-loaded
+    /// donor cell (see the module docs for the hysteresis conditions).
+    pub fn depart(&mut self, router_id: u64) -> Option<DepartOutcome> {
+        let pos = self.assignments.iter().position(|a| a.router_id == router_id)?;
+        let a = self.assignments.remove(pos);
+        let plan = self.cells[a.cell].depart(a.local_id)?;
+        let mut migrations = Vec::new();
+        if plan.applied && plan.gpus_after < plan.gpus_before && self.cells.len() > 1 {
+            for _ in 0..self.cfg.migrations_per_repack {
+                match self.try_migrate_into(a.cell) {
+                    Some(m) => migrations.push(m),
+                    None => break,
+                }
+            }
+        }
+        Some(DepartOutcome { cell: a.cell, plan, migrations })
+    }
+
+    /// One migration attempt into `target`: pick the smallest eligible
+    /// tenant of the most-loaded donor cell (a tenant is eligible when
+    /// its footprint is ≤ `migrate_max_quota` *and* removing it frees a
+    /// whole GPU in the donor), admit it into `target`, then depart it
+    /// from the donor. At most one candidate is tried — a rejection by
+    /// `target` ends the pass (churn hysteresis).
+    fn try_migrate_into(&mut self, target: usize) -> Option<CellMigration> {
+        let mut donors: Vec<usize> = (0..self.cells.len())
+            .filter(|&d| d != target && !self.cells[d].residents().is_empty())
+            .collect();
+        donors.sort_by(|&x, &y| {
+            self.utilization(y)
+                .partial_cmp(&self.utilization(x))
+                .expect("utilization is finite")
+                .then(x.cmp(&y))
+        });
+        for d in donors {
+            let donor_gpus = self.cells[d].gpus_in_use();
+            // smallest eligible resident: (quota, local id) minimum
+            let mut best: Option<(f64, u64)> = None;
+            for r in self.cells[d].residents() {
+                let quota = r.allocation.total_quota();
+                if quota > self.cfg.migrate_max_quota + 1e-9 {
+                    continue;
+                }
+                let without = gpus_in_use(
+                    self.cells[d]
+                        .residents()
+                        .iter()
+                        .filter(|x| x.id != r.id)
+                        .map(|x| &x.deployment),
+                );
+                if without >= donor_gpus {
+                    continue; // removing it frees nothing: not worth churn
+                }
+                let better = match best {
+                    None => true,
+                    Some((q, id)) => quota < q || (quota == q && r.id < id),
+                };
+                if better {
+                    best = Some((quota, r.id));
+                }
+            }
+            let Some((_, local_id)) = best else { continue };
+            let r = self.cells[d]
+                .residents()
+                .iter()
+                .find(|r| r.id == local_id)
+                .expect("candidate resident exists");
+            let (name, pipeline, arrivals, plan_qps) =
+                (r.name.clone(), r.pipeline.clone(), r.arrivals.clone(), r.plan_qps);
+            return match self.cells[target].try_admit(&name, &pipeline, arrivals, plan_qps) {
+                Ok(new_local) => {
+                    let donor_plan =
+                        self.cells[d].depart(local_id).expect("donor resident departs");
+                    if let Some(a) = self
+                        .assignments
+                        .iter_mut()
+                        .find(|a| a.cell == d && a.local_id == local_id)
+                    {
+                        a.cell = target;
+                        a.local_id = new_local;
+                    }
+                    self.migrations += 1;
+                    Some(CellMigration {
+                        tenant: name,
+                        from_cell: d,
+                        to_cell: target,
+                        donor_repack_applied: donor_plan.applied,
+                    })
+                }
+                Err(_) => None,
+            };
+        }
+        None
+    }
+
+    /// Test-only: install a hand-built resident directly into `cell`,
+    /// registering it with the router (mirrors
+    /// `AdmissionController::insert_resident`).
+    #[cfg(test)]
+    fn insert_for_test(
+        &mut self,
+        cell: usize,
+        name: &str,
+        pipeline: &Pipeline,
+        allocation: crate::deploy::Allocation,
+        deployment: Deployment,
+        plan_qps: f64,
+    ) -> u64 {
+        let local_id =
+            self.cells[cell].insert_resident(name, pipeline, allocation, deployment, plan_qps);
+        let router_id = self.next_id;
+        self.next_id += 1;
+        self.assignments.push(Assignment { router_id, cell, local_id });
+        router_id
+    }
+}
+
+fn merge_cache_stats(stats: impl Iterator<Item = CacheStats>) -> CacheStats {
+    let mut out = CacheStats::default();
+    for s in stats {
+        out.hits += s.hits;
+        out.misses += s.misses;
+        out.evictions += s.evictions;
+        out.entries += s.entries;
+    }
+    out
+}
+
+/// Sharded-replay configuration — [`ReplayConfig`]'s knobs with a
+/// router configuration in place of the single controller's.
+#[derive(Debug, Clone)]
+pub struct CellsReplayConfig {
+    pub router: CellsConfig,
+    /// Queries per tenant in each between-event validation simulation.
+    pub queries: usize,
+    /// Worker budget for the two-level cell × interval fan (0 = default
+    /// pool). Results are identical for any value (golden-pinned).
+    pub threads: usize,
+    /// Per-cell content-addressed interval dedup (same contract as
+    /// [`ReplayConfig::dedup`]: bit-identical on or off).
+    pub dedup: bool,
+}
+
+impl Default for CellsReplayConfig {
+    fn default() -> Self {
+        CellsReplayConfig {
+            router: CellsConfig::default(),
+            queries: 1_000,
+            threads: 0,
+            dedup: true,
+        }
+    }
+}
+
+impl CellsReplayConfig {
+    /// Lift a flat [`ReplayConfig`] to `cells` cells (the `camelot
+    /// admit --cells N` path).
+    pub fn from_replay(cells: usize, replay: &ReplayConfig) -> CellsReplayConfig {
+        CellsReplayConfig {
+            router: CellsConfig {
+                cells,
+                admission: replay.admission.clone(),
+                ..CellsConfig::default()
+            },
+            queries: replay.queries,
+            threads: replay.threads,
+            dedup: replay.dedup,
+        }
+    }
+}
+
+/// Per-cell slice of a sharded replay.
+#[derive(Debug, Clone)]
+pub struct CellReplayStats {
+    pub cell: usize,
+    /// GPUs this cell owns.
+    pub gpus: usize,
+    /// Cell-local admissions (router placements + migrations in).
+    pub admitted: usize,
+    /// Cell-local rejected attempts (router fall-through retries and
+    /// failed migrations included — attempts, not arrivals).
+    pub rejected: usize,
+    pub peak_residents: usize,
+    /// Between-event intervals this cell contributed.
+    pub intervals: usize,
+    /// Distinct interval simulations actually run (≤ `intervals`).
+    pub intervals_simulated: usize,
+    pub solve_cache: CacheStats,
+}
+
+/// Outcome of a cell-sharded replay: the merged fleet-level report
+/// (bit-identical to the flat replay when `cells = 1`) plus the
+/// per-cell breakdown the aggregate hides.
+#[derive(Debug, Clone)]
+pub struct CellsReplayReport {
+    pub cells: usize,
+    /// Fleet-level report: events carry fleet totals, intervals are the
+    /// per-cell interval measurements in (event, cell) order, counters
+    /// are router-level, `solve_cache` is the per-cell sum.
+    pub merged: ReplayReport,
+    pub per_cell: Vec<CellReplayStats>,
+    /// Cross-cell migrations performed.
+    pub migrations: usize,
+    /// Which cell each admitted trace tenant was routed to, in
+    /// admission order — the router-determinism contract pins this
+    /// across thread counts.
+    pub tenant_cells: Vec<(u64, usize)>,
+}
+
+/// Drive a [`CellRouter`] over a [`TenantTrace`] and validate every
+/// between-event interval per cell.
+///
+/// Phase 1 (sequential): routing + admission decisions in global event
+/// order — placement depends only on router state, never on simulation
+/// results or thread counts. Phase 2 (parallel, sharded): cells share
+/// nothing, so each cell's intervals dedup (per-cell content
+/// fingerprints) and simulate independently against the cell's own
+/// `ClusterSpec`, seeded `mix_seed(mix_seed(seed, cell), first
+/// cell-local snapshot index with that content)` — for cell 0 this
+/// collapses to the flat replay's seeds (`mix_seed(s, 0) = s`), which
+/// is what makes `cells = 1` bit-identical to
+/// [`replay_trace`](admission::replay_trace). The fan is two-level
+/// (cells × intervals) under [`par::split_budget`], and every seed is
+/// assigned before the fan, so any thread count gives identical output.
+pub fn replay_trace_cells(
+    cluster: &ClusterSpec,
+    trace: &TenantTrace,
+    cfg: &CellsReplayConfig,
+) -> Result<CellsReplayReport, String> {
+    let mut router = CellRouter::new(cluster, cfg.router.clone())?;
+    let n_cells = router.num_cells();
+    // trace tenant id -> router resident id
+    let mut resident_ids: Vec<(u64, u64)> = Vec::new();
+    let mut events = Vec::with_capacity(trace.events.len());
+    let mut peak_residents = 0usize;
+    let mut repacks_applied = 0usize;
+    let mut tenant_cells: Vec<(u64, usize)> = Vec::new();
+    type Snapshot = (f64, Vec<(String, Pipeline, Deployment, ArrivalProcess)>);
+    let mut cell_snapshots: Vec<Vec<Snapshot>> = vec![Vec::new(); n_cells];
+    // (cell, cell-local snapshot index) in event-major, cell-minor
+    // order — the merged interval order (= the flat order at 1 cell)
+    let mut snapshot_order: Vec<(usize, usize)> = Vec::new();
+    let mut cell_peaks = vec![0usize; n_cells];
+
+    for e in &trace.events {
+        let (desc, decision) = match &e.kind {
+            TraceEventKind::Arrive { pipeline, name, arrivals, plan_qps } => {
+                let desc = format!("arrive {pipeline} @ {plan_qps:.0} qps");
+                let p = crate::suite::pipeline_by_name(pipeline)
+                    .ok_or_else(|| format!("trace names unknown pipeline '{pipeline}'"))?;
+                let name = name
+                    .clone()
+                    .unwrap_or_else(|| format!("{pipeline}#{}", e.tenant));
+                let decision =
+                    match router.try_admit(&name, &p, arrivals.clone(), *plan_qps) {
+                        Ok((id, cell)) => {
+                            resident_ids.push((e.tenant, id));
+                            tenant_cells.push((e.tenant, cell));
+                            "admitted".to_string()
+                        }
+                        Err(reason) => format!("rejected: {reason}"),
+                    };
+                (desc, decision)
+            }
+            TraceEventKind::Shrink { target_qps } => {
+                let desc = format!("shrink to {target_qps:.0} qps");
+                let decision = match resident_ids.iter().find(|(t, _)| *t == e.tenant) {
+                    Some(&(_, id)) => router
+                        .shrink_resident(id, *target_qps)
+                        .expect("resident shrinks")
+                        .summary(),
+                    None => "no-op (was not admitted)".to_string(),
+                };
+                (desc, decision)
+            }
+            TraceEventKind::Depart => {
+                let desc = "depart".to_string();
+                let decision = match resident_ids.iter().position(|(t, _)| *t == e.tenant)
+                {
+                    Some(pos) => {
+                        let (_, id) = resident_ids.remove(pos);
+                        let out = router.depart(id).expect("resident departs");
+                        if out.plan.applied {
+                            repacks_applied += 1;
+                        }
+                        let mut decision = out.plan.summary();
+                        for m in &out.migrations {
+                            if m.donor_repack_applied {
+                                repacks_applied += 1;
+                            }
+                            decision.push_str(&format!(
+                                " | migrate '{}' cell {}->{}",
+                                m.tenant, m.from_cell, m.to_cell
+                            ));
+                        }
+                        decision
+                    }
+                    None => "no-op (was not admitted)".to_string(),
+                };
+                (desc, decision)
+            }
+        };
+        peak_residents = peak_residents.max(router.residents_total());
+        events.push(ReplayEvent {
+            t_s: e.t_s,
+            tenant: e.tenant,
+            desc,
+            decision,
+            residents: router.residents_total(),
+            gpus_in_use: router.gpus_in_use(),
+            usage: router.total_usage(),
+        });
+        for c in 0..n_cells {
+            let residents = router.cell(c).residents();
+            cell_peaks[c] = cell_peaks[c].max(residents.len());
+            if !residents.is_empty() {
+                cell_snapshots[c].push((
+                    e.t_s,
+                    residents
+                        .iter()
+                        .map(|r| {
+                            (
+                                r.name.clone(),
+                                r.pipeline.clone(),
+                                r.deployment.clone(),
+                                r.arrivals.clone(),
+                            )
+                        })
+                        .collect(),
+                ));
+                snapshot_order.push((c, cell_snapshots[c].len() - 1));
+            }
+        }
+    }
+
+    // phase 2: per-cell content-addressed dedup and seed assignment,
+    // sequential (same scheme as the flat replay, per cell), then the
+    // two-level cell × interval fan. Seeds derive from the cell index
+    // and the cell-local first-occurrence snapshot index only, so the
+    // fan split never touches results.
+    let threads = if cfg.threads == 0 { par::max_threads() } else { cfg.threads };
+    let seed = cfg.router.admission.seed;
+    let queries = cfg.queries;
+    struct CellPlan {
+        /// (cell-local snapshot index providing the content, sim seed)
+        jobs: Vec<(usize, u64)>,
+        /// per cell-local snapshot: index of the job measuring it
+        measure_by: Vec<usize>,
+    }
+    let mut cell_plans: Vec<CellPlan> = Vec::with_capacity(n_cells);
+    for (c, snaps) in cell_snapshots.iter().enumerate() {
+        let cell_seed = rng::mix_seed(seed, c as u64);
+        let mut jobs: Vec<(usize, u64)> = Vec::with_capacity(snaps.len());
+        let mut measure_by: Vec<usize> = Vec::with_capacity(snaps.len());
+        let mut seen: HashMap<String, (usize, usize)> = HashMap::new();
+        for (idx, (_, tenants)) in snaps.iter().enumerate() {
+            let key = admission::interval_fingerprint(tenants, queries);
+            match seen.get(&key) {
+                Some(&(_, job)) if cfg.dedup => measure_by.push(job),
+                Some(&(owner, _)) => {
+                    jobs.push((idx, rng::mix_seed(cell_seed, owner as u64)));
+                    measure_by.push(jobs.len() - 1);
+                }
+                None => {
+                    jobs.push((idx, rng::mix_seed(cell_seed, idx as u64)));
+                    let job = jobs.len() - 1;
+                    seen.insert(key, (idx, job));
+                    measure_by.push(job);
+                }
+            }
+        }
+        cell_plans.push(CellPlan { jobs, measure_by });
+    }
+    let intervals_simulated: usize = cell_plans.iter().map(|p| p.jobs.len()).sum();
+
+    let cell_specs: Vec<ClusterSpec> =
+        (0..n_cells).map(|c| router.cell_spec(c).clone()).collect();
+    let (outer, inner) = par::split_budget(threads, n_cells);
+    let cell_ids: Vec<usize> = (0..n_cells).collect();
+    let sims: Vec<Vec<Result<Vec<f64>, String>>> =
+        par::par_map_threads(&cell_ids, outer, |_, &c| {
+            let snaps = &cell_snapshots[c];
+            let cell_cluster = &cell_specs[c];
+            par::par_map_threads(&cell_plans[c].jobs, inner, |_, &(snap_idx, sim_seed)| {
+                let (_, tenants) = &snaps[snap_idx];
+                let opts = SimOptions { seed: sim_seed, queries, ..Default::default() };
+                // degenerate fast path, same contract as the flat replay
+                if let [(_, p, d, ArrivalProcess::Constant { rate_qps })] =
+                    tenants.as_slice()
+                {
+                    let report = Simulator::new(p, cell_cluster, d, opts)
+                        .run(*rate_qps)
+                        .map_err(|e| format!("cell {c} interval {snap_idx}: {e}"))?;
+                    return Ok(vec![report.p99()]);
+                }
+                let specs: Vec<TenantSpec> = tenants
+                    .iter()
+                    .map(|(_, p, d, a)| TenantSpec {
+                        pipeline: p,
+                        deployment: d,
+                        arrivals: a.clone(),
+                    })
+                    .collect();
+                let reports = ClusterSim::new(cell_cluster, specs, opts)
+                    .run()
+                    .map_err(|e| format!("cell {c} interval {snap_idx}: {e}"))?;
+                Ok(reports.iter().map(|r| r.p99()).collect())
+            })
+        });
+    let mut p99_tables: Vec<Vec<Vec<f64>>> = Vec::with_capacity(n_cells);
+    for cell_sims in sims {
+        p99_tables.push(cell_sims.into_iter().collect::<Result<Vec<_>, _>>()?);
+    }
+
+    let intervals: Vec<IntervalReport> = snapshot_order
+        .iter()
+        .map(|&(c, local_idx)| {
+            let (t_start, tenants) = &cell_snapshots[c][local_idx];
+            let job = cell_plans[c].measure_by[local_idx];
+            let p99_s: Vec<f64> = p99_tables[c][job].clone();
+            let qos_met: Vec<bool> = tenants
+                .iter()
+                .zip(&p99_s)
+                .map(|((_, p, _, _), &x)| x <= p.qos_target_s)
+                .collect();
+            IntervalReport {
+                t_start_s: *t_start,
+                tenants: tenants.iter().map(|(n, _, _, _)| n.clone()).collect(),
+                p99_s,
+                qos_met,
+            }
+        })
+        .collect();
+
+    let with_gpus: Vec<usize> = events
+        .iter()
+        .filter(|e| e.residents > 0)
+        .map(|e| e.gpus_in_use)
+        .collect();
+    let mean_gpus_in_use = if with_gpus.is_empty() {
+        0.0
+    } else {
+        with_gpus.iter().sum::<usize>() as f64 / with_gpus.len() as f64
+    };
+    let per_cell: Vec<CellReplayStats> = (0..n_cells)
+        .map(|c| CellReplayStats {
+            cell: c,
+            gpus: cell_specs[c].num_gpus,
+            admitted: router.cell(c).admitted(),
+            rejected: router.cell(c).rejected(),
+            peak_residents: cell_peaks[c],
+            intervals: cell_snapshots[c].len(),
+            intervals_simulated: cell_plans[c].jobs.len(),
+            solve_cache: router.cell(c).cache_stats(),
+        })
+        .collect();
+    Ok(CellsReplayReport {
+        cells: n_cells,
+        merged: ReplayReport {
+            admitted: router.admitted(),
+            rejected: router.rejected(),
+            repacks_applied,
+            peak_residents,
+            mean_gpus_in_use,
+            events,
+            intervals,
+            intervals_simulated,
+            solve_cache: router.cache_stats(),
+        },
+        per_cell,
+        migrations: router.migrations(),
+        tenant_cells,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::CommMode;
+    use crate::deploy::Allocation;
+    use crate::sim::InstancePlacement;
+    use crate::suite::real;
+
+    #[test]
+    fn split_cluster_distributes_gpus_evenly() {
+        let spec = ClusterSpec { num_gpus: 10, ..ClusterSpec::two_2080ti() };
+        let cells = split_cluster(&spec, 4).expect("splits");
+        assert_eq!(cells.iter().map(|c| c.num_gpus).collect::<Vec<_>>(), vec![3, 3, 2, 2]);
+        assert_eq!(cells.iter().map(|c| c.num_gpus).sum::<usize>(), 10);
+        // identity split
+        let one = split_cluster(&spec, 1).expect("splits");
+        assert_eq!(one.len(), 1);
+        assert_eq!(one[0].num_gpus, 10);
+        // degenerate splits error
+        assert!(split_cluster(&spec, 0).is_err());
+        assert!(split_cluster(&spec, 11).is_err());
+    }
+
+    #[test]
+    fn router_places_least_utilized_with_index_tiebreak() {
+        let cluster = ClusterSpec { num_gpus: 4, ..ClusterSpec::two_2080ti() };
+        let cfg = CellsConfig { cells: 2, ..CellsConfig::default() };
+        let mut router = CellRouter::new(&cluster, cfg).expect("router");
+        assert_eq!(router.num_cells(), 2);
+        // both cells empty: the tie must break to cell 0
+        assert_eq!(router.placement_order(), vec![0, 1]);
+        let p = real::text_to_text();
+        let (_, cell_a) = router
+            .try_admit("a", &p, ArrivalProcess::constant(60.0), 60.0)
+            .expect("empty fleet admits");
+        assert_eq!(cell_a, 0);
+        // cell 0 now carries load: the next arrival must prefer cell 1
+        assert_eq!(router.placement_order(), vec![1, 0]);
+        let (_, cell_b) = router
+            .try_admit("b", &p, ArrivalProcess::constant(60.0), 60.0)
+            .expect("half-empty fleet admits");
+        assert_eq!(cell_b, 1);
+        assert_eq!(router.admitted(), 2);
+        assert_eq!(router.residents_total(), 2);
+        assert_eq!(router.gpus_in_use(), router.cell(0).gpus_in_use() + router.cell(1).gpus_in_use());
+    }
+
+    /// Two fragmented residents in cell 0 (the canonical re-pack
+    /// setup) and one small lone tenant in cell 1, installed directly
+    /// so the scenario does not depend on planner heuristics.
+    fn fragmented_fleet(cfg: CellsConfig) -> (CellRouter, u64 /* departer */) {
+        let cluster = ClusterSpec { num_gpus: 4, ..ClusterSpec::two_2080ti() };
+        let mut router = CellRouter::new(&cluster, cfg).expect("router");
+        let p = real::img_to_text();
+        let split = |q: f64| Deployment {
+            placements: vec![
+                InstancePlacement { stage: 0, gpu: 0, sm_frac: q },
+                InstancePlacement { stage: 1, gpu: 1, sm_frac: q },
+            ],
+            batch: 32,
+            comm: CommMode::GlobalIpc,
+        };
+        router.insert_for_test(
+            0,
+            "survivor",
+            &p,
+            Allocation { instances: vec![1, 1], quotas: vec![0.45, 0.45] },
+            split(0.45),
+            25.0,
+        );
+        let departer = router.insert_for_test(
+            0,
+            "departer",
+            &p,
+            Allocation { instances: vec![1, 1], quotas: vec![0.5, 0.5] },
+            split(0.5),
+            100.0,
+        );
+        // lone small tenant in cell 1: both stages on the cell's GPU 0,
+        // so its removal immediately frees a whole device
+        router.insert_for_test(
+            1,
+            "nomad",
+            &p,
+            Allocation { instances: vec![1, 1], quotas: vec![0.15, 0.15] },
+            Deployment {
+                placements: vec![
+                    InstancePlacement { stage: 0, gpu: 0, sm_frac: 0.15 },
+                    InstancePlacement { stage: 1, gpu: 0, sm_frac: 0.15 },
+                ],
+                batch: 32,
+                comm: CommMode::GlobalIpc,
+            },
+            15.0,
+        );
+        (router, departer)
+    }
+
+    #[test]
+    fn departure_repack_pulls_small_tenant_across_cells() {
+        let cfg = CellsConfig { cells: 2, ..CellsConfig::default() };
+        let (mut router, departer) = fragmented_fleet(cfg);
+        assert_eq!(router.residents_total(), 3);
+        let out = router.depart(departer).expect("resident departs");
+        assert_eq!(out.cell, 0);
+        assert!(out.plan.applied, "{}", out.plan.summary());
+        assert!(out.plan.gpus_after < out.plan.gpus_before);
+        // the reclaimed GPU pulled the lone small tenant out of cell 1
+        assert_eq!(out.migrations.len(), 1, "one migration per re-pack");
+        let m = &out.migrations[0];
+        assert_eq!((m.tenant.as_str(), m.from_cell, m.to_cell), ("nomad", 1, 0));
+        assert_eq!(router.migrations(), 1);
+        assert_eq!(router.residents_total(), 2, "migration conserves residents");
+        assert!(router.cell(1).residents().is_empty(), "donor cell drained");
+        assert!(
+            router.cell(0).residents().iter().any(|r| r.name == "nomad"),
+            "nomad now lives in cell 0"
+        );
+        // the migrated tenant stays addressable through the router
+        let nomad_id = router
+            .assignments
+            .iter()
+            .find(|a| router.cell(a.cell).residents().iter().any(
+                |r| r.id == a.local_id && r.name == "nomad"))
+            .map(|a| a.router_id)
+            .expect("nomad is registered");
+        assert!(router.depart(nomad_id).is_some(), "router id survives migration");
+    }
+
+    #[test]
+    fn migration_hysteresis_skips_large_tenants() {
+        // same fleet, but the nomad's footprint is above the migration
+        // cap: the re-pack applies and nothing moves
+        let cfg = CellsConfig {
+            cells: 2,
+            migrate_max_quota: 0.1,
+            ..CellsConfig::default()
+        };
+        let (mut router, departer) = fragmented_fleet(cfg);
+        let out = router.depart(departer).expect("resident departs");
+        assert!(out.plan.applied, "{}", out.plan.summary());
+        assert!(out.migrations.is_empty(), "0.3 footprint > 0.1 cap: no move");
+        assert_eq!(router.migrations(), 0);
+        assert_eq!(router.cell(1).residents().len(), 1, "nomad stays put");
+    }
+
+    #[test]
+    fn migration_disabled_by_zero_budget() {
+        let cfg = CellsConfig {
+            cells: 2,
+            migrations_per_repack: 0,
+            ..CellsConfig::default()
+        };
+        let (mut router, departer) = fragmented_fleet(cfg);
+        let out = router.depart(departer).expect("resident departs");
+        assert!(out.plan.applied);
+        assert!(out.migrations.is_empty());
+        assert_eq!(router.cell(1).residents().len(), 1);
+    }
+
+    #[test]
+    fn single_cell_router_never_migrates() {
+        let cluster = ClusterSpec::two_2080ti();
+        let cfg = CellsConfig::default();
+        let mut router = CellRouter::new(&cluster, cfg).expect("router");
+        let pa = real::img_to_text();
+        let pb = real::text_to_text();
+        let (a, _) = router
+            .try_admit("a", &pa, ArrivalProcess::constant(100.0), 100.0)
+            .expect("admits");
+        router
+            .try_admit("b", &pb, ArrivalProcess::constant(80.0), 80.0)
+            .expect("admits");
+        let out = router.depart(a).expect("departs");
+        assert!(out.migrations.is_empty(), "one cell has no migration partner");
+        assert_eq!(router.migrations(), 0);
+    }
+}

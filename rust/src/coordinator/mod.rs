@@ -21,10 +21,15 @@ pub mod admission;
 pub mod autoscale;
 pub mod backend;
 pub mod batcher;
+pub mod cells;
 
 pub use admission::{
     replay_trace, static_partition_replay, AdmissionConfig, AdmissionController,
     RejectReason, RepackPlan, ReplayConfig, ReplayReport, ShrinkReport,
+};
+pub use cells::{
+    replay_trace_cells, split_cluster, CellMigration, CellReplayStats, CellRouter,
+    CellsConfig, CellsReplayConfig, CellsReplayReport, DepartOutcome,
 };
 pub use autoscale::{
     run_closed_loop, AutoscaleConfig, Autoscaler, ClosedLoopReport, EpochLoopConfig,

@@ -143,14 +143,19 @@ pub fn gpus_in_use<'a, I>(deployments: I) -> usize
 where
     I: IntoIterator<Item = &'a Deployment>,
 {
-    let mut mask = 0u64;
+    // growable bitmask: datacenter-scale clusters (the cells bench runs
+    // thousands of GPUs) overflow a fixed u64 word
+    let mut words: Vec<u64> = Vec::new();
     for d in deployments {
         for p in &d.placements {
-            assert!(p.gpu < 64, "raise the gpu mask width");
-            mask |= 1u64 << p.gpu;
+            let (word, bit) = (p.gpu / 64, p.gpu % 64);
+            if word >= words.len() {
+                words.resize(word + 1, 0);
+            }
+            words[word] |= 1u64 << bit;
         }
     }
-    mask.count_ones() as usize
+    words.iter().map(|w| w.count_ones() as usize).sum()
 }
 
 /// Place an allocation on the cluster state (spec + co-tenant holds).

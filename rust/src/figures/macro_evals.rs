@@ -672,6 +672,9 @@ pub struct AdmissionExpConfig {
     /// Queries per tenant in each between-event validation simulation.
     pub queries: usize,
     pub seed: u64,
+    /// Cells the cluster splits into (1 = the flat controller; > 1
+    /// routes through `coordinator::cells` and adds a per-cell table).
+    pub cells: usize,
 }
 
 impl Default for AdmissionExpConfig {
@@ -684,6 +687,7 @@ impl Default for AdmissionExpConfig {
             peak_qps_hi: 150.0,
             queries: 1_000,
             seed: 42,
+            cells: 1,
         }
     }
 }
@@ -700,6 +704,9 @@ pub fn admission_tables(cfg: &AdmissionExpConfig) -> Result<Vec<Table>, String> 
 
     if cfg.tenants == 0 || cfg.queries == 0 {
         return Err("tenants and queries must be at least 1".into());
+    }
+    if cfg.cells == 0 {
+        return Err("cells must be at least 1".into());
     }
     if !(cfg.peak_qps_lo > 0.0 && cfg.peak_qps_hi >= cfg.peak_qps_lo) {
         return Err("peak band must be positive and ordered".into());
@@ -723,6 +730,7 @@ pub fn admission_tables(cfg: &AdmissionExpConfig) -> Result<Vec<Table>, String> 
         queries: cfg.queries,
         batch: crate::coordinator::AdmissionConfig::default().batch,
         seed: cfg.seed,
+        cells: cfg.cells,
     };
     admission_tables_for_trace(&cluster, &trace, knobs)
 }
@@ -733,6 +741,8 @@ pub struct ReplayKnobs {
     pub queries: usize,
     pub batch: u32,
     pub seed: u64,
+    /// Cells the cluster splits into (≤ 1 = the flat controller).
+    pub cells: usize,
 }
 
 /// The admission experiment over an *explicit* tenant trace — the
@@ -745,6 +755,7 @@ pub fn admission_tables_for_trace(
     knobs: ReplayKnobs,
 ) -> Result<Vec<Table>, String> {
     use crate::coordinator::admission::{replay_trace, static_partition_replay, ReplayConfig};
+    use crate::coordinator::cells::{replay_trace_cells, CellsReplayConfig};
 
     if knobs.queries == 0 {
         return Err("queries must be at least 1".into());
@@ -755,7 +766,16 @@ pub fn admission_tables_for_trace(
     let mut replay_cfg = ReplayConfig { queries: knobs.queries, ..Default::default() };
     replay_cfg.admission.seed = knobs.seed;
     replay_cfg.admission.batch = knobs.batch;
-    let shared = replay_trace(cluster, trace, &replay_cfg)?;
+    // cells ≤ 1 keeps the flat controller path (and its exact output);
+    // > 1 routes through the cluster-of-cells shard and reports the
+    // merged fleet view plus a per-cell breakdown table
+    let (shared, celled) = if knobs.cells > 1 {
+        let cells_cfg = CellsReplayConfig::from_replay(knobs.cells, &replay_cfg);
+        let rep = replay_trace_cells(cluster, trace, &cells_cfg)?;
+        (rep.merged.clone(), Some(rep))
+    } else {
+        (replay_trace(cluster, trace, &replay_cfg)?, None)
+    };
     let dedicated = static_partition_replay(cluster, trace, &replay_cfg.admission)?;
 
     let mut t1 = Table::new(
@@ -844,7 +864,56 @@ pub fn admission_tables_for_trace(
         "intervals simulated (of total)".to_string(),
         format!("{}/{}", shared.intervals_simulated, shared.intervals.len()),
     ]);
-    Ok(vec![t1, t2, t3, t4])
+    let mut tables = vec![t1, t2, t3, t4];
+    if let Some(rep) = &celled {
+        tables[3].push(&["cells".to_string(), rep.cells.to_string()]);
+        tables[3].push(&[
+            "cross-cell migrations".to_string(),
+            rep.migrations.to_string(),
+        ]);
+        // per-cell solve-cache and admission breakdown, with the
+        // fleet-wide aggregate as the closing row (per-cell counters
+        // are attempts — router fall-through retries included — while
+        // the fleet row carries router-level arrivals)
+        let mut t5 = Table::new(
+            "Admission: per-cell breakdown (cluster-of-cells router)",
+            &[
+                "cell",
+                "gpus",
+                "admitted",
+                "rejected",
+                "peak_residents",
+                "cache hits/misses",
+                "hit_rate",
+                "intervals sim/total",
+            ],
+        );
+        for s in &rep.per_cell {
+            t5.push(&[
+                s.cell.to_string(),
+                s.gpus.to_string(),
+                s.admitted.to_string(),
+                s.rejected.to_string(),
+                s.peak_residents.to_string(),
+                format!("{}/{}", s.solve_cache.hits, s.solve_cache.misses),
+                format!("{:.1}%", s.solve_cache.hit_rate() * 100.0),
+                format!("{}/{}", s.intervals_simulated, s.intervals),
+            ]);
+        }
+        let fleet = &rep.merged.solve_cache;
+        t5.push(&[
+            "fleet".to_string(),
+            cluster.num_gpus.to_string(),
+            rep.merged.admitted.to_string(),
+            rep.merged.rejected.to_string(),
+            rep.merged.peak_residents.to_string(),
+            format!("{}/{}", fleet.hits, fleet.misses),
+            format!("{:.1}%", fleet.hit_rate() * 100.0),
+            format!("{}/{}", rep.merged.intervals_simulated, rep.merged.intervals.len()),
+        ]);
+        tables.push(t5);
+    }
+    Ok(tables)
 }
 
 /// The registered `admission` experiment, at the default trace shape.
@@ -906,6 +975,41 @@ mod tests {
         let admitted: Vec<usize> =
             ts[2].rows.iter().map(|r| r[1].parse().unwrap()).collect();
         assert!(admitted[0] >= admitted[1], "shared {admitted:?}");
+    }
+
+    #[test]
+    fn admission_with_cells_adds_per_cell_breakdown() {
+        let cfg = AdmissionExpConfig {
+            tenants: 4,
+            queries: 300,
+            cells: 2, // the 2-GPU testbed splits into two 1-GPU cells
+            ..Default::default()
+        };
+        let ts = admission_tables(&cfg).expect("scenario runs");
+        assert_eq!(ts.len(), 5, "cells > 1 appends the per-cell table");
+        assert_eq!(ts[0].rows.len(), 2 * cfg.tenants);
+        // per-cell rows plus the fleet aggregate row
+        assert_eq!(ts[4].rows.len(), cfg.cells + 1);
+        assert_eq!(ts[4].rows[cfg.cells][0], "fleet");
+        // the summary table gained the cells and migrations rows
+        assert!(ts[3].rows.iter().any(|r| r[0] == "cells" && r[1] == "2"));
+        assert!(ts[3].rows.iter().any(|r| r[0] == "cross-cell migrations"));
+        // per-cell GPU counts partition the cluster
+        let gpus: usize = ts[4].rows[..cfg.cells]
+            .iter()
+            .map(|r| r[1].parse::<usize>().unwrap())
+            .sum();
+        assert_eq!(gpus, 2);
+        // invalid cell counts are rejected, not panicked on
+        assert!(admission_tables(&AdmissionExpConfig { cells: 0, ..Default::default() })
+            .is_err());
+        assert!(admission_tables(&AdmissionExpConfig {
+            cells: 3, // 2-GPU testbed cannot hold 3 cells
+            tenants: 2,
+            queries: 100,
+            ..Default::default()
+        })
+        .is_err());
     }
 
     #[test]

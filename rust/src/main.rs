@@ -69,7 +69,8 @@ USAGE:
                    [--peak QPS] [--epochs N] [--queries N] [--seed S]
                    [--spec <file.json>]
   camelot admit [--tenants N] [--gap S] [--life S] [--peak-lo QPS]
-                [--peak-hi QPS] [--queries N] [--seed S] [--spec <file.json>]
+                [--peak-hi QPS] [--queries N] [--seed S] [--cells N]
+                [--spec <file.json>]
   camelot reproduce [--exp figN|tab1|all|colocate|admission] [--out DIR]
 
 PIPELINES: img-to-img img-to-text text-to-img text-to-text p<i>+c<j>+m<k>
@@ -299,11 +300,14 @@ fn cmd_admit(args: &[String]) -> i32 {
     // declarative path: replay the spec's explicit tenant trace
     // (arrive / shrink / depart events) against the spec's cluster
     if let Some(spec) = o.get("spec") {
-        return run_spec("admit", spec, |spec| {
+        let o_cells = o.get("cells").and_then(|v| v.parse().ok());
+        return run_spec("admit", spec, move |spec| {
             let knobs = figures::macro_evals::ReplayKnobs {
                 queries: spec.queries,
                 batch: spec.batch,
                 seed: spec.seed,
+                // --cells on the command line overrides the spec's value
+                cells: o_cells.unwrap_or(spec.cells),
             };
             figures::macro_evals::admission_tables_for_trace(&spec.cluster, &spec.trace(), knobs)
         });
@@ -330,9 +334,13 @@ fn cmd_admit(args: &[String]) -> i32 {
     if let Some(v) = o.get("seed").and_then(|v| v.parse().ok()) {
         cfg.seed = v;
     }
+    if let Some(v) = o.get("cells").and_then(|v| v.parse().ok()) {
+        cfg.cells = v;
+    }
     eprintln!(
-        "replaying a {}-tenant trace (seed {}, peaks {}-{} qps, mean gap {} s, mean life {} s)...",
+        "replaying a {}-tenant trace across {} cell(s) (seed {}, peaks {}-{} qps, mean gap {} s, mean life {} s)...",
         cfg.tenants,
+        cfg.cells,
         cfg.seed,
         cfg.peak_qps_lo,
         cfg.peak_qps_hi,

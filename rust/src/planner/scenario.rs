@@ -28,6 +28,7 @@
 //!   "batch": 16,
 //!   "seed": 42,
 //!   "queries": 600,
+//!   "cells": 1,
 //!   "tenants": [
 //!     {"name": "captioner", "pipeline": "img-to-text",
 //!      "objective": "max-load", "plan_qps": 150.0},
@@ -89,6 +90,9 @@ pub struct ScenarioSpec {
     pub seed: u64,
     /// Queries per tenant in validation simulations (`admit --spec`).
     pub queries: usize,
+    /// Cells for the cluster-of-cells router (`admit --spec`): 1 runs
+    /// the flat admission controller, N > 1 shards the cluster.
+    pub cells: usize,
     pub tenants: Vec<ScenarioTenant>,
 }
 
@@ -109,7 +113,8 @@ impl ScenarioSpec {
     fn from_json(doc: &Json) -> Result<ScenarioSpec, String> {
         let obj = doc.as_obj().ok_or("scenario spec must be a JSON object")?;
         for key in obj.keys() {
-            const KNOWN: [&str; 6] = ["name", "cluster", "batch", "seed", "queries", "tenants"];
+            const KNOWN: [&str; 7] =
+                ["name", "cluster", "batch", "seed", "queries", "cells", "tenants"];
             if !KNOWN.contains(&key.as_str()) {
                 return Err(format!("unknown scenario field '{key}'"));
             }
@@ -123,6 +128,13 @@ impl ScenarioSpec {
         let batch = batch as u32;
         let seed = parse_count(doc, "seed", 42)?;
         let queries = parse_count(doc, "queries", 800)? as usize;
+        let cells = parse_count(doc, "cells", 1)? as usize;
+        if cells == 0 || cells > cluster.num_gpus {
+            return Err(format!(
+                "'cells' must be in 1..={} (one GPU per cell minimum), got {cells}",
+                cluster.num_gpus
+            ));
+        }
         let tenants_json = doc
             .get("tenants")
             .and_then(Json::as_arr)
@@ -138,7 +150,7 @@ impl ScenarioSpec {
             }
             tenants.push(tenant);
         }
-        Ok(ScenarioSpec { name, cluster, batch, seed, queries, tenants })
+        Ok(ScenarioSpec { name, cluster, batch, seed, queries, cells, tenants })
     }
 
     /// The tenants as a time-ordered arrival/departure/shrink trace for
@@ -472,6 +484,7 @@ mod tests {
         assert_eq!(spec.batch, 16);
         assert_eq!(spec.queries, 200);
         assert_eq!(spec.seed, 42, "default seed");
+        assert_eq!(spec.cells, 1, "default cells");
         assert_eq!(spec.tenants.len(), 2);
         assert_eq!(spec.tenants[0].objective, ScenarioObjective::MinResource);
         assert_eq!(spec.tenants[1].objective, ScenarioObjective::MaxLoad);
@@ -541,6 +554,14 @@ mod tests {
                 r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": 10, "shrink_at_s": 5}]}"#,
                 "shrink_at_s without shrink_to",
             ),
+            (
+                r#"{"cells": 0, "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "zero cells",
+            ),
+            (
+                r#"{"cells": 3, "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "more cells than the 2-GPU default cluster holds",
+            ),
         ] {
             assert!(ScenarioSpec::parse(frag).is_err(), "{what} must be rejected");
         }
@@ -554,6 +575,7 @@ mod tests {
         .unwrap();
         assert_eq!(spec.batch, 32);
         assert_eq!(spec.cluster.num_gpus, 2);
+        assert_eq!(spec.cells, 1);
         let t = &spec.tenants[0];
         assert_eq!(t.name, "img-to-text#0");
         assert_eq!(t.objective, ScenarioObjective::MinResource);

@@ -8,6 +8,15 @@
 //! regardless of the thread count — including `threads == 1`. The
 //! determinism test in `tests/golden_engine.rs` pins that property.
 //!
+//! Nested fans (the cell-sharded replay fans per-cell interval
+//! simulations inside a fan over cells) are kept from oversubscribing
+//! the machine by a **process-wide worker budget**: every fan registers
+//! the extra workers it spawns, [`par_map`] sizes itself from what is
+//! left, and [`split_budget`] carves an explicit two-level split for
+//! callers that know both fan widths up front. Budgeting only ever
+//! changes *thread counts*, never results — determinism is by input
+//! index, so any split yields bit-identical output.
+//!
 //! No rayon in this environment; `std::thread::scope` (Rust ≥ 1.63) is
 //! all that is needed for a work-stealing index queue.
 
@@ -64,10 +73,82 @@ pub fn max_threads() -> usize {
         })
 }
 
-/// Apply `f(index, item)` to every item with up to `threads` workers;
-/// results are returned in input order. `f` must be deterministic per
-/// (index, item) — then the output does not depend on `threads`.
-pub fn par_map_threads<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+/// Process-wide count of *extra* workers (beyond their calling threads)
+/// currently spawned by active fans. Fans register here so nested
+/// [`par_map`] calls can size themselves from what is actually left of
+/// the machine instead of multiplying against it.
+static EXTRA_WORKERS: AtomicUsize = AtomicUsize::new(0);
+
+/// Extra workers currently registered process-wide (observability; the
+/// budget tests read it from inside a fan).
+pub fn reserved_workers() -> usize {
+    EXTRA_WORKERS.load(Ordering::Acquire)
+}
+
+/// Unconditional registration of `extra` workers for a fan's lifetime
+/// (explicit thread counts are honored as given, but still show up in
+/// the budget so nested adaptive fans back off).
+struct Registration {
+    extra: usize,
+}
+
+impl Registration {
+    fn add(extra: usize) -> Registration {
+        if extra > 0 {
+            EXTRA_WORKERS.fetch_add(extra, Ordering::AcqRel);
+        }
+        Registration { extra }
+    }
+}
+
+impl Drop for Registration {
+    fn drop(&mut self) {
+        if self.extra > 0 {
+            EXTRA_WORKERS.fetch_sub(self.extra, Ordering::AcqRel);
+        }
+    }
+}
+
+/// Reserve up to `want` extra workers from the remaining budget
+/// (`max_threads() − 1 − reserved`), atomically, returning how many
+/// were actually granted. A fully spent budget grants 0 — the caller
+/// then runs serially on its own thread, exactly like the old
+/// hard-serialize behavior under full load.
+fn reserve_extra(want: usize) -> Registration {
+    if want == 0 {
+        return Registration { extra: 0 };
+    }
+    let cap = max_threads().saturating_sub(1);
+    loop {
+        let cur = EXTRA_WORKERS.load(Ordering::Acquire);
+        let take = want.min(cap.saturating_sub(cur));
+        if take == 0 {
+            return Registration { extra: 0 };
+        }
+        if EXTRA_WORKERS
+            .compare_exchange(cur, cur + take, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            return Registration { extra: take };
+        }
+    }
+}
+
+/// Split a worker budget across a two-level fan: returns
+/// `(outer, inner)` worker counts with `outer ≤ outer_items`,
+/// `outer × inner ≤ budget`, and both ≥ 1. The cell-sharded replay uses
+/// this to fan per-cell interval simulations inside the fan over cells
+/// without oversubscribing (e.g. budget 16 over 4 cells → 4 outer × 4
+/// inner, not 4 × 16).
+pub fn split_budget(budget: usize, outer_items: usize) -> (usize, usize) {
+    let budget = budget.max(1);
+    let outer = budget.min(outer_items.max(1));
+    let inner = (budget / outer).max(1);
+    (outer, inner)
+}
+
+/// The shared map body: no budget bookkeeping (callers register).
+fn run_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
@@ -105,16 +186,37 @@ where
         .collect()
 }
 
-/// [`par_map_threads`] with the default worker count — serial when
-/// already inside a worker (no nested oversubscription).
+/// Apply `f(index, item)` to every item with up to `threads` workers;
+/// results are returned in input order. `f` must be deterministic per
+/// (index, item) — then the output does not depend on `threads`. The
+/// explicit count is honored as given but registered against the
+/// process-wide budget so nested [`par_map`] calls back off.
+pub fn par_map_threads<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    let _reg = Registration::add(threads - 1);
+    run_map(items, threads, f)
+}
+
+/// [`par_map_threads`] with a budget-aware worker count: takes whatever
+/// the process-wide budget still allows (its own calling thread plus up
+/// to `max_threads() − 1` reserved extras), so nested fans *split* the
+/// machine instead of multiplying against it — and degrade to serial
+/// when enclosing fans already hold every core.
 pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
     T: Sync,
     R: Send,
     F: Fn(usize, &T) -> R + Sync,
 {
-    let threads = if in_worker() { 1 } else { max_threads() };
-    par_map_threads(items, threads, f)
+    let want = max_threads().min(items.len().max(1)).saturating_sub(1);
+    let lease = reserve_extra(want);
+    let threads = 1 + lease.extra;
+    run_map(items, threads, f)
 }
 
 #[cfg(test)]
@@ -158,23 +260,76 @@ mod tests {
     }
 
     #[test]
-    fn nested_par_map_degrades_to_serial() {
+    fn nested_par_map_stays_deterministic_under_the_budget() {
         assert!(!in_worker(), "test thread is not a worker");
         let outer: Vec<u32> = (0..4).collect();
-        for threads in [1usize, 4] {
+        // serial reference for the nested computation (seeded per item,
+        // so any thread split must reproduce it bit for bit)
+        let expect_row = |x: u32| -> Vec<u64> {
+            (0..8u64)
+                .map(|i| {
+                    let mut r = crate::util::Rng::new(x as u64 * 100 + i);
+                    (0..50).map(|_| r.next_u64() % 1000).sum()
+                })
+                .collect()
+        };
+        for threads in [1usize, 2, 4] {
             // in_worker must be a property of the call structure, not of
             // the thread count — the serial path marks the caller too
             let out = par_map_threads(&outer, threads, |_, &x| {
                 assert!(in_worker(), "par_map must mark its execution scope");
-                // nested call still produces correct, ordered results
-                let inner: Vec<u32> = (0..8).map(|i| x * 10 + i).collect();
-                par_map(&inner, |_, &y| y + 1)
+                // the nested fan sizes itself from the leftover budget;
+                // whatever it gets, results stay ordered and identical
+                let inner: Vec<u64> = (0..8).map(|i| x as u64 * 100 + i).collect();
+                par_map(&inner, |_, &s| {
+                    let mut r = crate::util::Rng::new(s);
+                    (0..50).map(|_| r.next_u64() % 1000).sum::<u64>()
+                })
             });
             for (x, row) in out.iter().enumerate() {
-                let want: Vec<u32> = (0..8).map(|i| x as u32 * 10 + i + 1).collect();
-                assert_eq!(row, &want);
+                assert_eq!(row, &expect_row(x as u32), "threads={threads}");
             }
             assert!(!in_worker(), "flag must not leak back to the caller");
         }
+    }
+
+    #[test]
+    fn explicit_fans_register_against_the_budget() {
+        let items: Vec<u32> = (0..8).collect();
+        let out = par_map_threads(&items, 8, |_, &x| {
+            // the enclosing fan's 7 extra workers are visible in the
+            // process-wide budget (other tests may add more; ≥ holds)
+            assert!(
+                reserved_workers() >= 7,
+                "explicit fan must register its extra workers"
+            );
+            let inner: Vec<u32> = (0..5).map(|i| x * 10 + i).collect();
+            // budget-aware nested fan: correct and ordered whatever it
+            // was granted (possibly nothing — then it runs serially)
+            par_map(&inner, |_, &y| y + 1)
+        });
+        for (x, row) in out.iter().enumerate() {
+            let want: Vec<u32> = (0..5).map(|i| x as u32 * 10 + i + 1).collect();
+            assert_eq!(row, &want);
+        }
+    }
+
+    #[test]
+    fn split_budget_never_oversubscribes() {
+        for budget in 1..=32usize {
+            for outer_items in 1..=20usize {
+                let (outer, inner) = split_budget(budget, outer_items);
+                assert!(outer >= 1 && inner >= 1);
+                assert!(outer <= outer_items.max(1));
+                assert!(
+                    outer * inner <= budget.max(1),
+                    "budget {budget} outer_items {outer_items} -> {outer}x{inner}"
+                );
+            }
+        }
+        // degenerate corners
+        assert_eq!(split_budget(0, 0), (1, 1));
+        assert_eq!(split_budget(16, 4), (4, 4));
+        assert_eq!(split_budget(3, 8), (3, 1));
     }
 }

@@ -95,42 +95,10 @@ fn memoized_plans_are_bit_identical_to_direct_solves() {
     }
 }
 
-/// Everything a replay decides or measures, flattened to exact bits
-/// (cache counters and dedup bookkeeping deliberately excluded — they
-/// differ between the cached and uncached paths by design).
-fn fingerprint(rep: &camelot::coordinator::ReplayReport) -> Vec<String> {
-    let mut out = Vec::new();
-    for e in &rep.events {
-        out.push(format!(
-            "event t={} tenant={} {} -> {} residents={} gpus={} usage={}",
-            e.t_s.to_bits(),
-            e.tenant,
-            e.desc,
-            e.decision,
-            e.residents,
-            e.gpus_in_use,
-            e.usage.to_bits()
-        ));
-    }
-    for iv in &rep.intervals {
-        out.push(format!(
-            "interval t={} tenants={:?} p99={:?} qos={:?}",
-            iv.t_start_s.to_bits(),
-            iv.tenants,
-            iv.p99_s.iter().map(|p| p.to_bits()).collect::<Vec<_>>(),
-            iv.qos_met
-        ));
-    }
-    out.push(format!(
-        "summary admitted={} rejected={} repacks={} peak={} mean_gpus={}",
-        rep.admitted,
-        rep.rejected,
-        rep.repacks_applied,
-        rep.peak_residents,
-        rep.mean_gpus_in_use.to_bits()
-    ));
-    out
-}
+// Reports are compared through `ReplayReport::fingerprint()` — every
+// decision and measurement flattened to exact bits (cache counters and
+// dedup bookkeeping deliberately excluded: they differ between the
+// cached and uncached paths by design).
 
 fn cached_cfg(queries: usize, threads: usize) -> ReplayConfig {
     ReplayConfig { queries, threads, ..Default::default() }
@@ -165,9 +133,9 @@ fn cached_replay_is_bit_identical_to_uncached_across_threads() {
         ("generated", &generated),
         ("repeated", &TenantTrace::repeated_cycle()),
     ] {
-        let baseline = fingerprint(
-            &replay_trace(&cluster, trace, &uncached_cfg(300, 1)).expect("uncached replay"),
-        );
+        let baseline = replay_trace(&cluster, trace, &uncached_cfg(300, 1))
+            .expect("uncached replay")
+            .fingerprint();
         for threads in [1usize, 2, 8] {
             let uncached =
                 replay_trace(&cluster, trace, &uncached_cfg(300, threads)).expect("replay");
@@ -179,14 +147,14 @@ fn cached_replay_is_bit_identical_to_uncached_across_threads() {
             );
             assert_eq!(
                 baseline,
-                fingerprint(&uncached),
+                uncached.fingerprint(),
                 "{tag}: uncached replay differs at {threads} threads"
             );
             let cached =
                 replay_trace(&cluster, trace, &cached_cfg(300, threads)).expect("replay");
             assert_eq!(
                 baseline,
-                fingerprint(&cached),
+                cached.fingerprint(),
                 "{tag}: cached replay differs at {threads} threads"
             );
         }
@@ -218,7 +186,7 @@ fn repeated_trace_actually_exercises_the_caches() {
     tiny.admission.solve_cache = 2;
     let rep_tiny = replay_trace(&cluster, &trace, &tiny).expect("replay");
     assert!(rep_tiny.solve_cache.entries <= 2, "{:?}", rep_tiny.solve_cache);
-    assert_eq!(fingerprint(&rep), fingerprint(&rep_tiny));
+    assert_eq!(rep.fingerprint(), rep_tiny.fingerprint());
 }
 
 #[test]
