@@ -53,7 +53,7 @@
 //! keeping reallocation decisions cheap.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
 
 use crate::allocator::{AllocContext, SaParams, StageGrids};
@@ -66,7 +66,9 @@ use crate::planner::cache::{self, CacheStats, SolveCache};
 use crate::planner::{ClusterState, Objective, PlanRequest};
 use crate::predictor::StagePredictor;
 use crate::sim::{ClusterSim, Deployment, SimOptions, Simulator, TenantSpec};
-use crate::suite::workload::{ArrivalProcess, TenantTrace, TraceEventKind};
+use crate::suite::workload::{
+    ArrivalProcess, Priority, TenantTrace, TenantTraceEvent, TraceEventKind,
+};
 use crate::suite::Pipeline;
 use crate::util::{par, rng};
 
@@ -91,6 +93,21 @@ pub struct AdmissionConfig {
     /// fresh solves, so this knob never changes decisions.
     pub solve_cache: usize,
     pub seed: u64,
+    /// Fraction of the QoS budget the planner may spend on stage
+    /// processing + communication (C5 headroom, forwarded into every
+    /// [`PlanRequest`]). The default matches [`PlanRequest::new`]'s
+    /// 0.80, so plans — and their cache fingerprints — are unchanged.
+    /// Values > 1 deliberately over-commit the budget: the `camelot
+    /// fuzz --break-qos` dev mode uses this to seed intentional QoS
+    /// violations the property harness must catch.
+    pub qos_headroom: f64,
+    /// Multiplier on every QoS target in the admission/shrink checks
+    /// (`p99 > target × qos_slack` rejects). 1.0 (the default) is the
+    /// production contract and bit-identical to the pre-knob behavior;
+    /// `f64::INFINITY` disables the checks entirely — the other half of
+    /// the `--break-qos` dev mode. The replay's QoS *audit* always uses
+    /// the raw targets, so violations let in here are still reported.
+    pub qos_slack: f64,
 }
 
 impl Default for AdmissionConfig {
@@ -103,6 +120,8 @@ impl Default for AdmissionConfig {
             repack_gain_s_per_gpu: 10.0,
             solve_cache: 2_048,
             seed: 42,
+            qos_headroom: 0.80,
+            qos_slack: 1.0,
         }
     }
 }
@@ -150,6 +169,9 @@ pub struct Resident {
     pub arrivals: ArrivalProcess,
     pub allocation: Allocation,
     pub deployment: Deployment,
+    /// Service tier; best-effort residents are evictable by
+    /// latency-critical arrivals ([`AdmissionController::admit_preempting`]).
+    pub priority: Priority,
 }
 
 /// One tenant's move in a re-pack migration plan.
@@ -203,6 +225,36 @@ impl RepackPlan {
             self.churn_cost_s,
             self.gain_s,
             if self.applied { "applied" } else { "held" }
+        )
+    }
+}
+
+/// Outcome of a GPU-failure event ([`AdmissionController::fail_gpus`]):
+/// which devices went down, how many residents it displaced, and what
+/// happened to each of them.
+#[derive(Debug, Clone)]
+pub struct GpuFailReport {
+    /// GPUs newly marked failed by this event (already-failed or
+    /// out-of-range ids are dropped).
+    pub failed: Vec<usize>,
+    /// Residents that had at least one instance on a failed GPU.
+    pub displaced: usize,
+    /// Displaced residents successfully re-placed on the survivors.
+    pub replaced: usize,
+    /// Residents evicted — displaced tenants nothing could seat, plus
+    /// any survivor whose predicted QoS the forced re-pack broke.
+    pub evicted: Vec<String>,
+}
+
+impl GpuFailReport {
+    /// One-line summary for event logs and determinism comparisons.
+    pub fn summary(&self) -> String {
+        format!(
+            "gpufail: gpus {:?} displaced {} replaced {} evicted {}",
+            self.failed,
+            self.displaced,
+            self.replaced,
+            if self.evicted.is_empty() { "-".to_string() } else { self.evicted.join(",") }
         )
     }
 }
@@ -268,6 +320,10 @@ pub struct AdmissionController {
     /// evaluations, and shrink re-solves with identical inputs return
     /// the cached (bit-identical) solution.
     solve_cache: SolveCache,
+    /// GPUs currently out of service ([`fail_gpus`](Self::fail_gpus));
+    /// every placement pass sees them as fully held, so no plan can
+    /// touch them until [`recover_gpus`](Self::recover_gpus).
+    failed_gpus: BTreeSet<usize>,
 }
 
 impl AdmissionController {
@@ -283,6 +339,7 @@ impl AdmissionController {
             predictor_cache: Vec::new(),
             grids_cache: RefCell::new(Vec::new()),
             solve_cache,
+            failed_gpus: BTreeSet::new(),
         }
     }
 
@@ -347,13 +404,25 @@ impl AdmissionController {
             .collect()
     }
 
+    /// The per-GPU holds every placement view starts from: empty
+    /// everywhere except failed GPUs, which carry a full-SM poison hold
+    /// so no quota can land there (placement feasibility requires
+    /// `sm + quota ≤ 1`) until the device recovers.
+    fn base_holds(&self) -> Vec<GpuReservation> {
+        let mut held = vec![GpuReservation::default(); self.cluster.num_gpus];
+        for &g in &self.failed_gpus {
+            held[g].sm_frac = 1.0;
+        }
+        held
+    }
+
     /// Fold `holds` into one per-GPU vector, skipping index `skip`.
     fn fold_holds(
         &self,
         holds: &[Vec<GpuReservation>],
         skip: Option<usize>,
     ) -> Vec<GpuReservation> {
-        let mut held = vec![GpuReservation::default(); self.cluster.num_gpus];
+        let mut held = self.base_holds();
         for (i, h) in holds.iter().enumerate() {
             if Some(i) == skip {
                 continue;
@@ -419,7 +488,8 @@ impl AdmissionController {
             predictors,
         )
         .batch(self.cfg.batch)
-        .sa(self.cfg.sa);
+        .sa(self.cfg.sa)
+        .qos_headroom(self.cfg.qos_headroom);
         let solution = match self.solve_cache.plan(&request) {
             Ok(s) => s,
             Err(_) => self
@@ -432,15 +502,30 @@ impl AdmissionController {
         Ok((solution.allocation, solution.deployment))
     }
 
-    /// Decide admission for an arriving tenant. On success the tenant
-    /// becomes resident and its id is returned; on rejection the
-    /// cluster state is untouched.
+    /// Decide admission for an arriving latency-critical tenant. On
+    /// success the tenant becomes resident and its id is returned; on
+    /// rejection the cluster state is untouched.
     pub fn try_admit(
         &mut self,
         name: &str,
         pipeline: &Pipeline,
         arrivals: ArrivalProcess,
         plan_qps: f64,
+    ) -> Result<u64, RejectReason> {
+        self.admit_with_priority(name, pipeline, arrivals, plan_qps, Priority::LatencyCritical)
+    }
+
+    /// [`try_admit`](Self::try_admit) with an explicit service tier.
+    /// The tier never changes the admission *decision* — best-effort
+    /// tenants clear the same feasibility + QoS bar — only whether the
+    /// resident is later evictable by preemption or QoS enforcement.
+    pub fn admit_with_priority(
+        &mut self,
+        name: &str,
+        pipeline: &Pipeline,
+        arrivals: ArrivalProcess,
+        plan_qps: f64,
+        priority: Priority,
     ) -> Result<u64, RejectReason> {
         assert!(plan_qps > 0.0, "planning load must be positive");
         let predictors = self.predictors_for(pipeline);
@@ -470,7 +555,7 @@ impl AdmissionController {
                 r.plan_qps,
                 &others,
             );
-            if p99 > r.pipeline.qos_target_s
+            if p99 > r.pipeline.qos_target_s * self.cfg.qos_slack
                 && worst.as_ref().map_or(true, |(_, w, _)| p99 > *w)
             {
                 worst = Some((r.name.clone(), p99, r.pipeline.qos_target_s));
@@ -478,7 +563,7 @@ impl AdmissionController {
         }
         let own_p99 =
             self.tenant_p99(pipeline, &predictors, &allocation, plan_qps, &reserved);
-        if own_p99 > pipeline.qos_target_s
+        if own_p99 > pipeline.qos_target_s * self.cfg.qos_slack
             && worst.as_ref().map_or(true, |(_, w, _)| own_p99 > *w)
         {
             worst = Some((name.to_string(), own_p99, pipeline.qos_target_s));
@@ -500,8 +585,97 @@ impl AdmissionController {
             arrivals,
             allocation,
             deployment,
+            priority,
         });
         Ok(id)
+    }
+
+    /// Admission with best-effort preemption: a latency-critical
+    /// arrival that plain admission rejects may evict resident
+    /// best-effort tenants — largest footprint first, admission order
+    /// as the tiebreak — retrying after each eviction until it fits or
+    /// no best-effort resident remains. A feasibility guard (can the
+    /// arrival be seated even with *every* best-effort tenant gone?)
+    /// runs first so a hopeless arrival never evicts anyone, and an
+    /// exhausted eviction ladder restores the full resident set — a
+    /// rejection leaves the cluster untouched, exactly like
+    /// [`try_admit`](Self::try_admit). Returns the admitted id plus the
+    /// names of the evicted tenants (empty when plain admission
+    /// sufficed).
+    pub fn admit_preempting(
+        &mut self,
+        name: &str,
+        pipeline: &Pipeline,
+        arrivals: ArrivalProcess,
+        plan_qps: f64,
+        priority: Priority,
+    ) -> Result<(u64, Vec<String>), RejectReason> {
+        let rejected_before = self.rejected;
+        let first = match self.admit_with_priority(
+            name,
+            pipeline,
+            arrivals.clone(),
+            plan_qps,
+            priority,
+        ) {
+            Ok(id) => return Ok((id, Vec::new())),
+            Err(reason) => reason,
+        };
+        let any_best_effort =
+            self.residents.iter().any(|r| r.priority == Priority::BestEffort);
+        if priority != Priority::LatencyCritical || !any_best_effort {
+            return Err(first);
+        }
+        // guard: plan the arrival into the capacity the latency-critical
+        // residents alone leave free — if even that fails, eviction is
+        // hopeless and nobody should be displaced
+        let predictors = self.predictors_for(pipeline);
+        let holds = self.resident_holds();
+        let mut lc_held = self.base_holds();
+        for (r, h) in self.residents.iter().zip(&holds) {
+            if r.priority == Priority::LatencyCritical {
+                merge_reservations(&mut lc_held, h);
+            }
+        }
+        if self.plan_into(pipeline, &predictors, plan_qps, &lc_held).is_err() {
+            self.rejected = rejected_before + 1;
+            return Err(first);
+        }
+        let saved = self.residents.clone();
+        let mut evicted: Vec<String> = Vec::new();
+        loop {
+            // next victim: the best-effort resident with the largest
+            // footprint (Σ N·p), lowest id on ties — deterministic
+            let victim = self
+                .residents
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.priority == Priority::BestEffort)
+                .max_by(|(_, a), (_, b)| {
+                    a.allocation
+                        .total_quota()
+                        .partial_cmp(&b.allocation.total_quota())
+                        .unwrap()
+                        .then(b.id.cmp(&a.id))
+                })
+                .map(|(pos, r)| (pos, r.name.clone()));
+            let Some((pos, victim_name)) = victim else {
+                // eviction ladder exhausted: restore everyone, reject
+                self.residents = saved;
+                self.rejected = rejected_before + 1;
+                return Err(first);
+            };
+            self.residents.remove(pos);
+            evicted.push(victim_name);
+            if let Ok(id) =
+                self.admit_with_priority(name, pipeline, arrivals.clone(), plan_qps, priority)
+            {
+                // one arrival, one decision: the failed pre-eviction
+                // attempts don't count as rejections
+                self.rejected = rejected_before;
+                return Ok((id, evicted));
+            }
+        }
     }
 
     /// Test-only: install a resident with a hand-built plan, bypassing
@@ -528,6 +702,7 @@ impl AdmissionController {
             arrivals: ArrivalProcess::constant(plan_qps),
             allocation,
             deployment,
+            priority: Priority::LatencyCritical,
         });
         id
     }
@@ -555,7 +730,8 @@ impl AdmissionController {
                 &r.predictors,
             )
             .batch(self.cfg.batch)
-            .sa(self.cfg.sa),
+            .sa(self.cfg.sa)
+            .qos_headroom(self.cfg.qos_headroom),
         );
         let old_usage = r.allocation.total_quota();
         let held = |reason: String| ShrinkReport {
@@ -583,7 +759,7 @@ impl AdmissionController {
                     // tenant i's view: every resident except itself and
                     // the shrinking tenant's OLD footprint, plus the
                     // shrinking tenant's candidate footprint
-                    let mut rest = vec![GpuReservation::default(); self.cluster.num_gpus];
+                    let mut rest = self.base_holds();
                     for (j, h) in holds.iter().enumerate() {
                         if j != pos && j != i {
                             merge_reservations(&mut rest, h);
@@ -597,7 +773,7 @@ impl AdmissionController {
                         other.plan_qps,
                         &rest,
                     );
-                    if p99 > other.pipeline.qos_target_s {
+                    if p99 > other.pipeline.qos_target_s * self.cfg.qos_slack {
                         qos_block = Some(format!(
                             "would break QoS for {}: predicted p99 {p99:.4}s > target {:.4}s",
                             other.name, other.pipeline.qos_target_s
@@ -613,7 +789,7 @@ impl AdmissionController {
                         target_qps,
                         &others,
                     );
-                    if own > r.pipeline.qos_target_s {
+                    if own > r.pipeline.qos_target_s * self.cfg.qos_slack {
                         qos_block = Some(format!(
                             "own predicted p99 {own:.4}s > target {:.4}s",
                             r.pipeline.qos_target_s
@@ -677,7 +853,7 @@ impl AdmissionController {
                 .then(self.residents[a].id.cmp(&self.residents[b].id))
         });
 
-        let mut held = vec![GpuReservation::default(); self.cluster.num_gpus];
+        let mut held = self.base_holds();
         let mut planned: Vec<(usize, Allocation, Deployment)> =
             Vec::with_capacity(order.len());
         for &i in &order {
@@ -694,7 +870,8 @@ impl AdmissionController {
                     &r.predictors,
                 )
                 .batch(self.cfg.batch)
-                .sa(self.cfg.sa),
+                .sa(self.cfg.sa)
+                .qos_headroom(self.cfg.qos_headroom),
             );
             let (alloc, dep) = match greedy {
                 Ok(s) => (s.allocation, s.deployment),
@@ -733,7 +910,36 @@ impl AdmissionController {
         let churn_cost_s = churn_instances as f64 * self.cfg.churn_cost_s;
         let gain_s =
             gpus_before.saturating_sub(gpus_after) as f64 * self.cfg.repack_gain_s_per_gpu;
-        let applied = gain_s > churn_cost_s;
+        let mut applied = gain_s > churn_cost_s;
+        if applied {
+            // QoS gate: consolidation concentrates bandwidth pressure on
+            // fewer devices, so every tenant's predicted p99 must still
+            // hold under the *candidate* holds before anything moves —
+            // the same promise admission and shrink enforce (greedy
+            // re-placement keeps allocations, so only the neighbor
+            // inflation can shift)
+            let candidate_holds: Vec<Vec<GpuReservation>> = planned
+                .iter()
+                .map(|(i, _, d)| {
+                    reservations_for(&self.residents[*i].pipeline, &self.cluster, d)
+                })
+                .collect();
+            'gate: for (k, (i, alloc, _)) in planned.iter().enumerate() {
+                let r = &self.residents[*i];
+                let mut others = self.base_holds();
+                for (k2, h) in candidate_holds.iter().enumerate() {
+                    if k2 != k {
+                        merge_reservations(&mut others, h);
+                    }
+                }
+                let p99 =
+                    self.tenant_p99(&r.pipeline, &r.predictors, alloc, r.plan_qps, &others);
+                if p99 > r.pipeline.qos_target_s * self.cfg.qos_slack {
+                    applied = false;
+                    break 'gate;
+                }
+            }
+        }
         if applied {
             for (i, alloc, dep) in planned {
                 self.residents[i].allocation = alloc;
@@ -748,6 +954,206 @@ impl AdmissionController {
             churn_cost_s,
             gain_s,
             applied,
+        }
+    }
+
+    /// GPUs currently out of service.
+    pub fn failed_gpu_ids(&self) -> Vec<usize> {
+        self.failed_gpus.iter().copied().collect()
+    }
+
+    /// Take the listed GPUs out of service. Residents with instances on
+    /// a failed device are displaced and re-placed onto the survivors —
+    /// biggest footprint first (the re-pack's first-fit-decreasing
+    /// order), greedy instance-move ([`Objective::Repack`]) with a full
+    /// SA re-solve as the fallback — while every unaffected resident
+    /// keeps its placement (its holds are reserved before anyone
+    /// moves). Displaced tenants nothing can seat are evicted, as is
+    /// any survivor whose predicted p99 the forced consolidation pushes
+    /// past target: the controller's QoS promise outranks residency.
+    /// No churn hysteresis applies — a failure *must* move the
+    /// displaced instances.
+    pub fn fail_gpus(&mut self, gpu_ids: &[usize]) -> GpuFailReport {
+        let mut failed = Vec::new();
+        for &g in gpu_ids {
+            if g < self.cluster.num_gpus && self.failed_gpus.insert(g) {
+                failed.push(g);
+            }
+        }
+        let displaced_idx: Vec<usize> = self
+            .residents
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| {
+                r.deployment.placements.iter().any(|p| self.failed_gpus.contains(&p.gpu))
+            })
+            .map(|(i, _)| i)
+            .collect();
+        let displaced = displaced_idx.len();
+        let mut evicted: Vec<String> = Vec::new();
+        let mut replaced = 0usize;
+        if displaced > 0 {
+            // survivors stay put: their holds are fixed before any
+            // displaced tenant is re-seated
+            let holds = self.resident_holds();
+            let mut held = self.base_holds();
+            for (i, h) in holds.iter().enumerate() {
+                if !displaced_idx.contains(&i) {
+                    merge_reservations(&mut held, h);
+                }
+            }
+            let mut order = displaced_idx.clone();
+            order.sort_by(|&a, &b| {
+                let qa = self.residents[a].allocation.total_quota();
+                let qb = self.residents[b].allocation.total_quota();
+                qb.partial_cmp(&qa)
+                    .unwrap()
+                    .then(self.residents[a].id.cmp(&self.residents[b].id))
+            });
+            let mut planned: Vec<(usize, Allocation, Deployment)> = Vec::new();
+            let mut drop_idx: Vec<usize> = Vec::new();
+            for &i in &order {
+                let r = &self.residents[i];
+                let greedy = self.solve_cache.plan(
+                    &PlanRequest::new(
+                        Objective::Repack { allocation: r.allocation.clone() },
+                        ClusterState::with_reservations(&self.cluster, &held),
+                        &r.pipeline,
+                        &r.predictors,
+                    )
+                    .batch(self.cfg.batch)
+                    .sa(self.cfg.sa)
+                    .qos_headroom(self.cfg.qos_headroom),
+                );
+                let pair = match greedy {
+                    Ok(s) => Some((s.allocation, s.deployment)),
+                    Err(_) => {
+                        self.plan_into(&r.pipeline, &r.predictors, r.plan_qps, &held).ok()
+                    }
+                };
+                match pair {
+                    Some((alloc, dep)) => {
+                        let res = reservations_for(&r.pipeline, &self.cluster, &dep);
+                        merge_reservations(&mut held, &res);
+                        planned.push((i, alloc, dep));
+                    }
+                    None => drop_idx.push(i),
+                }
+            }
+            replaced = planned.len();
+            for (i, alloc, dep) in planned {
+                self.residents[i].allocation = alloc;
+                self.residents[i].deployment = dep;
+            }
+            drop_idx.sort_unstable();
+            for &i in drop_idx.iter().rev() {
+                evicted.push(self.residents[i].name.clone());
+                self.residents.remove(i);
+            }
+            evicted.reverse();
+        }
+        // QoS enforcement: consolidation concentrates bandwidth pressure
+        // on fewer devices; shed load until every survivor's predicted
+        // p99 is back within (slack-adjusted) target
+        evicted.extend(self.enforce_qos());
+        GpuFailReport { failed, displaced, replaced, evicted }
+    }
+
+    /// Return the listed GPUs to service. Placement opens up
+    /// immediately; whether residents actually spread back is the
+    /// normal churn-gated re-pack's call.
+    pub fn recover_gpus(&mut self, gpu_ids: &[usize]) -> RepackPlan {
+        for g in gpu_ids {
+            self.failed_gpus.remove(g);
+        }
+        self.repack()
+    }
+
+    /// Predicted-QoS audit of the current resident set: every resident
+    /// whose predicted p99 under full neighbor pressure exceeds its
+    /// *raw* QoS target, as `(name, predicted_p99_s, target_s)`. The
+    /// dev `qos_slack` is deliberately ignored — this is the invariant
+    /// the fuzz harness checks, so violations a slackened admission let
+    /// in are still visible here.
+    pub fn qos_audit(&self) -> Vec<(String, f64, f64)> {
+        self.audit_against(1.0)
+    }
+
+    fn audit_against(&self, slack: f64) -> Vec<(String, f64, f64)> {
+        let holds = self.resident_holds();
+        let mut out = Vec::new();
+        for (i, r) in self.residents.iter().enumerate() {
+            let others = self.fold_holds(&holds, Some(i));
+            let p99 = self.tenant_p99(
+                &r.pipeline,
+                &r.predictors,
+                &r.allocation,
+                r.plan_qps,
+                &others,
+            );
+            if p99 > r.pipeline.qos_target_s * slack {
+                out.push((r.name.clone(), p99, r.pipeline.qos_target_s));
+            }
+        }
+        out
+    }
+
+    /// Evict residents until every survivor passes the slack-adjusted
+    /// QoS audit: best-effort tenants go first (largest footprint,
+    /// lowest id on ties — the preemption order), then the worst
+    /// relative violator itself. Each round removes one resident, so
+    /// this terminates. Returns the evicted names in order.
+    fn enforce_qos(&mut self) -> Vec<String> {
+        let mut evicted = Vec::new();
+        while !self.audit_against(self.cfg.qos_slack).is_empty() {
+            let victim = self
+                .residents
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| r.priority == Priority::BestEffort)
+                .max_by(|(_, a), (_, b)| {
+                    a.allocation
+                        .total_quota()
+                        .partial_cmp(&b.allocation.total_quota())
+                        .unwrap()
+                        .then(b.id.cmp(&a.id))
+                })
+                .map(|(pos, _)| pos)
+                .or_else(|| {
+                    let audit = self.audit_against(self.cfg.qos_slack);
+                    let worst = audit.iter().max_by(|a, b| {
+                        (a.1 / a.2).partial_cmp(&(b.1 / b.2)).unwrap()
+                    })?;
+                    self.residents.iter().position(|r| r.name == worst.0)
+                });
+            match victim {
+                Some(pos) => {
+                    evicted.push(self.residents[pos].name.clone());
+                    self.residents.remove(pos);
+                }
+                None => break,
+            }
+        }
+        evicted
+    }
+
+    /// The offered-load model of a resident (`None` when `id` is not
+    /// resident) — the replay's flash-crowd bookkeeping reads this.
+    pub fn resident_arrivals(&self, id: u64) -> Option<&ArrivalProcess> {
+        self.residents.iter().find(|r| r.id == id).map(|r| &r.arrivals)
+    }
+
+    /// Re-pin a resident's offered-load model. The admitted *plan* is
+    /// untouched — a flash crowd changes what the tenant offers, not
+    /// what it was promised — so every placement and reservation stays.
+    /// Returns false when `id` is not resident.
+    pub fn set_resident_arrivals(&mut self, id: u64, arrivals: ArrivalProcess) -> bool {
+        match self.residents.iter_mut().find(|r| r.id == id) {
+            Some(r) => {
+                r.arrivals = arrivals;
+                true
+            }
+            None => false,
         }
     }
 }
@@ -770,6 +1176,13 @@ pub struct ReplayConfig {
     /// re-runs simulations whose results are already known (the golden
     /// suite pins the equality).
     pub dedup: bool,
+    /// Run the predicted-QoS audit ([`AdmissionController::qos_audit`])
+    /// after every event and record violations in
+    /// [`ReplayReport::qos_violations`]. Off by default — the audit is
+    /// pure observation (decisions and fingerprints are unchanged), but
+    /// it costs an O(residents²) predictor pass per event, which the
+    /// benches should not pay.
+    pub audit_qos: bool,
 }
 
 impl Default for ReplayConfig {
@@ -779,6 +1192,7 @@ impl Default for ReplayConfig {
             queries: 1_000,
             threads: 0,
             dedup: true,
+            audit_qos: false,
         }
     }
 }
@@ -830,6 +1244,17 @@ pub struct IntervalReport {
     pub qos_met: Vec<bool>,
 }
 
+/// One predicted-QoS violation observed by the replay audit
+/// ([`ReplayConfig::audit_qos`]): at time `t_s`, resident `tenant`'s
+/// predicted p99 exceeded its raw target.
+#[derive(Debug, Clone)]
+pub struct QosViolationRecord {
+    pub t_s: f64,
+    pub tenant: String,
+    pub predicted_p99_s: f64,
+    pub target_s: f64,
+}
+
 /// Full outcome of a trace replay.
 #[derive(Debug, Clone)]
 pub struct ReplayReport {
@@ -846,6 +1271,18 @@ pub struct ReplayReport {
     pub intervals_simulated: usize,
     /// Planner solve-cache counters of the replay's controller.
     pub solve_cache: CacheStats,
+    /// Predicted-QoS violations the per-event audit caught (empty
+    /// unless [`ReplayConfig::audit_qos`]; always empty on a healthy
+    /// controller — the fuzz harness asserts exactly that). Excluded
+    /// from [`fingerprint`](ReplayReport::fingerprint), which predates
+    /// the audit.
+    pub qos_violations: Vec<QosViolationRecord>,
+    /// Applied re-packs that *increased* the GPU count — capacity
+    /// stranding, which the hysteresis gate makes impossible by
+    /// construction (`gain = GPUs freed × rate` is 0 when nothing
+    /// frees); the fuzz harness pins the count at 0. Also excluded from
+    /// the fingerprint.
+    pub repack_regressions: usize,
 }
 
 impl ReplayReport {
@@ -912,30 +1349,57 @@ pub fn replay_trace(
     let mut ctl = AdmissionController::new(cluster.clone(), cfg.admission.clone());
     // trace tenant id -> controller resident id
     let mut resident_ids: Vec<(u64, u64)> = Vec::new();
-    let mut events = Vec::with_capacity(trace.events.len());
+    // bursts are expanded (synthesized end events, canonical re-sort)
+    // only when present, so burst-free traces replay their event list
+    // verbatim — hand-built golden traces included
+    let expanded;
+    let trace_events: &[TenantTraceEvent] = if trace.has_bursts() {
+        expanded = trace.expanded_events();
+        &expanded
+    } else {
+        &trace.events
+    };
+    let mut events = Vec::with_capacity(trace_events.len());
     let mut peak_residents = 0usize;
     let mut repacks_applied = 0usize;
+    let mut repack_regressions = 0usize;
+    let mut qos_violations: Vec<QosViolationRecord> = Vec::new();
+    // trace tenant id -> (pre-burst base arrivals, open burst depth)
+    let mut burst_state: HashMap<u64, (ArrivalProcess, usize)> = HashMap::new();
     // interval snapshots: (t_start, owned copies of the resident set)
     type Snapshot = (f64, Vec<(String, Pipeline, Deployment, ArrivalProcess)>);
     let mut snapshots: Vec<Snapshot> = Vec::new();
 
-    for e in &trace.events {
+    for e in trace_events {
         let (desc, decision) = match &e.kind {
-            TraceEventKind::Arrive { pipeline, name, arrivals, plan_qps } => {
+            TraceEventKind::Arrive { pipeline, name, arrivals, plan_qps, priority } => {
                 let desc = format!("arrive {pipeline} @ {plan_qps:.0} qps");
                 let p = crate::suite::pipeline_by_name(pipeline)
                     .ok_or_else(|| format!("trace names unknown pipeline '{pipeline}'"))?;
                 let name = name
                     .clone()
                     .unwrap_or_else(|| format!("{pipeline}#{}", e.tenant));
-                let decision =
-                    match ctl.try_admit(&name, &p, arrivals.clone(), *plan_qps) {
-                        Ok(id) => {
-                            resident_ids.push((e.tenant, id));
+                let decision = match ctl.admit_preempting(
+                    &name,
+                    &p,
+                    arrivals.clone(),
+                    *plan_qps,
+                    *priority,
+                ) {
+                    Ok((id, evicted)) => {
+                        resident_ids.push((e.tenant, id));
+                        if evicted.is_empty() {
                             "admitted".to_string()
+                        } else {
+                            // preempted tenants left the resident set
+                            resident_ids.retain(|&(_, rid)| {
+                                ctl.residents().iter().any(|r| r.id == rid)
+                            });
+                            format!("admitted; preempted {}", evicted.join(","))
                         }
-                        Err(reason) => format!("rejected: {reason}"),
-                    };
+                    }
+                    Err(reason) => format!("rejected: {reason}"),
+                };
                 (desc, decision)
             }
             TraceEventKind::Shrink { target_qps } => {
@@ -958,6 +1422,9 @@ pub fn replay_trace(
                         let plan = ctl.depart(id).expect("resident departs");
                         if plan.applied {
                             repacks_applied += 1;
+                            if plan.gpus_after > plan.gpus_before {
+                                repack_regressions += 1;
+                            }
                         }
                         plan.summary()
                     }
@@ -965,7 +1432,78 @@ pub fn replay_trace(
                 };
                 (desc, decision)
             }
+            TraceEventKind::Burst { rate_mult, duration_s } => {
+                let desc = format!("burst x{rate_mult:.1} for {duration_s:.0}s");
+                let decision = match resident_ids.iter().find(|(t, _)| *t == e.tenant) {
+                    Some(&(_, id)) => {
+                        let cur = ctl
+                            .resident_arrivals(id)
+                            .expect("resident has arrivals")
+                            .clone();
+                        let entry = burst_state
+                            .entry(e.tenant)
+                            .or_insert_with(|| (cur.clone(), 0));
+                        entry.1 += 1;
+                        let new_peak = cur.peak_qps() * rate_mult;
+                        ctl.set_resident_arrivals(id, cur.scaled_to_peak(new_peak));
+                        format!("offered load x{rate_mult:.1} -> {new_peak:.0} qps peak")
+                    }
+                    None => "no-op (was not admitted)".to_string(),
+                };
+                (desc, decision)
+            }
+            TraceEventKind::BurstEnd => {
+                let desc = "burst end".to_string();
+                let decision = match resident_ids.iter().find(|(t, _)| *t == e.tenant) {
+                    Some(&(_, id)) => match burst_state.get_mut(&e.tenant) {
+                        Some(entry) if entry.1 > 1 => {
+                            entry.1 -= 1;
+                            "nested burst still open".to_string()
+                        }
+                        Some(_) => {
+                            let (base, _) = burst_state.remove(&e.tenant).unwrap();
+                            let peak = base.peak_qps();
+                            ctl.set_resident_arrivals(id, base);
+                            format!("offered load restored -> {peak:.0} qps peak")
+                        }
+                        None => "no-op (burst never applied)".to_string(),
+                    },
+                    None => "no-op (was not admitted)".to_string(),
+                };
+                (desc, decision)
+            }
+            TraceEventKind::GpuFail { gpu_ids } => {
+                let desc = format!("gpufail {gpu_ids:?}");
+                let rep = ctl.fail_gpus(gpu_ids);
+                // evicted tenants leave the id map so later events no-op
+                if !rep.evicted.is_empty() {
+                    resident_ids
+                        .retain(|&(_, rid)| ctl.residents().iter().any(|r| r.id == rid));
+                }
+                (desc, rep.summary())
+            }
+            TraceEventKind::GpuRecover { gpu_ids } => {
+                let desc = format!("gpurecover {gpu_ids:?}");
+                let plan = ctl.recover_gpus(gpu_ids);
+                if plan.applied {
+                    repacks_applied += 1;
+                    if plan.gpus_after > plan.gpus_before {
+                        repack_regressions += 1;
+                    }
+                }
+                (desc, plan.summary())
+            }
         };
+        if cfg.audit_qos {
+            for (tenant, predicted_p99_s, target_s) in ctl.qos_audit() {
+                qos_violations.push(QosViolationRecord {
+                    t_s: e.t_s,
+                    tenant,
+                    predicted_p99_s,
+                    target_s,
+                });
+            }
+        }
         peak_residents = peak_residents.max(ctl.residents().len());
         events.push(ReplayEvent {
             t_s: e.t_s,
@@ -1106,6 +1644,8 @@ pub fn replay_trace(
         intervals,
         intervals_simulated,
         solve_cache: ctl.cache_stats(),
+        qos_violations,
+        repack_regressions,
     })
 }
 
@@ -1130,6 +1670,10 @@ pub fn static_partition_replay(
     cfg: &AdmissionConfig,
 ) -> Result<StaticReplayReport, String> {
     let mut free = cluster.num_gpus;
+    // failed GPU -> whether it actually debited the free pool (a
+    // failure landing on a fully-held pool debits nothing, so its
+    // recovery must credit nothing — no phantom capacity)
+    let mut failed: std::collections::BTreeMap<usize, bool> = std::collections::BTreeMap::new();
     // trace tenant id -> GPUs held
     let mut holds: Vec<(u64, usize)> = Vec::new();
     let mut admitted = 0usize;
@@ -1189,8 +1733,35 @@ pub fn static_partition_replay(
             }
             // static partitioning has no online shrink: dedicated whole
             // GPUs stay dedicated until departure — exactly the rigidity
-            // the shared planner's Objective::Shrink removes
-            TraceEventKind::Shrink { .. } => {}
+            // the shared planner's Objective::Shrink removes. Bursts
+            // only change offered load, which the baseline never
+            // measures.
+            TraceEventKind::Shrink { .. }
+            | TraceEventKind::Burst { .. }
+            | TraceEventKind::BurstEnd => {}
+            // whole-GPU accounting: a failed device shrinks the free
+            // pool (residents on it are assumed re-seated from the free
+            // pool first — the baseline has no placement to displace)
+            TraceEventKind::GpuFail { gpu_ids } => {
+                for &g in gpu_ids {
+                    if g < cluster.num_gpus && !failed.contains_key(&g) {
+                        let debited = free > 0;
+                        if debited {
+                            free -= 1;
+                        }
+                        failed.insert(g, debited);
+                    }
+                }
+            }
+            TraceEventKind::GpuRecover { gpu_ids } => {
+                for &g in gpu_ids {
+                    if let Some(debited) = failed.remove(&g) {
+                        if debited {
+                            free += 1;
+                        }
+                    }
+                }
+            }
         }
         peak_residents = peak_residents.max(holds.len());
         if !holds.is_empty() {

@@ -40,13 +40,16 @@ use std::collections::HashMap;
 
 use crate::config::ClusterSpec;
 use crate::coordinator::admission::{
-    self, AdmissionConfig, AdmissionController, IntervalReport, RejectReason, RepackPlan,
-    ReplayConfig, ReplayEvent, ReplayReport, ShrinkReport,
+    self, AdmissionConfig, AdmissionController, GpuFailReport, IntervalReport,
+    QosViolationRecord, RejectReason, RepackPlan, ReplayConfig, ReplayEvent, ReplayReport,
+    ShrinkReport,
 };
 use crate::deploy::gpus_in_use;
 use crate::planner::CacheStats;
 use crate::sim::{ClusterSim, Deployment, SimOptions, Simulator, TenantSpec};
-use crate::suite::workload::{ArrivalProcess, TenantTrace, TraceEventKind};
+use crate::suite::workload::{
+    ArrivalProcess, Priority, TenantTrace, TenantTraceEvent, TraceEventKind,
+};
 use crate::suite::Pipeline;
 use crate::util::{par, rng};
 
@@ -240,15 +243,43 @@ impl CellRouter {
         arrivals: ArrivalProcess,
         plan_qps: f64,
     ) -> Result<(u64, usize), RejectReason> {
+        self.try_admit_prio(name, pipeline, arrivals, plan_qps, Priority::LatencyCritical)
+            .map(|(id, cell, _)| (id, cell))
+    }
+
+    /// [`try_admit`](Self::try_admit) with an explicit service tier and
+    /// best-effort preemption. Two passes over the same
+    /// least-utilized-first cell order: plain admission everywhere
+    /// first, then — only for a latency-critical arrival every cell
+    /// turned away — a preemption pass over the cells that actually
+    /// house best-effort residents (so a best-effort-free fleet behaves
+    /// exactly like plain routing, counters included). The reported
+    /// rejection stays the *first-choice* cell's plain reason; the
+    /// returned eviction list is empty when plain admission sufficed.
+    pub fn try_admit_prio(
+        &mut self,
+        name: &str,
+        pipeline: &Pipeline,
+        arrivals: ArrivalProcess,
+        plan_qps: f64,
+        priority: Priority,
+    ) -> Result<(u64, usize, Vec<String>), RejectReason> {
+        let order = self.placement_order();
         let mut first_reason: Option<RejectReason> = None;
-        for c in self.placement_order() {
-            match self.cells[c].try_admit(name, pipeline, arrivals.clone(), plan_qps) {
+        for &c in &order {
+            match self.cells[c].admit_with_priority(
+                name,
+                pipeline,
+                arrivals.clone(),
+                plan_qps,
+                priority,
+            ) {
                 Ok(local_id) => {
                     let router_id = self.next_id;
                     self.next_id += 1;
                     self.admitted += 1;
                     self.assignments.push(Assignment { router_id, cell: c, local_id });
-                    return Ok((router_id, c));
+                    return Ok((router_id, c, Vec::new()));
                 }
                 Err(reason) => {
                     if first_reason.is_none() {
@@ -257,8 +288,140 @@ impl CellRouter {
                 }
             }
         }
+        if priority == Priority::LatencyCritical {
+            for &c in &order {
+                let has_best_effort = self.cells[c]
+                    .residents()
+                    .iter()
+                    .any(|r| r.priority == Priority::BestEffort);
+                if !has_best_effort {
+                    continue;
+                }
+                if let Ok((local_id, evicted)) = self.cells[c].admit_preempting(
+                    name,
+                    pipeline,
+                    arrivals.clone(),
+                    plan_qps,
+                    priority,
+                ) {
+                    // preempted tenants left cell c's resident set
+                    self.purge_assignments(c);
+                    let router_id = self.next_id;
+                    self.next_id += 1;
+                    self.admitted += 1;
+                    self.assignments.push(Assignment { router_id, cell: c, local_id });
+                    return Ok((router_id, c, evicted));
+                }
+            }
+        }
         self.rejected += 1;
         Err(first_reason.expect("router has at least one cell"))
+    }
+
+    /// Whether `router_id` still addresses a resident (departures,
+    /// preemptions, and failure evictions all retire ids).
+    pub fn is_resident(&self, router_id: u64) -> bool {
+        self.assignments.iter().any(|a| a.router_id == router_id)
+    }
+
+    /// Drop assignments whose resident no longer lives in `cell`
+    /// (preemption and failure evictions remove residents cell-side).
+    fn purge_assignments(&mut self, cell: usize) {
+        let alive: Vec<u64> =
+            self.cells[cell].residents().iter().map(|r| r.id).collect();
+        self.assignments
+            .retain(|a| a.cell != cell || alive.contains(&a.local_id));
+    }
+
+    /// Global GPU id -> (owning cell, cell-local id). Cells own
+    /// contiguous global ranges in cell-index order —
+    /// [`split_cluster`]'s layout. `None` for out-of-range ids.
+    fn locate_gpu(&self, gpu: usize) -> Option<(usize, usize)> {
+        let mut base = 0usize;
+        for (c, spec) in self.specs.iter().enumerate() {
+            if gpu < base + spec.num_gpus {
+                return Some((c, gpu - base));
+            }
+            base += spec.num_gpus;
+        }
+        None
+    }
+
+    /// Take the listed *global* GPU ids out of service, routing each to
+    /// its owning cell ([`AdmissionController::fail_gpus`] semantics per
+    /// cell). Returns `(cell, report)` pairs in ascending cell order;
+    /// reports speak cell-local GPU ids. With one cell the raw list is
+    /// forwarded verbatim — bit-identical to the flat controller,
+    /// out-of-range filtering included.
+    pub fn fail_gpus(&mut self, gpu_ids: &[usize]) -> Vec<(usize, GpuFailReport)> {
+        if self.cells.len() == 1 {
+            let rep = self.cells[0].fail_gpus(gpu_ids);
+            self.purge_assignments(0);
+            return vec![(0, rep)];
+        }
+        let mut per_cell: Vec<Vec<usize>> = vec![Vec::new(); self.cells.len()];
+        for &g in gpu_ids {
+            if let Some((c, local)) = self.locate_gpu(g) {
+                per_cell[c].push(local);
+            }
+        }
+        let mut out = Vec::new();
+        for (c, locals) in per_cell.into_iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            let rep = self.cells[c].fail_gpus(&locals);
+            self.purge_assignments(c);
+            out.push((c, rep));
+        }
+        out
+    }
+
+    /// Return the listed *global* GPU ids to service; each owning cell
+    /// runs its normal churn-gated re-pack. Same shape and single-cell
+    /// verbatim-forwarding contract as [`fail_gpus`](Self::fail_gpus).
+    pub fn recover_gpus(&mut self, gpu_ids: &[usize]) -> Vec<(usize, RepackPlan)> {
+        if self.cells.len() == 1 {
+            return vec![(0, self.cells[0].recover_gpus(gpu_ids))];
+        }
+        let mut per_cell: Vec<Vec<usize>> = vec![Vec::new(); self.cells.len()];
+        for &g in gpu_ids {
+            if let Some((c, local)) = self.locate_gpu(g) {
+                per_cell[c].push(local);
+            }
+        }
+        let mut out = Vec::new();
+        for (c, locals) in per_cell.into_iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            out.push((c, self.cells[c].recover_gpus(&locals)));
+        }
+        out
+    }
+
+    /// Fleet-wide predicted-QoS audit: the per-cell
+    /// [`AdmissionController::qos_audit`] results concatenated in cell
+    /// order (cells share nothing, so no cross-cell interference term
+    /// exists to add).
+    pub fn qos_audit(&self) -> Vec<(String, f64, f64)> {
+        self.cells.iter().flat_map(|c| c.qos_audit()).collect()
+    }
+
+    /// The offered-load model of a resident, by router id.
+    pub fn resident_arrivals(&self, router_id: u64) -> Option<&ArrivalProcess> {
+        let a = self.assignments.iter().find(|a| a.router_id == router_id)?;
+        self.cells[a.cell].resident_arrivals(a.local_id)
+    }
+
+    /// Re-pin a resident's offered-load model (flash-crowd bookkeeping;
+    /// the admitted plan is untouched). False when `router_id` is not
+    /// resident.
+    pub fn set_resident_arrivals(&mut self, router_id: u64, arrivals: ArrivalProcess) -> bool {
+        match self.assignments.iter().find(|a| a.router_id == router_id).copied() {
+            Some(a) => self.cells[a.cell].set_resident_arrivals(a.local_id, arrivals),
+            None => false,
+        }
     }
 
     /// Shrink a resident in place (the owning cell re-plans it).
@@ -336,9 +499,19 @@ impl CellRouter {
                 .iter()
                 .find(|r| r.id == local_id)
                 .expect("candidate resident exists");
-            let (name, pipeline, arrivals, plan_qps) =
-                (r.name.clone(), r.pipeline.clone(), r.arrivals.clone(), r.plan_qps);
-            return match self.cells[target].try_admit(&name, &pipeline, arrivals, plan_qps) {
+            let (name, pipeline, arrivals, plan_qps, priority) = (
+                r.name.clone(),
+                r.pipeline.clone(),
+                r.arrivals.clone(),
+                r.plan_qps,
+                r.priority,
+            );
+            // plain admission with the migrant's own tier — a migration
+            // must never preempt anyone, and a best-effort tenant stays
+            // best-effort in its new cell
+            return match self.cells[target].admit_with_priority(
+                &name, &pipeline, arrivals, plan_qps, priority,
+            ) {
                 Ok(new_local) => {
                     let donor_plan =
                         self.cells[d].depart(local_id).expect("donor resident departs");
@@ -410,6 +583,9 @@ pub struct CellsReplayConfig {
     /// Per-cell content-addressed interval dedup (same contract as
     /// [`ReplayConfig::dedup`]: bit-identical on or off).
     pub dedup: bool,
+    /// Run the fleet-wide predicted-QoS audit after every event (same
+    /// contract as [`ReplayConfig::audit_qos`]: pure observation).
+    pub audit_qos: bool,
 }
 
 impl Default for CellsReplayConfig {
@@ -419,6 +595,7 @@ impl Default for CellsReplayConfig {
             queries: 1_000,
             threads: 0,
             dedup: true,
+            audit_qos: false,
         }
     }
 }
@@ -436,6 +613,7 @@ impl CellsReplayConfig {
             queries: replay.queries,
             threads: replay.threads,
             dedup: replay.dedup,
+            audit_qos: replay.audit_qos,
         }
     }
 }
@@ -502,9 +680,23 @@ pub fn replay_trace_cells(
     let n_cells = router.num_cells();
     // trace tenant id -> router resident id
     let mut resident_ids: Vec<(u64, u64)> = Vec::new();
-    let mut events = Vec::with_capacity(trace.events.len());
+    // bursts are expanded (synthesized end events, canonical re-sort)
+    // only when present, so burst-free traces replay their event list
+    // verbatim — exactly the flat replay's contract
+    let expanded;
+    let trace_events: &[TenantTraceEvent] = if trace.has_bursts() {
+        expanded = trace.expanded_events();
+        &expanded
+    } else {
+        &trace.events
+    };
+    let mut events = Vec::with_capacity(trace_events.len());
     let mut peak_residents = 0usize;
     let mut repacks_applied = 0usize;
+    let mut repack_regressions = 0usize;
+    let mut qos_violations: Vec<QosViolationRecord> = Vec::new();
+    // trace tenant id -> (pre-burst base arrivals, open burst depth)
+    let mut burst_state: HashMap<u64, (ArrivalProcess, usize)> = HashMap::new();
     let mut tenant_cells: Vec<(u64, usize)> = Vec::new();
     type Snapshot = (f64, Vec<(String, Pipeline, Deployment, ArrivalProcess)>);
     let mut cell_snapshots: Vec<Vec<Snapshot>> = vec![Vec::new(); n_cells];
@@ -513,24 +705,35 @@ pub fn replay_trace_cells(
     let mut snapshot_order: Vec<(usize, usize)> = Vec::new();
     let mut cell_peaks = vec![0usize; n_cells];
 
-    for e in &trace.events {
+    for e in trace_events {
         let (desc, decision) = match &e.kind {
-            TraceEventKind::Arrive { pipeline, name, arrivals, plan_qps } => {
+            TraceEventKind::Arrive { pipeline, name, arrivals, plan_qps, priority } => {
                 let desc = format!("arrive {pipeline} @ {plan_qps:.0} qps");
                 let p = crate::suite::pipeline_by_name(pipeline)
                     .ok_or_else(|| format!("trace names unknown pipeline '{pipeline}'"))?;
                 let name = name
                     .clone()
                     .unwrap_or_else(|| format!("{pipeline}#{}", e.tenant));
-                let decision =
-                    match router.try_admit(&name, &p, arrivals.clone(), *plan_qps) {
-                        Ok((id, cell)) => {
-                            resident_ids.push((e.tenant, id));
-                            tenant_cells.push((e.tenant, cell));
+                let decision = match router.try_admit_prio(
+                    &name,
+                    &p,
+                    arrivals.clone(),
+                    *plan_qps,
+                    *priority,
+                ) {
+                    Ok((id, cell, evicted)) => {
+                        resident_ids.push((e.tenant, id));
+                        tenant_cells.push((e.tenant, cell));
+                        if evicted.is_empty() {
                             "admitted".to_string()
+                        } else {
+                            // preempted tenants left the resident set
+                            resident_ids.retain(|&(_, rid)| router.is_resident(rid));
+                            format!("admitted; preempted {}", evicted.join(","))
                         }
-                        Err(reason) => format!("rejected: {reason}"),
-                    };
+                    }
+                    Err(reason) => format!("rejected: {reason}"),
+                };
                 (desc, decision)
             }
             TraceEventKind::Shrink { target_qps } => {
@@ -553,6 +756,9 @@ pub fn replay_trace_cells(
                         let out = router.depart(id).expect("resident departs");
                         if out.plan.applied {
                             repacks_applied += 1;
+                            if out.plan.gpus_after > out.plan.gpus_before {
+                                repack_regressions += 1;
+                            }
                         }
                         let mut decision = out.plan.summary();
                         for m in &out.migrations {
@@ -570,7 +776,104 @@ pub fn replay_trace_cells(
                 };
                 (desc, decision)
             }
+            TraceEventKind::Burst { rate_mult, duration_s } => {
+                let desc = format!("burst x{rate_mult:.1} for {duration_s:.0}s");
+                let decision = match resident_ids.iter().find(|(t, _)| *t == e.tenant) {
+                    Some(&(_, id)) => {
+                        let cur = router
+                            .resident_arrivals(id)
+                            .expect("resident has arrivals")
+                            .clone();
+                        let entry = burst_state
+                            .entry(e.tenant)
+                            .or_insert_with(|| (cur.clone(), 0));
+                        entry.1 += 1;
+                        let new_peak = cur.peak_qps() * rate_mult;
+                        router.set_resident_arrivals(id, cur.scaled_to_peak(new_peak));
+                        format!("offered load x{rate_mult:.1} -> {new_peak:.0} qps peak")
+                    }
+                    None => "no-op (was not admitted)".to_string(),
+                };
+                (desc, decision)
+            }
+            TraceEventKind::BurstEnd => {
+                let desc = "burst end".to_string();
+                let decision = match resident_ids.iter().find(|(t, _)| *t == e.tenant) {
+                    Some(&(_, id)) => match burst_state.get_mut(&e.tenant) {
+                        Some(entry) if entry.1 > 1 => {
+                            entry.1 -= 1;
+                            "nested burst still open".to_string()
+                        }
+                        Some(_) => {
+                            let (base, _) = burst_state.remove(&e.tenant).unwrap();
+                            let peak = base.peak_qps();
+                            router.set_resident_arrivals(id, base);
+                            format!("offered load restored -> {peak:.0} qps peak")
+                        }
+                        None => "no-op (burst never applied)".to_string(),
+                    },
+                    None => "no-op (was not admitted)".to_string(),
+                };
+                (desc, decision)
+            }
+            TraceEventKind::GpuFail { gpu_ids } => {
+                let desc = format!("gpufail {gpu_ids:?}");
+                let reports = router.fail_gpus(gpu_ids);
+                if reports.iter().any(|(_, r)| !r.evicted.is_empty()) {
+                    // evicted tenants leave the id map so later events no-op
+                    resident_ids.retain(|&(_, rid)| router.is_resident(rid));
+                }
+                // one cell prints the bare flat summary (cells = 1 is
+                // bit-identical to the flat replay); otherwise each
+                // affected cell reports in cell-local GPU ids
+                let decision = if n_cells == 1 {
+                    reports[0].1.summary()
+                } else if reports.is_empty() {
+                    "no-op (no owned gpus)".to_string()
+                } else {
+                    reports
+                        .iter()
+                        .map(|(c, r)| format!("cell {c}: {}", r.summary()))
+                        .collect::<Vec<_>>()
+                        .join(" | ")
+                };
+                (desc, decision)
+            }
+            TraceEventKind::GpuRecover { gpu_ids } => {
+                let desc = format!("gpurecover {gpu_ids:?}");
+                let plans = router.recover_gpus(gpu_ids);
+                for (_, plan) in &plans {
+                    if plan.applied {
+                        repacks_applied += 1;
+                        if plan.gpus_after > plan.gpus_before {
+                            repack_regressions += 1;
+                        }
+                    }
+                }
+                let decision = if n_cells == 1 {
+                    plans[0].1.summary()
+                } else if plans.is_empty() {
+                    "no-op (no owned gpus)".to_string()
+                } else {
+                    plans
+                        .iter()
+                        .map(|(c, p)| format!("cell {c}: {}", p.summary()))
+                        .collect::<Vec<_>>()
+                        .join(" | ")
+                };
+                (desc, decision)
+            }
         };
+        if cfg.audit_qos {
+            for (tenant, predicted_p99_s, target_s) in router.qos_audit() {
+                qos_violations.push(QosViolationRecord {
+                    t_s: e.t_s,
+                    tenant,
+                    predicted_p99_s,
+                    target_s,
+                });
+            }
+        }
         peak_residents = peak_residents.max(router.residents_total());
         events.push(ReplayEvent {
             t_s: e.t_s,
@@ -737,6 +1040,8 @@ pub fn replay_trace_cells(
             intervals,
             intervals_simulated,
             solve_cache: router.cache_stats(),
+            qos_violations,
+            repack_regressions,
         },
         per_cell,
         migrations: router.migrations(),
@@ -902,6 +1207,45 @@ mod tests {
         assert!(out.plan.applied);
         assert!(out.migrations.is_empty());
         assert_eq!(router.cell(1).residents().len(), 1);
+    }
+
+    #[test]
+    fn all_cells_rejecting_reports_first_choice_reason() {
+        // cell 0 carries a resident, so the placement order is [1, 0]:
+        // cell 1 is the first choice. An arrival nothing can seat must
+        // come back with *cell 1's* typed reason — pinned by replaying
+        // the same admission against a standalone controller on cell
+        // 1's exact spec (empty, like the router's cell 1).
+        let cluster = ClusterSpec { num_gpus: 4, ..ClusterSpec::two_2080ti() };
+        let cfg = CellsConfig { cells: 2, ..CellsConfig::default() };
+        let mut router = CellRouter::new(&cluster, cfg).expect("router");
+        let p = real::text_to_text();
+        router
+            .try_admit("a", &p, ArrivalProcess::constant(60.0), 60.0)
+            .expect("empty fleet admits");
+        assert_eq!(router.placement_order(), vec![1, 0]);
+        let big = real::img_to_text();
+        let err = router
+            .try_admit("big", &big, ArrivalProcess::constant(100_000.0), 100_000.0)
+            .expect_err("no cell seats an impossible load");
+        assert!(
+            matches!(err, RejectReason::NoFeasiblePlan { .. }),
+            "expected NoFeasiblePlan, got: {err}"
+        );
+        let mut lone = AdmissionController::new(
+            router.cell_spec(1).clone(),
+            CellsConfig::default().admission,
+        );
+        let expect = lone
+            .try_admit("big", &big, ArrivalProcess::constant(100_000.0), 100_000.0)
+            .expect_err("standalone cell-1 replica rejects too");
+        assert_eq!(format!("{err}"), format!("{expect}"), "reason is not cell 1's");
+        // the router counted one arrival; each cell saw one attempt
+        assert_eq!(router.rejected(), 1);
+        assert_eq!(router.cell(0).rejected(), 1);
+        assert_eq!(router.cell(1).rejected(), 1);
+        // placement order stays deterministic after the rejection
+        assert_eq!(router.placement_order(), vec![1, 0]);
     }
 
     #[test]

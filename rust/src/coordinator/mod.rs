@@ -25,7 +25,8 @@ pub mod cells;
 
 pub use admission::{
     replay_trace, static_partition_replay, AdmissionConfig, AdmissionController,
-    RejectReason, RepackPlan, ReplayConfig, ReplayReport, ShrinkReport,
+    GpuFailReport, QosViolationRecord, RejectReason, RepackPlan, ReplayConfig,
+    ReplayReport, ShrinkReport,
 };
 pub use cells::{
     replay_trace_cells, split_cluster, CellMigration, CellReplayStats, CellRouter,

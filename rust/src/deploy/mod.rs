@@ -573,6 +573,33 @@ mod tests {
     }
 
     #[test]
+    fn gpus_in_use_spans_word_boundaries_on_large_clusters() {
+        let mk = |gpus: &[usize]| Deployment {
+            placements: gpus
+                .iter()
+                .map(|&g| InstancePlacement { stage: 0, gpu: g, sm_frac: 0.1 })
+                .collect(),
+            batch: 8,
+            comm: CommMode::GlobalIpc,
+        };
+        // the exact seam of the u64 bitmask words: 63 is the last bit
+        // of word 0, 64 the first bit of word 1
+        assert_eq!(gpus_in_use([&mk(&[63])]), 1);
+        assert_eq!(gpus_in_use([&mk(&[64])]), 1);
+        assert_eq!(gpus_in_use([&mk(&[63, 64, 65])]), 3);
+        // same GPU across the seam, from different deployments, is
+        // still one device
+        assert_eq!(gpus_in_use([&mk(&[64, 64]), &mk(&[64])]), 1);
+        // a datacenter-scale spread: every 64th GPU sets bit 0 of a new
+        // word, plus stragglers that straddle words mid-way
+        let spread: Vec<usize> = (0..=1024).step_by(64).chain([63, 127, 500]).collect();
+        assert_eq!(gpus_in_use([&mk(&spread)]), 17 + 3);
+        // ... and duplicates across the whole range collapse
+        let doubled: Vec<usize> = spread.iter().chain(spread.iter()).copied().collect();
+        assert_eq!(gpus_in_use([&mk(&doubled)]), 17 + 3);
+    }
+
+    #[test]
     fn deployment_admits_in_simulator() {
         // whatever deploy() accepts, the simulator must also admit
         testkit::forall_res(

@@ -731,6 +731,7 @@ pub fn admission_tables(cfg: &AdmissionExpConfig) -> Result<Vec<Table>, String> 
         batch: crate::coordinator::AdmissionConfig::default().batch,
         seed: cfg.seed,
         cells: cfg.cells,
+        break_qos: false,
     };
     admission_tables_for_trace(&cluster, &trace, knobs)
 }
@@ -743,6 +744,12 @@ pub struct ReplayKnobs {
     pub seed: u64,
     /// Cells the cluster splits into (≤ 1 = the flat controller).
     pub cells: usize,
+    /// Dev mode (`camelot admit --spec <dump> --break-qos`): disable
+    /// the admission-side QoS checks and over-commit the planner the
+    /// same way `camelot fuzz --break-qos` does, and run the
+    /// predicted-QoS audit — the reproduction path for specs the
+    /// fuzzer dumps.
+    pub break_qos: bool,
 }
 
 /// The admission experiment over an *explicit* tenant trace — the
@@ -766,6 +773,11 @@ pub fn admission_tables_for_trace(
     let mut replay_cfg = ReplayConfig { queries: knobs.queries, ..Default::default() };
     replay_cfg.admission.seed = knobs.seed;
     replay_cfg.admission.batch = knobs.batch;
+    if knobs.break_qos {
+        replay_cfg.admission.qos_headroom = 10.0;
+        replay_cfg.admission.qos_slack = f64::INFINITY;
+        replay_cfg.audit_qos = true;
+    }
     // cells ≤ 1 keeps the flat controller path (and its exact output);
     // > 1 routes through the cluster-of-cells shard and reports the
     // merged fleet view plus a per-cell breakdown table
@@ -848,6 +860,12 @@ pub fn admission_tables_for_trace(
         },
     ]);
     t4.push(&["repacks applied".to_string(), shared.repacks_applied.to_string()]);
+    if replay_cfg.audit_qos {
+        t4.push(&[
+            "predicted-QoS audit violations".to_string(),
+            shared.qos_violations.len().to_string(),
+        ]);
+    }
     // control-loop memoization observability: how much planning and
     // simulation the caches absorbed for this trace
     let sc = &shared.solve_cache;

@@ -42,7 +42,7 @@ pub mod scenario;
 
 pub use cache::{CacheStats, SolveCache};
 pub use cluster::ClusterState;
-pub use scenario::{ScenarioSpec, ScenarioTenant};
+pub use scenario::{ScenarioBurst, ScenarioGpuFailure, ScenarioSpec, ScenarioTenant};
 
 use crate::allocator::{AllocContext, SaParams};
 use crate::comm::CommMode;
@@ -144,6 +144,11 @@ impl<'a> PlanRequest<'a> {
 
     pub fn enforce_bw(mut self, enforce: bool) -> Self {
         self.enforce_bw = enforce;
+        self
+    }
+
+    pub fn qos_headroom(mut self, qos_headroom: f64) -> Self {
+        self.qos_headroom = qos_headroom;
         self
     }
 

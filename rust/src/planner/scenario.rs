@@ -46,7 +46,7 @@ use std::path::Path;
 use crate::config::ClusterSpec;
 use crate::predictor::{train_pipeline, StagePredictor};
 use crate::suite::workload::{
-    ArrivalProcess, DiurnalPattern, TenantTrace, TenantTraceEvent, TraceEventKind,
+    ArrivalProcess, DiurnalPattern, Priority, TenantTrace, TenantTraceEvent, TraceEventKind,
 };
 use crate::suite::Pipeline;
 use crate::util::json::Json;
@@ -72,6 +72,31 @@ pub struct ScenarioTenant {
     /// Resident shrink: re-admit at this lower load after planning.
     pub shrink_to: Option<f64>,
     pub shrink_at_s: Option<f64>,
+    /// Service tier (`"latency-critical"`, the default, or
+    /// `"best-effort"`): best-effort residents are preemptible when a
+    /// latency-critical arrival would otherwise be rejected.
+    pub priority: Priority,
+    /// Flash-crowd windows while resident (trace replay only).
+    pub bursts: Vec<ScenarioBurst>,
+}
+
+/// One flash-crowd window of a scenario tenant: offered load scales to
+/// `rate_mult ×` the current peak at `at_s` and restores `duration_s`
+/// later.
+#[derive(Debug, Clone, Copy)]
+pub struct ScenarioBurst {
+    pub at_s: f64,
+    pub rate_mult: f64,
+    pub duration_s: f64,
+}
+
+/// One GPU-failure window of a scenario: the listed GPUs fail at
+/// `at_s` and (optionally) return at `recover_s`.
+#[derive(Debug, Clone)]
+pub struct ScenarioGpuFailure {
+    pub at_s: f64,
+    pub gpus: Vec<usize>,
+    pub recover_s: Option<f64>,
 }
 
 /// The per-tenant objective kinds a spec may name.
@@ -94,6 +119,8 @@ pub struct ScenarioSpec {
     /// the flat admission controller, N > 1 shards the cluster.
     pub cells: usize,
     pub tenants: Vec<ScenarioTenant>,
+    /// Chaos: GPU-failure windows injected into the trace replay.
+    pub gpu_failures: Vec<ScenarioGpuFailure>,
 }
 
 impl ScenarioSpec {
@@ -113,8 +140,10 @@ impl ScenarioSpec {
     fn from_json(doc: &Json) -> Result<ScenarioSpec, String> {
         let obj = doc.as_obj().ok_or("scenario spec must be a JSON object")?;
         for key in obj.keys() {
-            const KNOWN: [&str; 7] =
-                ["name", "cluster", "batch", "seed", "queries", "cells", "tenants"];
+            const KNOWN: [&str; 8] = [
+                "name", "cluster", "batch", "seed", "queries", "cells", "tenants",
+                "gpu_failures",
+            ];
             if !KNOWN.contains(&key.as_str()) {
                 return Err(format!("unknown scenario field '{key}'"));
             }
@@ -150,11 +179,15 @@ impl ScenarioSpec {
             }
             tenants.push(tenant);
         }
-        Ok(ScenarioSpec { name, cluster, batch, seed, queries, cells, tenants })
+        let gpu_failures = parse_gpu_failures(doc.get("gpu_failures"), cluster.num_gpus)?;
+        Ok(ScenarioSpec { name, cluster, batch, seed, queries, cells, tenants, gpu_failures })
     }
 
     /// The tenants as a time-ordered arrival/departure/shrink trace for
-    /// the admission controller.
+    /// the admission controller, chaos events (flash-crowd bursts and
+    /// GPU-failure windows) included. Burst *end* events are not
+    /// emitted here — the replay synthesizes them from each burst's
+    /// `duration_s`.
     pub fn trace(&self) -> TenantTrace {
         let mut events = Vec::new();
         for (i, t) in self.tenants.iter().enumerate() {
@@ -167,6 +200,7 @@ impl ScenarioSpec {
                     name: Some(t.name.clone()),
                     arrivals: t.arrivals.clone(),
                     plan_qps: t.plan_qps,
+                    priority: t.priority,
                 },
             });
             if let Some(target) = t.shrink_to {
@@ -176,8 +210,33 @@ impl ScenarioSpec {
                     kind: TraceEventKind::Shrink { target_qps: target },
                 });
             }
+            for b in &t.bursts {
+                events.push(TenantTraceEvent {
+                    t_s: b.at_s,
+                    tenant,
+                    kind: TraceEventKind::Burst {
+                        rate_mult: b.rate_mult,
+                        duration_s: b.duration_s,
+                    },
+                });
+            }
             if let Some(at) = t.depart_s {
                 events.push(TenantTraceEvent { t_s: at, tenant, kind: TraceEventKind::Depart });
+            }
+        }
+        for f in &self.gpu_failures {
+            // tenant id 0 by convention: GPU events are fleet-scoped
+            events.push(TenantTraceEvent {
+                t_s: f.at_s,
+                tenant: 0,
+                kind: TraceEventKind::GpuFail { gpu_ids: f.gpus.clone() },
+            });
+            if let Some(r) = f.recover_s {
+                events.push(TenantTraceEvent {
+                    t_s: r,
+                    tenant: 0,
+                    kind: TraceEventKind::GpuRecover { gpu_ids: f.gpus.clone() },
+                });
             }
         }
         TenantTrace::sort_events(&mut events);
@@ -356,9 +415,10 @@ fn parse_tenant(node: &Json, index: usize) -> Result<ScenarioTenant, String> {
         .as_obj()
         .ok_or_else(|| format!("tenant #{index} must be a JSON object"))?;
     for key in obj.keys() {
-        const KNOWN: [&str; 11] = [
+        const KNOWN: [&str; 13] = [
             "name", "pipeline", "objective", "plan_qps", "arrivals", "period_s",
             "trough_frac", "arrive_s", "depart_s", "shrink_to", "shrink_at_s",
+            "priority", "bursts",
         ];
         if !KNOWN.contains(&key.as_str()) {
             return Err(format!("tenant #{index}: unknown field '{key}'"));
@@ -421,6 +481,66 @@ fn parse_tenant(node: &Json, index: usize) -> Result<ScenarioTenant, String> {
             return Err(format!("tenant '{name}': shrink_to must be positive, got {s}"));
         }
     }
+    let priority = match node.get_str("priority").unwrap_or("latency-critical") {
+        "latency-critical" => Priority::LatencyCritical,
+        "best-effort" => Priority::BestEffort,
+        other => {
+            return Err(format!(
+                "tenant '{name}': unknown priority '{other}' (latency-critical | best-effort)"
+            ))
+        }
+    };
+    let mut bursts = Vec::new();
+    if let Some(arr) = node.get("bursts") {
+        let arr = arr
+            .as_arr()
+            .ok_or_else(|| format!("tenant '{name}': 'bursts' must be an array"))?;
+        for (j, b) in arr.iter().enumerate() {
+            let obj = b
+                .as_obj()
+                .ok_or_else(|| format!("tenant '{name}': burst #{j} must be a JSON object"))?;
+            for key in obj.keys() {
+                const KNOWN: [&str; 3] = ["at_s", "rate_mult", "duration_s"];
+                if !KNOWN.contains(&key.as_str()) {
+                    return Err(format!("tenant '{name}': burst #{j}: unknown field '{key}'"));
+                }
+            }
+            let at_s = b
+                .get_f64("at_s")
+                .ok_or_else(|| format!("tenant '{name}': burst #{j} needs an 'at_s'"))?;
+            let rate_mult = b
+                .get_f64("rate_mult")
+                .ok_or_else(|| format!("tenant '{name}': burst #{j} needs a 'rate_mult'"))?;
+            if !rate_mult.is_finite() || rate_mult <= 0.0 {
+                return Err(format!(
+                    "tenant '{name}': burst #{j}: rate_mult must be positive, got {rate_mult}"
+                ));
+            }
+            let duration_s = b
+                .get_f64("duration_s")
+                .ok_or_else(|| format!("tenant '{name}': burst #{j} needs a 'duration_s'"))?;
+            if !duration_s.is_finite() || duration_s <= 0.0 {
+                return Err(format!(
+                    "tenant '{name}': burst #{j}: duration_s must be positive, got {duration_s}"
+                ));
+            }
+            // a burst opening outside the residency window would
+            // silently no-op in the replay — reject it here instead
+            if at_s < arrive_s {
+                return Err(format!(
+                    "tenant '{name}': burst #{j}: at_s {at_s} must not precede arrive_s {arrive_s}"
+                ));
+            }
+            if let Some(d) = depart_s {
+                if at_s >= d {
+                    return Err(format!(
+                        "tenant '{name}': burst #{j}: at_s {at_s} must precede depart_s {d}"
+                    ));
+                }
+            }
+            bursts.push(ScenarioBurst { at_s, rate_mult, duration_s });
+        }
+    }
     let shrink_at_s = node.get_f64("shrink_at_s");
     if shrink_to.is_some() {
         // a shrink outside the tenant's residency window would sort
@@ -453,7 +573,65 @@ fn parse_tenant(node: &Json, index: usize) -> Result<ScenarioTenant, String> {
         depart_s,
         shrink_to,
         shrink_at_s,
+        priority,
+        bursts,
     })
+}
+
+/// Parse and validate the scenario-level `gpu_failures` array against
+/// the resolved cluster size.
+fn parse_gpu_failures(
+    node: Option<&Json>,
+    num_gpus: usize,
+) -> Result<Vec<ScenarioGpuFailure>, String> {
+    let Some(node) = node else {
+        return Ok(Vec::new());
+    };
+    let arr = node.as_arr().ok_or("'gpu_failures' must be an array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (j, f) in arr.iter().enumerate() {
+        let obj = f
+            .as_obj()
+            .ok_or_else(|| format!("gpu failure #{j} must be a JSON object"))?;
+        for key in obj.keys() {
+            const KNOWN: [&str; 3] = ["at_s", "gpus", "recover_s"];
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(format!("gpu failure #{j}: unknown field '{key}'"));
+            }
+        }
+        let at_s = f
+            .get_f64("at_s")
+            .ok_or_else(|| format!("gpu failure #{j} needs an 'at_s'"))?;
+        let gpus_json = f
+            .get("gpus")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("gpu failure #{j} needs a 'gpus' array"))?;
+        if gpus_json.is_empty() {
+            return Err(format!("gpu failure #{j}: 'gpus' must not be empty"));
+        }
+        let mut gpus = Vec::with_capacity(gpus_json.len());
+        for g in gpus_json {
+            let x = g
+                .as_f64()
+                .ok_or_else(|| format!("gpu failure #{j}: gpu ids must be numbers"))?;
+            if x.fract() != 0.0 || x < 0.0 || x as usize >= num_gpus {
+                return Err(format!(
+                    "gpu failure #{j}: gpu id {x} out of range (cluster has {num_gpus} GPUs)"
+                ));
+            }
+            gpus.push(x as usize);
+        }
+        let recover_s = f.get_f64("recover_s");
+        if let Some(r) = recover_s {
+            if r <= at_s {
+                return Err(format!(
+                    "gpu failure #{j}: recover_s {r} must follow at_s {at_s}"
+                ));
+            }
+        }
+        out.push(ScenarioGpuFailure { at_s, gpus, recover_s });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -508,9 +686,122 @@ mod tests {
                 TraceEventKind::Arrive { .. } => "arrive",
                 TraceEventKind::Shrink { .. } => "shrink",
                 TraceEventKind::Depart => "depart",
+                TraceEventKind::Burst { .. } => "burst",
+                TraceEventKind::BurstEnd => "burst-end",
+                TraceEventKind::GpuFail { .. } => "gpufail",
+                TraceEventKind::GpuRecover { .. } => "gpurecover",
             })
             .collect();
         assert_eq!(kinds, ["arrive", "arrive", "shrink", "depart"]);
+    }
+
+    #[test]
+    fn parses_chaos_fields() {
+        let spec = ScenarioSpec::parse(
+            r#"{
+            "gpu_failures": [{"at_s": 100.0, "gpus": [0], "recover_s": 200.0}],
+            "tenants": [
+                {"name": "lc", "pipeline": "img-to-text", "plan_qps": 90,
+                 "bursts": [{"at_s": 30.0, "rate_mult": 2.0, "duration_s": 15.0}]},
+                {"name": "be", "pipeline": "text-to-text", "plan_qps": 40,
+                 "priority": "best-effort", "arrive_s": 5.0}
+            ]
+        }"#,
+        )
+        .unwrap();
+        assert_eq!(spec.tenants[0].priority, Priority::LatencyCritical, "default tier");
+        assert_eq!(spec.tenants[1].priority, Priority::BestEffort);
+        assert_eq!(spec.tenants[0].bursts.len(), 1);
+        assert_eq!(spec.gpu_failures.len(), 1);
+        assert_eq!(spec.gpu_failures[0].gpus, vec![0]);
+        // trace emits arrive(0), be-arrive(5), burst(30), gpufail(100),
+        // gpurecover(200) — burst ends are the replay's to synthesize
+        let trace = spec.trace();
+        let kinds: Vec<&'static str> = trace
+            .events
+            .iter()
+            .map(|e| match e.kind {
+                TraceEventKind::Arrive { .. } => "arrive",
+                TraceEventKind::Shrink { .. } => "shrink",
+                TraceEventKind::Depart => "depart",
+                TraceEventKind::Burst { .. } => "burst",
+                TraceEventKind::BurstEnd => "burst-end",
+                TraceEventKind::GpuFail { .. } => "gpufail",
+                TraceEventKind::GpuRecover { .. } => "gpurecover",
+            })
+            .collect();
+        assert_eq!(kinds, ["arrive", "arrive", "burst", "gpufail", "gpurecover"]);
+        let priorities: Vec<Priority> = trace
+            .events
+            .iter()
+            .filter_map(|e| match &e.kind {
+                TraceEventKind::Arrive { priority, .. } => Some(*priority),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(priorities, [Priority::LatencyCritical, Priority::BestEffort]);
+    }
+
+    #[test]
+    fn rejects_malformed_chaos_fields() {
+        // (fragment, expected error substring) — the strings are part
+        // of the spec surface (fuzz failure dumps lean on them), so
+        // they are pinned here
+        for (frag, want) in [
+            (
+                r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": 10,
+                    "priority": "whenever"}]}"#,
+                "unknown priority 'whenever'",
+            ),
+            (
+                r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": 10,
+                    "bursts": [{"at_s": 5, "rate_mult": 2.0, "duration_s": 10, "typo": 1}]}]}"#,
+                "burst #0: unknown field 'typo'",
+            ),
+            (
+                r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": 10,
+                    "bursts": [{"at_s": 5, "rate_mult": -2.0, "duration_s": 10}]}]}"#,
+                "rate_mult must be positive",
+            ),
+            (
+                r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": 10,
+                    "bursts": [{"at_s": 5, "rate_mult": 2.0, "duration_s": 0}]}]}"#,
+                "duration_s must be positive",
+            ),
+            (
+                r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": 10, "arrive_s": 50,
+                    "bursts": [{"at_s": 5, "rate_mult": 2.0, "duration_s": 10}]}]}"#,
+                "must not precede arrive_s",
+            ),
+            (
+                r#"{"tenants": [{"pipeline": "img-to-text", "plan_qps": 10, "depart_s": 100,
+                    "bursts": [{"at_s": 150, "rate_mult": 2.0, "duration_s": 10}]}]}"#,
+                "must precede depart_s",
+            ),
+            (
+                r#"{"gpu_failures": [{"at_s": 5, "gpus": [7]}],
+                    "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "gpu id 7 out of range",
+            ),
+            (
+                r#"{"gpu_failures": [{"at_s": 5, "gpus": []}],
+                    "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "'gpus' must not be empty",
+            ),
+            (
+                r#"{"gpu_failures": [{"at_s": 50, "gpus": [0], "recover_s": 50}],
+                    "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "recover_s 50 must follow at_s 50",
+            ),
+            (
+                r#"{"gpu_failures": [{"at_s": 5, "gpus": [0], "undo_s": 9}],
+                    "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "gpu failure #0: unknown field 'undo_s'",
+            ),
+        ] {
+            let err = ScenarioSpec::parse(frag).expect_err(want);
+            assert!(err.contains(want), "expected '{want}' in '{err}'");
+        }
     }
 
     #[test]

@@ -1,0 +1,466 @@
+//! Chaos & burst scenario fuzzer (`camelot fuzz`): seed-reproducible
+//! generation of valid [`ScenarioSpec`]s — mixed service tiers, flash
+//! crowds, diurnal offered load, GPU failure/recovery windows — plus a
+//! property harness that replays every generated scenario through the
+//! admission/cells stack and checks the QoS invariants end to end:
+//!
+//!  (a) **QoS audit clean** — with [`ReplayConfig::audit_qos`] on, no
+//!      admitted tenant's predicted p99 exceeds its target at any
+//!      event (the controller's own admission / enforcement / re-pack
+//!      gates must make this hold by construction);
+//!  (b) **re-pack never strands capacity** — a departure re-pack that
+//!      is applied never leaves the fleet on *more* GPUs than before
+//!      ([`ReplayReport::repack_regressions`] stays 0);
+//!  (c) **thread-count determinism** — the full replay fingerprint is
+//!      bit-identical across 1/2/8 worker threads, in the flat
+//!      controller and the cluster-of-cells router alike;
+//!  (d) **replayable failures** — any violated scenario is surfaced as
+//!      the exact generated JSON text (plus the run seed), which
+//!      `camelot admit --spec <dump.json>` replays verbatim.
+//!
+//! The generator emits JSON *text* and the harness re-parses it via
+//! [`ScenarioSpec::parse`], so the dumped artifact — not some internal
+//! struct — is what was actually checked: a dump always reproduces.
+//! Scenario `index` under run seed `S` draws from
+//! `Rng::new(mix_seed(S, index))`, so single scenarios re-run in
+//! isolation bit-identically.
+
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+use crate::coordinator::admission::{replay_trace, ReplayConfig};
+use crate::coordinator::cells::{replay_trace_cells, CellsConfig, CellsReplayConfig};
+use crate::coordinator::AdmissionConfig;
+use crate::planner::ScenarioSpec;
+use crate::util::rng::{mix_seed, Rng};
+
+/// Thread counts every scenario's replay is checked across
+/// (invariant (c)).
+pub const THREAD_MATRIX: [usize; 3] = [1, 2, 8];
+
+/// Knobs for one fuzzing run.
+#[derive(Debug, Clone)]
+pub struct FuzzConfig {
+    /// Scenarios to generate and check.
+    pub scenarios: usize,
+    /// Run seed; scenario `i` draws from `mix_seed(seed, i)`.
+    pub seed: u64,
+    /// Queries per interval validation, written into every generated
+    /// spec (small keeps a 1000-scenario run brisk; the dump carries
+    /// the value so `admit --spec` re-simulates identically).
+    pub queries: usize,
+    /// Dev switch: plan with `qos_headroom = 10` and disable the
+    /// admission-side QoS checks (`qos_slack = ∞`) so over-committed
+    /// tenants are let in and the audit provably fires — the
+    /// end-to-end demonstration that invariant (a) violations are
+    /// caught and dumped as replayable specs.
+    pub break_qos: bool,
+    /// Where violated scenarios are dumped as replayable JSON
+    /// (`fuzz-<seed>-<index>.json`); `None` skips dumping.
+    pub dump_dir: Option<PathBuf>,
+}
+
+impl Default for FuzzConfig {
+    fn default() -> Self {
+        FuzzConfig {
+            scenarios: 200,
+            seed: 42,
+            queries: 120,
+            break_qos: false,
+            dump_dir: None,
+        }
+    }
+}
+
+/// One invariant violation, with everything needed to reproduce it.
+#[derive(Debug, Clone)]
+pub struct FuzzViolation {
+    /// Scenario index within the run (seeded by `mix_seed(seed, index)`).
+    pub index: usize,
+    /// Which invariant broke: `invalid-spec`, `replay-error`,
+    /// `qos-audit`, `repack-regression`, or `thread-divergence`.
+    pub kind: String,
+    pub detail: String,
+    /// The exact generated spec text — feed to `camelot admit --spec`.
+    pub spec_json: String,
+    /// Where the spec was dumped (when a dump dir was configured and
+    /// the write succeeded).
+    pub dump_path: Option<PathBuf>,
+}
+
+/// Outcome of a fuzzing run.
+#[derive(Debug, Clone)]
+pub struct FuzzReport {
+    pub scenarios: usize,
+    pub seed: u64,
+    /// Replay events checked across all clean scenarios.
+    pub events_checked: usize,
+    pub violations: Vec<FuzzViolation>,
+}
+
+impl FuzzReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+}
+
+fn pick(rng: &mut Rng, xs: &[&'static str]) -> &'static str {
+    xs[rng.below(xs.len())]
+}
+
+/// Generate scenario `index` of run `seed` as ScenarioSpec JSON text.
+///
+/// Every sampled value stays inside the bounds `ScenarioSpec::parse`
+/// enforces (burst windows within residency, failure GPU ids within
+/// the sampled cluster, recovery after failure), so a parse error on
+/// the output is itself a harness bug the fuzzer reports. All numbers
+/// are emitted as small integers or fixed decimal strings: the text
+/// round-trips through the f64-based JSON parser exactly.
+pub fn generate_spec_json(seed: u64, index: usize, queries: usize) -> String {
+    let mut rng = Rng::new(mix_seed(seed, index as u64));
+    let gpus = 2 + rng.below(3); // 2..=4 keeps per-decision solves cheap
+    let cells = if rng.f64() < 0.35 { 2 } else { 1 };
+    let batch = ["16", "32"][rng.below(2)];
+    // the spec's seed drives the controller; keep it < 2^53 so the
+    // JSON number round-trips exactly through the f64 parser
+    let spec_seed = mix_seed(seed, index as u64) % 1_000_000;
+
+    let mut json = String::new();
+    let _ = write!(
+        json,
+        "{{\n  \"name\": \"fuzz-{seed}-{index}\",\n  \"cluster\": {{\"preset\": \"2080ti\", \"gpus\": {gpus}}},\n  \"batch\": {batch},\n  \"seed\": {spec_seed},\n  \"queries\": {queries},\n  \"cells\": {cells},\n  \"tenants\": ["
+    );
+
+    let n_tenants = 2 + rng.below(4); // 2..=5
+    for i in 0..n_tenants {
+        let pipeline = pick(
+            &mut rng,
+            &["img-to-img", "img-to-text", "text-to-img", "text-to-text"],
+        );
+        let qps = 20 + rng.below(81); // 20..=100 qps
+        let arrive = rng.below(300);
+        let lifetime = 200 + rng.below(601); // 200..=800 s
+        let departs = rng.f64() < 0.75;
+
+        let _ = write!(
+            json,
+            "{}\n    {{\"name\": \"t{i}\", \"pipeline\": \"{pipeline}\", \"plan_qps\": {qps}, \"arrive_s\": {arrive}",
+            if i == 0 { "" } else { "," }
+        );
+        if departs {
+            let _ = write!(json, ", \"depart_s\": {}", arrive + lifetime);
+        }
+        if rng.f64() < 0.5 {
+            let period = 20 + rng.below(41);
+            let trough = pick(&mut rng, &["0.2", "0.3", "0.4", "0.5", "0.6"]);
+            let _ = write!(
+                json,
+                ", \"arrivals\": \"diurnal\", \"period_s\": {period}, \"trough_frac\": {trough}"
+            );
+        }
+        if rng.f64() < 0.3 {
+            json.push_str(", \"priority\": \"best-effort\"");
+        }
+        if departs && rng.f64() < 0.25 {
+            // shrink inside the residency window, to half the load
+            let shrink_at = arrive + 1 + rng.below(lifetime - 2);
+            let _ = write!(
+                json,
+                ", \"shrink_to\": {}, \"shrink_at_s\": {shrink_at}",
+                qps / 2
+            );
+        }
+        let n_bursts = rng.below(3);
+        if n_bursts > 0 {
+            json.push_str(", \"bursts\": [");
+            for b in 0..n_bursts {
+                // at ∈ [arrive, arrive + lifetime) — within the window
+                // even when the tenant departs at arrive + lifetime
+                let at = arrive + rng.below(lifetime);
+                let mult = pick(&mut rng, &["1.5", "2.0", "2.5", "3.0"]);
+                let duration = 10 + rng.below(51);
+                let _ = write!(
+                    json,
+                    "{}{{\"at_s\": {at}, \"rate_mult\": {mult}, \"duration_s\": {duration}}}",
+                    if b == 0 { "" } else { ", " }
+                );
+            }
+            json.push(']');
+        }
+        json.push('}');
+    }
+    json.push_str("\n  ]");
+
+    let n_failures = rng.below(3);
+    if n_failures > 0 {
+        json.push_str(",\n  \"gpu_failures\": [");
+        for f in 0..n_failures {
+            let at = 50 + rng.below(500);
+            let k = 1 + rng.below(gpus.min(2));
+            let mut ids: Vec<usize> = (0..gpus).collect();
+            rng.shuffle(&mut ids);
+            ids.truncate(k);
+            ids.sort_unstable();
+            let ids: Vec<String> = ids.iter().map(|g| g.to_string()).collect();
+            let _ = write!(
+                json,
+                "{}\n    {{\"at_s\": {at}, \"gpus\": [{}]",
+                if f == 0 { "" } else { "," },
+                ids.join(", ")
+            );
+            if rng.f64() < 0.8 {
+                let _ = write!(json, ", \"recover_s\": {}", at + 50 + rng.below(300));
+            }
+            json.push('}');
+        }
+        json.push_str("\n  ]");
+    }
+    json.push_str("\n}\n");
+    json
+}
+
+/// The controller configuration a fuzz replay (and the `camelot admit
+/// --spec` reproduction of a dump) runs under: spec-driven seed and
+/// batch, plus the `--break-qos` sabotage knobs when requested.
+pub fn admission_config(spec: &ScenarioSpec, break_qos: bool) -> AdmissionConfig {
+    let mut admission = if break_qos {
+        AdmissionConfig {
+            qos_headroom: 10.0,
+            qos_slack: f64::INFINITY,
+            ..Default::default()
+        }
+    } else {
+        AdmissionConfig::default()
+    };
+    admission.seed = spec.seed;
+    admission.batch = spec.batch;
+    admission
+}
+
+/// Check one generated scenario against invariants (a)–(c). Returns
+/// the number of replay events checked, or the list of
+/// `(kind, detail)` problems found.
+pub fn check_scenario(
+    spec_json: &str,
+    break_qos: bool,
+) -> Result<usize, Vec<(String, String)>> {
+    let spec = match ScenarioSpec::parse(spec_json) {
+        Ok(spec) => spec,
+        Err(e) => {
+            return Err(vec![(
+                "invalid-spec".into(),
+                format!("generator emitted a spec its own parser rejects: {e}"),
+            )])
+        }
+    };
+    let trace = spec.trace();
+    let admission = admission_config(&spec, break_qos);
+
+    // one replay per thread count; the threads=1 report is the oracle
+    // for (a) and (b), the rest must fingerprint-match it for (c)
+    let mut problems: Vec<(String, String)> = Vec::new();
+    let mut oracle: Option<(Vec<String>, usize)> = None;
+    for &threads in &THREAD_MATRIX {
+        let rep = if spec.cells > 1 {
+            let cfg = CellsReplayConfig {
+                router: CellsConfig {
+                    cells: spec.cells,
+                    admission: admission.clone(),
+                    ..Default::default()
+                },
+                queries: spec.queries,
+                threads,
+                dedup: true,
+                audit_qos: true,
+            };
+            match replay_trace_cells(&spec.cluster, &trace, &cfg) {
+                Ok(rep) => rep.merged,
+                Err(e) => {
+                    problems.push((
+                        "replay-error".into(),
+                        format!("cells replay failed at {threads} threads: {e}"),
+                    ));
+                    continue;
+                }
+            }
+        } else {
+            let cfg = ReplayConfig {
+                admission: admission.clone(),
+                queries: spec.queries,
+                threads,
+                dedup: true,
+                audit_qos: true,
+            };
+            match replay_trace(&spec.cluster, &trace, &cfg) {
+                Ok(rep) => rep,
+                Err(e) => {
+                    problems.push((
+                        "replay-error".into(),
+                        format!("flat replay failed at {threads} threads: {e}"),
+                    ));
+                    continue;
+                }
+            }
+        };
+        match &oracle {
+            None => {
+                // (a) the predicted-QoS audit must be clean
+                if let Some(v) = rep.qos_violations.first() {
+                    problems.push((
+                        "qos-audit".into(),
+                        format!(
+                            "{} violation(s); first: t={:.0}s {} predicted p99 {:.4}s > target {:.4}s",
+                            rep.qos_violations.len(),
+                            v.t_s,
+                            v.tenant,
+                            v.predicted_p99_s,
+                            v.target_s
+                        ),
+                    ));
+                }
+                // (b) applied re-packs never grow the footprint
+                if rep.repack_regressions > 0 {
+                    problems.push((
+                        "repack-regression".into(),
+                        format!(
+                            "{} applied re-pack(s) left the fleet on more GPUs than before",
+                            rep.repack_regressions
+                        ),
+                    ));
+                }
+                oracle = Some((rep.fingerprint(), rep.events.len()));
+            }
+            Some((fp, _)) => {
+                // (c) bit-identical across the thread matrix
+                if *fp != rep.fingerprint() {
+                    problems.push((
+                        "thread-divergence".into(),
+                        format!(
+                            "replay fingerprint at {threads} threads differs from 1 thread ({} cells)",
+                            spec.cells
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+    if problems.is_empty() {
+        Ok(oracle.map(|(_, events)| events).unwrap_or(0))
+    } else {
+        Err(problems)
+    }
+}
+
+fn dump_spec(cfg: &FuzzConfig, index: usize, spec_json: &str) -> Option<PathBuf> {
+    let dir = cfg.dump_dir.as_ref()?;
+    if std::fs::create_dir_all(dir).is_err() {
+        return None;
+    }
+    let path = dir.join(format!("fuzz-{}-{}.json", cfg.seed, index));
+    std::fs::write(&path, spec_json).ok()?;
+    Some(path)
+}
+
+/// Run the fuzzer: generate `cfg.scenarios` specs, check each against
+/// invariants (a)–(c), dump violated specs as replayable JSON (d).
+pub fn run_fuzz(cfg: &FuzzConfig) -> Result<FuzzReport, String> {
+    if cfg.scenarios == 0 {
+        return Err("scenarios must be at least 1".into());
+    }
+    if cfg.queries == 0 {
+        return Err("queries must be at least 1".into());
+    }
+    let mut report = FuzzReport {
+        scenarios: cfg.scenarios,
+        seed: cfg.seed,
+        events_checked: 0,
+        violations: Vec::new(),
+    };
+    for index in 0..cfg.scenarios {
+        let spec_json = generate_spec_json(cfg.seed, index, cfg.queries);
+        match check_scenario(&spec_json, cfg.break_qos) {
+            Ok(events) => report.events_checked += events,
+            Err(problems) => {
+                let dump_path = dump_spec(cfg, index, &spec_json);
+                for (kind, detail) in problems {
+                    report.violations.push(FuzzViolation {
+                        index,
+                        kind,
+                        detail,
+                        spec_json: spec_json.clone(),
+                        dump_path: dump_path.clone(),
+                    });
+                }
+            }
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generation_is_seed_reproducible_and_valid() {
+        for index in 0..25 {
+            let a = generate_spec_json(7, index, 80);
+            let b = generate_spec_json(7, index, 80);
+            assert_eq!(a, b, "scenario {index} not reproducible");
+            let spec = ScenarioSpec::parse(&a)
+                .unwrap_or_else(|e| panic!("scenario {index} invalid: {e}\n{a}"));
+            assert_eq!(spec.name, format!("fuzz-7-{index}"));
+            assert_eq!(spec.queries, 80);
+            assert!(!spec.tenants.is_empty());
+        }
+    }
+
+    #[test]
+    fn different_indices_differ() {
+        // mix_seed must actually decorrelate scenarios
+        let a = generate_spec_json(7, 0, 80);
+        let b = generate_spec_json(7, 1, 80);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn generated_population_covers_the_chaos_vocabulary() {
+        let (mut bursts, mut failures, mut best_effort, mut diurnal, mut cells) =
+            (0, 0, 0, 0, 0);
+        for index in 0..60 {
+            let json = generate_spec_json(11, index, 80);
+            let spec = ScenarioSpec::parse(&json).expect("valid spec");
+            bursts += spec.tenants.iter().map(|t| t.bursts.len()).sum::<usize>();
+            failures += spec.gpu_failures.len();
+            best_effort += spec
+                .tenants
+                .iter()
+                .filter(|t| {
+                    t.priority == crate::suite::workload::Priority::BestEffort
+                })
+                .count();
+            diurnal += spec
+                .tenants
+                .iter()
+                .filter(|t| {
+                    matches!(
+                        t.arrivals,
+                        crate::suite::workload::ArrivalProcess::Diurnal { .. }
+                    )
+                })
+                .count();
+            cells += usize::from(spec.cells > 1);
+        }
+        assert!(bursts > 0, "no bursts generated in 60 scenarios");
+        assert!(failures > 0, "no GPU failures generated");
+        assert!(best_effort > 0, "no best-effort tenants generated");
+        assert!(diurnal > 0, "no diurnal arrivals generated");
+        assert!(cells > 0, "no multi-cell scenarios generated");
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        assert!(run_fuzz(&FuzzConfig { scenarios: 0, ..Default::default() }).is_err());
+        assert!(run_fuzz(&FuzzConfig { queries: 0, ..Default::default() }).is_err());
+    }
+}

@@ -3,6 +3,7 @@
 //! (§VIII-E), and the workload generators used by the evaluation.
 
 pub mod artifact;
+pub mod fuzz;
 pub mod real;
 pub mod service;
 pub mod workload;

@@ -267,6 +267,23 @@ impl ArrivalProcess {
     }
 }
 
+/// A tenant's service tier: whether admission may evict it to make room
+/// for someone else.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    /// QoS-guaranteed; never preempted once admitted.
+    LatencyCritical,
+    /// Opportunistic; evictable when a latency-critical arrival would
+    /// otherwise be rejected.
+    BestEffort,
+}
+
+impl Default for Priority {
+    fn default() -> Self {
+        Priority::LatencyCritical
+    }
+}
+
 /// What a tenant does at one point of a [`TenantTrace`].
 #[derive(Debug, Clone)]
 pub enum TraceEventKind {
@@ -281,6 +298,9 @@ pub enum TraceEventKind {
         name: Option<String>,
         arrivals: ArrivalProcess,
         plan_qps: f64,
+        /// Service tier: latency-critical arrivals may preempt resident
+        /// best-effort tenants when they would otherwise be rejected.
+        priority: Priority,
     },
     /// The tenant leaves; its capacity can be re-packed.
     Depart,
@@ -288,6 +308,27 @@ pub enum TraceEventKind {
     /// a smaller plan (`coordinator::admission` shrinks the resident via
     /// `planner::Objective::Shrink`, freeing the difference).
     Shrink { target_qps: f64 },
+    /// Flash crowd: the tenant's *offered* load is multiplied by
+    /// `rate_mult` for `duration_s` seconds (the admitted plan is
+    /// untouched — bursts stress the measured latency, not the planner).
+    /// Replay synthesizes the matching [`BurstEnd`](Self::BurstEnd) at
+    /// `t_s + duration_s` via [`TenantTrace::expanded_events`]. Bursts
+    /// nest: the rate restores to the pre-burst base only when the last
+    /// open burst ends. Correlated multi-tenant bursts are just several
+    /// `Burst` events sharing one `t_s`.
+    Burst { rate_mult: f64, duration_s: f64 },
+    /// End of a flash crowd (synthesized; not part of the declarative
+    /// vocabulary).
+    BurstEnd,
+    /// The listed GPUs fail: residents with instances on them are
+    /// displaced and re-packed onto the surviving fleet (evicted when
+    /// nothing fits), and the GPUs stay masked out of placement until a
+    /// matching [`GpuRecover`](Self::GpuRecover). The `tenant` id on
+    /// these events is ignored (use 0 by convention).
+    GpuFail { gpu_ids: Vec<usize> },
+    /// The listed GPUs return to service; a normal churn-gated re-pack
+    /// may spread residents back onto them.
+    GpuRecover { gpu_ids: Vec<usize> },
 }
 
 /// One arrival or departure of a tenant trace.
@@ -379,6 +420,7 @@ impl TenantTrace {
                     name: None,
                     arrivals: ArrivalProcess::diurnal(pattern),
                     plan_qps: peak,
+                    priority: Priority::LatencyCritical,
                 },
             });
             events.push(TenantTraceEvent {
@@ -413,6 +455,7 @@ impl TenantTrace {
             name: None,
             arrivals: ArrivalProcess::constant(qps),
             plan_qps: qps,
+            priority: Priority::LatencyCritical,
         };
         TenantTrace {
             events: vec![
@@ -440,15 +483,53 @@ impl TenantTrace {
                 .partial_cmp(&b.t_s)
                 .unwrap()
                 .then_with(|| {
+                    // new chaos kinds interleave with the legacy ranks
+                    // (Depart=0, Shrink=1→2, Arrive=2→4) without
+                    // reordering any legacy-only trace: capacity comes
+                    // back first (recover), rates restore before new
+                    // demand lands (burst-end before arrive), and
+                    // capacity is torn down last (fail after arrivals)
                     let rank = |k: &TraceEventKind| match k {
                         TraceEventKind::Depart => 0u8,
-                        TraceEventKind::Shrink { .. } => 1,
-                        TraceEventKind::Arrive { .. } => 2,
+                        TraceEventKind::GpuRecover { .. } => 1,
+                        TraceEventKind::Shrink { .. } => 2,
+                        TraceEventKind::BurstEnd => 3,
+                        TraceEventKind::Arrive { .. } => 4,
+                        TraceEventKind::Burst { .. } => 5,
+                        TraceEventKind::GpuFail { .. } => 6,
                     };
                     rank(&a.kind).cmp(&rank(&b.kind))
                 })
                 .then(a.tenant.cmp(&b.tenant))
         });
+    }
+
+    /// Whether any event is a [`TraceEventKind::Burst`] — replay paths
+    /// only pay for [`expanded_events`](Self::expanded_events) (a clone
+    /// plus re-sort) when this holds, so hand-built burst-free traces
+    /// replay their event list verbatim, in the exact order given.
+    pub fn has_bursts(&self) -> bool {
+        self.events.iter().any(|e| matches!(e.kind, TraceEventKind::Burst { .. }))
+    }
+
+    /// The event list with a synthesized [`TraceEventKind::BurstEnd`]
+    /// appended at `t_s + duration_s` for every burst, re-sorted into
+    /// the canonical order. This is what the replay loops walk when
+    /// [`has_bursts`](Self::has_bursts) — burst windows close without
+    /// the trace author writing end events.
+    pub fn expanded_events(&self) -> Vec<TenantTraceEvent> {
+        let mut events = self.events.clone();
+        for e in &self.events {
+            if let TraceEventKind::Burst { duration_s, .. } = e.kind {
+                events.push(TenantTraceEvent {
+                    t_s: e.t_s + duration_s,
+                    tenant: e.tenant,
+                    kind: TraceEventKind::BurstEnd,
+                });
+            }
+        }
+        Self::sort_events(&mut events);
+        events
     }
 
     /// Highest number of tenants ever resident at once, assuming every
@@ -463,8 +544,13 @@ impl TenantTrace {
                     peak = peak.max(now);
                 }
                 TraceEventKind::Depart => now = now.saturating_sub(1),
-                // a shrink changes a resident's plan, not the head count
-                TraceEventKind::Shrink { .. } => {}
+                // a shrink changes a resident's plan, not the head
+                // count; bursts and GPU chaos never add tenants either
+                TraceEventKind::Shrink { .. }
+                | TraceEventKind::Burst { .. }
+                | TraceEventKind::BurstEnd
+                | TraceEventKind::GpuFail { .. }
+                | TraceEventKind::GpuRecover { .. } => {}
             }
         }
         peak
@@ -872,6 +958,67 @@ mod tests {
             .iter()
             .zip(&c.events)
             .any(|(x, y)| x.t_s.to_bits() != y.t_s.to_bits()));
+    }
+
+    #[test]
+    fn burst_expansion_closes_windows_in_canonical_order() {
+        // a burst at t=10 for 20 s must synthesize a BurstEnd at t=30,
+        // and that end must sort *before* an arrival at the same time
+        let mk = |t_s: f64, tenant: u64, kind: TraceEventKind| TenantTraceEvent {
+            t_s,
+            tenant,
+            kind,
+        };
+        let arrive = |qps: f64| TraceEventKind::Arrive {
+            pipeline: "text-to-text".into(),
+            name: None,
+            arrivals: ArrivalProcess::constant(qps),
+            plan_qps: qps,
+            priority: Priority::LatencyCritical,
+        };
+        let trace = TenantTrace {
+            events: vec![
+                mk(0.0, 0, arrive(50.0)),
+                mk(10.0, 0, TraceEventKind::Burst { rate_mult: 4.0, duration_s: 20.0 }),
+                mk(30.0, 1, arrive(40.0)),
+            ],
+        };
+        assert!(trace.has_bursts());
+        let expanded = trace.expanded_events();
+        assert_eq!(expanded.len(), 4);
+        assert!(matches!(expanded[2].kind, TraceEventKind::BurstEnd));
+        assert_eq!(expanded[2].t_s, 30.0);
+        assert_eq!(expanded[2].tenant, 0);
+        assert!(matches!(expanded[3].kind, TraceEventKind::Arrive { .. }));
+        // burst-free traces take the verbatim-borrow path
+        assert!(!TenantTrace::repeated_cycle().has_bursts());
+        // chaos kinds never change the concurrency bound
+        assert_eq!(trace.peak_concurrency(), 2);
+    }
+
+    #[test]
+    fn chaos_sort_ranks_are_stable_at_equal_times() {
+        // at one instant: recover before shrink before burst-end before
+        // arrive before burst before fail, departures first of all
+        let mk = |tenant: u64, kind: TraceEventKind| TenantTraceEvent { t_s: 5.0, tenant, kind };
+        let mut events = vec![
+            mk(0, TraceEventKind::GpuFail { gpu_ids: vec![0] }),
+            mk(1, TraceEventKind::Burst { rate_mult: 2.0, duration_s: 1.0 }),
+            mk(2, TraceEventKind::Arrive {
+                pipeline: "img-to-text".into(),
+                name: None,
+                arrivals: ArrivalProcess::constant(10.0),
+                plan_qps: 10.0,
+                priority: Priority::BestEffort,
+            }),
+            mk(3, TraceEventKind::BurstEnd),
+            mk(4, TraceEventKind::Shrink { target_qps: 5.0 }),
+            mk(5, TraceEventKind::GpuRecover { gpu_ids: vec![1] }),
+            mk(6, TraceEventKind::Depart),
+        ];
+        TenantTrace::sort_events(&mut events);
+        let order: Vec<u64> = events.iter().map(|e| e.tenant).collect();
+        assert_eq!(order, vec![6, 5, 4, 3, 2, 1, 0]);
     }
 
     #[test]

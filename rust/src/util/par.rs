@@ -332,4 +332,53 @@ mod tests {
         assert_eq!(split_budget(16, 4), (4, 4));
         assert_eq!(split_budget(3, 8), (3, 1));
     }
+
+    #[test]
+    fn cells_by_intervals_fan_honors_split_budget_and_restores_it() {
+        // the cells × intervals shape of `replay_trace_cells`: an outer
+        // fan over cells, each running an inner fan over interval
+        // simulations, the two levels split with split_budget so they
+        // multiply to ≤ budget — whatever the split, results must be
+        // bit-identical to the serial reference, and the process-wide
+        // worker budget must come back after every fan
+        let cells: Vec<u64> = (0..5).collect();
+        let expect: Vec<Vec<u64>> = cells
+            .iter()
+            .map(|&c| {
+                (0..12u64)
+                    .map(|i| {
+                        let mut r = crate::util::Rng::new(c * 1_000 + i);
+                        (0..40).map(|_| r.next_u64() % 997).sum()
+                    })
+                    .collect()
+            })
+            .collect();
+        let initial = reserved_workers();
+        for _ in 0..64 {
+            for budget in [1usize, 2, 3, 4, 8, 16] {
+                let (outer, inner) = split_budget(budget, cells.len());
+                assert!(outer * inner <= budget.max(1));
+                let out = par_map_threads(&cells, outer, |_, &c| {
+                    // the outer fan's registration is visible while the
+                    // inner fan runs (other tests may add more; ≥ holds)
+                    assert!(reserved_workers() >= outer - 1);
+                    let items: Vec<u64> = (0..12u64).map(|i| c * 1_000 + i).collect();
+                    par_map_threads(&items, inner, |_, &s| {
+                        let mut r = crate::util::Rng::new(s);
+                        (0..40).map(|_| r.next_u64() % 997).sum::<u64>()
+                    })
+                });
+                assert_eq!(out, expect, "budget {budget} -> {outer}x{inner}");
+            }
+        }
+        // restoration: a leaked registration would accumulate ≥ 1 per
+        // fan across the 64 × 6 fans above (≥ 384 by now); fans of
+        // concurrently running tests only add transiently, well under
+        // the 64 of slack granted here
+        assert!(
+            reserved_workers() < initial + 64,
+            "worker budget not restored: {initial} -> {}",
+            reserved_workers()
+        );
+    }
 }

@@ -14,7 +14,7 @@ use camelot::coordinator::admission::{replay_trace, AdmissionController, ReplayC
 use camelot::coordinator::AdmissionConfig;
 use camelot::sim::{SimOptions, Simulator};
 use camelot::suite::workload::{
-    ArrivalProcess, TenantTrace, TenantTraceConfig, TenantTraceEvent, TraceEventKind,
+    ArrivalProcess, Priority, TenantTrace, TenantTraceConfig, TenantTraceEvent, TraceEventKind,
 };
 
 /// Everything a replay decides or measures, flattened to exact bits.
@@ -100,6 +100,7 @@ fn degenerate_single_tenant_trace_matches_simulator_run() {
                 name: None,
                 arrivals: ArrivalProcess::constant(rate),
                 plan_qps: rate,
+                priority: Priority::LatencyCritical,
             },
         }],
     };

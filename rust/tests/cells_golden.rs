@@ -17,7 +17,9 @@
 use camelot::config::ClusterSpec;
 use camelot::coordinator::admission::{replay_trace, ReplayConfig};
 use camelot::coordinator::{replay_trace_cells, AdmissionConfig, CellsConfig, CellsReplayConfig};
-use camelot::suite::workload::{TenantTrace, TenantTraceConfig};
+use camelot::suite::workload::{
+    ArrivalProcess, Priority, TenantTrace, TenantTraceConfig, TenantTraceEvent, TraceEventKind,
+};
 
 fn flat_cfg(queries: usize, threads: usize) -> ReplayConfig {
     ReplayConfig { queries, threads, ..Default::default() }
@@ -29,6 +31,7 @@ fn cells_cfg(cells: usize, queries: usize, threads: usize, dedup: bool) -> Cells
         queries,
         threads,
         dedup,
+        audit_qos: false,
     }
 }
 
@@ -128,6 +131,123 @@ fn multi_cell_replay_is_bit_identical_across_threads() {
             "routing differs at {threads} threads"
         );
         assert_eq!(baseline.migrations, rep.migrations);
+    }
+}
+
+/// A hand-built chaos trace: a best-effort tier, a nested flash crowd,
+/// a GPU failure and its recovery — every chaos event kind on one
+/// timeline.
+fn chaos_trace() -> TenantTrace {
+    let mk = |t_s: f64, tenant: u64, kind: TraceEventKind| TenantTraceEvent { t_s, tenant, kind };
+    TenantTrace {
+        events: vec![
+            mk(
+                0.0,
+                0,
+                TraceEventKind::Arrive {
+                    pipeline: "img-to-text".into(),
+                    name: None,
+                    arrivals: ArrivalProcess::constant(100.0),
+                    plan_qps: 100.0,
+                    priority: Priority::LatencyCritical,
+                },
+            ),
+            mk(
+                10.0,
+                1,
+                TraceEventKind::Arrive {
+                    pipeline: "text-to-text".into(),
+                    name: None,
+                    arrivals: ArrivalProcess::constant(70.0),
+                    plan_qps: 70.0,
+                    priority: Priority::BestEffort,
+                },
+            ),
+            mk(100.0, 0, TraceEventKind::Burst { rate_mult: 1.5, duration_s: 60.0 }),
+            // nested: opens inside the first window, closes first
+            mk(120.0, 0, TraceEventKind::Burst { rate_mult: 2.0, duration_s: 20.0 }),
+            mk(200.0, 0, TraceEventKind::GpuFail { gpu_ids: vec![0] }),
+            mk(300.0, 0, TraceEventKind::GpuRecover { gpu_ids: vec![0] }),
+            mk(400.0, 1, TraceEventKind::Depart),
+            mk(500.0, 0, TraceEventKind::Depart),
+        ],
+    }
+}
+
+#[test]
+fn chaos_trace_replay_matches_flat_across_threads_and_modes() {
+    let cluster = ClusterSpec::two_2080ti();
+    let trace = chaos_trace();
+    let flat = replay_trace(&cluster, &trace, &flat_cfg(200, 1)).expect("flat replay");
+    // the trace must actually exercise the chaos paths (synthesized
+    // burst ends included), or the equality below proves nothing
+    assert!(flat.events.iter().any(|e| e.desc.starts_with("burst x")));
+    assert!(
+        flat.events.iter().any(|e| e.decision == "nested burst still open"),
+        "nested burst window must close inner-first: {:?}",
+        flat.events.iter().map(|e| (&e.desc, &e.decision)).collect::<Vec<_>>()
+    );
+    assert!(flat.events.iter().any(|e| e.decision.starts_with("offered load restored")));
+    assert!(flat.events.iter().any(|e| e.desc.starts_with("gpufail")));
+    assert!(flat.events.iter().any(|e| e.desc.starts_with("gpurecover")));
+    for threads in [2usize, 8] {
+        let rep = replay_trace(&cluster, &trace, &flat_cfg(200, threads)).expect("replay");
+        assert_eq!(
+            flat.fingerprint(),
+            rep.fingerprint(),
+            "flat chaos replay differs at {threads} threads"
+        );
+    }
+    for threads in [1usize, 2, 8] {
+        let sharded =
+            replay_trace_cells(&cluster, &trace, &cells_cfg(1, 200, threads, true))
+                .expect("sharded replay");
+        assert_eq!(
+            flat.fingerprint(),
+            sharded.merged.fingerprint(),
+            "cells=1 chaos replay differs from flat at {threads} threads"
+        );
+    }
+}
+
+#[test]
+fn multi_cell_chaos_replay_is_thread_count_invariant() {
+    let cluster = ClusterSpec::dgx2(); // 16 GPUs -> 4 cells of 4
+    let mut trace = fleet_trace();
+    // splice chaos into the generated day: a correlated flash crowd on
+    // two tenants plus a failure spanning two cells and its recovery
+    // (the replay's burst expansion canonically re-sorts the timeline)
+    trace.events.push(TenantTraceEvent {
+        t_s: 1_000.0,
+        tenant: 0,
+        kind: TraceEventKind::Burst { rate_mult: 2.0, duration_s: 300.0 },
+    });
+    trace.events.push(TenantTraceEvent {
+        t_s: 1_000.0,
+        tenant: 1,
+        kind: TraceEventKind::Burst { rate_mult: 2.0, duration_s: 300.0 },
+    });
+    trace.events.push(TenantTraceEvent {
+        t_s: 1_500.0,
+        tenant: 0,
+        kind: TraceEventKind::GpuFail { gpu_ids: vec![0, 5] },
+    });
+    trace.events.push(TenantTraceEvent {
+        t_s: 2_000.0,
+        tenant: 0,
+        kind: TraceEventKind::GpuRecover { gpu_ids: vec![0, 5] },
+    });
+    let baseline = replay_trace_cells(&cluster, &trace, &cells_cfg(4, 200, 1, true))
+        .expect("sharded replay");
+    for threads in [2usize, 8] {
+        let rep = replay_trace_cells(&cluster, &trace, &cells_cfg(4, 200, threads, true))
+            .expect("sharded replay");
+        assert_eq!(
+            baseline.merged.fingerprint(),
+            rep.merged.fingerprint(),
+            "multi-cell chaos replay differs at {threads} threads"
+        );
+        assert_eq!(baseline.tenant_cells, rep.tenant_cells);
     }
 }
 

@@ -23,7 +23,7 @@ use camelot::planner::{
 use camelot::predictor::train_pipeline;
 use camelot::sim::{ClusterSim, SimOptions, TenantSpec};
 use camelot::suite::workload::{
-    ArrivalProcess, TenantTrace, TenantTraceConfig, TenantTraceEvent, TraceEventKind,
+    ArrivalProcess, Priority, TenantTrace, TenantTraceConfig, TenantTraceEvent, TraceEventKind,
 };
 
 fn assert_bit_identical(tag: &str, a: &Solution, b: &Solution) {
@@ -206,6 +206,7 @@ fn fast_path_interval_matches_cluster_sim_bit_for_bit() {
                 name: None,
                 arrivals: ArrivalProcess::constant(rate),
                 plan_qps: rate,
+                priority: Priority::LatencyCritical,
             },
         }],
     };

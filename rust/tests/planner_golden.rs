@@ -23,7 +23,7 @@ use camelot::planner::{
 use camelot::predictor::{train_pipeline, StagePredictor};
 use camelot::sim::{ClusterSim, SimOptions, TenantSpec};
 use camelot::suite::workload::{
-    ArrivalProcess, TenantTrace, TenantTraceEvent, TraceEventKind,
+    ArrivalProcess, Priority, TenantTrace, TenantTraceEvent, TraceEventKind,
 };
 use camelot::suite::Pipeline;
 
@@ -163,6 +163,7 @@ fn shrink_trace() -> TenantTrace {
                     name: None,
                     arrivals: ArrivalProcess::constant(120.0),
                     plan_qps: 120.0,
+                    priority: Priority::LatencyCritical,
                 },
             ),
             mk(
@@ -173,6 +174,7 @@ fn shrink_trace() -> TenantTrace {
                     name: None,
                     arrivals: ArrivalProcess::constant(70.0),
                     plan_qps: 70.0,
+                    priority: Priority::LatencyCritical,
                 },
             ),
             mk(100.0, 0, TraceEventKind::Shrink { target_qps: 35.0 }),

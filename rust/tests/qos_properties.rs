@@ -1,0 +1,214 @@
+//! QoS property suite over the chaos fuzzer and the admission stack:
+//!
+//! * a seed-fixed fuzz run over generated chaos scenarios (bursts, GPU
+//!   failures, mixed service tiers, diurnal load, cells) is **clean**
+//!   — no predicted-QoS audit violations, no re-pack regressions, and
+//!   bit-identical replays across 1/2/8 threads — and reproducible;
+//! * the `--break-qos` sabotage mode (planner over-committed, QoS
+//!   checks disabled) provably produces violations whose dumped
+//!   ScenarioSpec JSON re-parses and reproduces the violation — the
+//!   invariant-(d) replayability contract;
+//! * preemption: a latency-critical arrival a full-of-best-effort
+//!   cluster would reject is admitted by evicting best-effort
+//!   residents, with the rejection counter untouched;
+//! * GPU failure masks capacity (no resident keeps instances on a
+//!   failed GPU; nothing new lands there) and recovery restores it.
+
+use camelot::config::ClusterSpec;
+use camelot::coordinator::{AdmissionConfig, AdmissionController};
+use camelot::planner::ScenarioSpec;
+use camelot::suite::fuzz::{check_scenario, generate_spec_json, run_fuzz, FuzzConfig};
+use camelot::suite::pipeline_by_name;
+use camelot::suite::workload::{ArrivalProcess, Priority};
+
+/// A bounded fuzz run under the production config must be violation-
+/// free — invariants (a) QoS audit clean, (b) no re-pack regressions,
+/// (c) thread-count determinism — and seed-reproducible.
+#[test]
+fn fuzz_run_is_clean_and_reproducible() {
+    let cfg = FuzzConfig {
+        scenarios: 30,
+        seed: 7,
+        queries: 40,
+        break_qos: false,
+        dump_dir: None,
+    };
+    let report = run_fuzz(&cfg).expect("fuzz run");
+    assert!(
+        report.ok(),
+        "violations in a production-config fuzz run: {:#?}",
+        report
+            .violations
+            .iter()
+            .map(|v| (v.index, &v.kind, &v.detail))
+            .collect::<Vec<_>>()
+    );
+    assert!(report.events_checked > 0, "fuzz run checked no replay events");
+    let again = run_fuzz(&cfg).expect("fuzz run");
+    assert_eq!(report.events_checked, again.events_checked, "run not reproducible");
+}
+
+/// Invariant (d): sabotaged runs dump replayable specs. With the
+/// planner over-committed 10× and the admission QoS checks disabled,
+/// the audit must catch violations; the dumped JSON must re-parse to
+/// the same scenario and reproduce the violation when re-checked.
+#[test]
+fn break_qos_violations_are_dumped_and_replayable() {
+    let dir = std::env::temp_dir().join("camelot-qos-props-breakqos");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = FuzzConfig {
+        scenarios: 10,
+        seed: 7,
+        queries: 40,
+        break_qos: true,
+        dump_dir: Some(dir.clone()),
+    };
+    let report = run_fuzz(&cfg).expect("fuzz run");
+    let v = report
+        .violations
+        .iter()
+        .find(|v| v.kind == "qos-audit")
+        .expect("break-qos sabotage must trip the QoS audit within 10 scenarios");
+    // the dump is the exact spec text that was checked
+    let path = v.dump_path.as_ref().expect("violation must dump its spec");
+    let dumped = std::fs::read_to_string(path).expect("dump readable");
+    assert_eq!(dumped, v.spec_json, "dump differs from the checked spec text");
+    // ... it re-parses (so `camelot admit --spec <dump>` accepts it) ...
+    let spec = ScenarioSpec::parse(&dumped).expect("dump must re-parse");
+    assert_eq!(spec.name, format!("fuzz-7-{}", v.index));
+    // ... and re-checking it reproduces the violation bit-for-bit
+    let problems = check_scenario(&dumped, true).expect_err("violation must reproduce");
+    let (_, detail) =
+        problems.iter().find(|(kind, _)| kind == "qos-audit").expect("same invariant");
+    assert_eq!(detail, &v.detail, "reproduction differs from the original violation");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A latency-critical arrival the full cluster rejects is admitted by
+/// preempting best-effort residents; a successful preemption does not
+/// count as a rejection (one arrival, one decision).
+#[test]
+fn preemption_admits_latency_critical_over_best_effort() {
+    let pipeline = pipeline_by_name("text-to-text").expect("pipeline");
+    let mut ctl =
+        AdmissionController::new(ClusterSpec::two_2080ti(), AdmissionConfig::default());
+    // fill the cluster with best-effort residents until one bounces
+    let mut admitted = 0;
+    for i in 0..20 {
+        match ctl.admit_with_priority(
+            &format!("be-{i}"),
+            &pipeline,
+            ArrivalProcess::constant(60.0),
+            60.0,
+            Priority::BestEffort,
+        ) {
+            Ok(_) => admitted += 1,
+            Err(_) => break,
+        }
+    }
+    assert!(admitted >= 1, "cluster must hold at least one best-effort tenant");
+    assert_eq!(ctl.rejected(), 1, "the fill loop ends on the first rejection");
+    // plain admission of the same shape still bounces...
+    let err = ctl.admit_with_priority(
+        "lc",
+        &pipeline,
+        ArrivalProcess::constant(60.0),
+        60.0,
+        Priority::LatencyCritical,
+    );
+    assert!(err.is_err(), "cluster unexpectedly has room: {err:?}");
+    let rejected_before = ctl.rejected();
+    // ... but preemption clears best-effort room for it: the arrival
+    // fits an empty cluster (a best-effort tenant of the same shape
+    // was admitted first), so the LC-only feasibility guard passes
+    let (id, evicted) = ctl
+        .admit_preempting(
+            "lc",
+            &pipeline,
+            ArrivalProcess::constant(60.0),
+            60.0,
+            Priority::LatencyCritical,
+        )
+        .expect("preemption must admit the latency-critical arrival");
+    assert!(!evicted.is_empty(), "admission without eviction contradicts the plain reject");
+    assert!(evicted.iter().all(|name| name.starts_with("be-")), "evicted {evicted:?}");
+    assert!(ctl.residents().iter().any(|r| r.id == id));
+    assert_eq!(
+        ctl.rejected(),
+        rejected_before,
+        "a successful preemption must not count as a rejection"
+    );
+    // best-effort arrivals never preempt: a rejected one stays rejected
+    let be = ctl.admit_preempting(
+        "be-late",
+        &pipeline,
+        ArrivalProcess::constant(200.0),
+        200.0,
+        Priority::BestEffort,
+    );
+    assert!(be.is_err(), "best-effort must not preempt");
+}
+
+/// GPU failure semantics: failing a GPU leaves no resident instances
+/// on it, admissions while failed avoid it, and recovery clears the
+/// mask.
+#[test]
+fn gpu_failure_masks_capacity_and_recovery_restores_it() {
+    let pipeline = pipeline_by_name("img-to-text").expect("pipeline");
+    let mut ctl =
+        AdmissionController::new(ClusterSpec::two_2080ti(), AdmissionConfig::default());
+    ctl.try_admit("a", &pipeline, ArrivalProcess::constant(80.0), 80.0).expect("admit");
+    assert!(ctl.failed_gpu_ids().is_empty());
+
+    let report = ctl.fail_gpus(&[0]);
+    assert_eq!(report.failed, vec![0]);
+    assert_eq!(ctl.failed_gpu_ids(), vec![0]);
+    // nobody — displaced-and-replaced or untouched — occupies GPU 0
+    for r in ctl.residents() {
+        assert!(
+            r.deployment.placements.iter().all(|p| p.gpu != 0),
+            "resident {} still on failed GPU 0",
+            r.name
+        );
+    }
+    // an arrival while failed must land entirely off GPU 0
+    if let Ok(id) =
+        ctl.try_admit("b", &pipeline, ArrivalProcess::constant(40.0), 40.0)
+    {
+        let r = ctl.residents().iter().find(|r| r.id == id).expect("resident");
+        assert!(r.deployment.placements.iter().all(|p| p.gpu != 0));
+    }
+    // double-fail is idempotent on the mask
+    ctl.fail_gpus(&[0]);
+    assert_eq!(ctl.failed_gpu_ids(), vec![0]);
+
+    ctl.recover_gpus(&[0]);
+    assert!(ctl.failed_gpu_ids().is_empty(), "recovery must clear the mask");
+    // with the whole cluster back, the predicted-QoS audit stays clean
+    assert!(ctl.qos_audit().is_empty(), "audit dirty after recovery: {:?}", ctl.qos_audit());
+}
+
+/// The generator's traces are canonically ordered (time-ascending), so
+/// replay never sees time travel — and burst windows always close.
+#[test]
+fn generated_traces_are_time_ordered_and_bursts_balanced() {
+    use camelot::suite::workload::TraceEventKind;
+    for index in 0..20 {
+        let json = generate_spec_json(3, index, 40);
+        let spec = ScenarioSpec::parse(&json).expect("valid spec");
+        let trace = spec.trace();
+        let events = if trace.has_bursts() { trace.expanded_events() } else { trace.events.clone() };
+        let mut last = f64::NEG_INFINITY;
+        let mut open: i64 = 0;
+        for e in &events {
+            assert!(e.t_s >= last, "scenario {index}: time travel at t={}", e.t_s);
+            last = e.t_s;
+            match e.kind {
+                TraceEventKind::Burst { .. } => open += 1,
+                TraceEventKind::BurstEnd => open -= 1,
+                _ => {}
+            }
+        }
+        assert_eq!(open, 0, "scenario {index}: unbalanced burst windows");
+    }
+}
