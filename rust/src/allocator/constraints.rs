@@ -78,6 +78,12 @@ pub struct AllocContext<'a> {
     /// communication (the rest absorbs batching wait and queueing
     /// jitter). Matches the engine's batching deadline policy.
     pub qos_headroom: f64,
+    /// Relative service-time multiplier of the GPU class being planned
+    /// for (1.0 = the class the predictors were profiled on). Durations
+    /// scale by ×s, bandwidth demands and throughputs by ÷s — applied at
+    /// grid-*read* time so the `Arc`-shared [`StageGrids`] memo stays
+    /// class-agnostic. Exactly 1.0 leaves every lookup bit-identical.
+    pub compute_scale: f64,
     /// The cluster plus the merged holds of co-located tenants: every
     /// constraint family (C1/C2/C4 and the placement pass) sees only
     /// the remainder. [`ClusterState::exclusive`] for an unshared
@@ -130,6 +136,7 @@ impl<'a> AllocContext<'a> {
             comm: CommMode::GlobalIpc,
             enforce_bw: true,
             qos_headroom: 0.80,
+            compute_scale: 1.0,
             state,
             comm_cache: std::cell::Cell::new(None),
             grids,
@@ -170,35 +177,39 @@ impl<'a> AllocContext<'a> {
         ((q / 0.05).round() as usize).clamp(1, 20) - 1
     }
 
-    /// Grid-memoized duration lookup (falls back to the tree off-grid).
+    /// Grid-memoized duration lookup (falls back to the tree off-grid),
+    /// scaled by the context's [`compute_scale`](Self::compute_scale).
     #[inline]
     pub fn duration_at(&self, stage: usize, q: f64) -> f64 {
         let k = Self::grid_idx(q);
-        if ((k + 1) as f64 * 0.05 - q).abs() < 1e-9 {
+        let d = if ((k + 1) as f64 * 0.05 - q).abs() < 1e-9 {
             self.grids.dur[stage][k]
         } else {
             self.predictors[stage].duration(self.batch, q)
-        }
+        };
+        if self.compute_scale == 1.0 { d } else { d * self.compute_scale }
     }
 
     #[inline]
     pub fn bandwidth_at(&self, stage: usize, q: f64) -> f64 {
         let k = Self::grid_idx(q);
-        if ((k + 1) as f64 * 0.05 - q).abs() < 1e-9 {
+        let b = if ((k + 1) as f64 * 0.05 - q).abs() < 1e-9 {
             self.grids.bw[stage][k]
         } else {
             self.predictors[stage].bandwidth(self.batch, q)
-        }
+        };
+        if self.compute_scale == 1.0 { b } else { b / self.compute_scale }
     }
 
     #[inline]
     pub fn throughput_at(&self, stage: usize, q: f64) -> f64 {
         let k = Self::grid_idx(q);
-        if ((k + 1) as f64 * 0.05 - q).abs() < 1e-9 {
+        let t = if ((k + 1) as f64 * 0.05 - q).abs() < 1e-9 {
             self.grids.thr[stage][k]
         } else {
             self.predictors[stage].throughput(self.batch, q)
-        }
+        };
+        if self.compute_scale == 1.0 { t } else { t / self.compute_scale }
     }
 
     /// Predicted communication time per stage hop for this comm mode
@@ -556,6 +567,44 @@ mod tests {
         );
         assert_eq!(fresh.bw_budget_storage(&a), reused.bw_budget_storage(&a));
         assert_eq!(fresh.check(&a).is_ok(), reused.check(&a).is_ok());
+    }
+
+    #[test]
+    fn compute_scale_scales_reads_not_grids() {
+        let p = real::img_to_text();
+        let (c, preds) = ctx_fixture(&p);
+        let base = AllocContext::new(&p, &c, &preds, 16);
+        let mut slow = AllocContext::shared_with_grids(
+            &p,
+            ClusterState::exclusive(&c),
+            &preds,
+            16,
+            base.grids(),
+        );
+        slow.compute_scale = 2.0;
+        let a = Allocation { instances: vec![1, 2], quotas: vec![0.5, 0.4] };
+        for (st, &q) in a.quotas.iter().enumerate() {
+            assert_eq!(
+                slow.duration_at(st, q).to_bits(),
+                (base.duration_at(st, q) * 2.0).to_bits()
+            );
+            assert_eq!(
+                slow.bandwidth_at(st, q).to_bits(),
+                (base.bandwidth_at(st, q) / 2.0).to_bits()
+            );
+            assert_eq!(
+                slow.throughput_at(st, q).to_bits(),
+                (base.throughput_at(st, q) / 2.0).to_bits()
+            );
+        }
+        // a slower class supports strictly less peak load
+        assert!(slow.predicted_peak(&a) < base.predicted_peak(&a));
+        // scale exactly 1.0 is the identity, bit for bit
+        slow.compute_scale = 1.0;
+        assert_eq!(
+            slow.predicted_p99(&a, 50.0).to_bits(),
+            base.predicted_p99(&a, 50.0).to_bits()
+        );
     }
 
     #[test]

@@ -53,9 +53,145 @@ impl GpuSpec {
         }
     }
 
+    /// NVIDIA A100-SXM4 80GB — the MIG-capable datacenter part the
+    /// heterogeneous-pool scenarios mix in (MISO's testbed).
+    pub fn a100_sxm4_80g() -> Self {
+        GpuSpec {
+            name: "A100-SXM4-80GB",
+            sms: 108,
+            gflops: 19_500.0,
+            mem_bytes: 80 * (1 << 30),
+            mem_bw: 2_039.0e9,
+            mps_contexts: 48,
+            launch_overhead_s: 30e-6,
+        }
+    }
+
+    /// NVIDIA H100-SXM5 80GB — the fastest class in the mixed-pool
+    /// scenarios.
+    pub fn h100_sxm5_80g() -> Self {
+        GpuSpec {
+            name: "H100-SXM5-80GB",
+            sms: 132,
+            gflops: 67_000.0,
+            mem_bytes: 80 * (1 << 30),
+            mem_bw: 3_350.0e9,
+            mps_contexts: 48,
+            launch_overhead_s: 30e-6,
+        }
+    }
+
     /// Peak fp32 FLOP/s as a plain f64.
     pub fn flops_per_sec(&self) -> f64 {
         self.gflops * 1e9
+    }
+
+    /// Look up a preset by the short names the scenario JSON uses.
+    pub fn by_name(name: &str) -> Option<GpuSpec> {
+        match name {
+            "2080ti" => Some(GpuSpec::rtx2080ti()),
+            "v100" => Some(GpuSpec::v100_sxm3()),
+            "a100" => Some(GpuSpec::a100_sxm4_80g()),
+            "h100" => Some(GpuSpec::h100_sxm5_80g()),
+            _ => None,
+        }
+    }
+}
+
+/// MIG-style slice catalog: quotas on a discrete-partition GPU must
+/// land on whole multiples of `1/units` of the device (an A100 exposes
+/// 7 compute slices — the 1g/2g/3g/4g/7g profiles are all multiples of
+/// 1/7). The planner solves in continuous quotas and then *snaps up*
+/// to the catalog, so a discrete plan is never slower than the
+/// continuous plan it rounds (more SMs per instance, never fewer).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SliceCatalog {
+    /// Equal compute slices per GPU (A100 MIG: 7).
+    pub units: u32,
+    /// Seconds of reconfiguration disruption charged per slice whose
+    /// owner changes when a plan is replaced (MIG instances must be
+    /// destroyed and re-created; cf. MISO §4). Amortized over
+    /// [`SliceCatalog::AMORTIZE_HORIZON_S`] when the planner compares a
+    /// shrink's resource gain against its repartition cost.
+    pub repartition_s_per_slice: f64,
+}
+
+impl SliceCatalog {
+    /// Horizon (seconds) over which a repartition's disruption is
+    /// amortized when priced against a usage reduction: a shrink that
+    /// frees `u` GPU-equivalents must save more than
+    /// `cost_s / AMORTIZE_HORIZON_S` GPU-equivalents to be worth the
+    /// churn.
+    pub const AMORTIZE_HORIZON_S: f64 = 300.0;
+
+    /// The A100's 7-slice MIG catalog.
+    pub fn mig7() -> Self {
+        SliceCatalog { units: 7, repartition_s_per_slice: 2.0 }
+    }
+
+    /// Smallest catalog quota ≥ `q` (clamped to one whole device).
+    pub fn snap_up(&self, q: f64) -> f64 {
+        let u = self.units as f64;
+        ((q * u).ceil() / u).min(1.0)
+    }
+
+    /// Slice units a quota occupies. Quotas produced by
+    /// [`snap_up`](Self::snap_up) are exact multiples of `1/units`, so
+    /// the rounding here is only absorbing f64 noise.
+    pub fn units_for(&self, q: f64) -> u32 {
+        (q * self.units as f64).round() as u32
+    }
+
+    /// Disruption cost of moving `slices_changed` slice boundaries,
+    /// amortized to GPU-equivalents over the planning horizon.
+    pub fn amortized_cost(&self, slices_changed: u32) -> f64 {
+        slices_changed as f64 * self.repartition_s_per_slice / Self::AMORTIZE_HORIZON_S
+    }
+}
+
+/// How SM share is carved on a GPU (or a class of GPUs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PartitionMode {
+    /// MPS-style fractional quotas (the paper's model): any share in
+    /// `[0, 1]` is placeable.
+    Continuous,
+    /// MIG-style fixed slices: every quota must be a whole multiple of
+    /// `1/catalog.units`.
+    Discrete(SliceCatalog),
+}
+
+impl PartitionMode {
+    /// The catalog when discrete, `None` when continuous.
+    pub fn catalog(&self) -> Option<&SliceCatalog> {
+        match self {
+            PartitionMode::Continuous => None,
+            PartitionMode::Discrete(c) => Some(c),
+        }
+    }
+}
+
+/// One homogeneous run of GPUs inside a mixed pool. Classes occupy
+/// *contiguous* GPU-id ranges in declaration order (class 0 owns GPUs
+/// `0..count₀`, class 1 the next `count₁`, …).
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuClass {
+    /// Hardware spec of every GPU in this class.
+    pub gpu: GpuSpec,
+    /// Number of GPUs in the class.
+    pub count: usize,
+    /// Relative per-stage service-time multiplier vs the profiled base
+    /// [`ClusterSpec::gpu`] (< 1 means this class is faster). Applied to
+    /// predictor reads and simulated kernel durations; 1.0 is an exact
+    /// no-op (the bit-identity contract for homogeneous pools).
+    pub compute_scale: f64,
+    /// How SM share is carved on this class's devices.
+    pub partition: PartitionMode,
+}
+
+impl GpuClass {
+    /// A class with continuous partitioning and a given speed factor.
+    pub fn scaled(gpu: GpuSpec, count: usize, compute_scale: f64) -> Self {
+        GpuClass { gpu, count, compute_scale, partition: PartitionMode::Continuous }
     }
 }
 
@@ -104,13 +240,31 @@ impl Default for IpcSpec {
     }
 }
 
-/// A machine: homogeneous GPUs behind one PCIe root complex per pair.
+/// A machine: GPUs behind one PCIe root complex per pair.
+///
+/// `gpu` is the *base* (profiling) spec: predictors are trained against
+/// it and, when `classes` is empty, every one of the `num_gpus` devices
+/// is an identical copy of it — the paper's homogeneous testbeds. A
+/// non-empty `classes` describes a mixed pool (e.g. A100 + H100 + a
+/// MIG-sliced class); class counts must sum to `num_gpus` and classes
+/// occupy contiguous GPU-id ranges in declaration order.
 #[derive(Debug, Clone)]
 pub struct ClusterSpec {
+    /// Base (profiling) GPU model; the hardware of every device when
+    /// `classes` is empty.
     pub gpu: GpuSpec,
+    /// Total devices in the pool.
     pub num_gpus: usize,
+    /// PCIe bus constants shared by every device.
     pub pcie: PcieSpec,
+    /// CUDA-IPC constants shared by every device.
     pub ipc: IpcSpec,
+    /// Heterogeneous composition; empty = homogeneous pool of `gpu`.
+    pub classes: Vec<GpuClass>,
+    /// Pool-default partition mode, used for every GPU not covered by a
+    /// class (and as the scenario-level `partition_mode` default for
+    /// classes that don't override it).
+    pub partition: PartitionMode,
 }
 
 impl ClusterSpec {
@@ -121,6 +275,8 @@ impl ClusterSpec {
             num_gpus: 2,
             pcie: PcieSpec::default(),
             ipc: IpcSpec::default(),
+            classes: Vec::new(),
+            partition: PartitionMode::Continuous,
         }
     }
 
@@ -131,12 +287,147 @@ impl ClusterSpec {
             num_gpus: 16,
             pcie: PcieSpec::default(),
             ipc: IpcSpec::default(),
+            classes: Vec::new(),
+            partition: PartitionMode::Continuous,
         }
     }
 
     /// Total SM-fraction capacity across the cluster (C × R with R = 1.0).
     pub fn total_compute(&self) -> f64 {
         self.num_gpus as f64
+    }
+
+    /// Check the class invariants: counts sum to `num_gpus`, no empty
+    /// class, positive finite compute scales, sane slice catalogs.
+    pub fn validate_classes(&self) -> Result<(), String> {
+        if self.classes.is_empty() {
+            return Ok(());
+        }
+        let total: usize = self.classes.iter().map(|c| c.count).sum();
+        if total != self.num_gpus {
+            return Err(format!(
+                "gpu_classes: counts sum to {total} but num_gpus is {}",
+                self.num_gpus
+            ));
+        }
+        for (i, c) in self.classes.iter().enumerate() {
+            if c.count == 0 {
+                return Err(format!("gpu_classes[{i}]: count must be >= 1"));
+            }
+            if !(c.compute_scale > 0.0 && c.compute_scale.is_finite()) {
+                return Err(format!(
+                    "gpu_classes[{i}]: compute_scale must be positive and finite"
+                ));
+            }
+            if let Some(cat) = c.partition.catalog() {
+                if cat.units == 0 {
+                    return Err(format!("gpu_classes[{i}]: slice catalog needs units >= 1"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The class owning GPU `g` (`None` on a homogeneous pool).
+    pub fn class_of(&self, g: usize) -> Option<&GpuClass> {
+        let mut start = 0usize;
+        for c in &self.classes {
+            if g < start + c.count {
+                return Some(c);
+            }
+            start += c.count;
+        }
+        None
+    }
+
+    /// `(first_gpu, count)` of each class, in class order.
+    pub fn class_ranges(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::with_capacity(self.classes.len());
+        let mut start = 0usize;
+        for c in &self.classes {
+            out.push((start, c.count));
+            start += c.count;
+        }
+        out
+    }
+
+    /// Hardware spec of GPU `g` (the base spec on a homogeneous pool).
+    pub fn gpu_at(&self, g: usize) -> &GpuSpec {
+        self.class_of(g).map_or(&self.gpu, |c| &c.gpu)
+    }
+
+    /// Service-time multiplier of GPU `g` (1.0 on a homogeneous pool).
+    pub fn scale_at(&self, g: usize) -> f64 {
+        self.class_of(g).map_or(1.0, |c| c.compute_scale)
+    }
+
+    /// Partition mode of GPU `g` (class override, else the pool mode).
+    pub fn partition_at(&self, g: usize) -> &PartitionMode {
+        self.class_of(g).map_or(&self.partition, |c| &c.partition)
+    }
+
+    /// Whether the pool is indistinguishable from the homogeneous
+    /// continuous-mode cluster the paper's planner assumes — the guard
+    /// for the bit-identity contract (`planner::hetero` delegates to the
+    /// unmodified `CamelotPlanner` exactly when this holds).
+    pub fn effectively_homogeneous(&self) -> bool {
+        self.partition == PartitionMode::Continuous
+            && self.classes.iter().all(|c| {
+                c.gpu == self.gpu
+                    && c.compute_scale == 1.0
+                    && c.partition == PartitionMode::Continuous
+            })
+    }
+
+    /// Σ MPS context capacity across the pool.
+    pub fn total_contexts(&self) -> u32 {
+        if self.classes.is_empty() {
+            self.num_gpus as u32 * self.gpu.mps_contexts
+        } else {
+            self.classes.iter().map(|c| c.count as u32 * c.gpu.mps_contexts).sum()
+        }
+    }
+
+    /// The sub-cluster of the first `y` GPUs, with the class list
+    /// truncated to match. This is what capacity-ladder searches use in
+    /// place of `ClusterSpec { num_gpus: y, .. }` so a heterogeneous
+    /// prefix keeps per-GPU specs aligned with GPU ids.
+    pub fn prefix(&self, y: usize) -> ClusterSpec {
+        let mut out = ClusterSpec { num_gpus: y, ..self.clone() };
+        if !self.classes.is_empty() {
+            let mut remaining = y;
+            let mut classes = Vec::new();
+            for c in &self.classes {
+                if remaining == 0 {
+                    break;
+                }
+                let take = c.count.min(remaining);
+                classes.push(GpuClass { count: take, ..c.clone() });
+                remaining -= take;
+            }
+            out.classes = classes;
+        }
+        out
+    }
+
+    /// The sub-cluster of GPUs `start..start + len`, classes sliced to
+    /// match — how the cluster-of-cells sharding splits a mixed pool.
+    pub fn slice(&self, start: usize, len: usize) -> ClusterSpec {
+        let mut out = ClusterSpec { num_gpus: len, ..self.clone() };
+        if !self.classes.is_empty() {
+            let mut classes = Vec::new();
+            let mut base = 0usize;
+            for c in &self.classes {
+                let lo = start.max(base);
+                let hi = (start + len).min(base + c.count);
+                if hi > lo {
+                    classes.push(GpuClass { count: hi - lo, ..c.clone() });
+                }
+                base += c.count;
+            }
+            out.classes = classes;
+        }
+        out
     }
 }
 
@@ -168,5 +459,100 @@ mod tests {
         assert_eq!(ClusterSpec::two_2080ti().num_gpus, 2);
         assert_eq!(ClusterSpec::dgx2().num_gpus, 16);
         assert_eq!(ClusterSpec::dgx2().gpu.name, "V100-SXM3");
+    }
+
+    fn mixed_pool() -> ClusterSpec {
+        // 2× A100 + 1× H100 + 1× MIG-sliced A100 on a 2080Ti base
+        ClusterSpec {
+            num_gpus: 4,
+            classes: vec![
+                GpuClass::scaled(GpuSpec::a100_sxm4_80g(), 2, 0.6),
+                GpuClass::scaled(GpuSpec::h100_sxm5_80g(), 1, 0.35),
+                GpuClass {
+                    gpu: GpuSpec::a100_sxm4_80g(),
+                    count: 1,
+                    compute_scale: 0.6,
+                    partition: PartitionMode::Discrete(SliceCatalog::mig7()),
+                },
+            ],
+            ..ClusterSpec::two_2080ti()
+        }
+    }
+
+    #[test]
+    fn class_lookup_follows_contiguous_ranges() {
+        let c = mixed_pool();
+        c.validate_classes().unwrap();
+        assert_eq!(c.gpu_at(0).name, "A100-SXM4-80GB");
+        assert_eq!(c.gpu_at(1).name, "A100-SXM4-80GB");
+        assert_eq!(c.gpu_at(2).name, "H100-SXM5-80GB");
+        assert_eq!(c.scale_at(2), 0.35);
+        assert!(matches!(c.partition_at(3), PartitionMode::Discrete(_)));
+        assert!(matches!(c.partition_at(0), PartitionMode::Continuous));
+        assert_eq!(c.class_ranges(), vec![(0, 2), (2, 1), (3, 1)]);
+        assert!(!c.effectively_homogeneous());
+        assert_eq!(c.total_contexts(), 4 * 48);
+    }
+
+    #[test]
+    fn homogeneous_accessors_are_identity() {
+        let c = ClusterSpec::two_2080ti();
+        assert!(c.effectively_homogeneous());
+        assert_eq!(c.gpu_at(1), &c.gpu);
+        assert_eq!(c.scale_at(0), 1.0);
+        assert_eq!(c.total_contexts(), 2 * 48);
+        // explicit single class identical to the base is still
+        // effectively homogeneous (the bit-identity guard)
+        let mut tagged = c.clone();
+        tagged.classes = vec![GpuClass::scaled(tagged.gpu.clone(), 2, 1.0)];
+        tagged.validate_classes().unwrap();
+        assert!(tagged.effectively_homogeneous());
+    }
+
+    #[test]
+    fn class_invariants_are_validated() {
+        let mut c = mixed_pool();
+        c.num_gpus = 5;
+        assert!(c.validate_classes().unwrap_err().contains("counts sum to 4"));
+        let mut c = mixed_pool();
+        c.classes[0].compute_scale = 0.0;
+        assert!(c.validate_classes().is_err());
+        let mut c = mixed_pool();
+        c.classes[1].count = 0;
+        assert!(c.validate_classes().is_err());
+    }
+
+    #[test]
+    fn prefix_and_slice_keep_classes_aligned() {
+        let c = mixed_pool();
+        let p = c.prefix(3);
+        assert_eq!(p.num_gpus, 3);
+        p.validate_classes().unwrap();
+        assert_eq!(p.classes.len(), 2);
+        assert_eq!(p.gpu_at(2).name, "H100-SXM5-80GB");
+        let s = c.slice(1, 3);
+        assert_eq!(s.num_gpus, 3);
+        s.validate_classes().unwrap();
+        assert_eq!(s.gpu_at(0).name, "A100-SXM4-80GB");
+        assert_eq!(s.gpu_at(1).name, "H100-SXM5-80GB");
+        assert!(matches!(s.partition_at(2), PartitionMode::Discrete(_)));
+        // homogeneous prefix stays classless
+        assert!(ClusterSpec::dgx2().prefix(4).classes.is_empty());
+    }
+
+    #[test]
+    fn slice_catalog_snaps_up_and_counts_units() {
+        let cat = SliceCatalog::mig7();
+        assert_eq!(cat.units_for(cat.snap_up(0.10)), 1);
+        assert_eq!(cat.units_for(cat.snap_up(1.0 / 7.0)), 1);
+        assert_eq!(cat.units_for(cat.snap_up(0.15)), 2);
+        assert_eq!(cat.units_for(cat.snap_up(0.99)), 7);
+        assert_eq!(cat.snap_up(1.5), 1.0);
+        for i in 1..=7u32 {
+            let q = i as f64 / 7.0;
+            // catalog points are fixed points of snap_up
+            assert_eq!(cat.snap_up(q).to_bits(), q.to_bits());
+        }
+        assert!(cat.amortized_cost(3) > 0.0);
     }
 }

@@ -449,22 +449,31 @@ impl AdmissionController {
     }
 
     /// Predicted p99 of a (pipeline, allocation) at its planning load,
-    /// inflated by its neighbors' bandwidth pressure.
+    /// inflated by its neighbors' bandwidth pressure. The `deployment`
+    /// identifies which GPU class the instances landed on (single-class
+    /// by the hetero placement invariant), so mixed-pool audits predict
+    /// at the class's service speed — the same `compute_scale` the plan
+    /// was solved under, never the base GPU's.
     fn tenant_p99(
         &self,
         pipeline: &Pipeline,
         predictors: &[StagePredictor],
         allocation: &Allocation,
+        deployment: &Deployment,
         plan_qps: f64,
         others: &[GpuReservation],
     ) -> f64 {
-        let ctx = AllocContext::shared_with_grids(
+        let mut ctx = AllocContext::shared_with_grids(
             pipeline,
             ClusterState::exclusive(&self.cluster),
             predictors,
             self.cfg.batch,
             self.grids_for(pipeline, predictors),
         );
+        ctx.compute_scale = deployment
+            .placements
+            .first()
+            .map_or(1.0, |p| self.cluster.scale_at(p.gpu));
         ctx.predicted_p99(allocation, plan_qps) * self.neighbor_inflation(others)
     }
 
@@ -552,6 +561,7 @@ impl AdmissionController {
                 &r.pipeline,
                 &r.predictors,
                 &r.allocation,
+                &r.deployment,
                 r.plan_qps,
                 &others,
             );
@@ -561,8 +571,8 @@ impl AdmissionController {
                 worst = Some((r.name.clone(), p99, r.pipeline.qos_target_s));
             }
         }
-        let own_p99 =
-            self.tenant_p99(pipeline, &predictors, &allocation, plan_qps, &reserved);
+        let own_p99 = self
+            .tenant_p99(pipeline, &predictors, &allocation, &deployment, plan_qps, &reserved);
         if own_p99 > pipeline.qos_target_s * self.cfg.qos_slack
             && worst.as_ref().map_or(true, |(_, w, _)| own_p99 > *w)
         {
@@ -770,6 +780,7 @@ impl AdmissionController {
                         &other.pipeline,
                         &other.predictors,
                         &other.allocation,
+                        &other.deployment,
                         other.plan_qps,
                         &rest,
                     );
@@ -786,6 +797,7 @@ impl AdmissionController {
                         &r.pipeline,
                         &r.predictors,
                         &s.allocation,
+                        &s.deployment,
                         target_qps,
                         &others,
                     );
@@ -924,7 +936,7 @@ impl AdmissionController {
                     reservations_for(&self.residents[*i].pipeline, &self.cluster, d)
                 })
                 .collect();
-            'gate: for (k, (i, alloc, _)) in planned.iter().enumerate() {
+            'gate: for (k, (i, alloc, dep)) in planned.iter().enumerate() {
                 let r = &self.residents[*i];
                 let mut others = self.base_holds();
                 for (k2, h) in candidate_holds.iter().enumerate() {
@@ -932,8 +944,8 @@ impl AdmissionController {
                         merge_reservations(&mut others, h);
                     }
                 }
-                let p99 =
-                    self.tenant_p99(&r.pipeline, &r.predictors, alloc, r.plan_qps, &others);
+                let p99 = self
+                    .tenant_p99(&r.pipeline, &r.predictors, alloc, dep, r.plan_qps, &others);
                 if p99 > r.pipeline.qos_target_s * self.cfg.qos_slack {
                     applied = false;
                     break 'gate;
@@ -1088,6 +1100,7 @@ impl AdmissionController {
                 &r.pipeline,
                 &r.predictors,
                 &r.allocation,
+                &r.deployment,
                 r.plan_qps,
                 &others,
             );
@@ -1255,6 +1268,24 @@ pub struct QosViolationRecord {
     pub target_s: f64,
 }
 
+/// Mean/peak SM occupancy of one GPU class across a replay — the
+/// per-class breakdown `camelot admit --spec` prints for mixed pools.
+///
+/// Computed in replay phase 1 (sequential) from the resident
+/// deployments after each event, normalized by the class's device
+/// count: 1.0 means every GPU of the class fully committed.
+#[derive(Debug, Clone)]
+pub struct ClassUtilization {
+    /// Hardware name of the class (e.g. `"A100-SXM4-80GB"`).
+    pub class: String,
+    /// Devices in the class.
+    pub gpus: usize,
+    /// Mean SM share in use across events with residents, in [0, 1].
+    pub mean_sm_frac: f64,
+    /// Peak SM share in use at any event, in [0, 1].
+    pub peak_sm_frac: f64,
+}
+
 /// Full outcome of a trace replay.
 #[derive(Debug, Clone)]
 pub struct ReplayReport {
@@ -1283,6 +1314,12 @@ pub struct ReplayReport {
     /// frees); the fuzz harness pins the count at 0. Also excluded from
     /// the fingerprint.
     pub repack_regressions: usize,
+    /// Per-class SM occupancy, one entry per declared
+    /// [`GpuClass`](crate::config::GpuClass) (empty on homogeneous
+    /// pools). Derived from the decision sequence, so it is excluded
+    /// from [`fingerprint`](ReplayReport::fingerprint) like the other
+    /// derived counters.
+    pub class_utilization: Vec<ClassUtilization>,
 }
 
 impl ReplayReport {
@@ -1369,6 +1406,11 @@ pub fn replay_trace(
     // interval snapshots: (t_start, owned copies of the resident set)
     type Snapshot = (f64, Vec<(String, Pipeline, Deployment, ArrivalProcess)>);
     let mut snapshots: Vec<Snapshot> = Vec::new();
+    // per-class SM occupancy, accumulated per event with residents
+    let class_ranges = cluster.class_ranges();
+    let mut class_sum = vec![0.0f64; class_ranges.len()];
+    let mut class_peak = vec![0.0f64; class_ranges.len()];
+    let mut class_events = 0usize;
 
     for e in trace_events {
         let (desc, decision) = match &e.kind {
@@ -1514,6 +1556,21 @@ pub fn replay_trace(
             gpus_in_use: ctl.gpus_in_use(),
             usage: ctl.total_usage(),
         });
+        if !class_ranges.is_empty() && !ctl.residents().is_empty() {
+            class_events += 1;
+            for (ci, &(start, count)) in class_ranges.iter().enumerate() {
+                let held: f64 = ctl
+                    .residents()
+                    .iter()
+                    .flat_map(|r| r.deployment.placements.iter())
+                    .filter(|p| p.gpu >= start && p.gpu < start + count)
+                    .map(|p| p.sm_frac)
+                    .sum();
+                let frac = held / count as f64;
+                class_sum[ci] += frac;
+                class_peak[ci] = class_peak[ci].max(frac);
+            }
+        }
         if !ctl.residents().is_empty() {
             snapshots.push((
                 e.t_s,
@@ -1634,6 +1691,22 @@ pub fn replay_trace(
     } else {
         with_gpus.iter().sum::<usize>() as f64 / with_gpus.len() as f64
     };
+    let class_utilization: Vec<ClassUtilization> = cluster
+        .classes
+        .iter()
+        .zip(class_ranges.iter())
+        .enumerate()
+        .map(|(ci, (c, &(_, count)))| ClassUtilization {
+            class: c.gpu.name.to_string(),
+            gpus: count,
+            mean_sm_frac: if class_events == 0 {
+                0.0
+            } else {
+                class_sum[ci] / class_events as f64
+            },
+            peak_sm_frac: class_peak[ci],
+        })
+        .collect();
     Ok(ReplayReport {
         admitted: ctl.admitted(),
         rejected: ctl.rejected(),
@@ -1646,6 +1719,7 @@ pub fn replay_trace(
         solve_cache: ctl.cache_stats(),
         qos_violations,
         repack_regressions,
+        class_utilization,
     })
 }
 
@@ -1702,7 +1776,10 @@ pub fn static_partition_replay(
                 let target = plan_qps * cfg.headroom;
                 let mut need = None;
                 for k in 1..=free {
-                    let sub = ClusterSpec { num_gpus: k, ..cluster.clone() };
+                    // prefix(), not a bare num_gpus override: on a
+                    // mixed pool the first k devices keep their class
+                    // composition (truncated, never re-labeled)
+                    let sub = cluster.prefix(k);
                     let req = PlanRequest::new(
                         Objective::MinResource { load_qps: target },
                         ClusterState::exclusive(&sub),
@@ -2076,5 +2153,48 @@ mod tests {
             .filter(|&&m| m)
             .count();
         assert!(met * 2 >= checked, "QoS met in {met}/{checked} tenant-intervals");
+    }
+
+    #[test]
+    fn mixed_pool_replay_reports_per_class_utilization() {
+        use crate::config::GpuClass;
+        let base = ClusterSpec::two_2080ti();
+        let mut c = ClusterSpec { num_gpus: 4, ..base.clone() };
+        c.classes = vec![
+            GpuClass::scaled(base.gpu.clone(), 2, 1.0),
+            GpuClass::scaled(crate::config::GpuSpec::a100_sxm4_80g(), 2, 0.7),
+        ];
+        c.validate_classes().unwrap();
+        let cfg = ReplayConfig { queries: 200, ..Default::default() };
+        let trace = TenantTrace::generate(
+            &crate::suite::workload::TenantTraceConfig {
+                tenants: 3,
+                peak_qps_lo: 40.0,
+                peak_qps_hi: 90.0,
+                ..Default::default()
+            },
+            7,
+        );
+        let rep = replay_trace(&c, &trace, &cfg).expect("mixed-pool replay runs");
+        assert!(rep.admitted >= 1);
+        assert_eq!(rep.class_utilization.len(), 2);
+        assert_eq!(rep.class_utilization[0].class, "RTX 2080Ti");
+        assert_eq!(rep.class_utilization[1].class, "A100-SXM4-80GB");
+        let mut any_load = 0.0f64;
+        for cu in &rep.class_utilization {
+            assert_eq!(cu.gpus, 2);
+            assert!(
+                (0.0..=1.0 + 1e-9).contains(&cu.mean_sm_frac),
+                "mean in [0,1]: {}",
+                cu.mean_sm_frac
+            );
+            assert!(cu.peak_sm_frac + 1e-9 >= cu.mean_sm_frac);
+            any_load = any_load.max(cu.peak_sm_frac);
+        }
+        assert!(any_load > 0.0, "admitted tenants must occupy some class");
+
+        // homogeneous pools keep the report shape unchanged
+        let flat = replay_trace(&base, &trace, &cfg).expect("flat replay runs");
+        assert!(flat.class_utilization.is_empty());
     }
 }

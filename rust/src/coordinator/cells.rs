@@ -96,10 +96,15 @@ pub fn split_cluster(spec: &ClusterSpec, cells: usize) -> Result<Vec<ClusterSpec
     }
     let base = spec.num_gpus / cells;
     let extra = spec.num_gpus % cells;
+    let mut start = 0usize;
     Ok((0..cells)
-        .map(|i| ClusterSpec {
-            num_gpus: base + usize::from(i < extra),
-            ..spec.clone()
+        .map(|i| {
+            let len = base + usize::from(i < extra);
+            // slice(), not a bare num_gpus override: on a mixed pool
+            // each cell inherits exactly the classes of its GPU range
+            let cell = spec.slice(start, len);
+            start += len;
+            cell
         })
         .collect())
 }
@@ -1042,6 +1047,9 @@ pub fn replay_trace_cells(
             solve_cache: router.cache_stats(),
             qos_violations,
             repack_regressions,
+            // per-class occupancy is a flat-replay breakdown; the
+            // sharded replay reports per-cell stats instead
+            class_utilization: Vec::new(),
         },
         per_cell,
         migrations: router.migrations(),
@@ -1070,6 +1078,34 @@ mod tests {
         // degenerate splits error
         assert!(split_cluster(&spec, 0).is_err());
         assert!(split_cluster(&spec, 11).is_err());
+    }
+
+    #[test]
+    fn split_cluster_preserves_class_composition() {
+        use crate::config::{GpuClass, GpuSpec};
+        let base = ClusterSpec::two_2080ti();
+        let mut spec = ClusterSpec { num_gpus: 4, ..base.clone() };
+        spec.classes = vec![
+            GpuClass::scaled(base.gpu.clone(), 3, 1.0),
+            GpuClass::scaled(GpuSpec::a100_sxm4_80g(), 1, 0.7),
+        ];
+        spec.validate_classes().unwrap();
+        let cells = split_cluster(&spec, 2).expect("splits");
+        assert_eq!(cells.len(), 2);
+        // cell 0 holds GPUs 0..2 (all 2080ti), cell 1 holds GPUs 2..4
+        // (one 2080ti + the a100) — each a valid spec of its own
+        assert_eq!(cells[0].num_gpus, 2);
+        assert_eq!(cells[0].classes.len(), 1);
+        assert_eq!(cells[0].classes[0].count, 2);
+        assert_eq!(cells[1].num_gpus, 2);
+        assert_eq!(
+            cells[1].classes.iter().map(|c| c.count).collect::<Vec<_>>(),
+            vec![1, 1]
+        );
+        assert_eq!(cells[1].classes[1].gpu.name, "A100-SXM4-80GB");
+        for c in &cells {
+            c.validate_classes().expect("each cell validates");
+        }
     }
 
     #[test]

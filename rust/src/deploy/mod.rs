@@ -113,7 +113,15 @@ pub fn reservations_for(
             model_seen[p.gpu] |= 1 << p.stage;
             r.mem_bytes += st.model_bytes;
         }
-        r.bw_demand += cost.bw_demand(st, batch, p.sm_frac);
+        let scale = cluster.scale_at(p.gpu);
+        let spec = cluster.gpu_at(p.gpu);
+        r.bw_demand += if scale == 1.0 && *spec == cluster.gpu {
+            cost.bw_demand(st, batch, p.sm_frac)
+        } else {
+            crate::sim::CostModel::new(spec.clone())
+                .instance_cost_scaled(st, batch, p.sm_frac, scale)
+                .bw_demand
+        };
     }
     res
 }
@@ -176,7 +184,7 @@ pub fn place(
     assert_eq!(alloc.instances.len(), pipeline.n_stages());
     assert_eq!(alloc.quotas.len(), pipeline.n_stages());
     let mut gpus: Vec<SimGpu> = (0..cluster.num_gpus)
-        .map(|_| SimGpu::new(cluster.gpu.clone()))
+        .map(|g| SimGpu::new(cluster.gpu_at(g).clone()))
         .collect();
     let mut gpu_bw = vec![0.0f64; cluster.num_gpus];
     for (g, r) in state.reservations().iter().enumerate() {
@@ -215,10 +223,18 @@ pub fn place(
             for &g in &cand {
                 if let Some(b) = bw {
                     let demand = b.demands[stage_idx];
-                    if gpu_bw[g] + demand > b.cap {
+                    // the budget's cap is quoted for the base GPU spec;
+                    // a class with more (less) peak bandwidth gets a
+                    // proportionally larger (smaller) budget
+                    let cap = if cluster.classes.is_empty() {
+                        b.cap
+                    } else {
+                        b.cap * cluster.gpu_at(g).mem_bw / cluster.gpu.mem_bw
+                    };
+                    if gpu_bw[g] + demand > cap {
                         last_err = format!(
                             "bandwidth budget: {:.3e} + {demand:.3e} > {:.3e}",
-                            gpu_bw[g], b.cap
+                            gpu_bw[g], cap
                         );
                         continue;
                     }
@@ -272,8 +288,23 @@ pub fn feasible_placement(
     let n_stages = pipeline.n_stages();
     let n_gpus = cluster.num_gpus;
     assert!(n_gpus <= MAX_GPUS && n_stages <= MAX_STAGES, "raise MAX_* consts");
-    let cap_mem = cluster.gpu.mem_bytes as f64;
-    let cap_ctx = cluster.gpu.mps_contexts;
+    // per-GPU capacities: uniform for a classless pool, per-class in a
+    // mixed fleet (mirrors the SimGpu construction in place())
+    let mut cap_mem = [0.0f64; MAX_GPUS];
+    let mut cap_ctx = [0u32; MAX_GPUS];
+    let mut bw_cap = [0.0f64; MAX_GPUS];
+    for g in 0..n_gpus {
+        let spec = cluster.gpu_at(g);
+        cap_mem[g] = spec.mem_bytes as f64;
+        cap_ctx[g] = spec.mps_contexts;
+        if let Some(b) = bw {
+            bw_cap[g] = if cluster.classes.is_empty() {
+                b.cap
+            } else {
+                b.cap * spec.mem_bw / cluster.gpu.mem_bw
+            };
+        }
+    }
     // per-GPU state on the stack — this runs thousands of times per
     // allocator solve and must not allocate
     let mut sm = [0.0f64; MAX_GPUS];
@@ -319,21 +350,21 @@ pub fn feasible_placement(
                 let share_b = hosts[b] >> stage_idx & 1;
                 share_b
                     .cmp(&share_a)
-                    .then((cap_mem - mem[a]).partial_cmp(&(cap_mem - mem[b])).unwrap())
+                    .then((cap_mem[a] - mem[a]).partial_cmp(&(cap_mem[b] - mem[b])).unwrap())
                     .then((1.0 - sm[a]).partial_cmp(&(1.0 - sm[b])).unwrap())
             });
             let mut placed = false;
             for &g in cand.iter() {
                 if let Some(b) = bw {
-                    if bw_used[g] + b.demands[stage_idx] > b.cap {
+                    if bw_used[g] + b.demands[stage_idx] > bw_cap[g] {
                         continue;
                     }
                 }
-                if sm[g] + quota > 1.0 + 1e-9 || ctx[g] >= cap_ctx {
+                if sm[g] + quota > 1.0 + 1e-9 || ctx[g] >= cap_ctx[g] {
                     continue;
                 }
                 let new_model = if hosts[g] >> stage_idx & 1 == 1 { 0.0 } else { st.model_bytes };
-                if mem[g] + new_model + act > cap_mem {
+                if mem[g] + new_model + act > cap_mem[g] {
                     continue;
                 }
                 sm[g] += quota;
@@ -457,6 +488,77 @@ mod tests {
                 };
                 let c = ClusterSpec::two_2080ti();
                 let state = ClusterState::with_reservations(&c, reserved);
+                let a = Allocation { instances: inst.clone(), quotas: quotas.clone() };
+                let demands: Vec<f64> =
+                    p.stages.iter().map(|s| s.hbm_bytes(*batch) / 0.02).collect();
+                for bw in [
+                    None,
+                    Some(BwBudget { demands: &demands, cap: 0.75 * c.gpu.mem_bw }),
+                ] {
+                    let fast = feasible_placement(&p, &state, &a, *batch, bw);
+                    let slow = place(&p, &state, &a, *batch, bw).is_ok();
+                    if fast != slow {
+                        return Err(format!("disagree: fast={fast} slow={slow}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn mixed_pool_placement_respects_per_gpu_caps() {
+        use crate::config::GpuClass;
+        let mut c = ClusterSpec::two_2080ti();
+        let mut small = c.gpu.clone();
+        small.mem_bytes /= 4;
+        small.mps_contexts = 1;
+        c.classes = vec![
+            GpuClass::scaled(c.gpu.clone(), 1, 1.0),
+            GpuClass::scaled(small, 1, 1.0),
+        ];
+        c.validate_classes().unwrap();
+        let p = real::img_to_text();
+        let a = Allocation { instances: vec![2, 2], quotas: vec![0.1, 0.1] };
+        if let Ok((pl, gpus)) = place(&p, &free(&c), &a, 16, None) {
+            // the small GPU allows a single MPS context
+            let on_small = pl.iter().filter(|x| x.gpu == 1).count();
+            assert!(on_small <= 1, "small GPU over-committed: {on_small} contexts");
+            for (g, s) in gpus.iter().enumerate() {
+                assert!(s.sm_allocated() <= 1.0 + 1e-9);
+                assert!(s.mem_free() >= 0.0, "gpu {g} memory over-committed");
+            }
+        }
+        assert_eq!(
+            feasible_placement(&p, &free(&c), &a, 16, None),
+            place(&p, &free(&c), &a, 16, None).is_ok()
+        );
+    }
+
+    #[test]
+    fn feasible_placement_agrees_with_place_on_mixed_pool() {
+        use crate::config::GpuClass;
+        let mut c = ClusterSpec::two_2080ti();
+        let mut small = c.gpu.clone();
+        small.mem_bytes /= 2;
+        small.mps_contexts = 4;
+        small.mem_bw *= 0.5;
+        c.classes = vec![
+            GpuClass::scaled(c.gpu.clone(), 1, 1.0),
+            GpuClass::scaled(small, 1, 0.5),
+        ];
+        c.validate_classes().unwrap();
+        testkit::forall_res(
+            77,
+            200,
+            |r| {
+                let inst: Vec<u32> = (0..2).map(|_| 1 + r.below(6) as u32).collect();
+                let quotas: Vec<f64> = (0..2).map(|_| r.range_f64(0.05, 0.8)).collect();
+                (inst, quotas, 8u32 << r.below(3))
+            },
+            |(inst, quotas, batch)| {
+                let p = real::img_to_img();
+                let state = ClusterState::exclusive(&c);
                 let a = Allocation { instances: inst.clone(), quotas: quotas.clone() };
                 let demands: Vec<f64> =
                     p.stages.iter().map(|s| s.hbm_bytes(*batch) / 0.02).collect();

@@ -931,6 +931,25 @@ pub fn admission_tables_for_trace(
         ]);
         tables.push(t5);
     }
+    // mixed pools (cluster.gpu_classes): per-class occupancy breakdown
+    // — the headline table of `camelot admit --spec
+    // examples/scenario_hetero_pool.json`. Homogeneous clusters skip it,
+    // keeping the legacy table shapes byte-identical.
+    if !shared.class_utilization.is_empty() {
+        let mut tc = Table::new(
+            "Admission: per-class GPU utilization (heterogeneous pool)",
+            &["class", "gpus", "mean_sm_util", "peak_sm_util"],
+        );
+        for cu in &shared.class_utilization {
+            tc.push(&[
+                cu.class.clone(),
+                cu.gpus.to_string(),
+                format!("{:.1}%", cu.mean_sm_frac * 100.0),
+                format!("{:.1}%", cu.peak_sm_frac * 100.0),
+            ]);
+        }
+        tables.push(tc);
+    }
     Ok(tables)
 }
 

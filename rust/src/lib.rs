@@ -42,6 +42,6 @@ pub mod util;
 // spatial-partitioning decision (Case-1 max-load, Case-2 min-resource,
 // re-pack, resident shrink) is one typed request against one trait.
 pub use planner::{
-    CacheStats, CamelotPlanner, ClusterState, Infeasible, Objective, PlanOutcome, PlanRequest,
-    Planner, ScenarioSpec, Solution, SolveCache,
+    CacheStats, CamelotPlanner, ClusterState, HeteroPlanner, Infeasible, Objective, PlanOutcome,
+    PlanRequest, Planner, ScenarioSpec, Solution, SolveCache,
 };

@@ -26,7 +26,7 @@ use camelot::config::ClusterSpec;
 use camelot::coordinator::{Coordinator, CoordinatorConfig, PjrtBackend};
 use camelot::figures;
 use camelot::planner::{
-    CamelotPlanner, ClusterState, Objective, PlanRequest, Planner as _, ScenarioSpec,
+    ClusterState, HeteroPlanner, Objective, PlanRequest, Planner as _, ScenarioSpec,
 };
 use camelot::suite::{real, workload::PoissonArrivals, Pipeline};
 use camelot::util::fnum;
@@ -63,7 +63,8 @@ USAGE:
   camelot plan --pipeline <name> [--batch N] [--policy max-load|min-resource]
                [--load QPS] [--cluster 2080ti|dgx2] [--no-bw]
   camelot plan --spec <file.json>        (declarative ScenarioSpec:
-               Case-1/Case-2 plans per tenant + resident shrink)
+               Case-1/Case-2 plans per tenant + resident shrink;
+               mixed A100/H100/MIG pools via cluster.gpu_classes)
   camelot serve --pipeline <name> [--batch N] [--rate QPS] [--queries N]
                 [--artifacts DIR]
   camelot colocate [--pipelines a,b] [--load-a QPS] [--load-b QPS]
@@ -183,7 +184,9 @@ fn cmd_plan(args: &[String]) -> i32 {
         .enforce_bw(!o.contains_key("no-bw"));
 
     let t0 = Instant::now();
-    match CamelotPlanner.plan(&request) {
+    // HeteroPlanner == CamelotPlanner bit-for-bit on these homogeneous
+    // presets; mixed pools come in via --spec (cluster.gpu_classes)
+    match HeteroPlanner.plan(&request) {
         Ok(s) => {
             match request.objective {
                 Objective::MaxLoad => println!("policy: maximize peak load (Eq. 1)"),

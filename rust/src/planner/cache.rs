@@ -41,13 +41,16 @@ use crate::sim::Deployment;
 use crate::suite::workload::ArrivalProcess;
 use crate::suite::Pipeline;
 
-use super::{CamelotPlanner, Objective, PlanOutcome, PlanRequest, Planner};
+use super::{HeteroPlanner, Objective, PlanOutcome, PlanRequest, Planner};
 
 /// Snapshot of a [`SolveCache`]'s counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct CacheStats {
+    /// Requests answered from the memo.
     pub hits: u64,
+    /// Requests that required a fresh solve.
     pub misses: u64,
+    /// Entries discarded to make room (LRU order).
     pub evictions: u64,
     /// Entries currently resident (≤ capacity).
     pub entries: usize,
@@ -98,13 +101,20 @@ impl SolveCache {
         SolveCache { capacity, inner: RefCell::new(Inner::default()) }
     }
 
+    /// The configured entry bound.
     pub fn capacity(&self) -> usize {
         self.capacity
     }
 
-    /// Plan `req` through the paper's [`CamelotPlanner`], memoized.
+    /// Plan `req` through the repo's default strategy — the
+    /// heterogeneity-aware [`HeteroPlanner`], which delegates verbatim
+    /// to [`CamelotPlanner`](super::CamelotPlanner) on homogeneous
+    /// continuous pools (bit-identical, golden-gated) — memoized. Every
+    /// online-control-loop caller (admission, autoscale, cells, replay)
+    /// plans through here, so mixed pools light up across the
+    /// coordinator with zero call-site changes.
     pub fn plan(&self, req: &PlanRequest<'_>) -> PlanOutcome {
-        self.plan_with(&CamelotPlanner, req)
+        self.plan_with(&HeteroPlanner, req)
     }
 
     /// Plan `req` through an arbitrary strategy, memoized. The planner
@@ -151,6 +161,7 @@ impl SolveCache {
         outcome
     }
 
+    /// Snapshot the hit/miss/eviction counters.
     pub fn stats(&self) -> CacheStats {
         let inner = self.inner.borrow();
         CacheStats {
@@ -230,6 +241,17 @@ pub(crate) fn fp_arrivals(out: &mut String, a: &ArrivalProcess) {
     }
 }
 
+/// Partition-mode identity: continuous, or the discrete slice catalog.
+fn fp_partition(out: &mut String, p: &crate::config::PartitionMode) {
+    match p {
+        crate::config::PartitionMode::Continuous => out.push_str("pc;"),
+        crate::config::PartitionMode::Discrete(cat) => {
+            let _ = write!(out, "pd{},", cat.units);
+            fp_f64(out, cat.repartition_s_per_slice);
+        }
+    }
+}
+
 /// The canonical cache key: everything [`Planner::plan`] reads.
 pub fn request_fingerprint(req: &PlanRequest<'_>) -> String {
     let mut s = String::with_capacity(512);
@@ -270,6 +292,31 @@ pub fn request_fingerprint(req: &PlanRequest<'_>) -> String {
         spec.ipc.handle_bytes as f64,
     ] {
         fp_f64(&mut s, x);
+    }
+    // heterogeneity block — appended only when the request is actually
+    // heterogeneous (classes, a discrete pool partition, or a non-unit
+    // compute scale), so every legacy homogeneous fingerprint stays
+    // byte-identical to its pre-heterogeneity form
+    if req.compute_scale != 1.0 {
+        s.push_str("|cs=");
+        fp_f64(&mut s, req.compute_scale);
+    }
+    if !spec.classes.is_empty() || spec.partition != crate::config::PartitionMode::Continuous {
+        s.push_str("|hw=");
+        fp_partition(&mut s, &spec.partition);
+        for c in &spec.classes {
+            let _ = write!(s, "cls={},{},{},{};", c.gpu.name, c.count, c.gpu.sms, c.gpu.mps_contexts);
+            for x in [
+                c.gpu.gflops,
+                c.gpu.mem_bytes as f64,
+                c.gpu.mem_bw,
+                c.gpu.launch_overhead_s,
+                c.compute_scale,
+            ] {
+                fp_f64(&mut s, x);
+            }
+            fp_partition(&mut s, &c.partition);
+        }
     }
     // merged co-tenant holds, per GPU
     s.push_str("|res=");
@@ -325,7 +372,7 @@ mod tests {
     use super::*;
     use crate::config::ClusterSpec;
     use crate::deploy::GpuReservation;
-    use crate::planner::ClusterState;
+    use crate::planner::{CamelotPlanner, ClusterState};
     use crate::predictor::train_pipeline;
     use crate::suite::real;
 
@@ -391,6 +438,60 @@ mod tests {
         )
         .batch(16);
         assert_ne!(fp, request_fingerprint(&other));
+    }
+
+    #[test]
+    fn fingerprint_hetero_block_only_when_nondefault() {
+        use crate::config::{GpuClass, PartitionMode, SliceCatalog};
+        let (c, p, preds) = fixture();
+        let base = PlanRequest::new(
+            Objective::MaxLoad,
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let fp = request_fingerprint(&base);
+        // default (classless, continuous, scale 1.0): no hetero block,
+        // so every pre-heterogeneity key is byte-identical
+        assert!(!fp.contains("|hw=") && !fp.contains("|cs="), "{fp}");
+        // each heterogeneity input changes the key
+        assert_ne!(fp, request_fingerprint(&base.clone().compute_scale(0.5)));
+        let mut mig = c.clone();
+        mig.partition = PartitionMode::Discrete(SliceCatalog::mig7());
+        let mig_req = PlanRequest::new(
+            Objective::MaxLoad,
+            ClusterState::exclusive(&mig),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        assert_ne!(fp, request_fingerprint(&mig_req));
+        let mut classy = c.clone();
+        classy.classes = vec![
+            GpuClass::scaled(c.gpu.clone(), 1, 1.0),
+            GpuClass::scaled(c.gpu.clone(), 1, 0.5),
+        ];
+        let classy_req = PlanRequest::new(
+            Objective::MaxLoad,
+            ClusterState::exclusive(&classy),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let classy_fp = request_fingerprint(&classy_req);
+        assert_ne!(fp, classy_fp);
+        // and two different class scales never collide
+        let mut classy2 = classy.clone();
+        classy2.classes[1].compute_scale = 0.25;
+        let classy2_req = PlanRequest::new(
+            Objective::MaxLoad,
+            ClusterState::exclusive(&classy2),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        assert_ne!(classy_fp, request_fingerprint(&classy2_req));
     }
 
     #[test]

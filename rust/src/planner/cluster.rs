@@ -51,10 +51,12 @@ impl ClusterState {
         state
     }
 
+    /// The static cluster description.
     pub fn spec(&self) -> &ClusterSpec {
         &self.spec
     }
 
+    /// Number of GPUs in the pool.
     pub fn num_gpus(&self) -> usize {
         self.spec.num_gpus
     }
@@ -99,7 +101,7 @@ impl ClusterState {
     /// MPS context capacity left after the holds (the C2 right-hand
     /// side).
     pub fn available_contexts(&self) -> u32 {
-        let cap = self.spec.num_gpus as u32 * self.spec.gpu.mps_contexts;
+        let cap = self.spec.total_contexts();
         let held: u32 = self.reserved.iter().map(|r| r.contexts).sum();
         cap.saturating_sub(held)
     }
@@ -110,7 +112,7 @@ impl ClusterState {
     pub fn restrict(&self, y: usize) -> ClusterState {
         assert!(y >= 1 && y <= self.spec.num_gpus, "restriction out of range");
         ClusterState {
-            spec: ClusterSpec { num_gpus: y, ..self.spec.clone() },
+            spec: self.spec.prefix(y),
             reserved: self.reserved[..y].to_vec(),
         }
     }

@@ -17,7 +17,7 @@ use crate::deploy::Allocation;
 /// Eq. 1 constraint set (checked by [`AllocContext`]).
 pub(crate) fn solve_case1(ctx: &AllocContext<'_>, params: SaParams) -> Option<SaResult> {
     let n = ctx.pipeline.n_stages();
-    let max_inst = (ctx.cluster().num_gpus as u32 * ctx.cluster().gpu.mps_contexts).min(48);
+    let max_inst = ctx.cluster().total_contexts().min(48);
     let c = ctx.cluster().num_gpus as f64;
     // throughput-balanced per-GPU quotas (the Laius shape) — a strong
     // starting corner the optimizer should dominate, never lose to
@@ -147,6 +147,7 @@ pub(crate) fn solve_case2(
         sub.comm = ctx.comm;
         sub.enforce_bw = ctx.enforce_bw;
         sub.qos_headroom = ctx.qos_headroom;
+        sub.compute_scale = ctx.compute_scale;
         let n = ctx.pipeline.n_stages();
         let init = Allocation {
             instances: vec![1; n],

@@ -1,0 +1,431 @@
+//! [`HeteroPlanner`] — heterogeneity-aware planning over mixed GPU
+//! pools (A100/H100/…) and MIG-style discrete slice catalogs.
+//!
+//! The paper's policies ([`CamelotPlanner`]) assume one GPU spec and
+//! continuous MPS quotas. Datacenter fleets are neither: MISO (arXiv
+//! 2207.11428) plans over discrete MIG slices, and ParvaGPU (arXiv
+//! 2409.14447) mixes MIG and MPS at scale. This planner closes both
+//! gaps behind the same [`Planner`] trait:
+//!
+//! * **Mixed pools.** A [`ClusterSpec`] whose `classes` are non-empty is
+//!   planned *per class*: each contiguous homogeneous run of GPUs
+//!   becomes a sub-pool (the class's own [`GpuSpec`], its co-tenant
+//!   holds sliced out of the parent state), solved independently by
+//!   [`CamelotPlanner`] with the class's
+//!   [`compute_scale`](GpuClass::compute_scale) applied to every
+//!   predictor read. The best class wins — highest predicted peak for
+//!   `MaxLoad`, lowest Σ N·p usage otherwise, earliest class on ties —
+//!   and its placement is remapped onto the class's global GPU ids.
+//!   One tenant never spans classes (MISO makes the same choice: a
+//!   deployment's instances live on one device type so one predictor
+//!   scaling is exact for all of them).
+//! * **Discrete slices.** A class (or the whole pool) in
+//!   [`PartitionMode::Discrete`] solves in continuous quotas first,
+//!   then *snaps every quota up* to the slice catalog — more SMs per
+//!   instance, never fewer, so the snapped plan is never slower — and
+//!   re-validates + re-places the snapped allocation. `Shrink` prices
+//!   the slice moves via [`SliceCatalog::amortized_cost`] before
+//!   accepting: a shrink that saves less usage than its repartition
+//!   disruption is refused as `NoImprovement`.
+//!
+//! **Bit-identity contract** (golden-gated): on an effectively
+//! homogeneous continuous pool ([`ClusterSpec::effectively_homogeneous`]
+//! — no classes, or only identity classes) every request is delegated
+//! verbatim to [`CamelotPlanner`], so plans, placements, predicted
+//! p99s, and trace fingerprints are bit-for-bit those of the paper's
+//! planner.
+
+use crate::config::{ClusterSpec, GpuClass, GpuSpec, PartitionMode, SliceCatalog};
+use crate::deploy::Allocation;
+
+use super::{
+    CamelotPlanner, ClusterState, Infeasible, Objective, PlanOutcome, PlanRequest, Planner,
+    Solution,
+};
+
+/// Heterogeneity-aware planner: per-class sub-pool planning over mixed
+/// fleets, discrete-slice snapping, verbatim [`CamelotPlanner`]
+/// delegation on homogeneous continuous pools. See the module docs.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HeteroPlanner;
+
+impl Planner for HeteroPlanner {
+    fn plan(&self, req: &PlanRequest<'_>) -> PlanOutcome {
+        let spec = req.cluster.spec();
+        if spec.effectively_homogeneous() {
+            // the golden-gated fast path: nothing heterogeneous about
+            // the pool, so the paper's planner answers bit-identically
+            return CamelotPlanner.plan(req);
+        }
+        super::validate(req)?;
+        if let Err(detail) = spec.validate_classes() {
+            return Err(Infeasible::BadRequest { detail });
+        }
+        let classes = pool_classes(spec);
+        let mut best: Option<Solution> = None;
+        let mut no_improvement: Option<Infeasible> = None;
+        let mut failures: Vec<String> = Vec::new();
+        let mut start = 0usize;
+        for (idx, class) in classes.iter().enumerate() {
+            match plan_class(req, class, start) {
+                Ok(mut s) => {
+                    for p in &mut s.deployment.placements {
+                        p.gpu += start;
+                    }
+                    if best.as_ref().map_or(true, |b| beats(&req.objective, &s, b)) {
+                        best = Some(s);
+                    }
+                }
+                Err(e) => {
+                    if matches!(e, Infeasible::NoImprovement { .. }) && no_improvement.is_none() {
+                        no_improvement = Some(e.clone());
+                    }
+                    failures.push(format!("class {idx} ({}x {}): {e}", class.count, class.gpu.name));
+                }
+            }
+            start += class.count;
+        }
+        if let Some(s) = best {
+            return Ok(s);
+        }
+        // every class refused: a pure no-improvement outcome keeps its
+        // type (the shrink caller backs off instead of logging an error)
+        if let (Some(e), true) = (no_improvement, failures.len() == 1) {
+            return Err(e);
+        }
+        Err(Infeasible::NoAllocation { detail: format!("no class admits the plan: {}", failures.join("; ")) })
+    }
+}
+
+/// `a` strictly beats `b` under the objective (ties keep the earlier
+/// class, so iteration order is the deterministic tie-break).
+fn beats(objective: &Objective, a: &Solution, b: &Solution) -> bool {
+    match objective {
+        Objective::MaxLoad => a.objective_value > b.objective_value,
+        Objective::MinResource { .. } | Objective::Shrink { .. } | Objective::Repack { .. } => {
+            a.usage < b.usage
+        }
+    }
+}
+
+/// The pool as a list of homogeneous classes: the declared classes, or
+/// one synthetic whole-pool class when `classes` is empty but the
+/// pool-level partition mode is discrete.
+fn pool_classes(spec: &ClusterSpec) -> Vec<GpuClass> {
+    if spec.classes.is_empty() {
+        vec![GpuClass {
+            gpu: spec.gpu.clone(),
+            count: spec.num_gpus,
+            compute_scale: 1.0,
+            partition: spec.partition.clone(),
+        }]
+    } else {
+        spec.classes.clone()
+    }
+}
+
+/// Plan the request into one class's sub-pool (GPUs
+/// `start..start+count`), with the class's compute scale applied and
+/// its quotas snapped to the slice catalog when discrete. Placements in
+/// the returned solution are sub-pool-relative (the caller remaps).
+fn plan_class(req: &PlanRequest<'_>, class: &GpuClass, start: usize) -> PlanOutcome {
+    let parent = req.cluster.spec();
+    let sub_spec = ClusterSpec {
+        gpu: class.gpu.clone(),
+        num_gpus: class.count,
+        classes: Vec::new(),
+        partition: PartitionMode::Continuous,
+        ..parent.clone()
+    };
+    let holds = &req.cluster.reservations()[start..start + class.count];
+    let sub_state = ClusterState::with_reservations(&sub_spec, holds);
+    let sub_req = PlanRequest { cluster: sub_state, ..req.clone() }
+        .compute_scale(class.compute_scale);
+    let sol = CamelotPlanner.plan(&sub_req)?;
+    match class.partition.catalog() {
+        None => Ok(sol),
+        Some(cat) => snap_to_catalog(&sub_req, sol, cat),
+    }
+}
+
+/// Round every quota of a continuous solution *up* to the slice
+/// catalog, re-validate, and re-place. `Shrink` additionally prices the
+/// slice reconfiguration against the usage saving.
+fn snap_to_catalog(sub_req: &PlanRequest<'_>, sol: Solution, cat: &SliceCatalog) -> PlanOutcome {
+    let snapped = Allocation {
+        instances: sol.allocation.instances.clone(),
+        quotas: sol.allocation.quotas.iter().map(|&q| cat.snap_up(q)).collect(),
+    };
+    if snapped.quotas == sol.allocation.quotas {
+        return Ok(sol); // already on the catalog (e.g. a resident re-pack)
+    }
+    let ctx = sub_req.alloc_context();
+    if let Err(detail) = ctx.check(&snapped) {
+        return Err(Infeasible::NoAllocation {
+            detail: format!(
+                "discrete catalog ({} slices): snapped allocation infeasible: {detail}",
+                cat.units
+            ),
+        });
+    }
+    let (plan_qps, objective_value) = match &sub_req.objective {
+        // snapping up only adds SMs, so the peak can only move up —
+        // recompute it for an honest objective
+        Objective::MaxLoad => {
+            let peak = ctx.predicted_peak(&snapped);
+            (peak, peak)
+        }
+        Objective::MinResource { load_qps } => (*load_qps, -snapped.total_quota()),
+        Objective::Repack { .. } => (0.0, 0.0),
+        Objective::Shrink { target_qps, current } => {
+            let planned = snapped.total_quota();
+            let cur = current.total_quota();
+            let moved = slices_changed(cat, current, &snapped);
+            if planned + cat.amortized_cost(moved) >= cur - 1e-9 {
+                return Err(Infeasible::NoImprovement {
+                    current_usage: cur,
+                    planned_usage: planned,
+                });
+            }
+            (*target_qps, -planned)
+        }
+    };
+    super::finish(
+        sub_req,
+        &ctx,
+        snapped,
+        plan_qps,
+        objective_value,
+        (sol.evaluated, sol.feasible_found),
+    )
+}
+
+/// Slice boundaries that move when `old` is replaced by `new`: the
+/// per-stage change in total occupied slice units, summed. The input to
+/// the repartition-cost model.
+fn slices_changed(cat: &SliceCatalog, old: &Allocation, new: &Allocation) -> u32 {
+    old.instances
+        .iter()
+        .zip(&old.quotas)
+        .zip(new.instances.iter().zip(&new.quotas))
+        .map(|((&no, &qo), (&nn, &qn))| {
+            (no * cat.units_for(qo)).abs_diff(nn * cat.units_for(qn))
+        })
+        .sum()
+}
+
+/// The GPU spec of the class a deployment occupies (all placements sit
+/// in one class by construction); the base spec for a classless pool.
+pub fn deployment_class<'a>(spec: &'a ClusterSpec, deployment: &crate::sim::Deployment) -> &'a GpuSpec {
+    deployment
+        .placements
+        .first()
+        .map_or(&spec.gpu, |p| spec.gpu_at(p.gpu))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::predictor::train_pipeline;
+    use crate::suite::real;
+
+    fn fixture() -> (ClusterSpec, crate::suite::Pipeline, Vec<crate::predictor::StagePredictor>) {
+        let c = ClusterSpec::two_2080ti();
+        let p = real::img_to_text();
+        let preds = train_pipeline(&p, &c.gpu);
+        (c, p, preds)
+    }
+
+    /// Identity classes (same spec, scale 1.0, continuous) delegate to
+    /// CamelotPlanner and reproduce its solution bit for bit.
+    #[test]
+    fn homogeneous_delegation_is_bit_identical() {
+        let (c, p, preds) = fixture();
+        let mut classy = c.clone();
+        classy.classes = vec![GpuClass::scaled(c.gpu.clone(), 2, 1.0)];
+        for objective in [
+            Objective::MaxLoad,
+            Objective::MinResource { load_qps: 30.0 },
+        ] {
+            let flat = CamelotPlanner
+                .plan(
+                    &PlanRequest::new(
+                        objective.clone(),
+                        ClusterState::exclusive(&c),
+                        &p,
+                        &preds,
+                    )
+                    .batch(16),
+                )
+                .expect("flat solves");
+            let hetero = HeteroPlanner
+                .plan(
+                    &PlanRequest::new(
+                        objective,
+                        ClusterState::exclusive(&classy),
+                        &p,
+                        &preds,
+                    )
+                    .batch(16),
+                )
+                .expect("identity classes solve");
+            assert_eq!(flat.allocation, hetero.allocation);
+            assert_eq!(flat.deployment.placements, hetero.deployment.placements);
+            assert_eq!(flat.predicted_p99_s.to_bits(), hetero.predicted_p99_s.to_bits());
+            assert_eq!(flat.objective_value.to_bits(), hetero.objective_value.to_bits());
+            assert_eq!(flat.plan_qps.to_bits(), hetero.plan_qps.to_bits());
+        }
+    }
+
+    /// A faster second class (lower compute_scale) wins MaxLoad, and the
+    /// winning placement lands on that class's global GPU ids.
+    #[test]
+    fn max_load_prefers_the_faster_class() {
+        let (c, p, preds) = fixture();
+        let mut mixed = ClusterSpec { num_gpus: 4, ..c.clone() };
+        mixed.classes = vec![
+            GpuClass::scaled(c.gpu.clone(), 2, 1.0),
+            GpuClass::scaled(c.gpu.clone(), 2, 0.5),
+        ];
+        mixed.validate_classes().unwrap();
+        let s = HeteroPlanner
+            .plan(
+                &PlanRequest::new(
+                    Objective::MaxLoad,
+                    ClusterState::exclusive(&mixed),
+                    &p,
+                    &preds,
+                )
+                .batch(16),
+            )
+            .expect("mixed pool solves");
+        assert!(
+            s.deployment.placements.iter().all(|pl| pl.gpu >= 2),
+            "peak plan should land on the 2x-faster class: {:?}",
+            s.deployment.placements
+        );
+        // and it should beat the homogeneous 2-GPU peak
+        let flat = CamelotPlanner
+            .plan(
+                &PlanRequest::new(
+                    Objective::MaxLoad,
+                    ClusterState::exclusive(&c),
+                    &p,
+                    &preds,
+                )
+                .batch(16),
+            )
+            .unwrap();
+        assert!(s.objective_value > flat.objective_value);
+    }
+
+    /// Discrete mode: every quota is a whole multiple of 1/units, at
+    /// least the continuous quota, and no GPU exceeds its slice budget.
+    #[test]
+    fn discrete_snap_lands_on_catalog_without_overcommit() {
+        let (c, p, preds) = fixture();
+        let mut mig = c.clone();
+        mig.partition = PartitionMode::Discrete(SliceCatalog::mig7());
+        let cont = HeteroPlanner
+            .plan(
+                &PlanRequest::new(
+                    Objective::MinResource { load_qps: 30.0 },
+                    ClusterState::exclusive(&c),
+                    &p,
+                    &preds,
+                )
+                .batch(16),
+            )
+            .unwrap();
+        let disc = HeteroPlanner
+            .plan(
+                &PlanRequest::new(
+                    Objective::MinResource { load_qps: 30.0 },
+                    ClusterState::exclusive(&mig),
+                    &p,
+                    &preds,
+                )
+                .batch(16),
+            )
+            .expect("discrete pool solves");
+        let cat = SliceCatalog::mig7();
+        for (qd, qc) in disc.allocation.quotas.iter().zip(&cont.allocation.quotas) {
+            let units = qd * cat.units as f64;
+            assert!(
+                (units - units.round()).abs() < 1e-9,
+                "quota {qd} is not on the 1/{} grid",
+                cat.units
+            );
+            assert!(*qd >= *qc - 1e-12, "snap must round up: {qd} < {qc}");
+        }
+        assert!(disc.usage >= cont.usage - 1e-12);
+        // per-GPU slice budget: Σ units ≤ catalog.units on every device
+        let mut per_gpu = vec![0u32; mig.num_gpus];
+        for pl in &disc.deployment.placements {
+            per_gpu[pl.gpu] += cat.units_for(pl.sm_frac);
+        }
+        for (g, &u) in per_gpu.iter().enumerate() {
+            assert!(u <= cat.units, "gpu {g} holds {u}/{} slices", cat.units);
+        }
+    }
+
+    /// Shrink in discrete mode refuses when the repartition cost eats
+    /// the saving (same target ⇒ same snapped plan ⇒ NoImprovement).
+    #[test]
+    fn discrete_shrink_prices_repartition() {
+        let (c, p, preds) = fixture();
+        let mut mig = c.clone();
+        mig.partition = PartitionMode::Discrete(SliceCatalog::mig7());
+        let plan = HeteroPlanner
+            .plan(
+                &PlanRequest::new(
+                    Objective::MinResource { load_qps: 30.0 },
+                    ClusterState::exclusive(&mig),
+                    &p,
+                    &preds,
+                )
+                .batch(16),
+            )
+            .unwrap();
+        let noop = HeteroPlanner.plan(
+            &PlanRequest::new(
+                Objective::Shrink { target_qps: 30.0, current: plan.allocation.clone() },
+                ClusterState::exclusive(&mig),
+                &p,
+                &preds,
+            )
+            .batch(16),
+        );
+        assert!(
+            matches!(noop, Err(Infeasible::NoImprovement { .. })),
+            "{noop:?}"
+        );
+    }
+
+    #[test]
+    fn slices_changed_counts_unit_moves() {
+        let cat = SliceCatalog::mig7();
+        let old = Allocation { instances: vec![2, 1], quotas: vec![3.0 / 7.0, 2.0 / 7.0] };
+        let new = Allocation { instances: vec![1, 1], quotas: vec![3.0 / 7.0, 1.0 / 7.0] };
+        // stage 0: 6 -> 3 units (3 moved); stage 1: 2 -> 1 (1 moved)
+        assert_eq!(slices_changed(&cat, &old, &new), 4);
+    }
+
+    /// Mis-declared classes surface as a typed BadRequest, not a panic.
+    #[test]
+    fn invalid_classes_are_bad_requests() {
+        let (c, p, preds) = fixture();
+        let mut broken = c.clone();
+        // non-identity scale so the homogeneous fast path does not
+        // apply, and a count that does not cover the pool
+        broken.classes = vec![GpuClass::scaled(c.gpu.clone(), 1, 0.5)];
+        let out = HeteroPlanner.plan(&PlanRequest::new(
+            Objective::MaxLoad,
+            ClusterState::exclusive(&broken),
+            &p,
+            &preds,
+        ));
+        assert!(matches!(out, Err(Infeasible::BadRequest { .. })), "{out:?}");
+    }
+}

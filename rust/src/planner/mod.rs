@@ -34,14 +34,22 @@
 //!   (admission, re-pack, shrink, autoscale) plans through it and gets
 //!   bit-identical `Solution`s back without re-running the SA solver
 //!   for configurations it has already priced.
+//! * [`HeteroPlanner`] — the heterogeneity-aware strategy: per-GPU-class
+//!   sub-pool planning over mixed fleets (A100/H100/…) and MIG-style
+//!   discrete slice catalogs, delegating verbatim to [`CamelotPlanner`]
+//!   on homogeneous continuous pools (bit-identical, golden-gated).
+
+#![warn(missing_docs)]
 
 pub mod cache;
 pub mod cluster;
 pub(crate) mod engine;
+pub mod hetero;
 pub mod scenario;
 
 pub use cache::{CacheStats, SolveCache};
 pub use cluster::ClusterState;
+pub use hetero::HeteroPlanner;
 pub use scenario::{ScenarioBurst, ScenarioGpuFailure, ScenarioSpec, ScenarioTenant};
 
 use crate::allocator::{AllocContext, SaParams};
@@ -89,18 +97,30 @@ impl Objective {
 /// with the builder methods.
 #[derive(Debug, Clone)]
 pub struct PlanRequest<'a> {
+    /// What to optimize (Case-1, Case-2, re-pack, or shrink).
     pub objective: Objective,
     /// The cluster plus merged co-tenant reservations.
     pub cluster: ClusterState,
+    /// The tenant's pipeline (stages + QoS target).
     pub pipeline: &'a Pipeline,
+    /// One trained predictor per stage (profiled on the base GPU spec).
     pub predictors: &'a [StagePredictor],
+    /// Serving batch size the plan is evaluated at.
     pub batch: u32,
+    /// Inter-stage communication mode (global IPC or main memory).
     pub comm: CommMode,
     /// Enforce the C3 bandwidth constraint (false = Camelot-NC).
     pub enforce_bw: bool,
     /// Fraction of the QoS budget available to stage processing +
     /// communication (C5 headroom).
     pub qos_headroom: f64,
+    /// Relative service-time multiplier of the GPU class being planned
+    /// for (1.0 = the class the predictors were profiled on; see
+    /// [`crate::config::GpuClass::compute_scale`]). The heterogeneous
+    /// planner sets this per sub-pool; callers planning a homogeneous
+    /// cluster leave the default.
+    pub compute_scale: f64,
+    /// Simulated-annealing search budget and seed.
     pub sa: SaParams,
 }
 
@@ -123,32 +143,45 @@ impl<'a> PlanRequest<'a> {
             comm: CommMode::GlobalIpc,
             enforce_bw: true,
             qos_headroom: 0.80,
+            compute_scale: 1.0,
             sa: SaParams::default(),
         }
     }
 
+    /// Override the serving batch size.
     pub fn batch(mut self, batch: u32) -> Self {
         self.batch = batch;
         self
     }
 
+    /// Override the SA search budget/seed.
     pub fn sa(mut self, sa: SaParams) -> Self {
         self.sa = sa;
         self
     }
 
+    /// Override the inter-stage communication mode.
     pub fn comm(mut self, comm: CommMode) -> Self {
         self.comm = comm;
         self
     }
 
+    /// Toggle the C3 bandwidth constraint (false = Camelot-NC).
     pub fn enforce_bw(mut self, enforce: bool) -> Self {
         self.enforce_bw = enforce;
         self
     }
 
+    /// Override the C5 headroom fraction.
     pub fn qos_headroom(mut self, qos_headroom: f64) -> Self {
         self.qos_headroom = qos_headroom;
+        self
+    }
+
+    /// Override the GPU-class service-time multiplier (see the
+    /// [`compute_scale`](Self::compute_scale) field).
+    pub fn compute_scale(mut self, scale: f64) -> Self {
+        self.compute_scale = scale;
         self
     }
 
@@ -170,6 +203,7 @@ impl<'a> PlanRequest<'a> {
         ctx.comm = self.comm;
         ctx.enforce_bw = self.enforce_bw;
         ctx.qos_headroom = self.qos_headroom;
+        ctx.compute_scale = self.compute_scale;
         ctx
     }
 }
@@ -204,8 +238,10 @@ pub struct Solution {
     /// usage (`MinResource`/`Shrink`), 0 for `Repack` (nothing is
     /// optimized — the allocation is given).
     pub objective_value: f64,
-    /// SA search statistics (0 for `Repack`, which does not search).
+    /// SA search statistics (0 for `Repack`, which does not search):
+    /// candidates evaluated.
     pub evaluated: usize,
+    /// SA search statistics: feasible candidates found.
     pub feasible_found: usize,
 }
 
@@ -254,6 +290,7 @@ pub type PlanOutcome = Result<Solution, Infeasible>;
 /// strategies (baselines, heterogeneous-cluster planners) implement the
 /// same trait and become drop-in interchangeable.
 pub trait Planner {
+    /// Answer the request with a [`Solution`] or a typed [`Infeasible`].
     fn plan(&self, req: &PlanRequest<'_>) -> PlanOutcome;
 }
 

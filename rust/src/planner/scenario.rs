@@ -25,6 +25,7 @@
 //! {
 //!   "name": "case1-case2-shrink",
 //!   "cluster": {"preset": "2080ti", "gpus": 2},
+//!   "//": "mixed pools: cluster.gpu_classes + cluster.partition_mode",
 //!   "batch": 16,
 //!   "seed": 42,
 //!   "queries": 600,
@@ -43,7 +44,7 @@
 
 use std::path::Path;
 
-use crate::config::ClusterSpec;
+use crate::config::{ClusterSpec, GpuClass, GpuSpec, PartitionMode, SliceCatalog};
 use crate::predictor::{train_pipeline, StagePredictor};
 use crate::suite::workload::{
     ArrivalProcess, DiurnalPattern, Priority, TenantTrace, TenantTraceEvent, TraceEventKind,
@@ -52,11 +53,12 @@ use crate::suite::Pipeline;
 use crate::util::json::Json;
 use crate::util::{fnum, Table};
 
-use super::{CamelotPlanner, ClusterState, Objective, Planner, Solution};
+use super::{ClusterState, HeteroPlanner, Objective, Planner, Solution};
 
 /// One tenant of a declarative scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioTenant {
+    /// Display name (defaults to `<pipeline>#<index>`).
     pub name: String,
     /// Benchmark name, resolvable by [`crate::suite::pipeline_by_name`].
     pub pipeline: String,
@@ -66,11 +68,13 @@ pub struct ScenarioTenant {
     pub plan_qps: f64,
     /// Offered-load model while resident.
     pub arrivals: ArrivalProcess,
-    /// Trace timing (used by `admit --spec`).
+    /// Trace timing (used by `admit --spec`): arrival instant.
     pub arrive_s: f64,
+    /// Trace timing: departure instant (resident forever when absent).
     pub depart_s: Option<f64>,
     /// Resident shrink: re-admit at this lower load after planning.
     pub shrink_to: Option<f64>,
+    /// When the shrink fires in the trace (default: 1 s after arrival).
     pub shrink_at_s: Option<f64>,
     /// Service tier (`"latency-critical"`, the default, or
     /// `"best-effort"`): best-effort residents are preemptible when a
@@ -85,8 +89,11 @@ pub struct ScenarioTenant {
 /// later.
 #[derive(Debug, Clone, Copy)]
 pub struct ScenarioBurst {
+    /// When the flash crowd opens.
     pub at_s: f64,
+    /// Offered-load multiplier while the window is open.
     pub rate_mult: f64,
+    /// Window length in seconds.
     pub duration_s: f64,
 }
 
@@ -94,30 +101,41 @@ pub struct ScenarioBurst {
 /// `at_s` and (optionally) return at `recover_s`.
 #[derive(Debug, Clone)]
 pub struct ScenarioGpuFailure {
+    /// When the failure strikes.
     pub at_s: f64,
+    /// The failed GPU ids.
     pub gpus: Vec<usize>,
+    /// When the GPUs return (never when absent).
     pub recover_s: Option<f64>,
 }
 
 /// The per-tenant objective kinds a spec may name.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScenarioObjective {
+    /// Case 1 — maximize the supported peak load.
     MaxLoad,
+    /// Case 2 — minimize usage at the planning load (the default).
     MinResource,
 }
 
 /// A parsed declarative scenario.
 #[derive(Debug, Clone)]
 pub struct ScenarioSpec {
+    /// Scenario display name.
     pub name: String,
+    /// The pool (preset + size, plus `gpu_classes`/`partition_mode` for
+    /// mixed or MIG-sliced fleets).
     pub cluster: ClusterSpec,
+    /// Serving batch size every tenant plans at.
     pub batch: u32,
+    /// Root seed for validation simulations.
     pub seed: u64,
     /// Queries per tenant in validation simulations (`admit --spec`).
     pub queries: usize,
     /// Cells for the cluster-of-cells router (`admit --spec`): 1 runs
     /// the flat admission controller, N > 1 shards the cluster.
     pub cells: usize,
+    /// The tenants, in planning/arrival order.
     pub tenants: Vec<ScenarioTenant>,
     /// Chaos: GPU-failure windows injected into the trace replay.
     pub gpu_failures: Vec<ScenarioGpuFailure>,
@@ -286,7 +304,7 @@ impl ScenarioSpec {
             };
             let req = super::PlanRequest::new(objective, state.clone(), &pipeline, &predictors)
                 .batch(self.batch);
-            let solution = CamelotPlanner
+            let solution = HeteroPlanner
                 .plan(&req)
                 .map_err(|e| format!("tenant '{}': {e}", t.name))?;
             state.reserve_tenant(&pipeline, &solution.deployment);
@@ -332,7 +350,7 @@ impl ScenarioSpec {
                         &pl.predictors,
                     )
                     .batch(self.batch);
-                    CamelotPlanner.plan(&req)
+                    HeteroPlanner.plan(&req)
                 };
                 let before = planned[i].solution.usage;
                 match outcome {
@@ -376,7 +394,8 @@ fn parse_cluster(node: Option<&Json>) -> Result<ClusterSpec, String> {
     };
     let obj = node.as_obj().ok_or("'cluster' must be a JSON object")?;
     for key in obj.keys() {
-        if key != "preset" && key != "gpus" {
+        const KNOWN: [&str; 4] = ["preset", "gpus", "partition_mode", "gpu_classes"];
+        if !KNOWN.contains(&key.as_str()) {
             return Err(format!("cluster: unknown field '{key}'"));
         }
     }
@@ -393,7 +412,90 @@ fn parse_cluster(node: Option<&Json>) -> Result<ClusterSpec, String> {
         }
         cluster.num_gpus = gpus;
     }
+    cluster.partition = parse_partition_mode(node.get("partition_mode"), "cluster")?;
+    if let Some(classes_json) = node.get("gpu_classes") {
+        let arr = classes_json
+            .as_arr()
+            .ok_or("cluster: 'gpu_classes' must be an array")?;
+        if arr.is_empty() {
+            return Err("cluster: 'gpu_classes' must not be empty".to_string());
+        }
+        let mut classes = Vec::with_capacity(arr.len());
+        for (i, c) in arr.iter().enumerate() {
+            classes.push(parse_gpu_class(c, i, &cluster)?);
+        }
+        // 'gpus' may be omitted when the classes describe the pool fully
+        if node.get("gpus").is_none() {
+            cluster.num_gpus = classes.iter().map(|c: &GpuClass| c.count).sum();
+        }
+        cluster.classes = classes;
+        cluster
+            .validate_classes()
+            .map_err(|e| format!("cluster: {e}"))?;
+    }
     Ok(cluster)
+}
+
+fn parse_partition_mode(node: Option<&Json>, what: &str) -> Result<PartitionMode, String> {
+    match node {
+        None => Ok(PartitionMode::Continuous),
+        Some(v) => match v.as_str() {
+            Some("continuous") => Ok(PartitionMode::Continuous),
+            Some("discrete") => Ok(PartitionMode::Discrete(SliceCatalog::mig7())),
+            Some(other) => Err(format!(
+                "{what}: unknown partition_mode '{other}' (continuous | discrete)"
+            )),
+            None => Err(format!("{what}: 'partition_mode' must be a string")),
+        },
+    }
+}
+
+/// One entry of a cluster's `gpu_classes` array:
+/// `{"gpu": "a100", "count": 2, "compute_scale": 0.7, "partition_mode": "discrete"}`.
+///
+/// `compute_scale` defaults to the GFLOPS ratio of the pool's base GPU
+/// to the class GPU (an H100 class in a 2080 Ti pool defaults to a
+/// scale < 1, i.e. faster stages); `partition_mode` defaults to the
+/// pool-wide mode.
+fn parse_gpu_class(node: &Json, index: usize, pool: &ClusterSpec) -> Result<GpuClass, String> {
+    let obj = node
+        .as_obj()
+        .ok_or_else(|| format!("gpu_classes[{index}] must be a JSON object"))?;
+    for key in obj.keys() {
+        const KNOWN: [&str; 4] = ["gpu", "count", "compute_scale", "partition_mode"];
+        if !KNOWN.contains(&key.as_str()) {
+            return Err(format!("gpu_classes[{index}]: unknown field '{key}'"));
+        }
+    }
+    let name = node
+        .get_str("gpu")
+        .ok_or_else(|| format!("gpu_classes[{index}] needs a 'gpu' preset name"))?;
+    let gpu = GpuSpec::by_name(name).ok_or_else(|| {
+        format!("gpu_classes[{index}]: unknown gpu '{name}' (2080ti | v100 | a100 | h100)")
+    })?;
+    let count = match node.get_f64("count") {
+        Some(c) if c.fract() == 0.0 && (1.0..=32.0).contains(&c) => c as usize,
+        Some(c) => {
+            return Err(format!(
+                "gpu_classes[{index}]: count must be an integer in 1..=32, got {c}"
+            ))
+        }
+        None => return Err(format!("gpu_classes[{index}] needs a 'count'")),
+    };
+    let compute_scale = match node.get_f64("compute_scale") {
+        Some(s) if s.is_finite() && s > 0.0 => s,
+        Some(s) => {
+            return Err(format!(
+                "gpu_classes[{index}]: compute_scale must be finite and > 0, got {s}"
+            ))
+        }
+        None => pool.gpu.gflops / gpu.gflops,
+    };
+    let partition = match node.get("partition_mode") {
+        None => pool.partition.clone(),
+        some => parse_partition_mode(some, &format!("gpu_classes[{index}]"))?,
+    };
+    Ok(GpuClass { gpu, count, compute_scale, partition })
 }
 
 /// Read a non-negative integer field with a default.
@@ -872,6 +974,117 @@ mod tests {
         assert_eq!(t.objective, ScenarioObjective::MinResource);
         assert!(matches!(t.arrivals, ArrivalProcess::Constant { .. }));
         assert_eq!(t.arrive_s, 0.0);
+    }
+
+    #[test]
+    fn all_example_specs_parse() {
+        // examples/ lives at the repo root, one level above the crate
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../examples");
+        let mut found = 0usize;
+        for entry in std::fs::read_dir(&dir).expect("examples dir exists") {
+            let path = entry.expect("dir entry").path();
+            if path.extension().and_then(|e| e.to_str()) != Some("json") {
+                continue;
+            }
+            ScenarioSpec::load(&path)
+                .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+            found += 1;
+        }
+        assert!(found >= 3, "expected >= 3 example specs, found {found}");
+    }
+
+    #[test]
+    fn parses_hetero_cluster_fields() {
+        let spec = ScenarioSpec::parse(
+            r#"{
+            "cluster": {
+                "preset": "2080ti",
+                "partition_mode": "discrete",
+                "gpu_classes": [
+                    {"gpu": "a100", "count": 2},
+                    {"gpu": "h100", "count": 1, "compute_scale": 0.25,
+                     "partition_mode": "continuous"}
+                ]
+            },
+            "tenants": [{"pipeline": "img-to-text", "plan_qps": 50}]
+        }"#,
+        )
+        .unwrap();
+        let c = &spec.cluster;
+        // 'gpus' omitted: class counts define the pool size
+        assert_eq!(c.num_gpus, 3);
+        assert_eq!(c.classes.len(), 2);
+        assert_eq!(c.classes[0].gpu.name, "A100-SXM4-80GB");
+        assert_eq!(c.classes[0].count, 2);
+        // default compute_scale = base gflops / class gflops (< 1: faster)
+        let derived = c.gpu.gflops / c.classes[0].gpu.gflops;
+        assert_eq!(c.classes[0].compute_scale.to_bits(), derived.to_bits());
+        assert!(derived < 1.0);
+        // class partition defaults to the pool-wide mode...
+        assert!(matches!(c.classes[0].partition, PartitionMode::Discrete(_)));
+        // ...unless overridden per class
+        assert_eq!(c.classes[1].compute_scale, 0.25);
+        assert_eq!(c.classes[1].partition, PartitionMode::Continuous);
+        assert!(!c.effectively_homogeneous());
+    }
+
+    #[test]
+    fn rejects_malformed_hetero_fields() {
+        const TENANTS: &str = r#""tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]"#;
+        for (cluster, want) in [
+            (
+                r#"{"preset": "2080ti", "partition_mode": "mig"}"#,
+                "cluster: unknown partition_mode 'mig' (continuous | discrete)",
+            ),
+            (
+                r#"{"gpu_classes": []}"#,
+                "cluster: 'gpu_classes' must not be empty",
+            ),
+            (
+                r#"{"gpu_classes": [{"gpu": "tpu", "count": 1}]}"#,
+                "gpu_classes[0]: unknown gpu 'tpu' (2080ti | v100 | a100 | h100)",
+            ),
+            (
+                r#"{"gpu_classes": [{"gpu": "a100"}]}"#,
+                "gpu_classes[0] needs a 'count'",
+            ),
+            (
+                r#"{"gpu_classes": [{"gpu": "a100", "count": 1.5}]}"#,
+                "gpu_classes[0]: count must be an integer in 1..=32, got 1.5",
+            ),
+            (
+                r#"{"gpu_classes": [{"gpu": "a100", "count": 1, "compute_scale": -2}]}"#,
+                "gpu_classes[0]: compute_scale must be finite and > 0, got -2",
+            ),
+            (
+                r#"{"gpu_classes": [{"gpu": "a100", "count": 1, "slices": 7}]}"#,
+                "gpu_classes[0]: unknown field 'slices'",
+            ),
+            (
+                r#"{"gpus": 4, "gpu_classes": [{"gpu": "a100", "count": 3}]}"#,
+                "counts sum to 3 but num_gpus is 4",
+            ),
+        ] {
+            let frag = format!("{{\"cluster\": {cluster}, {TENANTS}}}");
+            let err = ScenarioSpec::parse(&frag).expect_err(want);
+            assert!(err.contains(want), "expected '{want}' in '{err}'");
+        }
+    }
+
+    #[test]
+    fn plan_tables_handles_a_mixed_pool() {
+        let spec = ScenarioSpec::parse(
+            r#"{
+            "cluster": {"preset": "2080ti", "gpus": 4,
+                        "gpu_classes": [{"gpu": "2080ti", "count": 2},
+                                        {"gpu": "a100", "count": 2}]},
+            "tenants": [{"pipeline": "text-to-text", "plan_qps": 60}]
+        }"#,
+        )
+        .unwrap();
+        let tables = spec.plan_tables().expect("mixed pool plans");
+        assert_eq!(tables.len(), 1);
+        assert_eq!(tables[0].rows.len(), 1);
     }
 
     #[test]

@@ -112,7 +112,7 @@ impl<'a> ClusterSim<'a> {
     /// tenants, exactly as same-stage instances do within one (§VII-D).
     pub fn admit(&self) -> Result<Vec<SimGpu>, String> {
         let mut gpus: Vec<SimGpu> = (0..self.cluster.num_gpus)
-            .map(|_| SimGpu::new(self.cluster.gpu.clone()))
+            .map(|g| SimGpu::new(self.cluster.gpu_at(g).clone()))
             .collect();
         for (tn, t) in self.tenants.iter().enumerate() {
             super::engine::admit_deployment(t.pipeline, t.deployment, &mut gpus)
@@ -127,6 +127,16 @@ impl<'a> ClusterSim<'a> {
     pub fn run(&self) -> Result<Vec<SimReport>, String> {
         self.admit()?;
         let cost = CostModel::new(self.cluster.gpu.clone());
+        // per-GPU cost models only when a class departs from the base
+        // spec — mirrors the single-tenant engine's heterogeneity hook
+        let model_at = |g: usize| -> CostModel {
+            let spec = self.cluster.gpu_at(g);
+            if *spec == self.cluster.gpu {
+                cost.clone()
+            } else {
+                CostModel::new(spec.clone())
+            }
+        };
         let mut bus = PcieBus::new(self.cluster.pcie.clone());
         let ipc = &self.cluster.ipc;
         let n_tenants = self.tenants.len();
@@ -194,7 +204,12 @@ impl<'a> ClusterSim<'a> {
                     queue: VecDeque::with_capacity(n_requests[tn].clamp(16, 64)),
                     busy: false,
                     exec_rid: 0,
-                    cost: cost.instance_cost(stage, batch, p.sm_frac),
+                    cost: model_at(p.gpu).instance_cost_scaled(
+                        stage,
+                        batch,
+                        p.sm_frac,
+                        self.cluster.scale_at(p.gpu),
+                    ),
                     in_bytes_batch: stage.in_bytes_per_query * batch as f64,
                     out_bytes_batch: stage.out_bytes_per_query * batch as f64,
                     batch_f: batch as f64,

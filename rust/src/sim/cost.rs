@@ -122,6 +122,35 @@ impl CostModel {
             bw_demand: self.bw_demand(stage, batch, p),
         }
     }
+
+    /// [`instance_cost`](Self::instance_cost) on a GPU whose per-stage
+    /// service times run at `scale`× this model's (a heterogeneous-pool
+    /// class's `compute_scale`; < 1 = faster). Compute and memory times
+    /// scale directly; the bandwidth demand rate is re-derived from the
+    /// scaled solo duration so the kernel still moves the same bytes
+    /// over its (shorter or longer) lifetime. `scale == 1.0` returns
+    /// exactly `instance_cost` — the homogeneous bit-identity guard.
+    pub fn instance_cost_scaled(
+        &self,
+        stage: &StageProfile,
+        batch: u32,
+        p: f64,
+        scale: f64,
+    ) -> InstanceCost {
+        if scale == 1.0 {
+            return self.instance_cost(stage, batch, p);
+        }
+        let compute_time_s = self.compute_time(stage, batch, p) * scale;
+        let mem_time_solo_s = self.mem_time_solo(stage, batch, p) * scale;
+        let duration_solo = self.gpu.launch_overhead_s + compute_time_s.max(mem_time_solo_s);
+        InstanceCost {
+            launch_s: self.gpu.launch_overhead_s,
+            mem_bw: self.gpu.mem_bw,
+            compute_time_s,
+            mem_time_solo_s,
+            bw_demand: stage.hbm_bytes(batch) / duration_solo,
+        }
+    }
 }
 
 /// Frozen cost quantities of one placed instance (fixed stage, batch
@@ -283,6 +312,24 @@ mod tests {
             }
             true
         });
+    }
+
+    #[test]
+    fn scaled_instance_cost_identity_and_monotone() {
+        let m = model();
+        let s = artifact::compute(2);
+        // scale 1.0 is bit-identical to the unscaled cache
+        let a = m.instance_cost(&s, 32, 0.4);
+        let b = m.instance_cost_scaled(&s, 32, 0.4, 1.0);
+        assert_eq!(a.duration_contended(1e10).to_bits(), b.duration_contended(1e10).to_bits());
+        assert_eq!(a.bw_demand.to_bits(), b.bw_demand.to_bits());
+        // a faster class (scale < 1) finishes sooner and, moving the
+        // same bytes in less time, demands more bandwidth
+        let fast = m.instance_cost_scaled(&s, 32, 0.4, 0.5);
+        assert!(fast.duration_solo() < a.duration_solo());
+        assert!(fast.bw_demand > a.bw_demand);
+        let slow = m.instance_cost_scaled(&s, 32, 0.4, 2.0);
+        assert!(slow.duration_solo() > a.duration_solo());
     }
 
     #[test]

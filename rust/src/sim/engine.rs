@@ -330,10 +330,11 @@ impl<'a> Simulator<'a> {
     }
 
     /// Statically validate the deployment (capacity, contexts, memory —
-    /// Constraints 1/2/4 of Eq. 1). Returns the admitted GPU states.
+    /// Constraints 1/2/4 of Eq. 1). Returns the admitted GPU states —
+    /// each built from its own per-GPU spec on a heterogeneous pool.
     pub fn admit(&self) -> Result<Vec<SimGpu>, String> {
         let mut gpus: Vec<SimGpu> = (0..self.cluster.num_gpus)
-            .map(|_| SimGpu::new(self.cluster.gpu.clone()))
+            .map(|g| SimGpu::new(self.cluster.gpu_at(g).clone()))
             .collect();
         admit_deployment(self.pipeline, self.deployment, &mut gpus)?;
         Ok(gpus)
@@ -343,6 +344,16 @@ impl<'a> Simulator<'a> {
     pub fn run(&self, offered_qps: f64) -> Result<SimReport, String> {
         self.admit()?;
         let cost = CostModel::new(self.cluster.gpu.clone());
+        // per-GPU cost models only when a class departs from the base
+        // spec — the homogeneous path keeps the single shared model
+        let model_at = |g: usize| -> CostModel {
+            let spec = self.cluster.gpu_at(g);
+            if *spec == self.cluster.gpu {
+                cost.clone()
+            } else {
+                CostModel::new(spec.clone())
+            }
+        };
         let mut bus = PcieBus::new(self.cluster.pcie.clone());
         let ipc = &self.cluster.ipc;
         let batch = self.deployment.batch.max(1) as usize;
@@ -367,7 +378,12 @@ impl<'a> Simulator<'a> {
                     queue: VecDeque::with_capacity(16),
                     busy: false,
                     exec_rid: 0,
-                    cost: cost.instance_cost(stage, batch as u32, p.sm_frac),
+                    cost: model_at(p.gpu).instance_cost_scaled(
+                        stage,
+                        batch as u32,
+                        p.sm_frac,
+                        self.cluster.scale_at(p.gpu),
+                    ),
                     in_bytes_batch: stage.in_bytes_per_query * batch as f64,
                     out_bytes_batch: stage.out_bytes_per_query * batch as f64,
                 }
@@ -574,6 +590,28 @@ impl<'a> Simulator<'a> {
     pub fn run_reference(&self, offered_qps: f64) -> Result<SimReport, String> {
         let mut gpus = self.admit()?;
         let cost = CostModel::new(self.cluster.gpu.clone());
+        // per-instance (model, scale) for heterogeneous pools; on the
+        // homogeneous base cluster every entry is the shared model at
+        // scale 1.0 and the per-event calls below are unchanged
+        let models: Vec<CostModel> = self
+            .deployment
+            .placements
+            .iter()
+            .map(|p| {
+                let spec = self.cluster.gpu_at(p.gpu);
+                if *spec == self.cluster.gpu {
+                    cost.clone()
+                } else {
+                    CostModel::new(spec.clone())
+                }
+            })
+            .collect();
+        let scales: Vec<f64> = self
+            .deployment
+            .placements
+            .iter()
+            .map(|p| self.cluster.scale_at(p.gpu))
+            .collect();
         let mut bus = PcieBus::new(self.cluster.pcie.clone());
         let ipc = &self.cluster.ipc;
         let batch = self.deployment.batch.max(1) as usize;
@@ -648,7 +686,8 @@ impl<'a> Simulator<'a> {
             instances: &mut [RefInstance],
             gpus: &mut [SimGpu],
             bus: &mut PcieBus,
-            cost: &CostModel,
+            models: &[CostModel],
+            scales: &[f64],
             pipeline: &Pipeline,
             batch: usize,
             heap: &mut BinaryHeap<Event<RefEv>>,
@@ -686,11 +725,22 @@ impl<'a> Simulator<'a> {
                 breakdown.upload_s += up * n as f64;
                 start += up;
             }
-            let others = gpus[gpu].kernel_start(
-                inst_id,
-                cost.bw_demand(stage, n as u32, sm),
-            );
-            let dur = cost.duration_contended(stage, n as u32, sm, others);
+            let cost = &models[inst_id];
+            let (demand, dur_of): (f64, _) = if scales[inst_id] == 1.0 {
+                // seed path: per-event CostModel evaluation
+                (cost.bw_demand(stage, n as u32, sm), None)
+            } else {
+                // heterogeneous class: the scaled frozen quantities are
+                // the semantics (bit-identical to the optimized engine
+                // by the instance-cost cache contract)
+                let ic = cost.instance_cost_scaled(stage, n as u32, sm, scales[inst_id]);
+                (ic.bw_demand, Some(ic))
+            };
+            let others = gpus[gpu].kernel_start(inst_id, demand);
+            let dur = match dur_of {
+                None => cost.duration_contended(stage, n as u32, sm, others),
+                Some(ic) => ic.duration_contended(others),
+            };
             stage_exec_sum[stage_idx] += dur;
             stage_exec_n[stage_idx] += 1;
             breakdown.exec_s += dur * n as f64;
@@ -711,7 +761,7 @@ impl<'a> Simulator<'a> {
                     );
                     instances[target].queue.push_back((qid, now));
                     try_issue(
-                        target, now, &mut instances, &mut gpus, &mut bus, &cost,
+                        target, now, &mut instances, &mut gpus, &mut bus, &models, &scales,
                         self.pipeline, batch, &mut heap,
                         &mut seq, &mut breakdown, &mut stage_exec_sum, &mut stage_exec_n,
                     );
@@ -759,7 +809,7 @@ impl<'a> Simulator<'a> {
                     }
                     // instance freed: maybe issue the next batch
                     try_issue(
-                        inst_id, now, &mut instances, &mut gpus, &mut bus, &cost,
+                        inst_id, now, &mut instances, &mut gpus, &mut bus, &models, &scales,
                         self.pipeline, batch, &mut heap,
                         &mut seq, &mut breakdown, &mut stage_exec_sum, &mut stage_exec_n,
                     );
@@ -770,7 +820,7 @@ impl<'a> Simulator<'a> {
                             instances[t_inst].queue.push_back((qid, now));
                         }
                         try_issue(
-                            t_inst, now, &mut instances, &mut gpus, &mut bus, &cost,
+                            t_inst, now, &mut instances, &mut gpus, &mut bus, &models, &scales,
                             self.pipeline, batch, &mut heap,
                             &mut seq, &mut breakdown, &mut stage_exec_sum, &mut stage_exec_n,
                         );
@@ -927,6 +977,66 @@ mod tests {
         // with main-memory comm the transfer share is large.
         let frac = b.comm_total() / (b.comm_total() + b.exec_s);
         assert!(frac > 0.15, "comm fraction {frac}");
+    }
+
+    #[test]
+    fn hetero_class_speeds_up_and_engines_agree() {
+        use crate::config::GpuClass;
+        let p = real::img_to_text();
+        let base = ClusterSpec::two_2080ti();
+        // same hardware, but GPU 1 runs stages at 0.5× the service time
+        let fast = ClusterSpec {
+            classes: vec![
+                GpuClass::scaled(base.gpu.clone(), 1, 1.0),
+                GpuClass::scaled(base.gpu.clone(), 1, 0.5),
+            ],
+            ..base.clone()
+        };
+        let d = Deployment {
+            placements: vec![
+                InstancePlacement { stage: 0, gpu: 1, sm_frac: 0.5 },
+                InstancePlacement { stage: 1, gpu: 1, sm_frac: 0.5 },
+            ],
+            batch: 16,
+            comm: CommMode::GlobalIpc,
+        };
+        let o = SimOptions { queries: 800, ..Default::default() };
+        let slow_run = Simulator::new(&p, &base, &d, o.clone()).run(80.0).unwrap();
+        let fast_sim = Simulator::new(&p, &fast, &d, o);
+        let fast_run = fast_sim.run(80.0).unwrap();
+        assert!(
+            fast_run.hist.mean() < slow_run.hist.mean(),
+            "0.5× service time must lower mean latency: {} vs {}",
+            fast_run.hist.mean(),
+            slow_run.hist.mean()
+        );
+        // optimized and reference engines agree bit-for-bit on the
+        // heterogeneous cluster too
+        let fast_ref = fast_sim.run_reference(80.0).unwrap();
+        assert_eq!(fast_run.completed, fast_ref.completed);
+        assert_eq!(fast_run.p99().to_bits(), fast_ref.p99().to_bits());
+        assert_eq!(
+            fast_run.breakdown.exec_s.to_bits(),
+            fast_ref.breakdown.exec_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn explicit_identity_classes_are_bit_identical() {
+        use crate::config::GpuClass;
+        let p = real::img_to_text();
+        let base = ClusterSpec::two_2080ti();
+        let tagged = ClusterSpec {
+            classes: vec![GpuClass::scaled(base.gpu.clone(), 2, 1.0)],
+            ..base.clone()
+        };
+        let d = simple_deployment(CommMode::GlobalIpc);
+        let o = SimOptions { queries: 800, ..Default::default() };
+        let a = Simulator::new(&p, &base, &d, o.clone()).run(120.0).unwrap();
+        let b = Simulator::new(&p, &tagged, &d, o).run(120.0).unwrap();
+        assert_eq!(a.p99().to_bits(), b.p99().to_bits());
+        assert_eq!(a.breakdown.exec_s.to_bits(), b.breakdown.exec_s.to_bits());
+        assert_eq!(a.completed, b.completed);
     }
 
     #[test]

@@ -125,10 +125,33 @@ pub fn generate_spec_json(seed: u64, index: usize, queries: usize) -> String {
     // JSON number round-trips exactly through the f64 parser
     let spec_seed = mix_seed(seed, index as u64) % 1_000_000;
 
+    // heterogeneous pools (~30%): base 2080ti GPUs plus one faster
+    // class, sometimes with an explicit compute_scale (else the parser
+    // derives it from the GFLOPS ratio), sometimes MIG-sliced
+    let mut cluster = format!("{{\"preset\": \"2080ti\", \"gpus\": {gpus}");
+    if rng.f64() < 0.2 {
+        cluster.push_str(", \"partition_mode\": \"discrete\"");
+    }
+    if rng.f64() < 0.3 {
+        let fast = pick(&mut rng, &["v100", "a100", "h100"]);
+        let fast_n = 1 + rng.below(gpus - 1); // both classes non-empty
+        let base_n = gpus - fast_n;
+        let _ = write!(
+            cluster,
+            ", \"gpu_classes\": [{{\"gpu\": \"2080ti\", \"count\": {base_n}}}, {{\"gpu\": \"{fast}\", \"count\": {fast_n}"
+        );
+        if rng.f64() < 0.5 {
+            let scale = pick(&mut rng, &["0.5", "0.6", "0.8"]);
+            let _ = write!(cluster, ", \"compute_scale\": {scale}");
+        }
+        cluster.push_str("}]");
+    }
+    cluster.push('}');
+
     let mut json = String::new();
     let _ = write!(
         json,
-        "{{\n  \"name\": \"fuzz-{seed}-{index}\",\n  \"cluster\": {{\"preset\": \"2080ti\", \"gpus\": {gpus}}},\n  \"batch\": {batch},\n  \"seed\": {spec_seed},\n  \"queries\": {queries},\n  \"cells\": {cells},\n  \"tenants\": ["
+        "{{\n  \"name\": \"fuzz-{seed}-{index}\",\n  \"cluster\": {cluster},\n  \"batch\": {batch},\n  \"seed\": {spec_seed},\n  \"queries\": {queries},\n  \"cells\": {cells},\n  \"tenants\": ["
     );
 
     let n_tenants = 2 + rng.below(4); // 2..=5
@@ -427,9 +450,22 @@ mod tests {
     fn generated_population_covers_the_chaos_vocabulary() {
         let (mut bursts, mut failures, mut best_effort, mut diurnal, mut cells) =
             (0, 0, 0, 0, 0);
+        let (mut hetero, mut discrete) = (0, 0);
         for index in 0..60 {
             let json = generate_spec_json(11, index, 80);
             let spec = ScenarioSpec::parse(&json).expect("valid spec");
+            hetero += usize::from(!spec.cluster.classes.is_empty());
+            discrete += usize::from(matches!(
+                spec.cluster.partition,
+                crate::config::PartitionMode::Discrete(_)
+            ));
+            if !spec.cluster.classes.is_empty() {
+                // generated classes always cover the whole pool
+                assert_eq!(
+                    spec.cluster.classes.iter().map(|c| c.count).sum::<usize>(),
+                    spec.cluster.num_gpus
+                );
+            }
             bursts += spec.tenants.iter().map(|t| t.bursts.len()).sum::<usize>();
             failures += spec.gpu_failures.len();
             best_effort += spec
@@ -456,6 +492,30 @@ mod tests {
         assert!(best_effort > 0, "no best-effort tenants generated");
         assert!(diurnal > 0, "no diurnal arrivals generated");
         assert!(cells > 0, "no multi-cell scenarios generated");
+        assert!(hetero > 0, "no mixed gpu_classes pools generated");
+        assert!(discrete > 0, "no discrete partition_mode generated");
+    }
+
+    #[test]
+    fn mixed_pool_scenarios_replay_without_violations() {
+        // a small targeted sweep: the first few generated specs with
+        // gpu_classes must clear invariants (a)-(c) like any other
+        let mut checked = 0;
+        for index in 0..40 {
+            if checked >= 2 {
+                break; // two full thread-matrix replays keep this brisk
+            }
+            let json = generate_spec_json(11, index, 60);
+            let spec = ScenarioSpec::parse(&json).expect("valid spec");
+            if spec.cluster.classes.is_empty() {
+                continue;
+            }
+            checked += 1;
+            if let Err(problems) = check_scenario(&json, false) {
+                panic!("mixed-pool scenario {index} violated: {problems:?}\n{json}");
+            }
+        }
+        assert!(checked > 0, "no mixed-pool scenario in the first 40");
     }
 
     #[test]

@@ -1,0 +1,128 @@
+//! Golden suite for heterogeneity-aware planning (`HeteroPlanner`):
+//!
+//! * **Identity-class equivalence** — a pool whose `gpu_classes` merely
+//!   restate the homogeneous composition (same GPU, `compute_scale`
+//!   1.0, continuous partition) replays **bit-identically** to the flat
+//!   spec, across 1/2/8 worker threads. This pins the contract that
+//!   every heterogeneity code path is gated: homogeneous behavior is
+//!   byte-for-byte the pre-hetero behavior.
+//! * **Discrete catalogs never over-commit** — on a MIG-sliced pool
+//!   every admitted quota lands on the slice grid and no GPU exceeds
+//!   its slice budget, even with multiple residents.
+//! * **Mixed pools are thread-count invariant** — the determinism
+//!   contract extends to pools with a faster class in the mix.
+
+use camelot::config::{ClusterSpec, GpuClass, GpuSpec, PartitionMode, SliceCatalog};
+use camelot::coordinator::admission::{replay_trace, ReplayConfig};
+use camelot::coordinator::{AdmissionConfig, AdmissionController};
+use camelot::suite::workload::{
+    ArrivalProcess, Priority, TenantTrace, TenantTraceEvent, TraceEventKind,
+};
+
+fn trace3() -> TenantTrace {
+    let mk = |t_s: f64, tenant: u64, kind: TraceEventKind| TenantTraceEvent { t_s, tenant, kind };
+    let arrive = |pipeline: &str, qps: f64| TraceEventKind::Arrive {
+        pipeline: pipeline.into(),
+        name: None,
+        arrivals: ArrivalProcess::constant(qps),
+        plan_qps: qps,
+        priority: Priority::LatencyCritical,
+    };
+    TenantTrace {
+        events: vec![
+            mk(0.0, 0, arrive("img-to-text", 110.0)),
+            mk(40.0, 1, arrive("text-to-text", 70.0)),
+            mk(90.0, 2, arrive("img-to-img", 45.0)),
+            mk(140.0, 0, TraceEventKind::Shrink { target_qps: 40.0 }),
+            mk(220.0, 1, TraceEventKind::Depart),
+        ],
+    }
+}
+
+fn replay_fingerprint(cluster: &ClusterSpec, threads: usize) -> Vec<String> {
+    let cfg = ReplayConfig { queries: 240, threads, ..Default::default() };
+    replay_trace(cluster, &trace3(), &cfg)
+        .expect("replay runs")
+        .fingerprint()
+}
+
+#[test]
+fn identity_classes_reproduce_the_homogeneous_golden_fingerprint() {
+    let flat = ClusterSpec { num_gpus: 3, ..ClusterSpec::two_2080ti() };
+    let mut tagged = flat.clone();
+    tagged.classes = vec![GpuClass::scaled(flat.gpu.clone(), 3, 1.0)];
+    tagged.validate_classes().unwrap();
+    assert!(tagged.effectively_homogeneous());
+
+    let golden = replay_fingerprint(&flat, 1);
+    for threads in [1usize, 2, 8] {
+        assert_eq!(
+            golden,
+            replay_fingerprint(&tagged, threads),
+            "identity-class replay drifts from the flat pool at {threads} threads"
+        );
+        // the flat pool itself must also be thread-count invariant
+        assert_eq!(golden, replay_fingerprint(&flat, threads));
+    }
+}
+
+#[test]
+fn discrete_catalog_admissions_never_overcommit_a_gpu() {
+    let catalog = SliceCatalog::mig7();
+    let units = catalog.units;
+    let mut cluster = ClusterSpec { num_gpus: 2, ..ClusterSpec::two_2080ti() };
+    cluster.partition = PartitionMode::Discrete(catalog);
+    let mut ctl = AdmissionController::new(cluster.clone(), AdmissionConfig::default());
+    let mut admitted = 0;
+    for (name, pipeline, qps) in [
+        ("a", "img-to-text", 90.0),
+        ("b", "text-to-text", 60.0),
+        ("c", "img-to-img", 40.0),
+    ] {
+        let p = camelot::suite::pipeline_by_name(pipeline).unwrap();
+        if ctl.try_admit(name, &p, ArrivalProcess::constant(qps), qps).is_ok() {
+            admitted += 1;
+        }
+    }
+    assert!(admitted >= 2, "a 2-GPU discrete pool should hold at least two tenants");
+
+    let mut per_gpu_units = vec![0u32; cluster.num_gpus];
+    for r in ctl.residents() {
+        for p in &r.deployment.placements {
+            // every quota is a whole number of catalog slices
+            let slices = p.sm_frac * units as f64;
+            assert!(
+                (slices - slices.round()).abs() < 1e-6,
+                "{}: quota {} is off the 1/{units} grid",
+                r.name,
+                p.sm_frac
+            );
+            per_gpu_units[p.gpu] += slices.round() as u32;
+        }
+    }
+    for (g, &used) in per_gpu_units.iter().enumerate() {
+        assert!(used <= units, "GPU {g} over-committed: {used}/{units} slices");
+    }
+}
+
+#[test]
+fn mixed_pool_replay_is_thread_count_invariant() {
+    let base = ClusterSpec::two_2080ti();
+    let mut mixed = ClusterSpec { num_gpus: 4, ..base.clone() };
+    mixed.classes = vec![
+        GpuClass::scaled(base.gpu.clone(), 2, 1.0),
+        GpuClass::scaled(GpuSpec::a100_sxm4_80g(), 2, 0.7),
+    ];
+    mixed.validate_classes().unwrap();
+    assert!(!mixed.effectively_homogeneous());
+
+    let golden = replay_fingerprint(&mixed, 1);
+    assert!(!golden.is_empty());
+    for threads in [2usize, 8] {
+        assert_eq!(
+            golden,
+            replay_fingerprint(&mixed, threads),
+            "mixed-pool replay differs at {threads} threads"
+        );
+    }
+}
