@@ -293,6 +293,51 @@ impl<'a> AllocContext<'a> {
         }
     }
 
+    /// Sensitivity of the decode-stall estimate to KV-memory pressure:
+    /// the M/M/1-shaped knee `1 + K·ρ/(1-ρ)` calibrated against the
+    /// discrete-event engine's issue-stall behavior.
+    const KV_STALL_K: f64 = 0.5;
+
+    /// Duration-inflation factor KV-cache memory pressure applies to
+    /// stages with a nonzero `mem_bytes_per_query` (LLM prefill/decode):
+    /// when resident KV bytes approach [`crate::config::GpuSpec::mem_bytes`],
+    /// the engine stalls kernel issue until a co-batch completes and
+    /// releases its cache, so the p99 audit must anticipate those decode
+    /// stalls. Demand is the static weight/activation footprint plus the
+    /// Little's-law in-flight KV bytes (at most `N_i` batches execute
+    /// concurrently per stage); capacity is the cluster's free memory
+    /// after co-tenant holds. Returns exactly 1.0 for KV-free pipelines
+    /// and `INFINITY` at or past saturation.
+    fn kv_stall_inflation(&self, alloc: &Allocation, load_qps: f64) -> f64 {
+        if !self.pipeline.stages.iter().any(|st| st.mem_bytes_per_query > 0.0) {
+            return 1.0;
+        }
+        let spec = self.cluster();
+        let holds = self.state.reservations();
+        let capacity: f64 = (0..self.state.num_gpus())
+            .map(|g| spec.gpu_at(g).mem_bytes as f64 - holds[g].mem_bytes)
+            .sum();
+        if capacity <= 0.0 {
+            return f64::INFINITY;
+        }
+        let req_rate = load_qps / self.batch as f64;
+        let batch = self.batch as f64;
+        let mut demand = 0.0;
+        for (i, st) in self.pipeline.stages.iter().enumerate() {
+            demand += alloc.instances[i] as f64 * st.mem_footprint(self.batch);
+            if st.mem_bytes_per_query > 0.0 {
+                let d = self.duration_at(i, alloc.quotas[i]);
+                let in_flight = (req_rate * d).min(alloc.instances[i] as f64);
+                demand += in_flight * st.mem_bytes_per_query * batch;
+            }
+        }
+        let pressure = demand / capacity;
+        if pressure >= 1.0 {
+            return f64::INFINITY;
+        }
+        1.0 + Self::KV_STALL_K * pressure / (1.0 - pressure)
+    }
+
     /// One stage's contribution to the p99 prediction: inflated service
     /// time plus an Allen–Cunneen-style mean wait for an N-server
     /// station with deterministic-ish service, scaled to the 99th
@@ -320,8 +365,16 @@ impl<'a> AllocContext<'a> {
         let req_rate = load_qps / self.batch as f64;
         let mut t = self.comm_estimate();
         let inflate = self.load_inflation(load_qps);
+        let kv = self.kv_stall_inflation(alloc, load_qps);
         for i in 0..self.pipeline.n_stages() {
-            let term = self.stage_p99_term(alloc, i, req_rate, inflate);
+            // KV stalls hit only the stages that hold cache; KV-free
+            // pipelines take the plain `inflate` path bit-for-bit
+            let inf_i = if self.pipeline.stages[i].mem_bytes_per_query > 0.0 {
+                inflate * kv
+            } else {
+                inflate
+            };
+            let term = self.stage_p99_term(alloc, i, req_rate, inf_i);
             if term.is_infinite() {
                 return f64::INFINITY;
             }
@@ -339,8 +392,16 @@ impl<'a> AllocContext<'a> {
     pub fn predicted_stage_p99(&self, alloc: &Allocation, load_qps: f64) -> Vec<f64> {
         let req_rate = load_qps / self.batch as f64;
         let inflate = self.load_inflation(load_qps);
+        let kv = self.kv_stall_inflation(alloc, load_qps);
         (0..self.pipeline.n_stages())
-            .map(|i| self.stage_p99_term(alloc, i, req_rate, inflate))
+            .map(|i| {
+                let inf_i = if self.pipeline.stages[i].mem_bytes_per_query > 0.0 {
+                    inflate * kv
+                } else {
+                    inflate
+                };
+                self.stage_p99_term(alloc, i, req_rate, inf_i)
+            })
             .collect()
     }
 
@@ -605,6 +666,37 @@ mod tests {
             slow.predicted_p99(&a, 50.0).to_bits(),
             base.predicted_p99(&a, 50.0).to_bits()
         );
+    }
+
+    #[test]
+    fn kv_pressure_inflates_only_kv_stages() {
+        let p = real::img_to_text();
+        let (c, preds) = ctx_fixture(&p);
+        // a KV-free pipeline predicts identically before and after the
+        // KV hook existed: the inflation hook must be a strict no-op
+        let base = AllocContext::new(&p, &c, &preds, 16);
+        let a = Allocation { instances: vec![1, 2], quotas: vec![0.5, 0.4] };
+        let clean = base.predicted_p99(&a, 50.0);
+        assert!(clean.is_finite());
+        // give stage 1 a KV appetite: the same allocation at the same
+        // load now predicts a strictly higher p99 (decode stalls), and
+        // stage 0's term is untouched
+        let mut kv_p = p.clone();
+        kv_p.stages[1].mem_bytes_per_query = 50.0e6;
+        let (_, kv_preds) = ctx_fixture(&kv_p);
+        let kv_ctx = AllocContext::new(&kv_p, &c, &kv_preds, 16);
+        let kv_p99 = kv_ctx.predicted_p99(&a, 50.0);
+        assert!(kv_p99 > clean, "kv {kv_p99} must exceed clean {clean}");
+        let clean_stages = base.predicted_stage_p99(&a, 50.0);
+        let kv_stages = kv_ctx.predicted_stage_p99(&a, 50.0);
+        assert_eq!(clean_stages[0].to_bits(), kv_stages[0].to_bits());
+        assert!(kv_stages[1] > clean_stages[1]);
+        // demand beyond the cluster's memory saturates the prediction
+        let mut sat_p = p.clone();
+        sat_p.stages[1].mem_bytes_per_query = 1.0e15;
+        let (_, sat_preds) = ctx_fixture(&sat_p);
+        let sat_ctx = AllocContext::new(&sat_p, &c, &sat_preds, 16);
+        assert!(sat_ctx.predicted_p99(&a, 50.0).is_infinite());
     }
 
     #[test]

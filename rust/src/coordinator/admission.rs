@@ -501,12 +501,17 @@ impl AdmissionController {
         .qos_headroom(self.cfg.qos_headroom);
         let solution = match self.solve_cache.plan(&request) {
             Ok(s) => s,
-            Err(_) => self
+            // keep the primary planner error: a typed rejection such
+            // as `Infeasible::NoMemory` must reach the reject reason
+            // verbatim, not collapse into a generic capacity message
+            Err(primary) => self
                 .solve_cache
                 .plan(&request.clone().objective(Objective::MaxLoad))
                 .ok()
                 .filter(|s| s.objective_value >= target)
-                .ok_or_else(|| format!("no allocation supports {target:.1} qps"))?,
+                .ok_or_else(|| {
+                    format!("no allocation supports {target:.1} qps ({primary})")
+                })?,
         };
         Ok((solution.allocation, solution.deployment))
     }
@@ -1320,6 +1325,13 @@ pub struct ReplayReport {
     /// from [`fingerprint`](ReplayReport::fingerprint) like the other
     /// derived counters.
     pub class_utilization: Vec<ClassUtilization>,
+    /// Per-GPU peak dynamic KV-cache residency (bytes) observed across
+    /// every simulated interval — element-wise max of each interval's
+    /// [`SimReport::kv_peak_bytes`]. All zeros when no resident carries
+    /// a KV-bearing stage. Measurement-derived summary, excluded from
+    /// [`fingerprint`](ReplayReport::fingerprint) like the class
+    /// utilization table (the golden fingerprints predate it).
+    pub kv_peak_bytes: Vec<f64>,
 }
 
 impl ReplayReport {
@@ -1633,7 +1645,7 @@ pub fn replay_trace(
         }
     }
     let intervals_simulated = jobs.len();
-    let sims: Vec<Result<Vec<f64>, String>> =
+    let sims: Vec<Result<(Vec<f64>, Vec<f64>), String>> =
         par::par_map_threads(&jobs, threads, |_, &(snap_idx, sim_seed)| {
             let (_, tenants) = &snapshots[snap_idx];
             let opts = SimOptions { seed: sim_seed, queries, ..Default::default() };
@@ -1646,7 +1658,7 @@ pub fn replay_trace(
                 let report = Simulator::new(p, cluster, d, opts)
                     .run(*rate_qps)
                     .map_err(|e| format!("interval {snap_idx}: {e}"))?;
-                return Ok(vec![report.p99()]);
+                return Ok((vec![report.p99()], report.kv_peak_bytes));
             }
             let specs: Vec<TenantSpec> = tenants
                 .iter()
@@ -1659,9 +1671,27 @@ pub fn replay_trace(
             let reports = ClusterSim::new(cluster, specs, opts)
                 .run()
                 .map_err(|e| format!("interval {snap_idx}: {e}"))?;
-            Ok(reports.iter().map(|r| r.p99()).collect())
+            // every tenant report carries the same cluster-wide
+            // per-GPU KV peak vector; take the first
+            let kv = reports
+                .first()
+                .map(|r| r.kv_peak_bytes.clone())
+                .unwrap_or_default();
+            Ok((reports.iter().map(|r| r.p99()).collect(), kv))
         });
-    let p99_tables = sims.into_iter().collect::<Result<Vec<_>, _>>()?;
+    let tables = sims.into_iter().collect::<Result<Vec<_>, _>>()?;
+    // replay-wide per-GPU peak KV residency: element-wise max over the
+    // distinct simulations (duplicates are bit-identical, so dedup
+    // on/off cannot change the max)
+    let mut kv_peak_bytes = vec![0.0f64; cluster.num_gpus];
+    for (_, kv) in &tables {
+        for (slot, &v) in kv_peak_bytes.iter_mut().zip(kv) {
+            if v > *slot {
+                *slot = v;
+            }
+        }
+    }
+    let p99_tables: Vec<Vec<f64>> = tables.into_iter().map(|(p, _)| p).collect();
     let intervals: Vec<IntervalReport> = snapshots
         .iter()
         .zip(&measure_by)
@@ -1720,6 +1750,7 @@ pub fn replay_trace(
         qos_violations,
         repack_regressions,
         class_utilization,
+        kv_peak_bytes,
     })
 }
 

@@ -956,7 +956,7 @@ pub fn replay_trace_cells(
         (0..n_cells).map(|c| router.cell_spec(c).clone()).collect();
     let (outer, inner) = par::split_budget(threads, n_cells);
     let cell_ids: Vec<usize> = (0..n_cells).collect();
-    let sims: Vec<Vec<Result<Vec<f64>, String>>> =
+    let sims: Vec<Vec<Result<(Vec<f64>, Vec<f64>), String>>> =
         par::par_map_threads(&cell_ids, outer, |_, &c| {
             let snaps = &cell_snapshots[c];
             let cell_cluster = &cell_specs[c];
@@ -970,7 +970,7 @@ pub fn replay_trace_cells(
                     let report = Simulator::new(p, cell_cluster, d, opts)
                         .run(*rate_qps)
                         .map_err(|e| format!("cell {c} interval {snap_idx}: {e}"))?;
-                    return Ok(vec![report.p99()]);
+                    return Ok((vec![report.p99()], report.kv_peak_bytes));
                 }
                 let specs: Vec<TenantSpec> = tenants
                     .iter()
@@ -983,12 +983,34 @@ pub fn replay_trace_cells(
                 let reports = ClusterSim::new(cell_cluster, specs, opts)
                     .run()
                     .map_err(|e| format!("cell {c} interval {snap_idx}: {e}"))?;
-                Ok(reports.iter().map(|r| r.p99()).collect())
+                let kv = reports
+                    .first()
+                    .map(|r| r.kv_peak_bytes.clone())
+                    .unwrap_or_default();
+                Ok((reports.iter().map(|r| r.p99()).collect(), kv))
             })
         });
     let mut p99_tables: Vec<Vec<Vec<f64>>> = Vec::with_capacity(n_cells);
-    for cell_sims in sims {
-        p99_tables.push(cell_sims.into_iter().collect::<Result<Vec<_>, _>>()?);
+    // cluster-wide per-GPU peak KV residency: cell-local GPU indices
+    // map to contiguous global ranges in cell order (the split_cluster
+    // layout), so cell c's vector lands at offset Σ_{c'<c} num_gpus
+    let total_gpus: usize = cell_specs.iter().map(|s| s.num_gpus).sum();
+    let mut kv_peak_bytes = vec![0.0f64; total_gpus];
+    let mut cell_offset = 0usize;
+    for (c, cell_sims) in sims.into_iter().enumerate() {
+        let tables = cell_sims.into_iter().collect::<Result<Vec<_>, _>>()?;
+        let mut p99_only = Vec::with_capacity(tables.len());
+        for (p99s, kv) in tables {
+            for (g, &v) in kv.iter().enumerate() {
+                let slot = &mut kv_peak_bytes[cell_offset + g];
+                if v > *slot {
+                    *slot = v;
+                }
+            }
+            p99_only.push(p99s);
+        }
+        p99_tables.push(p99_only);
+        cell_offset += cell_specs[c].num_gpus;
     }
 
     let intervals: Vec<IntervalReport> = snapshot_order
@@ -1050,6 +1072,7 @@ pub fn replay_trace_cells(
             // per-class occupancy is a flat-replay breakdown; the
             // sharded replay reports per-cell stats instead
             class_utilization: Vec::new(),
+            kv_peak_bytes,
         },
         per_cell,
         migrations: router.migrations(),

@@ -950,6 +950,29 @@ pub fn admission_tables_for_trace(
         }
         tables.push(tc);
     }
+    // KV-bearing residents (LLM workloads): per-GPU peak dynamic
+    // KV-cache residency across the replay — the headline table of
+    // `camelot admit --spec examples/scenario_llm_colocate.json`.
+    // Traces without KV stages leave the vector all-zero and skip the
+    // table, keeping the legacy table shapes byte-identical.
+    if shared.kv_peak_bytes.iter().any(|&b| b > 0.0) {
+        let mut tk = Table::new(
+            "Admission: per-GPU peak KV-cache residency (LLM workloads)",
+            &["gpu", "class", "peak_kv_gib", "mem_gib", "peak_util"],
+        );
+        for (g, &peak) in shared.kv_peak_bytes.iter().enumerate() {
+            let spec = cluster.gpu_at(g);
+            let mem = spec.mem_bytes as f64;
+            tk.push(&[
+                g.to_string(),
+                spec.name.to_string(),
+                format!("{:.3}", peak / (1u64 << 30) as f64),
+                format!("{:.1}", mem / (1u64 << 30) as f64),
+                format!("{:.1}%", 100.0 * peak / mem),
+            ]);
+        }
+        tables.push(tk);
+    }
     Ok(tables)
 }
 

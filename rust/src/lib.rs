@@ -29,6 +29,7 @@ pub mod comm;
 pub mod coordinator;
 pub mod deploy;
 pub mod figures;
+pub mod llm;
 pub mod planner;
 pub mod predictor;
 pub mod runtime;

@@ -1,0 +1,268 @@
+//! LLM serving workload model: autoregressive prefill/decode pipelines
+//! with KV-cache memory as a second contended resource.
+//!
+//! "Towards Efficient and Practical GPU Multitasking in the Era of LLM"
+//! (arXiv 2508.08448) argues the interesting GPU-multiplexing problems
+//! now involve autoregressive serving, where service times are
+//! token-count-driven and heavy-tailed and GPU *memory* (the KV cache)
+//! — not SM share — is the binding resource. This module maps that
+//! workload class onto Camelot's [`StageProfile`] vocabulary:
+//!
+//! * **prefill** — compute-bound; service time ∝ prompt tokens. One
+//!   query's KV footprint while the kernel runs is
+//!   `kv_bytes_per_token × prompt_tokens`.
+//! * **decode** — memory-bandwidth-bound per-token iteration with a
+//!   high Amdahl serial fraction (the autoregressive dependency chain).
+//!   Output lengths are heavy-tailed: a seeded bounded-Pareto sample
+//!   drawn *at pipeline-construction time* sets the stage's mean work
+//!   (empirical mean tokens) and its KV residency (a p95-length
+//!   request's cache: `kv_bytes_per_token × (prompt + p95 output)`),
+//!   so [`pipeline`] stays a pure function of its parameters and every
+//!   downstream golden/determinism contract holds.
+//!
+//! The per-stage KV footprint lands in
+//! [`StageProfile::mem_bytes_per_query`], which the simulator charges
+//! against [`crate::config::GpuSpec::mem_bytes`] *dynamically* (held
+//! from kernel issue to completion — requests stall in queue when a
+//! GPU's resident KV bytes hit capacity) and the planner pre-checks
+//! with the typed [`crate::planner::Infeasible::NoMemory`] rejection.
+//!
+//! Pipelines are addressable anywhere a suite pipeline is, via the name
+//! grammar `llm:p<prompt>:o<output>:kv<bytes-per-token>` (see
+//! [`LlmParams::parse_name`] / [`crate::suite::pipeline_by_name`]) and
+//! declaratively via ScenarioSpec `workload: "llm"` tenants.
+
+use crate::suite::{Pipeline, StageKind, StageProfile};
+use crate::util::rng::{self, Rng};
+
+/// Mean dense FLOPs per token (prefill attention + MLP at proxy scale).
+pub const FLOPS_PER_TOKEN: f64 = 2.0e7;
+/// HBM bytes streamed per generated token during decode (weight +
+/// KV-cache reads amortized over a continuous batch).
+pub const HBM_BYTES_PER_TOKEN: f64 = 1.5e6;
+/// Proxy model weight footprint per stage (shared per GPU by instances
+/// of the same stage, like every other suite stage).
+pub const MODEL_BYTES: f64 = 2.0e9;
+/// Prefill→decode handoff payload (hidden state + sampler state).
+pub const HANDOFF_BYTES: f64 = 16_384.0;
+/// End-to-end p99 target for the latency-critical serving tier.
+pub const QOS_TARGET_S: f64 = 0.400;
+/// Default KV-cache bytes per token (fp16 K+V across proxy layers).
+pub const DEFAULT_KV_BYTES_PER_TOKEN: u64 = 65_536;
+/// Default prompt length (tokens).
+pub const DEFAULT_PROMPT_TOKENS: u32 = 512;
+/// Default mean output length (tokens).
+pub const DEFAULT_OUTPUT_TOKENS: u32 = 128;
+
+/// Draws per construction-time output-length sample.
+const LENGTH_SAMPLES: usize = 512;
+/// Pareto shape of the output-length distribution (heavy tail: the
+/// paper-family observation that a few requests generate far more
+/// tokens than the mean).
+const PARETO_ALPHA: f64 = 1.8;
+/// Bound on the tail: no draw exceeds this multiple of the mean.
+const PARETO_CAP_MULT: f64 = 8.0;
+
+/// Parameters of one LLM serving workload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LlmParams {
+    /// Prompt (context) tokens per query.
+    pub prompt_tokens: u32,
+    /// Mean of the heavy-tailed output-length distribution (tokens).
+    pub output_tokens: u32,
+    /// KV-cache bytes appended per token (prompt and generated alike).
+    pub kv_bytes_per_token: u64,
+}
+
+impl Default for LlmParams {
+    fn default() -> Self {
+        LlmParams {
+            prompt_tokens: DEFAULT_PROMPT_TOKENS,
+            output_tokens: DEFAULT_OUTPUT_TOKENS,
+            kv_bytes_per_token: DEFAULT_KV_BYTES_PER_TOKEN,
+        }
+    }
+}
+
+impl LlmParams {
+    /// The canonical pipeline name: `llm:p<prompt>:o<output>:kv<bytes>`.
+    /// Lossless — [`parse_name`](Self::parse_name) round-trips it.
+    pub fn pipeline_name(&self) -> String {
+        format!(
+            "llm:p{}:o{}:kv{}",
+            self.prompt_tokens, self.output_tokens, self.kv_bytes_per_token
+        )
+    }
+
+    /// Parse `llm:p<prompt>:o<output>:kv<bytes>`; `None` when the name
+    /// is not in the grammar or any count is zero.
+    pub fn parse_name(name: &str) -> Option<LlmParams> {
+        let parts: Vec<&str> = name.split(':').collect();
+        if parts.len() != 4 || parts[0] != "llm" {
+            return None;
+        }
+        let prompt_tokens: u32 = parts[1].strip_prefix('p')?.parse().ok()?;
+        let output_tokens: u32 = parts[2].strip_prefix('o')?.parse().ok()?;
+        let kv_bytes_per_token: u64 = parts[3].strip_prefix("kv")?.parse().ok()?;
+        if prompt_tokens == 0 || output_tokens == 0 || kv_bytes_per_token == 0 {
+            return None;
+        }
+        Some(LlmParams { prompt_tokens, output_tokens, kv_bytes_per_token })
+    }
+
+    /// Seed of the construction-time output-length sample — a pure
+    /// function of the parameters, so identical params always build
+    /// bit-identical pipelines.
+    fn length_seed(&self) -> u64 {
+        rng::mix_seed(
+            rng::mix_seed(0x4C4C_4D00 ^ self.prompt_tokens as u64, self.output_tokens as u64),
+            self.kv_bytes_per_token,
+        )
+    }
+}
+
+/// Empirical statistics of one seeded output-length sample.
+#[derive(Debug, Clone, Copy)]
+pub struct OutputLengthStats {
+    /// Mean generated tokens per query (scales decode work).
+    pub mean_tokens: f64,
+    /// 95th-percentile generated tokens (sizes decode KV residency —
+    /// continuous batching holds cache for the long requests in a
+    /// batch, so the tail, not the mean, is what occupies memory).
+    pub p95_tokens: f64,
+}
+
+/// Draw the seeded bounded-Pareto output-length sample for `params`
+/// and summarize it. Deterministic: same params → same stats, bit for
+/// bit.
+pub fn output_length_stats(params: &LlmParams) -> OutputLengthStats {
+    let mean_target = params.output_tokens as f64;
+    // bounded Pareto: x = xm / u^(1/α), xm set so the unbounded mean is
+    // the requested output_tokens; the cap bounds the tail draw
+    let xm = mean_target * (PARETO_ALPHA - 1.0) / PARETO_ALPHA;
+    let cap = mean_target * PARETO_CAP_MULT;
+    let mut r = Rng::new(params.length_seed());
+    let mut draws = Vec::with_capacity(LENGTH_SAMPLES);
+    for _ in 0..LENGTH_SAMPLES {
+        let u = r.f64().max(1e-12);
+        let x = xm / u.powf(1.0 / PARETO_ALPHA);
+        draws.push(x.min(cap).max(1.0));
+    }
+    let mean_tokens = draws.iter().sum::<f64>() / draws.len() as f64;
+    let mut sorted = draws;
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("lengths are finite"));
+    let idx = ((sorted.len() as f64 * 0.95).ceil() as usize).clamp(1, sorted.len()) - 1;
+    OutputLengthStats { mean_tokens, p95_tokens: sorted[idx] }
+}
+
+/// Build the two-stage prefill/decode [`Pipeline`] for `params`.
+pub fn pipeline(params: &LlmParams) -> Pipeline {
+    let kv = params.kv_bytes_per_token as f64;
+    let prompt = params.prompt_tokens as f64;
+    let lengths = output_length_stats(params);
+    let prefill = StageProfile {
+        name: "prefill".into(),
+        kind: StageKind::Compute,
+        flops_per_query: FLOPS_PER_TOKEN * prompt,
+        hbm_bytes_per_query: 8.0e6,
+        model_bytes: MODEL_BYTES,
+        act_bytes_per_query: 2.0e6,
+        // token ids in, hidden/sampler state out
+        in_bytes_per_query: 4.0 * prompt,
+        out_bytes_per_query: HANDOFF_BYTES,
+        serial_frac: 0.08,
+        batch_half: 16.0,
+        mem_bytes_per_query: kv * prompt,
+    };
+    let decode = StageProfile {
+        name: "decode".into(),
+        kind: StageKind::Memory,
+        flops_per_query: FLOPS_PER_TOKEN * lengths.mean_tokens,
+        hbm_bytes_per_query: HBM_BYTES_PER_TOKEN * lengths.mean_tokens,
+        model_bytes: MODEL_BYTES,
+        act_bytes_per_query: 1.0e6,
+        in_bytes_per_query: HANDOFF_BYTES,
+        // generated text out
+        out_bytes_per_query: 4.0 * params.output_tokens as f64,
+        // the autoregressive dependency chain scales poorly with SMs
+        serial_frac: 0.45,
+        batch_half: 16.0,
+        mem_bytes_per_query: kv * (prompt + lengths.p95_tokens),
+    };
+    Pipeline {
+        name: params.pipeline_name(),
+        stages: vec![prefill, decode],
+        qos_target_s: QOS_TARGET_S,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_grammar_round_trips() {
+        let p = LlmParams { prompt_tokens: 384, output_tokens: 96, kv_bytes_per_token: 131_072 };
+        assert_eq!(p.pipeline_name(), "llm:p384:o96:kv131072");
+        assert_eq!(LlmParams::parse_name(&p.pipeline_name()), Some(p));
+        assert_eq!(
+            LlmParams::parse_name("llm:p512:o128:kv65536"),
+            Some(LlmParams::default())
+        );
+        for bad in [
+            "llm", "llm:p512:o128", "llm:p0:o128:kv65536", "llm:px:o128:kv65536",
+            "llm:p512:o128:kv0", "lln:p512:o128:kv65536", "llm:p512:o128:kv65536:x",
+        ] {
+            assert!(LlmParams::parse_name(bad).is_none(), "{bad} must not parse");
+        }
+    }
+
+    #[test]
+    fn output_lengths_are_deterministic_and_heavy_tailed() {
+        let p = LlmParams::default();
+        let a = output_length_stats(&p);
+        let b = output_length_stats(&p);
+        assert_eq!(a.mean_tokens.to_bits(), b.mean_tokens.to_bits());
+        assert_eq!(a.p95_tokens.to_bits(), b.p95_tokens.to_bits());
+        // the mean lands near the requested mean, and the tail is heavy
+        assert!(a.mean_tokens > 0.5 * p.output_tokens as f64);
+        assert!(a.mean_tokens < 2.0 * p.output_tokens as f64);
+        assert!(a.p95_tokens > 1.5 * a.mean_tokens, "p95 {} vs mean {}", a.p95_tokens, a.mean_tokens);
+        assert!(a.p95_tokens <= PARETO_CAP_MULT * p.output_tokens as f64);
+        // different params draw a different sample
+        let other = output_length_stats(&LlmParams { output_tokens: 256, ..p });
+        assert!(other.mean_tokens > a.mean_tokens);
+    }
+
+    #[test]
+    fn pipeline_validates_and_carries_kv_footprints() {
+        let params = LlmParams::default();
+        let p = pipeline(&params);
+        p.validate().unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(p.name, "llm:p512:o128:kv65536");
+        assert_eq!(p.n_stages(), 2);
+        let (prefill, decode) = (&p.stages[0], &p.stages[1]);
+        assert_eq!(prefill.kind, StageKind::Compute);
+        assert_eq!(decode.kind, StageKind::Memory);
+        // prefill KV = kv × prompt; decode holds the p95-length cache
+        assert_eq!(prefill.mem_bytes_per_query, 65_536.0 * 512.0);
+        assert!(decode.mem_bytes_per_query > prefill.mem_bytes_per_query);
+        // decode's serial chain dominates prefill's
+        assert!(decode.serial_frac > prefill.serial_frac);
+        // identical params rebuild the identical pipeline
+        let q = pipeline(&params);
+        assert_eq!(
+            p.stages[1].hbm_bytes_per_query.to_bits(),
+            q.stages[1].hbm_bytes_per_query.to_bits()
+        );
+    }
+
+    #[test]
+    fn prompt_scales_prefill_and_kv() {
+        let short = pipeline(&LlmParams { prompt_tokens: 128, ..LlmParams::default() });
+        let long = pipeline(&LlmParams { prompt_tokens: 1024, ..LlmParams::default() });
+        assert!(long.stages[0].flops_per_query > short.stages[0].flops_per_query);
+        assert!(long.stages[0].mem_bytes_per_query > short.stages[0].mem_bytes_per_query);
+        assert!(long.stages[1].mem_bytes_per_query > short.stages[1].mem_bytes_per_query);
+    }
+}

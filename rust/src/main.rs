@@ -74,8 +74,9 @@ USAGE:
                 [--peak-hi QPS] [--queries N] [--seed S] [--cells N]
                 [--spec <file.json>] [--break-qos]
   camelot fuzz  [--scenarios N] [--seed S] [--queries N] [--break-qos]
-                [--dump-dir DIR]       (chaos/burst scenario fuzzer with
-                QoS property checks; failures dump replayable specs)
+                [--llm] [--dump-dir DIR] (chaos/burst scenario fuzzer with
+                QoS property checks; --llm mixes in LLM/KV-cache tenants;
+                failures dump replayable specs)
   camelot reproduce [--exp figN|tab1|all|colocate|admission] [--out DIR]
 
 PIPELINES: img-to-img img-to-text text-to-img text-to-text p<i>+c<j>+m<k>
@@ -376,8 +377,9 @@ fn cmd_admit(args: &[String]) -> i32 {
 /// ScenarioSpecs (flash crowds, GPU failures, mixed service tiers),
 /// replay each through the admission/cells stack, and check the QoS
 /// invariants — clean predicted-QoS audit, no re-pack regressions,
-/// bit-identical replays across 1/2/8 threads. Violated scenarios are
-/// dumped as replayable JSON for `camelot admit --spec`.
+/// bit-identical replays across 1/2/8 threads, and (with `--llm`)
+/// per-GPU KV-cache residency bounded by physical memory. Violated
+/// scenarios are dumped as replayable JSON for `camelot admit --spec`.
 fn cmd_fuzz(args: &[String]) -> i32 {
     use camelot::suite::fuzz::{run_fuzz, FuzzConfig};
 
@@ -393,16 +395,18 @@ fn cmd_fuzz(args: &[String]) -> i32 {
         cfg.queries = v;
     }
     cfg.break_qos = o.contains_key("break-qos");
+    cfg.llm = o.contains_key("llm");
     cfg.dump_dir = Some(PathBuf::from(
         o.get("dump-dir").map(String::as_str).unwrap_or("fuzz-failures"),
     ));
     eprintln!(
-        "fuzzing {} scenario(s) with seed {} ({} queries/interval{}); the run is \
+        "fuzzing {} scenario(s) with seed {} ({} queries/interval{}{}); the run is \
          seed-reproducible and violated scenarios dump replayable specs",
         cfg.scenarios,
         cfg.seed,
         cfg.queries,
-        if cfg.break_qos { ", --break-qos sabotage ON" } else { "" }
+        if cfg.break_qos { ", --break-qos sabotage ON" } else { "" },
+        if cfg.llm { ", LLM tenant mix ON" } else { "" }
     );
     let t0 = Instant::now();
     match run_fuzz(&cfg) {

@@ -211,6 +211,13 @@ pub(crate) fn fp_pipeline(out: &mut String, p: &Pipeline) {
         ] {
             fp_f64(out, x);
         }
+        // appended only when nonzero so every legacy (KV-free) pipeline
+        // fingerprints byte-identically to before the field existed —
+        // cached plans can't be reused across memory-distinct requests
+        if st.mem_bytes_per_query != 0.0 {
+            out.push_str("kv=");
+            fp_f64(out, st.mem_bytes_per_query);
+        }
     }
 }
 
@@ -492,6 +499,46 @@ mod tests {
         )
         .batch(16);
         assert_ne!(classy_fp, request_fingerprint(&classy2_req));
+    }
+
+    #[test]
+    fn fingerprint_kv_memory_block_only_when_nonzero() {
+        let (c, p, preds) = fixture();
+        let base = PlanRequest::new(
+            Objective::MaxLoad,
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let fp = request_fingerprint(&base);
+        // KV-free pipelines carry no memory block: every pre-LLM key is
+        // byte-identical to before the field existed
+        assert!(!fp.contains("kv="), "{fp}");
+        // a memory-distinct pipeline must never alias a cached plan
+        let mut kv_p = p.clone();
+        kv_p.stages[0].mem_bytes_per_query = 1.0e6;
+        let kv_req = PlanRequest::new(
+            Objective::MaxLoad,
+            ClusterState::exclusive(&c),
+            &kv_p,
+            &preds,
+        )
+        .batch(16);
+        let kv_fp = request_fingerprint(&kv_req);
+        assert!(kv_fp.contains("kv="), "{kv_fp}");
+        assert_ne!(fp, kv_fp);
+        // and two different KV footprints never collide either
+        let mut kv_p2 = kv_p.clone();
+        kv_p2.stages[0].mem_bytes_per_query = 2.0e6;
+        let kv_req2 = PlanRequest::new(
+            Objective::MaxLoad,
+            ClusterState::exclusive(&c),
+            &kv_p2,
+            &preds,
+        )
+        .batch(16);
+        assert_ne!(kv_fp, request_fingerprint(&kv_req2));
     }
 
     #[test]

@@ -261,6 +261,17 @@ pub enum Infeasible {
     /// use less than the current plan — shrinking would churn instances
     /// for nothing.
     NoImprovement { current_usage: f64, planned_usage: f64 },
+    /// The pipeline's GPU-memory demand (weights + activations + KV
+    /// cache per query) can never fit the cluster's free memory — no
+    /// SM-share allocation can fix a capacity shortfall, so the request
+    /// is rejected before the solver runs. Only pipelines with a
+    /// nonzero per-stage `mem_bytes_per_query` are pre-checked.
+    NoMemory {
+        /// Bytes the hungriest check that failed demands.
+        needed_bytes: f64,
+        /// Free bytes the same check has available.
+        available_bytes: f64,
+    },
 }
 
 impl std::fmt::Display for Infeasible {
@@ -277,6 +288,11 @@ impl std::fmt::Display for Infeasible {
             Infeasible::NoImprovement { current_usage, planned_usage } => write!(
                 f,
                 "no improvement: planned usage {planned_usage:.3} >= current {current_usage:.3}"
+            ),
+            Infeasible::NoMemory { needed_bytes, available_bytes } => write!(
+                f,
+                "NoMemory: insufficient GPU memory (need {needed_bytes:.3e} B, have \
+                 {available_bytes:.3e} B free)"
             ),
         }
     }
@@ -358,6 +374,42 @@ fn validate(req: &PlanRequest<'_>) -> Result<(), Infeasible> {
     }
     if req.batch == 0 {
         return bad("batch must be at least 1".to_string());
+    }
+    // KV-cache pre-flight (gated: classic pipelines with no
+    // `mem_bytes_per_query` never reach it, so their error types and
+    // golden fingerprints are untouched). A capacity shortfall is
+    // structural — no SM-share vector can fix it — so reject before
+    // spending the SA budget: every stage instance must fit the free
+    // memory of *some* single GPU, and the pipeline's total demand must
+    // fit the cluster's total free memory.
+    if req.pipeline.stages.iter().any(|s| s.mem_bytes_per_query > 0.0) {
+        let spec = req.cluster.spec();
+        let holds = req.cluster.reservations();
+        let free_at = |g: usize| spec.gpu_at(g).mem_bytes as f64 - holds[g].mem_bytes;
+        let max_free =
+            (0..req.cluster.num_gpus()).map(free_at).fold(f64::NEG_INFINITY, f64::max);
+        let total_free: f64 = (0..req.cluster.num_gpus()).map(free_at).sum();
+        let batch = req.batch as f64;
+        let mut total_need = 0.0;
+        let mut worst_need = 0.0f64;
+        for st in &req.pipeline.stages {
+            let need =
+                st.model_bytes + (st.act_bytes_per_query + st.mem_bytes_per_query) * batch;
+            total_need += need;
+            worst_need = worst_need.max(need);
+        }
+        if worst_need > max_free {
+            return Err(Infeasible::NoMemory {
+                needed_bytes: worst_need,
+                available_bytes: max_free.max(0.0),
+            });
+        }
+        if total_need > total_free {
+            return Err(Infeasible::NoMemory {
+                needed_bytes: total_need,
+                available_bytes: total_free.max(0.0),
+            });
+        }
     }
     match &req.objective {
         Objective::MinResource { load_qps } if load_qps.is_nan() || *load_qps <= 0.0 => {
@@ -537,6 +589,45 @@ mod tests {
             CamelotPlanner.plan(&neg),
             Err(Infeasible::BadRequest { .. })
         ));
+    }
+
+    #[test]
+    fn kv_hungry_pipeline_is_rejected_with_no_memory() {
+        let c = ClusterSpec::two_2080ti();
+        // 2 MB of KV per token on a 512-token prompt: one batch-16
+        // prefill instance wants ~18 GB against an 11 GB card
+        let p = crate::llm::pipeline(&crate::llm::LlmParams {
+            prompt_tokens: 512,
+            output_tokens: 128,
+            kv_bytes_per_token: 2_000_000,
+        });
+        let preds = train_pipeline(&p, &c.gpu);
+        let req = PlanRequest::new(
+            Objective::MinResource { load_qps: 5.0 },
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        match CamelotPlanner.plan(&req) {
+            Err(Infeasible::NoMemory { needed_bytes, available_bytes }) => {
+                assert!(needed_bytes > available_bytes);
+                let msg = Infeasible::NoMemory { needed_bytes, available_bytes }.to_string();
+                assert!(msg.contains("NoMemory"), "{msg}");
+            }
+            other => panic!("expected NoMemory, got {other:?}"),
+        }
+        // a sane KV budget plans normally end to end
+        let ok_p = crate::llm::pipeline(&crate::llm::LlmParams::default());
+        let ok_preds = train_pipeline(&ok_p, &c.gpu);
+        let ok = PlanRequest::new(
+            Objective::MinResource { load_qps: 5.0 },
+            ClusterState::exclusive(&c),
+            &ok_p,
+            &ok_preds,
+        )
+        .batch(16);
+        CamelotPlanner.plan(&ok).expect("default LLM params fit an 11 GB card");
     }
 
     #[test]

@@ -61,6 +61,10 @@ pub struct ScenarioTenant {
     /// Display name (defaults to `<pipeline>#<index>`).
     pub name: String,
     /// Benchmark name, resolvable by [`crate::suite::pipeline_by_name`].
+    /// Either given verbatim via `"pipeline"` or synthesized from
+    /// `"workload": "llm"` plus `prompt_tokens` / `output_tokens` /
+    /// `kv_bytes_per_token` into the canonical
+    /// `llm:p{P}:o{O}:kv{K}` grammar (see [`crate::llm`]).
     pub pipeline: String,
     /// `"max-load"` (Case 1) or `"min-resource"` (Case 2, the default).
     pub objective: ScenarioObjective,
@@ -517,19 +521,65 @@ fn parse_tenant(node: &Json, index: usize) -> Result<ScenarioTenant, String> {
         .as_obj()
         .ok_or_else(|| format!("tenant #{index} must be a JSON object"))?;
     for key in obj.keys() {
-        const KNOWN: [&str; 13] = [
+        const KNOWN: [&str; 17] = [
             "name", "pipeline", "objective", "plan_qps", "arrivals", "period_s",
             "trough_frac", "arrive_s", "depart_s", "shrink_to", "shrink_at_s",
-            "priority", "bursts",
+            "priority", "bursts", "workload", "prompt_tokens", "output_tokens",
+            "kv_bytes_per_token",
         ];
         if !KNOWN.contains(&key.as_str()) {
             return Err(format!("tenant #{index}: unknown field '{key}'"));
         }
     }
-    let pipeline = node
-        .get_str("pipeline")
-        .ok_or_else(|| format!("tenant #{index} needs a 'pipeline'"))?
-        .to_string();
+    let pipeline = match (node.get_str("pipeline"), node.get_str("workload")) {
+        (Some(_), Some(_)) => {
+            return Err(format!(
+                "tenant #{index}: 'pipeline' and 'workload' are mutually exclusive"
+            ))
+        }
+        (Some(p), None) => {
+            for key in ["prompt_tokens", "output_tokens", "kv_bytes_per_token"] {
+                if node.get(key).is_some() {
+                    return Err(format!(
+                        "tenant #{index}: '{key}' requires \"workload\": \"llm\""
+                    ));
+                }
+            }
+            p.to_string()
+        }
+        (None, Some("llm")) => {
+            // synthesize the canonical llm:p{P}:o{O}:kv{K} pipeline name
+            // so the tenant resolves through pipeline_by_name like any
+            // benchmark — the grammar is the declarative contract
+            let prompt = parse_count(node, "prompt_tokens", 512)?;
+            let output = parse_count(node, "output_tokens", 128)?;
+            let kv = parse_count(node, "kv_bytes_per_token", 65_536)?;
+            if prompt == 0 || output == 0 || kv == 0 {
+                return Err(format!(
+                    "tenant #{index}: llm workload parameters must be positive"
+                ));
+            }
+            if prompt > u32::MAX as u64 || output > u32::MAX as u64 {
+                return Err(format!(
+                    "tenant #{index}: llm token counts must fit in 32 bits"
+                ));
+            }
+            let params = crate::llm::LlmParams {
+                prompt_tokens: prompt as u32,
+                output_tokens: output as u32,
+                kv_bytes_per_token: kv,
+            };
+            params.pipeline_name()
+        }
+        (None, Some(other)) => {
+            return Err(format!(
+                "tenant #{index}: unknown workload '{other}' (llm)"
+            ))
+        }
+        (None, None) => {
+            return Err(format!("tenant #{index} needs a 'pipeline' or a 'workload'"))
+        }
+    };
     if crate::suite::pipeline_by_name(&pipeline).is_none() {
         return Err(format!("tenant #{index}: unknown pipeline '{pipeline}'"));
     }
@@ -990,7 +1040,59 @@ mod tests {
                 .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
             found += 1;
         }
-        assert!(found >= 3, "expected >= 3 example specs, found {found}");
+        assert!(found >= 4, "expected >= 4 example specs, found {found}");
+        // the LLM co-location example ships with the repo
+        assert!(
+            dir.join("scenario_llm_colocate.json").exists(),
+            "examples/scenario_llm_colocate.json missing"
+        );
+    }
+
+    #[test]
+    fn parses_llm_workload_tenants() {
+        let spec = ScenarioSpec::parse(
+            r#"{
+            "tenants": [
+                {"workload": "llm", "plan_qps": 20},
+                {"workload": "llm", "plan_qps": 10, "prompt_tokens": 1024,
+                 "output_tokens": 256, "kv_bytes_per_token": 131072}
+            ]
+        }"#,
+        )
+        .unwrap();
+        // defaults fill in; the synthesized name is the canonical grammar
+        assert_eq!(spec.tenants[0].pipeline, "llm:p512:o128:kv65536");
+        assert_eq!(spec.tenants[1].pipeline, "llm:p1024:o256:kv131072");
+        // and it resolves to a real pipeline with a KV-bearing stage
+        let p = crate::suite::pipeline_by_name(&spec.tenants[1].pipeline).unwrap();
+        assert!(p.stages.iter().any(|s| s.mem_bytes_per_query > 0.0));
+    }
+
+    #[test]
+    fn rejects_malformed_llm_tenants() {
+        for (tenant, want) in [
+            (
+                r#"{"workload": "llm", "pipeline": "img-to-text", "plan_qps": 5}"#,
+                "'pipeline' and 'workload' are mutually exclusive",
+            ),
+            (
+                r#"{"workload": "vision", "plan_qps": 5}"#,
+                "unknown workload 'vision' (llm)",
+            ),
+            (
+                r#"{"pipeline": "img-to-text", "plan_qps": 5, "prompt_tokens": 64}"#,
+                "'prompt_tokens' requires \"workload\": \"llm\"",
+            ),
+            (
+                r#"{"workload": "llm", "plan_qps": 5, "output_tokens": 0}"#,
+                "llm workload parameters must be positive",
+            ),
+            (r#"{"plan_qps": 5}"#, "needs a 'pipeline' or a 'workload'"),
+        ] {
+            let text = format!(r#"{{"tenants": [{tenant}]}}"#);
+            let err = ScenarioSpec::parse(&text).unwrap_err();
+            assert!(err.contains(want), "want '{want}' in '{err}'");
+        }
     }
 
     #[test]

@@ -83,6 +83,9 @@ struct Inst {
     cost: super::cost::InstanceCost,
     in_bytes_batch: f64,
     out_bytes_batch: f64,
+    /// `mem_bytes_per_query * batch`, frozen — dynamic KV-cache bytes
+    /// held on the GPU while a request executes (0 ⇒ no KV gating).
+    kv_bytes_batch: f64,
     /// Tenant batch size as f64 (query-weighting of breakdown terms).
     batch_f: f64,
 }
@@ -125,7 +128,12 @@ impl<'a> ClusterSim<'a> {
     /// `opts.queries` queries (requests of its own batch size); the
     /// report order matches the tenant order passed to [`new`](Self::new).
     pub fn run(&self) -> Result<Vec<SimReport>, String> {
-        self.admit()?;
+        let admitted = self.admit()?;
+        // Dynamic KV-cache budget per GPU: whatever static admission
+        // (model weights + activations) left free. Mirrors the
+        // single-tenant engine so the degenerate case stays
+        // bit-identical.
+        let kv_cap: Vec<f64> = admitted.iter().map(|g| g.mem_free()).collect();
         let cost = CostModel::new(self.cluster.gpu.clone());
         // per-GPU cost models only when a class departs from the base
         // spec — mirrors the single-tenant engine's heterogeneity hook
@@ -212,6 +220,7 @@ impl<'a> ClusterSim<'a> {
                     ),
                     in_bytes_batch: stage.in_bytes_per_query * batch as f64,
                     out_bytes_batch: stage.out_bytes_per_query * batch as f64,
+                    kv_bytes_batch: stage.mem_bytes_per_query * batch as f64,
                     batch_f: batch as f64,
                 });
             }
@@ -219,6 +228,10 @@ impl<'a> ClusterSim<'a> {
         let mut ledgers: Vec<GpuLedger> = (0..self.cluster.num_gpus)
             .map(|_| GpuLedger::default())
             .collect();
+        // dynamic KV-cache residency ledger (bytes) per GPU — shared
+        // across tenants, exactly like SM time on the GpuLedger
+        let mut kv_used = vec![0.0f64; self.cluster.num_gpus];
+        let mut kv_peak = vec![0.0f64; self.cluster.num_gpus];
 
         // lazy open-loop arrivals: one pending Arrival event per tenant
         let mut streams: Vec<ArrivalStream> = self
@@ -287,6 +300,9 @@ impl<'a> ClusterSim<'a> {
             breakdowns: &mut [TimeBreakdown],
             stage_exec_sum: &mut [f64],
             stage_exec_n: &mut [u64],
+            kv_used: &mut [f64],
+            kv_peak: &mut [f64],
+            kv_cap: &[f64],
         ) {
             let push = |heap: &mut BinaryHeap<Event<Ev>>, seq: &mut u64, t: f64, ev: Ev| {
                 *seq += 1;
@@ -294,6 +310,15 @@ impl<'a> ClusterSim<'a> {
             };
             let inst = &mut instances[inst_id];
             if inst.busy || inst.queue.is_empty() {
+                return;
+            }
+            // KV admission gate: a stage with per-query KV footprint
+            // only issues when the batch's bytes fit in the GPU's free
+            // memory; otherwise the request stays queued (stall accrues
+            // as queue_s) until a completion releases bytes.
+            if inst.kv_bytes_batch > 0.0
+                && kv_used[inst.gpu] + inst.kv_bytes_batch > kv_cap[inst.gpu]
+            {
                 return;
             }
             let (rid, ready) = inst.queue.pop_front().unwrap();
@@ -308,6 +333,12 @@ impl<'a> ClusterSim<'a> {
             let stage_idx = inst.stage;
             let icost = inst.cost;
             let in_bytes = inst.in_bytes_batch;
+            if inst.kv_bytes_batch > 0.0 {
+                kv_used[gpu] += inst.kv_bytes_batch;
+                if kv_used[gpu] > kv_peak[gpu] {
+                    kv_peak[gpu] = kv_used[gpu];
+                }
+            }
 
             // stage-0 ingress crosses PCIe before the kernel runs
             let mut start = now;
@@ -354,6 +385,7 @@ impl<'a> ClusterSim<'a> {
                         target, now, &mut instances, &mut ledgers, &mut bus,
                         &mut heap, &mut seq, &mut breakdowns,
                         &mut stage_exec_sum, &mut stage_exec_n,
+                        &mut kv_used, &mut kv_peak, &kv_cap,
                     );
                 }
                 Ev::BusRelease => bus.end_transfer(),
@@ -364,8 +396,12 @@ impl<'a> ClusterSim<'a> {
                     let out_bytes = instances[inst_id].out_bytes_batch;
                     let batch_f = instances[inst_id].batch_f;
                     let is_last = instances[inst_id].last_stage;
+                    let kv_bytes = instances[inst_id].kv_bytes_batch;
                     ledgers[gpu].kernel_end(inst_id);
                     instances[inst_id].busy = false;
+                    if kv_bytes > 0.0 {
+                        kv_used[gpu] -= kv_bytes;
+                    }
                     if is_last {
                         // egress download crosses PCIe
                         let dl = bus.begin_transfer(out_bytes);
@@ -410,7 +446,24 @@ impl<'a> ClusterSim<'a> {
                         inst_id, now, &mut instances, &mut ledgers, &mut bus,
                         &mut heap, &mut seq, &mut breakdowns,
                         &mut stage_exec_sum, &mut stage_exec_n,
+                        &mut kv_used, &mut kv_peak, &kv_cap,
                     );
+                    // KV bytes were released: wake co-resident
+                    // instances (any tenant) stalled on this GPU's
+                    // memory, in instance-id order — deterministic and
+                    // identical to the single-tenant engine's sweep
+                    if kv_bytes > 0.0 {
+                        for i in 0..instances.len() {
+                            if instances[i].gpu == gpu && i != inst_id {
+                                try_issue(
+                                    i, now, &mut instances, &mut ledgers, &mut bus,
+                                    &mut heap, &mut seq, &mut breakdowns,
+                                    &mut stage_exec_sum, &mut stage_exec_n,
+                                    &mut kv_used, &mut kv_peak, &kv_cap,
+                                );
+                            }
+                        }
+                    }
                 }
                 Ev::Deliver { target, rid } => {
                     instances[target].queue.push_back((rid, now));
@@ -418,6 +471,7 @@ impl<'a> ClusterSim<'a> {
                         target, now, &mut instances, &mut ledgers, &mut bus,
                         &mut heap, &mut seq, &mut breakdowns,
                         &mut stage_exec_sum, &mut stage_exec_n,
+                        &mut kv_used, &mut kv_peak, &kv_cap,
                     );
                 }
                 Ev::Complete { tn, rid } => {
@@ -452,6 +506,10 @@ impl<'a> ClusterSim<'a> {
                     .zip(&stage_exec_n[base..base + n_stages])
                     .map(|(s, &n)| if n == 0 { 0.0 } else { s / n as f64 })
                     .collect(),
+                // KV residency is a shared-GPU phenomenon: every
+                // tenant's report carries the same cluster-wide
+                // per-GPU peak vector
+                kv_peak_bytes: kv_peak.clone(),
             });
         }
         Ok(reports)
@@ -518,6 +576,85 @@ mod tests {
             multi[0].achieved_qps.to_bits(),
             single.achieved_qps.to_bits()
         );
+    }
+
+    #[test]
+    fn degenerate_llm_tenant_matches_engine_with_kv() {
+        // KV gating active: the mirrored ledger must keep the
+        // degenerate single-tenant case bit-identical, including the
+        // per-GPU peak residency vector
+        let p = crate::llm::pipeline(&crate::llm::LlmParams::default());
+        let c = crate::config::ClusterSpec::two_2080ti();
+        let d = colocated(16);
+        let opts = SimOptions { queries: 400, ..Default::default() };
+        let single = Simulator::new(&p, &c, &d, opts.clone()).run(40.0).unwrap();
+        let multi = ClusterSim::new(
+            &c,
+            vec![TenantSpec {
+                pipeline: &p,
+                deployment: &d,
+                arrivals: ArrivalProcess::constant(40.0),
+            }],
+            opts,
+        )
+        .run()
+        .unwrap();
+        assert_eq!(multi[0].completed, single.completed);
+        assert_eq!(multi[0].p99().to_bits(), single.p99().to_bits());
+        assert_eq!(
+            multi[0].breakdown.queue_s.to_bits(),
+            single.breakdown.queue_s.to_bits()
+        );
+        assert_eq!(multi[0].kv_peak_bytes.len(), single.kv_peak_bytes.len());
+        for (m, s) in multi[0].kv_peak_bytes.iter().zip(&single.kv_peak_bytes) {
+            assert_eq!(m.to_bits(), s.to_bits());
+        }
+        assert!(multi[0].kv_peak_bytes[0] > 0.0);
+    }
+
+    #[test]
+    fn colocated_llm_and_vision_track_shared_kv_peaks() {
+        // LLM on gpu 0, vision neighbor on gpu 1: KV peaks are a
+        // cluster-wide property, identical in every tenant's report,
+        // nonzero only where KV-bearing stages ran, and bounded by
+        // the GPU's physical memory
+        let llm = crate::llm::pipeline(&crate::llm::LlmParams::default());
+        let vis = real::img_to_text();
+        let c = crate::config::ClusterSpec::two_2080ti();
+        let dl = split(16, 0, 0, 0.45);
+        let dv = split(16, 1, 1, 0.45);
+        let reps = ClusterSim::new(
+            &c,
+            vec![
+                TenantSpec {
+                    pipeline: &llm,
+                    deployment: &dl,
+                    arrivals: ArrivalProcess::constant(30.0),
+                },
+                TenantSpec {
+                    pipeline: &vis,
+                    deployment: &dv,
+                    arrivals: ArrivalProcess::constant(60.0),
+                },
+            ],
+            SimOptions { queries: 320, ..Default::default() },
+        )
+        .run()
+        .unwrap();
+        assert_eq!(reps.len(), 2);
+        for (a, b) in reps[0].kv_peak_bytes.iter().zip(&reps[1].kv_peak_bytes) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let prefill_batch_kv = llm.stages[0].mem_bytes_per_query * 16.0;
+        assert!(
+            reps[0].kv_peak_bytes[0] >= prefill_batch_kv,
+            "gpu0 peak {} below one prefill batch {}",
+            reps[0].kv_peak_bytes[0],
+            prefill_batch_kv
+        );
+        assert!(reps[0].kv_peak_bytes[0] <= c.gpu_at(0).mem_bytes as f64);
+        assert_eq!(reps[0].kv_peak_bytes[1], 0.0);
+        assert_eq!(reps[1].completed, (320 / 16) as u64);
     }
 
     #[test]

@@ -136,6 +136,10 @@ pub struct SimReport {
     pub breakdown: TimeBreakdown,
     /// Mean exec time per stage (co-located, i.e. contended) — Fig 4b.
     pub stage_exec_mean_s: Vec<f64>,
+    /// Per-GPU peak *dynamic* KV-cache residency observed during the
+    /// run, in bytes (`stage.mem_bytes_per_query × batch` held from
+    /// kernel issue to completion). All zeros for KV-free pipelines.
+    pub kv_peak_bytes: Vec<f64>,
 }
 
 impl SimReport {
@@ -277,6 +281,9 @@ struct Inst {
     in_bytes_batch: f64,
     /// `out_bytes_per_query * batch`, frozen (hop/egress payload).
     out_bytes_batch: f64,
+    /// `mem_bytes_per_query * batch`, frozen — dynamic KV-cache bytes
+    /// held on the GPU while a request executes (0 ⇒ no KV gating).
+    kv_bytes_batch: f64,
 }
 
 /// Per-GPU ledger of running kernels' bandwidth demands, kept sorted by
@@ -342,7 +349,10 @@ impl<'a> Simulator<'a> {
 
     /// Run the simulation at the given offered load (optimized engine).
     pub fn run(&self, offered_qps: f64) -> Result<SimReport, String> {
-        self.admit()?;
+        let admitted = self.admit()?;
+        // KV-cache headroom per GPU: capacity minus the static
+        // weight/activation footprints the admit pass charged
+        let kv_cap: Vec<f64> = admitted.iter().map(|g| g.mem_free()).collect();
         let cost = CostModel::new(self.cluster.gpu.clone());
         // per-GPU cost models only when a class departs from the base
         // spec — the homogeneous path keeps the single shared model
@@ -386,6 +396,7 @@ impl<'a> Simulator<'a> {
                     ),
                     in_bytes_batch: stage.in_bytes_per_query * batch as f64,
                     out_bytes_batch: stage.out_bytes_per_query * batch as f64,
+                    kv_bytes_batch: stage.mem_bytes_per_query * batch as f64,
                 }
             })
             .collect();
@@ -396,6 +407,8 @@ impl<'a> Simulator<'a> {
         let mut ledgers: Vec<GpuLedger> = (0..self.cluster.num_gpus)
             .map(|_| GpuLedger::default())
             .collect();
+        let mut kv_used = vec![0.0f64; self.cluster.num_gpus];
+        let mut kv_peak = vec![0.0f64; self.cluster.num_gpus];
 
         // lazy open-loop arrivals: exactly one pending Arrival event at
         // a time; timestamps land in the arena as they are drawn
@@ -439,6 +452,9 @@ impl<'a> Simulator<'a> {
             breakdown: &mut TimeBreakdown,
             stage_exec_sum: &mut [f64],
             stage_exec_n: &mut [u64],
+            kv_used: &mut [f64],
+            kv_peak: &mut [f64],
+            kv_cap: &[f64],
         ) {
             let push = |heap: &mut BinaryHeap<Event<Ev>>, seq: &mut u64, t: f64, ev: Ev| {
                 *seq += 1;
@@ -446,6 +462,15 @@ impl<'a> Simulator<'a> {
             };
             let inst = &mut instances[inst_id];
             if inst.busy || inst.queue.is_empty() {
+                return;
+            }
+            // KV gate, checked *before* popping: when the GPU's resident
+            // KV bytes leave no room for this request's cache, the
+            // request stays queued (the stall accrues as queue time) and
+            // a later completion's release wakes this instance
+            if inst.kv_bytes_batch > 0.0
+                && kv_used[inst.gpu] + inst.kv_bytes_batch > kv_cap[inst.gpu]
+            {
                 return;
             }
             // one request (= `batch` queries) per execution
@@ -458,6 +483,12 @@ impl<'a> Simulator<'a> {
             let stage_idx = inst.stage;
             let icost = inst.cost;
             let in_bytes = inst.in_bytes_batch;
+            if inst.kv_bytes_batch > 0.0 {
+                kv_used[gpu] += inst.kv_bytes_batch;
+                if kv_used[gpu] > kv_peak[gpu] {
+                    kv_peak[gpu] = kv_used[gpu];
+                }
+            }
 
             // stage-0 ingress crosses PCIe before the kernel runs
             let mut start = now;
@@ -498,6 +529,7 @@ impl<'a> Simulator<'a> {
                         target, now, &mut instances, &mut ledgers, &mut bus, batch_f,
                         &mut heap, &mut seq, &mut breakdown,
                         &mut stage_exec_sum, &mut stage_exec_n,
+                        &mut kv_used, &mut kv_peak, &kv_cap,
                     );
                 }
                 Ev::BusRelease => bus.end_transfer(),
@@ -506,8 +538,12 @@ impl<'a> Simulator<'a> {
                     let stage_idx = instances[inst_id].stage;
                     let gpu = instances[inst_id].gpu;
                     let out_bytes = instances[inst_id].out_bytes_batch;
+                    let kv_bytes = instances[inst_id].kv_bytes_batch;
                     ledgers[gpu].kernel_end(inst_id);
                     instances[inst_id].busy = false;
+                    if kv_bytes > 0.0 {
+                        kv_used[gpu] -= kv_bytes;
+                    }
                     if stage_idx == last_stage {
                         // egress download crosses PCIe
                         let dl = bus.begin_transfer(out_bytes);
@@ -539,7 +575,24 @@ impl<'a> Simulator<'a> {
                         inst_id, now, &mut instances, &mut ledgers, &mut bus, batch_f,
                         &mut heap, &mut seq, &mut breakdown,
                         &mut stage_exec_sum, &mut stage_exec_n,
+                        &mut kv_used, &mut kv_peak, &kv_cap,
                     );
+                    // the released KV bytes may unblock co-located
+                    // instances stalled on the gate: wake them in
+                    // instance-id order (deterministic). KV-free
+                    // pipelines never enter this loop.
+                    if kv_bytes > 0.0 {
+                        for i in 0..instances.len() {
+                            if instances[i].gpu == gpu && i != inst_id {
+                                try_issue(
+                                    i, now, &mut instances, &mut ledgers, &mut bus, batch_f,
+                                    &mut heap, &mut seq, &mut breakdown,
+                                    &mut stage_exec_sum, &mut stage_exec_n,
+                                    &mut kv_used, &mut kv_peak, &kv_cap,
+                                );
+                            }
+                        }
+                    }
                 }
                 Ev::Deliver { target, rid } => {
                     instances[target].queue.push_back((rid, now));
@@ -547,6 +600,7 @@ impl<'a> Simulator<'a> {
                         target, now, &mut instances, &mut ledgers, &mut bus, batch_f,
                         &mut heap, &mut seq, &mut breakdown,
                         &mut stage_exec_sum, &mut stage_exec_n,
+                        &mut kv_used, &mut kv_peak, &kv_cap,
                     );
                 }
                 Ev::Complete { rid } => {
@@ -574,6 +628,7 @@ impl<'a> Simulator<'a> {
                 .zip(&stage_exec_n)
                 .map(|(s, &n)| if n == 0 { 0.0 } else { s / n as f64 })
                 .collect(),
+            kv_peak_bytes: kv_peak,
         })
     }
 
@@ -589,6 +644,11 @@ impl<'a> Simulator<'a> {
     #[cfg(any(test, feature = "reference-engine"))]
     pub fn run_reference(&self, offered_qps: f64) -> Result<SimReport, String> {
         let mut gpus = self.admit()?;
+        // KV-cache headroom per GPU after static admission — the same
+        // quantities the optimized engine freezes
+        let kv_cap: Vec<f64> = gpus.iter().map(|g| g.mem_free()).collect();
+        let mut kv_used = vec![0.0f64; gpus.len()];
+        let mut kv_peak = vec![0.0f64; gpus.len()];
         let cost = CostModel::new(self.cluster.gpu.clone());
         // per-instance (model, scale) for heterogeneous pools; on the
         // homogeneous base cluster every entry is the shared model at
@@ -695,6 +755,9 @@ impl<'a> Simulator<'a> {
             breakdown: &mut TimeBreakdown,
             stage_exec_sum: &mut [f64],
             stage_exec_n: &mut [u64],
+            kv_used: &mut [f64],
+            kv_peak: &mut [f64],
+            kv_cap: &[f64],
         ) {
             let push = |heap: &mut BinaryHeap<Event<RefEv>>, seq: &mut u64, t: f64, ev: RefEv| {
                 *seq += 1;
@@ -702,6 +765,13 @@ impl<'a> Simulator<'a> {
             };
             let inst = &mut instances[inst_id];
             if inst.busy || inst.queue.is_empty() {
+                return;
+            }
+            // KV gate before popping (same semantics — and the same
+            // `mem_bytes_per_query * batch` product — as the optimized
+            // engine's frozen `kv_bytes_batch`)
+            let kv_bytes = pipeline.stages[inst.stage].mem_bytes_per_query * batch as f64;
+            if kv_bytes > 0.0 && kv_used[inst.gpu] + kv_bytes > kv_cap[inst.gpu] {
                 return;
             }
             // one request (= `batch` queries) per execution
@@ -715,6 +785,12 @@ impl<'a> Simulator<'a> {
             let gpu = inst.gpu;
             let sm = inst.sm_frac;
             let stage_idx = inst.stage;
+            if kv_bytes > 0.0 {
+                kv_used[gpu] += kv_bytes;
+                if kv_used[gpu] > kv_peak[gpu] {
+                    kv_peak[gpu] = kv_used[gpu];
+                }
+            }
 
             // stage-0 ingress crosses PCIe before the kernel runs
             let mut start = now;
@@ -764,6 +840,7 @@ impl<'a> Simulator<'a> {
                         target, now, &mut instances, &mut gpus, &mut bus, &models, &scales,
                         self.pipeline, batch, &mut heap,
                         &mut seq, &mut breakdown, &mut stage_exec_sum, &mut stage_exec_n,
+                        &mut kv_used, &mut kv_peak, &kv_cap,
                     );
                 }
                 RefEv::BusRelease => bus.end_transfer(),
@@ -771,8 +848,13 @@ impl<'a> Simulator<'a> {
                     let qids = instances[inst_id].exec.take().unwrap_or_default();
                     let stage_idx = instances[inst_id].stage;
                     let gpu = instances[inst_id].gpu;
+                    let kv_bytes =
+                        self.pipeline.stages[stage_idx].mem_bytes_per_query * batch as f64;
                     gpus[gpu].kernel_end(inst_id);
                     instances[inst_id].busy = false;
+                    if kv_bytes > 0.0 {
+                        kv_used[gpu] -= kv_bytes;
+                    }
                     let n = (qids.len() * batch) as f64;
                     let is_last = stage_idx + 1 == self.pipeline.n_stages();
                     if is_last {
@@ -812,7 +894,23 @@ impl<'a> Simulator<'a> {
                         inst_id, now, &mut instances, &mut gpus, &mut bus, &models, &scales,
                         self.pipeline, batch, &mut heap,
                         &mut seq, &mut breakdown, &mut stage_exec_sum, &mut stage_exec_n,
+                        &mut kv_used, &mut kv_peak, &kv_cap,
                     );
+                    // wake co-located instances the released KV bytes
+                    // may unblock, in instance-id order (mirrors the
+                    // optimized engine exactly)
+                    if kv_bytes > 0.0 {
+                        for i in 0..instances.len() {
+                            if instances[i].gpu == gpu && i != inst_id {
+                                try_issue(
+                                    i, now, &mut instances, &mut gpus, &mut bus, &models,
+                                    &scales, self.pipeline, batch, &mut heap, &mut seq,
+                                    &mut breakdown, &mut stage_exec_sum, &mut stage_exec_n,
+                                    &mut kv_used, &mut kv_peak, &kv_cap,
+                                );
+                            }
+                        }
+                    }
                 }
                 RefEv::XferDone { target, qids } => match target {
                     Some(t_inst) => {
@@ -823,6 +921,7 @@ impl<'a> Simulator<'a> {
                             t_inst, now, &mut instances, &mut gpus, &mut bus, &models, &scales,
                             self.pipeline, batch, &mut heap,
                             &mut seq, &mut breakdown, &mut stage_exec_sum, &mut stage_exec_n,
+                            &mut kv_used, &mut kv_peak, &kv_cap,
                         );
                     }
                     None => {
@@ -853,6 +952,7 @@ impl<'a> Simulator<'a> {
                 .zip(&stage_exec_n)
                 .map(|(s, &n)| if n == 0 { 0.0 } else { s / n as f64 })
                 .collect(),
+            kv_peak_bytes: kv_peak,
         })
     }
 }
@@ -1037,6 +1137,66 @@ mod tests {
         assert_eq!(a.p99().to_bits(), b.p99().to_bits());
         assert_eq!(a.breakdown.exec_s.to_bits(), b.breakdown.exec_s.to_bits());
         assert_eq!(a.completed, b.completed);
+    }
+
+    #[test]
+    fn kv_residency_is_tracked_and_engines_agree() {
+        let p = crate::llm::pipeline(&crate::llm::LlmParams::default());
+        let c = ClusterSpec::two_2080ti();
+        let d = simple_deployment(CommMode::GlobalIpc);
+        let o = SimOptions { queries: 800, ..Default::default() };
+        let sim = Simulator::new(&p, &c, &d, o);
+        let opt = sim.run(40.0).unwrap();
+        let refr = sim.run_reference(40.0).unwrap();
+        // both engines observe the identical trajectory, KV included
+        assert_eq!(opt.completed, refr.completed);
+        assert_eq!(opt.p99().to_bits(), refr.p99().to_bits());
+        for (a, b) in opt.kv_peak_bytes.iter().zip(&refr.kv_peak_bytes) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // both stages sit on GPU 0: its peak covers at least one
+        // request's prefill cache and never exceeds the free memory
+        let free = sim.admit().unwrap()[0].mem_free();
+        assert!(opt.kv_peak_bytes[0] >= p.stages[0].mem_bytes_per_query * 16.0);
+        assert!(opt.kv_peak_bytes[0] <= free);
+        assert_eq!(opt.kv_peak_bytes[1], 0.0);
+        // a KV-free pipeline reports all-zero peaks
+        let vision = real::img_to_text();
+        let v = Simulator::new(&vision, &c, &d, SimOptions { queries: 400, ..Default::default() })
+            .run(40.0)
+            .unwrap();
+        assert!(v.kv_peak_bytes.iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn kv_capacity_stalls_issue_and_raises_latency() {
+        // KV budget so tight only one request's cache fits per GPU:
+        // co-located instances must serialize on the KV gate
+        let params = crate::llm::LlmParams {
+            prompt_tokens: 512,
+            output_tokens: 128,
+            kv_bytes_per_token: 500_000,
+        };
+        let tight = crate::llm::pipeline(&params);
+        let roomy = crate::llm::pipeline(&crate::llm::LlmParams {
+            kv_bytes_per_token: 65_536,
+            ..params
+        });
+        let c = ClusterSpec::two_2080ti();
+        let d = simple_deployment(CommMode::GlobalIpc);
+        let o = SimOptions { queries: 800, ..Default::default() };
+        let tight_run = Simulator::new(&tight, &c, &d, o.clone()).run(60.0).unwrap();
+        let roomy_run = Simulator::new(&roomy, &c, &d, o).run(60.0).unwrap();
+        // the decode stall surfaces as queueing, so the tail inflates
+        assert!(
+            tight_run.p99() > roomy_run.p99(),
+            "tight KV p99 {} must exceed roomy {}",
+            tight_run.p99(),
+            roomy_run.p99()
+        );
+        assert!(tight_run.breakdown.queue_s > roomy_run.breakdown.queue_s);
+        // everything still completes (the gate stalls, never deadlocks)
+        assert_eq!(tight_run.completed, roomy_run.completed);
     }
 
     #[test]

@@ -26,6 +26,7 @@ pub fn compute(level: u32) -> StageProfile {
         out_bytes_per_query: 64.0 * KB,
         serial_frac: 0.05,
         batch_half: 16.0,
+        mem_bytes_per_query: 0.0,
     }
 }
 
@@ -44,6 +45,7 @@ pub fn memory(level: u32) -> StageProfile {
         out_bytes_per_query: 32.0 * KB,
         serial_frac: 0.10,
         batch_half: 16.0,
+        mem_bytes_per_query: 0.0,
     }
 }
 
@@ -62,6 +64,7 @@ pub fn pcie(level: u32) -> StageProfile {
         out_bytes_per_query: 64.0 * KB,
         serial_frac: 0.08,
         batch_half: 16.0,
+        mem_bytes_per_query: 0.0,
     }
 }
 

@@ -16,7 +16,12 @@
 //!      controller and the cluster-of-cells router alike;
 //!  (d) **replayable failures** — any violated scenario is surfaced as
 //!      the exact generated JSON text (plus the run seed), which
-//!      `camelot admit --spec <dump.json>` replays verbatim.
+//!      `camelot admit --spec <dump.json>` replays verbatim;
+//!  (e) **KV residency bounded** — per-GPU resident KV-cache bytes
+//!      never exceed the device's `mem_bytes` in any replayed interval
+//!      ([`ReplayReport::kv_peak_bytes`] stays under the physical
+//!      capacity; trivially true without LLM tenants, load-bearing
+//!      with [`FuzzConfig::llm`]).
 //!
 //! The generator emits JSON *text* and the harness re-parses it via
 //! [`ScenarioSpec::parse`], so the dumped artifact — not some internal
@@ -58,6 +63,11 @@ pub struct FuzzConfig {
     /// Where violated scenarios are dumped as replayable JSON
     /// (`fuzz-<seed>-<index>.json`); `None` skips dumping.
     pub dump_dir: Option<PathBuf>,
+    /// Mix LLM tenants (`"workload": "llm"`, ~25% of tenant slots)
+    /// into the generated population, exercising the KV-cache
+    /// admission/sim path and invariant (e). Off keeps generation
+    /// byte-identical to the legacy population.
+    pub llm: bool,
 }
 
 impl Default for FuzzConfig {
@@ -68,6 +78,7 @@ impl Default for FuzzConfig {
             queries: 120,
             break_qos: false,
             dump_dir: None,
+            llm: false,
         }
     }
 }
@@ -78,7 +89,8 @@ pub struct FuzzViolation {
     /// Scenario index within the run (seeded by `mix_seed(seed, index)`).
     pub index: usize,
     /// Which invariant broke: `invalid-spec`, `replay-error`,
-    /// `qos-audit`, `repack-regression`, or `thread-divergence`.
+    /// `qos-audit`, `repack-regression`, `kv-overflow`, or
+    /// `thread-divergence`.
     pub kind: String,
     pub detail: String,
     /// The exact generated spec text — feed to `camelot admit --spec`.
@@ -117,6 +129,16 @@ fn pick(rng: &mut Rng, xs: &[&'static str]) -> &'static str {
 /// are emitted as small integers or fixed decimal strings: the text
 /// round-trips through the f64-based JSON parser exactly.
 pub fn generate_spec_json(seed: u64, index: usize, queries: usize) -> String {
+    generate_spec_json_with(seed, index, queries, false)
+}
+
+/// [`generate_spec_json`] with the LLM-tenant mix switch. `llm: false`
+/// consumes exactly the legacy RNG draw sequence, so existing seeds
+/// keep generating byte-identical scenarios; `llm: true` converts
+/// ~25% of tenant slots into `"workload": "llm"` tenants with sampled
+/// prompt/output/KV shapes (and a lower load range — decode-bound
+/// pipelines saturate far below the vision benchmarks).
+pub fn generate_spec_json_with(seed: u64, index: usize, queries: usize, llm: bool) -> String {
     let mut rng = Rng::new(mix_seed(seed, index as u64));
     let gpus = 2 + rng.below(3); // 2..=4 keeps per-decision solves cheap
     let cells = if rng.f64() < 0.35 { 2 } else { 1 };
@@ -160,16 +182,38 @@ pub fn generate_spec_json(seed: u64, index: usize, queries: usize) -> String {
             &mut rng,
             &["img-to-img", "img-to-text", "text-to-img", "text-to-text"],
         );
-        let qps = 20 + rng.below(81); // 20..=100 qps
+        // `llm &&` short-circuits: with the switch off no extra RNG
+        // draw is consumed and the legacy byte stream is preserved
+        let workload = if llm && rng.f64() < 0.25 {
+            let prompt = pick(&mut rng, &["128", "256", "512", "1024"]);
+            let output = pick(&mut rng, &["64", "128", "256"]);
+            let kv = pick(&mut rng, &["65536", "131072", "262144"]);
+            Some((prompt, output, kv))
+        } else {
+            None
+        };
+        let qps = if workload.is_some() {
+            5 + rng.below(16) // 5..=20 qps: decode-bound pipelines
+        } else {
+            20 + rng.below(81) // 20..=100 qps
+        };
         let arrive = rng.below(300);
         let lifetime = 200 + rng.below(601); // 200..=800 s
         let departs = rng.f64() < 0.75;
 
-        let _ = write!(
-            json,
-            "{}\n    {{\"name\": \"t{i}\", \"pipeline\": \"{pipeline}\", \"plan_qps\": {qps}, \"arrive_s\": {arrive}",
-            if i == 0 { "" } else { "," }
-        );
+        if let Some((prompt, output, kv)) = workload {
+            let _ = write!(
+                json,
+                "{}\n    {{\"name\": \"t{i}\", \"workload\": \"llm\", \"prompt_tokens\": {prompt}, \"output_tokens\": {output}, \"kv_bytes_per_token\": {kv}, \"plan_qps\": {qps}, \"arrive_s\": {arrive}",
+                if i == 0 { "" } else { "," }
+            );
+        } else {
+            let _ = write!(
+                json,
+                "{}\n    {{\"name\": \"t{i}\", \"pipeline\": \"{pipeline}\", \"plan_qps\": {qps}, \"arrive_s\": {arrive}",
+                if i == 0 { "" } else { "," }
+            );
+        }
         if departs {
             let _ = write!(json, ", \"depart_s\": {}", arrive + lifetime);
         }
@@ -351,6 +395,20 @@ pub fn check_scenario(
                         ),
                     ));
                 }
+                // (e) per-GPU resident KV bytes stay under physical
+                // memory in every replayed interval (the sim's issue
+                // gate must make this hold by construction)
+                for (g, &peak) in rep.kv_peak_bytes.iter().enumerate() {
+                    let cap = spec.cluster.gpu_at(g).mem_bytes as f64;
+                    if peak > cap {
+                        problems.push((
+                            "kv-overflow".into(),
+                            format!(
+                                "gpu {g}: peak KV residency {peak:.3e} B exceeds mem_bytes {cap:.3e} B"
+                            ),
+                        ));
+                    }
+                }
                 oracle = Some((rep.fingerprint(), rep.events.len()));
             }
             Some((fp, _)) => {
@@ -400,7 +458,7 @@ pub fn run_fuzz(cfg: &FuzzConfig) -> Result<FuzzReport, String> {
         violations: Vec::new(),
     };
     for index in 0..cfg.scenarios {
-        let spec_json = generate_spec_json(cfg.seed, index, cfg.queries);
+        let spec_json = generate_spec_json_with(cfg.seed, index, cfg.queries, cfg.llm);
         match check_scenario(&spec_json, cfg.break_qos) {
             Ok(events) => report.events_checked += events,
             Err(problems) => {
@@ -516,6 +574,60 @@ mod tests {
             }
         }
         assert!(checked > 0, "no mixed-pool scenario in the first 40");
+    }
+
+    #[test]
+    fn llm_switch_off_preserves_legacy_generation() {
+        // the llm=false path must consume the exact legacy RNG stream
+        for index in 0..25 {
+            assert_eq!(
+                generate_spec_json(7, index, 80),
+                generate_spec_json_with(7, index, 80, false),
+                "scenario {index} diverged with llm off"
+            );
+        }
+    }
+
+    #[test]
+    fn llm_population_mixes_workloads_and_stays_valid() {
+        let mut llm_tenants = 0;
+        let mut vision_tenants = 0;
+        for index in 0..40 {
+            let json = generate_spec_json_with(11, index, 80, true);
+            let spec = ScenarioSpec::parse(&json)
+                .unwrap_or_else(|e| panic!("scenario {index} invalid: {e}\n{json}"));
+            for t in &spec.tenants {
+                if t.pipeline.starts_with("llm:") {
+                    llm_tenants += 1;
+                } else {
+                    vision_tenants += 1;
+                }
+            }
+        }
+        assert!(llm_tenants > 0, "no LLM tenants in 40 llm-enabled scenarios");
+        assert!(vision_tenants > 0, "LLM mix crowded out the vision tenants");
+    }
+
+    #[test]
+    fn llm_scenarios_replay_without_violations() {
+        // the first generated scenario containing an LLM tenant must
+        // clear invariants (a)-(e) through the full thread matrix
+        let mut checked = 0;
+        for index in 0..40 {
+            if checked >= 2 {
+                break;
+            }
+            let json = generate_spec_json_with(11, index, 60, true);
+            let spec = ScenarioSpec::parse(&json).expect("valid spec");
+            if !spec.tenants.iter().any(|t| t.pipeline.starts_with("llm:")) {
+                continue;
+            }
+            checked += 1;
+            if let Err(problems) = check_scenario(&json, false) {
+                panic!("llm scenario {index} violated: {problems:?}\n{json}");
+            }
+        }
+        assert!(checked > 0, "no LLM scenario in the first 40");
     }
 
     #[test]

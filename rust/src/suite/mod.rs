@@ -11,9 +11,10 @@ pub mod workload;
 pub use service::{Pipeline, StageKind, StageProfile};
 
 /// Resolve a benchmark name to its [`Pipeline`]: one of the four real
-/// benchmarks, or an artifact composite `p<i>+c<j>+m<k>` with levels in
-/// 1..=3. The CLI, the admission controller's trace replay, and the
-/// tenant-trace catalog all share this resolver.
+/// benchmarks, an LLM serving pipeline `llm:p<prompt>:o<output>:kv<bytes>`
+/// (see [`crate::llm`]), or an artifact composite `p<i>+c<j>+m<k>` with
+/// levels in 1..=3. The CLI, the admission controller's trace replay, and
+/// the tenant-trace catalog all share this resolver.
 pub fn pipeline_by_name(name: &str) -> Option<Pipeline> {
     match name {
         "img-to-img" => Some(real::img_to_img()),
@@ -21,6 +22,9 @@ pub fn pipeline_by_name(name: &str) -> Option<Pipeline> {
         "text-to-img" => Some(real::text_to_img()),
         "text-to-text" => Some(real::text_to_text()),
         _ => {
+            if let Some(params) = crate::llm::LlmParams::parse_name(name) {
+                return Some(crate::llm::pipeline(&params));
+            }
             let parts: Vec<&str> = name.split('+').collect();
             if parts.len() == 3 {
                 let lvl = |s: &str, c: char| -> Option<u32> { s.strip_prefix(c)?.parse().ok() };
@@ -43,5 +47,15 @@ mod tests {
         assert!(super::pipeline_by_name("p1+c2+m3").is_some());
         assert!(super::pipeline_by_name("p0+c2+m3").is_none());
         assert!(super::pipeline_by_name("nope").is_none());
+    }
+
+    #[test]
+    fn pipeline_by_name_resolves_llm_grammar() {
+        let p = super::pipeline_by_name("llm:p512:o128:kv65536").unwrap();
+        assert_eq!(p.name, "llm:p512:o128:kv65536");
+        assert_eq!(p.n_stages(), 2);
+        assert!(p.stages.iter().all(|s| s.mem_bytes_per_query > 0.0));
+        assert!(super::pipeline_by_name("llm:p0:o128:kv65536").is_none());
+        assert!(super::pipeline_by_name("llm:p512").is_none());
     }
 }

@@ -38,6 +38,7 @@ fn stage(
         out_bytes_per_query: out_b,
         serial_frac: serial,
         batch_half: 16.0,
+        mem_bytes_per_query: 0.0,
     }
 }
 

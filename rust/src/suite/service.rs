@@ -49,6 +49,16 @@ pub struct StageProfile {
     /// reads, launch ramp, underfilled waves). This is what makes large
     /// batches more efficient — the paper's motivation for batching.
     pub batch_half: f64,
+    /// Dynamic per-query GPU-memory residency in bytes (KV cache for
+    /// LLM stages), held from kernel issue to completion — *on top of*
+    /// the static `model_bytes`/`act_bytes_per_query` footprint. The
+    /// simulator stalls issue when a GPU's resident bytes would exceed
+    /// [`crate::config::GpuSpec::mem_bytes`], and the planner rejects
+    /// allocations that can never fit with
+    /// [`crate::planner::Infeasible::NoMemory`]. Zero for classic
+    /// vision/artifact stages (and zero means every memory code path is
+    /// skipped, preserving legacy behavior bit for bit).
+    pub mem_bytes_per_query: f64,
 }
 
 impl StageProfile {
@@ -148,6 +158,7 @@ mod tests {
             out_bytes_per_query: out_b,
             serial_frac: 0.05,
             batch_half: 16.0,
+            mem_bytes_per_query: 0.0,
         }
     }
 

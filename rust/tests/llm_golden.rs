@@ -1,0 +1,215 @@
+//! Golden suite for the LLM workload subsystem (KV-cache memory
+//! dimension):
+//!
+//! * **LLM-off is free** — traces without KV-bearing stages replay with
+//!   an all-zero KV residency vector and keep their thread-invariant
+//!   fingerprints (the memory dimension costs nothing when absent);
+//! * **LLM co-location is deterministic** — a mixed LLM + vision trace
+//!   replays bit-identically across 1/2/8 worker threads, in the flat
+//!   controller and the 4-cell router alike;
+//! * **NoMemory is end-to-end** — `examples/scenario_llm_colocate.json`
+//!   (the spec `camelot admit --spec` ships) rejects its KV-hungry
+//!   tenant with a typed `NoMemory` planner error surfaced in the
+//!   decision log, admits the well-shaped LLM tenant, and reports
+//!   per-GPU peak KV occupancy bounded by physical memory.
+
+use camelot::config::ClusterSpec;
+use camelot::coordinator::admission::{replay_trace, ReplayConfig};
+use camelot::coordinator::{replay_trace_cells, CellsConfig, CellsReplayConfig};
+use camelot::figures::macro_evals::{admission_tables_for_trace, ReplayKnobs};
+use camelot::planner::ScenarioSpec;
+use camelot::suite::workload::{TenantTrace, TenantTraceConfig};
+
+fn example_path() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../examples/scenario_llm_colocate.json")
+}
+
+fn replay_cfg(spec: &ScenarioSpec, threads: usize) -> ReplayConfig {
+    let mut cfg = ReplayConfig {
+        queries: spec.queries,
+        threads,
+        ..Default::default()
+    };
+    cfg.admission.seed = spec.seed;
+    cfg.admission.batch = spec.batch;
+    cfg
+}
+
+/// A mixed LLM + vision co-location scenario on an 8-GPU pool, sized
+/// so the replay stays brisk across the full thread matrix.
+fn colocate_spec() -> ScenarioSpec {
+    ScenarioSpec::parse(
+        r#"{
+        "name": "llm-colocate-golden",
+        "cluster": {"preset": "2080ti", "gpus": 8},
+        "batch": 16,
+        "seed": 11,
+        "queries": 160,
+        "tenants": [
+            {"name": "chat", "workload": "llm", "plan_qps": 8.0,
+             "arrivals": "constant", "arrive_s": 0.0},
+            {"name": "search", "pipeline": "img-to-text", "plan_qps": 40.0,
+             "arrivals": "diurnal", "arrive_s": 5.0, "depart_s": 600.0},
+            {"name": "chat-batch", "workload": "llm", "plan_qps": 6.0,
+             "prompt_tokens": 256, "output_tokens": 64,
+             "kv_bytes_per_token": 131072,
+             "arrivals": "constant", "arrive_s": 10.0}
+        ]
+    }"#,
+    )
+    .expect("golden spec parses")
+}
+
+#[test]
+fn llm_off_replay_has_zero_kv_and_stays_thread_invariant() {
+    let cluster = ClusterSpec::two_2080ti();
+    let trace = TenantTrace::generate(
+        &TenantTraceConfig {
+            tenants: 5,
+            mean_interarrival_s: 300.0,
+            mean_lifetime_s: 900.0,
+            peak_qps_lo: 40.0,
+            peak_qps_hi: 110.0,
+            ..Default::default()
+        },
+        2024,
+    );
+    let cfg = |threads| ReplayConfig { queries: 120, threads, ..Default::default() };
+    let baseline = replay_trace(&cluster, &trace, &cfg(1)).expect("flat replay");
+    // no KV-bearing stage anywhere: the memory dimension must be inert
+    assert_eq!(baseline.kv_peak_bytes.len(), cluster.num_gpus);
+    assert!(
+        baseline.kv_peak_bytes.iter().all(|&b| b == 0.0),
+        "legacy trace accrued KV residency: {:?}",
+        baseline.kv_peak_bytes
+    );
+    for threads in [2usize, 8] {
+        let rep = replay_trace(&cluster, &trace, &cfg(threads)).expect("flat replay");
+        assert_eq!(
+            baseline.fingerprint(),
+            rep.fingerprint(),
+            "legacy replay differs at {threads} threads"
+        );
+        assert!(rep.kv_peak_bytes.iter().all(|&b| b == 0.0));
+    }
+}
+
+#[test]
+fn llm_colocation_flat_replay_is_thread_invariant() {
+    let spec = colocate_spec();
+    let trace = spec.trace();
+    let baseline =
+        replay_trace(&spec.cluster, &trace, &replay_cfg(&spec, 1)).expect("flat replay");
+    assert!(baseline.admitted >= 2, "co-location trace must admit: {baseline:?}");
+    // an admitted LLM tenant leaves a real KV footprint, bounded by HBM
+    let peak = baseline.kv_peak_bytes.iter().cloned().fold(0.0f64, f64::max);
+    assert!(peak > 0.0, "no KV residency recorded: {:?}", baseline.kv_peak_bytes);
+    for (g, &b) in baseline.kv_peak_bytes.iter().enumerate() {
+        assert!(
+            b <= spec.cluster.gpu_at(g).mem_bytes as f64,
+            "gpu {g} KV peak {b} exceeds physical memory"
+        );
+    }
+    for threads in [2usize, 8] {
+        let rep = replay_trace(&spec.cluster, &trace, &replay_cfg(&spec, threads))
+            .expect("flat replay");
+        assert_eq!(
+            baseline.fingerprint(),
+            rep.fingerprint(),
+            "LLM co-location replay differs at {threads} threads"
+        );
+        for (a, b) in baseline.kv_peak_bytes.iter().zip(&rep.kv_peak_bytes) {
+            assert_eq!(a.to_bits(), b.to_bits(), "KV peaks drift at {threads} threads");
+        }
+    }
+}
+
+#[test]
+fn llm_colocation_cells_replay_is_thread_invariant() {
+    let spec = colocate_spec();
+    let trace = spec.trace();
+    let cfg = |threads| CellsReplayConfig {
+        router: CellsConfig { cells: 4, ..Default::default() },
+        queries: spec.queries,
+        threads,
+        dedup: true,
+        audit_qos: false,
+    };
+    let baseline =
+        replay_trace_cells(&spec.cluster, &trace, &cfg(1)).expect("cells replay");
+    assert!(baseline.merged.admitted >= 2);
+    assert!(
+        baseline.merged.kv_peak_bytes.iter().any(|&b| b > 0.0),
+        "no KV residency in the 4-cell replay: {:?}",
+        baseline.merged.kv_peak_bytes
+    );
+    for threads in [2usize, 8] {
+        let rep =
+            replay_trace_cells(&spec.cluster, &trace, &cfg(threads)).expect("cells replay");
+        assert_eq!(
+            baseline.merged.fingerprint(),
+            rep.merged.fingerprint(),
+            "4-cell LLM replay differs at {threads} threads"
+        );
+        assert_eq!(baseline.tenant_cells, rep.tenant_cells);
+        for (a, b) in baseline
+            .merged
+            .kv_peak_bytes
+            .iter()
+            .zip(&rep.merged.kv_peak_bytes)
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+#[test]
+fn example_spec_rejects_kv_hungry_tenant_with_no_memory() {
+    let spec = ScenarioSpec::load(&example_path()).expect("example parses");
+    let trace = spec.trace();
+    let rep = replay_trace(&spec.cluster, &trace, &replay_cfg(&spec, 1)).expect("replay");
+    // the KV-hungry tenant is rejected with the typed planner error...
+    assert!(rep.rejected >= 1, "example must reject: {:?}", rep.events);
+    assert!(
+        rep.events
+            .iter()
+            .any(|e| e.decision.contains("NoMemory")),
+        "no NoMemory rejection in the decision log: {:?}",
+        rep.events
+            .iter()
+            .map(|e| (&e.desc, &e.decision))
+            .collect::<Vec<_>>()
+    );
+    // ...while the well-shaped LLM tenant is admitted and measured
+    assert!(rep.admitted >= 1);
+    assert!(
+        rep.kv_peak_bytes.iter().any(|&b| b > 0.0),
+        "admitted LLM tenant left no KV footprint: {:?}",
+        rep.kv_peak_bytes
+    );
+}
+
+#[test]
+fn example_spec_emits_the_kv_occupancy_table() {
+    // the exact path `camelot admit --spec` takes
+    let spec = ScenarioSpec::load(&example_path()).expect("example parses");
+    let knobs = ReplayKnobs {
+        queries: spec.queries,
+        batch: spec.batch,
+        seed: spec.seed,
+        cells: spec.cells,
+        break_qos: false,
+    };
+    let tables = admission_tables_for_trace(&spec.cluster, &spec.trace(), knobs)
+        .expect("admission tables");
+    let kv_table = tables
+        .iter()
+        .find(|t| t.title.contains("KV-cache residency"))
+        .expect("per-GPU peak KV occupancy table missing");
+    assert_eq!(kv_table.rows.len(), spec.cluster.num_gpus);
+    assert!(
+        kv_table.rows.iter().any(|r| r[2] != "0.000"),
+        "KV table is all-zero: {kv_table:?}"
+    );
+}
