@@ -265,6 +265,15 @@ pub struct ClusterSpec {
     /// class (and as the scenario-level `partition_mode` default for
     /// classes that don't override it).
     pub partition: PartitionMode,
+    /// Per-GPU partial-degradation overlay (ECC retirement, thermal
+    /// throttling): a service-time multiplier ≥ 1.0 per device,
+    /// multiplied into [`scale_at`](Self::scale_at). Empty means every
+    /// device is healthy — the canonical (and legacy) representation;
+    /// [`set_degrade`](Self::set_degrade) normalizes an all-1.0 overlay
+    /// back to empty so healthy clusters stay byte-identical to
+    /// pre-overlay behavior. Non-empty overlays have exactly `num_gpus`
+    /// entries.
+    pub degrade: Vec<f64>,
 }
 
 impl ClusterSpec {
@@ -277,6 +286,7 @@ impl ClusterSpec {
             ipc: IpcSpec::default(),
             classes: Vec::new(),
             partition: PartitionMode::Continuous,
+            degrade: Vec::new(),
         }
     }
 
@@ -289,6 +299,7 @@ impl ClusterSpec {
             ipc: IpcSpec::default(),
             classes: Vec::new(),
             partition: PartitionMode::Continuous,
+            degrade: Vec::new(),
         }
     }
 
@@ -356,9 +367,38 @@ impl ClusterSpec {
         self.class_of(g).map_or(&self.gpu, |c| &c.gpu)
     }
 
-    /// Service-time multiplier of GPU `g` (1.0 on a homogeneous pool).
+    /// Service-time multiplier of GPU `g` (1.0 on a homogeneous pool),
+    /// including any partial-degradation overlay. Healthy clusters
+    /// (empty overlay) multiply by exactly 1.0, so the legacy value is
+    /// bit-identical.
     pub fn scale_at(&self, g: usize) -> f64 {
-        self.class_of(g).map_or(1.0, |c| c.compute_scale)
+        self.class_of(g).map_or(1.0, |c| c.compute_scale) * self.degrade_at(g)
+    }
+
+    /// The degradation multiplier of GPU `g` alone (1.0 = healthy).
+    pub fn degrade_at(&self, g: usize) -> f64 {
+        if self.degrade.is_empty() {
+            1.0
+        } else {
+            self.degrade[g]
+        }
+    }
+
+    /// Set GPU `g`'s degradation multiplier (1.0 restores the device).
+    /// The overlay is kept canonical: it stays empty until a non-unit
+    /// multiplier is installed, and collapses back to empty when every
+    /// device returns to 1.0.
+    pub fn set_degrade(&mut self, g: usize, scale: f64) {
+        if self.degrade.is_empty() {
+            if scale == 1.0 {
+                return;
+            }
+            self.degrade = vec![1.0; self.num_gpus];
+        }
+        self.degrade[g] = scale;
+        if self.degrade.iter().all(|&s| s == 1.0) {
+            self.degrade.clear();
+        }
     }
 
     /// Partition mode of GPU `g` (class override, else the pool mode).
@@ -394,6 +434,12 @@ impl ClusterSpec {
     /// prefix keeps per-GPU specs aligned with GPU ids.
     pub fn prefix(&self, y: usize) -> ClusterSpec {
         let mut out = ClusterSpec { num_gpus: y, ..self.clone() };
+        if !out.degrade.is_empty() {
+            out.degrade.truncate(y);
+            if out.degrade.iter().all(|&s| s == 1.0) {
+                out.degrade.clear();
+            }
+        }
         if !self.classes.is_empty() {
             let mut remaining = y;
             let mut classes = Vec::new();
@@ -414,6 +460,12 @@ impl ClusterSpec {
     /// match — how the cluster-of-cells sharding splits a mixed pool.
     pub fn slice(&self, start: usize, len: usize) -> ClusterSpec {
         let mut out = ClusterSpec { num_gpus: len, ..self.clone() };
+        if !out.degrade.is_empty() {
+            out.degrade = self.degrade[start..start + len].to_vec();
+            if out.degrade.iter().all(|&s| s == 1.0) {
+                out.degrade.clear();
+            }
+        }
         if !self.classes.is_empty() {
             let mut classes = Vec::new();
             let mut base = 0usize;
@@ -459,6 +511,37 @@ mod tests {
         assert_eq!(ClusterSpec::two_2080ti().num_gpus, 2);
         assert_eq!(ClusterSpec::dgx2().num_gpus, 16);
         assert_eq!(ClusterSpec::dgx2().gpu.name, "V100-SXM3");
+    }
+
+    #[test]
+    fn degrade_overlay_multiplies_scale_and_stays_canonical() {
+        let mut c = ClusterSpec::two_2080ti();
+        assert_eq!(c.scale_at(0), 1.0);
+        // installing a unit multiplier is a no-op: overlay stays empty
+        c.set_degrade(0, 1.0);
+        assert!(c.degrade.is_empty());
+        // a real degradation inflates only the affected device
+        c.set_degrade(1, 1.5);
+        assert_eq!(c.degrade.len(), c.num_gpus);
+        assert_eq!(c.scale_at(0), 1.0);
+        assert_eq!(c.scale_at(1), 1.5);
+        assert_eq!(c.degrade_at(1), 1.5);
+        // prefix/slice keep the overlay aligned with GPU ids
+        assert!(c.prefix(1).degrade.is_empty(), "healthy prefix collapses");
+        assert_eq!(c.slice(1, 1).degrade, vec![1.5]);
+        // restoring the device collapses the overlay back to empty
+        c.set_degrade(1, 1.0);
+        assert!(c.degrade.is_empty());
+        // degradation composes with class compute scales
+        let mut m = mixed_pool();
+        assert_eq!(m.scale_at(2), 0.35);
+        m.set_degrade(2, 2.0);
+        assert_eq!(m.scale_at(2), 0.35 * 2.0);
+        // and never flips the homogeneity guard (planning stays naive;
+        // the QoS gate and the sims see the slowdown)
+        let mut flat = ClusterSpec::two_2080ti();
+        flat.set_degrade(0, 4.0);
+        assert!(flat.effectively_homogeneous());
     }
 
     fn mixed_pool() -> ClusterSpec {

@@ -52,8 +52,9 @@
 //! solver — the same latency argument MISO and ParvaGPU make for
 //! keeping reallocation decisions cheap.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::{BTreeSet, HashMap};
+use std::fmt::Write as _;
 use std::sync::Arc;
 
 use crate::allocator::{AllocContext, SaParams, StageGrids};
@@ -70,6 +71,7 @@ use crate::suite::workload::{
     ArrivalProcess, Priority, TenantTrace, TenantTraceEvent, TraceEventKind,
 };
 use crate::suite::Pipeline;
+use crate::util::json::Json;
 use crate::util::{par, rng};
 
 /// Controller configuration.
@@ -108,6 +110,18 @@ pub struct AdmissionConfig {
     /// the `--break-qos` dev mode. The replay's QoS *audit* always uses
     /// the raw targets, so violations let in here are still reported.
     pub qos_slack: f64,
+    /// Planner deadline budget for admission solves, in SA candidate
+    /// evaluations (the solver's deterministic clock — wall time would
+    /// break replay determinism). 0 (the default) disables the budget
+    /// and is bit-identical to the pre-knob behavior. When > 0 and the
+    /// Case-2 (min-resource) solution reports `evaluated` above the
+    /// budget, the controller *degrades deterministically* instead of
+    /// stalling admission: it takes the greedy Case-1 (max-load)
+    /// fallback when that covers the target — recording the decision as
+    /// degraded ([`degraded_plans`](AdmissionController::degraded_plans),
+    /// surfaced as `(degraded)` in replay decision logs) — and rejects
+    /// with a deadline diagnostic when it does not.
+    pub plan_deadline: usize,
 }
 
 impl Default for AdmissionConfig {
@@ -122,6 +136,7 @@ impl Default for AdmissionConfig {
             seed: 42,
             qos_headroom: 0.80,
             qos_slack: 1.0,
+            plan_deadline: 0,
         }
     }
 }
@@ -324,6 +339,10 @@ pub struct AdmissionController {
     /// every placement pass sees them as fully held, so no plan can
     /// touch them until [`recover_gpus`](Self::recover_gpus).
     failed_gpus: BTreeSet<usize>,
+    /// Admission solves that exceeded [`AdmissionConfig::plan_deadline`]
+    /// and degraded to the Case-1 fallback (interior-mutable: the
+    /// degrade happens inside `plan_into`, which runs under `&self`).
+    degraded_plans: Cell<usize>,
 }
 
 impl AdmissionController {
@@ -340,7 +359,165 @@ impl AdmissionController {
             grids_cache: RefCell::new(Vec::new()),
             solve_cache,
             failed_gpus: BTreeSet::new(),
+            degraded_plans: Cell::new(0),
         }
+    }
+
+    /// The cluster this controller plans against (including any live
+    /// partial-degradation overlay — see
+    /// [`degrade_gpus`](Self::degrade_gpus)).
+    pub fn cluster(&self) -> &ClusterSpec {
+        &self.cluster
+    }
+
+    /// Admission solves that exceeded the
+    /// [`plan_deadline`](AdmissionConfig::plan_deadline) budget and
+    /// degraded to the Case-1 fallback (0 with the budget disabled).
+    pub fn degraded_plans(&self) -> usize {
+        self.degraded_plans.get()
+    }
+
+    /// Warm-start the planner [`SolveCache`] from
+    /// [`SolveCache::to_json`] output (the `camelot admit --cache-load`
+    /// path). Returns the number of entries loaded; the controller's
+    /// own capacity is kept.
+    pub fn warm_start_cache(&self, json: &str) -> Result<usize, String> {
+        self.solve_cache.load_json(json)
+    }
+
+    /// Serialize the planner cache contents for
+    /// [`warm_start_cache`](Self::warm_start_cache) in a later session.
+    pub fn cache_json(&self) -> String {
+        self.solve_cache.to_json()
+    }
+
+    /// Serialize the controller's durable state as one JSON object:
+    /// resident set (pipelines referenced *by name* — the trace carries
+    /// the definitions), id/decision counters, failed-GPU set, the
+    /// degrade overlay, and the embedded planner solve cache. Floats
+    /// are bit-exact hex ([`f64::to_bits`]) and u64 ids decimal strings
+    /// so the f64-based [`Json`] parser round-trips them losslessly.
+    /// Predictor/grid caches are deliberately not captured — training
+    /// is deterministic, so [`restore_state`](Self::restore_state)
+    /// recomputes them bit-identically on demand.
+    pub fn state_json(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\"next_id\": \"{}\", \"admitted\": {}, \"rejected\": {}, \
+             \"degraded_plans\": {}, \"failed_gpus\": [",
+            self.next_id,
+            self.admitted,
+            self.rejected,
+            self.degraded_plans.get()
+        );
+        for (i, g) in self.failed_gpus.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "{g}");
+        }
+        out.push_str("], \"degrade\": ");
+        cache::json_bits_arr(&mut out, &self.cluster.degrade);
+        out.push_str(", \"residents\": [");
+        for (i, r) in self.residents.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "{{\"id\": \"{}\", \"name\": ", r.id);
+            cache::json_str(&mut out, &r.name);
+            out.push_str(", \"pipeline\": ");
+            cache::json_str(&mut out, &r.pipeline.name);
+            out.push_str(", \"plan_qps\": ");
+            cache::json_bits(&mut out, r.plan_qps);
+            out.push_str(", \"priority\": ");
+            cache::json_priority(&mut out, r.priority);
+            out.push_str(", \"arrivals\": ");
+            cache::json_arrivals(&mut out, &r.arrivals);
+            out.push_str(", \"allocation\": ");
+            cache::json_alloc(&mut out, &r.allocation);
+            out.push_str(", \"deployment\": ");
+            cache::json_deployment(&mut out, &r.deployment);
+            out.push('}');
+        }
+        out.push_str("], \"cache\": ");
+        out.push_str(&self.solve_cache.to_json());
+        out.push('}');
+        out
+    }
+
+    /// Rebuild a controller from [`state_json`](Self::state_json)
+    /// output. `cluster`/`cfg` come from the caller (they are inputs,
+    /// not decisions — the snapshot holds only what the event stream
+    /// produced); resident pipelines are resolved by name from
+    /// `pipelines`, and predictors are retrained deterministically.
+    /// The restored controller is decision-identical to the one that
+    /// wrote the snapshot: only cache *counters* may differ.
+    pub fn restore_state(
+        cluster: ClusterSpec,
+        cfg: AdmissionConfig,
+        v: &Json,
+        pipelines: &[Pipeline],
+    ) -> Result<AdmissionController, String> {
+        let mut ctl = AdmissionController::new(cluster, cfg);
+        ctl.next_id = v
+            .get_str("next_id")
+            .ok_or("state missing next_id")?
+            .parse::<u64>()
+            .map_err(|e| format!("bad next_id: {e}"))?;
+        ctl.admitted = v.get_f64("admitted").ok_or("state missing admitted")? as usize;
+        ctl.rejected = v.get_f64("rejected").ok_or("state missing rejected")? as usize;
+        ctl.degraded_plans
+            .set(v.get_f64("degraded_plans").ok_or("state missing degraded_plans")? as usize);
+        for g in v.get("failed_gpus").and_then(Json::as_arr).ok_or("state missing failed_gpus")?
+        {
+            let g = g.as_f64().ok_or("failed gpu must be a number")? as usize;
+            if g >= ctl.cluster.num_gpus {
+                return Err(format!("failed gpu {g} out of range"));
+            }
+            ctl.failed_gpus.insert(g);
+        }
+        let degrade =
+            cache::parse_bits_arr(v.get("degrade").ok_or("state missing degrade")?)?;
+        for (g, &s) in degrade.iter().enumerate() {
+            if g >= ctl.cluster.num_gpus {
+                return Err(format!("degrade entry {g} out of range"));
+            }
+            ctl.cluster.set_degrade(g, s);
+        }
+        for r in v.get("residents").and_then(Json::as_arr).ok_or("state missing residents")? {
+            let name = r.get_str("pipeline").ok_or("resident missing pipeline")?;
+            let pipeline = resolve_pipeline(name, pipelines)?;
+            let predictors = ctl.predictors_for(&pipeline);
+            ctl.residents.push(Resident {
+                id: r
+                    .get_str("id")
+                    .ok_or("resident missing id")?
+                    .parse::<u64>()
+                    .map_err(|e| format!("bad resident id: {e}"))?,
+                name: r.get_str("name").ok_or("resident missing name")?.to_string(),
+                pipeline,
+                predictors,
+                plan_qps: cache::parse_bits(
+                    r.get("plan_qps").ok_or("resident missing plan_qps")?,
+                )?,
+                arrivals: cache::parse_arrivals(
+                    r.get("arrivals").ok_or("resident missing arrivals")?,
+                )?,
+                allocation: cache::parse_alloc(
+                    r.get("allocation").ok_or("resident missing allocation")?,
+                )?,
+                deployment: cache::parse_deployment(
+                    r.get("deployment").ok_or("resident missing deployment")?,
+                )?,
+                priority: cache::parse_priority(
+                    r.get("priority").ok_or("resident missing priority")?,
+                )?,
+            });
+        }
+        let cache_v = v.get("cache").ok_or("state missing cache")?;
+        ctl.solve_cache.load_json_value(cache_v)?;
+        Ok(ctl)
     }
 
     /// Planner solve-cache counters (hits/misses/evictions) — surfaced
@@ -500,6 +677,22 @@ impl AdmissionController {
         .sa(self.cfg.sa)
         .qos_headroom(self.cfg.qos_headroom);
         let solution = match self.solve_cache.plan(&request) {
+            // `evaluated` is a deterministic clock (SA candidate count),
+            // so the deadline trips identically across threads/replays
+            Ok(s) if self.cfg.plan_deadline > 0 && s.evaluated > self.cfg.plan_deadline => {
+                self.degraded_plans.set(self.degraded_plans.get() + 1);
+                self.solve_cache
+                    .plan(&request.clone().objective(Objective::MaxLoad))
+                    .ok()
+                    .filter(|c1| c1.objective_value >= target)
+                    .ok_or_else(|| {
+                        format!(
+                            "plan deadline exceeded ({} > {} evaluations) and Case-1 \
+                             fallback cannot cover {target:.1} qps",
+                            s.evaluated, self.cfg.plan_deadline
+                        )
+                    })?
+            }
             Ok(s) => s,
             // keep the primary planner error: a typed rejection such
             // as `Infeasible::NoMemory` must reach the reject reason
@@ -1086,6 +1279,38 @@ impl AdmissionController {
         self.repack()
     }
 
+    /// Partially degrade the listed GPUs (ECC retirement, thermal
+    /// throttling): service time on each is multiplied by `scale`
+    /// (> 1.0 = slower) through [`ClusterSpec::set_degrade`].
+    /// Placements stay — unlike [`fail_gpus`](Self::fail_gpus) the
+    /// device still serves — but predicted p99s inflate, so QoS
+    /// enforcement sheds residents the slowdown pushes past target.
+    /// Returns the GPUs whose scale actually changed and the evicted
+    /// tenant names.
+    pub fn degrade_gpus(&mut self, gpu_ids: &[usize], scale: f64) -> (Vec<usize>, Vec<String>) {
+        let mut applied = Vec::new();
+        for &g in gpu_ids {
+            if g < self.cluster.num_gpus && self.cluster.degrade_at(g) != scale {
+                self.cluster.set_degrade(g, scale);
+                applied.push(g);
+            }
+        }
+        let evicted = if applied.is_empty() { Vec::new() } else { self.enforce_qos() };
+        (applied, evicted)
+    }
+
+    /// Undo [`degrade_gpus`](Self::degrade_gpus): the listed GPUs return
+    /// to full speed and the churn-gated re-pack decides whether
+    /// residents spread back.
+    pub fn restore_gpus(&mut self, gpu_ids: &[usize]) -> RepackPlan {
+        for &g in gpu_ids {
+            if g < self.cluster.num_gpus {
+                self.cluster.set_degrade(g, 1.0);
+            }
+        }
+        self.repack()
+    }
+
     /// Predicted-QoS audit of the current resident set: every resident
     /// whose predicted p99 under full neighbor pressure exceeds its
     /// *raw* QoS target, as `(name, predicted_p99_s, target_s)`. The
@@ -1201,6 +1426,13 @@ pub struct ReplayConfig {
     /// it costs an O(residents²) predictor pass per event, which the
     /// benches should not pay.
     pub audit_qos: bool,
+    /// Solve-cache payload ([`SolveCache::to_json`]) to warm-start the
+    /// controller's planner cache with before the first event (the
+    /// `camelot admit --cache-load` path). Decisions are bit-identical
+    /// warm or cold — a hit returns the exact solution a fresh solve
+    /// would — so only the hit/miss counters move; they start at zero,
+    /// making [`ReplayReport::solve_cache`] the *warm* hit rate.
+    pub warm_cache: Option<String>,
 }
 
 impl Default for ReplayConfig {
@@ -1211,17 +1443,24 @@ impl Default for ReplayConfig {
             threads: 0,
             dedup: true,
             audit_qos: false,
+            warm_cache: None,
         }
     }
 }
 
 /// Canonical content key of one between-event interval: everything the
 /// interval simulation reads except the seed (assigned separately by
-/// first occurrence) and the cluster (fixed per replay). Tenant names
-/// and the interval start time are display-only and excluded.
+/// first occurrence) and the cluster (fixed per replay — except the
+/// degrade overlay, which GPU-degrade events mutate mid-trace and the
+/// simulators read through [`ClusterSpec::scale_at`], so it is part of
+/// the content). The degrade block is appended only when an overlay is
+/// active, keeping every degrade-free interval's key byte-identical to
+/// its pre-overlay form. Tenant names and the interval start time are
+/// display-only and excluded.
 pub(crate) fn interval_fingerprint(
     tenants: &[(String, Pipeline, Deployment, ArrivalProcess)],
     queries: usize,
+    degrade: &[f64],
 ) -> String {
     use std::fmt::Write as _;
     let mut s = String::with_capacity(256);
@@ -1232,11 +1471,17 @@ pub(crate) fn interval_fingerprint(
         cache::fp_deployment(&mut s, d);
         cache::fp_arrivals(&mut s, a);
     }
+    if !degrade.is_empty() {
+        s.push_str("|deg=");
+        for d in degrade {
+            let _ = write!(s, "{:x},", d.to_bits());
+        }
+    }
     s
 }
 
 /// One trace event as the controller saw it.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ReplayEvent {
     pub t_s: f64,
     pub tenant: u64,
@@ -1375,6 +1620,44 @@ impl ReplayReport {
     }
 }
 
+/// One interval snapshot: start time, owned copies of the resident set,
+/// and the degrade overlay active at that moment (GPU-degrade events
+/// mutate the controller's cluster mid-trace, so each interval must
+/// simulate under the overlay it actually ran with).
+pub(crate) type IntervalSnapshot =
+    (f64, Vec<(String, Pipeline, Deployment, ArrivalProcess)>, Vec<f64>);
+
+/// Incremental (event-at-a-time) form of [`replay_trace`]'s decision
+/// phase — the seam the durable control plane
+/// ([`crate::coordinator::recovery`]) logs and snapshots through.
+/// [`replay_trace`] is a thin `new → apply_event × N → finish` wrapper,
+/// so the durable and in-memory paths run the *same* code and produce
+/// bit-identical [`ReplayReport`]s (the crash-recovery golden suite
+/// pins the fingerprint equality).
+pub struct ReplayState {
+    ctl: AdmissionController,
+    /// Pristine copy of the input cluster — the controller's own copy
+    /// mutates under GPU-degrade events; phase 2 rebuilds each
+    /// interval's cluster from the overlay its snapshot recorded.
+    base_cluster: ClusterSpec,
+    cfg: ReplayConfig,
+    /// trace tenant id -> controller resident id
+    resident_ids: Vec<(u64, u64)>,
+    events: Vec<ReplayEvent>,
+    peak_residents: usize,
+    repacks_applied: usize,
+    repack_regressions: usize,
+    qos_violations: Vec<QosViolationRecord>,
+    /// trace tenant id -> (pre-burst base arrivals, open burst depth)
+    burst_state: HashMap<u64, (ArrivalProcess, usize)>,
+    snapshots: Vec<IntervalSnapshot>,
+    /// per-class SM occupancy, accumulated per event with residents
+    class_ranges: Vec<(usize, usize)>,
+    class_sum: Vec<f64>,
+    class_peak: Vec<f64>,
+    class_events: usize,
+}
+
 /// Drive an [`AdmissionController`] over a [`TenantTrace`] and validate
 /// every between-event interval in the merged multi-tenant simulator.
 ///
@@ -1395,9 +1678,8 @@ pub fn replay_trace(
     trace: &TenantTrace,
     cfg: &ReplayConfig,
 ) -> Result<ReplayReport, String> {
-    let mut ctl = AdmissionController::new(cluster.clone(), cfg.admission.clone());
-    // trace tenant id -> controller resident id
-    let mut resident_ids: Vec<(u64, u64)> = Vec::new();
+    let mut state = ReplayState::new(cluster, cfg.clone());
+    state.warm_start()?;
     // bursts are expanded (synthesized end events, canonical re-sort)
     // only when present, so burst-free traces replay their event list
     // verbatim — hand-built golden traces included
@@ -1408,23 +1690,78 @@ pub fn replay_trace(
     } else {
         &trace.events
     };
-    let mut events = Vec::with_capacity(trace_events.len());
-    let mut peak_residents = 0usize;
-    let mut repacks_applied = 0usize;
-    let mut repack_regressions = 0usize;
-    let mut qos_violations: Vec<QosViolationRecord> = Vec::new();
-    // trace tenant id -> (pre-burst base arrivals, open burst depth)
-    let mut burst_state: HashMap<u64, (ArrivalProcess, usize)> = HashMap::new();
-    // interval snapshots: (t_start, owned copies of the resident set)
-    type Snapshot = (f64, Vec<(String, Pipeline, Deployment, ArrivalProcess)>);
-    let mut snapshots: Vec<Snapshot> = Vec::new();
-    // per-class SM occupancy, accumulated per event with residents
-    let class_ranges = cluster.class_ranges();
-    let mut class_sum = vec![0.0f64; class_ranges.len()];
-    let mut class_peak = vec![0.0f64; class_ranges.len()];
-    let mut class_events = 0usize;
-
     for e in trace_events {
+        state.apply_event(e)?;
+    }
+    state.finish()
+}
+
+impl ReplayState {
+    /// A fresh replay over `cluster`: no events applied yet.
+    pub fn new(cluster: &ClusterSpec, cfg: ReplayConfig) -> ReplayState {
+        let class_ranges = cluster.class_ranges();
+        ReplayState {
+            ctl: AdmissionController::new(cluster.clone(), cfg.admission.clone()),
+            base_cluster: cluster.clone(),
+            cfg,
+            resident_ids: Vec::new(),
+            events: Vec::new(),
+            peak_residents: 0,
+            repacks_applied: 0,
+            repack_regressions: 0,
+            qos_violations: Vec::new(),
+            burst_state: HashMap::new(),
+            snapshots: Vec::new(),
+            class_sum: vec![0.0; class_ranges.len()],
+            class_peak: vec![0.0; class_ranges.len()],
+            class_ranges,
+            class_events: 0,
+        }
+    }
+
+    /// Load [`ReplayConfig::warm_cache`] (when set) into the
+    /// controller's planner cache. Call once, before the first event —
+    /// [`replay_trace`] and the recovery layer's fresh-state path both
+    /// do. Returns the entries loaded (0 without a payload).
+    pub fn warm_start(&self) -> Result<usize, String> {
+        match &self.cfg.warm_cache {
+            Some(json) => self.ctl.warm_start_cache(json),
+            None => Ok(0),
+        }
+    }
+
+    /// The controller's planner-cache contents
+    /// ([`SolveCache::to_json`]) — the `camelot admit --cache-save`
+    /// payload a later replay warm-starts from.
+    pub fn cache_json(&self) -> String {
+        self.ctl.cache_json()
+    }
+
+    /// Events applied so far — each [`apply_event`](Self::apply_event)
+    /// appends exactly one [`ReplayEvent`], so this doubles as the
+    /// replay position a recovery resumes from.
+    pub fn applied(&self) -> usize {
+        self.events.len()
+    }
+
+    /// The decision log so far.
+    pub fn events(&self) -> &[ReplayEvent] {
+        &self.events
+    }
+
+    /// The live controller (read-only: recovery verification and tests
+    /// introspect resident state between events).
+    pub fn controller(&self) -> &AdmissionController {
+        &self.ctl
+    }
+
+    /// Apply one trace event and return the decision record appended to
+    /// the log — the exact value the WAL persists, so recovery can
+    /// verify replayed decisions against logged ones field-for-field.
+    pub fn apply_event(&mut self, e: &TenantTraceEvent) -> Result<ReplayEvent, String> {
+        let ctl = &mut self.ctl;
+        let resident_ids = &mut self.resident_ids;
+        let burst_state = &mut self.burst_state;
         let (desc, decision) = match &e.kind {
             TraceEventKind::Arrive { pipeline, name, arrivals, plan_qps, priority } => {
                 let desc = format!("arrive {pipeline} @ {plan_qps:.0} qps");
@@ -1433,6 +1770,7 @@ pub fn replay_trace(
                 let name = name
                     .clone()
                     .unwrap_or_else(|| format!("{pipeline}#{}", e.tenant));
+                let degraded_before = ctl.degraded_plans();
                 let decision = match ctl.admit_preempting(
                     &name,
                     &p,
@@ -1442,14 +1780,22 @@ pub fn replay_trace(
                 ) {
                     Ok((id, evicted)) => {
                         resident_ids.push((e.tenant, id));
+                        // deadline-degraded solves are flagged in the
+                        // decision log (impossible at plan_deadline=0,
+                        // so legacy logs are byte-identical)
+                        let mark = if ctl.degraded_plans() > degraded_before {
+                            " (degraded)"
+                        } else {
+                            ""
+                        };
                         if evicted.is_empty() {
-                            "admitted".to_string()
+                            format!("admitted{mark}")
                         } else {
                             // preempted tenants left the resident set
                             resident_ids.retain(|&(_, rid)| {
                                 ctl.residents().iter().any(|r| r.id == rid)
                             });
-                            format!("admitted; preempted {}", evicted.join(","))
+                            format!("admitted{mark}; preempted {}", evicted.join(","))
                         }
                     }
                     Err(reason) => format!("rejected: {reason}"),
@@ -1475,9 +1821,9 @@ pub fn replay_trace(
                         let (_, id) = resident_ids.remove(pos);
                         let plan = ctl.depart(id).expect("resident departs");
                         if plan.applied {
-                            repacks_applied += 1;
+                            self.repacks_applied += 1;
                             if plan.gpus_after > plan.gpus_before {
-                                repack_regressions += 1;
+                                self.repack_regressions += 1;
                             }
                         }
                         plan.summary()
@@ -1540,17 +1886,37 @@ pub fn replay_trace(
                 let desc = format!("gpurecover {gpu_ids:?}");
                 let plan = ctl.recover_gpus(gpu_ids);
                 if plan.applied {
-                    repacks_applied += 1;
+                    self.repacks_applied += 1;
                     if plan.gpus_after > plan.gpus_before {
-                        repack_regressions += 1;
+                        self.repack_regressions += 1;
+                    }
+                }
+                (desc, plan.summary())
+            }
+            TraceEventKind::GpuDegrade { gpu_ids, scale } => {
+                let desc = format!("gpudegrade {gpu_ids:?} x{scale:.2}");
+                let (applied, evicted) = ctl.degrade_gpus(gpu_ids, *scale);
+                if !evicted.is_empty() {
+                    resident_ids
+                        .retain(|&(_, rid)| ctl.residents().iter().any(|r| r.id == rid));
+                }
+                (desc, degrade_summary(&applied, *scale, &evicted))
+            }
+            TraceEventKind::GpuRestore { gpu_ids } => {
+                let desc = format!("gpurestore {gpu_ids:?}");
+                let plan = ctl.restore_gpus(gpu_ids);
+                if plan.applied {
+                    self.repacks_applied += 1;
+                    if plan.gpus_after > plan.gpus_before {
+                        self.repack_regressions += 1;
                     }
                 }
                 (desc, plan.summary())
             }
         };
-        if cfg.audit_qos {
+        if self.cfg.audit_qos {
             for (tenant, predicted_p99_s, target_s) in ctl.qos_audit() {
-                qos_violations.push(QosViolationRecord {
+                self.qos_violations.push(QosViolationRecord {
                     t_s: e.t_s,
                     tenant,
                     predicted_p99_s,
@@ -1558,8 +1924,8 @@ pub fn replay_trace(
                 });
             }
         }
-        peak_residents = peak_residents.max(ctl.residents().len());
-        events.push(ReplayEvent {
+        self.peak_residents = self.peak_residents.max(ctl.residents().len());
+        let ev = ReplayEvent {
             t_s: e.t_s,
             tenant: e.tenant,
             desc,
@@ -1567,10 +1933,11 @@ pub fn replay_trace(
             residents: ctl.residents().len(),
             gpus_in_use: ctl.gpus_in_use(),
             usage: ctl.total_usage(),
-        });
-        if !class_ranges.is_empty() && !ctl.residents().is_empty() {
-            class_events += 1;
-            for (ci, &(start, count)) in class_ranges.iter().enumerate() {
+        };
+        self.events.push(ev.clone());
+        if !self.class_ranges.is_empty() && !ctl.residents().is_empty() {
+            self.class_events += 1;
+            for (ci, &(start, count)) in self.class_ranges.iter().enumerate() {
                 let held: f64 = ctl
                     .residents()
                     .iter()
@@ -1579,12 +1946,12 @@ pub fn replay_trace(
                     .map(|p| p.sm_frac)
                     .sum();
                 let frac = held / count as f64;
-                class_sum[ci] += frac;
-                class_peak[ci] = class_peak[ci].max(frac);
+                self.class_sum[ci] += frac;
+                self.class_peak[ci] = self.class_peak[ci].max(frac);
             }
         }
         if !ctl.residents().is_empty() {
-            snapshots.push((
+            self.snapshots.push((
                 e.t_s,
                 ctl.residents()
                     .iter()
@@ -1597,161 +1964,501 @@ pub fn replay_trace(
                         )
                     })
                     .collect(),
+                ctl.cluster().degrade.clone(),
             ));
         }
+        Ok(ev)
     }
 
-    // phase 2: merged end-to-end measurement per interval, incremental.
-    //
-    // Interval seeds are content-addressed by FIRST OCCURRENCE: every
-    // distinct interval content (tenant pipelines, deployments, arrival
-    // specs — names and t_start excluded; they don't enter the sim) is
-    // seeded `mix_seed(seed, first snapshot index with that content)`.
-    // A snapshot whose content differs from all earlier ones therefore
-    // keeps exactly the legacy per-index seed, while repeated
-    // configurations (rejected arrivals, held shrinks/re-packs,
-    // arrive/depart/arrive cycles) are *provably the same simulation* —
-    // with `cfg.dedup` they are measured once and the report reused.
-    // Seed assignment and dedup both happen here, sequentially, before
-    // the `par_map_threads` fan, so thread-count determinism is
-    // preserved by construction, and `dedup: false` runs every
-    // duplicate at the same assigned seed — bit-identical output either
-    // way (the golden suite pins it).
-    let threads = if cfg.threads == 0 { par::max_threads() } else { cfg.threads };
-    let seed = cfg.admission.seed;
-    let queries = cfg.queries;
-    // per-job: (snapshot index providing the content, assigned sim seed)
-    let mut jobs: Vec<(usize, u64)> = Vec::with_capacity(snapshots.len());
-    // per-snapshot: index of the job that measures it
-    let mut measure_by: Vec<usize> = Vec::with_capacity(snapshots.len());
-    // fingerprint -> (seed-owner snapshot index, its job index)
-    let mut seen: HashMap<String, (usize, usize)> = HashMap::new();
-    for (idx, (_, tenants)) in snapshots.iter().enumerate() {
-        let key = interval_fingerprint(tenants, queries);
-        match seen.get(&key) {
-            Some(&(_, job)) if cfg.dedup => measure_by.push(job),
-            Some(&(owner, _)) => {
-                // dedup off: simulate this duplicate too, at the first
-                // occurrence's seed (same inputs ⇒ same report)
-                jobs.push((idx, rng::mix_seed(seed, owner as u64)));
-                measure_by.push(jobs.len() - 1);
-            }
-            None => {
-                jobs.push((idx, rng::mix_seed(seed, idx as u64)));
-                let job = jobs.len() - 1;
-                seen.insert(key, (idx, job));
-                measure_by.push(job);
+    /// Phase 2: merged end-to-end measurement per interval, incremental.
+    /// Consumes the state and assembles the [`ReplayReport`].
+    ///
+    /// Interval seeds are content-addressed by FIRST OCCURRENCE: every
+    /// distinct interval content (tenant pipelines, deployments, arrival
+    /// specs, degrade overlay — names and t_start excluded; they don't
+    /// enter the sim) is seeded `mix_seed(seed, first snapshot index
+    /// with that content)`. A snapshot whose content differs from all
+    /// earlier ones therefore keeps exactly the legacy per-index seed,
+    /// while repeated configurations (rejected arrivals, held
+    /// shrinks/re-packs, arrive/depart/arrive cycles) are *provably the
+    /// same simulation* — with `cfg.dedup` they are measured once and
+    /// the report reused. Seed assignment and dedup both happen here,
+    /// sequentially, before the `par_map_threads` fan, so thread-count
+    /// determinism is preserved by construction, and `dedup: false` runs
+    /// every duplicate at the same assigned seed — bit-identical output
+    /// either way (the golden suite pins it).
+    pub fn finish(self) -> Result<ReplayReport, String> {
+        let cfg = &self.cfg;
+        let cluster = &self.base_cluster;
+        let snapshots = &self.snapshots;
+        let threads = if cfg.threads == 0 { par::max_threads() } else { cfg.threads };
+        let seed = cfg.admission.seed;
+        let queries = cfg.queries;
+        // per-job: (snapshot index providing the content, assigned sim seed)
+        let mut jobs: Vec<(usize, u64)> = Vec::with_capacity(snapshots.len());
+        // per-snapshot: index of the job that measures it
+        let mut measure_by: Vec<usize> = Vec::with_capacity(snapshots.len());
+        // fingerprint -> (seed-owner snapshot index, its job index)
+        let mut seen: HashMap<String, (usize, usize)> = HashMap::new();
+        for (idx, (_, tenants, degrade)) in snapshots.iter().enumerate() {
+            let key = interval_fingerprint(tenants, queries, degrade);
+            match seen.get(&key) {
+                Some(&(_, job)) if cfg.dedup => measure_by.push(job),
+                Some(&(owner, _)) => {
+                    // dedup off: simulate this duplicate too, at the first
+                    // occurrence's seed (same inputs ⇒ same report)
+                    jobs.push((idx, rng::mix_seed(seed, owner as u64)));
+                    measure_by.push(jobs.len() - 1);
+                }
+                None => {
+                    jobs.push((idx, rng::mix_seed(seed, idx as u64)));
+                    let job = jobs.len() - 1;
+                    seen.insert(key, (idx, job));
+                    measure_by.push(job);
+                }
             }
         }
-    }
-    let intervals_simulated = jobs.len();
-    let sims: Vec<Result<(Vec<f64>, Vec<f64>), String>> =
-        par::par_map_threads(&jobs, threads, |_, &(snap_idx, sim_seed)| {
-            let (_, tenants) = &snapshots[snap_idx];
-            let opts = SimOptions { seed: sim_seed, queries, ..Default::default() };
-            // degenerate fast path: one constant-rate tenant runs on the
-            // optimized single-tenant engine — bit-identical to the
-            // merged ClusterSim by the degenerate-equivalence contract
-            // (tenant 0 seeds from opts.seed directly; pinned in
-            // tests/golden_engine.rs and tests/control_loop_cache.rs)
-            if let [(_, p, d, ArrivalProcess::Constant { rate_qps })] = tenants.as_slice() {
-                let report = Simulator::new(p, cluster, d, opts)
-                    .run(*rate_qps)
+        let intervals_simulated = jobs.len();
+        let sims: Vec<Result<(Vec<f64>, Vec<f64>), String>> =
+            par::par_map_threads(&jobs, threads, |_, &(snap_idx, sim_seed)| {
+                let (_, tenants, degrade) = &snapshots[snap_idx];
+                // intervals after a GPU-degrade event simulate under
+                // the overlay their snapshot recorded; the common
+                // (healthy) case borrows the base cluster unchanged
+                let owned;
+                let cl: &ClusterSpec = if *degrade == cluster.degrade {
+                    cluster
+                } else {
+                    owned = ClusterSpec { degrade: degrade.clone(), ..cluster.clone() };
+                    &owned
+                };
+                let opts = SimOptions { seed: sim_seed, queries, ..Default::default() };
+                // degenerate fast path: one constant-rate tenant runs on the
+                // optimized single-tenant engine — bit-identical to the
+                // merged ClusterSim by the degenerate-equivalence contract
+                // (tenant 0 seeds from opts.seed directly; pinned in
+                // tests/golden_engine.rs and tests/control_loop_cache.rs)
+                if let [(_, p, d, ArrivalProcess::Constant { rate_qps })] =
+                    tenants.as_slice()
+                {
+                    let report = Simulator::new(p, cl, d, opts)
+                        .run(*rate_qps)
+                        .map_err(|e| format!("interval {snap_idx}: {e}"))?;
+                    return Ok((vec![report.p99()], report.kv_peak_bytes));
+                }
+                let specs: Vec<TenantSpec> = tenants
+                    .iter()
+                    .map(|(_, p, d, a)| TenantSpec {
+                        pipeline: p,
+                        deployment: d,
+                        arrivals: a.clone(),
+                    })
+                    .collect();
+                let reports = ClusterSim::new(cl, specs, opts)
+                    .run()
                     .map_err(|e| format!("interval {snap_idx}: {e}"))?;
-                return Ok((vec![report.p99()], report.kv_peak_bytes));
-            }
-            let specs: Vec<TenantSpec> = tenants
-                .iter()
-                .map(|(_, p, d, a)| TenantSpec {
-                    pipeline: p,
-                    deployment: d,
-                    arrivals: a.clone(),
-                })
-                .collect();
-            let reports = ClusterSim::new(cluster, specs, opts)
-                .run()
-                .map_err(|e| format!("interval {snap_idx}: {e}"))?;
-            // every tenant report carries the same cluster-wide
-            // per-GPU KV peak vector; take the first
-            let kv = reports
-                .first()
-                .map(|r| r.kv_peak_bytes.clone())
-                .unwrap_or_default();
-            Ok((reports.iter().map(|r| r.p99()).collect(), kv))
-        });
-    let tables = sims.into_iter().collect::<Result<Vec<_>, _>>()?;
-    // replay-wide per-GPU peak KV residency: element-wise max over the
-    // distinct simulations (duplicates are bit-identical, so dedup
-    // on/off cannot change the max)
-    let mut kv_peak_bytes = vec![0.0f64; cluster.num_gpus];
-    for (_, kv) in &tables {
-        for (slot, &v) in kv_peak_bytes.iter_mut().zip(kv) {
-            if v > *slot {
-                *slot = v;
+                // every tenant report carries the same cluster-wide
+                // per-GPU KV peak vector; take the first
+                let kv = reports
+                    .first()
+                    .map(|r| r.kv_peak_bytes.clone())
+                    .unwrap_or_default();
+                Ok((reports.iter().map(|r| r.p99()).collect(), kv))
+            });
+        let tables = sims.into_iter().collect::<Result<Vec<_>, _>>()?;
+        // replay-wide per-GPU peak KV residency: element-wise max over the
+        // distinct simulations (duplicates are bit-identical, so dedup
+        // on/off cannot change the max)
+        let mut kv_peak_bytes = vec![0.0f64; cluster.num_gpus];
+        for (_, kv) in &tables {
+            for (slot, &v) in kv_peak_bytes.iter_mut().zip(kv) {
+                if v > *slot {
+                    *slot = v;
+                }
             }
         }
-    }
-    let p99_tables: Vec<Vec<f64>> = tables.into_iter().map(|(p, _)| p).collect();
-    let intervals: Vec<IntervalReport> = snapshots
-        .iter()
-        .zip(&measure_by)
-        .map(|((t_start, tenants), &job)| {
-            let p99_s: Vec<f64> = p99_tables[job].clone();
-            let qos_met: Vec<bool> = tenants
-                .iter()
-                .zip(&p99_s)
-                .map(|((_, p, _, _), &x)| x <= p.qos_target_s)
-                .collect();
-            IntervalReport {
-                t_start_s: *t_start,
-                tenants: tenants.iter().map(|(n, _, _, _)| n.clone()).collect(),
-                p99_s,
-                qos_met,
-            }
-        })
-        .collect();
+        let p99_tables: Vec<Vec<f64>> = tables.into_iter().map(|(p, _)| p).collect();
+        let intervals: Vec<IntervalReport> = snapshots
+            .iter()
+            .zip(&measure_by)
+            .map(|((t_start, tenants, _), &job)| {
+                let p99_s: Vec<f64> = p99_tables[job].clone();
+                let qos_met: Vec<bool> = tenants
+                    .iter()
+                    .zip(&p99_s)
+                    .map(|((_, p, _, _), &x)| x <= p.qos_target_s)
+                    .collect();
+                IntervalReport {
+                    t_start_s: *t_start,
+                    tenants: tenants.iter().map(|(n, _, _, _)| n.clone()).collect(),
+                    p99_s,
+                    qos_met,
+                }
+            })
+            .collect();
 
-    let with_gpus: Vec<usize> = events
-        .iter()
-        .filter(|e| e.residents > 0)
-        .map(|e| e.gpus_in_use)
-        .collect();
-    let mean_gpus_in_use = if with_gpus.is_empty() {
-        0.0
-    } else {
-        with_gpus.iter().sum::<usize>() as f64 / with_gpus.len() as f64
-    };
-    let class_utilization: Vec<ClassUtilization> = cluster
-        .classes
-        .iter()
-        .zip(class_ranges.iter())
-        .enumerate()
-        .map(|(ci, (c, &(_, count)))| ClassUtilization {
-            class: c.gpu.name.to_string(),
-            gpus: count,
-            mean_sm_frac: if class_events == 0 {
-                0.0
-            } else {
-                class_sum[ci] / class_events as f64
-            },
-            peak_sm_frac: class_peak[ci],
+        let with_gpus: Vec<usize> = self
+            .events
+            .iter()
+            .filter(|e| e.residents > 0)
+            .map(|e| e.gpus_in_use)
+            .collect();
+        let mean_gpus_in_use = if with_gpus.is_empty() {
+            0.0
+        } else {
+            with_gpus.iter().sum::<usize>() as f64 / with_gpus.len() as f64
+        };
+        let class_utilization: Vec<ClassUtilization> = cluster
+            .classes
+            .iter()
+            .zip(self.class_ranges.iter())
+            .enumerate()
+            .map(|(ci, (c, &(_, count)))| ClassUtilization {
+                class: c.gpu.name.to_string(),
+                gpus: count,
+                mean_sm_frac: if self.class_events == 0 {
+                    0.0
+                } else {
+                    self.class_sum[ci] / self.class_events as f64
+                },
+                peak_sm_frac: self.class_peak[ci],
+            })
+            .collect();
+        Ok(ReplayReport {
+            admitted: self.ctl.admitted(),
+            rejected: self.ctl.rejected(),
+            repacks_applied: self.repacks_applied,
+            peak_residents: self.peak_residents,
+            mean_gpus_in_use,
+            events: self.events,
+            intervals,
+            intervals_simulated,
+            solve_cache: self.ctl.cache_stats(),
+            qos_violations: self.qos_violations,
+            repack_regressions: self.repack_regressions,
+            class_utilization,
+            kv_peak_bytes,
         })
-        .collect();
-    Ok(ReplayReport {
-        admitted: ctl.admitted(),
-        rejected: ctl.rejected(),
-        repacks_applied,
-        peak_residents,
-        mean_gpus_in_use,
-        events,
-        intervals,
-        intervals_simulated,
-        solve_cache: ctl.cache_stats(),
-        qos_violations,
-        repack_regressions,
-        class_utilization,
-        kv_peak_bytes,
+    }
+}
+
+impl ReplayState {
+    /// Serialize the full phase-1 state — controller, tenant-id map,
+    /// decision log, burst bookkeeping, interval snapshots (with their
+    /// degrade overlays), and class accumulators — as one JSON object,
+    /// using the same bit-exact float / string-wrapped u64 conventions
+    /// as [`AdmissionController::state_json`]. This is what a periodic
+    /// durability snapshot persists; [`restore`](Self::restore) inverts
+    /// it.
+    pub fn snapshot_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\"ctl\": ");
+        out.push_str(&self.ctl.state_json());
+        out.push_str(", \"resident_ids\": [");
+        for (i, (t, id)) in self.resident_ids.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "[\"{t}\", \"{id}\"]");
+        }
+        let _ = write!(
+            out,
+            "], \"peak_residents\": {}, \"repacks_applied\": {}, \
+             \"repack_regressions\": {}, \"class_events\": {}",
+            self.peak_residents,
+            self.repacks_applied,
+            self.repack_regressions,
+            self.class_events
+        );
+        out.push_str(", \"class_sum\": ");
+        cache::json_bits_arr(&mut out, &self.class_sum);
+        out.push_str(", \"class_peak\": ");
+        cache::json_bits_arr(&mut out, &self.class_peak);
+        out.push_str(", \"qos_violations\": ");
+        json_qos_violations(&mut out, &self.qos_violations);
+        out.push_str(", \"burst_state\": ");
+        json_burst_state(&mut out, &self.burst_state);
+        out.push_str(", \"events\": ");
+        json_replay_events(&mut out, &self.events);
+        out.push_str(", \"snapshots\": ");
+        json_interval_snapshots(&mut out, &self.snapshots);
+        out.push('}');
+        out
+    }
+
+    /// Rebuild a mid-replay state from
+    /// [`snapshot_json`](Self::snapshot_json) output. `cluster` and
+    /// `cfg` are the same inputs the original replay started with (they
+    /// are configuration, not decisions); pipelines resolve by name
+    /// from `pipelines` with the registry
+    /// ([`crate::suite::pipeline_by_name`]) as fallback. Applying the
+    /// remaining trace events to the restored state reconverges
+    /// bit-identically with the uninterrupted replay — the recovery
+    /// contract the crash golden suite pins.
+    pub fn restore(
+        cluster: &ClusterSpec,
+        cfg: ReplayConfig,
+        v: &Json,
+        pipelines: &[Pipeline],
+    ) -> Result<ReplayState, String> {
+        let mut st = ReplayState::new(cluster, cfg);
+        st.ctl = AdmissionController::restore_state(
+            cluster.clone(),
+            st.cfg.admission.clone(),
+            v.get("ctl").ok_or("snapshot missing ctl")?,
+            pipelines,
+        )?;
+        for pair in v
+            .get("resident_ids")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot missing resident_ids")?
+        {
+            let pair = pair.as_arr().ok_or("resident_ids entry must be a pair")?;
+            if pair.len() != 2 {
+                return Err("resident_ids entry must be a pair".to_string());
+            }
+            let parse_id = |j: &Json, what: &str| -> Result<u64, String> {
+                j.as_str()
+                    .ok_or_else(|| format!("{what} must be a string"))?
+                    .parse::<u64>()
+                    .map_err(|e| format!("bad {what}: {e}"))
+            };
+            st.resident_ids
+                .push((parse_id(&pair[0], "trace id")?, parse_id(&pair[1], "resident id")?));
+        }
+        st.peak_residents = snap_usize(v, "peak_residents")?;
+        st.repacks_applied = snap_usize(v, "repacks_applied")?;
+        st.repack_regressions = snap_usize(v, "repack_regressions")?;
+        st.class_events = snap_usize(v, "class_events")?;
+        st.class_sum = cache::parse_bits_arr(v.get("class_sum").ok_or("snapshot missing class_sum")?)?;
+        st.class_peak =
+            cache::parse_bits_arr(v.get("class_peak").ok_or("snapshot missing class_peak")?)?;
+        if st.class_sum.len() != st.class_ranges.len()
+            || st.class_peak.len() != st.class_ranges.len()
+        {
+            return Err("class accumulator length mismatch".to_string());
+        }
+        st.qos_violations =
+            parse_qos_violations(v.get("qos_violations").ok_or("snapshot missing qos_violations")?)?;
+        st.burst_state =
+            parse_burst_state(v.get("burst_state").ok_or("snapshot missing burst_state")?)?;
+        st.events = parse_replay_events(v.get("events").ok_or("snapshot missing events")?)?;
+        st.snapshots = parse_interval_snapshots(
+            v.get("snapshots").ok_or("snapshot missing snapshots")?,
+            pipelines,
+        )?;
+        Ok(st)
+    }
+}
+
+/// Emit one [`ReplayEvent`] as a JSON object — the WAL record body (the
+/// recovery layer prepends a sequence number). Bit-exact: `t`/`usage`
+/// as [`f64::to_bits`] hex, the tenant id as a decimal string.
+pub(crate) fn json_replay_event(out: &mut String, e: &ReplayEvent) {
+    out.push_str("{\"t\": ");
+    cache::json_bits(out, e.t_s);
+    let _ = write!(out, ", \"tenant\": \"{}\", \"desc\": ", e.tenant);
+    cache::json_str(out, &e.desc);
+    out.push_str(", \"decision\": ");
+    cache::json_str(out, &e.decision);
+    let _ = write!(
+        out,
+        ", \"residents\": {}, \"gpus\": {}, \"usage\": ",
+        e.residents, e.gpus_in_use
+    );
+    cache::json_bits(out, e.usage);
+    out.push('}');
+}
+
+/// Parse a [`json_replay_event`] object.
+pub(crate) fn parse_replay_event(v: &Json) -> Result<ReplayEvent, String> {
+    Ok(ReplayEvent {
+        t_s: cache::parse_bits(v.get("t").ok_or("event missing t")?)?,
+        tenant: v
+            .get_str("tenant")
+            .ok_or("event missing tenant")?
+            .parse::<u64>()
+            .map_err(|e| format!("bad tenant id: {e}"))?,
+        desc: v.get_str("desc").ok_or("event missing desc")?.to_string(),
+        decision: v.get_str("decision").ok_or("event missing decision")?.to_string(),
+        residents: snap_usize(v, "residents")?,
+        gpus_in_use: snap_usize(v, "gpus")?,
+        usage: cache::parse_bits(v.get("usage").ok_or("event missing usage")?)?,
     })
+}
+
+/// Emit a list of [`json_replay_event`] objects.
+pub(crate) fn json_replay_events(out: &mut String, events: &[ReplayEvent]) {
+    out.push('[');
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        json_replay_event(out, ev);
+    }
+    out.push(']');
+}
+
+/// Parse a [`json_replay_events`] list.
+pub(crate) fn parse_replay_events(v: &Json) -> Result<Vec<ReplayEvent>, String> {
+    v.as_arr()
+        .ok_or("events must be an array")?
+        .iter()
+        .map(parse_replay_event)
+        .collect()
+}
+
+/// Emit a QoS-violation log (bit-exact floats, tenant by name).
+pub(crate) fn json_qos_violations(out: &mut String, violations: &[QosViolationRecord]) {
+    out.push('[');
+    for (i, q) in violations.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str("{\"t\": ");
+        cache::json_bits(out, q.t_s);
+        out.push_str(", \"tenant\": ");
+        cache::json_str(out, &q.tenant);
+        out.push_str(", \"p99\": ");
+        cache::json_bits(out, q.predicted_p99_s);
+        out.push_str(", \"target\": ");
+        cache::json_bits(out, q.target_s);
+        out.push('}');
+    }
+    out.push(']');
+}
+
+/// Parse a [`json_qos_violations`] list.
+pub(crate) fn parse_qos_violations(v: &Json) -> Result<Vec<QosViolationRecord>, String> {
+    let mut out = Vec::new();
+    for q in v.as_arr().ok_or("qos_violations must be an array")? {
+        out.push(QosViolationRecord {
+            t_s: cache::parse_bits(q.get("t").ok_or("violation missing t")?)?,
+            tenant: q.get_str("tenant").ok_or("violation missing tenant")?.to_string(),
+            predicted_p99_s: cache::parse_bits(q.get("p99").ok_or("violation missing p99")?)?,
+            target_s: cache::parse_bits(q.get("target").ok_or("violation missing target")?)?,
+        });
+    }
+    Ok(out)
+}
+
+/// Emit the open-burst bookkeeping map. HashMap order is
+/// nondeterministic; entries sort by tenant id so the same state always
+/// serializes to the same bytes.
+pub(crate) fn json_burst_state(
+    out: &mut String,
+    burst_state: &HashMap<u64, (ArrivalProcess, usize)>,
+) {
+    out.push('[');
+    let mut bursts: Vec<_> = burst_state.iter().collect();
+    bursts.sort_by_key(|(t, _)| **t);
+    for (i, (t, (base, depth))) in bursts.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "{{\"tenant\": \"{t}\", \"depth\": {depth}, \"base\": ");
+        cache::json_arrivals(out, base);
+        out.push('}');
+    }
+    out.push(']');
+}
+
+/// Parse a [`json_burst_state`] list.
+pub(crate) fn parse_burst_state(
+    v: &Json,
+) -> Result<HashMap<u64, (ArrivalProcess, usize)>, String> {
+    let mut out = HashMap::new();
+    for b in v.as_arr().ok_or("burst_state must be an array")? {
+        let tenant = b
+            .get_str("tenant")
+            .ok_or("burst missing tenant")?
+            .parse::<u64>()
+            .map_err(|e| format!("bad burst tenant: {e}"))?;
+        let base = cache::parse_arrivals(b.get("base").ok_or("burst missing base")?)?;
+        out.insert(tenant, (base, snap_usize(b, "depth")?));
+    }
+    Ok(out)
+}
+
+/// Emit a list of between-event interval snapshots (pipelines by name,
+/// floats bit-exact, the degrade overlay active at capture time).
+pub(crate) fn json_interval_snapshots(out: &mut String, snaps: &[IntervalSnapshot]) {
+    out.push('[');
+    for (i, (t, tenants, degrade)) in snaps.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        out.push_str("{\"t\": ");
+        cache::json_bits(out, *t);
+        out.push_str(", \"degrade\": ");
+        cache::json_bits_arr(out, degrade);
+        out.push_str(", \"tenants\": [");
+        for (j, (name, p, d, a)) in tenants.iter().enumerate() {
+            if j > 0 {
+                out.push_str(", ");
+            }
+            out.push_str("{\"name\": ");
+            cache::json_str(out, name);
+            out.push_str(", \"pipeline\": ");
+            cache::json_str(out, &p.name);
+            out.push_str(", \"deployment\": ");
+            cache::json_deployment(out, d);
+            out.push_str(", \"arrivals\": ");
+            cache::json_arrivals(out, a);
+            out.push('}');
+        }
+        out.push_str("]}");
+    }
+    out.push(']');
+}
+
+/// Parse a [`json_interval_snapshots`] list; pipelines resolve by name.
+pub(crate) fn parse_interval_snapshots(
+    v: &Json,
+    pipelines: &[Pipeline],
+) -> Result<Vec<IntervalSnapshot>, String> {
+    let mut out = Vec::new();
+    for s in v.as_arr().ok_or("snapshots must be an array")? {
+        let t = cache::parse_bits(s.get("t").ok_or("interval missing t")?)?;
+        let degrade =
+            cache::parse_bits_arr(s.get("degrade").ok_or("interval missing degrade")?)?;
+        let mut tenants = Vec::new();
+        for tn in s.get("tenants").and_then(Json::as_arr).ok_or("interval missing tenants")? {
+            let pname = tn.get_str("pipeline").ok_or("tenant missing pipeline")?;
+            tenants.push((
+                tn.get_str("name").ok_or("tenant missing name")?.to_string(),
+                resolve_pipeline(pname, pipelines)?,
+                cache::parse_deployment(tn.get("deployment").ok_or("tenant missing deployment")?)?,
+                cache::parse_arrivals(tn.get("arrivals").ok_or("tenant missing arrivals")?)?,
+            ));
+        }
+        out.push((t, tenants, degrade));
+    }
+    Ok(out)
+}
+
+/// Decision string for a degrade event — shared with the cells router so
+/// the single-cell path reproduces the flat decision byte-for-byte.
+pub(crate) fn degrade_summary(applied: &[usize], scale: f64, evicted: &[String]) -> String {
+    format!(
+        "gpudegrade: gpus {applied:?} x{scale:.2} evicted {}",
+        if evicted.is_empty() { "-".to_string() } else { evicted.join(",") }
+    )
+}
+
+/// Resolve a snapshotted pipeline reference: the caller-provided set
+/// first (custom pipelines), then the built-in registry.
+fn resolve_pipeline(name: &str, pipelines: &[Pipeline]) -> Result<Pipeline, String> {
+    pipelines
+        .iter()
+        .find(|p| p.name == name)
+        .cloned()
+        .or_else(|| crate::suite::pipeline_by_name(name))
+        .ok_or_else(|| format!("snapshot references unknown pipeline '{name}'"))
+}
+
+pub(crate) fn snap_usize(v: &Json, key: &str) -> Result<usize, String> {
+    v.get_f64(key).map(|x| x as usize).ok_or_else(|| format!("snapshot missing {key}"))
 }
 
 /// Outcome of the static-partitioning baseline replay.
@@ -1870,6 +2577,10 @@ pub fn static_partition_replay(
                     }
                 }
             }
+            // a partially degraded device still serves its dedicated
+            // tenant — slower, but the baseline never measures latency,
+            // so whole-GPU accounting is unchanged
+            TraceEventKind::GpuDegrade { .. } | TraceEventKind::GpuRestore { .. } => {}
         }
         peak_residents = peak_residents.max(holds.len());
         if !holds.is_empty() {

@@ -33,6 +33,13 @@ pub struct AutoscaleConfig {
     /// replans at a previously seen `(target, holds)` return the cached
     /// — bit-identical — plan instead of re-running the solver.
     pub solve_cache: usize,
+    /// Solve-cache payload ([`SolveCache::to_json`]) to warm-start the
+    /// controller with (the `camelot colocate --cache-load` path).
+    /// Plans are bit-identical warm or cold; only the hit/miss counters
+    /// move. Callers validate the payload up front (e.g. via
+    /// [`SolveCache::from_json`]) — a malformed payload here loads
+    /// nothing, so construction stays infallible.
+    pub warm_cache: Option<String>,
 }
 
 impl Default for AutoscaleConfig {
@@ -43,6 +50,7 @@ impl Default for AutoscaleConfig {
             batch: 32,
             sa: SaParams::default(),
             solve_cache: 256,
+            warm_cache: None,
         }
     }
 }
@@ -74,6 +82,8 @@ pub struct Autoscaler<'a> {
     /// Memoized planner: replans at a previously seen (target, holds)
     /// return the cached solution bit-identically.
     cache: SolveCache,
+    /// Entries [`AutoscaleConfig::warm_cache`] loaded at construction.
+    warm_loaded: usize,
 }
 
 impl<'a> Autoscaler<'a> {
@@ -84,6 +94,10 @@ impl<'a> Autoscaler<'a> {
         config: AutoscaleConfig,
     ) -> Self {
         let cache = SolveCache::new(config.solve_cache);
+        let warm_loaded = match &config.warm_cache {
+            Some(json) => cache.load_json(json).unwrap_or(0),
+            None => 0,
+        };
         Autoscaler {
             pipeline,
             cluster,
@@ -93,6 +107,7 @@ impl<'a> Autoscaler<'a> {
             replans: 0,
             last_reserved: Vec::new(),
             cache,
+            warm_loaded,
         }
     }
 
@@ -108,6 +123,19 @@ impl<'a> Autoscaler<'a> {
     /// Planner solve-cache counters (hits/misses/evictions).
     pub fn cache_stats(&self) -> CacheStats {
         self.cache.stats()
+    }
+
+    /// Entries [`AutoscaleConfig::warm_cache`] loaded at construction
+    /// (0 without a payload).
+    pub fn warm_loaded(&self) -> usize {
+        self.warm_loaded
+    }
+
+    /// The planner-cache contents ([`SolveCache::to_json`]) — the
+    /// `camelot colocate --cache-save` payload a later run warm-starts
+    /// from.
+    pub fn cache_json(&self) -> String {
+        self.cache.to_json()
     }
 
     /// Observe the current offered load; returns a new plan if the
@@ -262,6 +290,10 @@ pub struct ClosedLoopReport {
     /// Planner solve-cache counters of the loop's autoscaler (diurnal
     /// days revisit load levels, so warm epochs hit).
     pub solve_cache: CacheStats,
+    /// The autoscaler's final cache contents ([`SolveCache::to_json`])
+    /// — `camelot colocate --cache-save` persists this for the next
+    /// run's warm start.
+    pub cache_json: String,
 }
 
 impl ClosedLoopReport {
@@ -376,6 +408,7 @@ pub fn run_closed_loop(
         churn_s: churn_total as f64 * cfg.churn_cost_s,
         qos_violations: violations,
         solve_cache: scaler.cache_stats(),
+        cache_json: scaler.cache_json(),
         epochs,
     })
 }

@@ -37,6 +37,7 @@
 //!   pins it), and any cell count is thread-count-deterministic.
 
 use std::collections::HashMap;
+use std::fmt::Write as _;
 
 use crate::config::ClusterSpec;
 use crate::coordinator::admission::{
@@ -45,12 +46,14 @@ use crate::coordinator::admission::{
     ShrinkReport,
 };
 use crate::deploy::gpus_in_use;
+use crate::planner::cache::SolveCache;
 use crate::planner::CacheStats;
-use crate::sim::{ClusterSim, Deployment, SimOptions, Simulator, TenantSpec};
+use crate::sim::{ClusterSim, SimOptions, Simulator, TenantSpec};
 use crate::suite::workload::{
     ArrivalProcess, Priority, TenantTrace, TenantTraceEvent, TraceEventKind,
 };
 use crate::suite::Pipeline;
+use crate::util::json::Json;
 use crate::util::{par, rng};
 
 /// Router configuration: cell count plus the per-cell admission knobs.
@@ -217,6 +220,12 @@ impl CellRouter {
     /// Summed planner-cache counters across every cell.
     pub fn cache_stats(&self) -> CacheStats {
         merge_cache_stats(self.cells.iter().map(|c| c.cache_stats()))
+    }
+
+    /// Summed deadline-degraded plan count across every cell (see
+    /// [`AdmissionController::degraded_plans`]).
+    pub fn degraded_plans(&self) -> usize {
+        self.cells.iter().map(|c| c.degraded_plans()).sum()
     }
 
     fn utilization(&self, c: usize) -> f64 {
@@ -405,6 +414,64 @@ impl CellRouter {
         out
     }
 
+    /// Slow down the listed *global* GPU ids (ECC/thermal degrade),
+    /// routing each to its owning cell
+    /// ([`AdmissionController::degrade_gpus`] semantics per cell,
+    /// QoS-eviction included). Returns `(cell, (applied locals,
+    /// evicted tenants))` pairs in ascending cell order. Same
+    /// single-cell verbatim-forwarding contract as
+    /// [`fail_gpus`](Self::fail_gpus).
+    pub fn degrade_gpus(
+        &mut self,
+        gpu_ids: &[usize],
+        scale: f64,
+    ) -> Vec<(usize, (Vec<usize>, Vec<String>))> {
+        if self.cells.len() == 1 {
+            let rep = self.cells[0].degrade_gpus(gpu_ids, scale);
+            self.purge_assignments(0);
+            return vec![(0, rep)];
+        }
+        let mut per_cell: Vec<Vec<usize>> = vec![Vec::new(); self.cells.len()];
+        for &g in gpu_ids {
+            if let Some((c, local)) = self.locate_gpu(g) {
+                per_cell[c].push(local);
+            }
+        }
+        let mut out = Vec::new();
+        for (c, locals) in per_cell.into_iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            let rep = self.cells[c].degrade_gpus(&locals, scale);
+            self.purge_assignments(c);
+            out.push((c, rep));
+        }
+        out
+    }
+
+    /// Restore the listed *global* GPU ids to full speed; each owning
+    /// cell runs its churn-gated re-pack. Same shape and single-cell
+    /// contract as [`recover_gpus`](Self::recover_gpus).
+    pub fn restore_gpus(&mut self, gpu_ids: &[usize]) -> Vec<(usize, RepackPlan)> {
+        if self.cells.len() == 1 {
+            return vec![(0, self.cells[0].restore_gpus(gpu_ids))];
+        }
+        let mut per_cell: Vec<Vec<usize>> = vec![Vec::new(); self.cells.len()];
+        for &g in gpu_ids {
+            if let Some((c, local)) = self.locate_gpu(g) {
+                per_cell[c].push(local);
+            }
+        }
+        let mut out = Vec::new();
+        for (c, locals) in per_cell.into_iter().enumerate() {
+            if locals.is_empty() {
+                continue;
+            }
+            out.push((c, self.cells[c].restore_gpus(&locals)));
+        }
+        out
+    }
+
     /// Fleet-wide predicted-QoS audit: the per-cell
     /// [`AdmissionController::qos_audit`] results concatenated in cell
     /// order (cells share nothing, so no cross-cell interference term
@@ -542,6 +609,105 @@ impl CellRouter {
         None
     }
 
+    /// Serialize the full router state — placement counters, the
+    /// router-id → (cell, local-id) table, and every per-cell
+    /// controller ([`AdmissionController::state_json`]) — as one JSON
+    /// object with the same bit-exact conventions.
+    /// [`restore_state`](Self::restore_state) inverts it.
+    pub fn state_json(&self) -> String {
+        let mut out = String::new();
+        let _ = write!(
+            out,
+            "{{\"next_id\": \"{}\", \"admitted\": {}, \"rejected\": {}, \"migrations\": {}",
+            self.next_id, self.admitted, self.rejected, self.migrations
+        );
+        out.push_str(", \"assignments\": [");
+        for (i, a) in self.assignments.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "[\"{}\", {}, \"{}\"]", a.router_id, a.cell, a.local_id);
+        }
+        out.push_str("], \"cells\": [");
+        for (i, c) in self.cells.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&c.state_json());
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Rebuild a router from [`state_json`](Self::state_json) output.
+    /// `cluster` and `cfg` are the same inputs the original router was
+    /// built with (configuration, not decisions); the snapshot's cell
+    /// count must match the configuration's.
+    pub fn restore_state(
+        cluster: &ClusterSpec,
+        cfg: CellsConfig,
+        v: &Json,
+        pipelines: &[Pipeline],
+    ) -> Result<CellRouter, String> {
+        let specs = split_cluster(cluster, cfg.cells)?;
+        let cells_v =
+            v.get("cells").and_then(Json::as_arr).ok_or("router snapshot missing cells")?;
+        if cells_v.len() != specs.len() {
+            return Err(format!(
+                "router snapshot has {} cells, configuration wants {}",
+                cells_v.len(),
+                specs.len()
+            ));
+        }
+        let cells = specs
+            .iter()
+            .zip(cells_v)
+            .map(|(s, cv)| {
+                AdmissionController::restore_state(s.clone(), cfg.admission.clone(), cv, pipelines)
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let parse_id = |j: &Json, what: &str| -> Result<u64, String> {
+            j.as_str()
+                .ok_or_else(|| format!("{what} must be a string"))?
+                .parse::<u64>()
+                .map_err(|e| format!("bad {what}: {e}"))
+        };
+        let mut assignments = Vec::new();
+        for av in v
+            .get("assignments")
+            .and_then(Json::as_arr)
+            .ok_or("router snapshot missing assignments")?
+        {
+            let triple = av.as_arr().ok_or("assignment must be a triple")?;
+            if triple.len() != 3 {
+                return Err("assignment must be [router_id, cell, local_id]".to_string());
+            }
+            let cell = triple[1].as_f64().ok_or("assignment cell must be a number")? as usize;
+            if cell >= cells.len() {
+                return Err(format!("assignment references cell {cell} of {}", cells.len()));
+            }
+            assignments.push(Assignment {
+                router_id: parse_id(&triple[0], "router id")?,
+                cell,
+                local_id: parse_id(&triple[2], "local id")?,
+            });
+        }
+        Ok(CellRouter {
+            cfg,
+            specs,
+            cells,
+            assignments,
+            next_id: v
+                .get_str("next_id")
+                .ok_or("router snapshot missing next_id")?
+                .parse::<u64>()
+                .map_err(|e| format!("bad next_id: {e}"))?,
+            admitted: admission::snap_usize(v, "admitted")?,
+            rejected: admission::snap_usize(v, "rejected")?,
+            migrations: admission::snap_usize(v, "migrations")?,
+        })
+    }
+
     /// Test-only: install a hand-built resident directly into `cell`,
     /// registering it with the router (mirrors
     /// `AdmissionController::insert_resident`).
@@ -552,7 +718,7 @@ impl CellRouter {
         name: &str,
         pipeline: &Pipeline,
         allocation: crate::deploy::Allocation,
-        deployment: Deployment,
+        deployment: crate::sim::Deployment,
         plan_qps: f64,
     ) -> u64 {
         let local_id =
@@ -591,6 +757,12 @@ pub struct CellsReplayConfig {
     /// Run the fleet-wide predicted-QoS audit after every event (same
     /// contract as [`ReplayConfig::audit_qos`]: pure observation).
     pub audit_qos: bool,
+    /// Solve-cache payload to warm-start *every* cell's planner cache
+    /// with (same contract as [`ReplayConfig::warm_cache`]: decisions
+    /// are bit-identical warm or cold). Cells plan against disjoint
+    /// sub-cluster specs, so each cell hits only the entries keyed to
+    /// its own shape — sharing one payload is safe.
+    pub warm_cache: Option<String>,
 }
 
 impl Default for CellsReplayConfig {
@@ -601,6 +773,7 @@ impl Default for CellsReplayConfig {
             threads: 0,
             dedup: true,
             audit_qos: false,
+            warm_cache: None,
         }
     }
 }
@@ -619,6 +792,7 @@ impl CellsReplayConfig {
             threads: replay.threads,
             dedup: replay.dedup,
             audit_qos: replay.audit_qos,
+            warm_cache: replay.warm_cache.clone(),
         }
     }
 }
@@ -681,10 +855,7 @@ pub fn replay_trace_cells(
     trace: &TenantTrace,
     cfg: &CellsReplayConfig,
 ) -> Result<CellsReplayReport, String> {
-    let mut router = CellRouter::new(cluster, cfg.router.clone())?;
-    let n_cells = router.num_cells();
-    // trace tenant id -> router resident id
-    let mut resident_ids: Vec<(u64, u64)> = Vec::new();
+    let mut state = CellsReplayState::new(cluster, cfg.clone())?;
     // bursts are expanded (synthesized end events, canonical re-sort)
     // only when present, so burst-free traces replay their event list
     // verbatim — exactly the flat replay's contract
@@ -695,22 +866,106 @@ pub fn replay_trace_cells(
     } else {
         &trace.events
     };
-    let mut events = Vec::with_capacity(trace_events.len());
-    let mut peak_residents = 0usize;
-    let mut repacks_applied = 0usize;
-    let mut repack_regressions = 0usize;
-    let mut qos_violations: Vec<QosViolationRecord> = Vec::new();
-    // trace tenant id -> (pre-burst base arrivals, open burst depth)
-    let mut burst_state: HashMap<u64, (ArrivalProcess, usize)> = HashMap::new();
-    let mut tenant_cells: Vec<(u64, usize)> = Vec::new();
-    type Snapshot = (f64, Vec<(String, Pipeline, Deployment, ArrivalProcess)>);
-    let mut cell_snapshots: Vec<Vec<Snapshot>> = vec![Vec::new(); n_cells];
-    // (cell, cell-local snapshot index) in event-major, cell-minor
-    // order — the merged interval order (= the flat order at 1 cell)
-    let mut snapshot_order: Vec<(usize, usize)> = Vec::new();
-    let mut cell_peaks = vec![0usize; n_cells];
-
     for e in trace_events {
+        state.apply_event(e)?;
+    }
+    state.finish()
+}
+
+/// Incremental form of [`replay_trace_cells`] — the durability seam the
+/// recovery layer drives: [`new`](Self::new) →
+/// [`apply_event`](Self::apply_event) per trace event (each returns the
+/// exact [`ReplayEvent`] a write-ahead log persists) →
+/// [`finish`](Self::finish). [`snapshot_json`](Self::snapshot_json) and
+/// [`restore`](Self::restore) round-trip the full mid-replay state.
+pub struct CellsReplayState {
+    router: CellRouter,
+    cfg: CellsReplayConfig,
+    /// trace tenant id -> router resident id
+    resident_ids: Vec<(u64, u64)>,
+    events: Vec<ReplayEvent>,
+    peak_residents: usize,
+    repacks_applied: usize,
+    repack_regressions: usize,
+    qos_violations: Vec<QosViolationRecord>,
+    /// trace tenant id -> (pre-burst base arrivals, open burst depth)
+    burst_state: HashMap<u64, (ArrivalProcess, usize)>,
+    tenant_cells: Vec<(u64, usize)>,
+    cell_snapshots: Vec<Vec<admission::IntervalSnapshot>>,
+    /// (cell, cell-local snapshot index) in event-major, cell-minor
+    /// order — the merged interval order (= the flat order at 1 cell)
+    snapshot_order: Vec<(usize, usize)>,
+    cell_peaks: Vec<usize>,
+}
+
+impl CellsReplayState {
+    /// Fresh mid-replay state over a newly routed cell fleet.
+    pub fn new(
+        cluster: &ClusterSpec,
+        cfg: CellsReplayConfig,
+    ) -> Result<CellsReplayState, String> {
+        let router = CellRouter::new(cluster, cfg.router.clone())?;
+        let n_cells = router.num_cells();
+        if let Some(json) = &cfg.warm_cache {
+            for c in 0..n_cells {
+                router.cell(c).warm_start_cache(json)?;
+            }
+        }
+        Ok(CellsReplayState {
+            router,
+            cfg,
+            resident_ids: Vec::new(),
+            events: Vec::new(),
+            peak_residents: 0,
+            repacks_applied: 0,
+            repack_regressions: 0,
+            qos_violations: Vec::new(),
+            burst_state: HashMap::new(),
+            tenant_cells: Vec::new(),
+            cell_snapshots: vec![Vec::new(); n_cells],
+            snapshot_order: Vec::new(),
+            cell_peaks: vec![0usize; n_cells],
+        })
+    }
+
+    /// Events applied so far (the recovery layer's WAL cursor).
+    pub fn applied(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Every cell's planner-cache contents merged into one
+    /// [`SolveCache::to_json`] payload (capacity = the per-cell bound ×
+    /// cells, so nothing truncates at save time). Keys embed each
+    /// cell's sub-cluster spec, so entries never collide across cells
+    /// and a reload ([`CellsReplayConfig::warm_cache`]) warm-starts
+    /// each cell with exactly its own entries.
+    pub fn cache_json(&self) -> Result<String, String> {
+        let per_cell = self.cfg.router.admission.solve_cache;
+        let merged = SolveCache::new(per_cell.saturating_mul(self.router.num_cells()).max(1));
+        for c in 0..self.router.num_cells() {
+            merged.load_json(&self.router.cell(c).cache_json())?;
+        }
+        Ok(merged.to_json())
+    }
+
+    /// The decision log so far.
+    pub fn events(&self) -> &[ReplayEvent] {
+        &self.events
+    }
+
+    /// The underlying router (read-only observation).
+    pub fn router(&self) -> &CellRouter {
+        &self.router
+    }
+
+    /// Route one trace event through the cell fleet, returning the
+    /// decision record exactly as [`finish`](Self::finish) will report
+    /// it — and exactly as a write-ahead log persists it.
+    pub fn apply_event(&mut self, e: &TenantTraceEvent) -> Result<ReplayEvent, String> {
+        let n_cells = self.router.num_cells();
+        let router = &mut self.router;
+        let resident_ids = &mut self.resident_ids;
+        let burst_state = &mut self.burst_state;
         let (desc, decision) = match &e.kind {
             TraceEventKind::Arrive { pipeline, name, arrivals, plan_qps, priority } => {
                 let desc = format!("arrive {pipeline} @ {plan_qps:.0} qps");
@@ -719,6 +974,7 @@ pub fn replay_trace_cells(
                 let name = name
                     .clone()
                     .unwrap_or_else(|| format!("{pipeline}#{}", e.tenant));
+                let degraded_before = router.degraded_plans();
                 let decision = match router.try_admit_prio(
                     &name,
                     &p,
@@ -728,13 +984,20 @@ pub fn replay_trace_cells(
                 ) {
                     Ok((id, cell, evicted)) => {
                         resident_ids.push((e.tenant, id));
-                        tenant_cells.push((e.tenant, cell));
+                        self.tenant_cells.push((e.tenant, cell));
+                        // deadline-degraded planning is visible in the
+                        // decision log (same marker as the flat replay)
+                        let mark = if router.degraded_plans() > degraded_before {
+                            " (degraded)"
+                        } else {
+                            ""
+                        };
                         if evicted.is_empty() {
-                            "admitted".to_string()
+                            format!("admitted{mark}")
                         } else {
                             // preempted tenants left the resident set
                             resident_ids.retain(|&(_, rid)| router.is_resident(rid));
-                            format!("admitted; preempted {}", evicted.join(","))
+                            format!("admitted{mark}; preempted {}", evicted.join(","))
                         }
                     }
                     Err(reason) => format!("rejected: {reason}"),
@@ -760,15 +1023,15 @@ pub fn replay_trace_cells(
                         let (_, id) = resident_ids.remove(pos);
                         let out = router.depart(id).expect("resident departs");
                         if out.plan.applied {
-                            repacks_applied += 1;
+                            self.repacks_applied += 1;
                             if out.plan.gpus_after > out.plan.gpus_before {
-                                repack_regressions += 1;
+                                self.repack_regressions += 1;
                             }
                         }
                         let mut decision = out.plan.summary();
                         for m in &out.migrations {
                             if m.donor_repack_applied {
-                                repacks_applied += 1;
+                                self.repacks_applied += 1;
                             }
                             decision.push_str(&format!(
                                 " | migrate '{}' cell {}->{}",
@@ -849,9 +1112,59 @@ pub fn replay_trace_cells(
                 let plans = router.recover_gpus(gpu_ids);
                 for (_, plan) in &plans {
                     if plan.applied {
-                        repacks_applied += 1;
+                        self.repacks_applied += 1;
                         if plan.gpus_after > plan.gpus_before {
-                            repack_regressions += 1;
+                            self.repack_regressions += 1;
+                        }
+                    }
+                }
+                let decision = if n_cells == 1 {
+                    plans[0].1.summary()
+                } else if plans.is_empty() {
+                    "no-op (no owned gpus)".to_string()
+                } else {
+                    plans
+                        .iter()
+                        .map(|(c, p)| format!("cell {c}: {}", p.summary()))
+                        .collect::<Vec<_>>()
+                        .join(" | ")
+                };
+                (desc, decision)
+            }
+            TraceEventKind::GpuDegrade { gpu_ids, scale } => {
+                let desc = format!("gpudegrade {gpu_ids:?} x{scale:.2}");
+                let reports = router.degrade_gpus(gpu_ids, *scale);
+                if reports.iter().any(|(_, (_, ev))| !ev.is_empty()) {
+                    // QoS-evicted tenants leave the id map too
+                    resident_ids.retain(|&(_, rid)| router.is_resident(rid));
+                }
+                let decision = if n_cells == 1 {
+                    let (applied, evicted) = &reports[0].1;
+                    admission::degrade_summary(applied, *scale, evicted)
+                } else if reports.is_empty() {
+                    "no-op (no owned gpus)".to_string()
+                } else {
+                    reports
+                        .iter()
+                        .map(|(c, (applied, evicted))| {
+                            format!(
+                                "cell {c}: {}",
+                                admission::degrade_summary(applied, *scale, evicted)
+                            )
+                        })
+                        .collect::<Vec<_>>()
+                        .join(" | ")
+                };
+                (desc, decision)
+            }
+            TraceEventKind::GpuRestore { gpu_ids } => {
+                let desc = format!("gpurestore {gpu_ids:?}");
+                let plans = router.restore_gpus(gpu_ids);
+                for (_, plan) in &plans {
+                    if plan.applied {
+                        self.repacks_applied += 1;
+                        if plan.gpus_after > plan.gpus_before {
+                            self.repack_regressions += 1;
                         }
                     }
                 }
@@ -869,9 +1182,9 @@ pub fn replay_trace_cells(
                 (desc, decision)
             }
         };
-        if cfg.audit_qos {
+        if self.cfg.audit_qos {
             for (tenant, predicted_p99_s, target_s) in router.qos_audit() {
-                qos_violations.push(QosViolationRecord {
+                self.qos_violations.push(QosViolationRecord {
                     t_s: e.t_s,
                     tenant,
                     predicted_p99_s,
@@ -879,8 +1192,8 @@ pub fn replay_trace_cells(
                 });
             }
         }
-        peak_residents = peak_residents.max(router.residents_total());
-        events.push(ReplayEvent {
+        self.peak_residents = self.peak_residents.max(router.residents_total());
+        let ev = ReplayEvent {
             t_s: e.t_s,
             tenant: e.tenant,
             desc,
@@ -888,12 +1201,13 @@ pub fn replay_trace_cells(
             residents: router.residents_total(),
             gpus_in_use: router.gpus_in_use(),
             usage: router.total_usage(),
-        });
+        };
+        self.events.push(ev.clone());
         for c in 0..n_cells {
             let residents = router.cell(c).residents();
-            cell_peaks[c] = cell_peaks[c].max(residents.len());
+            self.cell_peaks[c] = self.cell_peaks[c].max(residents.len());
             if !residents.is_empty() {
-                cell_snapshots[c].push((
+                self.cell_snapshots[c].push((
                     e.t_s,
                     residents
                         .iter()
@@ -906,178 +1220,381 @@ pub fn replay_trace_cells(
                             )
                         })
                         .collect(),
+                    // the degrade overlay this cell's intervals must
+                    // simulate under (degrade events mutate it mid-trace)
+                    router.cell(c).cluster().degrade.clone(),
                 ));
-                snapshot_order.push((c, cell_snapshots[c].len() - 1));
+                self.snapshot_order.push((c, self.cell_snapshots[c].len() - 1));
             }
         }
+        Ok(ev)
     }
 
-    // phase 2: per-cell content-addressed dedup and seed assignment,
-    // sequential (same scheme as the flat replay, per cell), then the
-    // two-level cell × interval fan. Seeds derive from the cell index
-    // and the cell-local first-occurrence snapshot index only, so the
-    // fan split never touches results.
-    let threads = if cfg.threads == 0 { par::max_threads() } else { cfg.threads };
-    let seed = cfg.router.admission.seed;
-    let queries = cfg.queries;
-    struct CellPlan {
-        /// (cell-local snapshot index providing the content, sim seed)
-        jobs: Vec<(usize, u64)>,
-        /// per cell-local snapshot: index of the job measuring it
-        measure_by: Vec<usize>,
-    }
-    let mut cell_plans: Vec<CellPlan> = Vec::with_capacity(n_cells);
-    for (c, snaps) in cell_snapshots.iter().enumerate() {
-        let cell_seed = rng::mix_seed(seed, c as u64);
-        let mut jobs: Vec<(usize, u64)> = Vec::with_capacity(snaps.len());
-        let mut measure_by: Vec<usize> = Vec::with_capacity(snaps.len());
-        let mut seen: HashMap<String, (usize, usize)> = HashMap::new();
-        for (idx, (_, tenants)) in snaps.iter().enumerate() {
-            let key = admission::interval_fingerprint(tenants, queries);
-            match seen.get(&key) {
-                Some(&(_, job)) if cfg.dedup => measure_by.push(job),
-                Some(&(owner, _)) => {
-                    jobs.push((idx, rng::mix_seed(cell_seed, owner as u64)));
-                    measure_by.push(jobs.len() - 1);
-                }
-                None => {
-                    jobs.push((idx, rng::mix_seed(cell_seed, idx as u64)));
-                    let job = jobs.len() - 1;
-                    seen.insert(key, (idx, job));
-                    measure_by.push(job);
+    /// Shard the recorded interval snapshots by cell, simulate them, and
+    /// merge the fleet-level report (phase 2). Consumes the state.
+    pub fn finish(self) -> Result<CellsReplayReport, String> {
+        let cfg = &self.cfg;
+        let router = &self.router;
+        let n_cells = router.num_cells();
+        let cell_snapshots = &self.cell_snapshots;
+        // phase 2: per-cell content-addressed dedup and seed assignment,
+        // sequential (same scheme as the flat replay, per cell), then the
+        // two-level cell × interval fan. Seeds derive from the cell index
+        // and the cell-local first-occurrence snapshot index only, so the
+        // fan split never touches results.
+        let threads = if cfg.threads == 0 { par::max_threads() } else { cfg.threads };
+        let seed = cfg.router.admission.seed;
+        let queries = cfg.queries;
+        struct CellPlan {
+            /// (cell-local snapshot index providing the content, sim seed)
+            jobs: Vec<(usize, u64)>,
+            /// per cell-local snapshot: index of the job measuring it
+            measure_by: Vec<usize>,
+        }
+        let mut cell_plans: Vec<CellPlan> = Vec::with_capacity(n_cells);
+        for (c, snaps) in cell_snapshots.iter().enumerate() {
+            let cell_seed = rng::mix_seed(seed, c as u64);
+            let mut jobs: Vec<(usize, u64)> = Vec::with_capacity(snaps.len());
+            let mut measure_by: Vec<usize> = Vec::with_capacity(snaps.len());
+            let mut seen: HashMap<String, (usize, usize)> = HashMap::new();
+            for (idx, (_, tenants, degrade)) in snaps.iter().enumerate() {
+                let key = admission::interval_fingerprint(tenants, queries, degrade);
+                match seen.get(&key) {
+                    Some(&(_, job)) if cfg.dedup => measure_by.push(job),
+                    Some(&(owner, _)) => {
+                        jobs.push((idx, rng::mix_seed(cell_seed, owner as u64)));
+                        measure_by.push(jobs.len() - 1);
+                    }
+                    None => {
+                        jobs.push((idx, rng::mix_seed(cell_seed, idx as u64)));
+                        let job = jobs.len() - 1;
+                        seen.insert(key, (idx, job));
+                        measure_by.push(job);
+                    }
                 }
             }
+            cell_plans.push(CellPlan { jobs, measure_by });
         }
-        cell_plans.push(CellPlan { jobs, measure_by });
-    }
-    let intervals_simulated: usize = cell_plans.iter().map(|p| p.jobs.len()).sum();
+        let intervals_simulated: usize = cell_plans.iter().map(|p| p.jobs.len()).sum();
 
-    let cell_specs: Vec<ClusterSpec> =
-        (0..n_cells).map(|c| router.cell_spec(c).clone()).collect();
-    let (outer, inner) = par::split_budget(threads, n_cells);
-    let cell_ids: Vec<usize> = (0..n_cells).collect();
-    let sims: Vec<Vec<Result<(Vec<f64>, Vec<f64>), String>>> =
-        par::par_map_threads(&cell_ids, outer, |_, &c| {
-            let snaps = &cell_snapshots[c];
-            let cell_cluster = &cell_specs[c];
-            par::par_map_threads(&cell_plans[c].jobs, inner, |_, &(snap_idx, sim_seed)| {
-                let (_, tenants) = &snaps[snap_idx];
-                let opts = SimOptions { seed: sim_seed, queries, ..Default::default() };
-                // degenerate fast path, same contract as the flat replay
-                if let [(_, p, d, ArrivalProcess::Constant { rate_qps })] =
-                    tenants.as_slice()
-                {
-                    let report = Simulator::new(p, cell_cluster, d, opts)
-                        .run(*rate_qps)
+        let cell_specs: Vec<ClusterSpec> =
+            (0..n_cells).map(|c| router.cell_spec(c).clone()).collect();
+        let (outer, inner) = par::split_budget(threads, n_cells);
+        let cell_ids: Vec<usize> = (0..n_cells).collect();
+        let sims: Vec<Vec<Result<(Vec<f64>, Vec<f64>), String>>> =
+            par::par_map_threads(&cell_ids, outer, |_, &c| {
+                let snaps = &cell_snapshots[c];
+                let cell_cluster = &cell_specs[c];
+                par::par_map_threads(&cell_plans[c].jobs, inner, |_, &(snap_idx, sim_seed)| {
+                    let (_, tenants, degrade) = &snaps[snap_idx];
+                    let opts = SimOptions { seed: sim_seed, queries, ..Default::default() };
+                    // simulate under the degrade overlay active when the
+                    // interval was captured (borrow the pristine cell
+                    // spec on the healthy fast path)
+                    let owned;
+                    let cl: &ClusterSpec = if *degrade == cell_cluster.degrade {
+                        cell_cluster
+                    } else {
+                        owned = ClusterSpec {
+                            degrade: degrade.clone(),
+                            ..cell_cluster.clone()
+                        };
+                        &owned
+                    };
+                    // degenerate fast path, same contract as the flat replay
+                    if let [(_, p, d, ArrivalProcess::Constant { rate_qps })] =
+                        tenants.as_slice()
+                    {
+                        let report = Simulator::new(p, cl, d, opts)
+                            .run(*rate_qps)
+                            .map_err(|e| format!("cell {c} interval {snap_idx}: {e}"))?;
+                        return Ok((vec![report.p99()], report.kv_peak_bytes));
+                    }
+                    let specs: Vec<TenantSpec> = tenants
+                        .iter()
+                        .map(|(_, p, d, a)| TenantSpec {
+                            pipeline: p,
+                            deployment: d,
+                            arrivals: a.clone(),
+                        })
+                        .collect();
+                    let reports = ClusterSim::new(cl, specs, opts)
+                        .run()
                         .map_err(|e| format!("cell {c} interval {snap_idx}: {e}"))?;
-                    return Ok((vec![report.p99()], report.kv_peak_bytes));
+                    let kv = reports
+                        .first()
+                        .map(|r| r.kv_peak_bytes.clone())
+                        .unwrap_or_default();
+                    Ok((reports.iter().map(|r| r.p99()).collect(), kv))
+                })
+            });
+        let mut p99_tables: Vec<Vec<Vec<f64>>> = Vec::with_capacity(n_cells);
+        // cluster-wide per-GPU peak KV residency: cell-local GPU indices
+        // map to contiguous global ranges in cell order (the split_cluster
+        // layout), so cell c's vector lands at offset Σ_{c'<c} num_gpus
+        let total_gpus: usize = cell_specs.iter().map(|s| s.num_gpus).sum();
+        let mut kv_peak_bytes = vec![0.0f64; total_gpus];
+        let mut cell_offset = 0usize;
+        for (c, cell_sims) in sims.into_iter().enumerate() {
+            let tables = cell_sims.into_iter().collect::<Result<Vec<_>, _>>()?;
+            let mut p99_only = Vec::with_capacity(tables.len());
+            for (p99s, kv) in tables {
+                for (g, &v) in kv.iter().enumerate() {
+                    let slot = &mut kv_peak_bytes[cell_offset + g];
+                    if v > *slot {
+                        *slot = v;
+                    }
                 }
-                let specs: Vec<TenantSpec> = tenants
-                    .iter()
-                    .map(|(_, p, d, a)| TenantSpec {
-                        pipeline: p,
-                        deployment: d,
-                        arrivals: a.clone(),
-                    })
-                    .collect();
-                let reports = ClusterSim::new(cell_cluster, specs, opts)
-                    .run()
-                    .map_err(|e| format!("cell {c} interval {snap_idx}: {e}"))?;
-                let kv = reports
-                    .first()
-                    .map(|r| r.kv_peak_bytes.clone())
-                    .unwrap_or_default();
-                Ok((reports.iter().map(|r| r.p99()).collect(), kv))
-            })
-        });
-    let mut p99_tables: Vec<Vec<Vec<f64>>> = Vec::with_capacity(n_cells);
-    // cluster-wide per-GPU peak KV residency: cell-local GPU indices
-    // map to contiguous global ranges in cell order (the split_cluster
-    // layout), so cell c's vector lands at offset Σ_{c'<c} num_gpus
-    let total_gpus: usize = cell_specs.iter().map(|s| s.num_gpus).sum();
-    let mut kv_peak_bytes = vec![0.0f64; total_gpus];
-    let mut cell_offset = 0usize;
-    for (c, cell_sims) in sims.into_iter().enumerate() {
-        let tables = cell_sims.into_iter().collect::<Result<Vec<_>, _>>()?;
-        let mut p99_only = Vec::with_capacity(tables.len());
-        for (p99s, kv) in tables {
-            for (g, &v) in kv.iter().enumerate() {
-                let slot = &mut kv_peak_bytes[cell_offset + g];
-                if v > *slot {
-                    *slot = v;
-                }
+                p99_only.push(p99s);
             }
-            p99_only.push(p99s);
+            p99_tables.push(p99_only);
+            cell_offset += cell_specs[c].num_gpus;
         }
-        p99_tables.push(p99_only);
-        cell_offset += cell_specs[c].num_gpus;
+
+        let intervals: Vec<IntervalReport> = self
+            .snapshot_order
+            .iter()
+            .map(|&(c, local_idx)| {
+                let (t_start, tenants, _) = &cell_snapshots[c][local_idx];
+                let job = cell_plans[c].measure_by[local_idx];
+                let p99_s: Vec<f64> = p99_tables[c][job].clone();
+                let qos_met: Vec<bool> = tenants
+                    .iter()
+                    .zip(&p99_s)
+                    .map(|((_, p, _, _), &x)| x <= p.qos_target_s)
+                    .collect();
+                IntervalReport {
+                    t_start_s: *t_start,
+                    tenants: tenants.iter().map(|(n, _, _, _)| n.clone()).collect(),
+                    p99_s,
+                    qos_met,
+                }
+            })
+            .collect();
+
+        let with_gpus: Vec<usize> = self
+            .events
+            .iter()
+            .filter(|e| e.residents > 0)
+            .map(|e| e.gpus_in_use)
+            .collect();
+        let mean_gpus_in_use = if with_gpus.is_empty() {
+            0.0
+        } else {
+            with_gpus.iter().sum::<usize>() as f64 / with_gpus.len() as f64
+        };
+        let per_cell: Vec<CellReplayStats> = (0..n_cells)
+            .map(|c| CellReplayStats {
+                cell: c,
+                gpus: cell_specs[c].num_gpus,
+                admitted: router.cell(c).admitted(),
+                rejected: router.cell(c).rejected(),
+                peak_residents: self.cell_peaks[c],
+                intervals: cell_snapshots[c].len(),
+                intervals_simulated: cell_plans[c].jobs.len(),
+                solve_cache: router.cell(c).cache_stats(),
+            })
+            .collect();
+        Ok(CellsReplayReport {
+            cells: n_cells,
+            merged: ReplayReport {
+                admitted: router.admitted(),
+                rejected: router.rejected(),
+                repacks_applied: self.repacks_applied,
+                peak_residents: self.peak_residents,
+                mean_gpus_in_use,
+                events: self.events,
+                intervals,
+                intervals_simulated,
+                solve_cache: router.cache_stats(),
+                qos_violations: self.qos_violations,
+                repack_regressions: self.repack_regressions,
+                // per-class occupancy is a flat-replay breakdown; the
+                // sharded replay reports per-cell stats instead
+                class_utilization: Vec::new(),
+                kv_peak_bytes,
+            },
+            per_cell,
+            migrations: router.migrations(),
+            tenant_cells: self.tenant_cells,
+        })
+    }
+}
+
+impl CellsReplayState {
+    /// Serialize the full phase-1 state — router (every per-cell
+    /// controller included), tenant-id and tenant→cell maps, decision
+    /// log, burst bookkeeping, and the per-cell interval snapshots with
+    /// their degrade overlays — as one JSON object, using the same
+    /// bit-exact conventions as
+    /// [`AdmissionController::state_json`]. This is what a periodic
+    /// durability snapshot persists for a sharded replay;
+    /// [`restore`](Self::restore) inverts it.
+    pub fn snapshot_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\"router\": ");
+        out.push_str(&self.router.state_json());
+        out.push_str(", \"resident_ids\": [");
+        for (i, (t, id)) in self.resident_ids.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "[\"{t}\", \"{id}\"]");
+        }
+        out.push_str("], \"tenant_cells\": [");
+        for (i, (t, c)) in self.tenant_cells.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "[\"{t}\", {c}]");
+        }
+        let _ = write!(
+            out,
+            "], \"peak_residents\": {}, \"repacks_applied\": {}, \
+             \"repack_regressions\": {}",
+            self.peak_residents, self.repacks_applied, self.repack_regressions
+        );
+        out.push_str(", \"cell_peaks\": [");
+        for (i, p) in self.cell_peaks.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "{p}");
+        }
+        out.push_str("], \"qos_violations\": ");
+        admission::json_qos_violations(&mut out, &self.qos_violations);
+        out.push_str(", \"burst_state\": ");
+        admission::json_burst_state(&mut out, &self.burst_state);
+        out.push_str(", \"events\": ");
+        admission::json_replay_events(&mut out, &self.events);
+        out.push_str(", \"snapshot_order\": [");
+        for (i, (c, idx)) in self.snapshot_order.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            let _ = write!(out, "[{c}, {idx}]");
+        }
+        out.push_str("], \"cell_snapshots\": [");
+        for (i, snaps) in self.cell_snapshots.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            admission::json_interval_snapshots(&mut out, snaps);
+        }
+        out.push_str("]}");
+        out
     }
 
-    let intervals: Vec<IntervalReport> = snapshot_order
-        .iter()
-        .map(|&(c, local_idx)| {
-            let (t_start, tenants) = &cell_snapshots[c][local_idx];
-            let job = cell_plans[c].measure_by[local_idx];
-            let p99_s: Vec<f64> = p99_tables[c][job].clone();
-            let qos_met: Vec<bool> = tenants
-                .iter()
-                .zip(&p99_s)
-                .map(|((_, p, _, _), &x)| x <= p.qos_target_s)
-                .collect();
-            IntervalReport {
-                t_start_s: *t_start,
-                tenants: tenants.iter().map(|(n, _, _, _)| n.clone()).collect(),
-                p99_s,
-                qos_met,
+    /// Rebuild a mid-replay state from
+    /// [`snapshot_json`](Self::snapshot_json) output. `cluster` and
+    /// `cfg` are the same inputs the original replay started with;
+    /// pipelines resolve by name from `pipelines` with the registry as
+    /// fallback. Applying the remaining trace events reconverges
+    /// bit-identically with the uninterrupted replay — the same
+    /// recovery contract as the flat
+    /// [`ReplayState`](admission::ReplayState).
+    pub fn restore(
+        cluster: &ClusterSpec,
+        cfg: CellsReplayConfig,
+        v: &Json,
+        pipelines: &[Pipeline],
+    ) -> Result<CellsReplayState, String> {
+        let mut st = CellsReplayState::new(cluster, cfg)?;
+        let n_cells = st.router.num_cells();
+        st.router = CellRouter::restore_state(
+            cluster,
+            st.cfg.router.clone(),
+            v.get("router").ok_or("snapshot missing router")?,
+            pipelines,
+        )?;
+        let parse_id = |j: &Json, what: &str| -> Result<u64, String> {
+            j.as_str()
+                .ok_or_else(|| format!("{what} must be a string"))?
+                .parse::<u64>()
+                .map_err(|e| format!("bad {what}: {e}"))
+        };
+        for pair in v
+            .get("resident_ids")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot missing resident_ids")?
+        {
+            let pair = pair.as_arr().ok_or("resident_ids entry must be a pair")?;
+            if pair.len() != 2 {
+                return Err("resident_ids entry must be a pair".to_string());
             }
-        })
-        .collect();
-
-    let with_gpus: Vec<usize> = events
-        .iter()
-        .filter(|e| e.residents > 0)
-        .map(|e| e.gpus_in_use)
-        .collect();
-    let mean_gpus_in_use = if with_gpus.is_empty() {
-        0.0
-    } else {
-        with_gpus.iter().sum::<usize>() as f64 / with_gpus.len() as f64
-    };
-    let per_cell: Vec<CellReplayStats> = (0..n_cells)
-        .map(|c| CellReplayStats {
-            cell: c,
-            gpus: cell_specs[c].num_gpus,
-            admitted: router.cell(c).admitted(),
-            rejected: router.cell(c).rejected(),
-            peak_residents: cell_peaks[c],
-            intervals: cell_snapshots[c].len(),
-            intervals_simulated: cell_plans[c].jobs.len(),
-            solve_cache: router.cell(c).cache_stats(),
-        })
-        .collect();
-    Ok(CellsReplayReport {
-        cells: n_cells,
-        merged: ReplayReport {
-            admitted: router.admitted(),
-            rejected: router.rejected(),
-            repacks_applied,
-            peak_residents,
-            mean_gpus_in_use,
-            events,
-            intervals,
-            intervals_simulated,
-            solve_cache: router.cache_stats(),
-            qos_violations,
-            repack_regressions,
-            // per-class occupancy is a flat-replay breakdown; the
-            // sharded replay reports per-cell stats instead
-            class_utilization: Vec::new(),
-            kv_peak_bytes,
-        },
-        per_cell,
-        migrations: router.migrations(),
-        tenant_cells,
-    })
+            st.resident_ids
+                .push((parse_id(&pair[0], "trace id")?, parse_id(&pair[1], "resident id")?));
+        }
+        for pair in v
+            .get("tenant_cells")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot missing tenant_cells")?
+        {
+            let pair = pair.as_arr().ok_or("tenant_cells entry must be a pair")?;
+            if pair.len() != 2 {
+                return Err("tenant_cells entry must be a pair".to_string());
+            }
+            let cell = pair[1].as_f64().ok_or("tenant cell must be a number")? as usize;
+            if cell >= n_cells {
+                return Err(format!("tenant_cells references cell {cell} of {n_cells}"));
+            }
+            st.tenant_cells.push((parse_id(&pair[0], "trace id")?, cell));
+        }
+        st.peak_residents = admission::snap_usize(v, "peak_residents")?;
+        st.repacks_applied = admission::snap_usize(v, "repacks_applied")?;
+        st.repack_regressions = admission::snap_usize(v, "repack_regressions")?;
+        st.cell_peaks = v
+            .get("cell_peaks")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot missing cell_peaks")?
+            .iter()
+            .map(|x| {
+                x.as_f64()
+                    .map(|f| f as usize)
+                    .ok_or_else(|| "cell_peaks entry must be a number".to_string())
+            })
+            .collect::<Result<Vec<_>, _>>()?;
+        if st.cell_peaks.len() != n_cells {
+            return Err("cell_peaks length mismatch".to_string());
+        }
+        st.qos_violations = admission::parse_qos_violations(
+            v.get("qos_violations").ok_or("snapshot missing qos_violations")?,
+        )?;
+        st.burst_state = admission::parse_burst_state(
+            v.get("burst_state").ok_or("snapshot missing burst_state")?,
+        )?;
+        st.events =
+            admission::parse_replay_events(v.get("events").ok_or("snapshot missing events")?)?;
+        let mut cell_snapshots = Vec::with_capacity(n_cells);
+        for snaps in v
+            .get("cell_snapshots")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot missing cell_snapshots")?
+        {
+            cell_snapshots.push(admission::parse_interval_snapshots(snaps, pipelines)?);
+        }
+        if cell_snapshots.len() != n_cells {
+            return Err("cell_snapshots length mismatch".to_string());
+        }
+        st.cell_snapshots = cell_snapshots;
+        for pair in v
+            .get("snapshot_order")
+            .and_then(Json::as_arr)
+            .ok_or("snapshot missing snapshot_order")?
+        {
+            let pair = pair.as_arr().ok_or("snapshot_order entry must be a pair")?;
+            if pair.len() != 2 {
+                return Err("snapshot_order entry must be a pair".to_string());
+            }
+            let c = pair[0].as_f64().ok_or("snapshot_order cell must be a number")? as usize;
+            let idx = pair[1].as_f64().ok_or("snapshot_order index must be a number")? as usize;
+            if c >= n_cells || idx >= st.cell_snapshots[c].len() {
+                return Err(format!("snapshot_order entry ({c}, {idx}) out of range"));
+            }
+            st.snapshot_order.push((c, idx));
+        }
+        Ok(st)
+    }
 }
 
 #[cfg(test)]
@@ -1085,7 +1602,7 @@ mod tests {
     use super::*;
     use crate::comm::CommMode;
     use crate::deploy::Allocation;
-    use crate::sim::InstancePlacement;
+    use crate::sim::{Deployment, InstancePlacement};
     use crate::suite::real;
 
     #[test]

@@ -22,15 +22,20 @@ pub mod autoscale;
 pub mod backend;
 pub mod batcher;
 pub mod cells;
+pub mod recovery;
 
 pub use admission::{
     replay_trace, static_partition_replay, AdmissionConfig, AdmissionController,
     GpuFailReport, QosViolationRecord, RejectReason, RepackPlan, ReplayConfig,
-    ReplayReport, ShrinkReport,
+    ReplayReport, ReplayState, ShrinkReport,
 };
 pub use cells::{
     replay_trace_cells, split_cluster, CellMigration, CellReplayStats, CellRouter,
-    CellsConfig, CellsReplayConfig, CellsReplayReport, DepartOutcome,
+    CellsConfig, CellsReplayConfig, CellsReplayReport, CellsReplayState, DepartOutcome,
+};
+pub use recovery::{
+    recover, recover_cells, replay_durable, replay_durable_cells, verify_crash_recovery,
+    verify_crash_recovery_cells, DirStore, MemStore, WalStore,
 };
 pub use autoscale::{
     run_closed_loop, AutoscaleConfig, Autoscaler, ClosedLoopReport, EpochLoopConfig,

@@ -1,0 +1,715 @@
+//! Durable control plane: write-ahead logging and periodic snapshots
+//! for the trace-replay coordinator, with crash recovery that
+//! reconverges *bit-identically* with the uninterrupted replay.
+//!
+//! The design leans on the replay's own determinism contract: phase-1
+//! decisions are a pure function of `(trace, cfg, controller state)`,
+//! so durability only has to persist (a) every accepted decision — one
+//! WAL record per event, appended through [`WalStore::append_event`] —
+//! and (b) a periodic [`ReplayState::snapshot_json`] /
+//! [`CellsReplayState::snapshot_json`] checkpoint. Recovery restores
+//! the latest snapshot (or a fresh state when none exists), re-applies
+//! the trace tail, and *verifies* each re-derived decision against the
+//! logged record — any divergence is a determinism bug and recovery
+//! fails loudly rather than silently forking history. The crash
+//! golden suite and the fuzzer's `--crash` invariant kill the
+//! controller at every event boundary and pin
+//! [`ReplayReport::fingerprint`] equality.
+//!
+//! WAL format: one JSON object per line,
+//! `{"seq": N, "event": {...}}`, where the event body is the bit-exact
+//! [`ReplayEvent`] encoding (`t`/`usage` as [`f64::to_bits`] hex, the
+//! tenant id as a decimal string). Snapshots are whole-state JSON
+//! documents named `snapshot-NNNNNN.json` (event count, zero-padded) so
+//! the latest sorts last lexicographically. Solve-cache contents ride
+//! inside the controller snapshot, so a recovered controller re-plans
+//! warm.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::config::ClusterSpec;
+use crate::suite::workload::{TenantTrace, TenantTraceEvent};
+use crate::suite::Pipeline;
+use crate::util::json::Json;
+
+use super::admission::{
+    self, replay_trace, ReplayConfig, ReplayEvent, ReplayReport, ReplayState,
+};
+use super::cells::{
+    replay_trace_cells, CellsReplayConfig, CellsReplayReport, CellsReplayState,
+};
+
+// ---------------------------------------------------------------------
+// Stores
+// ---------------------------------------------------------------------
+
+/// Where the WAL and snapshots live. [`MemStore`] backs tests and the
+/// fuzzer's crash invariant (no filesystem in the hot loop);
+/// [`DirStore`] is what `camelot admit --wal DIR` persists through.
+pub trait WalStore {
+    /// Append one WAL record (a single line, no trailing newline).
+    fn append_event(&mut self, line: &str) -> Result<(), String>;
+    /// Persist a snapshot taken after `applied` events.
+    fn write_snapshot(&mut self, applied: usize, json: &str) -> Result<(), String>;
+    /// The most recent snapshot, as `(applied, json)`.
+    fn latest_snapshot(&self) -> Result<Option<(usize, String)>, String>;
+    /// Every WAL record, in append order.
+    fn wal_lines(&self) -> Result<Vec<String>, String>;
+}
+
+/// In-memory [`WalStore`] — the crash-injection harness's store.
+#[derive(Debug, Clone, Default)]
+pub struct MemStore {
+    /// WAL records in append order.
+    pub wal: Vec<String>,
+    /// `(applied, json)` snapshots in write order.
+    pub snapshots: Vec<(usize, String)>,
+}
+
+impl MemStore {
+    /// An empty store.
+    pub fn new() -> MemStore {
+        MemStore::default()
+    }
+}
+
+impl WalStore for MemStore {
+    fn append_event(&mut self, line: &str) -> Result<(), String> {
+        self.wal.push(line.to_string());
+        Ok(())
+    }
+
+    fn write_snapshot(&mut self, applied: usize, json: &str) -> Result<(), String> {
+        self.snapshots.push((applied, json.to_string()));
+        Ok(())
+    }
+
+    fn latest_snapshot(&self) -> Result<Option<(usize, String)>, String> {
+        Ok(self
+            .snapshots
+            .iter()
+            .max_by_key(|(applied, _)| *applied)
+            .map(|(applied, json)| (*applied, json.clone())))
+    }
+
+    fn wal_lines(&self) -> Result<Vec<String>, String> {
+        Ok(self.wal.clone())
+    }
+}
+
+/// Filesystem [`WalStore`]: `DIR/wal.log` plus
+/// `DIR/snapshot-NNNNNN.json` checkpoints.
+#[derive(Debug, Clone)]
+pub struct DirStore {
+    dir: PathBuf,
+}
+
+impl DirStore {
+    /// Open (creating if missing) a WAL directory.
+    pub fn open(dir: &Path) -> Result<DirStore, String> {
+        fs::create_dir_all(dir)
+            .map_err(|e| format!("cannot create WAL dir {}: {e}", dir.display()))?;
+        Ok(DirStore { dir: dir.to_path_buf() })
+    }
+
+    /// Path of the append-only log file.
+    pub fn wal_path(&self) -> PathBuf {
+        self.dir.join("wal.log")
+    }
+
+    fn snapshot_path(&self, applied: usize) -> PathBuf {
+        self.dir.join(format!("snapshot-{applied:06}.json"))
+    }
+}
+
+impl WalStore for DirStore {
+    fn append_event(&mut self, line: &str) -> Result<(), String> {
+        let path = self.wal_path();
+        let mut f = fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&path)
+            .map_err(|e| format!("cannot open {}: {e}", path.display()))?;
+        writeln!(f, "{line}").map_err(|e| format!("cannot append to {}: {e}", path.display()))
+    }
+
+    fn write_snapshot(&mut self, applied: usize, json: &str) -> Result<(), String> {
+        let path = self.snapshot_path(applied);
+        fs::write(&path, json).map_err(|e| format!("cannot write {}: {e}", path.display()))
+    }
+
+    fn latest_snapshot(&self) -> Result<Option<(usize, String)>, String> {
+        let entries = fs::read_dir(&self.dir)
+            .map_err(|e| format!("cannot read WAL dir {}: {e}", self.dir.display()))?;
+        let mut best: Option<usize> = None;
+        for entry in entries {
+            let entry = entry.map_err(|e| format!("cannot read WAL dir entry: {e}"))?;
+            let name = entry.file_name();
+            let name = name.to_string_lossy();
+            if let Some(n) = name
+                .strip_prefix("snapshot-")
+                .and_then(|s| s.strip_suffix(".json"))
+                .and_then(|s| s.parse::<usize>().ok())
+            {
+                best = Some(best.map_or(n, |b| b.max(n)));
+            }
+        }
+        match best {
+            None => Ok(None),
+            Some(applied) => {
+                let path = self.snapshot_path(applied);
+                let json = fs::read_to_string(&path)
+                    .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+                Ok(Some((applied, json)))
+            }
+        }
+    }
+
+    fn wal_lines(&self) -> Result<Vec<String>, String> {
+        match fs::read_to_string(self.wal_path()) {
+            Ok(text) => Ok(text
+                .lines()
+                .filter(|l| !l.trim().is_empty())
+                .map(str::to_string)
+                .collect()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(Vec::new()),
+            Err(e) => Err(format!("cannot read {}: {e}", self.wal_path().display())),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// WAL records
+// ---------------------------------------------------------------------
+
+fn wal_line(seq: usize, ev: &ReplayEvent) -> String {
+    let mut out = String::with_capacity(192);
+    out.push_str("{\"seq\": ");
+    out.push_str(&seq.to_string());
+    out.push_str(", \"event\": ");
+    admission::json_replay_event(&mut out, ev);
+    out.push('}');
+    out
+}
+
+fn parse_wal_line(line: &str) -> Result<(usize, ReplayEvent), String> {
+    let v = Json::parse(line).map_err(|e| format!("bad WAL record: {e}"))?;
+    let seq = v.get_f64("seq").ok_or("WAL record missing seq")? as usize;
+    let ev = admission::parse_replay_event(v.get("event").ok_or("WAL record missing event")?)?;
+    Ok((seq, ev))
+}
+
+/// The event list a replay walks: burst traces expand synthesized end
+/// events, burst-free traces replay verbatim — identical to what
+/// [`replay_trace`] / [`replay_trace_cells`] iterate, so WAL sequence
+/// numbers index into this list one-to-one.
+pub fn trace_event_list(trace: &TenantTrace) -> Vec<TenantTraceEvent> {
+    if trace.has_bursts() {
+        trace.expanded_events()
+    } else {
+        trace.events.clone()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Generic driver over the flat / cells replay seams
+// ---------------------------------------------------------------------
+
+/// The incremental-replay surface durability drives — implemented by
+/// the flat [`ReplayState`] and the sharded [`CellsReplayState`], so
+/// the WAL/snapshot/recover logic exists exactly once.
+trait DurableState: Sized {
+    type Cfg: Clone;
+    type Report;
+    fn fresh(cluster: &ClusterSpec, cfg: Self::Cfg) -> Result<Self, String>;
+    fn restore_from(
+        cluster: &ClusterSpec,
+        cfg: Self::Cfg,
+        v: &Json,
+        pipelines: &[Pipeline],
+    ) -> Result<Self, String>;
+    fn apply(&mut self, e: &TenantTraceEvent) -> Result<ReplayEvent, String>;
+    fn position(&self) -> usize;
+    fn logged(&self) -> &[ReplayEvent];
+    fn snapshot(&self) -> String;
+    fn complete(self) -> Result<Self::Report, String>;
+}
+
+impl DurableState for ReplayState {
+    type Cfg = ReplayConfig;
+    type Report = ReplayReport;
+
+    fn fresh(cluster: &ClusterSpec, cfg: ReplayConfig) -> Result<ReplayState, String> {
+        let state = ReplayState::new(cluster, cfg);
+        state.warm_start()?;
+        Ok(state)
+    }
+
+    fn restore_from(
+        cluster: &ClusterSpec,
+        cfg: ReplayConfig,
+        v: &Json,
+        pipelines: &[Pipeline],
+    ) -> Result<ReplayState, String> {
+        ReplayState::restore(cluster, cfg, v, pipelines)
+    }
+
+    fn apply(&mut self, e: &TenantTraceEvent) -> Result<ReplayEvent, String> {
+        self.apply_event(e)
+    }
+
+    fn position(&self) -> usize {
+        self.applied()
+    }
+
+    fn logged(&self) -> &[ReplayEvent] {
+        self.events()
+    }
+
+    fn snapshot(&self) -> String {
+        self.snapshot_json()
+    }
+
+    fn complete(self) -> Result<ReplayReport, String> {
+        self.finish()
+    }
+}
+
+impl DurableState for CellsReplayState {
+    type Cfg = CellsReplayConfig;
+    type Report = CellsReplayReport;
+
+    fn fresh(cluster: &ClusterSpec, cfg: CellsReplayConfig) -> Result<CellsReplayState, String> {
+        CellsReplayState::new(cluster, cfg)
+    }
+
+    fn restore_from(
+        cluster: &ClusterSpec,
+        cfg: CellsReplayConfig,
+        v: &Json,
+        pipelines: &[Pipeline],
+    ) -> Result<CellsReplayState, String> {
+        CellsReplayState::restore(cluster, cfg, v, pipelines)
+    }
+
+    fn apply(&mut self, e: &TenantTraceEvent) -> Result<ReplayEvent, String> {
+        self.apply_event(e)
+    }
+
+    fn position(&self) -> usize {
+        self.applied()
+    }
+
+    fn logged(&self) -> &[ReplayEvent] {
+        self.events()
+    }
+
+    fn snapshot(&self) -> String {
+        self.snapshot_json()
+    }
+
+    fn complete(self) -> Result<CellsReplayReport, String> {
+        self.finish()
+    }
+}
+
+fn run_durable<S: DurableState>(
+    cluster: &ClusterSpec,
+    trace: &TenantTrace,
+    cfg: S::Cfg,
+    store: &mut dyn WalStore,
+    snapshot_every: usize,
+    stop_after: Option<usize>,
+) -> Result<Option<S::Report>, String> {
+    let mut state = S::fresh(cluster, cfg)?;
+    let events = trace_event_list(trace);
+    for e in &events {
+        if stop_after == Some(state.position()) {
+            return Ok(None);
+        }
+        let ev = state.apply(e)?;
+        store.append_event(&wal_line(state.position() - 1, &ev))?;
+        if snapshot_every > 0 && state.position() % snapshot_every == 0 {
+            store.write_snapshot(state.position(), &state.snapshot())?;
+        }
+    }
+    if stop_after == Some(state.position()) {
+        // crash after the last event but before the measurement phase —
+        // the WAL holds every decision, recovery re-runs phase 2
+        return Ok(None);
+    }
+    state.complete().map(Some)
+}
+
+fn run_recover<S: DurableState>(
+    cluster: &ClusterSpec,
+    trace: &TenantTrace,
+    cfg: S::Cfg,
+    store: &mut dyn WalStore,
+    pipelines: &[Pipeline],
+) -> Result<S::Report, String> {
+    let wal = store.wal_lines()?;
+    let mut logged = Vec::with_capacity(wal.len());
+    for (i, line) in wal.iter().enumerate() {
+        let (seq, ev) = parse_wal_line(line)?;
+        if seq != i {
+            return Err(format!("WAL sequence gap: record {i} carries seq {seq}"));
+        }
+        logged.push(ev);
+    }
+    let mut state = match store.latest_snapshot()? {
+        Some((applied, json)) => {
+            if applied > logged.len() {
+                return Err(format!(
+                    "snapshot at {applied} events is ahead of the WAL ({} records)",
+                    logged.len()
+                ));
+            }
+            let v = Json::parse(&json).map_err(|e| format!("bad snapshot: {e}"))?;
+            let st = S::restore_from(cluster, cfg, &v, pipelines)?;
+            if st.position() != applied {
+                return Err(format!(
+                    "snapshot named for {applied} events holds {}",
+                    st.position()
+                ));
+            }
+            st
+        }
+        None => S::fresh(cluster, cfg)?,
+    };
+    // integrity: the snapshot's embedded decision log must be a prefix
+    // of the WAL (both persisted the same events)
+    for (i, ev) in state.logged().iter().enumerate() {
+        if *ev != logged[i] {
+            return Err(format!("snapshot/WAL divergence at event {i}"));
+        }
+    }
+    let events = trace_event_list(trace);
+    if logged.len() > events.len() {
+        return Err(format!(
+            "WAL has {} records but the trace has only {} events",
+            logged.len(),
+            events.len()
+        ));
+    }
+    for e in &events[state.position()..] {
+        let idx = state.position();
+        let ev = state.apply(e)?;
+        if idx < logged.len() {
+            // determinism audit: the re-derived decision must equal the
+            // one logged before the crash — a mismatch means history
+            // would fork, so fail instead of continuing
+            if ev != logged[idx] {
+                return Err(format!(
+                    "recovery divergence at event {idx}: WAL logged {:?}, replay produced {ev:?}",
+                    logged[idx]
+                ));
+            }
+        } else {
+            store.append_event(&wal_line(idx, &ev))?;
+        }
+    }
+    state.complete()
+}
+
+// ---------------------------------------------------------------------
+// Public API — flat and cells variants of the same driver
+// ---------------------------------------------------------------------
+
+/// [`replay_trace`] with durability: every decision lands in the WAL
+/// before the next event is considered, and a full snapshot is written
+/// every `snapshot_every` events (0 = never — WAL-only recovery).
+///
+/// `stop_after = Some(k)` simulates a crash at event boundary `k`: the
+/// first `k` events run (and persist) normally, then the controller
+/// dies and `Ok(None)` is returned — the crash-injection harness's
+/// hook. `None` runs to completion and returns the report, bit-identical
+/// to the non-durable [`replay_trace`] (the WAL is observation only).
+pub fn replay_durable(
+    cluster: &ClusterSpec,
+    trace: &TenantTrace,
+    cfg: &ReplayConfig,
+    store: &mut dyn WalStore,
+    snapshot_every: usize,
+    stop_after: Option<usize>,
+) -> Result<Option<ReplayReport>, String> {
+    run_durable::<ReplayState>(cluster, trace, cfg.clone(), store, snapshot_every, stop_after)
+}
+
+/// Cells variant of [`replay_durable`].
+pub fn replay_durable_cells(
+    cluster: &ClusterSpec,
+    trace: &TenantTrace,
+    cfg: &CellsReplayConfig,
+    store: &mut dyn WalStore,
+    snapshot_every: usize,
+    stop_after: Option<usize>,
+) -> Result<Option<CellsReplayReport>, String> {
+    run_durable::<CellsReplayState>(
+        cluster,
+        trace,
+        cfg.clone(),
+        store,
+        snapshot_every,
+        stop_after,
+    )
+}
+
+/// Recover a crashed durable replay: restore the latest snapshot (or
+/// start fresh), re-apply the trace from the snapshot position —
+/// verifying every re-derived decision against its WAL record,
+/// appending fresh records past the WAL's end — and run the measurement
+/// phase. The result is bit-identical to the uninterrupted replay
+/// ([`ReplayReport::fingerprint`] equality, pinned by the crash golden
+/// suite). Custom pipelines referenced by the snapshot resolve from
+/// `pipelines`; registry pipelines (including synthesized LLM names)
+/// resolve automatically.
+pub fn recover(
+    cluster: &ClusterSpec,
+    trace: &TenantTrace,
+    cfg: &ReplayConfig,
+    store: &mut dyn WalStore,
+    pipelines: &[Pipeline],
+) -> Result<ReplayReport, String> {
+    run_recover::<ReplayState>(cluster, trace, cfg.clone(), store, pipelines)
+}
+
+/// Cells variant of [`recover`].
+pub fn recover_cells(
+    cluster: &ClusterSpec,
+    trace: &TenantTrace,
+    cfg: &CellsReplayConfig,
+    store: &mut dyn WalStore,
+    pipelines: &[Pipeline],
+) -> Result<CellsReplayReport, String> {
+    run_recover::<CellsReplayState>(cluster, trace, cfg.clone(), store, pipelines)
+}
+
+fn diff_line(got: &[String], want: &[String]) -> String {
+    for (i, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        if g != w {
+            return format!("line {i}: recovered `{g}` vs uninterrupted `{w}`");
+        }
+    }
+    format!("length {} vs {}", got.len(), want.len())
+}
+
+/// Crash-injection harness: replay durably, kill the controller at
+/// each listed event boundary (`boundaries` empty = *every* boundary,
+/// `0..=n_events`), recover from the store, and require the recovered
+/// fingerprint to equal the uninterrupted replay's. Errors describe
+/// the first diverging boundary and fingerprint line — this is fuzz
+/// invariant (f) and the core of the crash golden suite.
+pub fn verify_crash_recovery(
+    cluster: &ClusterSpec,
+    trace: &TenantTrace,
+    cfg: &ReplayConfig,
+    snapshot_every: usize,
+    boundaries: &[usize],
+    pipelines: &[Pipeline],
+) -> Result<(), String> {
+    let baseline = replay_trace(cluster, trace, cfg)?.fingerprint();
+    let n = trace_event_list(trace).len();
+    let every: Vec<usize>;
+    let bounds: &[usize] = if boundaries.is_empty() {
+        every = (0..=n).collect();
+        &every
+    } else {
+        boundaries
+    };
+    for &b in bounds {
+        let k = b.min(n);
+        let mut store = MemStore::new();
+        if replay_durable(cluster, trace, cfg, &mut store, snapshot_every, Some(k))?.is_some() {
+            return Err(format!("crash at boundary {k} did not take effect"));
+        }
+        let report = recover(cluster, trace, cfg, &mut store, pipelines)?;
+        let fp = report.fingerprint();
+        if fp != baseline {
+            return Err(format!(
+                "crash boundary {k}: recovered replay diverges ({})",
+                diff_line(&fp, &baseline)
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Cells variant of [`verify_crash_recovery`]: the merged fingerprint,
+/// the tenant→cell routing, and the migration count must all match the
+/// uninterrupted sharded replay.
+pub fn verify_crash_recovery_cells(
+    cluster: &ClusterSpec,
+    trace: &TenantTrace,
+    cfg: &CellsReplayConfig,
+    snapshot_every: usize,
+    boundaries: &[usize],
+    pipelines: &[Pipeline],
+) -> Result<(), String> {
+    let base = replay_trace_cells(cluster, trace, cfg)?;
+    let baseline = base.merged.fingerprint();
+    let n = trace_event_list(trace).len();
+    let every: Vec<usize>;
+    let bounds: &[usize] = if boundaries.is_empty() {
+        every = (0..=n).collect();
+        &every
+    } else {
+        boundaries
+    };
+    for &b in bounds {
+        let k = b.min(n);
+        let mut store = MemStore::new();
+        if replay_durable_cells(cluster, trace, cfg, &mut store, snapshot_every, Some(k))?
+            .is_some()
+        {
+            return Err(format!("crash at boundary {k} did not take effect"));
+        }
+        let report = recover_cells(cluster, trace, cfg, &mut store, pipelines)?;
+        let fp = report.merged.fingerprint();
+        if fp != baseline {
+            return Err(format!(
+                "crash boundary {k} (cells): recovered replay diverges ({})",
+                diff_line(&fp, &baseline)
+            ));
+        }
+        if report.tenant_cells != base.tenant_cells {
+            return Err(format!(
+                "crash boundary {k} (cells): tenant routing diverged after recovery"
+            ));
+        }
+        if report.migrations != base.migrations {
+            return Err(format!(
+                "crash boundary {k} (cells): migration count diverged ({} vs {})",
+                report.migrations, base.migrations
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterSpec;
+    use crate::suite::workload::{TenantTrace, TenantTraceConfig};
+
+    fn small_trace(seed: u64) -> TenantTrace {
+        let cfg = TenantTraceConfig {
+            tenants: 5,
+            ..TenantTraceConfig::default()
+        };
+        TenantTrace::generate(&cfg, seed)
+    }
+
+    fn fast_cfg() -> ReplayConfig {
+        ReplayConfig { queries: 60, ..ReplayConfig::default() }
+    }
+
+    #[test]
+    fn wal_line_round_trips() {
+        let ev = ReplayEvent {
+            t_s: 12.75,
+            tenant: 3,
+            desc: "arrive img-to-text @ 40".to_string(),
+            decision: "admitted".to_string(),
+            residents: 2,
+            gpus_in_use: 3,
+            usage: 0.375,
+        };
+        let line = wal_line(7, &ev);
+        let (seq, back) = parse_wal_line(&line).unwrap();
+        assert_eq!(seq, 7);
+        assert_eq!(back, ev);
+    }
+
+    #[test]
+    fn durable_replay_matches_plain_replay() {
+        let cluster = ClusterSpec::two_2080ti();
+        let trace = small_trace(11);
+        let cfg = fast_cfg();
+        let plain = replay_trace(&cluster, &trace, &cfg).unwrap();
+        let mut store = MemStore::new();
+        let durable = replay_durable(&cluster, &trace, &cfg, &mut store, 2, None)
+            .unwrap()
+            .expect("no crash requested");
+        assert_eq!(durable.fingerprint(), plain.fingerprint());
+        assert_eq!(store.wal.len(), trace.events.len());
+        assert!(!store.snapshots.is_empty());
+        // the WAL mirrors the decision log exactly
+        for (i, line) in store.wal.iter().enumerate() {
+            let (seq, ev) = parse_wal_line(line).unwrap();
+            assert_eq!(seq, i);
+            assert_eq!(ev, plain.events[i]);
+        }
+    }
+
+    #[test]
+    fn recovers_from_every_boundary() {
+        let cluster = ClusterSpec::two_2080ti();
+        let trace = small_trace(5);
+        verify_crash_recovery(&cluster, &trace, &fast_cfg(), 2, &[], &[]).unwrap();
+    }
+
+    #[test]
+    fn recovers_without_any_snapshot() {
+        // snapshot_every = 0: recovery replays the whole WAL from a
+        // fresh state
+        let cluster = ClusterSpec::two_2080ti();
+        let trace = small_trace(5);
+        verify_crash_recovery(&cluster, &trace, &fast_cfg(), 0, &[], &[]).unwrap();
+    }
+
+    #[test]
+    fn recovers_cells_at_sampled_boundaries() {
+        let cluster = ClusterSpec { num_gpus: 4, ..ClusterSpec::two_2080ti() };
+        let trace = small_trace(9);
+        let cfg = CellsReplayConfig::from_replay(2, &fast_cfg());
+        let n = trace.events.len();
+        verify_crash_recovery_cells(&cluster, &trace, &cfg, 2, &[0, n / 2, n], &[]).unwrap();
+    }
+
+    #[test]
+    fn recovery_detects_tampered_wal() {
+        let cluster = ClusterSpec::two_2080ti();
+        let trace = small_trace(11);
+        let cfg = fast_cfg();
+        let mut store = MemStore::new();
+        replay_durable(&cluster, &trace, &cfg, &mut store, 0, Some(trace.events.len()))
+            .unwrap();
+        // flip one decision in the log — recovery must refuse to fork
+        let tampered = store.wal[1].replace("\"decision\": \"", "\"decision\": \"XX");
+        assert_ne!(tampered, store.wal[1], "tamper target present");
+        store.wal[1] = tampered;
+        let err = recover(&cluster, &trace, &cfg, &mut store, &[]).unwrap_err();
+        assert!(err.contains("divergence"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn dir_store_round_trips() {
+        let dir = std::env::temp_dir().join(format!(
+            "camelot-recovery-test-{}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        let cluster = ClusterSpec::two_2080ti();
+        let trace = small_trace(7);
+        let cfg = fast_cfg();
+        let plain = replay_trace(&cluster, &trace, &cfg).unwrap();
+        {
+            let mut store = DirStore::open(&dir).unwrap();
+            let crashed =
+                replay_durable(&cluster, &trace, &cfg, &mut store, 3, Some(4)).unwrap();
+            assert!(crashed.is_none());
+        }
+        let mut store = DirStore::open(&dir).unwrap();
+        assert_eq!(store.wal_lines().unwrap().len(), 4);
+        assert_eq!(store.latest_snapshot().unwrap().map(|(a, _)| a), Some(3));
+        let recovered = recover(&cluster, &trace, &cfg, &mut store, &[]).unwrap();
+        assert_eq!(recovered.fingerprint(), plain.fingerprint());
+        // recovery extended the WAL to the full trace
+        assert_eq!(store.wal_lines().unwrap().len(), trace.events.len());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -14,6 +14,7 @@ use crate::baselines::{plan, Planner};
 use crate::config::ClusterSpec;
 use crate::coordinator::{run_closed_loop, AutoscaleConfig, Autoscaler, EpochLoopConfig};
 use crate::deploy::reservations_for;
+use crate::planner::cache::SolveCache;
 use crate::sim::{ClusterSim, SimOptions, Simulator, TenantSpec};
 use crate::suite::workload::{ArrivalProcess, DiurnalPattern};
 use crate::suite::{artifact, real, Pipeline};
@@ -449,6 +450,11 @@ pub struct ColocateConfig {
     /// The shared cluster both tenants co-locate on.
     pub cluster: ClusterSpec,
     pub seed: u64,
+    /// Solve-cache payload ([`SolveCache::to_json`]) to warm-start every
+    /// autoscaler in the scenario with (the `camelot colocate
+    /// --cache-load` path). Plans are bit-identical warm or cold; only
+    /// the cache counters move.
+    pub warm_cache: Option<String>,
 }
 
 impl Default for ColocateConfig {
@@ -462,6 +468,7 @@ impl Default for ColocateConfig {
             batch: AutoscaleConfig::default().batch,
             cluster: ClusterSpec::two_2080ti(),
             seed: 42,
+            warm_cache: None,
         }
     }
 }
@@ -476,16 +483,39 @@ pub fn colocate_tables(
     pipe_b: &Pipeline,
     cfg: &ColocateConfig,
 ) -> Result<Vec<Table>, String> {
+    colocate_tables_io(pipe_a, pipe_b, cfg, false).map(|(tables, _)| tables)
+}
+
+/// [`colocate_tables`] with cache I/O: when `save_cache` is set the
+/// second return value carries the merged solve-cache contents of every
+/// controller the scenario ran (both placement autoscalers plus both
+/// closed diurnal loops) as a [`SolveCache::to_json`] payload — what
+/// `camelot colocate --cache-save` writes and a later `--cache-load`
+/// run warms from. [`ColocateConfig::warm_cache`] is validated up front
+/// so a malformed payload errors instead of silently running cold.
+pub fn colocate_tables_io(
+    pipe_a: &Pipeline,
+    pipe_b: &Pipeline,
+    cfg: &ColocateConfig,
+    save_cache: bool,
+) -> Result<(Vec<Table>, Option<String>), String> {
     if !(cfg.load_a > 0.0 && cfg.load_b > 0.0 && cfg.diurnal_peak > 0.0) {
         return Err("loads and diurnal peak must be positive".into());
     }
     if cfg.epochs == 0 || cfg.queries == 0 || cfg.batch == 0 {
         return Err("epochs, queries, and batch must be at least 1".into());
     }
+    if let Some(json) = &cfg.warm_cache {
+        SolveCache::from_json(json).map_err(|e| format!("warm-cache payload: {e}"))?;
+    }
     let cluster = cfg.cluster.clone();
     let pipes = [pipe_a, pipe_b];
     let preds: Vec<_> = par::par_map(&pipes, |_, p| common::train_predictors(p, &cluster));
-    let scale_cfg = AutoscaleConfig { batch: cfg.batch, ..Default::default() };
+    let scale_cfg = AutoscaleConfig {
+        batch: cfg.batch,
+        warm_cache: cfg.warm_cache.clone(),
+        ..Default::default()
+    };
 
     // --- co-located deployment: A first, B into the remainder ---
     let mut sa = Autoscaler::new(pipe_a, &cluster, &preds[0], scale_cfg.clone());
@@ -644,7 +674,34 @@ pub fn colocate_tables(
             sc.evictions.to_string(),
         ]);
     }
-    Ok(vec![t1, t2, t3, t4])
+    // warm runs start the counters at zero post-load, so the hit rates
+    // above already *are* the warm hit rates; this row just surfaces
+    // how many entries each controller was seeded with
+    if cfg.warm_cache.is_some() {
+        t4.push(&[
+            "(warm-start)".into(),
+            format!("{} entries/controller", sa.warm_loaded()),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+        ]);
+    }
+    let saved = if save_cache {
+        // one payload warms every controller: merge the placement
+        // autoscalers' caches with both closed loops' final contents
+        // (content-addressed keys, so same-request entries coincide)
+        let per = scale_cfg.solve_cache;
+        let merged = SolveCache::new(per.saturating_mul(4).max(1));
+        merged.load_json(&sa.cache_json())?;
+        merged.load_json(&sb.cache_json())?;
+        for rep in loops.iter().flatten() {
+            merged.load_json(&rep.cache_json)?;
+        }
+        Some(merged.to_json())
+    } else {
+        None
+    };
+    Ok((vec![t1, t2, t3, t4], saved))
 }
 
 /// The registered `colocate` experiment: img-to-text + text-to-text on
@@ -700,6 +757,15 @@ impl Default for AdmissionExpConfig {
 /// log, the measured per-interval QoS, and the admitted-count /
 /// utilization comparison.
 pub fn admission_tables(cfg: &AdmissionExpConfig) -> Result<Vec<Table>, String> {
+    admission_tables_io(cfg, &AdmitIo::default()).map(|(tables, _)| tables)
+}
+
+/// [`admission_tables`] with durability / cache I/O (the `camelot
+/// admit` flag surface).
+pub fn admission_tables_io(
+    cfg: &AdmissionExpConfig,
+    io: &AdmitIo,
+) -> Result<(Vec<Table>, Option<String>), String> {
     use crate::suite::workload::{TenantTrace, TenantTraceConfig};
 
     if cfg.tenants == 0 || cfg.queries == 0 {
@@ -733,7 +799,7 @@ pub fn admission_tables(cfg: &AdmissionExpConfig) -> Result<Vec<Table>, String> 
         cells: cfg.cells,
         break_qos: false,
     };
-    admission_tables_for_trace(&cluster, &trace, knobs)
+    admission_tables_for_trace_io(&cluster, &trace, knobs, io)
 }
 
 /// Bundled replay knobs for [`admission_tables_for_trace`].
@@ -752,6 +818,31 @@ pub struct ReplayKnobs {
     pub break_qos: bool,
 }
 
+/// Durability and cache I/O surface of `camelot admit` / `camelot
+/// recover`, threaded through [`admission_tables_for_trace_io`]. The
+/// default (no WAL, no cache files) leaves every replay path — and its
+/// table output — byte-identical to the plain
+/// [`admission_tables_for_trace`].
+#[derive(Debug, Clone, Default)]
+pub struct AdmitIo {
+    /// Solve-cache payload ([`SolveCache::to_json`]) to warm-start the
+    /// replay's controller(s) with (`--cache-load`).
+    pub warm_cache: Option<String>,
+    /// Return the final solve-cache contents for persistence
+    /// (`--cache-save`). Incompatible with a WAL: snapshots already
+    /// embed the cache.
+    pub save_cache: bool,
+    /// Durable replay: append every accepted event to `DIR/wal.log` and
+    /// snapshot into `DIR` (`--wal DIR`).
+    pub wal_dir: Option<std::path::PathBuf>,
+    /// Snapshot cadence in events (0 = never — WAL-only recovery;
+    /// `--snapshot-every N`).
+    pub snapshot_every: usize,
+    /// `camelot recover`: reconverge from `wal_dir`'s latest snapshot +
+    /// WAL tail instead of replaying from scratch. Requires `wal_dir`.
+    pub recover: bool,
+}
+
 /// The admission experiment over an *explicit* tenant trace — the
 /// entry `camelot admit --spec` uses for [`crate::planner::ScenarioSpec`]
 /// scenarios (arrive/shrink/depart events, cluster + batch from the
@@ -761,8 +852,29 @@ pub fn admission_tables_for_trace(
     trace: &crate::suite::workload::TenantTrace,
     knobs: ReplayKnobs,
 ) -> Result<Vec<Table>, String> {
-    use crate::coordinator::admission::{replay_trace, static_partition_replay, ReplayConfig};
-    use crate::coordinator::cells::{replay_trace_cells, CellsReplayConfig};
+    admission_tables_for_trace_io(cluster, trace, knobs, &AdmitIo::default())
+        .map(|(tables, _)| tables)
+}
+
+/// [`admission_tables_for_trace`] with durability / cache I/O. The
+/// replay routes through one of four equivalent drivers — plain,
+/// durable (WAL + snapshots), recovery (snapshot + WAL tail), or a
+/// manual drive that extracts the solve cache before the measurement
+/// phase consumes the state — all pinned bit-identical by the crash
+/// golden suite. The second return value is the final solve-cache
+/// payload when [`AdmitIo::save_cache`] is set.
+pub fn admission_tables_for_trace_io(
+    cluster: &ClusterSpec,
+    trace: &crate::suite::workload::TenantTrace,
+    knobs: ReplayKnobs,
+    io: &AdmitIo,
+) -> Result<(Vec<Table>, Option<String>), String> {
+    use crate::coordinator::admission::{
+        replay_trace, static_partition_replay, ReplayConfig, ReplayState,
+    };
+    use crate::coordinator::cells::{replay_trace_cells, CellsReplayConfig, CellsReplayState};
+    use crate::coordinator::recovery::trace_event_list;
+    use crate::coordinator::{recover, recover_cells, replay_durable, replay_durable_cells, DirStore};
 
     if knobs.queries == 0 {
         return Err("queries must be at least 1".into());
@@ -770,9 +882,29 @@ pub fn admission_tables_for_trace(
     if knobs.batch == 0 {
         return Err("batch must be at least 1".into());
     }
+    if io.save_cache && io.wal_dir.is_some() {
+        return Err(
+            "--cache-save is incompatible with --wal: snapshots already embed the solve \
+             cache; recover from the WAL directory instead"
+                .into(),
+        );
+    }
+    if io.recover && io.wal_dir.is_none() {
+        return Err("recovery needs the durable store: pass --wal DIR".into());
+    }
+    let warm_entries = match &io.warm_cache {
+        Some(json) => Some(
+            SolveCache::from_json(json)
+                .map_err(|e| format!("warm-cache payload: {e}"))?
+                .stats()
+                .entries,
+        ),
+        None => None,
+    };
     let mut replay_cfg = ReplayConfig { queries: knobs.queries, ..Default::default() };
     replay_cfg.admission.seed = knobs.seed;
     replay_cfg.admission.batch = knobs.batch;
+    replay_cfg.warm_cache = io.warm_cache.clone();
     if knobs.break_qos {
         replay_cfg.admission.qos_headroom = 10.0;
         replay_cfg.admission.qos_slack = f64::INFINITY;
@@ -781,7 +913,59 @@ pub fn admission_tables_for_trace(
     // cells ≤ 1 keeps the flat controller path (and its exact output);
     // > 1 routes through the cluster-of-cells shard and reports the
     // merged fleet view plus a per-cell breakdown table
-    let (shared, celled) = if knobs.cells > 1 {
+    let mut saved_cache: Option<String> = None;
+    let (shared, celled) = if let Some(dir) = &io.wal_dir {
+        let mut store = DirStore::open(dir)?;
+        if knobs.cells > 1 {
+            let cells_cfg = CellsReplayConfig::from_replay(knobs.cells, &replay_cfg);
+            let rep = if io.recover {
+                recover_cells(cluster, trace, &cells_cfg, &mut store, &[])?
+            } else {
+                replay_durable_cells(
+                    cluster,
+                    trace,
+                    &cells_cfg,
+                    &mut store,
+                    io.snapshot_every,
+                    None,
+                )?
+                .ok_or_else(|| "durable replay stopped without a crash injected".to_string())?
+            };
+            (rep.merged.clone(), Some(rep))
+        } else {
+            let rep = if io.recover {
+                recover(cluster, trace, &replay_cfg, &mut store, &[])?
+            } else {
+                replay_durable(cluster, trace, &replay_cfg, &mut store, io.snapshot_every, None)?
+                    .ok_or_else(|| "durable replay stopped without a crash injected".to_string())?
+            };
+            (rep, None)
+        }
+    } else if io.save_cache {
+        // drive the state by hand: the cache must be read out before
+        // finish() consumes the state for the measurement phase (the
+        // event loop is the only thing that moves the cache, so this is
+        // the exact final content)
+        let events = trace_event_list(trace);
+        if knobs.cells > 1 {
+            let cells_cfg = CellsReplayConfig::from_replay(knobs.cells, &replay_cfg);
+            let mut state = CellsReplayState::new(cluster, cells_cfg)?;
+            for e in &events {
+                state.apply_event(e)?;
+            }
+            saved_cache = Some(state.cache_json()?);
+            let rep = state.finish()?;
+            (rep.merged.clone(), Some(rep))
+        } else {
+            let mut state = ReplayState::new(cluster, replay_cfg.clone());
+            state.warm_start()?;
+            for e in &events {
+                state.apply_event(e)?;
+            }
+            saved_cache = Some(state.cache_json());
+            (state.finish()?, None)
+        }
+    } else if knobs.cells > 1 {
         let cells_cfg = CellsReplayConfig::from_replay(knobs.cells, &replay_cfg);
         let rep = replay_trace_cells(cluster, trace, &cells_cfg)?;
         (rep.merged.clone(), Some(rep))
@@ -878,6 +1062,26 @@ pub fn admission_tables_for_trace(
         format!("{:.1}%", sc.hit_rate() * 100.0),
     ]);
     t4.push(&["solve-cache evictions".to_string(), sc.evictions.to_string()]);
+    // warm runs reset the counters after loading, so the hit-rate row
+    // above already is the warm hit rate; this row records the seed size
+    if let Some(n) = warm_entries {
+        t4.push(&[
+            "solve-cache warm-start entries".to_string(),
+            n.min(replay_cfg.admission.solve_cache).to_string(),
+        ]);
+    }
+    if let Some(dir) = &io.wal_dir {
+        t4.push(&[
+            "durability".to_string(),
+            if io.recover {
+                format!("recovered from {}", dir.display())
+            } else if io.snapshot_every > 0 {
+                format!("WAL {} (snapshot every {} events)", dir.display(), io.snapshot_every)
+            } else {
+                format!("WAL {} (no snapshots)", dir.display())
+            },
+        ]);
+    }
     t4.push(&[
         "intervals simulated (of total)".to_string(),
         format!("{}/{}", shared.intervals_simulated, shared.intervals.len()),
@@ -973,7 +1177,7 @@ pub fn admission_tables_for_trace(
         }
         tables.push(tk);
     }
-    Ok(tables)
+    Ok((tables, saved_cache))
 }
 
 /// The registered `admission` experiment, at the default trace shape.

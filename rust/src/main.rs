@@ -7,6 +7,7 @@
 //!   serve --pipeline <name> ...        serve a real workload over PJRT
 //!   colocate [--pipelines a,b] ...     co-location + diurnal autoscaling
 //!   admit [--tenants N] ...            N-tenant online admission trace
+//!   recover --spec f --wal DIR         reconverge a crashed durable replay
 //!   reproduce --exp <figN|all> ...     regenerate a paper figure/table
 //!
 //! Planning always goes through the unified `planner` API
@@ -39,6 +40,7 @@ fn main() {
         Some("serve") => cmd_serve(&args[1..]),
         Some("colocate") => cmd_colocate(&args[1..]),
         Some("admit") => cmd_admit(&args[1..]),
+        Some("recover") => cmd_recover(&args[1..]),
         Some("fuzz") => cmd_fuzz(&args[1..]),
         Some("reproduce") => cmd_reproduce(&args[1..]),
         Some("help") | None => {
@@ -69,13 +71,20 @@ USAGE:
                 [--artifacts DIR]
   camelot colocate [--pipelines a,b] [--load-a QPS] [--load-b QPS]
                    [--peak QPS] [--epochs N] [--queries N] [--seed S]
-                   [--spec <file.json>]
+                   [--spec <file.json>] [--cache-load FILE] [--cache-save FILE]
   camelot admit [--tenants N] [--gap S] [--life S] [--peak-lo QPS]
                 [--peak-hi QPS] [--queries N] [--seed S] [--cells N]
                 [--spec <file.json>] [--break-qos]
+                [--wal DIR [--snapshot-every N]]     (durable control plane)
+                [--cache-load FILE] [--cache-save FILE]  (planner solve cache)
+  camelot recover --spec <file.json> --wal DIR [--cells N] [--break-qos]
+                (reconverge from DIR's latest snapshot + WAL tail;
+                bit-identical to the uninterrupted replay)
   camelot fuzz  [--scenarios N] [--seed S] [--queries N] [--break-qos]
-                [--llm] [--dump-dir DIR] (chaos/burst scenario fuzzer with
-                QoS property checks; --llm mixes in LLM/KV-cache tenants;
+                [--llm] [--degrade] [--crash] [--dump-dir DIR]
+                (chaos/burst scenario fuzzer with QoS property checks;
+                --llm mixes in LLM/KV-cache tenants, --degrade partial
+                GPU slowdowns, --crash runs the crash-recovery invariant;
                 failures dump replayable specs)
   camelot reproduce [--exp figN|tab1|all|colocate|admission] [--out DIR]
 
@@ -130,6 +139,49 @@ where
 
 fn pipeline_by_name(name: &str) -> Option<Pipeline> {
     camelot::suite::pipeline_by_name(name)
+}
+
+/// Read a `--cache-load FILE` solve-cache payload; `Err` carries the
+/// exit code (the caller returns it).
+fn load_cache_arg(cmd: &str, o: &HashMap<String, String>) -> Result<Option<String>, i32> {
+    match o.get("cache-load") {
+        Some(path) => match std::fs::read_to_string(path) {
+            Ok(text) => Ok(Some(text)),
+            Err(e) => {
+                eprintln!("{cmd}: --cache-load {path}: {e}");
+                Err(1)
+            }
+        },
+        None => Ok(None),
+    }
+}
+
+/// Print an experiment's tables and persist its `--cache-save` payload
+/// (when both a path and a payload exist).
+fn finish_tables(
+    cmd: &str,
+    res: Result<(Vec<camelot::util::Table>, Option<String>), String>,
+    save: Option<&str>,
+) -> i32 {
+    match res {
+        Ok((tables, saved)) => {
+            for t in &tables {
+                println!("{}", t.render());
+            }
+            if let (Some(path), Some(json)) = (save, saved.as_ref()) {
+                if let Err(e) = std::fs::write(path, json) {
+                    eprintln!("{cmd}: --cache-save {path}: {e}");
+                    return 1;
+                }
+                eprintln!("(solve cache saved to {path})");
+            }
+            0
+        }
+        Err(e) => {
+            eprintln!("{cmd}: {e}");
+            1
+        }
+    }
 }
 
 fn cluster_by_name(name: &str) -> ClusterSpec {
@@ -226,9 +278,14 @@ fn cmd_plan(args: &[String]) -> i32 {
 /// shared 2×2080Ti cluster (the cluster-level §VIII-C scenario).
 fn cmd_colocate(args: &[String]) -> i32 {
     let o = opts(args);
+    let warm = match load_cache_arg("colocate", &o) {
+        Ok(w) => w,
+        Err(code) => return code,
+    };
+    let save_path = o.get("cache-save").cloned();
     // declarative path: the spec's first two tenants co-locate
     if let Some(spec) = o.get("spec") {
-        return run_spec("colocate", spec, |spec| {
+        let res = ScenarioSpec::load(Path::new(spec)).and_then(|spec| {
             if spec.tenants.len() < 2 {
                 return Err("colocate --spec needs at least two tenants".to_string());
             }
@@ -242,10 +299,12 @@ fn cmd_colocate(args: &[String]) -> i32 {
                 batch: spec.batch,
                 cluster: spec.cluster.clone(),
                 seed: spec.seed,
+                warm_cache: warm.clone(),
                 ..Default::default()
             };
-            figures::macro_evals::colocate_tables(&pa, &pb, &cfg)
+            figures::macro_evals::colocate_tables_io(&pa, &pb, &cfg, save_path.is_some())
         });
+        return finish_tables("colocate --spec", res, save_path.as_deref());
     }
     let names = o
         .get("pipelines")
@@ -280,24 +339,19 @@ fn cmd_colocate(args: &[String]) -> i32 {
     if let Some(v) = o.get("seed").and_then(|v| v.parse().ok()) {
         cfg.seed = v;
     }
+    cfg.warm_cache = warm;
     eprintln!(
         "co-locating {} (A, {} qps) + {} (B, {} qps); diurnal peak {} qps over {} epochs...",
         pa.name, cfg.load_a, pb.name, cfg.load_b, cfg.diurnal_peak, cfg.epochs
     );
     let t0 = Instant::now();
-    match figures::macro_evals::colocate_tables(&pa, &pb, &cfg) {
-        Ok(tables) => {
-            for t in &tables {
-                println!("{}", t.render());
-            }
-            eprintln!("(colocate took {:.1} s)", t0.elapsed().as_secs_f64());
-            0
-        }
-        Err(e) => {
-            eprintln!("colocate: {e}");
-            1
-        }
+    let res = figures::macro_evals::colocate_tables_io(&pa, &pb, &cfg, save_path.is_some());
+    let ok = res.is_ok();
+    let code = finish_tables("colocate", res, save_path.as_deref());
+    if ok {
+        eprintln!("(colocate took {:.1} s)", t0.elapsed().as_secs_f64());
     }
+    code
 }
 
 /// N-tenant online admission with departure re-packing over a
@@ -305,12 +359,27 @@ fn cmd_colocate(args: &[String]) -> i32 {
 /// partitioning (the ROADMAP scale-out scenario).
 fn cmd_admit(args: &[String]) -> i32 {
     let o = opts(args);
+    let warm = match load_cache_arg("admit", &o) {
+        Ok(w) => w,
+        Err(code) => return code,
+    };
+    let save_path = o.get("cache-save").cloned();
+    let io = figures::macro_evals::AdmitIo {
+        warm_cache: warm,
+        save_cache: save_path.is_some(),
+        wal_dir: o.get("wal").map(PathBuf::from),
+        snapshot_every: o
+            .get("snapshot-every")
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(64),
+        recover: false,
+    };
     // declarative path: replay the spec's explicit tenant trace
     // (arrive / shrink / depart events) against the spec's cluster
     if let Some(spec) = o.get("spec") {
         let o_cells = o.get("cells").and_then(|v| v.parse().ok());
         let break_qos = o.contains_key("break-qos");
-        return run_spec("admit", spec, move |spec| {
+        let res = ScenarioSpec::load(Path::new(spec)).and_then(|spec| {
             let knobs = figures::macro_evals::ReplayKnobs {
                 queries: spec.queries,
                 batch: spec.batch,
@@ -319,8 +388,14 @@ fn cmd_admit(args: &[String]) -> i32 {
                 cells: o_cells.unwrap_or(spec.cells),
                 break_qos,
             };
-            figures::macro_evals::admission_tables_for_trace(&spec.cluster, &spec.trace(), knobs)
+            figures::macro_evals::admission_tables_for_trace_io(
+                &spec.cluster,
+                &spec.trace(),
+                knobs,
+                &io,
+            )
         });
+        return finish_tables("admit --spec", res, save_path.as_deref());
     }
     let mut cfg = figures::macro_evals::AdmissionExpConfig::default();
     if let Some(v) = o.get("tenants").and_then(|v| v.parse().ok()) {
@@ -358,19 +433,48 @@ fn cmd_admit(args: &[String]) -> i32 {
         cfg.mean_lifetime_s
     );
     let t0 = Instant::now();
-    match figures::macro_evals::admission_tables(&cfg) {
-        Ok(tables) => {
-            for t in &tables {
-                println!("{}", t.render());
-            }
-            eprintln!("(admit took {:.1} s)", t0.elapsed().as_secs_f64());
-            0
-        }
-        Err(e) => {
-            eprintln!("admit: {e}");
-            1
-        }
+    let res = figures::macro_evals::admission_tables_io(&cfg, &io);
+    let ok = res.is_ok();
+    let code = finish_tables("admit", res, save_path.as_deref());
+    if ok {
+        eprintln!("(admit took {:.1} s)", t0.elapsed().as_secs_f64());
     }
+    code
+}
+
+/// Reconverge a crashed durable replay from its WAL directory: restore
+/// the latest snapshot, re-apply the trace tail (each re-derived
+/// decision verified against its WAL record), and print the same tables
+/// `camelot admit` would have — bit-identical to the uninterrupted run.
+fn cmd_recover(args: &[String]) -> i32 {
+    let o = opts(args);
+    let (Some(spec), Some(wal)) = (o.get("spec"), o.get("wal")) else {
+        eprintln!("usage: camelot recover --spec <file.json> --wal DIR [--cells N] [--break-qos]");
+        return 2;
+    };
+    let o_cells = o.get("cells").and_then(|v| v.parse().ok());
+    let break_qos = o.contains_key("break-qos");
+    let io = figures::macro_evals::AdmitIo {
+        wal_dir: Some(PathBuf::from(wal)),
+        recover: true,
+        ..Default::default()
+    };
+    let res = ScenarioSpec::load(Path::new(spec)).and_then(|spec| {
+        let knobs = figures::macro_evals::ReplayKnobs {
+            queries: spec.queries,
+            batch: spec.batch,
+            seed: spec.seed,
+            cells: o_cells.unwrap_or(spec.cells),
+            break_qos,
+        };
+        figures::macro_evals::admission_tables_for_trace_io(
+            &spec.cluster,
+            &spec.trace(),
+            knobs,
+            &io,
+        )
+    });
+    finish_tables("recover", res, None)
 }
 
 /// Chaos & burst scenario fuzzer: generate seed-reproducible
@@ -396,17 +500,21 @@ fn cmd_fuzz(args: &[String]) -> i32 {
     }
     cfg.break_qos = o.contains_key("break-qos");
     cfg.llm = o.contains_key("llm");
+    cfg.degrade = o.contains_key("degrade");
+    cfg.crash = o.contains_key("crash");
     cfg.dump_dir = Some(PathBuf::from(
         o.get("dump-dir").map(String::as_str).unwrap_or("fuzz-failures"),
     ));
     eprintln!(
-        "fuzzing {} scenario(s) with seed {} ({} queries/interval{}{}); the run is \
+        "fuzzing {} scenario(s) with seed {} ({} queries/interval{}{}{}{}); the run is \
          seed-reproducible and violated scenarios dump replayable specs",
         cfg.scenarios,
         cfg.seed,
         cfg.queries,
         if cfg.break_qos { ", --break-qos sabotage ON" } else { "" },
-        if cfg.llm { ", LLM tenant mix ON" } else { "" }
+        if cfg.llm { ", LLM tenant mix ON" } else { "" },
+        if cfg.degrade { ", GPU-degrade mix ON" } else { "" },
+        if cfg.crash { ", crash-recovery invariant ON" } else { "" }
     );
     let t0 = Instant::now();
     match run_fuzz(&cfg) {
@@ -417,11 +525,28 @@ fn cmd_fuzz(args: &[String]) -> i32 {
                     v.index, v.kind, v.detail
                 );
                 match &v.dump_path {
-                    Some(p) => println!(
-                        "  reproduce: camelot admit --spec {}{}",
-                        p.display(),
-                        if cfg.break_qos { " --break-qos" } else { "" }
-                    ),
+                    Some(p) => {
+                        println!(
+                            "  reproduce: camelot admit --spec {}{}",
+                            p.display(),
+                            if cfg.break_qos { " --break-qos" } else { "" }
+                        );
+                        // crash-recovery violations reproduce in two
+                        // steps: a durable replay writes the WAL, then
+                        // recover reconverges (and reports divergence)
+                        if v.kind == "crash-recovery" {
+                            println!(
+                                "  reproduce: camelot admit --spec {} --wal {}.wal --snapshot-every 2",
+                                p.display(),
+                                p.display()
+                            );
+                            println!(
+                                "             camelot recover --spec {} --wal {}.wal",
+                                p.display(),
+                                p.display()
+                            );
+                        }
+                    }
                     None => println!("  (spec dump failed; re-run with --dump-dir)"),
                 }
             }

@@ -36,12 +36,14 @@ use std::cell::RefCell;
 use std::collections::HashMap;
 use std::fmt::Write as _;
 
+use crate::comm::CommMode;
 use crate::deploy::Allocation;
-use crate::sim::Deployment;
-use crate::suite::workload::ArrivalProcess;
+use crate::sim::{Deployment, InstancePlacement};
+use crate::suite::workload::{ArrivalProcess, DiurnalPattern, Priority};
 use crate::suite::Pipeline;
+use crate::util::json::Json;
 
-use super::{HeteroPlanner, Objective, PlanOutcome, PlanRequest, Planner};
+use super::{HeteroPlanner, Infeasible, Objective, PlanOutcome, PlanRequest, Planner, Solution};
 
 /// Snapshot of a [`SolveCache`]'s counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
@@ -171,6 +173,392 @@ impl SolveCache {
             entries: inner.map.len(),
         }
     }
+
+    /// Serialize the cache contents (capacity + every resident entry,
+    /// least-recently-used first) to JSON. Keys are the exact-string
+    /// request fingerprints, so a reload warm-starts lookups verbatim;
+    /// every f64 travels as its raw bit pattern (hex string), making the
+    /// round-trip bit-exact. Counters are *not* serialized — a reloaded
+    /// cache starts its hit/miss statistics fresh, so the "warm
+    /// hit-rate" `camelot admit --cache-load` reports measures only the
+    /// current run.
+    pub fn to_json(&self) -> String {
+        let inner = self.inner.borrow();
+        // LRU order: oldest first, so load_json replays inserts in age
+        // order and capacity truncation drops the stalest entries
+        let mut entries: Vec<(&String, &Entry)> = inner.map.iter().collect();
+        entries.sort_by_key(|(_, e)| e.last_used);
+        let mut out = String::with_capacity(256 + entries.len() * 512);
+        let _ = write!(out, "{{\"capacity\": {}, \"entries\": [", self.capacity);
+        for (i, (key, e)) in entries.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str("{\"key\": ");
+            json_str(&mut out, key);
+            out.push_str(", \"outcome\": ");
+            json_outcome(&mut out, &e.outcome);
+            out.push('}');
+        }
+        out.push_str("]}");
+        out
+    }
+
+    /// Rebuild a cache from [`to_json`](Self::to_json) output. The new
+    /// cache has the serialized capacity, the entries in their
+    /// serialized recency order (ticks reassigned densely), and zeroed
+    /// counters.
+    pub fn from_json(text: &str) -> Result<SolveCache, String> {
+        let v = Json::parse(text).map_err(|e| format!("solve-cache json: {e}"))?;
+        let capacity = v
+            .get_f64("capacity")
+            .ok_or("solve-cache json: missing capacity")? as usize;
+        let cache = SolveCache::new(capacity);
+        cache.load_json_value(&v)?;
+        Ok(cache)
+    }
+
+    /// Warm-start this cache from [`to_json`](Self::to_json) output,
+    /// keeping this cache's own capacity: entries are inserted in their
+    /// serialized recency order, and when the payload holds more than
+    /// fit, only the most recent `capacity` land (no eviction counter
+    /// noise). Returns the number of entries loaded. A capacity-0 cache
+    /// loads nothing.
+    pub fn load_json(&self, text: &str) -> Result<usize, String> {
+        let v = Json::parse(text).map_err(|e| format!("solve-cache json: {e}"))?;
+        self.load_json_value(&v)
+    }
+
+    /// [`load_json`](Self::load_json) over an already-parsed value (the
+    /// controller snapshot embeds the cache object directly).
+    pub fn load_json_value(&self, v: &Json) -> Result<usize, String> {
+        let entries = v
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("solve-cache json: missing entries array")?;
+        if self.capacity == 0 {
+            return Ok(0);
+        }
+        // keep only the most recent `capacity` entries
+        let skip = entries.len().saturating_sub(self.capacity);
+        let mut inner = self.inner.borrow_mut();
+        let mut loaded = 0usize;
+        for e in &entries[skip..] {
+            let key = e
+                .get_str("key")
+                .ok_or("solve-cache json: entry missing key")?;
+            let outcome = parse_outcome(
+                e.get("outcome").ok_or("solve-cache json: entry missing outcome")?,
+            )?;
+            inner.tick += 1;
+            let tick = inner.tick;
+            inner.map.insert(key.to_string(), Entry { outcome, last_used: tick });
+            loaded += 1;
+        }
+        Ok(loaded)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Bit-exact JSON round-trip of cached outcomes (cross-session
+// warm-start; the controller snapshots reuse these emitters)
+// ---------------------------------------------------------------------
+
+/// Append `s` as a JSON string literal.
+pub(crate) fn json_str(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Append an f64 as its raw bit pattern — a hex *string*, because the
+/// parser narrows every JSON number through f64 and must not touch the
+/// bits.
+pub(crate) fn json_bits(out: &mut String, x: f64) {
+    let _ = write!(out, "\"{:x}\"", x.to_bits());
+}
+
+/// Parse a [`json_bits`] hex string back to the exact f64.
+pub(crate) fn parse_bits(v: &Json) -> Result<f64, String> {
+    let s = v.as_str().ok_or("expected f64 bit string")?;
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|e| format!("bad f64 bit string '{s}': {e}"))
+}
+
+/// Parse a `[json_bits, ...]` array back to exact f64s.
+pub(crate) fn parse_bits_arr(v: &Json) -> Result<Vec<f64>, String> {
+    v.as_arr()
+        .ok_or("expected array of f64 bit strings")?
+        .iter()
+        .map(parse_bits)
+        .collect()
+}
+
+/// Append a `[json_bits, ...]` array.
+pub(crate) fn json_bits_arr(out: &mut String, xs: &[f64]) {
+    out.push('[');
+    for (i, &x) in xs.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        json_bits(out, x);
+    }
+    out.push(']');
+}
+
+fn get_usize(v: &Json, key: &str) -> Result<usize, String> {
+    v.get_f64(key).map(|x| x as usize).ok_or_else(|| format!("missing {key}"))
+}
+
+/// Append an [`Allocation`].
+pub(crate) fn json_alloc(out: &mut String, a: &Allocation) {
+    let _ = write!(out, "{{\"instances\": {:?}, \"quotas\": ", a.instances);
+    json_bits_arr(out, &a.quotas);
+    out.push('}');
+}
+
+/// Parse an [`Allocation`].
+pub(crate) fn parse_alloc(v: &Json) -> Result<Allocation, String> {
+    let instances = v
+        .get("instances")
+        .and_then(Json::as_arr)
+        .ok_or("allocation missing instances")?
+        .iter()
+        .map(|x| x.as_f64().map(|f| f as u32).ok_or("bad instance count"))
+        .collect::<Result<Vec<_>, _>>()?;
+    let quotas = parse_bits_arr(v.get("quotas").ok_or("allocation missing quotas")?)?;
+    Ok(Allocation { instances, quotas })
+}
+
+/// Append a [`Deployment`] (placements in order, batch, comm mode).
+pub(crate) fn json_deployment(out: &mut String, d: &Deployment) {
+    let comm = match d.comm {
+        CommMode::MainMemory => "main_memory",
+        CommMode::GlobalIpc => "global_ipc",
+    };
+    let _ = write!(out, "{{\"batch\": {}, \"comm\": \"{comm}\", \"placements\": [", d.batch);
+    for (i, p) in d.placements.iter().enumerate() {
+        if i > 0 {
+            out.push_str(", ");
+        }
+        let _ = write!(out, "{{\"stage\": {}, \"gpu\": {}, \"sm_frac\": ", p.stage, p.gpu);
+        json_bits(out, p.sm_frac);
+        out.push('}');
+    }
+    out.push_str("]}");
+}
+
+/// Parse a [`Deployment`].
+pub(crate) fn parse_deployment(v: &Json) -> Result<Deployment, String> {
+    let batch = get_usize(v, "batch")? as u32;
+    let comm = match v.get_str("comm").ok_or("deployment missing comm")? {
+        "main_memory" => CommMode::MainMemory,
+        "global_ipc" => CommMode::GlobalIpc,
+        other => return Err(format!("unknown comm mode '{other}'")),
+    };
+    let placements = v
+        .get("placements")
+        .and_then(Json::as_arr)
+        .ok_or("deployment missing placements")?
+        .iter()
+        .map(|p| {
+            Ok(InstancePlacement {
+                stage: get_usize(p, "stage")?,
+                gpu: get_usize(p, "gpu")?,
+                sm_frac: parse_bits(p.get("sm_frac").ok_or("placement missing sm_frac")?)?,
+            })
+        })
+        .collect::<Result<Vec<_>, String>>()?;
+    Ok(Deployment { placements, batch, comm })
+}
+
+/// Emit an [`ArrivalProcess`] (rates as bit-exact hex, like every float
+/// in the durability layer).
+pub(crate) fn json_arrivals(out: &mut String, a: &ArrivalProcess) {
+    match a {
+        ArrivalProcess::Constant { rate_qps } => {
+            out.push_str("{\"constant\": {\"rate_qps\": ");
+            json_bits(out, *rate_qps);
+            out.push_str("}}");
+        }
+        ArrivalProcess::Diurnal { pattern } => {
+            out.push_str("{\"diurnal\": {\"peak_qps\": ");
+            json_bits(out, pattern.peak_qps);
+            out.push_str(", \"trough_frac\": ");
+            json_bits(out, pattern.trough_frac);
+            out.push_str(", \"period_s\": ");
+            json_bits(out, pattern.period_s);
+            out.push_str("}}");
+        }
+    }
+}
+
+/// Parse an [`ArrivalProcess`].
+pub(crate) fn parse_arrivals(v: &Json) -> Result<ArrivalProcess, String> {
+    if let Some(c) = v.get("constant") {
+        let rate_qps = parse_bits(c.get("rate_qps").ok_or("constant missing rate_qps")?)?;
+        return Ok(ArrivalProcess::Constant { rate_qps });
+    }
+    if let Some(d) = v.get("diurnal") {
+        return Ok(ArrivalProcess::Diurnal {
+            pattern: DiurnalPattern {
+                peak_qps: parse_bits(d.get("peak_qps").ok_or("diurnal missing peak_qps")?)?,
+                trough_frac: parse_bits(
+                    d.get("trough_frac").ok_or("diurnal missing trough_frac")?,
+                )?,
+                period_s: parse_bits(d.get("period_s").ok_or("diurnal missing period_s")?)?,
+            },
+        });
+    }
+    Err("arrival process must be 'constant' or 'diurnal'".to_string())
+}
+
+/// Emit a [`Priority`] tag.
+pub(crate) fn json_priority(out: &mut String, p: Priority) {
+    out.push_str(match p {
+        Priority::LatencyCritical => "\"latency_critical\"",
+        Priority::BestEffort => "\"best_effort\"",
+    });
+}
+
+/// Parse a [`Priority`] tag.
+pub(crate) fn parse_priority(v: &Json) -> Result<Priority, String> {
+    match v.as_str().ok_or("priority must be a string")? {
+        "latency_critical" => Ok(Priority::LatencyCritical),
+        "best_effort" => Ok(Priority::BestEffort),
+        other => Err(format!("unknown priority '{other}'")),
+    }
+}
+
+fn json_solution(out: &mut String, s: &Solution) {
+    out.push_str("{\"allocation\": ");
+    json_alloc(out, &s.allocation);
+    out.push_str(", \"deployment\": ");
+    json_deployment(out, &s.deployment);
+    out.push_str(", \"plan_qps\": ");
+    json_bits(out, s.plan_qps);
+    out.push_str(", \"predicted_p99_s\": ");
+    json_bits(out, s.predicted_p99_s);
+    out.push_str(", \"stage_p99_s\": ");
+    json_bits_arr(out, &s.stage_p99_s);
+    out.push_str(", \"usage\": ");
+    json_bits(out, s.usage);
+    let _ = write!(out, ", \"gpus\": {}", s.gpus);
+    out.push_str(", \"objective_value\": ");
+    json_bits(out, s.objective_value);
+    let _ = write!(
+        out,
+        ", \"evaluated\": {}, \"feasible_found\": {}}}",
+        s.evaluated, s.feasible_found
+    );
+}
+
+fn parse_solution(v: &Json) -> Result<Solution, String> {
+    Ok(Solution {
+        allocation: parse_alloc(v.get("allocation").ok_or("solution missing allocation")?)?,
+        deployment: parse_deployment(
+            v.get("deployment").ok_or("solution missing deployment")?,
+        )?,
+        plan_qps: parse_bits(v.get("plan_qps").ok_or("solution missing plan_qps")?)?,
+        predicted_p99_s: parse_bits(
+            v.get("predicted_p99_s").ok_or("solution missing predicted_p99_s")?,
+        )?,
+        stage_p99_s: parse_bits_arr(
+            v.get("stage_p99_s").ok_or("solution missing stage_p99_s")?,
+        )?,
+        usage: parse_bits(v.get("usage").ok_or("solution missing usage")?)?,
+        gpus: get_usize(v, "gpus")?,
+        objective_value: parse_bits(
+            v.get("objective_value").ok_or("solution missing objective_value")?,
+        )?,
+        evaluated: get_usize(v, "evaluated")?,
+        feasible_found: get_usize(v, "feasible_found")?,
+    })
+}
+
+fn json_outcome(out: &mut String, o: &PlanOutcome) {
+    match o {
+        Ok(s) => {
+            out.push_str("{\"ok\": ");
+            json_solution(out, s);
+            out.push('}');
+        }
+        Err(e) => {
+            out.push_str("{\"err\": ");
+            match e {
+                Infeasible::BadRequest { detail } => {
+                    out.push_str("{\"kind\": \"bad_request\", \"detail\": ");
+                    json_str(out, detail);
+                    out.push('}');
+                }
+                Infeasible::NoAllocation { detail } => {
+                    out.push_str("{\"kind\": \"no_allocation\", \"detail\": ");
+                    json_str(out, detail);
+                    out.push('}');
+                }
+                Infeasible::NoPlacement { stage, detail } => {
+                    let _ = write!(out, "{{\"kind\": \"no_placement\", \"stage\": {stage}, \"detail\": ");
+                    json_str(out, detail);
+                    out.push('}');
+                }
+                Infeasible::NoImprovement { current_usage, planned_usage } => {
+                    out.push_str("{\"kind\": \"no_improvement\", \"current_usage\": ");
+                    json_bits(out, *current_usage);
+                    out.push_str(", \"planned_usage\": ");
+                    json_bits(out, *planned_usage);
+                    out.push('}');
+                }
+                Infeasible::NoMemory { needed_bytes, available_bytes } => {
+                    out.push_str("{\"kind\": \"no_memory\", \"needed_bytes\": ");
+                    json_bits(out, *needed_bytes);
+                    out.push_str(", \"available_bytes\": ");
+                    json_bits(out, *available_bytes);
+                    out.push('}');
+                }
+            }
+            out.push('}');
+        }
+    }
+}
+
+fn parse_outcome(v: &Json) -> Result<PlanOutcome, String> {
+    if let Some(s) = v.get("ok") {
+        return Ok(Ok(parse_solution(s)?));
+    }
+    let e = v.get("err").ok_or("outcome missing both ok and err")?;
+    let detail = || -> Result<String, String> {
+        e.get_str("detail").map(str::to_string).ok_or_else(|| "infeasible missing detail".into())
+    };
+    let err = match e.get_str("kind").ok_or("infeasible missing kind")? {
+        "bad_request" => Infeasible::BadRequest { detail: detail()? },
+        "no_allocation" => Infeasible::NoAllocation { detail: detail()? },
+        "no_placement" => Infeasible::NoPlacement { stage: get_usize(e, "stage")?, detail: detail()? },
+        "no_improvement" => Infeasible::NoImprovement {
+            current_usage: parse_bits(e.get("current_usage").ok_or("missing current_usage")?)?,
+            planned_usage: parse_bits(e.get("planned_usage").ok_or("missing planned_usage")?)?,
+        },
+        "no_memory" => Infeasible::NoMemory {
+            needed_bytes: parse_bits(e.get("needed_bytes").ok_or("missing needed_bytes")?)?,
+            available_bytes: parse_bits(
+                e.get("available_bytes").ok_or("missing available_bytes")?,
+            )?,
+        },
+        other => return Err(format!("unknown infeasible kind '{other}'")),
+    };
+    Ok(Err(err))
 }
 
 // ---------------------------------------------------------------------
@@ -636,5 +1024,61 @@ mod tests {
         assert_eq!(stats.hits, 0);
         assert_eq!(stats.misses, 2);
         assert_eq!(stats.entries, 0);
+    }
+
+    #[test]
+    fn json_round_trip_is_bit_identical_and_warm() {
+        let (c, p, preds) = fixture();
+        let cache = SolveCache::new(8);
+        // populate with a feasible solve AND a typed infeasibility so
+        // both outcome arms round-trip
+        let ok_req = PlanRequest::new(
+            Objective::MinResource { load_qps: 40.0 },
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let err_req = PlanRequest::new(
+            Objective::MinResource { load_qps: 1.0e9 },
+            ClusterState::exclusive(&c),
+            &p,
+            &preds,
+        )
+        .batch(16);
+        let direct_ok = cache.plan(&ok_req).expect("solves");
+        let direct_err = cache.plan(&err_req).expect_err("1e9 qps is infeasible");
+        let text = cache.to_json();
+
+        // from_json: full reconstruction, zeroed counters
+        let warm = SolveCache::from_json(&text).expect("parses its own output");
+        assert_eq!(warm.capacity(), 8);
+        assert_eq!(warm.stats().entries, 2);
+        assert_eq!((warm.stats().hits, warm.stats().misses), (0, 0));
+        let hit = warm.plan(&ok_req).expect("solves");
+        assert_eq!(hit.allocation, direct_ok.allocation);
+        assert_eq!(hit.deployment.placements, direct_ok.deployment.placements);
+        assert_eq!(hit.predicted_p99_s.to_bits(), direct_ok.predicted_p99_s.to_bits());
+        assert_eq!(hit.objective_value.to_bits(), direct_ok.objective_value.to_bits());
+        assert_eq!(
+            (hit.evaluated, hit.feasible_found),
+            (direct_ok.evaluated, direct_ok.feasible_found)
+        );
+        assert_eq!(warm.plan(&err_req).expect_err("still infeasible"), direct_err);
+        // both lookups were served from the warm entries
+        assert_eq!((warm.stats().hits, warm.stats().misses), (2, 0));
+        // serialize -> load -> serialize is a fixpoint
+        assert_eq!(warm.to_json(), text);
+
+        // load_json keeps the receiving cache's capacity: a 1-entry
+        // cache keeps only the most recent serialized entry
+        let tiny = SolveCache::new(1);
+        assert_eq!(tiny.load_json(&text).expect("loads"), 1);
+        assert_eq!(tiny.stats().entries, 1);
+        let _ = tiny.plan(&err_req);
+        assert_eq!(tiny.stats().hits, 1, "most recent entry (err_req) survived");
+        // and a capacity-0 cache loads nothing
+        let off = SolveCache::new(0);
+        assert_eq!(off.load_json(&text).expect("loads"), 0);
     }
 }

@@ -135,6 +135,7 @@ fn plan_class(req: &PlanRequest<'_>, class: &GpuClass, start: usize) -> PlanOutc
         num_gpus: class.count,
         classes: Vec::new(),
         partition: PartitionMode::Continuous,
+        degrade: Vec::new(),
         ..parent.clone()
     };
     let holds = &req.cluster.reservations()[start..start + class.count];

@@ -113,6 +113,21 @@ pub struct ScenarioGpuFailure {
     pub recover_s: Option<f64>,
 }
 
+/// One GPU-degrade window of a scenario: the listed GPUs slow down by
+/// `scale` (ECC/thermal throttling) at `at_s` and (optionally) return
+/// to full speed at `restore_s`.
+#[derive(Debug, Clone)]
+pub struct ScenarioGpuDegrade {
+    /// When the slowdown begins.
+    pub at_s: f64,
+    /// The affected GPU ids.
+    pub gpus: Vec<usize>,
+    /// Compute-time multiplier while degraded (> 1.0: slower).
+    pub scale: f64,
+    /// When the GPUs return to full speed (never when absent).
+    pub restore_s: Option<f64>,
+}
+
 /// The per-tenant objective kinds a spec may name.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ScenarioObjective {
@@ -143,6 +158,9 @@ pub struct ScenarioSpec {
     pub tenants: Vec<ScenarioTenant>,
     /// Chaos: GPU-failure windows injected into the trace replay.
     pub gpu_failures: Vec<ScenarioGpuFailure>,
+    /// Chaos: GPU-degrade (slowdown) windows injected into the trace
+    /// replay.
+    pub gpu_degrades: Vec<ScenarioGpuDegrade>,
 }
 
 impl ScenarioSpec {
@@ -162,9 +180,9 @@ impl ScenarioSpec {
     fn from_json(doc: &Json) -> Result<ScenarioSpec, String> {
         let obj = doc.as_obj().ok_or("scenario spec must be a JSON object")?;
         for key in obj.keys() {
-            const KNOWN: [&str; 8] = [
+            const KNOWN: [&str; 9] = [
                 "name", "cluster", "batch", "seed", "queries", "cells", "tenants",
-                "gpu_failures",
+                "gpu_failures", "gpu_degrades",
             ];
             if !KNOWN.contains(&key.as_str()) {
                 return Err(format!("unknown scenario field '{key}'"));
@@ -202,7 +220,18 @@ impl ScenarioSpec {
             tenants.push(tenant);
         }
         let gpu_failures = parse_gpu_failures(doc.get("gpu_failures"), cluster.num_gpus)?;
-        Ok(ScenarioSpec { name, cluster, batch, seed, queries, cells, tenants, gpu_failures })
+        let gpu_degrades = parse_gpu_degrades(doc.get("gpu_degrades"), cluster.num_gpus)?;
+        Ok(ScenarioSpec {
+            name,
+            cluster,
+            batch,
+            seed,
+            queries,
+            cells,
+            tenants,
+            gpu_failures,
+            gpu_degrades,
+        })
     }
 
     /// The tenants as a time-ordered arrival/departure/shrink trace for
@@ -258,6 +287,20 @@ impl ScenarioSpec {
                     t_s: r,
                     tenant: 0,
                     kind: TraceEventKind::GpuRecover { gpu_ids: f.gpus.clone() },
+                });
+            }
+        }
+        for d in &self.gpu_degrades {
+            events.push(TenantTraceEvent {
+                t_s: d.at_s,
+                tenant: 0,
+                kind: TraceEventKind::GpuDegrade { gpu_ids: d.gpus.clone(), scale: d.scale },
+            });
+            if let Some(r) = d.restore_s {
+                events.push(TenantTraceEvent {
+                    t_s: r,
+                    tenant: 0,
+                    kind: TraceEventKind::GpuRestore { gpu_ids: d.gpus.clone() },
                 });
             }
         }
@@ -786,6 +829,72 @@ fn parse_gpu_failures(
     Ok(out)
 }
 
+/// Parse and validate the scenario-level `gpu_degrades` array against
+/// the resolved cluster size.
+fn parse_gpu_degrades(
+    node: Option<&Json>,
+    num_gpus: usize,
+) -> Result<Vec<ScenarioGpuDegrade>, String> {
+    let Some(node) = node else {
+        return Ok(Vec::new());
+    };
+    let arr = node.as_arr().ok_or("'gpu_degrades' must be an array")?;
+    let mut out = Vec::with_capacity(arr.len());
+    for (j, d) in arr.iter().enumerate() {
+        let obj = d
+            .as_obj()
+            .ok_or_else(|| format!("gpu degrade #{j} must be a JSON object"))?;
+        for key in obj.keys() {
+            const KNOWN: [&str; 4] = ["at_s", "gpus", "scale", "restore_s"];
+            if !KNOWN.contains(&key.as_str()) {
+                return Err(format!("gpu degrade #{j}: unknown field '{key}'"));
+            }
+        }
+        let at_s = d
+            .get_f64("at_s")
+            .ok_or_else(|| format!("gpu degrade #{j} needs an 'at_s'"))?;
+        let gpus_json = d
+            .get("gpus")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| format!("gpu degrade #{j} needs a 'gpus' array"))?;
+        if gpus_json.is_empty() {
+            return Err(format!("gpu degrade #{j}: 'gpus' must not be empty"));
+        }
+        let mut gpus = Vec::with_capacity(gpus_json.len());
+        for g in gpus_json {
+            let x = g
+                .as_f64()
+                .ok_or_else(|| format!("gpu degrade #{j}: gpu ids must be numbers"))?;
+            if x.fract() != 0.0 || x < 0.0 || x as usize >= num_gpus {
+                return Err(format!(
+                    "gpu degrade #{j}: gpu id {x} out of range (cluster has {num_gpus} GPUs)"
+                ));
+            }
+            gpus.push(x as usize);
+        }
+        let scale = d
+            .get_f64("scale")
+            .ok_or_else(|| format!("gpu degrade #{j} needs a 'scale'"))?;
+        // 1.0 is a no-op and < 1.0 would be a speed-UP; a degrade is
+        // strictly a slowdown
+        if !scale.is_finite() || scale <= 1.0 {
+            return Err(format!(
+                "gpu degrade #{j}: scale must be finite and > 1.0 (slower), got {scale}"
+            ));
+        }
+        let restore_s = d.get_f64("restore_s");
+        if let Some(r) = restore_s {
+            if r <= at_s {
+                return Err(format!(
+                    "gpu degrade #{j}: restore_s {r} must follow at_s {at_s}"
+                ));
+            }
+        }
+        out.push(ScenarioGpuDegrade { at_s, gpus, scale, restore_s });
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -842,6 +951,8 @@ mod tests {
                 TraceEventKind::BurstEnd => "burst-end",
                 TraceEventKind::GpuFail { .. } => "gpufail",
                 TraceEventKind::GpuRecover { .. } => "gpurecover",
+                TraceEventKind::GpuDegrade { .. } => "gpudegrade",
+                TraceEventKind::GpuRestore { .. } => "gpurestore",
             })
             .collect();
         assert_eq!(kinds, ["arrive", "arrive", "shrink", "depart"]);
@@ -852,6 +963,8 @@ mod tests {
         let spec = ScenarioSpec::parse(
             r#"{
             "gpu_failures": [{"at_s": 100.0, "gpus": [0], "recover_s": 200.0}],
+            "gpu_degrades": [{"at_s": 300.0, "gpus": [1], "scale": 1.5,
+                              "restore_s": 400.0}],
             "tenants": [
                 {"name": "lc", "pipeline": "img-to-text", "plan_qps": 90,
                  "bursts": [{"at_s": 30.0, "rate_mult": 2.0, "duration_s": 15.0}]},
@@ -866,8 +979,12 @@ mod tests {
         assert_eq!(spec.tenants[0].bursts.len(), 1);
         assert_eq!(spec.gpu_failures.len(), 1);
         assert_eq!(spec.gpu_failures[0].gpus, vec![0]);
+        assert_eq!(spec.gpu_degrades.len(), 1);
+        assert_eq!(spec.gpu_degrades[0].gpus, vec![1]);
+        assert_eq!(spec.gpu_degrades[0].scale, 1.5);
         // trace emits arrive(0), be-arrive(5), burst(30), gpufail(100),
-        // gpurecover(200) — burst ends are the replay's to synthesize
+        // gpurecover(200), gpudegrade(300), gpurestore(400) — burst ends
+        // are the replay's to synthesize
         let trace = spec.trace();
         let kinds: Vec<&'static str> = trace
             .events
@@ -880,9 +997,14 @@ mod tests {
                 TraceEventKind::BurstEnd => "burst-end",
                 TraceEventKind::GpuFail { .. } => "gpufail",
                 TraceEventKind::GpuRecover { .. } => "gpurecover",
+                TraceEventKind::GpuDegrade { .. } => "gpudegrade",
+                TraceEventKind::GpuRestore { .. } => "gpurestore",
             })
             .collect();
-        assert_eq!(kinds, ["arrive", "arrive", "burst", "gpufail", "gpurecover"]);
+        assert_eq!(
+            kinds,
+            ["arrive", "arrive", "burst", "gpufail", "gpurecover", "gpudegrade", "gpurestore"]
+        );
         let priorities: Vec<Priority> = trace
             .events
             .iter()
@@ -949,6 +1071,31 @@ mod tests {
                 r#"{"gpu_failures": [{"at_s": 5, "gpus": [0], "undo_s": 9}],
                     "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
                 "gpu failure #0: unknown field 'undo_s'",
+            ),
+            (
+                r#"{"gpu_degrades": [{"at_s": 5, "gpus": [0]}],
+                    "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "gpu degrade #0 needs a 'scale'",
+            ),
+            (
+                r#"{"gpu_degrades": [{"at_s": 5, "gpus": [0], "scale": 1.0}],
+                    "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "scale must be finite and > 1.0",
+            ),
+            (
+                r#"{"gpu_degrades": [{"at_s": 5, "gpus": [7], "scale": 1.5}],
+                    "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "gpu degrade #0: gpu id 7 out of range",
+            ),
+            (
+                r#"{"gpu_degrades": [{"at_s": 50, "gpus": [0], "scale": 1.5, "restore_s": 50}],
+                    "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "restore_s 50 must follow at_s 50",
+            ),
+            (
+                r#"{"gpu_degrades": [{"at_s": 5, "gpus": [0], "scale": 1.5, "undo_s": 9}],
+                    "tenants": [{"pipeline": "img-to-text", "plan_qps": 10}]}"#,
+                "gpu degrade #0: unknown field 'undo_s'",
             ),
         ] {
             let err = ScenarioSpec::parse(frag).expect_err(want);

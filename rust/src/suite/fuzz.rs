@@ -21,7 +21,12 @@
 //!      never exceed the device's `mem_bytes` in any replayed interval
 //!      ([`ReplayReport::kv_peak_bytes`] stays under the physical
 //!      capacity; trivially true without LLM tenants, load-bearing
-//!      with [`FuzzConfig::llm`]).
+//!      with [`FuzzConfig::llm`]);
+//!  (f) **crash recovery reconverges** — with [`FuzzConfig::crash`],
+//!      the durable replay is killed at sampled event boundaries
+//!      (middle and end) and recovered from its WAL + snapshots
+//!      ([`crate::coordinator::recovery`]); the recovered fingerprint
+//!      must equal the uninterrupted replay's bit-for-bit.
 //!
 //! The generator emits JSON *text* and the harness re-parses it via
 //! [`ScenarioSpec::parse`], so the dumped artifact — not some internal
@@ -35,6 +40,9 @@ use std::path::PathBuf;
 
 use crate::coordinator::admission::{replay_trace, ReplayConfig};
 use crate::coordinator::cells::{replay_trace_cells, CellsConfig, CellsReplayConfig};
+use crate::coordinator::recovery::{
+    trace_event_list, verify_crash_recovery, verify_crash_recovery_cells,
+};
 use crate::coordinator::AdmissionConfig;
 use crate::planner::ScenarioSpec;
 use crate::util::rng::{mix_seed, Rng};
@@ -68,6 +76,17 @@ pub struct FuzzConfig {
     /// admission/sim path and invariant (e). Off keeps generation
     /// byte-identical to the legacy population.
     pub llm: bool,
+    /// Mix partial GPU-degrade windows (`"gpu_degrades"` — ECC/thermal
+    /// slowdowns with optional restores) into the generated population.
+    /// Off keeps generation byte-identical to the legacy population.
+    pub degrade: bool,
+    /// Check invariant (f): run each clean scenario through the
+    /// crash-injection harness
+    /// ([`crate::coordinator::recovery::verify_crash_recovery`]),
+    /// killing the durable controller at the trace's middle and final
+    /// event boundaries and requiring the recovered replay to
+    /// fingerprint-match the uninterrupted one.
+    pub crash: bool,
 }
 
 impl Default for FuzzConfig {
@@ -79,6 +98,8 @@ impl Default for FuzzConfig {
             break_qos: false,
             dump_dir: None,
             llm: false,
+            degrade: false,
+            crash: false,
         }
     }
 }
@@ -89,8 +110,8 @@ pub struct FuzzViolation {
     /// Scenario index within the run (seeded by `mix_seed(seed, index)`).
     pub index: usize,
     /// Which invariant broke: `invalid-spec`, `replay-error`,
-    /// `qos-audit`, `repack-regression`, `kv-overflow`, or
-    /// `thread-divergence`.
+    /// `qos-audit`, `repack-regression`, `kv-overflow`,
+    /// `thread-divergence`, or `crash-recovery`.
     pub kind: String,
     pub detail: String,
     /// The exact generated spec text — feed to `camelot admit --spec`.
@@ -129,16 +150,25 @@ fn pick(rng: &mut Rng, xs: &[&'static str]) -> &'static str {
 /// are emitted as small integers or fixed decimal strings: the text
 /// round-trips through the f64-based JSON parser exactly.
 pub fn generate_spec_json(seed: u64, index: usize, queries: usize) -> String {
-    generate_spec_json_with(seed, index, queries, false)
+    generate_spec_json_with(seed, index, queries, false, false)
 }
 
-/// [`generate_spec_json`] with the LLM-tenant mix switch. `llm: false`
-/// consumes exactly the legacy RNG draw sequence, so existing seeds
-/// keep generating byte-identical scenarios; `llm: true` converts
-/// ~25% of tenant slots into `"workload": "llm"` tenants with sampled
-/// prompt/output/KV shapes (and a lower load range — decode-bound
-/// pipelines saturate far below the vision benchmarks).
-pub fn generate_spec_json_with(seed: u64, index: usize, queries: usize, llm: bool) -> String {
+/// [`generate_spec_json`] with the LLM-tenant and GPU-degrade mix
+/// switches. With both off, exactly the legacy RNG draw sequence is
+/// consumed, so existing seeds keep generating byte-identical
+/// scenarios. `llm: true` converts ~25% of tenant slots into
+/// `"workload": "llm"` tenants with sampled prompt/output/KV shapes
+/// (and a lower load range — decode-bound pipelines saturate far below
+/// the vision benchmarks). `degrade: true` appends a `"gpu_degrades"`
+/// window (sampled GPUs, scale > 1.0, usually restored) to ~40% of
+/// scenarios, exercising the partial-slowdown path end to end.
+pub fn generate_spec_json_with(
+    seed: u64,
+    index: usize,
+    queries: usize,
+    llm: bool,
+    degrade: bool,
+) -> String {
     let mut rng = Rng::new(mix_seed(seed, index as u64));
     let gpus = 2 + rng.below(3); // 2..=4 keeps per-decision solves cheap
     let cells = if rng.f64() < 0.35 { 2 } else { 1 };
@@ -282,6 +312,28 @@ pub fn generate_spec_json_with(seed: u64, index: usize, queries: usize, llm: boo
         }
         json.push_str("\n  ]");
     }
+    // `degrade &&` short-circuits like the llm switch above: with the
+    // switch off no RNG draw is consumed and the legacy byte stream is
+    // preserved
+    if degrade && rng.f64() < 0.4 {
+        let at = 50 + rng.below(500);
+        let k = 1 + rng.below(gpus.min(2));
+        let mut ids: Vec<usize> = (0..gpus).collect();
+        rng.shuffle(&mut ids);
+        ids.truncate(k);
+        ids.sort_unstable();
+        let ids: Vec<String> = ids.iter().map(|g| g.to_string()).collect();
+        let scale = pick(&mut rng, &["1.25", "1.5", "2.0"]);
+        let _ = write!(
+            json,
+            ",\n  \"gpu_degrades\": [\n    {{\"at_s\": {at}, \"gpus\": [{}], \"scale\": {scale}",
+            ids.join(", ")
+        );
+        if rng.f64() < 0.8 {
+            let _ = write!(json, ", \"restore_s\": {}", at + 50 + rng.below(300));
+        }
+        json.push_str("}\n  ]");
+    }
     json.push_str("\n}\n");
     json
 }
@@ -304,12 +356,13 @@ pub fn admission_config(spec: &ScenarioSpec, break_qos: bool) -> AdmissionConfig
     admission
 }
 
-/// Check one generated scenario against invariants (a)–(c). Returns
-/// the number of replay events checked, or the list of
-/// `(kind, detail)` problems found.
+/// Check one generated scenario against invariants (a)–(c), plus (f)
+/// when `crash` is set. Returns the number of replay events checked,
+/// or the list of `(kind, detail)` problems found.
 pub fn check_scenario(
     spec_json: &str,
     break_qos: bool,
+    crash: bool,
 ) -> Result<usize, Vec<(String, String)>> {
     let spec = match ScenarioSpec::parse(spec_json) {
         Ok(spec) => spec,
@@ -339,6 +392,7 @@ pub fn check_scenario(
                 threads,
                 dedup: true,
                 audit_qos: true,
+                ..Default::default()
             };
             match replay_trace_cells(&spec.cluster, &trace, &cfg) {
                 Ok(rep) => rep.merged,
@@ -357,6 +411,7 @@ pub fn check_scenario(
                 threads,
                 dedup: true,
                 audit_qos: true,
+                ..Default::default()
             };
             match replay_trace(&spec.cluster, &trace, &cfg) {
                 Ok(rep) => rep,
@@ -425,6 +480,43 @@ pub fn check_scenario(
             }
         }
     }
+    // (f) crash recovery: kill the durable controller at the trace's
+    // middle and final event boundaries and require the recovered
+    // replay to fingerprint-match the uninterrupted one (single
+    // thread, snapshot every 2 events so both the snapshot-restore and
+    // the WAL-tail paths are exercised)
+    if crash && problems.is_empty() {
+        let n = trace_event_list(&trace).len();
+        let boundaries = [n / 2, n];
+        let res = if spec.cells > 1 {
+            let cfg = CellsReplayConfig {
+                router: CellsConfig {
+                    cells: spec.cells,
+                    admission: admission.clone(),
+                    ..Default::default()
+                },
+                queries: spec.queries,
+                threads: 1,
+                dedup: true,
+                audit_qos: false,
+                ..Default::default()
+            };
+            verify_crash_recovery_cells(&spec.cluster, &trace, &cfg, 2, &boundaries, &[])
+        } else {
+            let cfg = ReplayConfig {
+                admission: admission.clone(),
+                queries: spec.queries,
+                threads: 1,
+                dedup: true,
+                audit_qos: false,
+                ..Default::default()
+            };
+            verify_crash_recovery(&spec.cluster, &trace, &cfg, 2, &boundaries, &[])
+        };
+        if let Err(e) = res {
+            problems.push(("crash-recovery".into(), e));
+        }
+    }
     if problems.is_empty() {
         Ok(oracle.map(|(_, events)| events).unwrap_or(0))
     } else {
@@ -458,8 +550,9 @@ pub fn run_fuzz(cfg: &FuzzConfig) -> Result<FuzzReport, String> {
         violations: Vec::new(),
     };
     for index in 0..cfg.scenarios {
-        let spec_json = generate_spec_json_with(cfg.seed, index, cfg.queries, cfg.llm);
-        match check_scenario(&spec_json, cfg.break_qos) {
+        let spec_json =
+            generate_spec_json_with(cfg.seed, index, cfg.queries, cfg.llm, cfg.degrade);
+        match check_scenario(&spec_json, cfg.break_qos, cfg.crash) {
             Ok(events) => report.events_checked += events,
             Err(problems) => {
                 let dump_path = dump_spec(cfg, index, &spec_json);
@@ -569,7 +662,7 @@ mod tests {
                 continue;
             }
             checked += 1;
-            if let Err(problems) = check_scenario(&json, false) {
+            if let Err(problems) = check_scenario(&json, false, false) {
                 panic!("mixed-pool scenario {index} violated: {problems:?}\n{json}");
             }
         }
@@ -582,7 +675,7 @@ mod tests {
         for index in 0..25 {
             assert_eq!(
                 generate_spec_json(7, index, 80),
-                generate_spec_json_with(7, index, 80, false),
+                generate_spec_json_with(7, index, 80, false, false),
                 "scenario {index} diverged with llm off"
             );
         }
@@ -593,7 +686,7 @@ mod tests {
         let mut llm_tenants = 0;
         let mut vision_tenants = 0;
         for index in 0..40 {
-            let json = generate_spec_json_with(11, index, 80, true);
+            let json = generate_spec_json_with(11, index, 80, true, false);
             let spec = ScenarioSpec::parse(&json)
                 .unwrap_or_else(|e| panic!("scenario {index} invalid: {e}\n{json}"));
             for t in &spec.tenants {
@@ -617,17 +710,65 @@ mod tests {
             if checked >= 2 {
                 break;
             }
-            let json = generate_spec_json_with(11, index, 60, true);
+            let json = generate_spec_json_with(11, index, 60, true, false);
             let spec = ScenarioSpec::parse(&json).expect("valid spec");
             if !spec.tenants.iter().any(|t| t.pipeline.starts_with("llm:")) {
                 continue;
             }
             checked += 1;
-            if let Err(problems) = check_scenario(&json, false) {
+            if let Err(problems) = check_scenario(&json, false, false) {
                 panic!("llm scenario {index} violated: {problems:?}\n{json}");
             }
         }
         assert!(checked > 0, "no LLM scenario in the first 40");
+    }
+
+    #[test]
+    fn degrade_switch_off_preserves_legacy_generation() {
+        // the degrade=false path must consume the exact legacy RNG
+        // stream
+        for index in 0..25 {
+            assert_eq!(
+                generate_spec_json(7, index, 80),
+                generate_spec_json_with(7, index, 80, false, false),
+                "scenario {index} diverged with degrade off"
+            );
+        }
+    }
+
+    #[test]
+    fn degrade_population_parses_and_replays_cleanly() {
+        // the first generated scenario with a gpu_degrades window must
+        // clear invariants (a)-(c) like any other
+        let mut with_degrade = 0;
+        for index in 0..40 {
+            let json = generate_spec_json_with(11, index, 60, false, true);
+            let spec = ScenarioSpec::parse(&json)
+                .unwrap_or_else(|e| panic!("scenario {index} invalid: {e}\n{json}"));
+            if spec.gpu_degrades.is_empty() {
+                continue;
+            }
+            with_degrade += 1;
+            if with_degrade > 1 {
+                break; // one full thread-matrix replay keeps this brisk
+            }
+            if let Err(problems) = check_scenario(&json, false, false) {
+                panic!("degrade scenario {index} violated: {problems:?}\n{json}");
+            }
+        }
+        assert!(with_degrade > 0, "no gpu_degrades window in the first 40");
+    }
+
+    #[test]
+    fn crash_invariant_holds_on_first_scenarios() {
+        // invariant (f) end to end: durable replay, kill at middle and
+        // final boundaries, recover, fingerprint-match
+        for index in 0..2 {
+            let json = generate_spec_json(7, index, 60);
+            if let Err(problems) = check_scenario(&json, false, true) {
+                panic!("crash recovery violated on scenario {index}: {problems:?}\n{json}");
+            }
+        }
     }
 
     #[test]

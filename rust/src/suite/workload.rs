@@ -329,6 +329,18 @@ pub enum TraceEventKind {
     /// The listed GPUs return to service; a normal churn-gated re-pack
     /// may spread residents back onto them.
     GpuRecover { gpu_ids: Vec<usize> },
+    /// The listed GPUs *partially* degrade (ECC row retirement, thermal
+    /// throttling): each keeps serving but at `scale` × its healthy
+    /// service time (`scale` > 1.0 — the multiplier lands on
+    /// [`ClusterSpec::scale_at`](crate::config::ClusterSpec::scale_at)
+    /// and flows through the QoS gate and the interval simulations).
+    /// Unlike [`GpuFail`](Self::GpuFail), placements stay: the
+    /// controller sheds residents only if the slowdown breaks their
+    /// predicted QoS. The `tenant` id is ignored (use 0 by convention).
+    GpuDegrade { gpu_ids: Vec<usize>, scale: f64 },
+    /// The listed GPUs return to full speed; a normal churn-gated
+    /// re-pack may follow.
+    GpuRestore { gpu_ids: Vec<usize> },
 }
 
 /// One arrival or departure of a tenant trace.
@@ -492,11 +504,13 @@ impl TenantTrace {
                     let rank = |k: &TraceEventKind| match k {
                         TraceEventKind::Depart => 0u8,
                         TraceEventKind::GpuRecover { .. } => 1,
-                        TraceEventKind::Shrink { .. } => 2,
-                        TraceEventKind::BurstEnd => 3,
-                        TraceEventKind::Arrive { .. } => 4,
-                        TraceEventKind::Burst { .. } => 5,
-                        TraceEventKind::GpuFail { .. } => 6,
+                        TraceEventKind::GpuRestore { .. } => 2,
+                        TraceEventKind::Shrink { .. } => 3,
+                        TraceEventKind::BurstEnd => 4,
+                        TraceEventKind::Arrive { .. } => 5,
+                        TraceEventKind::Burst { .. } => 6,
+                        TraceEventKind::GpuDegrade { .. } => 7,
+                        TraceEventKind::GpuFail { .. } => 8,
                     };
                     rank(&a.kind).cmp(&rank(&b.kind))
                 })
@@ -550,7 +564,9 @@ impl TenantTrace {
                 | TraceEventKind::Burst { .. }
                 | TraceEventKind::BurstEnd
                 | TraceEventKind::GpuFail { .. }
-                | TraceEventKind::GpuRecover { .. } => {}
+                | TraceEventKind::GpuRecover { .. }
+                | TraceEventKind::GpuDegrade { .. }
+                | TraceEventKind::GpuRestore { .. } => {}
             }
         }
         peak
@@ -998,8 +1014,9 @@ mod tests {
 
     #[test]
     fn chaos_sort_ranks_are_stable_at_equal_times() {
-        // at one instant: recover before shrink before burst-end before
-        // arrive before burst before fail, departures first of all
+        // at one instant: recover before restore before shrink before
+        // burst-end before arrive before burst before degrade before
+        // fail, departures first of all
         let mk = |tenant: u64, kind: TraceEventKind| TenantTraceEvent { t_s: 5.0, tenant, kind };
         let mut events = vec![
             mk(0, TraceEventKind::GpuFail { gpu_ids: vec![0] }),
@@ -1015,10 +1032,12 @@ mod tests {
             mk(4, TraceEventKind::Shrink { target_qps: 5.0 }),
             mk(5, TraceEventKind::GpuRecover { gpu_ids: vec![1] }),
             mk(6, TraceEventKind::Depart),
+            mk(7, TraceEventKind::GpuDegrade { gpu_ids: vec![0], scale: 1.5 }),
+            mk(8, TraceEventKind::GpuRestore { gpu_ids: vec![0] }),
         ];
         TenantTrace::sort_events(&mut events);
         let order: Vec<u64> = events.iter().map(|e| e.tenant).collect();
-        assert_eq!(order, vec![6, 5, 4, 3, 2, 1, 0]);
+        assert_eq!(order, vec![6, 5, 8, 4, 3, 2, 1, 7, 0]);
     }
 
     #[test]

@@ -32,6 +32,7 @@ fn cells_cfg(cells: usize, queries: usize, threads: usize, dedup: bool) -> Cells
         threads,
         dedup,
         audit_qos: false,
+        ..Default::default()
     }
 }
 

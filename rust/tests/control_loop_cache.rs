@@ -110,6 +110,7 @@ fn uncached_cfg(queries: usize, threads: usize) -> ReplayConfig {
         threads,
         dedup: false,
         admission: AdmissionConfig { solve_cache: 0, ..Default::default() },
+        ..Default::default()
     }
 }
 

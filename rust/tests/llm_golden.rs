@@ -135,6 +135,7 @@ fn llm_colocation_cells_replay_is_thread_invariant() {
         threads,
         dedup: true,
         audit_qos: false,
+        ..Default::default()
     };
     let baseline =
         replay_trace_cells(&spec.cluster, &trace, &cfg(1)).expect("cells replay");

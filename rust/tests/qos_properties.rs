@@ -30,8 +30,7 @@ fn fuzz_run_is_clean_and_reproducible() {
         scenarios: 30,
         seed: 7,
         queries: 40,
-        break_qos: false,
-        dump_dir: None,
+        ..Default::default()
     };
     let report = run_fuzz(&cfg).expect("fuzz run");
     assert!(
@@ -62,6 +61,7 @@ fn break_qos_violations_are_dumped_and_replayable() {
         queries: 40,
         break_qos: true,
         dump_dir: Some(dir.clone()),
+        ..Default::default()
     };
     let report = run_fuzz(&cfg).expect("fuzz run");
     let v = report
@@ -77,7 +77,8 @@ fn break_qos_violations_are_dumped_and_replayable() {
     let spec = ScenarioSpec::parse(&dumped).expect("dump must re-parse");
     assert_eq!(spec.name, format!("fuzz-7-{}", v.index));
     // ... and re-checking it reproduces the violation bit-for-bit
-    let problems = check_scenario(&dumped, true).expect_err("violation must reproduce");
+    let problems =
+        check_scenario(&dumped, true, false).expect_err("violation must reproduce");
     let (_, detail) =
         problems.iter().find(|(kind, _)| kind == "qos-audit").expect("same invariant");
     assert_eq!(detail, &v.detail, "reproduction differs from the original violation");

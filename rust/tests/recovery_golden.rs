@@ -1,0 +1,410 @@
+//! Golden suite for the durable control plane (`coordinator::recovery`):
+//!
+//! * **Crash recovery is exact** — killing the durable controller at
+//!   *every* event boundary and recovering (latest snapshot + WAL tail)
+//!   reconverges bit-identically to the uninterrupted replay
+//!   ([`ReplayReport::fingerprint`] equality), flat and through the
+//!   4-cell router, across 1/2/8 worker threads;
+//! * **WAL-off is free** — a durable replay that runs to completion
+//!   (and a recovery from its completed store) fingerprints identically
+//!   to the plain in-memory replay, so durability is pure observation;
+//! * **Snapshots round-trip** — serialize → restore at a mid-trace
+//!   boundary preserves the fingerprint for every snapshotted state
+//!   shape: legacy, heterogeneous pools, MIG-sliced pools, and
+//!   KV-bearing LLM co-location;
+//! * **Degraded plans stay deterministic** — a tiny `plan_deadline`
+//!   budget forces the greedy fallback, and the degraded replay is
+//!   reproducible, thread-invariant, and crash-recoverable;
+//! * **Warm caches don't change decisions** — a solve-cache payload
+//!   extracted from one replay warm-starts the next bit-identically,
+//!   with the cache counters (and only those) moving.
+
+use camelot::config::{ClusterSpec, GpuClass, GpuSpec, PartitionMode, SliceCatalog};
+use camelot::coordinator::admission::{replay_trace, ReplayConfig, ReplayState};
+use camelot::coordinator::cells::CellsReplayState;
+use camelot::coordinator::recovery::trace_event_list;
+use camelot::coordinator::{
+    recover, replay_durable, replay_durable_cells, replay_trace_cells, verify_crash_recovery,
+    verify_crash_recovery_cells, CellsReplayConfig, DirStore, MemStore,
+};
+use camelot::planner::ScenarioSpec;
+use camelot::suite::workload::{
+    ArrivalProcess, Priority, TenantTrace, TenantTraceConfig, TenantTraceEvent, TraceEventKind,
+};
+use camelot::util::json::Json;
+
+const THREAD_MATRIX: [usize; 3] = [1, 2, 8];
+
+fn small_trace(seed: u64) -> TenantTrace {
+    TenantTrace::generate(
+        &TenantTraceConfig {
+            tenants: 5,
+            mean_interarrival_s: 300.0,
+            mean_lifetime_s: 900.0,
+            peak_qps_lo: 40.0,
+            peak_qps_hi: 110.0,
+            ..Default::default()
+        },
+        seed,
+    )
+}
+
+fn fast_cfg(threads: usize) -> ReplayConfig {
+    ReplayConfig { queries: 100, threads, ..Default::default() }
+}
+
+/// A hand-built trace that exercises the chaos events the WAL must
+/// carry: bursts of load, partial GPU degrades, and a full fail/recover
+/// cycle, interleaved with shrink and departure.
+fn chaos_trace() -> TenantTrace {
+    let mk = |t_s: f64, tenant: u64, kind: TraceEventKind| TenantTraceEvent { t_s, tenant, kind };
+    let arrive = |pipeline: &str, qps: f64| TraceEventKind::Arrive {
+        pipeline: pipeline.into(),
+        name: None,
+        arrivals: ArrivalProcess::constant(qps),
+        plan_qps: qps,
+        priority: Priority::LatencyCritical,
+    };
+    TenantTrace {
+        events: vec![
+            mk(0.0, 0, arrive("img-to-text", 100.0)),
+            mk(30.0, 1, arrive("text-to-text", 60.0)),
+            mk(60.0, 0, TraceEventKind::GpuDegrade { gpu_ids: vec![0], scale: 1.4 }),
+            mk(90.0, 2, arrive("img-to-img", 40.0)),
+            mk(120.0, 0, TraceEventKind::GpuRestore { gpu_ids: vec![0] }),
+            mk(150.0, 0, TraceEventKind::Shrink { target_qps: 40.0 }),
+            mk(180.0, 0, TraceEventKind::GpuFail { gpu_ids: vec![1] }),
+            mk(210.0, 1, TraceEventKind::Depart),
+            mk(240.0, 0, TraceEventKind::GpuRecover { gpu_ids: vec![1] }),
+        ],
+    }
+}
+
+// ---------------------------------------------------------------------
+// Crash-recovery goldens (the tentpole contract)
+// ---------------------------------------------------------------------
+
+/// Flat controller: kill at every event boundary (0..=n, n = before the
+/// measurement phase), recover, and require fingerprint equality — for
+/// every thread count in the matrix.
+#[test]
+fn crash_recovery_reconverges_at_every_boundary_flat() {
+    let cluster = ClusterSpec::two_2080ti();
+    let trace = small_trace(2024);
+    for threads in THREAD_MATRIX {
+        verify_crash_recovery(&cluster, &trace, &fast_cfg(threads), 2, &[], &[])
+            .unwrap_or_else(|e| panic!("flat crash golden at {threads} threads: {e}"));
+    }
+}
+
+/// Cells router (4 cells on an 8-GPU pool): same every-boundary
+/// contract, plus routing and migration equality (checked inside the
+/// harness).
+#[test]
+fn crash_recovery_reconverges_at_every_boundary_cells() {
+    let cluster = ClusterSpec { num_gpus: 8, ..ClusterSpec::two_2080ti() };
+    let trace = small_trace(7);
+    for threads in THREAD_MATRIX {
+        let cfg = CellsReplayConfig::from_replay(4, &fast_cfg(threads));
+        verify_crash_recovery_cells(&cluster, &trace, &cfg, 2, &[], &[])
+            .unwrap_or_else(|e| panic!("cells crash golden at {threads} threads: {e}"));
+    }
+}
+
+/// Chaos events (degrade/restore, fail/recover, shrink, depart) are
+/// WAL-serializable and crash-recoverable; snapshot cadence 0 (WAL-only
+/// recovery) and 3 both reconverge.
+#[test]
+fn crash_recovery_covers_chaos_events_and_all_cadences() {
+    let cluster = ClusterSpec::two_2080ti();
+    let trace = chaos_trace();
+    for snapshot_every in [0usize, 3] {
+        verify_crash_recovery(&cluster, &trace, &fast_cfg(1), snapshot_every, &[], &[])
+            .unwrap_or_else(|e| panic!("chaos crash golden (cadence {snapshot_every}): {e}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// WAL-off byte-identity
+// ---------------------------------------------------------------------
+
+/// A durable replay that is never killed — and a recovery over its
+/// completed store — both fingerprint identically to the plain replay:
+/// the WAL is observation only.
+#[test]
+fn durable_and_recovered_replays_match_the_plain_replay() {
+    let cluster = ClusterSpec::two_2080ti();
+    let trace = small_trace(2024);
+    let cfg = fast_cfg(1);
+    let golden = replay_trace(&cluster, &trace, &cfg).expect("plain replay").fingerprint();
+
+    let mut store = MemStore::new();
+    let durable = replay_durable(&cluster, &trace, &cfg, &mut store, 2, None)
+        .expect("durable replay")
+        .expect("no crash injected");
+    assert_eq!(golden, durable.fingerprint(), "durable replay drifted from plain");
+
+    // recovery over the completed store replays nothing new but must
+    // still verify every WAL record and land on the same report
+    let recovered = recover(&cluster, &trace, &cfg, &mut store, &[]).expect("recover");
+    assert_eq!(golden, recovered.fingerprint(), "post-completion recovery drifted");
+
+    // the on-disk store behaves like the in-memory one
+    let dir = std::env::temp_dir().join("camelot-recovery-golden-dirstore");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut disk = DirStore::open(&dir).expect("open store");
+    let on_disk = replay_durable(&cluster, &trace, &cfg, &mut disk, 2, None)
+        .expect("durable replay (disk)")
+        .expect("no crash injected");
+    assert_eq!(golden, on_disk.fingerprint(), "DirStore replay drifted");
+    assert!(dir.join("wal.log").is_file(), "WAL file must exist");
+    let mut disk = DirStore::open(&dir).expect("re-open store");
+    let recovered = recover(&cluster, &trace, &cfg, &mut disk, &[]).expect("recover from disk");
+    assert_eq!(golden, recovered.fingerprint(), "DirStore recovery drifted");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// Snapshot serialize → restore identity (satellite property test)
+// ---------------------------------------------------------------------
+
+/// Snapshot a mid-replay state, restore it from the JSON, continue both
+/// to the end, and require fingerprint equality.
+fn assert_snapshot_roundtrip(cluster: &ClusterSpec, trace: &TenantTrace, cfg: &ReplayConfig) {
+    let events = trace_event_list(trace);
+    let cut = events.len() / 2;
+    let mut original = ReplayState::new(cluster, cfg.clone());
+    original.warm_start().expect("warm start");
+    for e in &events[..cut] {
+        original.apply_event(e).expect("apply");
+    }
+    let snap = original.snapshot_json();
+    let v = Json::parse(&snap).expect("snapshot parses");
+    let mut restored = ReplayState::restore(cluster, cfg.clone(), &v, &[])
+        .unwrap_or_else(|e| panic!("restore: {e}"));
+    assert_eq!(original.applied(), restored.applied(), "restored WAL cursor drifted");
+    // the restored snapshot re-serializes byte-identically
+    assert_eq!(snap, restored.snapshot_json(), "snapshot not a serialization fixed point");
+    for e in &events[cut..] {
+        original.apply_event(e).expect("apply original");
+        restored.apply_event(e).expect("apply restored");
+    }
+    let a = original.finish().expect("finish original").fingerprint();
+    let b = restored.finish().expect("finish restored").fingerprint();
+    assert_eq!(a, b, "restored replay diverged after the snapshot cut");
+}
+
+#[test]
+fn snapshot_roundtrip_preserves_legacy_state() {
+    let cluster = ClusterSpec::two_2080ti();
+    assert_snapshot_roundtrip(&cluster, &small_trace(2024), &fast_cfg(1));
+    assert_snapshot_roundtrip(&cluster, &chaos_trace(), &fast_cfg(1));
+}
+
+#[test]
+fn snapshot_roundtrip_preserves_hetero_and_mig_state() {
+    // mixed classes: two 2080Ti + two A100 at a different compute scale
+    let base = ClusterSpec::two_2080ti();
+    let mut mixed = ClusterSpec { num_gpus: 4, ..base.clone() };
+    mixed.classes = vec![
+        GpuClass::scaled(base.gpu.clone(), 2, 1.0),
+        GpuClass::scaled(GpuSpec::a100_sxm4_80g(), 2, 0.7),
+    ];
+    mixed.validate_classes().unwrap();
+    assert!(!mixed.effectively_homogeneous());
+    assert_snapshot_roundtrip(&mixed, &small_trace(7), &fast_cfg(1));
+
+    // MIG-sliced pool: quotas live on the discrete slice grid
+    let mut mig = ClusterSpec { num_gpus: 2, ..base };
+    mig.partition = PartitionMode::Discrete(SliceCatalog::mig7());
+    assert_snapshot_roundtrip(&mig, &small_trace(11), &fast_cfg(1));
+}
+
+#[test]
+fn snapshot_roundtrip_preserves_llm_kv_state() {
+    let spec = ScenarioSpec::parse(
+        r#"{
+        "name": "recovery-llm-golden",
+        "cluster": {"preset": "2080ti", "gpus": 8},
+        "batch": 16,
+        "seed": 11,
+        "queries": 100,
+        "tenants": [
+            {"name": "chat", "workload": "llm", "plan_qps": 8.0,
+             "arrivals": "constant", "arrive_s": 0.0},
+            {"name": "search", "pipeline": "img-to-text", "plan_qps": 40.0,
+             "arrivals": "diurnal", "arrive_s": 5.0, "depart_s": 600.0},
+            {"name": "chat-batch", "workload": "llm", "plan_qps": 6.0,
+             "prompt_tokens": 256, "output_tokens": 64,
+             "kv_bytes_per_token": 131072,
+             "arrivals": "constant", "arrive_s": 10.0}
+        ]
+    }"#,
+    )
+    .expect("spec parses");
+    let mut cfg = fast_cfg(1);
+    cfg.queries = spec.queries;
+    cfg.admission.seed = spec.seed;
+    cfg.admission.batch = spec.batch;
+    assert_snapshot_roundtrip(&spec.cluster, &spec.trace(), &cfg);
+    // and the KV-bearing trace is crash-recoverable end to end
+    verify_crash_recovery(&spec.cluster, &spec.trace(), &cfg, 2, &[], &[])
+        .unwrap_or_else(|e| panic!("LLM crash golden: {e}"));
+}
+
+/// Cells snapshots round-trip too: restore at a mid-trace cut and the
+/// sharded replay reconverges, router state included.
+#[test]
+fn snapshot_roundtrip_preserves_cells_state() {
+    let cluster = ClusterSpec { num_gpus: 8, ..ClusterSpec::two_2080ti() };
+    let trace = small_trace(7);
+    let cfg = CellsReplayConfig::from_replay(4, &fast_cfg(1));
+    let events = trace_event_list(&trace);
+    let cut = events.len() / 2;
+    let mut original = CellsReplayState::new(&cluster, cfg.clone()).expect("state");
+    for e in &events[..cut] {
+        original.apply_event(e).expect("apply");
+    }
+    let snap = original.snapshot_json();
+    let v = Json::parse(&snap).expect("snapshot parses");
+    let mut restored = CellsReplayState::restore(&cluster, cfg, &v, &[])
+        .unwrap_or_else(|e| panic!("restore: {e}"));
+    assert_eq!(snap, restored.snapshot_json(), "cells snapshot not a fixed point");
+    for e in &events[cut..] {
+        original.apply_event(e).expect("apply original");
+        restored.apply_event(e).expect("apply restored");
+    }
+    let a = original.finish().expect("finish original");
+    let b = restored.finish().expect("finish restored");
+    assert_eq!(a.merged.fingerprint(), b.merged.fingerprint(), "cells replay diverged");
+    assert_eq!(a.tenant_cells, b.tenant_cells, "tenant routing diverged");
+    assert_eq!(a.migrations, b.migrations, "migration count diverged");
+}
+
+// ---------------------------------------------------------------------
+// plan_deadline: deterministic degradation
+// ---------------------------------------------------------------------
+
+/// A tiny SA budget forces the greedy Case-1 fallback on admission
+/// solves; the degraded replay must be reproducible, thread-invariant,
+/// and crash-recoverable — degradation never trades determinism away.
+#[test]
+fn plan_deadline_degrades_deterministically() {
+    let cluster = ClusterSpec::two_2080ti();
+    let trace = small_trace(2024);
+    let mut cfg = fast_cfg(1);
+    cfg.admission.plan_deadline = 1; // every real solve exceeds this
+    let baseline = replay_trace(&cluster, &trace, &cfg).expect("degraded replay");
+    // the budget actually bit: at least one decision took the fallback
+    let events = trace_event_list(&trace);
+    let mut state = ReplayState::new(&cluster, cfg.clone());
+    for e in &events {
+        state.apply_event(e).expect("apply");
+    }
+    assert!(
+        state.controller().degraded_plans() > 0,
+        "plan_deadline 1 should force at least one degraded plan"
+    );
+    // reproducible and thread-invariant
+    for threads in THREAD_MATRIX {
+        let mut tcfg = cfg.clone();
+        tcfg.threads = threads;
+        let rep = replay_trace(&cluster, &trace, &tcfg).expect("degraded replay");
+        assert_eq!(
+            baseline.fingerprint(),
+            rep.fingerprint(),
+            "degraded replay differs at {threads} threads"
+        );
+    }
+    // and the degraded decisions recover exactly like healthy ones
+    verify_crash_recovery(&cluster, &trace, &cfg, 2, &[], &[])
+        .unwrap_or_else(|e| panic!("degraded crash golden: {e}"));
+    // the deadline-off path is untouched: plan_deadline 0 reproduces
+    // the legacy fingerprint
+    let legacy = replay_trace(&cluster, &trace, &fast_cfg(1)).expect("legacy replay");
+    let again = replay_trace(&cluster, &trace, &fast_cfg(1)).expect("legacy replay");
+    assert_eq!(legacy.fingerprint(), again.fingerprint());
+}
+
+// ---------------------------------------------------------------------
+// Warm-start cache round trip
+// ---------------------------------------------------------------------
+
+/// Extract the solve cache from one replay, warm-start a second replay
+/// with it: decisions (fingerprint) are bit-identical, the loaded
+/// entries are reported, and the warm run's cache counters start from
+/// zero so its hit rate is the true warm hit rate.
+#[test]
+fn warm_cache_round_trips_through_replay() {
+    let cluster = ClusterSpec::two_2080ti();
+    let trace = small_trace(2024);
+    let cfg = fast_cfg(1);
+    let cold = replay_trace(&cluster, &trace, &cfg).expect("cold replay");
+
+    // drive by hand to harvest the final cache contents
+    let events = trace_event_list(&trace);
+    let mut state = ReplayState::new(&cluster, cfg.clone());
+    for e in &events {
+        state.apply_event(e).expect("apply");
+    }
+    let payload = state.cache_json();
+
+    let mut warm_cfg = cfg.clone();
+    warm_cfg.warm_cache = Some(payload.clone());
+    let warm = replay_trace(&cluster, &trace, &warm_cfg).expect("warm replay");
+    assert_eq!(
+        cold.fingerprint(),
+        warm.fingerprint(),
+        "warm-started replay changed decisions"
+    );
+    // the warm run resolves previously solved requests from the cache
+    assert!(
+        warm.solve_cache.hits >= cold.solve_cache.hits,
+        "warm hits {} < cold hits {}",
+        warm.solve_cache.hits,
+        cold.solve_cache.hits
+    );
+    assert!(
+        warm.solve_cache.misses <= cold.solve_cache.misses,
+        "warm misses {} > cold misses {}",
+        warm.solve_cache.misses,
+        cold.solve_cache.misses
+    );
+    // warm_start reports how many entries it seeded
+    let probe = ReplayState::new(&cluster, warm_cfg.clone());
+    assert!(probe.warm_start().expect("warm start") > 0, "no entries loaded");
+    drop(probe);
+
+    // the cells path shares one payload across every cell, and the
+    // warm-started sharded replay is bit-identical too
+    let cells_cluster = ClusterSpec { num_gpus: 8, ..ClusterSpec::two_2080ti() };
+    let cells_trace = small_trace(7);
+    let cells_cold = CellsReplayConfig::from_replay(4, &cfg);
+    let base = replay_trace_cells(&cells_cluster, &cells_trace, &cells_cold).expect("cells");
+    let mut cstate = CellsReplayState::new(&cells_cluster, cells_cold.clone()).expect("state");
+    for e in trace_event_list(&cells_trace) {
+        cstate.apply_event(&e).expect("apply");
+    }
+    let cells_payload = cstate.cache_json().expect("merge");
+    let mut cells_warm = cells_cold.clone();
+    cells_warm.warm_cache = Some(cells_payload);
+    let warm = replay_trace_cells(&cells_cluster, &cells_trace, &cells_warm).expect("cells warm");
+    assert_eq!(
+        base.merged.fingerprint(),
+        warm.merged.fingerprint(),
+        "warm-started cells replay changed decisions"
+    );
+
+    // a malformed payload fails loudly, not silently cold
+    let mut bad = cfg.clone();
+    bad.warm_cache = Some("{not json".into());
+    assert!(replay_trace(&cluster, &trace, &bad).is_err(), "bad payload must error");
+
+    // warm caches compose with durability: the WAL path warm-starts
+    // through the same seam and stays bit-identical
+    let mut store = MemStore::new();
+    let durable_warm = replay_durable(&cluster, &trace, &warm_cfg, &mut store, 2, None)
+        .expect("durable warm replay")
+        .expect("no crash injected");
+    assert_eq!(cold.fingerprint(), durable_warm.fingerprint());
+}
